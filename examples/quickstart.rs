@@ -1,0 +1,100 @@
+//! Quickstart: the paper's §II linear-layer example end to end —
+//! build a pipeline, apply Halide-style schedules, simulate-benchmark them,
+//! featurize, and (if artifacts are built) run the GCN performance model.
+//!
+//!     cargo run --release --example quickstart
+
+use gcn_perf::dataset::builder::sample_from_schedule;
+use gcn_perf::ir::op::{Op, OpAttrs, OpKind};
+use gcn_perf::ir::pipeline::Pipeline;
+use gcn_perf::lower::lower_pipeline;
+use gcn_perf::schedule::primitives::{ComputeLoc, PipelineSchedule};
+use gcn_perf::schedule::random::random_pipeline_schedule;
+use gcn_perf::sim::{simulate, Machine};
+use gcn_perf::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // --- the paper's linear layer: Y = XW + B as two Halide stages
+    let mut p = Pipeline::new("linear_layer");
+    let x = p.add_input(vec![64, 1024]); // batch x inputs
+    let bias = p.add_input(vec![64, 16]);
+    let mut gemm = OpAttrs::default();
+    gemm.out_channels = 16;
+    let mm = p
+        .add_stage("matrix_mul", Op::with_attrs(OpKind::Gemm, gemm), vec![x])
+        .unwrap();
+    p.add_stage("add_bias", Op::new(OpKind::Add), vec![mm, bias]).unwrap();
+    p.validate().expect("valid pipeline");
+    println!("pipeline '{}': {} stages, depth {}", p.name, p.num_stages(), p.depth());
+
+    let nests = lower_pipeline(&p);
+    let machine = Machine::default();
+
+    // --- schedule it three ways (§II-A)
+    let ranks: Vec<usize> = p.stages.iter().map(|s| s.shape.len()).collect();
+    let default = PipelineSchedule::default_for(&ranks);
+
+    let mut vectorized = default.clone();
+    vectorized.stages[0].vector_width = 8; // vectorize matrix_mul inner loop
+    vectorized.stages[0].parallel_depth = 1; // parallel over rows
+    vectorized.stages[1].vector_width = 8;
+
+    let mut tiled = vectorized.clone();
+    tiled.stages[0].tile = vec![8, 8]; // blocked matmul
+    tiled.stages[0].compute = ComputeLoc::At { consumer: 1, level: 1 };
+
+    println!("\nschedule                 simulated runtime");
+    for (name, sched) in [
+        ("compute_root scalar", &default),
+        ("vectorize + parallel", &vectorized),
+        ("+ tiling + compute_at", &tiled),
+    ] {
+        let t = simulate(&p, &nests, sched, &machine);
+        println!("{:<24} {:>10.1} µs", name, t * 1e6);
+    }
+
+    // --- featurize + benchmark like the dataset pipeline does
+    let mut rng = Rng::new(0);
+    let sample = sample_from_schedule(&p, &nests, &vectorized, &machine, 0, 0, &mut rng);
+    println!(
+        "\nfeaturized: {} stages x ({} invariant + {} dependent features)",
+        sample.n_stages,
+        gcn_perf::constants::INV_DIM,
+        gcn_perf::constants::DEP_DIM
+    );
+    println!(
+        "benchmark runs (10x, noisy): mean {:.1} µs, std {:.2} µs",
+        sample.mean_runtime() * 1e6,
+        sample.std_runtime() * 1e6
+    );
+
+    // --- GCN inference through PJRT, if artifacts are present
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = gcn_perf::runtime::GcnRuntime::load(artifacts, false)?;
+        let params = rt.init_params(42); // untrained — see examples/train_e2e.rs
+        let mut samples = vec![sample];
+        for i in 1..6 {
+            let s = random_pipeline_schedule(&p, &nests, &mut rng);
+            samples.push(sample_from_schedule(&p, &nests, &s, &machine, 0, i, &mut rng));
+        }
+        let mut ds = gcn_perf::dataset::sample::Dataset { samples, stats: None };
+        ds.fit_stats();
+        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
+        let preds = rt.predict_runtimes(&params, &refs, ds.stats.as_ref().unwrap())?;
+        println!("\nGCN (untrained, PJRT {}):", rt.client.platform_name());
+        for (s, pred) in ds.samples.iter().zip(&preds) {
+            println!(
+                "  schedule {}: measured {:>9.1} µs   predicted {:>9.1} µs",
+                s.schedule_id,
+                s.mean_runtime() * 1e6,
+                pred * 1e6
+            );
+        }
+        println!("(train with `gcn-perf train` or examples/train_e2e for real predictions)");
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` to try GCN inference)");
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Model-guided schedule search (Fig 2): beam search over the schedule
+//! space of the zoo networks, comparing pruning models — random, the
+//! noise-injected simulator, and the exact oracle. With a trained GCN
+//! checkpoint (`--ckpt ... --data ...`) it also runs GCN-guided search,
+//! the paper's intended deployment.
+//!
+//!     cargo run --release --example schedule_search [-- --network resnet18]
+
+use gcn_perf::lower::lower_pipeline;
+use gcn_perf::schedule::primitives::PipelineSchedule;
+use gcn_perf::schedule::random::random_pipeline_schedule;
+use gcn_perf::search::{beam_search, BeamConfig, NoisySimCost, SimCost};
+use gcn_perf::sim::{simulate, Machine};
+use gcn_perf::util::cli::Args;
+use gcn_perf::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let machine = Machine::default();
+    let only = args.str_opt("network").map(str::to_string);
+
+    println!(
+        "{:<14} {:>12} {:>14} {:>14} {:>14} {:>10}",
+        "network", "default ms", "random-64 ms", "noisy-beam ms", "oracle-beam ms", "speedup"
+    );
+
+    for net in gcn_perf::zoo::all_networks() {
+        if let Some(ref name) = only {
+            if &net.name != name {
+                continue;
+            }
+        }
+        let nests = lower_pipeline(&net);
+        let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+        let default_t = simulate(&net, &nests, &PipelineSchedule::default_for(&ranks), &machine);
+
+        // baseline: best of 64 random schedules
+        let mut rng = Rng::new(11);
+        let random_best = (0..64)
+            .map(|_| {
+                let s = random_pipeline_schedule(&net, &nests, &mut rng);
+                simulate(&net, &nests, &s, &machine)
+            })
+            .fold(f64::INFINITY, f64::min);
+
+        // noisy-model beam (what a learned model with ~σ error behaves like)
+        let noisy = NoisySimCost { machine: machine.clone(), sigma: 0.25, seed: 3 };
+        let (noisy_sched, _) = beam_search(
+            &net,
+            &nests,
+            &noisy,
+            &BeamConfig { beam_width: 6, candidates_per_stage: 10, seed: 3 },
+        );
+        let noisy_t = simulate(&net, &nests, &noisy_sched, &machine);
+
+        // oracle beam (upper bound)
+        let oracle = SimCost { machine: machine.clone() };
+        let (oracle_sched, _) = beam_search(
+            &net,
+            &nests,
+            &oracle,
+            &BeamConfig { beam_width: 6, candidates_per_stage: 10, seed: 3 },
+        );
+        let oracle_t = simulate(&net, &nests, &oracle_sched, &machine);
+
+        println!(
+            "{:<14} {:>12.3} {:>14.3} {:>14.3} {:>14.3} {:>9.1}x",
+            net.name,
+            default_t * 1e3,
+            random_best * 1e3,
+            noisy_t * 1e3,
+            oracle_t * 1e3,
+            default_t / oracle_t
+        );
+    }
+    println!("\n(speedup = default / oracle-beam; the GCN-guided variant is `gcn-perf search --model gcn`)");
+    Ok(())
+}

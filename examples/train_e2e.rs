@@ -1,0 +1,115 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): the full Fig 4
+//! data pipeline + training + the paper's headline comparison, on a real
+//! (scaled-down) workload:
+//!
+//!   1. generate random ONNX-style pipelines, lower, sample schedules,
+//!      benchmark them on the simulated 18-core Xeon;
+//!   2. train the GCN through the AOT PJRT train-step executable,
+//!      logging the loss curve;
+//!   3. fit the Halide-FFN and TVM-GBT baselines on the same data;
+//!   4. report Fig 8 (avg/max error, R²) and Fig 9 (ranking) numbers.
+//!
+//!     cargo run --release --example train_e2e [-- --pipelines 300 --schedules 24 --epochs 30]
+//!
+//! Results from a full run are recorded in EXPERIMENTS.md.
+
+use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
+use gcn_perf::eval::harness;
+use gcn_perf::eval::metrics::RegressionMetrics;
+use gcn_perf::eval::ranking::{rank_networks, RankResult};
+use gcn_perf::runtime::GcnRuntime;
+use gcn_perf::sim::Machine;
+use gcn_perf::train::{train, TrainConfig};
+use gcn_perf::util::cli::Args;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let n_pipelines = args.usize_or("pipelines", 300);
+    let n_schedules = args.usize_or("schedules", 24);
+    let epochs = args.usize_or("epochs", 30);
+    let fig9_schedules = args.usize_or("fig9-schedules", 80);
+    // paper lr is 0.0075; 0.03 converges ~1.4x better on our (smaller)
+    // dataset within the epoch budget — see EXPERIMENTS.md §Perf notes
+    let lr = args.f64_or("lr", 0.03) as f32;
+
+    // ---- 1. dataset (Fig 4)
+    let t0 = Instant::now();
+    let cfg = DataGenConfig {
+        n_pipelines,
+        schedules_per_pipeline: n_schedules,
+        seed: 42,
+        ..Default::default()
+    };
+    eprintln!("[1/4] generating {} x {} schedules...", n_pipelines, n_schedules);
+    let ds = build_dataset(&cfg);
+    let gen_secs = t0.elapsed().as_secs_f64();
+    let (train_ds, test_ds) = ds.split(0.1, 1234);
+    println!(
+        "dataset: {} samples ({} pipelines) in {:.1}s — train {}, test {}",
+        ds.len(),
+        ds.num_pipelines(),
+        gen_secs,
+        train_ds.len(),
+        test_ds.len()
+    );
+
+    // ---- 2. train the GCN via PJRT
+    eprintln!("[2/4] training GCN ({epochs} epochs, batch 32, Adagrad lr=0.0075)...");
+    let rt = GcnRuntime::load(Path::new("artifacts"), true)?;
+    let t1 = Instant::now();
+    let result = train(
+        &rt,
+        &train_ds,
+        &test_ds,
+        &TrainConfig { epochs, seed: 7, patience: 10, lr, ..Default::default() },
+    )?;
+    println!(
+        "trained in {:.1}s; loss curve (first→last): {}",
+        t1.elapsed().as_secs_f64(),
+        result
+            .history
+            .iter()
+            .step_by((result.history.len() / 8).max(1))
+            .map(|h| format!("{:.3}", h.train_loss))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+
+    // ---- 3 + 4. baselines + Fig 8
+    eprintln!("[3/4] fitting baselines + Fig 8 comparison...");
+    let rows = harness::run_fig8(&rt, &result.params, &train_ds, &test_ds, 25, true)?;
+    println!("\nFig 8 — prediction quality on the unseen test split");
+    println!("{}", RegressionMetrics::header());
+    for r in &rows {
+        println!("{}", r.row());
+    }
+    println!(
+        "error reduction: {:.2}x vs halide-ffn, {:.2}x vs tvm-gbt (paper: 7.75x / 12x)",
+        rows[1].avg_error_pct / rows[0].avg_error_pct,
+        rows[2].avg_error_pct / rows[0].avg_error_pct
+    );
+
+    // ---- Fig 9 on the zoo networks
+    eprintln!("[4/4] Fig 9 ranking on the 9 real-world networks...");
+    let fig9 = harness::run_fig9(
+        &rt,
+        &result.params,
+        train_ds.stats.as_ref().unwrap(),
+        &Machine::default(),
+        fig9_schedules,
+        5,
+    )?;
+    let (fig9, avg) = rank_networks(fig9);
+    println!("\nFig 9 — pairwise ranking accuracy");
+    println!("{}", RankResult::header());
+    for r in &fig9 {
+        println!("{}", r.row());
+    }
+    println!("{:<14} {:>10} {:>10} {:>10.1}%  (paper avg ≈75%)", "AVERAGE", "", "", avg);
+
+    harness::write_report(Path::new("results/train_e2e.json"), &rows, &fig9, avg)?;
+    println!("\nreport: results/train_e2e.json");
+    Ok(())
+}

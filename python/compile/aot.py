@@ -1,0 +1,137 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts the rust
+runtime loads via PJRT.
+
+HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:
+  gcn_infer.hlo.txt   forward pass, batch=BATCH
+  gcn_train.hlo.txt   Adagrad train step, batch=BATCH
+  gcn_infer_l{K}.hlo.txt / gcn_train_l{K}.hlo.txt for the §III-C conv-depth
+                      ablation sweep (when --ablation is passed)
+  manifest.json       dims + parameter shapes/order for the rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dims, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def batch_specs(batch, n):
+    return [
+        spec((batch, n, dims.INV_DIM)),   # inv
+        spec((batch, n, dims.DEP_DIM)),   # dep
+        spec((batch, n, n)),              # adj (A')
+        spec((batch, n)),                 # mask
+    ]
+
+
+def target_specs(batch):
+    return [
+        spec((batch,)),  # log_y
+        spec((batch,)),  # weight = alpha * beta_norm
+        spec((batch,)),  # sample_mask
+        spec(()),        # lr (runtime-tunable)
+    ]
+
+
+def lower_infer(n_conv, batch, n, use_pallas=True):
+    p_specs = [spec(s) for _, s in model.param_specs(n_conv)]
+    args = p_specs + batch_specs(batch, n)
+    return jax.jit(model.infer_flat(n_conv, use_pallas), keep_unused=True).lower(*args)
+
+
+def lower_train(n_conv, batch, n, use_pallas=True):
+    p_specs = [spec(s) for _, s in model.param_specs(n_conv)]
+    args = p_specs + p_specs + batch_specs(batch, n) + target_specs(batch)
+    return jax.jit(model.train_flat(n_conv, use_pallas), keep_unused=True).lower(*args)
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>10} chars  {path}")
+
+
+def manifest(n_conv, batch, n):
+    return {
+        "inv_dim": dims.INV_DIM,
+        "dep_dim": dims.DEP_DIM,
+        "node_dim": dims.NODE_DIM,
+        "hidden": dims.HIDDEN,
+        "n_conv": n_conv,
+        "readout": dims.NODE_DIM * (n_conv + 1),
+        "max_nodes": n,
+        "batch": batch,
+        "learning_rate": dims.LEARNING_RATE,
+        "weight_decay": dims.WEIGHT_DECAY,
+        "params": [
+            {"name": name, "shape": list(shape)}
+            for name, shape in model.param_specs(n_conv)
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=dims.BATCH)
+    ap.add_argument("--nodes", type=int, default=dims.MAX_NODES)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of the "
+                    "Pallas kernels (perf A/B)")
+    ap.add_argument("--ablation", action="store_true",
+                    help="also emit conv-depth ablation artifacts (0/1/4)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+    b, n = args.batch, args.nodes
+
+    write(os.path.join(args.out_dir, "gcn_infer.hlo.txt"),
+          to_hlo_text(lower_infer(dims.N_CONV, b, n, use_pallas)))
+    write(os.path.join(args.out_dir, "gcn_train.hlo.txt"),
+          to_hlo_text(lower_train(dims.N_CONV, b, n, use_pallas)))
+
+    man = manifest(dims.N_CONV, b, n)
+    if args.ablation:
+        layers = [0, 1, 4]
+        man["ablation_layers"] = layers
+        for k in layers:
+            write(os.path.join(args.out_dir, f"gcn_infer_l{k}.hlo.txt"),
+                  to_hlo_text(lower_infer(k, b, n, use_pallas)))
+            write(os.path.join(args.out_dir, f"gcn_train_l{k}.hlo.txt"),
+                  to_hlo_text(lower_train(k, b, n, use_pallas)))
+            man[f"params_l{k}"] = [
+                {"name": name, "shape": list(shape)}
+                for name, shape in model.param_specs(k)
+            ]
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote manifest  {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model dimensions — MUST match rust/src/constants.rs.
+
+`aot.py` writes these into artifacts/manifest.json; the rust runtime
+cross-checks them at load time so a drift fails fast.
+"""
+
+INV_DIM = 48       # schedule-invariant features per stage
+DEP_DIM = 88       # schedule-dependent (+compound) features per stage
+EMB_INV = 32       # invariant embedding width (Fig 5)
+EMB_DEP = 48       # dependent embedding width (Fig 5)
+NODE_DIM = EMB_INV + EMB_DEP   # node embedding width (80)
+HIDDEN = NODE_DIM  # conv layer width
+N_CONV = 2         # graph conv layers (paper sweeps 0..8, picks 2)
+READOUT = NODE_DIM * (N_CONV + 1)  # sum-pool readout width (Fig 7)
+MAX_NODES = 48     # graphs padded to this many stages
+BATCH = 32         # AOT batch size
+
+# Adagrad (§III-C)
+LEARNING_RATE = 0.0075
+WEIGHT_DECAY = 0.0001
+ADAGRAD_EPS = 1e-10

@@ -1,0 +1,146 @@
+"""L1 Pallas kernels: the GCN hot spots.
+
+Two kernels, each gridded over the batch dimension (one graph per grid
+step — BlockSpec keeps that graph's adjacency + embeddings resident in
+VMEM while both matmuls run on the MXU):
+
+* ``gcn_conv``: fused aggregate-update  ``out = A' @ (E @ W) + b``
+  (two chained matmuls + bias; the intermediate [N, F] tile never leaves
+  VMEM — on a GPU the paper-era equivalent would round-trip shared mem /
+  HBM between the dense layer and the SpMM aggregation).
+* ``embed``: fused dual feature embedding
+  ``out = relu(INV @ Wi + bi) ++ relu(DEP @ Wd + bd)``
+  (both projections + activation + concat in one VMEM-resident tile).
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls, and correctness is what the AOT path needs (DESIGN.md
+§Hardware-Adaptation has the TPU tiling/VMEM analysis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- gcn_conv
+def _gcn_conv_kernel(adj_ref, e_ref, w_ref, b_ref, out_ref):
+    # One graph per grid step: adj [N, N], e [N, F] live in VMEM.
+    # E @ W then A' @ (.) — both hit the MXU; fp32 accumulation.
+    h = jnp.dot(e_ref[0], w_ref[...], preferred_element_type=jnp.float32)
+    out_ref[0] = (
+        jnp.dot(adj_ref[0], h, preferred_element_type=jnp.float32) + b_ref[...]
+    )
+
+
+def _gcn_conv_call(adj, e, w, b):
+    batch, n, _ = adj.shape
+    g = w.shape[1]
+    return pl.pallas_call(
+        _gcn_conv_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, e.shape[2]), lambda i: (i, 0, 0)),
+            pl.BlockSpec((w.shape[0], g), lambda i: (0, 0)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n, g), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n, g), jnp.float32),
+        interpret=True,
+    )(adj, e, w, b)
+
+
+# interpret-mode pallas_call has no reverse-mode rule in this jax version;
+# the VJP of out = A'(EW) + b is closed-form, so supply it analytically.
+@jax.custom_vjp
+def gcn_conv(adj, e, w, b):
+    """Pallas fused graph convolution. Shapes: adj [B,N,N], e [B,N,F],
+    w [F,G], b [G] -> [B,N,G]."""
+    return _gcn_conv_call(adj, e, w, b)
+
+
+def _gcn_conv_fwd(adj, e, w, b):
+    return _gcn_conv_call(adj, e, w, b), (adj, e, w)
+
+
+def _gcn_conv_bwd(res, g_out):
+    adj, e, w = res
+    ew = e @ w                                   # [B,N,G]
+    d_adj = g_out @ jnp.swapaxes(ew, -1, -2)     # [B,N,N]
+    at_g = jnp.swapaxes(adj, -1, -2) @ g_out     # [B,N,G]
+    d_e = at_g @ w.T                             # [B,N,F]
+    d_w = jnp.einsum("bnf,bng->fg", e, at_g)     # [F,G]
+    d_b = jnp.sum(g_out, axis=(0, 1))            # [G]
+    return d_adj, d_e, d_w, d_b
+
+
+gcn_conv.defvjp(_gcn_conv_fwd, _gcn_conv_bwd)
+
+
+# ------------------------------------------------------------------- embed
+def _embed_kernel(inv_ref, dep_ref, wi_ref, bi_ref, wd_ref, bd_ref, out_ref):
+    ei = jnp.maximum(
+        jnp.dot(inv_ref[0], wi_ref[...], preferred_element_type=jnp.float32)
+        + bi_ref[...],
+        0.0,
+    )
+    ed = jnp.maximum(
+        jnp.dot(dep_ref[0], wd_ref[...], preferred_element_type=jnp.float32)
+        + bd_ref[...],
+        0.0,
+    )
+    out_ref[0] = jnp.concatenate([ei, ed], axis=-1)
+
+
+def _embed_call(inv, dep, w_inv, b_inv, w_dep, b_dep):
+    batch, n, i_dim = inv.shape
+    d_dim = dep.shape[2]
+    ei = w_inv.shape[1]
+    ed = w_dep.shape[1]
+    return pl.pallas_call(
+        _embed_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n, i_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((i_dim, ei), lambda i: (0, 0)),
+            pl.BlockSpec((ei,), lambda i: (0,)),
+            pl.BlockSpec((d_dim, ed), lambda i: (0, 0)),
+            pl.BlockSpec((ed,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n, ei + ed), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n, ei + ed), jnp.float32),
+        interpret=True,
+    )(inv, dep, w_inv, b_inv, w_dep, b_dep)
+
+
+@jax.custom_vjp
+def embed(inv, dep, w_inv, b_inv, w_dep, b_dep):
+    """Pallas fused feature embedding. inv [B,N,I], dep [B,N,D] ->
+    [B,N,EI+ED]."""
+    return _embed_call(inv, dep, w_inv, b_inv, w_dep, b_dep)
+
+
+def _embed_fwd(inv, dep, w_inv, b_inv, w_dep, b_dep):
+    out = _embed_call(inv, dep, w_inv, b_inv, w_dep, b_dep)
+    return out, (inv, dep, w_inv, w_dep, out)
+
+
+def _embed_bwd(res, g_out):
+    inv, dep, w_inv, w_dep, out = res
+    ei = w_inv.shape[1]
+    # ReLU mask from the saved activations
+    gi = g_out[..., :ei] * (out[..., :ei] > 0)
+    gd = g_out[..., ei:] * (out[..., ei:] > 0)
+    d_inv = gi @ w_inv.T
+    d_dep = gd @ w_dep.T
+    d_wi = jnp.einsum("bni,bne->ie", inv, gi)
+    d_bi = jnp.sum(gi, axis=(0, 1))
+    d_wd = jnp.einsum("bnd,bne->de", dep, gd)
+    d_bd = jnp.sum(gd, axis=(0, 1))
+    return d_inv, d_dep, d_wi, d_bi, d_wd, d_bd
+
+
+embed.defvjp(_embed_fwd, _embed_bwd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `pytest python/tests` checks the
+Pallas kernels (interpret mode) against these for random inputs, and the
+L2 model is free to call either implementation (`use_pallas` flag).
+"""
+
+import jax.numpy as jnp
+
+
+def embed_ref(inv, dep, w_inv, b_inv, w_dep, b_dep):
+    """Initial node embeddings (Fig 5).
+
+    inv: [B, N, INV_DIM], dep: [B, N, DEP_DIM]
+    returns [B, N, EMB_INV + EMB_DEP] = relu(inv@w_inv+b_inv) ++ relu(dep@w_dep+b_dep)
+    """
+    e_inv = jnp.maximum(inv @ w_inv + b_inv, 0.0)
+    e_dep = jnp.maximum(dep @ w_dep + b_dep, 0.0)
+    return jnp.concatenate([e_inv, e_dep], axis=-1)
+
+
+def gcn_conv_ref(adj, e, w, b):
+    """One graph-convolution aggregate-update (§III-B, Kipf-Welling form):
+
+        out = A' . (E . W) + b
+
+    adj: [B, N, N] row-normalized adjacency with self loops (A')
+    e:   [B, N, F] current node embeddings
+    w:   [F, G], b: [G]
+    returns [B, N, G]
+    """
+    return adj @ (e @ w) + b

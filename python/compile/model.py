@@ -1,0 +1,184 @@
+"""L2: the GCN performance model (§III), in JAX, calling the L1 Pallas
+kernels. Lowered once by `aot.py`; never imported at runtime by the rust
+coordinator.
+
+Architecture (Fig 7):
+  features --(Fig 5 embed)--> E0 --conv--> E1 --conv--> E2
+  F = [sumpool(E0) ; sumpool(E1) ; sumpool(E2)]   (masked sum over stages)
+  z = F @ w_out + b_out            (predicted *log* runtime)
+
+The model predicts log-runtime; ŷ = exp(z). The paper's loss is built on
+the ratio ŷ/ȳ, so working in log space is the identical objective with
+better conditioning (DESIGN.md §Paper-faithfulness).
+
+Loss (§III-C):  ℓ = mean over batch of  α·β̂·ξ  with
+  ξ = |ŷ/ȳ − 1| = |exp(z − log ȳ) − 1|   (Property 1, typo-corrected)
+  α = min_runtime(pipeline)/ȳ            (Property 2 — computed by rust)
+  β̂ = normalized 1/std of the runs       (Property 3 — computed by rust)
+rust passes w = α·β̂ per sample; the HLO computes ξ and the weighted mean.
+"""
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .kernels import gcn_conv as kernels
+from .kernels import ref
+
+
+# --------------------------------------------------------------- parameters
+def param_specs(n_conv: int = dims.N_CONV):
+    """Ordered (name, shape) list — the flat calling convention shared with
+    the rust runtime (manifest.json)."""
+    specs = [
+        ("w_inv", (dims.INV_DIM, dims.EMB_INV)),
+        ("b_inv", (dims.EMB_INV,)),
+        ("w_dep", (dims.DEP_DIM, dims.EMB_DEP)),
+        ("b_dep", (dims.EMB_DEP,)),
+    ]
+    for k in range(n_conv):
+        specs += [
+            (f"conv{k}_w", (dims.HIDDEN, dims.HIDDEN)),
+            (f"conv{k}_b", (dims.HIDDEN,)),
+            (f"conv{k}_scale", (dims.HIDDEN,)),
+            (f"conv{k}_shift", (dims.HIDDEN,)),
+        ]
+    readout = dims.NODE_DIM * (n_conv + 1)
+    specs += [("w_out", (readout, 1)), ("b_out", (1,))]
+    return specs
+
+
+def init_params(key, n_conv: int = dims.N_CONV):
+    """He init for weights, zeros/ones for biases/scales; order matches
+    param_specs."""
+    params = OrderedDict()
+    for name, shape in param_specs(n_conv):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def graph_batch_norm(h, mask, scale, shift, eps=1e-5):
+    """Normalization inside the conv block (Fig 6 "batch-normalization").
+
+    True batch-norm needs running statistics, which a stateless AOT artifact
+    cannot carry — and computing the stats per batch makes every prediction
+    depend on which samples share its batch (large train/eval skew, measured
+    in EXPERIMENTS.md §Perf notes). We therefore normalize per *node* over
+    the channel dim (LayerNorm-style) with the same learnable scale/shift:
+    batch-independent, stateless, deterministic. `mask` is unused but kept
+    in the signature for drop-in compatibility. See DESIGN.md
+    §Paper-faithfulness.
+    """
+    del mask
+    mean = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mean) ** 2, axis=-1, keepdims=True)
+    return ((h - mean) * jax.lax.rsqrt(var + eps)) * scale + shift
+
+
+def forward(params, inv, dep, adj, mask, n_conv: int = dims.N_CONV,
+            use_pallas: bool = True):
+    """Predict log-runtime for a batch of graphs.
+
+    inv  [B, N, INV_DIM]  normalized schedule-invariant features
+    dep  [B, N, DEP_DIM]  normalized schedule-dependent features
+    adj  [B, N, N]        row-normalized adjacency with self loops (A')
+    mask [B, N]           1.0 for real stages, 0.0 for padding
+    returns z [B] (log seconds)
+    """
+    k_embed = kernels.embed if use_pallas else ref.embed_ref
+    k_conv = kernels.gcn_conv if use_pallas else ref.gcn_conv_ref
+
+    m = mask[:, :, None]
+    e = k_embed(inv, dep, params["w_inv"], params["b_inv"],
+                params["w_dep"], params["b_dep"]) * m
+    pooled = [jnp.sum(e, axis=1)]  # F(0)
+    for k in range(n_conv):
+        h = k_conv(adj, e, params[f"conv{k}_w"], params[f"conv{k}_b"])
+        h = graph_batch_norm(h, m, params[f"conv{k}_scale"], params[f"conv{k}_shift"])
+        e = jnp.maximum(h, 0.0) * m
+        pooled.append(jnp.sum(e, axis=1))  # F(k)
+    feat = jnp.concatenate(pooled, axis=-1)  # [B, READOUT]
+    z = feat @ params["w_out"] + params["b_out"]
+    return z[:, 0]
+
+
+# --------------------------------------------------------------------- loss
+def loss_fn(params, inv, dep, adj, mask, log_y, weight, sample_mask,
+            n_conv: int = dims.N_CONV, use_pallas: bool = True):
+    """Weighted relative-error loss (§III-C). `weight` = α·β̂ from rust;
+    `sample_mask` zeroes padded batch rows."""
+    z = forward(params, inv, dep, adj, mask, n_conv, use_pallas)
+    d = z - log_y
+    # ξ = |exp(d) − 1|, linearized beyond |d| = 3 so a badly-off prediction
+    # cannot explode the step yet still receives gradient (slope e³ ≈ 20)
+    dc = jnp.clip(d, -3.0, 3.0)
+    xi = jnp.abs(jnp.expm1(dc)) + jnp.abs(d - dc) * jnp.exp(3.0)
+    w = weight * sample_mask
+    return jnp.sum(w * xi) / jnp.maximum(jnp.sum(w), 1e-6)
+
+
+# --------------------------------------------------------------- train step
+def train_step(params, accum, inv, dep, adj, mask, log_y, weight, sample_mask,
+               n_conv: int = dims.N_CONV, use_pallas: bool = True,
+               lr: float = dims.LEARNING_RATE,
+               weight_decay: float = dims.WEIGHT_DECAY):
+    """One Adagrad step (§III-C: Adagrad, lr 0.0075, weight decay 1e-4).
+
+    Functional: (params, accum, batch) -> (params', accum', loss).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(
+        params, inv, dep, adj, mask, log_y, weight, sample_mask,
+        n_conv, use_pallas)
+    new_params = OrderedDict()
+    new_accum = OrderedDict()
+    for name in params:
+        g = grads[name] + weight_decay * params[name]
+        a = accum[name] + g * g
+        new_params[name] = params[name] - lr * g / (jnp.sqrt(a) + dims.ADAGRAD_EPS)
+        new_accum[name] = a
+    return new_params, new_accum, loss
+
+
+# ------------------------------------------------- flat AOT entry points
+def infer_flat(n_conv: int = dims.N_CONV, use_pallas: bool = True):
+    """Returns fn(*params, inv, dep, adj, mask) -> (z,) with flat args in
+    param_specs order — the artifact signature."""
+    names = [n for n, _ in param_specs(n_conv)]
+
+    def fn(*args):
+        params = OrderedDict(zip(names, args[: len(names)]))
+        inv, dep, adj, mask = args[len(names):]
+        return (forward(params, inv, dep, adj, mask, n_conv, use_pallas),)
+
+    return fn
+
+
+def train_flat(n_conv: int = dims.N_CONV, use_pallas: bool = True):
+    """Returns fn(*params, *accum, inv, dep, adj, mask, log_y, weight,
+    sample_mask, lr) -> (*params', *accum', loss). `lr` is a runtime scalar
+    input so the rust coordinator can tune/schedule it without re-AOT."""
+    names = [n for n, _ in param_specs(n_conv)]
+    np_ = len(names)
+
+    def fn(*args):
+        params = OrderedDict(zip(names, args[:np_]))
+        accum = OrderedDict(zip(names, args[np_: 2 * np_]))
+        inv, dep, adj, mask, log_y, weight, sample_mask, lr = args[2 * np_:]
+        new_p, new_a, loss = train_step(
+            params, accum, inv, dep, adj, mask, log_y, weight, sample_mask,
+            n_conv, use_pallas, lr=lr)
+        return tuple(new_p.values()) + tuple(new_a.values()) + (loss,)
+
+    return fn

@@ -1,0 +1,68 @@
+"""AOT lowering sanity: HLO text emission and manifest consistency.
+
+Kept light (one lowering) — the full artifact build is `make artifacts`.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, dims, model
+
+
+def entry_input_arity(text):
+    """Number of inputs in the HLO entry computation layout."""
+    header = text.split("entry_computation_layout={(", 1)[1]
+    header = header.split(")->", 1)[0]
+    # each input is one fNN[...]{...} spec at depth 0
+    return header.count("f32[")
+
+
+def test_lower_infer_produces_hlo_text():
+    lowered = aot.lower_infer(n_conv=1, batch=2, n=6, use_pallas=False)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # one tensor input per model param + 4 batch inputs
+    n_params = len(model.param_specs(1))
+    assert entry_input_arity(text) == n_params + 4
+
+
+def test_lower_train_returns_params_accum_loss():
+    lowered = aot.lower_train(n_conv=0, batch=2, n=4, use_pallas=False)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    n_params = len(model.param_specs(0))
+    # inputs: params + accum + 4 batch + 3 targets + lr
+    assert entry_input_arity(text) == 2 * n_params + 8
+
+
+def test_manifest_matches_param_specs():
+    man = aot.manifest(dims.N_CONV, dims.BATCH, dims.MAX_NODES)
+    specs = model.param_specs(dims.N_CONV)
+    assert len(man["params"]) == len(specs)
+    for entry, (name, shape) in zip(man["params"], specs):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == shape
+    assert man["inv_dim"] == dims.INV_DIM
+    assert man["dep_dim"] == dims.DEP_DIM
+    assert man["batch"] == dims.BATCH
+    assert man["max_nodes"] == dims.MAX_NODES
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["inv_dim"] == dims.INV_DIM
+    assert man["n_conv"] == dims.N_CONV
+    for fname in ("gcn_infer.hlo.txt", "gcn_train.hlo.txt"):
+        with open(os.path.join(root, fname)) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), fname

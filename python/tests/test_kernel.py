@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the values. This is the
+core numerical signal for the whole stack: the AOT artifacts embed these
+kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dims
+from compile.kernels import gcn_conv as kernels
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def make_adj(rng, b, n):
+    """Random row-normalized DAG adjacency with self loops, like the rust
+    side produces."""
+    a = (rng.random((b, n, n)) < 0.15).astype(np.float32)
+    a = np.triu(a, 1)  # DAG: edges i->j only for i<j
+    a = a + np.transpose(a, (0, 2, 1)) + np.eye(n, dtype=np.float32)
+    a = np.minimum(a, 1.0)
+    return a / a.sum(-1, keepdims=True)
+
+
+# ------------------------------------------------------------------ embed
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 24),
+    i_dim=st.sampled_from([4, 16, dims.INV_DIM]),
+    d_dim=st.sampled_from([8, 24, dims.DEP_DIM]),
+    ei=st.sampled_from([8, dims.EMB_INV]),
+    ed=st.sampled_from([8, dims.EMB_DEP]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embed_matches_ref(b, n, i_dim, d_dim, ei, ed, seed):
+    rng = np.random.default_rng(seed)
+    inv, dep = rand(rng, b, n, i_dim), rand(rng, b, n, d_dim)
+    wi, bi = rand(rng, i_dim, ei), rand(rng, ei)
+    wd, bd = rand(rng, d_dim, ed), rand(rng, ed)
+    got = np.asarray(kernels.embed(inv, dep, wi, bi, wd, bd))
+    want = np.asarray(ref.embed_ref(inv, dep, wi, bi, wd, bd))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- gcn_conv
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 24),
+    f=st.sampled_from([4, 16, dims.NODE_DIM]),
+    g=st.sampled_from([4, 16, dims.HIDDEN]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gcn_conv_matches_ref(b, n, f, g, seed):
+    rng = np.random.default_rng(seed)
+    adj = make_adj(rng, b, n)
+    e = rand(rng, b, n, f)
+    w, bias = rand(rng, f, g), rand(rng, g)
+    got = np.asarray(kernels.gcn_conv(adj, e, w, bias))
+    want = np.asarray(ref.gcn_conv_ref(adj, e, w, bias))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_conv_artifact_shape():
+    """Exact artifact configuration (B=32, N=48, F=80)."""
+    rng = np.random.default_rng(0)
+    b, n, f = dims.BATCH, dims.MAX_NODES, dims.NODE_DIM
+    adj = make_adj(rng, b, n)
+    e = rand(rng, b, n, f)
+    w, bias = rand(rng, f, f), rand(rng, f)
+    got = np.asarray(kernels.gcn_conv(adj, e, w, bias))
+    want = np.asarray(ref.gcn_conv_ref(adj, e, w, bias))
+    assert got.shape == (b, n, f)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_aggregates_neighbors_only():
+    """A node with no in-edges (beyond self loop) must only see itself."""
+    b, n, f = 1, 4, 8
+    adj = np.zeros((b, n, n), np.float32)
+    adj[0] = np.eye(n)  # self loops only
+    rng = np.random.default_rng(1)
+    e = rand(rng, b, n, f)
+    w = np.eye(f, dtype=np.float32)
+    bias = np.zeros(f, np.float32)
+    out = np.asarray(kernels.gcn_conv(adj, e, w, bias))
+    np.testing.assert_allclose(out, e, rtol=1e-6)
+
+
+def test_embed_relu_clamps():
+    """Large negative weights must produce exact zeros (ReLU)."""
+    b, n = 2, 3
+    inv = np.ones((b, n, 4), np.float32)
+    dep = np.ones((b, n, 4), np.float32)
+    wi = -np.ones((4, 8), np.float32)
+    wd = -np.ones((4, 8), np.float32)
+    bi = np.zeros(8, np.float32)
+    bd = np.zeros(8, np.float32)
+    out = np.asarray(kernels.embed(inv, dep, wi, bi, wd, bd))
+    assert (out == 0.0).all()

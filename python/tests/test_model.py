@@ -1,0 +1,171 @@
+"""L2 correctness: forward invariances, loss properties, Adagrad math."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import dims, model
+
+
+B, N = 4, 10  # small instances for speed (model is shape-generic)
+
+
+def make_batch(seed=0, b=B, n=N):
+    rng = np.random.default_rng(seed)
+    inv = rng.standard_normal((b, n, dims.INV_DIM)).astype(np.float32)
+    dep = rng.standard_normal((b, n, dims.DEP_DIM)).astype(np.float32)
+    a = np.triu((rng.random((b, n, n)) < 0.3).astype(np.float32), 1)
+    a = a + np.transpose(a, (0, 2, 1)) + np.eye(n, dtype=np.float32)
+    adj = np.minimum(a, 1.0)
+    adj = adj / adj.sum(-1, keepdims=True)
+    mask = np.ones((b, n), np.float32)
+    return inv, dep, adj, mask
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_forward_shape_and_finite(params):
+    inv, dep, adj, mask = make_batch()
+    z = model.forward(params, inv, dep, adj, mask, use_pallas=False)
+    assert z.shape == (B,)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+def test_pallas_and_ref_paths_agree(params):
+    inv, dep, adj, mask = make_batch(3)
+    z_ref = model.forward(params, inv, dep, adj, mask, use_pallas=False)
+    z_pal = model.forward(params, inv, dep, adj, mask, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(z_ref), np.asarray(z_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_padding_nodes_do_not_affect_output(params):
+    """Masked (padding) stages must be invisible: growing N with zero-mask
+    padding keeps z identical."""
+    inv, dep, adj, mask = make_batch(1, n=6)
+    pad = 4
+    inv2 = np.pad(inv, ((0, 0), (0, pad), (0, 0)))
+    dep2 = np.pad(dep, ((0, 0), (0, pad), (0, 0)))
+    adj2 = np.zeros((B, 6 + pad, 6 + pad), np.float32)
+    adj2[:, :6, :6] = adj
+    # padding rows get self-loops (as the rust batcher emits)
+    for i in range(6, 6 + pad):
+        adj2[:, i, i] = 1.0
+    mask2 = np.pad(mask, ((0, 0), (0, pad)))
+    z1 = model.forward(params, inv, dep, adj, mask, use_pallas=False)
+    z2 = model.forward(params, inv2, dep2, adj2, mask2, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_param_specs_order_and_count():
+    specs = model.param_specs()
+    names = [n for n, _ in specs]
+    assert names[0] == "w_inv" and names[-1] == "b_out"
+    assert len(specs) == 4 + 4 * dims.N_CONV + 2
+    p = model.init_params(jax.random.PRNGKey(1))
+    assert list(p.keys()) == names
+    for (name, shape) in specs:
+        assert p[name].shape == shape
+
+
+def test_loss_zero_when_prediction_exact(params):
+    inv, dep, adj, mask = make_batch(2)
+    z = model.forward(params, inv, dep, adj, mask, use_pallas=False)
+    log_y = np.asarray(z)  # targets equal predictions
+    w = np.ones(B, np.float32)
+    sm = np.ones(B, np.float32)
+    loss = model.loss_fn(params, inv, dep, adj, mask, log_y, w, sm,
+                         use_pallas=False)
+    assert float(loss) < 1e-5
+
+
+def test_loss_respects_sample_mask(params):
+    inv, dep, adj, mask = make_batch(2)
+    log_y = np.zeros(B, np.float32)
+    w = np.ones(B, np.float32)
+    sm_all = np.ones(B, np.float32)
+    sm_first = np.array([1, 0, 0, 0], np.float32)
+    l_all = float(model.loss_fn(params, inv, dep, adj, mask, log_y, w,
+                                sm_all, use_pallas=False))
+    l_first = float(model.loss_fn(params, inv, dep, adj, mask, log_y, w,
+                                  sm_first, use_pallas=False))
+    # masking changes the loss (unless by freak chance all ξ equal)
+    assert l_all != pytest.approx(l_first, rel=1e-6) or l_all == 0
+
+
+def test_train_step_decreases_loss(params):
+    inv, dep, adj, mask = make_batch(4)
+    log_y = np.full(B, -1.0, np.float32)
+    w = np.ones(B, np.float32)
+    sm = np.ones(B, np.float32)
+    accum = {k: jnp.zeros_like(v) for k, v in params.items()}
+    p = params
+    losses = []
+    for _ in range(50):
+        p, accum, loss = model.train_step(p, accum, inv, dep, adj, mask,
+                                          log_y, w, sm, use_pallas=False,
+                                          lr=0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_adagrad_matches_manual_formula(params):
+    """One step on a single weight matches p - lr*g/(sqrt(g²)+eps)."""
+    inv, dep, adj, mask = make_batch(5)
+    log_y = np.zeros(B, np.float32)
+    w = np.ones(B, np.float32)
+    sm = np.ones(B, np.float32)
+    grads = jax.grad(model.loss_fn)(params, inv, dep, adj, mask, log_y, w,
+                                    sm, use_pallas=False)
+    accum = {k: jnp.zeros_like(v) for k, v in params.items()}
+    new_p, new_a, _ = model.train_step(params, accum, inv, dep, adj, mask,
+                                       log_y, w, sm, use_pallas=False)
+    g = grads["w_out"] + dims.WEIGHT_DECAY * params["w_out"]
+    expect = params["w_out"] - dims.LEARNING_RATE * g / (
+        jnp.sqrt(g * g) + dims.ADAGRAD_EPS)
+    np.testing.assert_allclose(np.asarray(new_p["w_out"]),
+                               np.asarray(expect), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_a["w_out"]),
+                               np.asarray(g * g), rtol=1e-6)
+
+
+def test_flat_entry_points_roundtrip(params):
+    inv, dep, adj, mask = make_batch(6)
+    flat = list(params.values())
+    z_flat = model.infer_flat(use_pallas=False)(*flat, inv, dep, adj, mask)[0]
+    z = model.forward(params, inv, dep, adj, mask, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(z_flat), np.asarray(z), rtol=1e-6)
+
+    accum = [jnp.zeros_like(v) for v in flat]
+    log_y = np.zeros(B, np.float32)
+    w = np.ones(B, np.float32)
+    sm = np.ones(B, np.float32)
+    out = model.train_flat(use_pallas=False)(
+        *flat, *accum, inv, dep, adj, mask, log_y, w, sm,
+        jnp.float32(dims.LEARNING_RATE))
+    assert len(out) == 2 * len(flat) + 1
+    # shapes preserved
+    for o, pv in zip(out[: len(flat)], flat):
+        assert o.shape == pv.shape
+
+
+def test_graph_norm_handles_all_masked():
+    h = jnp.ones((2, 3, 4))
+    mask = jnp.zeros((2, 3, 1))
+    out = model.graph_batch_norm(h, mask, jnp.ones(4), jnp.zeros(4))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_ablation_depths_forward():
+    """n_conv = 0 (pure FFN readout) .. 4 all produce finite outputs."""
+    inv, dep, adj, mask = make_batch(7)
+    for k in [0, 1, 4]:
+        p = model.init_params(jax.random.PRNGKey(k), n_conv=k)
+        z = model.forward(p, inv, dep, adj, mask, n_conv=k, use_pallas=False)
+        assert z.shape == (B,)
+        assert np.isfinite(np.asarray(z)).all()

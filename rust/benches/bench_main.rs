@@ -1,0 +1,165 @@
+//! Benchmark suite (`cargo bench`) — criterion-like harness from
+//! `util::bench` (criterion itself is not in the offline vendor set).
+//!
+//! Groups map to the paper's experiment pipeline:
+//!   sim       — the benchmarking substrate (Fig 4 "benchmark on hardware")
+//!   features  — §II-C featurization
+//!   dataset   — end-to-end sample generation rate
+//!   baselines — Halide-FFN fwd, TVM-GBT fit/predict (Fig 8 comparators)
+//!   gcn       — PJRT inference / train-step latency (the served model)
+//!   search    — beam-search step (Fig 2 deployment loop)
+//!
+//! Set GCN_PERF_BENCH_FAST=1 for quick runs.
+
+use gcn_perf::baselines::gbt::{Gbt, GbtConfig};
+use gcn_perf::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
+use gcn_perf::constants::BATCH;
+use gcn_perf::dataset::builder::{build_dataset, sample_from_schedule, DataGenConfig};
+use gcn_perf::features::featurize;
+use gcn_perf::lower::lower_pipeline;
+use gcn_perf::model::Batch;
+use gcn_perf::runtime::GcnRuntime;
+use gcn_perf::schedule::random::random_pipeline_schedule;
+use gcn_perf::search::{beam_search, BeamConfig, SimCost};
+use gcn_perf::sim::{simulate, Machine};
+use gcn_perf::util::bench::{bench_default, black_box, header, BenchResult};
+use gcn_perf::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    println!("{}", header());
+    let mut run = |r: BenchResult| {
+        println!("{}", r.report());
+        results.push(r);
+    };
+
+    // ---------------------------------------------------------------- sim
+    let machine = Machine::default();
+    let net = gcn_perf::zoo::resnet18();
+    let nests = lower_pipeline(&net);
+    let mut rng = Rng::new(1);
+    let scheds: Vec<_> = (0..64)
+        .map(|_| random_pipeline_schedule(&net, &nests, &mut rng))
+        .collect();
+    let mut i = 0;
+    run(bench_default("sim/simulate resnet18 (35 stages)", || {
+        i = (i + 1) % scheds.len();
+        black_box(simulate(&net, &nests, &scheds[i], &machine));
+    }));
+
+    let mut rng2 = Rng::new(2);
+    run(bench_default("sim/bench_schedule (10 noisy runs)", || {
+        i = (i + 1) % scheds.len();
+        black_box(gcn_perf::sim::bench_schedule(
+            &net, &nests, &scheds[i], &machine, &mut rng2,
+        ));
+    }));
+
+    // ----------------------------------------------------------- features
+    run(bench_default("features/featurize resnet18", || {
+        i = (i + 1) % scheds.len();
+        black_box(featurize(&net, &nests, &scheds[i], &machine));
+    }));
+
+    run(bench_default("schedule/random sample resnet18", || {
+        black_box(random_pipeline_schedule(&net, &nests, &mut rng2));
+    }));
+
+    // ------------------------------------------------------------ dataset
+    let mut rng3 = Rng::new(3);
+    run(bench_default("dataset/sample (featurize+bench)", || {
+        i = (i + 1) % scheds.len();
+        black_box(sample_from_schedule(
+            &net, &nests, &scheds[i], &machine, 0, 0, &mut rng3,
+        ));
+    }));
+
+    // one small dataset for model benches
+    let ds = build_dataset(&DataGenConfig {
+        n_pipelines: 24,
+        schedules_per_pipeline: 8,
+        seed: 9,
+        ..Default::default()
+    });
+    let stats = ds.stats.clone().unwrap();
+    let best = ds.best_per_pipeline();
+
+    let refs: Vec<&gcn_perf::dataset::sample::GraphSample> =
+        ds.samples.iter().take(BATCH).collect();
+    let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
+    run(bench_default("model/batch build (32 graphs)", || {
+        black_box(Batch::build(&refs, &stats, &bests));
+    }));
+
+    // ---------------------------------------------------------- baselines
+    let mut ffn = HalideFfn::new(stats.clone(), 5);
+    ffn.fit(&ds, &FfnTrainConfig { epochs: 1, ..Default::default() });
+    run(bench_default("baselines/ffn predict (1 sample)", || {
+        black_box(ffn.predict_sample(&ds.samples[i % ds.samples.len()]));
+    }));
+
+    run(bench_default("baselines/gbt fit (192 samples)", || {
+        black_box(Gbt::fit(&ds, GbtConfig { n_trees: 20, ..Default::default() }));
+    }));
+    let gbt = Gbt::fit(&ds, GbtConfig::default());
+    run(bench_default("baselines/gbt predict (1 sample)", || {
+        black_box(gbt.predict_sample(&ds.samples[i % ds.samples.len()]));
+    }));
+
+    // ---------------------------------------------------------------- gcn
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = GcnRuntime::load(artifacts, true).expect("load artifacts");
+        let params = rt.init_params(1);
+        let batch = Batch::build(&refs, &stats, &bests);
+        run(bench_default("gcn/pjrt infer (batch 32)", || {
+            black_box(rt.infer(&params, &batch).unwrap());
+        }));
+        let mut p = params.clone();
+        let mut a = p.zeros_like();
+        run(bench_default("gcn/pjrt train step (batch 32)", || {
+            black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
+        }));
+    } else {
+        eprintln!("(artifacts/ missing — skipping gcn PJRT benches)");
+    }
+
+    // A/B: same model lowered without the Pallas kernels (pure jnp) — the
+    // interpret-mode pallas grid becomes an XLA while-loop over the batch,
+    // this variant lets XLA batch the matmuls directly. §Perf evidence for
+    // the CPU-artifact choice (TPU artifacts keep the Pallas path).
+    let ab = Path::new("artifacts_nopallas");
+    if ab.join("manifest.json").exists() {
+        let rt = GcnRuntime::load(ab, true).expect("load A/B artifacts");
+        let params = rt.init_params(1);
+        let batch = Batch::build(&refs, &stats, &bests);
+        run(bench_default("gcn/pjrt infer no-pallas (batch 32)", || {
+            black_box(rt.infer(&params, &batch).unwrap());
+        }));
+        let mut p = params.clone();
+        let mut a = p.zeros_like();
+        run(bench_default("gcn/pjrt train no-pallas (batch 32)", || {
+            black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
+        }));
+    }
+
+    // -------------------------------------------------------------- search
+    let unet = gcn_perf::zoo::unet();
+    let unests = lower_pipeline(&unet);
+    let oracle = SimCost { machine: machine.clone() };
+    run(bench_default("search/beam unet (w=2, c=4)", || {
+        black_box(beam_search(
+            &unet,
+            &unests,
+            &oracle,
+            &BeamConfig { beam_width: 2, candidates_per_stage: 4, seed: 1 },
+        ));
+    }));
+
+    // summary for EXPERIMENTS.md §Perf
+    println!("\n--- summary (mean) ---");
+    for r in &results {
+        println!("{:<42} {}", r.name, gcn_perf::util::bench::fmt_ns(r.mean_ns()));
+    }
+}

@@ -1,0 +1,336 @@
+//! TVM-style gradient-boosted regression trees (Chen et al. 2018 use
+//! XGBoost). From-scratch implementation: histogram feature binning,
+//! second-order (Newton) leaf weights with L2 regularization, shrinkage,
+//! depth-limited greedy splits.
+//!
+//! Program featurization follows TVM's flattened "context features": each
+//! sample becomes a fixed-size vector of [sum, max, mean] aggregates of its
+//! per-stage features, and the model regresses log-runtime with squared
+//! error (predictions are exponentiated back to seconds).
+
+use crate::baselines::PerfModel;
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::dataset::sample::{Dataset, GraphSample};
+
+pub const GBT_FEATS: usize = 3 * (INV_DIM + DEP_DIM) + 2;
+
+/// Aggregate a sample into TVM-style flattened context features.
+pub fn gbt_features(s: &GraphSample) -> Vec<f32> {
+    let ns = s.n_stages as usize;
+    let mut out = vec![0f32; GBT_FEATS];
+    let (sum_off, max_off, mean_off) = (0, INV_DIM + DEP_DIM, 2 * (INV_DIM + DEP_DIM));
+    let width = INV_DIM + DEP_DIM;
+    for (iv, dv) in s.inv.iter().zip(&s.dep) {
+        for (d, &v) in iv.iter().chain(dv.iter()).enumerate() {
+            out[sum_off + d] += v;
+            if v > out[max_off + d] {
+                out[max_off + d] = v;
+            }
+        }
+    }
+    for d in 0..width {
+        out[mean_off + d] = out[sum_off + d] / ns as f32;
+    }
+    out[3 * width] = ns as f32;
+    out[3 * width + 1] = s.edges.len() as f32;
+    out
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf(f32),
+    Split { feat: usize, threshold: f32, left: usize, right: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f32]) -> f32 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf(v) => return *v,
+                Node::Split { feat, threshold, left, right } => {
+                    i = if x[*feat] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GbtConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f32,
+    pub min_child_weight: f32,
+    pub lambda: f32,
+    pub n_bins: usize,
+    pub min_gain: f32,
+}
+
+impl Default for GbtConfig {
+    fn default() -> Self {
+        GbtConfig {
+            n_trees: 120,
+            max_depth: 6,
+            learning_rate: 0.15,
+            min_child_weight: 4.0,
+            lambda: 1.0,
+            n_bins: 32,
+            min_gain: 1e-6,
+        }
+    }
+}
+
+pub struct Gbt {
+    pub cfg: GbtConfig,
+    base: f32,
+    trees: Vec<Tree>,
+    /// Per-feature bin edges computed on the training set.
+    bins: Vec<Vec<f32>>,
+}
+
+struct BuildCtx<'a> {
+    x: &'a [Vec<f32>],
+    grad: &'a [f32], // g_i (squared error: pred - target)
+    hess: f32,       // h_i = 1 for squared error
+    cfg: &'a GbtConfig,
+    bins: &'a [Vec<f32>],
+}
+
+impl Gbt {
+    /// Fit on (features, log-runtime targets).
+    pub fn fit_xy(x: &[Vec<f32>], y: &[f32], cfg: GbtConfig) -> Gbt {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let nf = x[0].len();
+        // bin edges by per-feature quantiles
+        let mut bins = Vec::with_capacity(nf);
+        for f in 0..nf {
+            let mut vals: Vec<f32> = x.iter().map(|r| r[f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            let mut edges = Vec::new();
+            if vals.len() > 1 {
+                for b in 1..cfg.n_bins.min(vals.len()) {
+                    let q = b * (vals.len() - 1) / cfg.n_bins.min(vals.len());
+                    let e = vals[q];
+                    if edges.last() != Some(&e) {
+                        edges.push(e);
+                    }
+                }
+            }
+            bins.push(edges);
+        }
+
+        let base = y.iter().sum::<f32>() / y.len() as f32;
+        let mut pred = vec![base; y.len()];
+        let mut trees = Vec::with_capacity(cfg.n_trees);
+        for _ in 0..cfg.n_trees {
+            let grad: Vec<f32> = pred.iter().zip(y).map(|(p, t)| p - t).collect();
+            let ctx = BuildCtx { x, grad: &grad, hess: 1.0, cfg: &cfg, bins: &bins };
+            let mut nodes = Vec::new();
+            let idx: Vec<u32> = (0..x.len() as u32).collect();
+            build_node(&ctx, &idx, 0, &mut nodes);
+            let tree = Tree { nodes };
+            for (i, row) in x.iter().enumerate() {
+                pred[i] += cfg.learning_rate * tree.predict(row);
+            }
+            trees.push(tree);
+        }
+        Gbt { cfg, base, trees, bins }
+    }
+
+    /// Fit on a dataset (targets = log mean runtimes).
+    pub fn fit(ds: &Dataset, cfg: GbtConfig) -> Gbt {
+        let x: Vec<Vec<f32>> = ds.samples.iter().map(gbt_features).collect();
+        let y: Vec<f32> = ds
+            .samples
+            .iter()
+            .map(|s| (s.mean_runtime().max(1e-12)).ln() as f32)
+            .collect();
+        Gbt::fit_xy(&x, &y, cfg)
+    }
+
+    /// Predicted log-runtime for a feature row.
+    pub fn predict_log(&self, x: &[f32]) -> f32 {
+        self.base
+            + self.cfg.learning_rate
+                * self.trees.iter().map(|t| t.predict(x)).sum::<f32>()
+    }
+
+    pub fn predict_sample(&self, s: &GraphSample) -> f64 {
+        (self.predict_log(&gbt_features(s)) as f64).exp()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn bin_count(&self) -> usize {
+        self.bins.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Recursively grow one node; returns its index in `nodes`.
+fn build_node(ctx: &BuildCtx, idx: &[u32], depth: usize, nodes: &mut Vec<Node>) -> usize {
+    let g_sum: f32 = idx.iter().map(|&i| ctx.grad[i as usize]).sum();
+    let h_sum: f32 = idx.len() as f32 * ctx.hess;
+    let leaf_value = -g_sum / (h_sum + ctx.cfg.lambda);
+
+    if depth >= ctx.cfg.max_depth || idx.len() < 2 {
+        nodes.push(Node::Leaf(leaf_value));
+        return nodes.len() - 1;
+    }
+
+    // find best split over (feature, bin edge)
+    let parent_score = g_sum * g_sum / (h_sum + ctx.cfg.lambda);
+    let mut best: Option<(usize, f32, f32)> = None; // (feat, threshold, gain)
+    let nf = ctx.x[0].len();
+    for f in 0..nf {
+        let edges = &ctx.bins[f];
+        if edges.is_empty() {
+            continue;
+        }
+        // histogram of gradients per bin
+        let nb = edges.len() + 1;
+        let mut hg = vec![0f32; nb];
+        let mut hh = vec![0f32; nb];
+        for &i in idx {
+            let v = ctx.x[i as usize][f];
+            let b = edges.partition_point(|&e| e < v);
+            hg[b] += ctx.grad[i as usize];
+            hh[b] += ctx.hess;
+        }
+        let mut gl = 0f32;
+        let mut hl = 0f32;
+        for b in 0..nb - 1 {
+            gl += hg[b];
+            hl += hh[b];
+            let gr = g_sum - gl;
+            let hr = h_sum - hl;
+            if hl < ctx.cfg.min_child_weight || hr < ctx.cfg.min_child_weight {
+                continue;
+            }
+            let gain = gl * gl / (hl + ctx.cfg.lambda) + gr * gr / (hr + ctx.cfg.lambda)
+                - parent_score;
+            if gain > ctx.cfg.min_gain && best.map(|(_, _, g)| gain > g).unwrap_or(true) {
+                best = Some((f, edges[b], gain));
+            }
+        }
+    }
+
+    match best {
+        None => {
+            nodes.push(Node::Leaf(leaf_value));
+            nodes.len() - 1
+        }
+        Some((feat, threshold, _)) => {
+            let (li, ri): (Vec<u32>, Vec<u32>) =
+                idx.iter().partition(|&&i| ctx.x[i as usize][feat] <= threshold);
+            let me = nodes.len();
+            nodes.push(Node::Leaf(0.0)); // placeholder
+            let left = build_node(ctx, &li, depth + 1, nodes);
+            let right = build_node(ctx, &ri, depth + 1, nodes);
+            nodes[me] = Node::Split { feat, threshold, left, right };
+            me
+        }
+    }
+}
+
+impl PerfModel for Gbt {
+    fn predict(&self, ds: &Dataset) -> Vec<f64> {
+        ds.samples.iter().map(|s| self.predict_sample(s)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "tvm-gbt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fits_simple_function() {
+        // y = 2*x0 + step(x1)
+        let mut rng = Rng::new(1);
+        let x: Vec<Vec<f32>> = (0..400)
+            .map(|_| vec![rng.f32(), rng.f32(), rng.f32()])
+            .collect();
+        let y: Vec<f32> = x
+            .iter()
+            .map(|r| 2.0 * r[0] + if r[1] > 0.5 { 1.0 } else { 0.0 })
+            .collect();
+        let gbt = Gbt::fit_xy(&x, &y, GbtConfig { n_trees: 60, ..Default::default() });
+        let mse: f32 = x
+            .iter()
+            .zip(&y)
+            .map(|(r, &t)| (gbt.predict_log(r) - t).powi(2))
+            .sum::<f32>()
+            / y.len() as f32;
+        assert!(mse < 0.02, "mse {mse}");
+    }
+
+    #[test]
+    fn constant_target_learned_exactly() {
+        let x: Vec<Vec<f32>> = (0..50).map(|i| vec![i as f32]).collect();
+        let y = vec![3.5f32; 50];
+        let gbt = Gbt::fit_xy(&x, &y, GbtConfig::default());
+        assert!((gbt.predict_log(&[7.0]) - 3.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn respects_max_depth_and_tree_count() {
+        let mut rng = Rng::new(2);
+        let x: Vec<Vec<f32>> = (0..100).map(|_| vec![rng.f32(), rng.f32()]).collect();
+        let y: Vec<f32> = x.iter().map(|r| r[0] * r[1]).collect();
+        let cfg = GbtConfig { n_trees: 10, max_depth: 3, ..Default::default() };
+        let gbt = Gbt::fit_xy(&x, &y, cfg);
+        assert_eq!(gbt.n_trees(), 10);
+    }
+
+    #[test]
+    fn gbt_features_shape_and_aggregates() {
+        use crate::constants::BENCH_RUNS;
+        let s = GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 2,
+            edges: vec![(0, 1)],
+            inv: vec![[1.0; INV_DIM], [3.0; INV_DIM]],
+            dep: vec![[2.0; DEP_DIM], [4.0; DEP_DIM]],
+            runs: [1.0; BENCH_RUNS],
+        };
+        let f = gbt_features(&s);
+        assert_eq!(f.len(), GBT_FEATS);
+        assert_eq!(f[0], 4.0); // sum of inv dim 0
+        assert_eq!(f[INV_DIM + DEP_DIM], 3.0); // max of inv dim 0
+        assert_eq!(f[2 * (INV_DIM + DEP_DIM)], 2.0); // mean of inv dim 0
+        assert_eq!(f[GBT_FEATS - 2], 2.0); // n_stages
+        assert_eq!(f[GBT_FEATS - 1], 1.0); // n_edges
+    }
+
+    #[test]
+    fn improves_over_mean_predictor_on_dataset() {
+        use crate::dataset::builder::{build_dataset, DataGenConfig};
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 10,
+            schedules_per_pipeline: 8,
+            seed: 31,
+            ..Default::default()
+        });
+        let gbt = Gbt::fit(&ds, GbtConfig { n_trees: 40, ..Default::default() });
+        let truth: Vec<f64> = ds.samples.iter().map(|s| s.mean_runtime()).collect();
+        let preds = gbt.predict(&ds);
+        let log_t: Vec<f64> = truth.iter().map(|t| t.ln()).collect();
+        let log_p: Vec<f64> = preds.iter().map(|p| p.ln()).collect();
+        let r2 = crate::util::stats::r2_score(&log_t, &log_p);
+        assert!(r2 > 0.5, "train R² {r2}");
+    }
+}

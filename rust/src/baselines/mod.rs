@@ -1,0 +1,24 @@
+//! The two comparison models from the paper's evaluation (§IV):
+//!
+//! * [`halide_ffn`] — the Halide auto-scheduler model of Adams et al. 2019
+//!   (Fig 3): per-stage embedding MLPs whose head emits coefficients over 27
+//!   hand-crafted terms; stage runtimes sum to the pipeline prediction.
+//!   Implemented with [`nn`], a tiny dependency-free dense-layer library
+//!   with manual backprop.
+//! * [`gbt`] — the TVM auto-scheduler model (Chen et al. 2018): XGBoost-style
+//!   gradient-boosted regression trees over flattened per-program features,
+//!   written from scratch (histogram splits, second-order gain, shrinkage).
+
+pub mod nn;
+pub mod halide_ffn;
+pub mod gbt;
+pub mod rnn;
+
+use crate::dataset::sample::Dataset;
+
+/// Common interface for baseline models in the eval harness.
+pub trait PerfModel {
+    /// Predicted mean runtimes (seconds), one per sample.
+    fn predict(&self, ds: &Dataset) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}

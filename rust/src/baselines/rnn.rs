@@ -1,0 +1,435 @@
+//! Recurrent baseline — the Halide *value-learning* model family ([6],
+//! §V: "replaces the feed-forward network with a bi-directional LSTM and
+//! demonstrates significant improvement in prediction accuracy").
+//!
+//! We implement a bidirectional gated recurrent unit (GRU, the LSTM's
+//! lighter sibling) over the stages in topological order: per-stage
+//! embeddings feed forward and backward GRUs; the concatenated final
+//! hidden states pass through a linear head to the log-runtime. Manual
+//! backprop (BPTT) with gradient clipping and Adagrad, like the other
+//! in-tree baselines.
+//!
+//! This is an *extension* beyond the paper's Fig 8 (which compares GCN vs
+//! FFN vs GBT); the eval harness can include it to show where a sequence
+//! model lands between the FFN and the GCN — sequence models see order but
+//! not DAG structure.
+
+use crate::baselines::nn::Linear;
+use crate::baselines::PerfModel;
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::dataset::sample::{Dataset, GraphSample};
+use crate::features::normalize::FeatureStats;
+use crate::features::StageFeatures;
+use crate::util::rng::Rng;
+
+const IN_DIM: usize = INV_DIM + DEP_DIM;
+
+/// One GRU direction. Gates: z (update), r (reset), n (candidate).
+struct GruCell {
+    // weights [IN, 3H] and [H, 3H], bias [3H]; gate order: z | r | n
+    wx: Vec<f32>,
+    wh: Vec<f32>,
+    b: Vec<f32>,
+    h: usize,
+    // adagrad accumulators
+    gwx2: Vec<f32>,
+    gwh2: Vec<f32>,
+    gb2: Vec<f32>,
+    // accumulated grads
+    gwx: Vec<f32>,
+    gwh: Vec<f32>,
+    gb: Vec<f32>,
+}
+
+/// Per-step cache for BPTT.
+struct StepCache {
+    x: Vec<f32>,
+    h_prev: Vec<f32>,
+    z: Vec<f32>,
+    r: Vec<f32>,
+    n: Vec<f32>,
+    h: Vec<f32>,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl GruCell {
+    fn new(in_dim: usize, h: usize, rng: &mut Rng) -> GruCell {
+        let sx = (1.0 / in_dim as f64).sqrt();
+        let sh = (1.0 / h as f64).sqrt();
+        GruCell {
+            wx: (0..in_dim * 3 * h).map(|_| (rng.normal() * sx) as f32).collect(),
+            wh: (0..h * 3 * h).map(|_| (rng.normal() * sh) as f32).collect(),
+            b: vec![0.0; 3 * h],
+            h,
+            gwx2: vec![0.0; in_dim * 3 * h],
+            gwh2: vec![0.0; h * 3 * h],
+            gb2: vec![0.0; 3 * h],
+            gwx: vec![0.0; in_dim * 3 * h],
+            gwh: vec![0.0; h * 3 * h],
+            gb: vec![0.0; 3 * h],
+        }
+    }
+
+    /// One step: h' = (1−z)⊙n + z⊙h.
+    fn step(&self, x: &[f32], h_prev: &[f32]) -> StepCache {
+        let h = self.h;
+        let mut pre = self.b.clone(); // [3H]
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.wx[i * 3 * h..(i + 1) * 3 * h];
+            for (j, &w) in row.iter().enumerate() {
+                pre[j] += xi * w;
+            }
+        }
+        // z and r gates get the full recurrent term; n gets r⊙h later
+        let mut rec = vec![0f32; 3 * h];
+        for (i, &hi) in h_prev.iter().enumerate() {
+            if hi == 0.0 {
+                continue;
+            }
+            let row = &self.wh[i * 3 * h..(i + 1) * 3 * h];
+            for (j, &w) in row.iter().enumerate() {
+                rec[j] += hi * w;
+            }
+        }
+        let mut z = vec![0f32; h];
+        let mut r = vec![0f32; h];
+        let mut n = vec![0f32; h];
+        let mut h_new = vec![0f32; h];
+        for j in 0..h {
+            z[j] = sigmoid(pre[j] + rec[j]);
+            r[j] = sigmoid(pre[h + j] + rec[h + j]);
+            n[j] = (pre[2 * h + j] + r[j] * rec[2 * h + j]).tanh();
+            h_new[j] = (1.0 - z[j]) * n[j] + z[j] * h_prev[j];
+        }
+        StepCache { x: x.to_vec(), h_prev: h_prev.to_vec(), z, r, n, h: h_new }
+    }
+
+    /// BPTT through one step: given dL/dh', accumulate grads, return
+    /// (dL/dx, dL/dh_prev).
+    fn backward(&mut self, c: &StepCache, dh: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let h = self.h;
+        // recompute rec term for the n-gate path
+        let mut rec_n = vec![0f32; h];
+        for (i, &hi) in c.h_prev.iter().enumerate() {
+            if hi == 0.0 {
+                continue;
+            }
+            let row = &self.wh[i * 3 * h..(i + 1) * 3 * h];
+            for (j, v) in rec_n.iter_mut().enumerate() {
+                *v += hi * row[2 * h + j];
+            }
+        }
+        // gate pre-activation grads
+        let mut dpre = vec![0f32; 3 * h]; // z | r | n pre-activations
+        let mut dh_prev = vec![0f32; h];
+        for j in 0..h {
+            let dz = dh[j] * (c.h_prev[j] - c.n[j]);
+            let dn = dh[j] * (1.0 - c.z[j]);
+            dh_prev[j] += dh[j] * c.z[j];
+            let dn_pre = dn * (1.0 - c.n[j] * c.n[j]);
+            let dr = dn_pre * rec_n[j];
+            dpre[2 * h + j] = dn_pre;
+            dpre[j] = dz * c.z[j] * (1.0 - c.z[j]);
+            dpre[h + j] = dr * c.r[j] * (1.0 - c.r[j]);
+        }
+        // param grads + input grads
+        let mut dx = vec![0f32; c.x.len()];
+        for (i, &xi) in c.x.iter().enumerate() {
+            let grow = &mut self.gwx[i * 3 * h..(i + 1) * 3 * h];
+            let wrow = &self.wx[i * 3 * h..(i + 1) * 3 * h];
+            let mut acc = 0f32;
+            for j in 0..3 * h {
+                grow[j] += dpre[j] * xi;
+                acc += dpre[j] * wrow[j];
+            }
+            dx[i] = acc;
+        }
+        // recurrent weights: z,r gates see h_prev directly; n sees r⊙(wh·h)
+        for (i, &hi) in c.h_prev.iter().enumerate() {
+            let grow = &mut self.gwh[i * 3 * h..(i + 1) * 3 * h];
+            let wrow = &self.wh[i * 3 * h..(i + 1) * 3 * h];
+            let mut acc = 0f32;
+            for j in 0..h {
+                // z gate
+                grow[j] += dpre[j] * hi;
+                acc += dpre[j] * wrow[j];
+                // r gate
+                grow[h + j] += dpre[h + j] * hi;
+                acc += dpre[h + j] * wrow[h + j];
+                // n gate through r⊙rec
+                grow[2 * h + j] += dpre[2 * h + j] * c.r[j] * hi;
+                acc += dpre[2 * h + j] * c.r[j] * wrow[2 * h + j];
+            }
+            dh_prev[i] += acc;
+        }
+        for j in 0..3 * h {
+            self.gb[j] += dpre[j];
+        }
+        (dx, dh_prev)
+    }
+
+    fn step_params(&mut self, lr: f32, clip: f32) {
+        let apply = |w: &mut [f32], g: &mut [f32], g2: &mut [f32]| {
+            for i in 0..w.len() {
+                let gi = g[i].clamp(-clip, clip);
+                g2[i] += gi * gi;
+                w[i] -= lr * gi / (g2[i].sqrt() + 1e-10);
+                g[i] = 0.0;
+            }
+        };
+        apply(&mut self.wx, &mut self.gwx, &mut self.gwx2);
+        apply(&mut self.wh, &mut self.gwh, &mut self.gwh2);
+        apply(&mut self.b, &mut self.gb, &mut self.gb2);
+    }
+}
+
+pub struct BiGru {
+    fwd: GruCell,
+    bwd: GruCell,
+    head: Linear,
+    stats: FeatureStats,
+    hidden: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RnnTrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub clip: f32,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for RnnTrainConfig {
+    fn default() -> Self {
+        RnnTrainConfig { epochs: 20, lr: 0.02, clip: 1.0, seed: 31, verbose: false }
+    }
+}
+
+impl BiGru {
+    pub fn new(stats: FeatureStats, hidden: usize, seed: u64) -> BiGru {
+        let mut rng = Rng::new(seed);
+        BiGru {
+            fwd: GruCell::new(IN_DIM, hidden, &mut rng),
+            bwd: GruCell::new(IN_DIM, hidden, &mut rng),
+            head: Linear::new(2 * hidden, 1, false, &mut rng),
+            stats,
+            hidden,
+        }
+    }
+
+    fn stage_inputs(&self, s: &GraphSample) -> Vec<Vec<f32>> {
+        s.inv
+            .iter()
+            .zip(&s.dep)
+            .map(|(iv, dv)| {
+                let mut f = StageFeatures { invariant: *iv, dependent: *dv };
+                self.stats.apply(&mut f);
+                let mut x = Vec::with_capacity(IN_DIM);
+                x.extend_from_slice(&f.invariant);
+                x.extend_from_slice(&f.dependent);
+                x
+            })
+            .collect()
+    }
+
+    /// Forward; returns (log ŷ, caches) — caches reused by backward.
+    fn forward_sample(&mut self, s: &GraphSample) -> (f32, Vec<StepCache>, Vec<StepCache>) {
+        let xs = self.stage_inputs(s);
+        let h = self.hidden;
+        let mut hf = vec![0f32; h];
+        let mut fcaches = Vec::with_capacity(xs.len());
+        for x in &xs {
+            let c = self.fwd.step(x, &hf);
+            hf = c.h.clone();
+            fcaches.push(c);
+        }
+        let mut hb = vec![0f32; h];
+        let mut bcaches = Vec::with_capacity(xs.len());
+        for x in xs.iter().rev() {
+            let c = self.bwd.step(x, &hb);
+            hb = c.h.clone();
+            bcaches.push(c);
+        }
+        let mut cat = Vec::with_capacity(2 * h);
+        cat.extend_from_slice(&hf);
+        cat.extend_from_slice(&hb);
+        let z = self.head.forward(&cat, 1)[0];
+        (z, fcaches, bcaches)
+    }
+
+    fn backward_sample(&mut self, dz: f32, fcaches: &[StepCache], bcaches: &[StepCache]) {
+        let h = self.hidden;
+        let dcat = self.head.backward(&[dz]);
+        let mut dhf = dcat[..h].to_vec();
+        for c in fcaches.iter().rev() {
+            let (_dx, dh_prev) = self.fwd.backward(c, &dhf);
+            dhf = dh_prev;
+        }
+        let mut dhb = dcat[h..].to_vec();
+        for c in bcaches.iter().rev() {
+            let (_dx, dh_prev) = self.bwd.backward(c, &dhb);
+            dhb = dh_prev;
+        }
+    }
+
+    /// Train on log-runtime with squared error (the value-learning setup).
+    pub fn fit(&mut self, ds: &Dataset, cfg: &RnnTrainConfig) {
+        let mut rng = Rng::new(cfg.seed);
+        // output-bias init at the mean log target (same trick as the GCN)
+        let mean_log: f32 = ds
+            .samples
+            .iter()
+            .map(|s| s.mean_runtime().max(1e-12).ln() as f32)
+            .sum::<f32>()
+            / ds.len().max(1) as f32;
+        self.head.b[0] = mean_log;
+        for epoch in 0..cfg.epochs {
+            let mut order: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut order);
+            let mut loss = 0f64;
+            for &i in &order {
+                let s = &ds.samples[i];
+                let target = s.mean_runtime().max(1e-12).ln() as f32;
+                let (z, fc, bc) = self.forward_sample(s);
+                let err = z - target;
+                loss += (err * err) as f64;
+                self.backward_sample(2.0 * err, &fc, &bc);
+                self.fwd.step_params(cfg.lr, cfg.clip);
+                self.bwd.step_params(cfg.lr, cfg.clip);
+                self.head.step(cfg.lr, 1e-4);
+            }
+            if cfg.verbose {
+                eprintln!("gru epoch {epoch:>3} mse {:.4}", loss / ds.len() as f64);
+            }
+        }
+    }
+
+    pub fn predict_sample(&mut self, s: &GraphSample) -> f64 {
+        let (z, _, _) = self.forward_sample(s);
+        (z as f64).exp()
+    }
+}
+
+impl PerfModel for BiGru {
+    fn predict(&self, ds: &Dataset) -> Vec<f64> {
+        // forward mutates caches; work on a shadow copy of the weights
+        let mut me = BiGru::new(self.stats.clone(), self.hidden, 0);
+        me.fwd.wx = self.fwd.wx.clone();
+        me.fwd.wh = self.fwd.wh.clone();
+        me.fwd.b = self.fwd.b.clone();
+        me.bwd.wx = self.bwd.wx.clone();
+        me.bwd.wh = self.bwd.wh.clone();
+        me.bwd.b = self.bwd.b.clone();
+        me.head.w = self.head.w.clone();
+        me.head.b = self.head.b.clone();
+        ds.samples.iter().map(|s| me.predict_sample(s)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "bi-gru"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants::BENCH_RUNS;
+
+    fn toy_sample(vals: &[f32], rt: f32) -> GraphSample {
+        let ns = vals.len();
+        GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: ns as u16,
+            edges: (0..ns - 1).map(|i| (i as u16, i as u16 + 1)).collect(),
+            inv: vals.iter().map(|&v| [v; INV_DIM]).collect(),
+            dep: vals.iter().map(|&v| [v * 0.5; DEP_DIM]).collect(),
+            runs: [rt; BENCH_RUNS],
+        }
+    }
+
+    fn identity_stats() -> FeatureStats {
+        FeatureStats {
+            inv_mean: vec![0.0; INV_DIM],
+            inv_std: vec![1.0; INV_DIM],
+            dep_mean: vec![0.0; DEP_DIM],
+            dep_std: vec![1.0; DEP_DIM],
+        }
+    }
+
+    #[test]
+    fn gru_gradient_check_numeric() {
+        let mut rng = Rng::new(4);
+        let mut cell = GruCell::new(3, 2, &mut rng);
+        let x = [0.4f32, -0.3, 0.8];
+        let h0 = [0.1f32, -0.2];
+        // loss = sum(h'); analytic
+        let c = cell.step(&x, &h0);
+        cell.backward(&c, &[1.0, 1.0]);
+        let analytic_wx = cell.gwx.clone();
+        let analytic_wh = cell.gwh.clone();
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 11] {
+            let orig = cell.wx[idx];
+            cell.wx[idx] = orig + eps;
+            let lp: f32 = cell.step(&x, &h0).h.iter().sum();
+            cell.wx[idx] = orig - eps;
+            let lm: f32 = cell.step(&x, &h0).h.iter().sum();
+            cell.wx[idx] = orig;
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic_wx[idx]).abs() < 5e-3,
+                "wx[{idx}]: numeric {numeric} vs analytic {}",
+                analytic_wx[idx]
+            );
+        }
+        for idx in [0usize, 3, 7] {
+            let orig = cell.wh[idx];
+            cell.wh[idx] = orig + eps;
+            let lp: f32 = cell.step(&x, &h0).h.iter().sum();
+            cell.wh[idx] = orig - eps;
+            let lm: f32 = cell.step(&x, &h0).h.iter().sum();
+            cell.wh[idx] = orig;
+            let numeric = (lp - lm) / (2.0 * eps);
+            assert!(
+                (numeric - analytic_wh[idx]).abs() < 5e-3,
+                "wh[{idx}]: numeric {numeric} vs analytic {}",
+                analytic_wh[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn learns_to_separate_two_sequences() {
+        let fast = toy_sample(&[0.1, 0.2, 0.1], 1e-4);
+        let slow = toy_sample(&[0.9, 0.8, 0.9, 0.7], 1e-1);
+        let ds = Dataset {
+            samples: vec![fast.clone(), slow.clone(), fast, slow],
+            stats: None,
+        };
+        let mut gru = BiGru::new(identity_stats(), 16, 7);
+        gru.fit(&ds, &RnnTrainConfig { epochs: 60, ..Default::default() });
+        let p_fast = gru.predict_sample(&ds.samples[0]);
+        let p_slow = gru.predict_sample(&ds.samples[1]);
+        assert!(
+            p_fast < p_slow,
+            "fast {p_fast} should predict below slow {p_slow}"
+        );
+    }
+
+    #[test]
+    fn variable_length_sequences_ok() {
+        let mut gru = BiGru::new(identity_stats(), 8, 9);
+        for len in [1usize, 2, 7, 20] {
+            let s = toy_sample(&vec![0.3; len.max(2)], 1e-3);
+            let p = gru.predict_sample(&s);
+            assert!(p.is_finite() && p > 0.0, "len {len}: {p}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Dimensions shared between the rust featurizer and the JAX model.
+//!
+//! These MUST agree with `python/compile/dims.py`; `runtime::manifest`
+//! cross-checks them against `artifacts/manifest.json` at load time.
+
+/// Schedule-invariant feature vector length (per stage). §II-C.1.
+pub const INV_DIM: usize = 48;
+/// Schedule-dependent (66) + compound (22) feature vector length. §II-C.2.
+pub const DEP_DIM: usize = 88;
+/// Embedding width of the invariant features (Fig 5).
+pub const EMB_INV: usize = 32;
+/// Embedding width of the dependent features (Fig 5).
+pub const EMB_DEP: usize = 48;
+/// Node embedding width = EMB_INV + EMB_DEP.
+pub const NODE_DIM: usize = 80;
+/// Graph-convolution hidden width (all conv layers share it).
+pub const HIDDEN: usize = 80;
+/// Number of graph convolution layers (paper sweeps 0–8, picks 2).
+pub const N_CONV: usize = 2;
+/// Readout width: initial + one per conv layer, summed over stages (Fig 7).
+pub const READOUT: usize = NODE_DIM * (N_CONV + 1);
+/// Maximum number of stages per pipeline; graphs are padded to this.
+pub const MAX_NODES: usize = 48;
+/// Training / inference batch size baked into the AOT artifacts.
+pub const BATCH: usize = 32;
+/// Benchmark repetitions per schedule (paper: N = 10).
+pub const BENCH_RUNS: usize = 10;
+
+/// Number of hand-crafted terms in the Halide FFN baseline head (Fig 3).
+pub const FFN_TERMS: usize = 27;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_dims_consistent() {
+        assert_eq!(NODE_DIM, EMB_INV + EMB_DEP);
+        assert_eq!(READOUT, NODE_DIM * (N_CONV + 1));
+        assert!(MAX_NODES >= 5, "generator depth filter needs >=5 stages");
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset pipeline (Fig 4): random ONNX model → Halide-like pipeline →
+//! schedules → simulated benchmarking → stored samples.
+
+pub mod sample;
+pub mod builder;
+pub mod store;
+
+pub use builder::{build_dataset, DataGenConfig};
+pub use sample::{Dataset, GraphSample};

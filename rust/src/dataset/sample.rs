@@ -1,0 +1,174 @@
+//! Dataset record types.
+
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+use crate::features::normalize::FeatureStats;
+use std::collections::BTreeMap;
+
+/// One (pipeline, schedule) pair with its measured runtimes — one training
+/// sample for every model (GCN, Halide FFN, TVM GBT).
+#[derive(Debug, Clone)]
+pub struct GraphSample {
+    pub pipeline_id: u32,
+    pub schedule_id: u32,
+    pub n_stages: u16,
+    /// Directed producer→consumer stage edges.
+    pub edges: Vec<(u16, u16)>,
+    /// Raw (unnormalized) schedule-invariant features per stage.
+    pub inv: Vec<[f32; INV_DIM]>,
+    /// Raw schedule-dependent (+compound) features per stage.
+    pub dep: Vec<[f32; DEP_DIM]>,
+    /// The N = 10 noisy benchmark measurements, seconds.
+    pub runs: [f32; BENCH_RUNS],
+}
+
+impl GraphSample {
+    /// ȳ — mean of the measurements (the regression target).
+    pub fn mean_runtime(&self) -> f64 {
+        self.runs.iter().map(|&r| r as f64).sum::<f64>() / BENCH_RUNS as f64
+    }
+
+    /// Std-dev of the measurements (Property 3 of the loss).
+    pub fn std_runtime(&self) -> f64 {
+        let m = self.mean_runtime();
+        (self
+            .runs
+            .iter()
+            .map(|&r| (r as f64 - m) * (r as f64 - m))
+            .sum::<f64>()
+            / BENCH_RUNS as f64)
+            .sqrt()
+    }
+}
+
+/// A dataset plus the feature statistics fitted on its training portion.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub samples: Vec<GraphSample>,
+    /// Fitted on the train split; `None` until `fit_stats` runs.
+    pub stats: Option<FeatureStats>,
+}
+
+impl Dataset {
+    /// Best (minimum) mean runtime per pipeline — the α term denominator.
+    pub fn best_per_pipeline(&self) -> BTreeMap<u32, f64> {
+        let mut best = BTreeMap::new();
+        for s in &self.samples {
+            let m = s.mean_runtime();
+            best.entry(s.pipeline_id)
+                .and_modify(|b: &mut f64| *b = b.min(m))
+                .or_insert(m);
+        }
+        best
+    }
+
+    /// Pipeline-granular train/test split (no pipeline appears in both —
+    /// the paper evaluates on unseen schedules; splitting by pipeline is
+    /// the stricter, leak-free variant).
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut ids: Vec<u32> = {
+            let mut v: Vec<u32> = self.samples.iter().map(|s| s.pipeline_id).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut ids);
+        let n_test = ((ids.len() as f64 * test_frac).round() as usize).clamp(1, ids.len() - 1);
+        let test_ids: std::collections::BTreeSet<u32> = ids[..n_test].iter().copied().collect();
+        let (mut train, mut test) = (Dataset::default(), Dataset::default());
+        for s in &self.samples {
+            if test_ids.contains(&s.pipeline_id) {
+                test.samples.push(s.clone());
+            } else {
+                train.samples.push(s.clone());
+            }
+        }
+        train.fit_stats();
+        test.stats = train.stats.clone();
+        (train, test)
+    }
+
+    /// Fit feature normalization stats over all stages of all samples.
+    pub fn fit_stats(&mut self) {
+        let feats: Vec<crate::features::StageFeatures> = self
+            .samples
+            .iter()
+            .flat_map(|s| {
+                s.inv.iter().zip(&s.dep).map(|(iv, dv)| crate::features::StageFeatures {
+                    invariant: *iv,
+                    dependent: *dv,
+                })
+            })
+            .collect();
+        self.stats = Some(FeatureStats::fit(feats.iter()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn num_pipelines(&self) -> usize {
+        let mut v: Vec<u32> = self.samples.iter().map(|s| s.pipeline_id).collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(pid: u32, sid: u32, rt: f32) -> GraphSample {
+        GraphSample {
+            pipeline_id: pid,
+            schedule_id: sid,
+            n_stages: 2,
+            edges: vec![(0, 1)],
+            inv: vec![[0.0; INV_DIM]; 2],
+            dep: vec![[0.0; DEP_DIM]; 2],
+            runs: [rt; BENCH_RUNS],
+        }
+    }
+
+    #[test]
+    fn mean_and_std() {
+        let mut s = mk(0, 0, 2.0);
+        s.runs[0] = 4.0;
+        let m = s.mean_runtime();
+        assert!((m - 2.2).abs() < 1e-9);
+        assert!(s.std_runtime() > 0.0);
+    }
+
+    #[test]
+    fn best_per_pipeline_takes_min() {
+        let ds = Dataset {
+            samples: vec![mk(1, 0, 3.0), mk(1, 1, 1.0), mk(2, 0, 5.0)],
+            stats: None,
+        };
+        let best = ds.best_per_pipeline();
+        assert_eq!(best[&1], 1.0);
+        assert_eq!(best[&2], 5.0);
+    }
+
+    #[test]
+    fn split_is_pipeline_granular() {
+        let samples: Vec<GraphSample> = (0..20u32)
+            .flat_map(|pid| (0..5u32).map(move |sid| mk(pid, sid, 1.0)))
+            .collect();
+        let ds = Dataset { samples, stats: None };
+        let (train, test) = ds.split(0.2, 7);
+        assert_eq!(train.len() + test.len(), 100);
+        let train_ids: std::collections::BTreeSet<u32> =
+            train.samples.iter().map(|s| s.pipeline_id).collect();
+        let test_ids: std::collections::BTreeSet<u32> =
+            test.samples.iter().map(|s| s.pipeline_id).collect();
+        assert!(train_ids.is_disjoint(&test_ids));
+        assert_eq!(test_ids.len(), 4);
+        assert!(train.stats.is_some() && test.stats.is_some());
+    }
+}

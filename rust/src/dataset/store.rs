@@ -1,0 +1,232 @@
+//! Binary dataset persistence (little-endian, versioned magic header).
+//!
+//! Layout:
+//!   magic "GCNPERFD" + u32 version + u32 n_samples + u8 has_stats
+//!   [stats: 2*(INV_DIM+DEP_DIM) f64]           (if has_stats)
+//!   per sample:
+//!     u32 pipeline_id, u32 schedule_id, u16 n_stages, u32 n_edges
+//!     edges (u16, u16)*, inv f32*, dep f32*, runs f32[BENCH_RUNS]
+
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+use crate::dataset::sample::{Dataset, GraphSample};
+use crate::features::normalize::FeatureStats;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GCNPERFD";
+const VERSION: u32 = 1;
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u16(&mut self, v: u16) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.w.write_all(&[v])?;
+        Ok(())
+    }
+    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+        for v in vs {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn f64s(&mut self, vs: &[f64]) -> Result<()> {
+        for v in vs {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let mut b = [0u8; 2];
+        self.r.read_exact(&mut b)?;
+        Ok(u16::from_le_bytes(b))
+    }
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; n * 8];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Save a dataset (creates parent directories).
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = Writer { w: BufWriter::new(f) };
+    w.w.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    w.u32(ds.samples.len() as u32)?;
+    w.u8(ds.stats.is_some() as u8)?;
+    if let Some(stats) = &ds.stats {
+        w.f64s(&stats.to_flat())?;
+    }
+    for s in &ds.samples {
+        w.u32(s.pipeline_id)?;
+        w.u32(s.schedule_id)?;
+        w.u16(s.n_stages)?;
+        w.u32(s.edges.len() as u32)?;
+        for &(a, b) in &s.edges {
+            w.u16(a)?;
+            w.u16(b)?;
+        }
+        for iv in &s.inv {
+            w.f32s(iv)?;
+        }
+        for dv in &s.dep {
+            w.f32s(dv)?;
+        }
+        w.f32s(&s.runs)?;
+    }
+    w.w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset saved by [`save`].
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = Reader { r: BufReader::new(f) };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a gcn-perf dataset: bad magic {magic:?}");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported dataset version {version}");
+    }
+    let n = r.u32()? as usize;
+    let has_stats = r.u8()? != 0;
+    let stats = if has_stats {
+        Some(FeatureStats::from_flat(&r.f64s(2 * (INV_DIM + DEP_DIM))?))
+    } else {
+        None
+    };
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pipeline_id = r.u32()?;
+        let schedule_id = r.u32()?;
+        let n_stages = r.u16()?;
+        let n_edges = r.u32()? as usize;
+        let mut edges = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
+            edges.push((r.u16()?, r.u16()?));
+        }
+        let ns = n_stages as usize;
+        let mut inv = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let v = r.f32s(INV_DIM)?;
+            let mut arr = [0f32; INV_DIM];
+            arr.copy_from_slice(&v);
+            inv.push(arr);
+        }
+        let mut dep = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let v = r.f32s(DEP_DIM)?;
+            let mut arr = [0f32; DEP_DIM];
+            arr.copy_from_slice(&v);
+            dep.push(arr);
+        }
+        let rv = r.f32s(BENCH_RUNS)?;
+        let mut runs = [0f32; BENCH_RUNS];
+        runs.copy_from_slice(&rv);
+        samples.push(GraphSample {
+            pipeline_id,
+            schedule_id,
+            n_stages,
+            edges,
+            inv,
+            dep,
+            runs,
+        });
+    }
+    Ok(Dataset { samples, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let cfg = DataGenConfig {
+            n_pipelines: 3,
+            schedules_per_pipeline: 3,
+            seed: 5,
+            ..Default::default()
+        };
+        let ds = build_dataset(&cfg);
+        let dir = std::env::temp_dir().join("gcn_perf_test_store");
+        let path = dir.join("ds.bin");
+        save(&ds, &path).unwrap();
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.samples.len(), ds.samples.len());
+        for (a, b) in ds.samples.iter().zip(&rt.samples) {
+            assert_eq!(a.pipeline_id, b.pipeline_id);
+            assert_eq!(a.schedule_id, b.schedule_id);
+            assert_eq!(a.edges, b.edges);
+            assert_eq!(a.inv, b.inv);
+            assert_eq!(a.dep, b.dep);
+            assert_eq!(a.runs, b.runs);
+        }
+        let s1 = ds.stats.unwrap().to_flat();
+        let s2 = rt.stats.unwrap().to_flat();
+        assert_eq!(s1, s2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("gcn_perf_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a dataset at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/nope.bin")).is_err());
+    }
+}

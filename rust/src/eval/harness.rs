@@ -1,0 +1,198 @@
+//! End-to-end experiment orchestration for the paper's figures — shared by
+//! the `gcn-perf` CLI and the `examples/` binaries.
+
+use crate::baselines::gbt::{Gbt, GbtConfig};
+use crate::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
+use crate::baselines::PerfModel;
+use crate::dataset::builder::sample_from_schedule;
+use crate::dataset::sample::Dataset;
+use crate::eval::metrics::{regression_metrics, RegressionMetrics};
+use crate::eval::ranking::{pairwise_ranking_accuracy, RankResult};
+use crate::features::normalize::FeatureStats;
+use crate::lower::lower_pipeline;
+use crate::runtime::{GcnRuntime, Params};
+use crate::schedule::primitives::PipelineSchedule;
+use crate::schedule::random::random_pipeline_schedule;
+use crate::sim::Machine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Fig 8: evaluate the trained GCN + freshly fitted baselines on the test
+/// split. Returns (rows, improvement factors vs GCN).
+pub fn run_fig8(
+    rt: &GcnRuntime,
+    params: &Params,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    ffn_epochs: usize,
+    verbose: bool,
+) -> Result<Vec<RegressionMetrics>> {
+    let stats = train_ds.stats.as_ref().context("train stats")?;
+    let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
+
+    // ours (GCN via PJRT)
+    let refs: Vec<&crate::dataset::sample::GraphSample> = test_ds.samples.iter().collect();
+    let gcn_pred = rt.predict_runtimes(params, &refs, stats)?;
+    let mut rows = vec![regression_metrics("gcn (ours)", &truth, &gcn_pred)];
+
+    // Halide FFN baseline — trained on the same train split (§IV-A: "we
+    // train and evaluate it on our train and test set")
+    if verbose {
+        eprintln!("fitting halide-ffn baseline ({ffn_epochs} epochs)...");
+    }
+    let mut ffn = HalideFfn::new(stats.clone(), 99);
+    ffn.fit(train_ds, &FfnTrainConfig { epochs: ffn_epochs, ..Default::default() });
+    let ffn_pred = ffn.predict(test_ds);
+    rows.push(regression_metrics("halide-ffn", &truth, &ffn_pred));
+
+    // TVM GBT baseline — "Since it does not require any pre-training, we
+    // used the test split of our dataset on this XGBoost based model": the
+    // TVM model trains online on measurements of the workload it tunes. We
+    // emulate that protocol with a within-test-split fit on half the
+    // schedules of each pipeline, predicting the other half.
+    if verbose {
+        eprintln!("fitting tvm-gbt baseline (online protocol)...");
+    }
+    let (gbt_truth, gbt_pred) = gbt_online_eval(test_ds);
+    rows.push(regression_metrics("tvm-gbt", &gbt_truth, &gbt_pred));
+
+    Ok(rows)
+}
+
+/// Extension row beyond the paper's Fig 8: the recurrent (bi-GRU) baseline
+/// standing in for the Halide value-learning LSTM model [6] — sequence
+/// order without DAG structure.
+pub fn run_fig8_rnn(
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    epochs: usize,
+    verbose: bool,
+) -> Result<RegressionMetrics> {
+    use crate::baselines::rnn::{BiGru, RnnTrainConfig};
+    if verbose {
+        eprintln!("fitting bi-gru baseline ({epochs} epochs)...");
+    }
+    let stats = train_ds.stats.as_ref().context("train stats")?;
+    let mut gru = BiGru::new(stats.clone(), 64, 41);
+    gru.fit(train_ds, &RnnTrainConfig { epochs, ..Default::default() });
+    let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
+    let pred = gru.predict(test_ds);
+    Ok(regression_metrics("bi-gru (ext)", &truth, &pred))
+}
+
+/// TVM online protocol: per the paper, the GBT model sees measurements from
+/// the same pipelines it predicts (its exploration phase). Fit on the even
+/// schedule ids of the test split, evaluate on the odd ones.
+pub fn gbt_online_eval(test_ds: &Dataset) -> (Vec<f64>, Vec<f64>) {
+    let mut fit = Dataset::default();
+    let mut eval = Dataset::default();
+    for s in &test_ds.samples {
+        if s.schedule_id % 2 == 0 {
+            fit.samples.push(s.clone());
+        } else {
+            eval.samples.push(s.clone());
+        }
+    }
+    let gbt = Gbt::fit(&fit, GbtConfig::default());
+    let truth: Vec<f64> = eval.samples.iter().map(|s| s.mean_runtime()).collect();
+    let pred = gbt.predict(&eval);
+    (truth, pred)
+}
+
+/// Fig 9: pairwise ranking on the nine zoo networks. `n_schedules` per
+/// network ("several hundred schedules" in the paper; configurable here).
+pub fn run_fig9(
+    rt: &GcnRuntime,
+    params: &Params,
+    stats: &FeatureStats,
+    machine: &Machine,
+    n_schedules: usize,
+    seed: u64,
+) -> Result<Vec<RankResult>> {
+    let mut results = Vec::new();
+    for net in crate::zoo::all_networks() {
+        let nests = lower_pipeline(&net);
+        let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+        let mut rng = Rng::new(seed ^ net.name.len() as u64);
+
+        let mut samples = Vec::with_capacity(n_schedules);
+        for sid in 0..n_schedules {
+            let sched = if sid == 0 {
+                PipelineSchedule::default_for(&ranks)
+            } else {
+                random_pipeline_schedule(&net, &nests, &mut rng)
+            };
+            samples.push(sample_from_schedule(
+                &net, &nests, &sched, machine, 0, sid as u32, &mut rng,
+            ));
+        }
+        let truth: Vec<f64> = samples.iter().map(|s| s.mean_runtime()).collect();
+        let refs: Vec<&crate::dataset::sample::GraphSample> = samples.iter().collect();
+        let pred = rt.predict_runtimes(params, &refs, stats)?;
+        results.push(pairwise_ranking_accuracy(&net.name, &truth, &pred, 0.02));
+    }
+    Ok(results)
+}
+
+/// Serialize fig8 rows + fig9 results to a JSON report file.
+pub fn write_report(
+    path: &std::path::Path,
+    fig8: &[RegressionMetrics],
+    fig9: &[RankResult],
+    fig9_avg: f64,
+) -> Result<()> {
+    let fig8_json: Vec<Json> = fig8
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("model", Json::Str(m.model.clone())),
+                ("avg_error_pct", Json::Num(m.avg_error_pct)),
+                ("max_error_pct", Json::Num(m.max_error_pct)),
+                ("r2", Json::Num(m.r2)),
+                ("n", Json::Num(m.n as f64)),
+            ])
+        })
+        .collect();
+    let fig9_json: Vec<Json> = fig9
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("network", Json::Str(r.network.clone())),
+                ("n_schedules", Json::Num(r.n_schedules as f64)),
+                ("n_pairs", Json::Num(r.n_pairs as f64)),
+                ("accuracy_pct", Json::Num(r.accuracy_pct())),
+            ])
+        })
+        .collect();
+    let report = Json::obj(vec![
+        ("fig8", Json::Arr(fig8_json)),
+        ("fig9", Json::Arr(fig9_json)),
+        ("fig9_avg_pct", Json::Num(fig9_avg)),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, report.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    #[test]
+    fn gbt_online_eval_splits_by_schedule_parity() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 6,
+            schedules_per_pipeline: 8,
+            seed: 77,
+            ..Default::default()
+        });
+        let (truth, pred) = gbt_online_eval(&ds);
+        assert_eq!(truth.len(), 6 * 4); // odd schedule ids
+        assert_eq!(truth.len(), pred.len());
+        assert!(pred.iter().all(|p| p.is_finite() && *p > 0.0));
+    }
+}

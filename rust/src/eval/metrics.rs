@@ -1,0 +1,80 @@
+//! Fig 8 metrics: prediction quality of a performance model on a test set.
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct RegressionMetrics {
+    pub model: String,
+    /// Mean absolute percentage error (Fig 8a, lower is better).
+    pub avg_error_pct: f64,
+    /// Maximum absolute percentage error (Fig 8b).
+    pub max_error_pct: f64,
+    /// Coefficient of determination on log-runtimes (Fig 8c, higher is
+    /// better; log space because runtimes span ~4 decades — R² on raw
+    /// seconds is dominated by the single largest pipeline).
+    pub r2: f64,
+    pub n: usize,
+}
+
+/// Compute the Fig 8 metric triple for one model's predictions.
+pub fn regression_metrics(model: &str, y_true: &[f64], y_pred: &[f64]) -> RegressionMetrics {
+    assert_eq!(y_true.len(), y_pred.len());
+    let log_t: Vec<f64> = y_true.iter().map(|t| t.max(1e-12).ln()).collect();
+    let log_p: Vec<f64> = y_pred.iter().map(|p| p.max(1e-12).ln()).collect();
+    RegressionMetrics {
+        model: model.to_string(),
+        avg_error_pct: stats::mape(y_true, y_pred),
+        max_error_pct: stats::max_ape(y_true, y_pred),
+        r2: stats::r2_score(&log_t, &log_p),
+        n: y_true.len(),
+    }
+}
+
+impl RegressionMetrics {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<12} {:>12.2} {:>14.1} {:>8.4} {:>8}",
+            self.model, self.avg_error_pct, self.max_error_pct, self.r2, self.n
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<12} {:>12} {:>14} {:>8} {:>8}",
+            "model", "avg err %", "max err %", "R2", "n"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let y = [1e-3, 2e-3, 5e-2];
+        let m = regression_metrics("x", &y, &y);
+        assert!(m.avg_error_pct < 1e-9);
+        assert!(m.max_error_pct < 1e-9);
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_predictor_has_zero_r2() {
+        let y = [1e-3, 2e-3, 4e-3, 8e-3];
+        let geo = (1e-3f64 * 2e-3 * 4e-3 * 8e-3).powf(0.25);
+        let p = [geo; 4];
+        let m = regression_metrics("x", &y, &p);
+        assert!(m.r2.abs() < 1e-9, "r2 {}", m.r2);
+        assert!(m.avg_error_pct > 10.0);
+    }
+
+    #[test]
+    fn ten_percent_error() {
+        let y = [1.0, 2.0];
+        let p = [1.1, 2.2];
+        let m = regression_metrics("x", &y, &p);
+        assert!((m.avg_error_pct - 10.0).abs() < 1e-9);
+        assert!((m.max_error_pct - 10.0).abs() < 1e-6);
+    }
+}

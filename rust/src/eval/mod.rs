@@ -1,0 +1,11 @@
+//! Evaluation harnesses for the paper's figures.
+//!
+//! * [`metrics`] — Fig 8: average error %, maximum error %, R².
+//! * [`ranking`] — Fig 9: pairwise schedule ranking accuracy.
+
+pub mod metrics;
+pub mod ranking;
+pub mod harness;
+
+pub use metrics::{regression_metrics, RegressionMetrics};
+pub use ranking::{pairwise_ranking_accuracy, rank_networks, RankResult};

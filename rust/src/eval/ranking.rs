@@ -1,0 +1,120 @@
+//! Fig 9: pairwise schedule ranking on real-world networks.
+//!
+//! "For all possible pair-wise combinations of schedules belonging to a
+//! network, we count the number of pairs in which the model assigned a
+//! lower run time to the faster schedule."
+
+#[derive(Debug, Clone)]
+pub struct RankResult {
+    pub network: String,
+    pub n_schedules: usize,
+    pub n_pairs: usize,
+    pub correct_pairs: usize,
+}
+
+impl RankResult {
+    pub fn accuracy_pct(&self) -> f64 {
+        if self.n_pairs == 0 {
+            return 0.0;
+        }
+        100.0 * self.correct_pairs as f64 / self.n_pairs as f64
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:>10} {:>10} {:>10.1}%",
+            self.network,
+            self.n_schedules,
+            self.n_pairs,
+            self.accuracy_pct()
+        )
+    }
+
+    pub fn header() -> String {
+        format!("{:<14} {:>10} {:>10} {:>11}", "network", "schedules", "pairs", "ranked ok")
+    }
+}
+
+/// Pairwise ranking accuracy of predictions vs ground truth. Pairs whose
+/// true runtimes are within `tie_eps` relative are skipped (measurement
+/// noise makes their order meaningless).
+pub fn pairwise_ranking_accuracy(
+    network: &str,
+    y_true: &[f64],
+    y_pred: &[f64],
+    tie_eps: f64,
+) -> RankResult {
+    assert_eq!(y_true.len(), y_pred.len());
+    let mut n_pairs = 0;
+    let mut correct = 0;
+    for i in 0..y_true.len() {
+        for j in (i + 1)..y_true.len() {
+            let rel = (y_true[i] - y_true[j]).abs() / y_true[i].max(y_true[j]).max(1e-12);
+            if rel < tie_eps {
+                continue;
+            }
+            n_pairs += 1;
+            let true_i_faster = y_true[i] < y_true[j];
+            let pred_i_faster = y_pred[i] < y_pred[j];
+            if true_i_faster == pred_i_faster {
+                correct += 1;
+            }
+        }
+    }
+    RankResult {
+        network: network.to_string(),
+        n_schedules: y_true.len(),
+        n_pairs,
+        correct_pairs: correct,
+    }
+}
+
+/// Rank a batch of networks and append the average row (Fig 9's ~75%).
+pub fn rank_networks(results: Vec<RankResult>) -> (Vec<RankResult>, f64) {
+    let avg = if results.is_empty() {
+        0.0
+    } else {
+        results.iter().map(|r| r.accuracy_pct()).sum::<f64>() / results.len() as f64
+    };
+    (results, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking() {
+        let t = [1.0, 2.0, 3.0, 4.0];
+        let p = [0.1, 0.2, 0.3, 0.4]; // scale-free: order is what counts
+        let r = pairwise_ranking_accuracy("net", &t, &p, 0.0);
+        assert_eq!(r.n_pairs, 6);
+        assert_eq!(r.correct_pairs, 6);
+        assert_eq!(r.accuracy_pct(), 100.0);
+    }
+
+    #[test]
+    fn inverted_ranking() {
+        let t = [1.0, 2.0, 3.0];
+        let p = [3.0, 2.0, 1.0];
+        let r = pairwise_ranking_accuracy("net", &t, &p, 0.0);
+        assert_eq!(r.correct_pairs, 0);
+    }
+
+    #[test]
+    fn ties_skipped() {
+        let t = [1.0, 1.0001, 5.0];
+        let p = [1.0, 0.9, 10.0];
+        let r = pairwise_ranking_accuracy("net", &t, &p, 0.01);
+        assert_eq!(r.n_pairs, 2); // the near-tie pair dropped
+        assert_eq!(r.correct_pairs, 2);
+    }
+
+    #[test]
+    fn average_across_networks() {
+        let a = pairwise_ranking_accuracy("a", &[1.0, 2.0], &[1.0, 2.0], 0.0);
+        let b = pairwise_ranking_accuracy("b", &[1.0, 2.0], &[2.0, 1.0], 0.0);
+        let (_, avg) = rank_networks(vec![a, b]);
+        assert!((avg - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Schedule-dependent features (§II-C.2) + compound features ([6], §II-C
+//! "Compound Features"), concatenated into one DEP_DIM vector.
+
+use crate::constants::DEP_DIM;
+use crate::features::l1p;
+use crate::lower::LoopNest;
+use crate::schedule::primitives::{ComputeLoc, StageSchedule};
+use crate::sim::analysis::{Level, StageAnalysis};
+use crate::sim::Machine;
+
+/// Build the DEP_DIM-wide schedule-dependent (+compound) vector.
+pub fn dependent_features(
+    nest: &LoopNest,
+    sched: &StageSchedule,
+    an: &StageAnalysis,
+    m: &Machine,
+) -> [f32; DEP_DIM] {
+    let mut f = [0f32; DEP_DIM];
+    let mut k = 0;
+    let mut push = |v: f32| {
+        f[k] = v;
+        k += 1;
+    };
+
+    // --- loop structure after split/reorder [12]
+    let extents = sched.loop_extents(&nest.spatial);
+    for i in 0..8 {
+        push(extents.get(i).map(|&e| l1p(e as f64)).unwrap_or(0.0));
+    }
+    push(extents.len() as f32);
+    push(if sched.is_tiled() { 1.0 } else { 0.0 });
+    let natural = sched.order.iter().enumerate().all(|(i, &d)| i == d);
+    push(if natural { 1.0 } else { 0.0 });
+    push(l1p(nest.red_extent()));
+
+    // --- tiling factors [4]
+    for i in 0..4 {
+        push(sched.tile.get(i).map(|&t| l1p(t as f64)).unwrap_or(0.0));
+    }
+
+    // --- vectorization (§II-C.2: vectorized vs scalar op counts) [6]
+    let vec_on = an.vector_width > 1;
+    push(an.vector_width as f32);
+    push(if vec_on { 1.0 } else { 0.0 });
+    let flops_total = an.work.total_flops() * an.points;
+    push(l1p(if vec_on { flops_total } else { 0.0 })); // vector fp ops
+    push(l1p(if vec_on { 0.0 } else { flops_total })); // scalar fp ops
+    let int_total = (an.work.int_ops + an.work.cmp_ops + an.work.bool_ops) * an.points;
+    push(l1p(if vec_on { int_total } else { 0.0 }));
+    push(l1p(if vec_on { 0.0 } else { int_total }));
+
+    // --- parallelism (core utilization ratio) [4]
+    push(l1p(an.parallel_tasks as f64));
+    push((an.parallel_tasks.min(m.cores)) as f32 / m.cores as f32);
+    push(sched.parallel_depth as f32);
+    let waves = (an.parallel_tasks as f64 / m.cores as f64).ceil().max(1.0);
+    push((an.parallel_tasks as f64 / (waves * m.cores as f64)) as f32); // imbalance eff.
+
+    // --- unrolling [2]
+    push(sched.unroll as f32);
+    push(l1p(an.inner_iters));
+
+    // --- compute location & inlining recompute [6]
+    push(matches!(sched.compute, ComputeLoc::Root) as i32 as f32);
+    push(matches!(sched.compute, ComputeLoc::At { .. }) as i32 as f32);
+    push(matches!(sched.compute, ComputeLoc::Inline) as i32 as f32);
+    push(match sched.compute {
+        ComputeLoc::At { level, .. } => level as f32,
+        _ => 0.0,
+    });
+    push(an.recompute as f32);
+    push(l1p((an.recompute - 1.0).max(0.0) * nest.points() * an.work.total_flops()));
+
+    // --- memory footprint vs hierarchy (§II-C.2: unique cache lines,
+    // accessed bytes, reuse distance proxies) [10]
+    push(l1p(an.footprint));
+    push(l1p(an.footprint / 64.0)); // unique cache lines
+    push(l1p(an.tile_ws));
+    push(if an.tile_ws <= m.l1_bytes { 1.0 } else { 0.0 });
+    push(if an.tile_ws <= m.l2_bytes { 1.0 } else { 0.0 });
+    push(if an.tile_ws <= m.llc_bytes { 1.0 } else { 0.0 });
+    let cold: f64 = an.traffic.iter().map(|t| t.cold_bytes).sum();
+    let reuse: f64 = an.traffic.iter().map(|t| t.reuse_bytes).sum();
+    push(l1p(cold));
+    push(l1p(reuse));
+    let min_util = an
+        .traffic
+        .iter()
+        .map(|t| t.line_utilization)
+        .fold(1.0, f64::min);
+    push(min_util as f32);
+    push(l1p(an.out_bytes));
+
+    // --- traffic by serving level (reuse-distance histogram analogue) [8]
+    let mut by_level = [0f64; 4];
+    for t in &an.traffic {
+        let li = |l: Level| match l {
+            Level::L1 => 0,
+            Level::L2 => 1,
+            Level::Llc => 2,
+            Level::Dram => 3,
+        };
+        by_level[li(t.cold_level)] += t.cold_bytes;
+        by_level[li(t.reuse_level)] += t.reuse_bytes;
+    }
+    for b in by_level {
+        push(l1p(b));
+    }
+    push(match an.out_level {
+        Level::L1 => 0.0,
+        Level::L2 => 1.0,
+        Level::Llc => 2.0,
+        Level::Dram => 3.0,
+    });
+    push(l1p(an.points));
+    push(if an.inlined { 1.0 } else { 0.0 });
+    push(l1p(an.work.total_flops()));
+
+    // --- allocation / system overheads (§II-C.2: heap allocations, context
+    // switches, page faults) [6]
+    push(l1p(an.alloc_bytes));
+    push(if an.alloc_bytes > 0.0 { 1.0 } else { 0.0 });
+    push(l1p(an.page_faults));
+    push(l1p(an.parallel_tasks as f64 * m.task_overhead_s * 1e9)); // dispatch ns
+    push(l1p(an.alloc_bytes / 4096.0)); // pages
+    push((an.parallel_tasks > m.cores) as i32 as f32); // oversubscription
+
+    // ===== compound features [remaining slots] — products & ratios that a
+    // small network struggles to synthesize (§II-C "Compound Features").
+    let bytes_total = cold + reuse + an.out_bytes;
+    let ai = flops_total / bytes_total.max(1.0); // arithmetic intensity
+    push(l1p(ai));
+    push(l1p(flops_total / m.cores as f64));
+    push(l1p(bytes_total / m.cores as f64));
+    push(l1p(an.points / an.parallel_tasks.max(1) as f64)); // points per task
+    push(l1p(an.footprint / m.llc_bytes));
+    push(l1p(an.footprint / m.l2_bytes));
+    push(l1p(an.tile_ws / m.l1_bytes));
+    push(l1p(an.tile_ws / m.l2_bytes));
+    push(l1p(cold / min_util.max(1e-3))); // line-inflated cold traffic
+    push(l1p(an.page_faults * m.page_fault_s * 1e9));
+    push(l1p(flops_total / m.vec_flops_per_cycle / m.freq_hz * 1e9)); // ideal vec ns
+    push(l1p(flops_total / m.scalar_flops_per_cycle / m.freq_hz * 1e9)); // ideal scalar ns
+    push(l1p(bytes_total / m.dram_bw * 1e9)); // dram-bound ns
+    push(l1p(an.inner_iters * 2.0 / m.freq_hz * 1e9)); // loop overhead ns
+    push(l1p(an.recompute * an.points * an.work.total_flops() / m.vec_flops_per_cycle));
+    push((an.vector_width as f64 / m.simd_lanes as f64) as f32);
+    push(l1p(reuse / an.footprint.max(1.0))); // reuse ratio
+    push(l1p(an.out_bytes / 4096.0));
+    push(ai.min(100.0) as f32 / 100.0);
+    push(l1p((an.work.transcendental * an.points) * 16.0 / m.freq_hz * 1e9));
+    push(l1p((an.work.fdiv * an.points) * 8.0 / m.freq_hz * 1e9));
+    push(l1p(bytes_total));
+
+    drop(push);
+    debug_assert!(k <= DEP_DIM, "dependent features overflow: {k} > {DEP_DIM}");
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::ir::pipeline::Pipeline;
+    use crate::lower::lower_pipeline;
+    use crate::schedule::primitives::PipelineSchedule;
+    use crate::sim::analyze_pipeline;
+
+    fn setup() -> (Pipeline, Vec<LoopNest>) {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 64, 64]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 32;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let nests = lower_pipeline(&p);
+        (p, nests)
+    }
+
+    #[test]
+    fn vectorization_flips_vector_scalar_slots() {
+        let (p, nests) = setup();
+        let m = Machine::default();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        let an = analyze_pipeline(&p, &nests, &sched, &m);
+        let scalar = dependent_features(&nests[0], &sched.stages[0], &an[0], &m);
+        sched.stages[0].vector_width = 8;
+        let an = analyze_pipeline(&p, &nests, &sched, &m);
+        let vec = dependent_features(&nests[0], &sched.stages[0], &an[0], &m);
+        assert_ne!(scalar, vec);
+        // slot 16 is vector_width
+        assert_eq!(scalar[16], 1.0);
+        assert_eq!(vec[16], 8.0);
+    }
+
+    #[test]
+    fn parallel_ratio_capped_at_one() {
+        let (p, nests) = setup();
+        let m = Machine::default();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        sched.stages[0].order = vec![1, 2, 3, 0];
+        sched.stages[0].parallel_depth = 2;
+        let an = analyze_pipeline(&p, &nests, &sched, &m);
+        let f = dependent_features(&nests[0], &sched.stages[0], &an[0], &m);
+        // core utilization ratio slot (index 23) in (0,1]
+        assert!(f[23] > 0.0 && f[23] <= 1.0, "{}", f[23]);
+    }
+
+    #[test]
+    fn all_finite_for_default_schedule() {
+        let (p, nests) = setup();
+        let m = Machine::default();
+        let sched = PipelineSchedule::default_for(&[4, 4]);
+        let an = analyze_pipeline(&p, &nests, &sched, &m);
+        for i in 0..2 {
+            let f = dependent_features(&nests[i], &sched.stages[i], &an[i], &m);
+            assert!(f.iter().all(|v| v.is_finite()));
+        }
+    }
+}

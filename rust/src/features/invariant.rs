@@ -1,0 +1,167 @@
+//! Schedule-invariant features (§II-C.1): "a histogram of different types of
+//! operations performed … floating-point arithmetic … integer arithmetic used
+//! for tensor indexing … boolean/logical operations … access patterns like
+//! striding behavior, transposed access, and broadcasts."
+
+use crate::constants::INV_DIM;
+use crate::features::l1p;
+use crate::ir::op::OpCategory;
+use crate::ir::pipeline::{Pipeline, Stage};
+use crate::lower::{AccessPattern, LoopNest};
+
+/// Build the INV_DIM-wide schedule-invariant vector for one stage.
+pub fn invariant_features(
+    p: &Pipeline,
+    stage: &Stage,
+    nest: &LoopNest,
+    consumers: &[usize],
+) -> [f32; INV_DIM] {
+    let mut f = [0f32; INV_DIM];
+    let mut k = 0;
+    let mut push = |v: f32| {
+        f[k] = v;
+        k += 1;
+    };
+
+    let points = nest.points();
+    let red = nest.red_extent();
+
+    // --- operation histogram (per point and totals, log-squashed) [14]
+    push(l1p(nest.work.fmul));
+    push(l1p(nest.work.fadd));
+    push(l1p(nest.work.fdiv));
+    push(l1p(nest.work.transcendental));
+    push(l1p(nest.work.int_ops));
+    push(l1p(nest.work.bool_ops));
+    push(l1p(nest.work.cmp_ops));
+    push(l1p(nest.work.fmul * points));
+    push(l1p(nest.work.fadd * points));
+    push(l1p(nest.work.fdiv * points));
+    push(l1p(nest.work.transcendental * points));
+    push(l1p(nest.work.int_ops * points));
+    push(l1p(nest.work.bool_ops * points));
+    push(l1p(nest.work.cmp_ops * points));
+
+    // --- tensor geometry [8]
+    push(l1p(points));
+    push(l1p(red));
+    push(nest.spatial.len() as f32);
+    push(nest.reduction.len() as f32);
+    push(l1p(nest.out_bytes));
+    push(l1p(nest.total_flops()));
+    push(l1p(nest.total_read_bytes()));
+    push(if nest.pointwise { 1.0 } else { 0.0 });
+
+    // --- access-pattern histogram over operands [5]
+    let mut pat = [0f32; 5];
+    for a in &nest.accesses {
+        let idx = match a.pattern {
+            AccessPattern::Contiguous => 0,
+            AccessPattern::Strided(_) => 1,
+            AccessPattern::Transposed => 2,
+            AccessPattern::Broadcast => 3,
+            AccessPattern::Stencil => 4,
+        };
+        pat[idx] += 1.0;
+    }
+    for v in pat {
+        push(v);
+    }
+
+    // --- operand summary [4]
+    push(stage.inputs.len() as f32);
+    let weight_bufs = nest.accesses.iter().filter(|a| a.source.is_none()).count();
+    push(weight_bufs as f32);
+    let in_fp: f64 = nest.accesses.iter().map(|a| a.footprint_bytes).sum();
+    push(l1p(in_fp));
+    push(l1p(
+        nest.accesses.iter().map(|a| a.footprint_bytes).fold(0.0, f64::max),
+    ));
+
+    // --- graph-local structure [3] (degree info also reaches the GCN via
+    // the adjacency matrix; the FFN/GBT baselines only see it here)
+    push(stage.inputs.len() as f32);
+    push(consumers.len() as f32);
+    push(stage.id as f32 / p.num_stages().max(1) as f32);
+
+    // --- op category one-hot [9]
+    let cat = stage.op.kind.category();
+    let cats = [
+        OpCategory::UnaryElementwise,
+        OpCategory::BinaryElementwise,
+        OpCategory::Logical,
+        OpCategory::Conv,
+        OpCategory::Matmul,
+        OpCategory::Norm,
+        OpCategory::Pool,
+        OpCategory::Reduce,
+        OpCategory::DataMovement,
+    ];
+    for c in cats {
+        push(if cat == c { 1.0 } else { 0.0 });
+    }
+
+    // --- op attributes [5]
+    let a = &stage.op.attrs;
+    push((a.kernel.0 * a.kernel.1) as f32);
+    push(a.stride as f32);
+    push(a.pad as f32);
+    push(l1p(a.out_channels as f64));
+    push(if stage.op.kind.is_favored() { 1.0 } else { 0.0 });
+
+    debug_assert!(k <= INV_DIM, "invariant features overflow: {k} > {INV_DIM}");
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::lower::lower_pipeline;
+
+    #[test]
+    fn feature_count_within_budget() {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let c = p.add_stage("conv", Op::new(OpKind::Conv2d), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let nests = lower_pipeline(&p);
+        let cons = p.consumers();
+        let f = invariant_features(&p, &p.stages[0], &nests[0], &cons[0]);
+        assert_eq!(f.len(), INV_DIM);
+        assert!(f.iter().all(|v| v.is_finite()));
+        // at least 30 of the 48 slots are populated for a conv
+        assert!(f.iter().filter(|v| **v != 0.0).count() >= 20);
+    }
+
+    #[test]
+    fn conv_vs_relu_distinguishable() {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let c = p.add_stage("conv", Op::new(OpKind::Conv2d), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let nests = lower_pipeline(&p);
+        let cons = p.consumers();
+        let fc = invariant_features(&p, &p.stages[0], &nests[0], &cons[0]);
+        let fr = invariant_features(&p, &p.stages[1], &nests[1], &cons[1]);
+        assert_ne!(fc, fr);
+    }
+
+    #[test]
+    fn gemm_histogram_scales_with_k() {
+        let build = |k: usize| {
+            let mut p = Pipeline::new("g");
+            let x = p.add_input(vec![32, k]);
+            let mut attrs = OpAttrs::default();
+            attrs.out_channels = 16;
+            p.add_stage("fc", Op::with_attrs(OpKind::Gemm, attrs), vec![x]).unwrap();
+            let nests = lower_pipeline(&p);
+            let cons = p.consumers();
+            invariant_features(&p, &p.stages[0], &nests[0], &cons[0])
+        };
+        let small = build(64);
+        let big = build(4096);
+        // fmul per point grows with K
+        assert!(big[0] > small[0]);
+    }
+}

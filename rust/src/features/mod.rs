@@ -1,0 +1,144 @@
+//! Featurization (§II-C).
+//!
+//! Two per-stage feature families, mirroring the paper:
+//!
+//! * **schedule-invariant** ([`invariant`]) — operation histograms, access
+//!   patterns, tensor geometry. Identical across all schedules of a pipeline.
+//! * **schedule-dependent** ([`dependent`]) — loop extents after
+//!   split/reorder, memory footprints vs the cache hierarchy, vector/scalar
+//!   op counts, core utilization, inlining recompute, allocation and
+//!   page-fault estimates — plus the **compound** products/ratios of [6]
+//!   (arithmetic intensity, footprint/cache ratios, …) appended to the same
+//!   vector.
+//!
+//! [`normalize`] computes dataset-wide mean/std so both the GCN and the
+//! baselines see standardized inputs (§III-B: "we normalize the
+//! schedule-invariant and dependent features over the entire training set").
+
+pub mod invariant;
+pub mod dependent;
+pub mod normalize;
+
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::schedule::primitives::PipelineSchedule;
+use crate::sim::{analyze_pipeline, Machine};
+
+/// Per-stage feature pair.
+#[derive(Debug, Clone)]
+pub struct StageFeatures {
+    pub invariant: [f32; INV_DIM],
+    pub dependent: [f32; DEP_DIM],
+}
+
+/// Featurize every stage of a scheduled pipeline.
+pub fn featurize(
+    p: &Pipeline,
+    nests: &[LoopNest],
+    sched: &PipelineSchedule,
+    machine: &Machine,
+) -> Vec<StageFeatures> {
+    let analyses = analyze_pipeline(p, nests, sched, machine);
+    let consumers = p.consumers();
+    (0..p.num_stages())
+        .map(|i| StageFeatures {
+            invariant: invariant::invariant_features(p, &p.stages[i], &nests[i], &consumers[i]),
+            dependent: dependent::dependent_features(
+                &nests[i],
+                &sched.stages[i],
+                &analyses[i],
+                machine,
+            ),
+        })
+        .collect()
+}
+
+/// Schedule-invariant features only (extracted once per pipeline, at
+/// ONNX→Halide conversion time in the paper's Fig 4 flow).
+pub fn featurize_invariant(p: &Pipeline, nests: &[LoopNest]) -> Vec<[f32; INV_DIM]> {
+    let consumers = p.consumers();
+    (0..p.num_stages())
+        .map(|i| invariant::invariant_features(p, &p.stages[i], &nests[i], &consumers[i]))
+        .collect()
+}
+
+/// `log(1+x)` squashing used throughout (features span many decades).
+#[inline]
+pub(crate) fn l1p(x: f64) -> f32 {
+    (x.max(0.0)).ln_1p() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx_gen::{generate_model, GenConfig};
+    use crate::lower::lower_pipeline;
+    use crate::schedule::random::random_pipeline_schedule;
+    use crate::schedule::primitives::PipelineSchedule;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn invariant_features_are_schedule_invariant() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(21);
+        let p = generate_model(&cfg, &mut rng, 0);
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let s1 = random_pipeline_schedule(&p, &nests, &mut rng);
+        let s2 = random_pipeline_schedule(&p, &nests, &mut rng);
+        let f1 = featurize(&p, &nests, &s1, &m);
+        let f2 = featurize(&p, &nests, &s2, &m);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert_eq!(a.invariant, b.invariant);
+        }
+    }
+
+    #[test]
+    fn dependent_features_react_to_schedule() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(22);
+        let p = generate_model(&cfg, &mut rng, 0);
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let ranks: Vec<usize> = p.stages.iter().map(|s| s.shape.len()).collect();
+        let default = PipelineSchedule::default_for(&ranks);
+        let fd = featurize(&p, &nests, &default, &m);
+        // find a random schedule that differs
+        let mut found_diff = false;
+        for _ in 0..8 {
+            let s = random_pipeline_schedule(&p, &nests, &mut rng);
+            let fs = featurize(&p, &nests, &s, &m);
+            if fd.iter().zip(&fs).any(|(a, b)| a.dependent != b.dependent) {
+                found_diff = true;
+                break;
+            }
+        }
+        assert!(found_diff, "dependent features never changed across schedules");
+    }
+
+    #[test]
+    fn prop_features_finite() {
+        propcheck::check_rng("features finite", 0xFEA7, 16, |rng| {
+            let cfg = GenConfig::default();
+            let p = generate_model(&cfg, rng, 0);
+            let nests = lower_pipeline(&p);
+            let m = Machine::default();
+            let s = random_pipeline_schedule(&p, &nests, rng);
+            for f in featurize(&p, &nests, &s, &m) {
+                for (i, v) in f.invariant.iter().enumerate() {
+                    if !v.is_finite() {
+                        return Err(format!("invariant[{i}] = {v}"));
+                    }
+                }
+                for (i, v) in f.dependent.iter().enumerate() {
+                    if !v.is_finite() {
+                        return Err(format!("dependent[{i}] = {v}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Dataset-wide feature standardization (§III-B: features are normalized
+//! over the entire training set before embedding).
+
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::features::StageFeatures;
+
+/// Per-dimension mean/std for both feature families.
+#[derive(Debug, Clone)]
+pub struct FeatureStats {
+    pub inv_mean: Vec<f64>,
+    pub inv_std: Vec<f64>,
+    pub dep_mean: Vec<f64>,
+    pub dep_std: Vec<f64>,
+}
+
+impl FeatureStats {
+    /// Accumulate stats from an iterator of stage features (Welford).
+    pub fn fit<'a, I: IntoIterator<Item = &'a StageFeatures>>(features: I) -> FeatureStats {
+        let mut n = 0f64;
+        let mut inv_mean = vec![0f64; INV_DIM];
+        let mut inv_m2 = vec![0f64; INV_DIM];
+        let mut dep_mean = vec![0f64; DEP_DIM];
+        let mut dep_m2 = vec![0f64; DEP_DIM];
+        for f in features {
+            n += 1.0;
+            for (i, &x) in f.invariant.iter().enumerate() {
+                let d = x as f64 - inv_mean[i];
+                inv_mean[i] += d / n;
+                inv_m2[i] += d * (x as f64 - inv_mean[i]);
+            }
+            for (i, &x) in f.dependent.iter().enumerate() {
+                let d = x as f64 - dep_mean[i];
+                dep_mean[i] += d / n;
+                dep_m2[i] += d * (x as f64 - dep_mean[i]);
+            }
+        }
+        assert!(n > 0.0, "FeatureStats::fit on empty input");
+        let finish = |m2: Vec<f64>| -> Vec<f64> {
+            m2.into_iter()
+                .map(|v| {
+                    let s = (v / n).sqrt();
+                    if s < 1e-8 {
+                        1.0 // constant feature: leave centered at 0
+                    } else {
+                        s
+                    }
+                })
+                .collect()
+        };
+        FeatureStats {
+            inv_mean,
+            inv_std: finish(inv_m2),
+            dep_mean,
+            dep_std: finish(dep_m2),
+        }
+    }
+
+    /// Standardize one stage's features in place.
+    pub fn apply(&self, f: &mut StageFeatures) {
+        for i in 0..INV_DIM {
+            f.invariant[i] = ((f.invariant[i] as f64 - self.inv_mean[i]) / self.inv_std[i]) as f32;
+        }
+        for i in 0..DEP_DIM {
+            f.dependent[i] = ((f.dependent[i] as f64 - self.dep_mean[i]) / self.dep_std[i]) as f32;
+        }
+    }
+
+    /// Flat serialization (for the dataset store).
+    pub fn to_flat(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(2 * (INV_DIM + DEP_DIM));
+        v.extend(&self.inv_mean);
+        v.extend(&self.inv_std);
+        v.extend(&self.dep_mean);
+        v.extend(&self.dep_std);
+        v
+    }
+
+    pub fn from_flat(v: &[f64]) -> FeatureStats {
+        assert_eq!(v.len(), 2 * (INV_DIM + DEP_DIM));
+        FeatureStats {
+            inv_mean: v[0..INV_DIM].to_vec(),
+            inv_std: v[INV_DIM..2 * INV_DIM].to_vec(),
+            dep_mean: v[2 * INV_DIM..2 * INV_DIM + DEP_DIM].to_vec(),
+            dep_std: v[2 * INV_DIM + DEP_DIM..].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(seed: f32) -> StageFeatures {
+        let mut inv = [0f32; INV_DIM];
+        let mut dep = [0f32; DEP_DIM];
+        for i in 0..INV_DIM {
+            inv[i] = seed * (i as f32 + 1.0);
+        }
+        for i in 0..DEP_DIM {
+            dep[i] = -seed * (i as f32 + 1.0);
+        }
+        StageFeatures { invariant: inv, dependent: dep }
+    }
+
+    #[test]
+    fn standardizes_to_zero_mean_unit_var() {
+        let data: Vec<StageFeatures> = (0..100).map(|i| mk(i as f32 / 10.0)).collect();
+        let stats = FeatureStats::fit(data.iter());
+        let mut sum = vec![0f64; INV_DIM];
+        let mut sq = vec![0f64; INV_DIM];
+        for f in &data {
+            let mut g = f.clone();
+            stats.apply(&mut g);
+            for i in 0..INV_DIM {
+                sum[i] += g.invariant[i] as f64;
+                sq[i] += (g.invariant[i] as f64).powi(2);
+            }
+        }
+        for i in 0..INV_DIM {
+            let mean = sum[i] / 100.0;
+            let var = sq[i] / 100.0 - mean * mean;
+            assert!(mean.abs() < 1e-4, "dim {i} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "dim {i} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_features_stay_finite() {
+        let data: Vec<StageFeatures> = (0..10).map(|_| mk(0.0)).collect();
+        let stats = FeatureStats::fit(data.iter());
+        let mut g = data[0].clone();
+        stats.apply(&mut g);
+        assert!(g.invariant.iter().all(|v| v.is_finite()));
+        assert!(g.dependent.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let data: Vec<StageFeatures> = (0..10).map(|i| mk(i as f32)).collect();
+        let stats = FeatureStats::fit(data.iter());
+        let rt = FeatureStats::from_flat(&stats.to_flat());
+        assert_eq!(stats.inv_mean, rt.inv_mean);
+        assert_eq!(stats.dep_std, rt.dep_std);
+    }
+}

@@ -1,0 +1,16 @@
+//! Pipeline intermediate representation.
+//!
+//! A [`Pipeline`](pipeline::Pipeline) is a DAG of [`Stage`](pipeline::Stage)s
+//! — the analogue of Halide `Func`s. Each stage applies one tensor
+//! [`Op`](op::Op) to the outputs of earlier stages (or pipeline inputs) and
+//! has a statically inferred output shape. The random generator
+//! ([`crate::onnx_gen`]) builds ONNX-style graphs directly in this IR; the
+//! lowering pass ([`crate::lower`]) turns each stage into a loop nest.
+
+pub mod tensor;
+pub mod op;
+pub mod pipeline;
+
+pub use op::{Op, OpAttrs, OpCategory, OpKind};
+pub use pipeline::{Pipeline, SourceRef, Stage};
+pub use tensor::Shape;

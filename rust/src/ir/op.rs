@@ -1,0 +1,503 @@
+//! Tensor operators.
+//!
+//! The set mirrors the ~50 ONNX operators the paper's random model generator
+//! draws from (§III-A: "Gemm, Conv, Maxpool, Average Pool, Relu, Sigmoid,
+//! Softmax, etc. We have identified about 50 such operators").
+
+use crate::ir::tensor::{broadcast, Shape};
+
+/// Operator kinds. Grouped by [`OpCategory`]; see [`OpKind::category`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[rustfmt::skip]
+pub enum OpKind {
+    // -- unary elementwise (transcendental-heavy ones flagged in work cost)
+    Relu, LeakyRelu, Elu, Sigmoid, Tanh, Softplus, Gelu, HardSwish, Erf,
+    Exp, Log, Sqrt, Reciprocal, Abs, Neg, Floor, Ceil, Round, Sign, Clip,
+    // -- binary elementwise
+    Add, Sub, Mul, Div, Pow, Min, Max, PRelu,
+    // -- logical / comparison (boolean outputs kept as f32 0/1)
+    And, Or, Xor, Not, Greater, Less, Equal, Where,
+    // -- weight-bearing layers (weights are implicit parameter buffers)
+    Conv2d, DepthwiseConv2d, Gemm, MatMul, BatchNorm, LayerNorm, InstanceNorm,
+    // -- pooling / reductions
+    MaxPool, AveragePool, GlobalAveragePool, ReduceMean, ReduceSum, ReduceMax,
+    Softmax, LogSoftmax,
+    // -- data movement / shape
+    Pad, Concat, Slice, Transpose, Reshape, Flatten, Upsample, Identity,
+}
+
+/// Coarse operator family — drives lowering, featurization histograms and the
+/// generator's unary/binary sampling (Algorithm 1 `node.type`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCategory {
+    UnaryElementwise,
+    BinaryElementwise,
+    Logical,
+    Conv,
+    Matmul,
+    Norm,
+    Pool,
+    Reduce,
+    DataMovement,
+}
+
+impl OpKind {
+    pub const ALL: &'static [OpKind] = &[
+        OpKind::Relu, OpKind::LeakyRelu, OpKind::Elu, OpKind::Sigmoid, OpKind::Tanh,
+        OpKind::Softplus, OpKind::Gelu, OpKind::HardSwish, OpKind::Erf, OpKind::Exp,
+        OpKind::Log, OpKind::Sqrt, OpKind::Reciprocal, OpKind::Abs, OpKind::Neg,
+        OpKind::Floor, OpKind::Ceil, OpKind::Round, OpKind::Sign, OpKind::Clip,
+        OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Div, OpKind::Pow,
+        OpKind::Min, OpKind::Max, OpKind::PRelu,
+        OpKind::And, OpKind::Or, OpKind::Xor, OpKind::Not, OpKind::Greater,
+        OpKind::Less, OpKind::Equal, OpKind::Where,
+        OpKind::Conv2d, OpKind::DepthwiseConv2d, OpKind::Gemm, OpKind::MatMul,
+        OpKind::BatchNorm, OpKind::LayerNorm, OpKind::InstanceNorm,
+        OpKind::MaxPool, OpKind::AveragePool, OpKind::GlobalAveragePool,
+        OpKind::ReduceMean, OpKind::ReduceSum, OpKind::ReduceMax,
+        OpKind::Softmax, OpKind::LogSoftmax,
+        OpKind::Pad, OpKind::Concat, OpKind::Slice, OpKind::Transpose,
+        OpKind::Reshape, OpKind::Flatten, OpKind::Upsample, OpKind::Identity,
+    ];
+
+    pub fn category(self) -> OpCategory {
+        use OpCategory::*;
+        use OpKind::*;
+        match self {
+            Relu | LeakyRelu | Elu | Sigmoid | Tanh | Softplus | Gelu | HardSwish | Erf
+            | Exp | Log | Sqrt | Reciprocal | Abs | Neg | Floor | Ceil | Round | Sign
+            | Clip => UnaryElementwise,
+            Add | Sub | Mul | Div | Pow | Min | Max | PRelu => BinaryElementwise,
+            And | Or | Xor | Not | Greater | Less | Equal | Where => Logical,
+            Conv2d | DepthwiseConv2d => Conv,
+            Gemm | MatMul => Matmul,
+            BatchNorm | LayerNorm | InstanceNorm => Norm,
+            MaxPool | AveragePool | GlobalAveragePool => Pool,
+            ReduceMean | ReduceSum | ReduceMax | Softmax | LogSoftmax => Reduce,
+            Pad | Concat | Slice | Transpose | Reshape | Flatten | Upsample | Identity => {
+                DataMovement
+            }
+        }
+    }
+
+    /// Number of *tensor* operands flowing through the graph (weights are
+    /// implicit parameters, not graph edges — they become extra buffers in
+    /// lowering and featurization).
+    pub fn graph_arity(self) -> usize {
+        use OpKind::*;
+        match self {
+            Add | Sub | Mul | Div | Pow | Min | Max | PRelu | And | Or | Xor | Greater
+            | Less | Equal | Concat | MatMul => 2,
+            Where => 3,
+            _ => 1,
+        }
+    }
+
+    /// Ops the paper's filter favors (§III-A `favored_ops = {conv, relu, ...}`).
+    pub fn is_favored(self) -> bool {
+        use OpKind::*;
+        matches!(
+            self,
+            Conv2d | DepthwiseConv2d | Gemm | Relu | MaxPool | AveragePool | BatchNorm | Softmax
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        use OpKind::*;
+        match self {
+            Relu => "Relu", LeakyRelu => "LeakyRelu", Elu => "Elu", Sigmoid => "Sigmoid",
+            Tanh => "Tanh", Softplus => "Softplus", Gelu => "Gelu", HardSwish => "HardSwish",
+            Erf => "Erf", Exp => "Exp", Log => "Log", Sqrt => "Sqrt",
+            Reciprocal => "Reciprocal", Abs => "Abs", Neg => "Neg", Floor => "Floor",
+            Ceil => "Ceil", Round => "Round", Sign => "Sign", Clip => "Clip",
+            Add => "Add", Sub => "Sub", Mul => "Mul", Div => "Div", Pow => "Pow",
+            Min => "Min", Max => "Max", PRelu => "PRelu", And => "And", Or => "Or",
+            Xor => "Xor", Not => "Not", Greater => "Greater", Less => "Less",
+            Equal => "Equal", Where => "Where", Conv2d => "Conv", DepthwiseConv2d => "DepthwiseConv",
+            Gemm => "Gemm", MatMul => "MatMul", BatchNorm => "BatchNormalization",
+            LayerNorm => "LayerNormalization", InstanceNorm => "InstanceNormalization",
+            MaxPool => "MaxPool", AveragePool => "AveragePool",
+            GlobalAveragePool => "GlobalAveragePool", ReduceMean => "ReduceMean",
+            ReduceSum => "ReduceSum", ReduceMax => "ReduceMax", Softmax => "Softmax",
+            LogSoftmax => "LogSoftmax", Pad => "Pad", Concat => "Concat", Slice => "Slice",
+            Transpose => "Transpose", Reshape => "Reshape", Flatten => "Flatten",
+            Upsample => "Upsample", Identity => "Identity",
+        }
+    }
+}
+
+/// Operator attributes; unused fields keep their defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpAttrs {
+    /// Conv/pool kernel (kh, kw).
+    pub kernel: (usize, usize),
+    /// Conv/pool stride.
+    pub stride: usize,
+    /// Symmetric spatial padding.
+    pub pad: usize,
+    /// Conv output channels / Gemm output features.
+    pub out_channels: usize,
+    /// Conv groups (1 = dense, C = depthwise).
+    pub groups: usize,
+    /// Axis for Softmax / Reduce* / Concat / Flatten.
+    pub axis: usize,
+    /// Whether Reduce* keeps the reduced dim as 1.
+    pub keepdims: bool,
+    /// Upsample integer scale factor.
+    pub scale: usize,
+    /// Transpose permutation (empty = reverse dims).
+    pub perm: Vec<usize>,
+    /// Reshape target (must preserve numel).
+    pub target_shape: Shape,
+    /// Slice keeps `slice_frac` of the `axis` dim (numerator/denominator).
+    pub slice_frac: (usize, usize),
+}
+
+impl Default for OpAttrs {
+    fn default() -> Self {
+        OpAttrs {
+            kernel: (3, 3),
+            stride: 1,
+            pad: 1,
+            out_channels: 16,
+            groups: 1,
+            axis: 1,
+            keepdims: true,
+            scale: 2,
+            perm: vec![],
+            target_shape: vec![],
+            slice_frac: (1, 2),
+        }
+    }
+}
+
+/// An operator instance: kind + attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    pub attrs: OpAttrs,
+}
+
+impl Op {
+    pub fn new(kind: OpKind) -> Self {
+        Op { kind, attrs: OpAttrs::default() }
+    }
+    pub fn with_attrs(kind: OpKind, attrs: OpAttrs) -> Self {
+        Op { kind, attrs }
+    }
+
+    /// Infer the output shape from operand shapes. Returns `None` when the
+    /// operands are incompatible with this op (the generator uses this as
+    /// its compatibility test).
+    pub fn infer_shape(&self, inputs: &[&[usize]]) -> Option<Shape> {
+        use OpKind::*;
+        let a = self.attrs.clone();
+        match self.kind.graph_arity() {
+            n if n != inputs.len() => return None,
+            _ => {}
+        }
+        let x = inputs[0];
+        match self.kind {
+            // unary elementwise + Not preserve shape
+            Relu | LeakyRelu | Elu | Sigmoid | Tanh | Softplus | Gelu | HardSwish | Erf
+            | Exp | Log | Sqrt | Reciprocal | Abs | Neg | Floor | Ceil | Round | Sign
+            | Clip | Not | Identity => Some(x.to_vec()),
+            Add | Sub | Mul | Div | Pow | Min | Max | PRelu | And | Or | Xor | Greater
+            | Less | Equal => broadcast(x, inputs[1]),
+            Where => {
+                let ab = broadcast(x, inputs[1])?;
+                broadcast(&ab, inputs[2])
+            }
+            Conv2d | DepthwiseConv2d => {
+                // NCHW input
+                if x.len() != 4 {
+                    return None;
+                }
+                let (n, c, h, w) = (x[0], x[1], x[2], x[3]);
+                let (kh, kw) = a.kernel;
+                if h + 2 * a.pad < kh || w + 2 * a.pad < kw {
+                    return None;
+                }
+                let oh = (h + 2 * a.pad - kh) / a.stride + 1;
+                let ow = (w + 2 * a.pad - kw) / a.stride + 1;
+                let oc = if self.kind == DepthwiseConv2d { c } else { a.out_channels };
+                if oh == 0 || ow == 0 {
+                    return None;
+                }
+                Some(vec![n, oc, oh, ow])
+            }
+            Gemm => {
+                // [.., K] x implicit weight [K, out_channels]
+                if x.is_empty() {
+                    return None;
+                }
+                let mut out = x.to_vec();
+                *out.last_mut().unwrap() = a.out_channels;
+                Some(out)
+            }
+            MatMul => {
+                let y = inputs[1];
+                if x.len() < 2 || y.len() < 2 {
+                    return None;
+                }
+                let (m, k1) = (x[x.len() - 2], x[x.len() - 1]);
+                let (k2, nn) = (y[y.len() - 2], y[y.len() - 1]);
+                if k1 != k2 || x[..x.len() - 2] != y[..y.len() - 2] {
+                    return None;
+                }
+                let mut out = x[..x.len() - 2].to_vec();
+                out.push(m);
+                out.push(nn);
+                Some(out)
+            }
+            BatchNorm | InstanceNorm => {
+                if x.len() < 2 {
+                    return None;
+                }
+                Some(x.to_vec())
+            }
+            LayerNorm => Some(x.to_vec()),
+            MaxPool | AveragePool => {
+                if x.len() != 4 {
+                    return None;
+                }
+                let (n, c, h, w) = (x[0], x[1], x[2], x[3]);
+                let (kh, kw) = a.kernel;
+                if h + 2 * a.pad < kh || w + 2 * a.pad < kw {
+                    return None;
+                }
+                let oh = (h + 2 * a.pad - kh) / a.stride + 1;
+                let ow = (w + 2 * a.pad - kw) / a.stride + 1;
+                if oh == 0 || ow == 0 {
+                    return None;
+                }
+                Some(vec![n, c, oh, ow])
+            }
+            GlobalAveragePool => {
+                if x.len() != 4 {
+                    return None;
+                }
+                Some(vec![x[0], x[1], 1, 1])
+            }
+            ReduceMean | ReduceSum | ReduceMax => {
+                if a.axis >= x.len() {
+                    return None;
+                }
+                let mut out = x.to_vec();
+                if a.keepdims {
+                    out[a.axis] = 1;
+                } else {
+                    out.remove(a.axis);
+                    if out.is_empty() {
+                        out.push(1);
+                    }
+                }
+                Some(out)
+            }
+            Softmax | LogSoftmax => {
+                if a.axis >= x.len() {
+                    return None;
+                }
+                Some(x.to_vec())
+            }
+            Pad => {
+                let mut out = x.to_vec();
+                let rank = out.len();
+                // pad the trailing (spatial) dims
+                for d in out.iter_mut().skip(rank.saturating_sub(2)) {
+                    *d += 2 * a.pad;
+                }
+                Some(out)
+            }
+            Concat => {
+                let y = inputs[1];
+                if x.len() != y.len() || a.axis >= x.len() {
+                    return None;
+                }
+                for d in 0..x.len() {
+                    if d != a.axis && x[d] != y[d] {
+                        return None;
+                    }
+                }
+                let mut out = x.to_vec();
+                out[a.axis] += y[a.axis];
+                Some(out)
+            }
+            Slice => {
+                if a.axis >= x.len() {
+                    return None;
+                }
+                let (num, den) = a.slice_frac;
+                let keep = (x[a.axis] * num / den).max(1);
+                let mut out = x.to_vec();
+                out[a.axis] = keep;
+                Some(out)
+            }
+            Transpose => {
+                let perm: Vec<usize> = if a.perm.is_empty() {
+                    (0..x.len()).rev().collect()
+                } else {
+                    a.perm.clone()
+                };
+                if perm.len() != x.len() {
+                    return None;
+                }
+                let mut seen = vec![false; x.len()];
+                for &p in &perm {
+                    if p >= x.len() || seen[p] {
+                        return None;
+                    }
+                    seen[p] = true;
+                }
+                Some(perm.iter().map(|&p| x[p]).collect())
+            }
+            Reshape => {
+                if a.target_shape.is_empty()
+                    || a.target_shape.iter().product::<usize>() != x.iter().product::<usize>()
+                {
+                    return None;
+                }
+                Some(a.target_shape.clone())
+            }
+            Flatten => {
+                if x.len() < 2 {
+                    return None;
+                }
+                let ax = a.axis.min(x.len() - 1).max(1);
+                let outer: usize = x[..ax].iter().product();
+                let inner: usize = x[ax..].iter().product();
+                Some(vec![outer, inner])
+            }
+            Upsample => {
+                if x.len() != 4 {
+                    return None;
+                }
+                Some(vec![x[0], x[1], x[2] * a.scale, x[3] * a.scale])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn about_fifty_ops() {
+        // paper: "We have identified about 50 such operators"
+        assert!(OpKind::ALL.len() >= 50, "{} ops", OpKind::ALL.len());
+        // ALL has no duplicates
+        let mut v = OpKind::ALL.to_vec();
+        v.sort();
+        v.dedup();
+        assert_eq!(v.len(), OpKind::ALL.len());
+    }
+
+    #[test]
+    fn conv_shape() {
+        let mut attrs = OpAttrs::default();
+        attrs.kernel = (3, 3);
+        attrs.stride = 2;
+        attrs.pad = 1;
+        attrs.out_channels = 32;
+        let op = Op::with_attrs(OpKind::Conv2d, attrs);
+        assert_eq!(op.infer_shape(&[&[1, 16, 28, 28]]), Some(vec![1, 32, 14, 14]));
+        // wrong rank rejected
+        assert_eq!(op.infer_shape(&[&[16, 28, 28]]), None);
+    }
+
+    #[test]
+    fn depthwise_preserves_channels() {
+        let op = Op::new(OpKind::DepthwiseConv2d);
+        assert_eq!(op.infer_shape(&[&[1, 24, 16, 16]]), Some(vec![1, 24, 16, 16]));
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let op = Op::new(OpKind::MatMul);
+        assert_eq!(op.infer_shape(&[&[4, 8][..], &[8, 3][..]]), Some(vec![4, 3]));
+        assert_eq!(op.infer_shape(&[&[2, 4, 8][..], &[2, 8, 3][..]]), Some(vec![2, 4, 3]));
+        assert_eq!(op.infer_shape(&[&[4, 8][..], &[7, 3][..]]), None);
+    }
+
+    #[test]
+    fn gemm_replaces_last_dim() {
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 10;
+        let op = Op::with_attrs(OpKind::Gemm, attrs);
+        assert_eq!(op.infer_shape(&[&[64, 512]]), Some(vec![64, 10]));
+    }
+
+    #[test]
+    fn binary_broadcast() {
+        let op = Op::new(OpKind::Add);
+        assert_eq!(op.infer_shape(&[&[4, 1, 3][..], &[5, 3][..]]), Some(vec![4, 5, 3]));
+        assert_eq!(op.infer_shape(&[&[2][..], &[3][..]]), None);
+    }
+
+    #[test]
+    fn pool_and_global_pool() {
+        let mut attrs = OpAttrs::default();
+        attrs.kernel = (2, 2);
+        attrs.stride = 2;
+        attrs.pad = 0;
+        let op = Op::with_attrs(OpKind::MaxPool, attrs);
+        assert_eq!(op.infer_shape(&[&[1, 8, 32, 32]]), Some(vec![1, 8, 16, 16]));
+        let gap = Op::new(OpKind::GlobalAveragePool);
+        assert_eq!(gap.infer_shape(&[&[1, 8, 32, 32]]), Some(vec![1, 8, 1, 1]));
+    }
+
+    #[test]
+    fn reduce_axis() {
+        let mut attrs = OpAttrs::default();
+        attrs.axis = 1;
+        attrs.keepdims = false;
+        let op = Op::with_attrs(OpKind::ReduceSum, attrs.clone());
+        assert_eq!(op.infer_shape(&[&[2, 5, 7]]), Some(vec![2, 7]));
+        attrs.keepdims = true;
+        let op = Op::with_attrs(OpKind::ReduceSum, attrs);
+        assert_eq!(op.infer_shape(&[&[2, 5, 7]]), Some(vec![2, 1, 7]));
+    }
+
+    #[test]
+    fn transpose_perm_validation() {
+        let mut attrs = OpAttrs::default();
+        attrs.perm = vec![0, 2, 1];
+        let op = Op::with_attrs(OpKind::Transpose, attrs);
+        assert_eq!(op.infer_shape(&[&[2, 3, 4]]), Some(vec![2, 4, 3]));
+        let mut bad = OpAttrs::default();
+        bad.perm = vec![0, 0, 1];
+        let op = Op::with_attrs(OpKind::Transpose, bad);
+        assert_eq!(op.infer_shape(&[&[2, 3, 4]]), None);
+    }
+
+    #[test]
+    fn reshape_must_preserve_numel() {
+        let mut attrs = OpAttrs::default();
+        attrs.target_shape = vec![6, 4];
+        let op = Op::with_attrs(OpKind::Reshape, attrs);
+        assert_eq!(op.infer_shape(&[&[2, 3, 4]]), Some(vec![6, 4]));
+        let mut bad = OpAttrs::default();
+        bad.target_shape = vec![5, 5];
+        let op = Op::with_attrs(OpKind::Reshape, bad);
+        assert_eq!(op.infer_shape(&[&[2, 3, 4]]), None);
+    }
+
+    #[test]
+    fn concat_checks_other_dims() {
+        let mut attrs = OpAttrs::default();
+        attrs.axis = 1;
+        let op = Op::with_attrs(OpKind::Concat, attrs);
+        assert_eq!(op.infer_shape(&[&[2, 3, 4][..], &[2, 5, 4][..]]), Some(vec![2, 8, 4]));
+        assert_eq!(op.infer_shape(&[&[2, 3, 4][..], &[2, 5, 9][..]]), None);
+    }
+
+    #[test]
+    fn categories_cover_all_ops() {
+        for &k in OpKind::ALL {
+            let _ = k.category(); // no panic
+            assert!(!k.name().is_empty());
+            assert!(k.graph_arity() >= 1 && k.graph_arity() <= 3);
+        }
+    }
+}

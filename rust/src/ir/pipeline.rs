@@ -1,0 +1,244 @@
+//! The stage DAG.
+
+use crate::ir::op::Op;
+use crate::ir::tensor::Shape;
+use std::collections::BTreeSet;
+
+/// Where a stage's operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SourceRef {
+    /// Pipeline input tensor (an `ImageParam` in Halide terms).
+    Input(usize),
+    /// Output of an earlier stage.
+    Stage(usize),
+}
+
+/// One computational stage — the analogue of a Halide `Func`.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub id: usize,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<SourceRef>,
+    /// Inferred output shape.
+    pub shape: Shape,
+}
+
+/// A pipeline: input tensors plus a topologically ordered list of stages.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline {
+    pub name: String,
+    /// Shapes of the pipeline input tensors.
+    pub inputs: Vec<Shape>,
+    pub stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    pub fn new(name: &str) -> Self {
+        Pipeline { name: name.to_string(), inputs: vec![], stages: vec![] }
+    }
+
+    /// Register a pipeline input tensor, returning its `SourceRef`.
+    pub fn add_input(&mut self, shape: Shape) -> SourceRef {
+        self.inputs.push(shape);
+        SourceRef::Input(self.inputs.len() - 1)
+    }
+
+    /// Append a stage; operand shapes must be compatible with `op`.
+    pub fn add_stage(&mut self, name: &str, op: Op, inputs: Vec<SourceRef>) -> Option<SourceRef> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|s| self.shape_of(*s)).collect();
+        let out = op.infer_shape(&shapes)?;
+        let id = self.stages.len();
+        self.stages.push(Stage {
+            id,
+            name: name.to_string(),
+            op,
+            inputs,
+            shape: out,
+        });
+        Some(SourceRef::Stage(id))
+    }
+
+    pub fn shape_of(&self, src: SourceRef) -> &[usize] {
+        match src {
+            SourceRef::Input(i) => &self.inputs[i],
+            SourceRef::Stage(i) => &self.stages[i].shape,
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stage ids with no stage consumers (pipeline outputs).
+    pub fn outputs(&self) -> Vec<usize> {
+        let mut consumed = BTreeSet::new();
+        for s in &self.stages {
+            for &inp in &s.inputs {
+                if let SourceRef::Stage(i) = inp {
+                    consumed.insert(i);
+                }
+            }
+        }
+        (0..self.stages.len()).filter(|i| !consumed.contains(i)).collect()
+    }
+
+    /// For each stage, the list of stage ids that consume it.
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut cons = vec![Vec::new(); self.stages.len()];
+        for s in &self.stages {
+            for &inp in &s.inputs {
+                if let SourceRef::Stage(i) = inp {
+                    cons[i].push(s.id);
+                }
+            }
+        }
+        cons
+    }
+
+    /// Directed adjacency matrix over stages: `adj[i][j] = 1` iff stage i
+    /// feeds stage j. (The GCN symmetrizes + row-normalizes this.)
+    pub fn adjacency(&self) -> Vec<Vec<f32>> {
+        let n = self.stages.len();
+        let mut adj = vec![vec![0.0; n]; n];
+        for s in &self.stages {
+            for &inp in &s.inputs {
+                if let SourceRef::Stage(i) = inp {
+                    adj[i][s.id] = 1.0;
+                }
+            }
+        }
+        adj
+    }
+
+    /// Longest path length (in stages) from any source stage to any output —
+    /// the paper's `depth` filter (§III-A, `depth_thresh = 5`).
+    pub fn depth(&self) -> usize {
+        let mut d = vec![1usize; self.stages.len()];
+        for s in &self.stages {
+            for &inp in &s.inputs {
+                if let SourceRef::Stage(i) = inp {
+                    d[s.id] = d[s.id].max(d[i] + 1);
+                }
+            }
+        }
+        d.into_iter().max().unwrap_or(0)
+    }
+
+    /// Structural validation: topological ordering, arity, shape inference
+    /// consistency. Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for s in &self.stages {
+            if s.inputs.len() != s.op.kind.graph_arity() {
+                return Err(format!(
+                    "stage {} ({}): arity {} != expected {}",
+                    s.id,
+                    s.op.kind.name(),
+                    s.inputs.len(),
+                    s.op.kind.graph_arity()
+                ));
+            }
+            for &inp in &s.inputs {
+                match inp {
+                    SourceRef::Input(i) if i >= self.inputs.len() => {
+                        return Err(format!("stage {}: dangling input ref {}", s.id, i));
+                    }
+                    SourceRef::Stage(i) if i >= s.id => {
+                        return Err(format!(
+                            "stage {}: forward/self reference to stage {}",
+                            s.id, i
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+            let shapes: Vec<&[usize]> = s.inputs.iter().map(|&x| self.shape_of(x)).collect();
+            match s.op.infer_shape(&shapes) {
+                Some(sh) if sh == s.shape => {}
+                Some(sh) => {
+                    return Err(format!(
+                        "stage {}: stored shape {:?} != inferred {:?}",
+                        s.id, s.shape, sh
+                    ));
+                }
+                None => return Err(format!("stage {}: shape inference fails", s.id)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Total f32 elements across all stage output buffers.
+    pub fn total_elems(&self) -> usize {
+        self.stages.iter().map(|s| s.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+
+    /// The paper's §II example: linear layer = matmul + bias add.
+    fn linear_pipeline() -> Pipeline {
+        let mut p = Pipeline::new("linear");
+        let x = p.add_input(vec![64, 1024]);
+        let b = p.add_input(vec![64, 16]);
+        let mut gemm = OpAttrs::default();
+        gemm.out_channels = 16;
+        let mm = p
+            .add_stage("matrix_mul", Op::with_attrs(OpKind::Gemm, gemm), vec![x])
+            .unwrap();
+        p.add_stage("add_bias", Op::new(OpKind::Add), vec![mm, b]).unwrap();
+        p
+    }
+
+    #[test]
+    fn linear_layer_builds_and_validates() {
+        let p = linear_pipeline();
+        assert_eq!(p.num_stages(), 2);
+        assert_eq!(p.stages[1].shape, vec![64, 16]);
+        p.validate().unwrap();
+        assert_eq!(p.outputs(), vec![1]);
+        assert_eq!(p.depth(), 2);
+    }
+
+    #[test]
+    fn adjacency_matches_edges() {
+        let p = linear_pipeline();
+        let adj = p.adjacency();
+        assert_eq!(adj[0][1], 1.0);
+        assert_eq!(adj[1][0], 0.0);
+        assert_eq!(adj[0][0], 0.0);
+    }
+
+    #[test]
+    fn incompatible_stage_rejected() {
+        let mut p = Pipeline::new("bad");
+        let x = p.add_input(vec![2, 3]);
+        let y = p.add_input(vec![4, 5]);
+        assert!(p.add_stage("a", Op::new(OpKind::Add), vec![x, y]).is_none());
+        assert_eq!(p.num_stages(), 0);
+    }
+
+    #[test]
+    fn consumers_and_outputs() {
+        let mut p = Pipeline::new("diamond");
+        let x = p.add_input(vec![1, 8, 16, 16]);
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![x]).unwrap();
+        let a = p.add_stage("exp", Op::new(OpKind::Exp), vec![r]).unwrap();
+        let b = p.add_stage("abs", Op::new(OpKind::Abs), vec![r]).unwrap();
+        p.add_stage("add", Op::new(OpKind::Add), vec![a, b]).unwrap();
+        let cons = p.consumers();
+        assert_eq!(cons[0], vec![1, 2]);
+        assert_eq!(p.outputs(), vec![3]);
+        assert_eq!(p.depth(), 3);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut p = linear_pipeline();
+        p.stages[1].shape = vec![9, 9];
+        assert!(p.validate().is_err());
+    }
+}

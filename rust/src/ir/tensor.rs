@@ -1,0 +1,59 @@
+//! Tensor shapes. All tensors are f32 (the paper targets f32 CPU pipelines);
+//! rank is 1–4 with the ONNX NCHW convention for rank-4.
+
+pub type Shape = Vec<usize>;
+
+/// Number of elements.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Size in bytes (f32).
+pub fn bytes(shape: &[usize]) -> usize {
+    numel(shape) * 4
+}
+
+/// Numpy-style broadcast of two shapes (right-aligned).
+pub fn broadcast(a: &[usize], b: &[usize]) -> Option<Shape> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return None;
+        };
+    }
+    Some(out)
+}
+
+/// True when shapes are broadcast-compatible.
+pub fn broadcastable(a: &[usize], b: &[usize]) -> bool {
+    broadcast(a, b).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(bytes(&[2, 3, 4]), 96);
+        assert_eq!(numel(&[]), 1); // scalar
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(broadcast(&[4, 1, 3], &[5, 3]), Some(vec![4, 5, 3]));
+        assert_eq!(broadcast(&[2, 3], &[2, 3]), Some(vec![2, 3]));
+        assert_eq!(broadcast(&[3], &[2, 3]), Some(vec![2, 3]));
+        assert_eq!(broadcast(&[2, 3], &[3, 2]), None);
+    }
+}

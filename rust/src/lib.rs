@@ -1,0 +1,40 @@
+//! # gcn-perf
+//!
+//! Reproduction of *"Using Graph Neural Networks to model the performance of
+//! Deep Neural Networks"* (Singh, Hegarty, Leather, Steiner, 2021).
+//!
+//! The crate contains the full stack described in DESIGN.md:
+//!
+//! * a Halide-like compiler substrate: pipeline IR ([`ir`]), random ONNX-style
+//!   model generator ([`onnx_gen`]), op → loop-nest lowering ([`lower`]) and
+//!   scheduling primitives ([`schedule`]);
+//! * a simulated 18-core Xeon benchmarking machine ([`sim`]) standing in for
+//!   the paper's hardware testbed;
+//! * the §II-C featurization ([`features`]) and dataset pipeline ([`dataset`]);
+//! * the PJRT runtime that loads the AOT-compiled JAX/Pallas GCN
+//!   ([`runtime`]), the training driver ([`train`]) and graph batching
+//!   ([`model`]);
+//! * the two baselines from the paper's evaluation ([`baselines`]): the
+//!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
+//! * the evaluation harnesses for Fig 8 and Fig 9 ([`eval`]), the nine
+//!   real-world networks ([`zoo`]) and the beam-search auto-scheduler
+//!   ([`search`]);
+//! * dependency-free infrastructure ([`util`]): PRNG, thread pool, JSON,
+//!   stats, CLI parsing, bench + property-test harnesses.
+
+pub mod util;
+pub mod ir;
+pub mod onnx_gen;
+pub mod lower;
+pub mod schedule;
+pub mod sim;
+pub mod features;
+pub mod dataset;
+pub mod model;
+pub mod runtime;
+pub mod train;
+pub mod baselines;
+pub mod eval;
+pub mod zoo;
+pub mod search;
+pub mod constants;

@@ -1,0 +1,487 @@
+//! Stage → loop-nest lowering.
+//!
+//! A stage computing an output of shape `[d0, .., dk]` lowers to a perfect
+//! loop nest over those dims (outermost..innermost, innermost = last dim =
+//! contiguous in memory), an optional reduction domain (Halide `RDom`), a
+//! per-output-point [`WorkProfile`] and one [`Access`] per operand buffer
+//! (graph operands *and* implicit weight buffers).
+
+use crate::ir::op::{OpCategory, OpKind};
+use crate::ir::pipeline::{Pipeline, SourceRef, Stage};
+use crate::ir::tensor::numel;
+
+/// Arithmetic performed per output point (after reduction-loop expansion:
+/// counts are totals per output element, i.e. already multiplied by the
+/// reduction extent where applicable).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WorkProfile {
+    /// f32 multiplies (fused into FMAs by the machine model when paired).
+    pub fmul: f64,
+    /// f32 adds/subs.
+    pub fadd: f64,
+    /// f32 divides (long-latency).
+    pub fdiv: f64,
+    /// Transcendentals (exp/log/tanh/erf/...), ~20 cycles each scalar.
+    pub transcendental: f64,
+    /// Integer ops (indexing arithmetic).
+    pub int_ops: f64,
+    /// Boolean/logical ops.
+    pub bool_ops: f64,
+    /// Comparisons / select.
+    pub cmp_ops: f64,
+}
+
+impl WorkProfile {
+    pub fn total_flops(&self) -> f64 {
+        self.fmul + self.fadd + self.fdiv + self.transcendental
+    }
+    pub fn scale(&self, k: f64) -> WorkProfile {
+        WorkProfile {
+            fmul: self.fmul * k,
+            fadd: self.fadd * k,
+            fdiv: self.fdiv * k,
+            transcendental: self.transcendental * k,
+            int_ops: self.int_ops * k,
+            bool_ops: self.bool_ops * k,
+            cmp_ops: self.cmp_ops * k,
+        }
+    }
+    pub fn add(&self, o: &WorkProfile) -> WorkProfile {
+        WorkProfile {
+            fmul: self.fmul + o.fmul,
+            fadd: self.fadd + o.fadd,
+            fdiv: self.fdiv + o.fdiv,
+            transcendental: self.transcendental + o.transcendental,
+            int_ops: self.int_ops + o.int_ops,
+            bool_ops: self.bool_ops + o.bool_ops,
+            cmp_ops: self.cmp_ops + o.cmp_ops,
+        }
+    }
+}
+
+/// How a buffer is traversed relative to the stage's loop nest (§II-C.1:
+/// "access patterns like striding behavior, transposed access, broadcasts").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessPattern {
+    /// Innermost loop walks unit stride.
+    Contiguous,
+    /// Innermost loop walks a fixed non-unit stride (elements).
+    Strided(usize),
+    /// Dimension order inverted vs storage (worst locality).
+    Transposed,
+    /// Operand dim of size 1 broadcast across a loop (high reuse).
+    Broadcast,
+    /// Stencil window (conv/pool): overlapping reads with halo reuse.
+    Stencil,
+}
+
+/// One operand buffer read by the stage.
+#[derive(Debug, Clone)]
+pub struct Access {
+    /// Graph source, or `None` for an implicit weight/parameter buffer.
+    pub source: Option<SourceRef>,
+    /// Total unique bytes in the accessed region.
+    pub footprint_bytes: f64,
+    /// Bytes *read* per output point (counting reduction-loop re-reads).
+    pub bytes_per_point: f64,
+    pub pattern: AccessPattern,
+}
+
+/// The lowered form of one stage.
+#[derive(Debug, Clone)]
+pub struct LoopNest {
+    pub stage_id: usize,
+    /// Spatial loop extents, outermost first (= output shape).
+    pub spatial: Vec<usize>,
+    /// Reduction loop extents (innermost of the nest).
+    pub reduction: Vec<usize>,
+    /// Work per output point (totals incl. reduction).
+    pub work: WorkProfile,
+    pub accesses: Vec<Access>,
+    /// Bytes written to the stage's output buffer.
+    pub out_bytes: f64,
+    /// True when the op is a pure element-wise map (inlinable in Halide
+    /// without introducing a reduction into the consumer).
+    pub pointwise: bool,
+}
+
+impl LoopNest {
+    /// Number of output points.
+    pub fn points(&self) -> f64 {
+        self.spatial.iter().product::<usize>() as f64
+    }
+    /// Reduction trip count (1 when no reduction).
+    pub fn red_extent(&self) -> f64 {
+        self.reduction.iter().product::<usize>().max(1) as f64
+    }
+    /// Total floating-point operations for the whole stage.
+    pub fn total_flops(&self) -> f64 {
+        self.points() * self.work.total_flops()
+    }
+    /// Total bytes read across operands.
+    pub fn total_read_bytes(&self) -> f64 {
+        self.accesses.iter().map(|a| a.bytes_per_point).sum::<f64>() * self.points()
+    }
+}
+
+fn unit_work(kind: OpKind) -> WorkProfile {
+    use OpKind::*;
+    let mut w = WorkProfile::default();
+    match kind {
+        Relu => w.cmp_ops = 1.0,
+        LeakyRelu | PRelu => {
+            w.cmp_ops = 1.0;
+            w.fmul = 1.0;
+        }
+        Elu | Softplus => {
+            w.transcendental = 1.0;
+            w.fadd = 1.0;
+        }
+        Sigmoid | Tanh => {
+            w.transcendental = 1.0;
+            w.fdiv = 1.0;
+        }
+        Gelu | Erf => {
+            w.transcendental = 1.0;
+            w.fmul = 2.0;
+            w.fadd = 1.0;
+        }
+        HardSwish => {
+            w.cmp_ops = 2.0;
+            w.fmul = 2.0;
+        }
+        Exp | Log | Sqrt => w.transcendental = 1.0,
+        Reciprocal => w.fdiv = 1.0,
+        Abs | Neg | Sign => w.cmp_ops = 1.0,
+        Floor | Ceil | Round => w.int_ops = 1.0,
+        Clip => w.cmp_ops = 2.0,
+        Add | Sub => w.fadd = 1.0,
+        Mul => w.fmul = 1.0,
+        Div => w.fdiv = 1.0,
+        Pow => w.transcendental = 2.0,
+        Min | Max => w.cmp_ops = 1.0,
+        And | Or | Xor | Not => w.bool_ops = 1.0,
+        Greater | Less | Equal => w.cmp_ops = 1.0,
+        Where => {
+            w.cmp_ops = 1.0;
+            w.bool_ops = 1.0;
+        }
+        // reduction-style work is attached per reduction element by the
+        // lowering functions below; this is the per-element cost inside.
+        Conv2d | DepthwiseConv2d | Gemm | MatMul => {
+            w.fmul = 1.0;
+            w.fadd = 1.0; // one FMA per reduction element
+        }
+        BatchNorm | InstanceNorm | LayerNorm => {
+            w.fmul = 2.0;
+            w.fadd = 2.0;
+        }
+        MaxPool | ReduceMax => w.cmp_ops = 1.0,
+        AveragePool | GlobalAveragePool | ReduceMean | ReduceSum => w.fadd = 1.0,
+        Softmax | LogSoftmax => {
+            w.transcendental = 1.0;
+            w.fadd = 1.0;
+            w.fdiv = 1.0;
+        }
+        Pad | Concat | Slice | Transpose | Reshape | Flatten | Upsample | Identity => {
+            w.int_ops = 1.0 // pure data movement: index math only
+        }
+    }
+    // every op pays index arithmetic: ~1 int op per loop dim is added later
+    w
+}
+
+/// Detect the access pattern of a graph operand relative to the stage loops.
+fn operand_pattern(kind: OpKind, out_shape: &[usize], in_shape: &[usize]) -> AccessPattern {
+    use OpKind::*;
+    match kind {
+        Conv2d | DepthwiseConv2d | MaxPool | AveragePool => AccessPattern::Stencil,
+        Transpose => AccessPattern::Transposed,
+        Upsample => AccessPattern::Broadcast,
+        _ => {
+            // broadcast if operand rank-extended or has 1-dims vs output
+            if in_shape.len() < out_shape.len()
+                || in_shape
+                    .iter()
+                    .rev()
+                    .zip(out_shape.iter().rev())
+                    .any(|(i, o)| *i == 1 && *o > 1)
+            {
+                AccessPattern::Broadcast
+            } else if kind == Slice {
+                AccessPattern::Strided(2)
+            } else {
+                AccessPattern::Contiguous
+            }
+        }
+    }
+}
+
+/// Lower a single stage of `p`.
+pub fn lower_stage(p: &Pipeline, stage: &Stage) -> LoopNest {
+    use OpKind::*;
+    let kind = stage.op.kind;
+    let a = &stage.op.attrs;
+    let out_shape = &stage.shape;
+    let out_points = numel(out_shape) as f64;
+    let base = unit_work(kind);
+
+    // reduction extents + per-point work + weight accesses by op family
+    let (reduction, work, weight_accesses): (Vec<usize>, WorkProfile, Vec<Access>) = match kind {
+        Conv2d => {
+            let in_shape = p.shape_of(stage.inputs[0]);
+            let cin = in_shape[1];
+            let (kh, kw) = a.kernel;
+            let red = cin / a.groups.max(1) * kh * kw;
+            let wbytes = (a.out_channels * cin / a.groups.max(1) * kh * kw * 4) as f64;
+            (
+                vec![cin / a.groups.max(1), kh, kw],
+                base.scale(red as f64),
+                vec![Access {
+                    source: None,
+                    footprint_bytes: wbytes,
+                    bytes_per_point: (red * 4) as f64,
+                    pattern: AccessPattern::Contiguous,
+                }],
+            )
+        }
+        DepthwiseConv2d => {
+            let (kh, kw) = a.kernel;
+            let red = kh * kw;
+            let cin = p.shape_of(stage.inputs[0])[1];
+            (
+                vec![kh, kw],
+                base.scale(red as f64),
+                vec![Access {
+                    source: None,
+                    footprint_bytes: (cin * kh * kw * 4) as f64,
+                    bytes_per_point: (red * 4) as f64,
+                    pattern: AccessPattern::Contiguous,
+                }],
+            )
+        }
+        Gemm => {
+            let k = *p.shape_of(stage.inputs[0]).last().unwrap();
+            (
+                vec![k],
+                base.scale(k as f64),
+                vec![Access {
+                    source: None,
+                    footprint_bytes: (k * a.out_channels * 4) as f64,
+                    bytes_per_point: (k * 4) as f64,
+                    // weight walked along K for fixed output col: strided
+                    pattern: AccessPattern::Strided(a.out_channels),
+                }],
+            )
+        }
+        MatMul => {
+            let k = *p.shape_of(stage.inputs[0]).last().unwrap();
+            (vec![k], base.scale(k as f64), vec![])
+        }
+        BatchNorm | InstanceNorm | LayerNorm => {
+            let c = if out_shape.len() >= 2 { out_shape[1] } else { out_shape[0] };
+            (
+                vec![],
+                base,
+                vec![Access {
+                    source: None,
+                    footprint_bytes: (4 * c * 4) as f64, // scale/shift/mean/var
+                    bytes_per_point: 16.0,
+                    pattern: AccessPattern::Broadcast,
+                }],
+            )
+        }
+        MaxPool | AveragePool => {
+            let (kh, kw) = a.kernel;
+            (vec![kh, kw], base.scale((kh * kw) as f64), vec![])
+        }
+        GlobalAveragePool => {
+            let in_shape = p.shape_of(stage.inputs[0]);
+            let red = in_shape[2] * in_shape[3];
+            (vec![in_shape[2], in_shape[3]], base.scale(red as f64), vec![])
+        }
+        ReduceMean | ReduceSum | ReduceMax => {
+            let in_shape = p.shape_of(stage.inputs[0]);
+            let red = in_shape[a.axis.min(in_shape.len() - 1)];
+            (vec![red], base.scale(red as f64), vec![])
+        }
+        Softmax | LogSoftmax => {
+            let in_shape = p.shape_of(stage.inputs[0]);
+            let red = in_shape[a.axis.min(in_shape.len() - 1)];
+            // softmax makes 3 passes over the axis: max, exp-sum, normalize
+            (vec![red], base.scale(3.0), vec![])
+        }
+        _ => (vec![], base, vec![]),
+    };
+
+    // graph operand accesses
+    let red_extent: f64 = reduction.iter().product::<usize>().max(1) as f64;
+    let mut accesses = Vec::new();
+    for &src in &stage.inputs {
+        let in_shape = p.shape_of(src);
+        let fp = (numel(in_shape) * 4) as f64;
+        let pattern = operand_pattern(kind, out_shape, in_shape);
+        // bytes read from this operand per output point
+        let bpp = match kind {
+            Conv2d | DepthwiseConv2d | MaxPool | AveragePool | GlobalAveragePool => {
+                4.0 * red_extent
+            }
+            Gemm | MatMul => {
+                if matches!(src, SourceRef::Stage(_) | SourceRef::Input(_))
+                    && std::ptr::eq(in_shape, p.shape_of(stage.inputs[0]))
+                {
+                    4.0 * red_extent // LHS row walked per output point
+                } else {
+                    4.0 * red_extent // RHS column walked per output point
+                }
+            }
+            ReduceMean | ReduceSum | ReduceMax => 4.0 * red_extent,
+            Softmax | LogSoftmax => 12.0, // 3 passes
+            Upsample => 4.0 / (a.scale * a.scale) as f64,
+            _ => {
+                // elementwise/broadcast: one read per point, but broadcasts
+                // re-read a smaller buffer (counted once; reuse handled by
+                // the cache model via the small footprint)
+                4.0
+            }
+        };
+        accesses.push(Access {
+            source: Some(src),
+            footprint_bytes: fp,
+            bytes_per_point: bpp,
+            pattern,
+        });
+    }
+    accesses.extend(weight_accesses);
+
+    // index arithmetic: one int op per loop level per point
+    let mut work = work;
+    work.int_ops += (out_shape.len() + reduction.len()) as f64;
+
+    let pointwise = matches!(
+        kind.category(),
+        OpCategory::UnaryElementwise | OpCategory::BinaryElementwise | OpCategory::Logical
+    ) || matches!(kind, Identity | Pad | Slice | Upsample | Concat);
+
+    LoopNest {
+        stage_id: stage.id,
+        spatial: out_shape.clone(),
+        reduction,
+        work,
+        accesses,
+        out_bytes: out_points * 4.0,
+        pointwise,
+    }
+}
+
+/// Lower every stage of a pipeline.
+pub fn lower_pipeline(p: &Pipeline) -> Vec<LoopNest> {
+    p.stages.iter().map(|s| lower_stage(p, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::ir::pipeline::Pipeline;
+
+    fn conv_pipeline() -> Pipeline {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let mut attrs = OpAttrs::default();
+        attrs.kernel = (3, 3);
+        attrs.pad = 1;
+        attrs.out_channels = 32;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        p
+    }
+
+    #[test]
+    fn conv_flops_match_formula() {
+        let p = conv_pipeline();
+        let nests = lower_pipeline(&p);
+        let conv = &nests[0];
+        // 2 * N*Cout*H*W * Cin*Kh*Kw flops
+        let expect = 2.0 * (32 * 32 * 32) as f64 * (16 * 9) as f64;
+        assert!((conv.total_flops() - expect).abs() / expect < 1e-9);
+        assert_eq!(conv.reduction, vec![16, 3, 3]);
+        assert!(!conv.pointwise);
+    }
+
+    #[test]
+    fn relu_is_pointwise_with_no_flops() {
+        let p = conv_pipeline();
+        let nests = lower_pipeline(&p);
+        let relu = &nests[1];
+        assert!(relu.pointwise);
+        assert_eq!(relu.reduction.len(), 0);
+        assert_eq!(relu.total_flops(), 0.0); // cmp only
+        assert!(relu.work.cmp_ops > 0.0);
+    }
+
+    #[test]
+    fn conv_has_stencil_access_and_weight_buffer() {
+        let p = conv_pipeline();
+        let conv = &lower_pipeline(&p)[0];
+        assert_eq!(conv.accesses.len(), 2); // input + weights
+        assert_eq!(conv.accesses[0].pattern, AccessPattern::Stencil);
+        assert!(conv.accesses[1].source.is_none());
+        // weight footprint = 32*16*3*3*4 bytes
+        assert_eq!(conv.accesses[1].footprint_bytes, (32 * 16 * 9 * 4) as f64);
+    }
+
+    #[test]
+    fn gemm_reduction_is_k() {
+        let mut p = Pipeline::new("g");
+        let x = p.add_input(vec![64, 512]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 10;
+        p.add_stage("fc", Op::with_attrs(OpKind::Gemm, attrs), vec![x]).unwrap();
+        let nest = &lower_pipeline(&p)[0];
+        assert_eq!(nest.reduction, vec![512]);
+        let expect = 2.0 * (64 * 10) as f64 * 512.0;
+        assert!((nest.total_flops() - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn broadcast_detected() {
+        let mut p = Pipeline::new("b");
+        let x = p.add_input(vec![8, 128]);
+        let b = p.add_input(vec![128]);
+        p.add_stage("add", Op::new(OpKind::Add), vec![x, b]).unwrap();
+        let nest = &lower_pipeline(&p)[0];
+        assert_eq!(nest.accesses[0].pattern, AccessPattern::Contiguous);
+        assert_eq!(nest.accesses[1].pattern, AccessPattern::Broadcast);
+    }
+
+    #[test]
+    fn transpose_pattern() {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![64, 128]);
+        let mut attrs = OpAttrs::default();
+        attrs.perm = vec![1, 0];
+        p.add_stage("tr", Op::with_attrs(OpKind::Transpose, attrs), vec![x]).unwrap();
+        let nest = &lower_pipeline(&p)[0];
+        assert_eq!(nest.accesses[0].pattern, AccessPattern::Transposed);
+    }
+
+    #[test]
+    fn out_bytes_match_shape() {
+        let p = conv_pipeline();
+        let nests = lower_pipeline(&p);
+        assert_eq!(nests[0].out_bytes, (32 * 32 * 32 * 4) as f64);
+    }
+
+    #[test]
+    fn softmax_three_passes() {
+        let mut p = Pipeline::new("s");
+        let x = p.add_input(vec![32, 1000]);
+        let mut attrs = OpAttrs::default();
+        attrs.axis = 1;
+        p.add_stage("sm", Op::with_attrs(OpKind::Softmax, attrs), vec![x]).unwrap();
+        let nest = &lower_pipeline(&p)[0];
+        assert_eq!(nest.accesses[0].bytes_per_point, 12.0);
+        assert_eq!(nest.reduction, vec![1000]);
+    }
+}

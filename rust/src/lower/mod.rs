@@ -1,0 +1,8 @@
+//! Lowering: each pipeline stage becomes a [`LoopNest`] — the spatial loops
+//! over its output domain, an optional reduction domain, a per-point work
+//! profile and the buffer access patterns. This is the representation the
+//! scheduler transforms, the simulator costs, and the featurizer reads.
+
+pub mod loopnest;
+
+pub use loopnest::{lower_pipeline, lower_stage, Access, AccessPattern, LoopNest, WorkProfile};

@@ -1,0 +1,454 @@
+//! `gcn-perf` — leader CLI for the GCN performance-model reproduction.
+//!
+//! Subcommands:
+//!   gen-data   generate a dataset (random pipelines → schedules → sim bench)
+//!   train      train the GCN via the AOT train-step executable
+//!   fig8       regenerate Fig 8 (avg/max error, R² vs Halide + TVM models)
+//!   fig9       regenerate Fig 9 (pairwise ranking on the 9 zoo networks)
+//!   ablate     §III-C conv-depth ablation (0/1/2/4 layers)
+//!   search     model-guided beam search on a zoo network (Fig 2)
+//!   info       artifact / manifest info
+//!
+//! Everything is driven from rust; python only built the artifacts.
+
+use anyhow::{bail, Context, Result};
+use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
+use gcn_perf::dataset::sample::Dataset;
+use gcn_perf::dataset::store;
+use gcn_perf::eval::harness;
+use gcn_perf::eval::metrics::RegressionMetrics;
+use gcn_perf::eval::ranking::{rank_networks, RankResult};
+use gcn_perf::onnx_gen::GenConfig;
+use gcn_perf::runtime::{GcnRuntime, Params};
+use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
+use gcn_perf::sim::Machine;
+use gcn_perf::train::{train_and_save, TrainConfig};
+use gcn_perf::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("train") => cmd_train(&args),
+        Some("fig8") => cmd_fig8(&args),
+        Some("fig9") => cmd_fig9(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("active") => cmd_active(&args),
+        Some("transfer") => cmd_transfer(&args),
+        Some("search") => cmd_search(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "gcn-perf — GNN performance model for DNN compiler schedules
+
+USAGE: gcn-perf <subcommand> [--key value ...]
+
+  gen-data  --pipelines N --schedules M --out data/dataset.bin [--seed S]
+  train     --data data/dataset.bin --ckpt data/gcn.ckpt [--epochs E]
+            [--test-frac F] [--artifacts DIR]
+  fig8      --data ... --ckpt ... [--ffn-epochs E] [--report results/report.json]
+  fig9      --data ... --ckpt ... [--schedules K] [--report ...]
+  ablate    --data ... [--epochs E]     (conv layers 0/1/2/4 sweep)
+  active    --data ... [--rounds R --acquire K]  (§VI active-learning study)
+  transfer  --data ... --ckpt ...  (§VI-A cross-machine portability study)
+  search    --network NAME [--model oracle] [--ckpt ... --data ...]
+  info      [--artifacts DIR]";
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    let path = args.str_opt("data").context("--data required")?;
+    store::load(Path::new(path))
+}
+
+fn split_dataset(args: &Args, ds: &Dataset) -> (Dataset, Dataset) {
+    let frac = args.f64_or("test-frac", 0.1);
+    ds.split(frac, args.u64_or("split-seed", 1234))
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let cfg = DataGenConfig {
+        n_pipelines: args.usize_or("pipelines", 200),
+        schedules_per_pipeline: args.usize_or("schedules", 16),
+        seed: args.u64_or("seed", 42),
+        gen: GenConfig::default(),
+        machine: Machine::default(),
+    };
+    let out = PathBuf::from(args.str_or("out", "data/dataset.bin"));
+    eprintln!(
+        "generating {} pipelines x {} schedules...",
+        cfg.n_pipelines, cfg.schedules_per_pipeline
+    );
+    let ds = build_dataset(&cfg);
+    store::save(&ds, &out)?;
+    println!(
+        "wrote {} samples from {} pipelines to {}",
+        ds.len(),
+        ds.num_pipelines(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let (train_ds, test_ds) = split_dataset(args, &ds);
+    eprintln!(
+        "train: {} samples / {} pipelines, test: {} / {}",
+        train_ds.len(),
+        train_ds.num_pipelines(),
+        test_ds.len(),
+        test_ds.num_pipelines()
+    );
+    let rt = GcnRuntime::load(&artifacts_dir(args), true)?;
+    let cfg = TrainConfig {
+        epochs: args.usize_or("epochs", 40),
+        seed: args.u64_or("seed", 7),
+        patience: args.usize_or("patience", 8),
+        lr: args.f64_or("lr", 0.0075) as f32,
+        ..Default::default()
+    };
+    let ckpt = PathBuf::from(args.str_or("ckpt", "data/gcn.ckpt"));
+    let result = train_and_save(&rt, &train_ds, &test_ds, &cfg, &ckpt)?;
+    println!(
+        "best test MAPE {:.2}% after {} epochs; checkpoint: {}",
+        result.best_test_mape,
+        result.history.len(),
+        ckpt.display()
+    );
+    Ok(())
+}
+
+fn load_runtime_and_params(args: &Args, with_train: bool) -> Result<(GcnRuntime, Params)> {
+    let rt = GcnRuntime::load(&artifacts_dir(args), with_train)?;
+    let ckpt = args.str_opt("ckpt").context("--ckpt required")?;
+    let params = Params::load(Path::new(ckpt), &rt.manifest)?;
+    Ok((rt, params))
+}
+
+fn print_fig8(rows: &[RegressionMetrics]) {
+    println!("\nFig 8 — prediction quality on the test set");
+    println!("{}", RegressionMetrics::header());
+    for r in rows {
+        println!("{}", r.row());
+    }
+    if rows.len() >= 3 {
+        println!(
+            "\nerror reduction vs halide-ffn: {:.2}x   vs tvm-gbt: {:.2}x (paper: 7.75x / 12x)",
+            rows[1].avg_error_pct / rows[0].avg_error_pct,
+            rows[2].avg_error_pct / rows[0].avg_error_pct
+        );
+    }
+}
+
+fn cmd_fig8(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let (train_ds, test_ds) = split_dataset(args, &ds);
+    let (rt, params) = load_runtime_and_params(args, false)?;
+    let mut rows = harness::run_fig8(
+        &rt,
+        &params,
+        &train_ds,
+        &test_ds,
+        args.usize_or("ffn-epochs", 30),
+        true,
+    )?;
+    if args.has_flag("with-rnn") {
+        rows.push(harness::run_fig8_rnn(
+            &train_ds,
+            &test_ds,
+            args.usize_or("rnn-epochs", 10),
+            true,
+        )?);
+    }
+    print_fig8(&rows);
+    if let Some(report) = args.str_opt("report") {
+        harness::write_report(Path::new(report), &rows, &[], 0.0)?;
+        println!("report written to {report}");
+    }
+    Ok(())
+}
+
+fn print_fig9(rows: &[RankResult], avg: f64) {
+    println!("\nFig 9 — pairwise ranking accuracy on real-world networks");
+    println!("{}", RankResult::header());
+    for r in rows {
+        println!("{}", r.row());
+    }
+    println!("{:<14} {:>10} {:>10} {:>10.1}%", "AVERAGE", "", "", avg);
+    println!("(paper: 65–90% per network, ~75% average)");
+}
+
+fn cmd_fig9(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let (train_ds, _) = split_dataset(args, &ds);
+    let (rt, params) = load_runtime_and_params(args, false)?;
+    let stats = train_ds.stats.as_ref().context("stats")?;
+    let rows = harness::run_fig9(
+        &rt,
+        &params,
+        stats,
+        &Machine::default(),
+        args.usize_or("schedules", 100),
+        args.u64_or("seed", 5),
+    )?;
+    let (rows, avg) = rank_networks(rows);
+    print_fig9(&rows, avg);
+    if let Some(report) = args.str_opt("report") {
+        harness::write_report(Path::new(report), &[], &rows, avg)?;
+        println!("report written to {report}");
+    }
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let (train_ds, test_ds) = split_dataset(args, &ds);
+    let epochs = args.usize_or("epochs", 12);
+    let lr = args.f64_or("lr", 0.03) as f32;
+    let dir = artifacts_dir(args);
+    println!("conv-depth ablation (§III-C parametric sweep), {epochs} epochs each, lr {lr}");
+    println!("{:<8} {:>12}", "layers", "test MAPE %");
+    for (suffix, layers) in [("_l0", 0usize), ("_l1", 1), ("", 2), ("_l4", 4)] {
+        let rt = GcnRuntime::load_variant(&dir, suffix, true)
+            .with_context(|| format!("variant {suffix} — build artifacts with --ablation"))?;
+        let mut manifest = rt.manifest.clone();
+        manifest.params = ablation_params(layers);
+        let mut params = Params::init(&manifest, 7);
+        // output-bias init at the train mean log-runtime (as train() does)
+        let mean_log_y: f64 = train_ds
+            .samples
+            .iter()
+            .map(|s| s.mean_runtime().max(1e-12).ln())
+            .sum::<f64>()
+            / train_ds.len().max(1) as f64;
+        if let Some(b_out) = params.values.last_mut() {
+            b_out[0] = mean_log_y as f32;
+        }
+        let mut accum = params.zeros_like();
+        let best_rt = train_ds.best_per_pipeline();
+        let mut rng = gcn_perf::util::rng::Rng::new(13);
+        for _ in 0..epochs {
+            let mut order: Vec<usize> = (0..train_ds.len()).collect();
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(gcn_perf::constants::BATCH) {
+                let samples: Vec<&gcn_perf::dataset::sample::GraphSample> =
+                    chunk.iter().map(|&i| &train_ds.samples[i]).collect();
+                let bests: Vec<f64> =
+                    samples.iter().map(|s| best_rt[&s.pipeline_id]).collect();
+                let batch = gcn_perf::model::Batch::build(
+                    &samples,
+                    train_ds.stats.as_ref().unwrap(),
+                    &bests,
+                );
+                rt.train_step_lr(&mut params, &mut accum, &batch, lr)?;
+            }
+        }
+        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> =
+            test_ds.samples.iter().collect();
+        let preds = rt.predict_runtimes(&params, &refs, test_ds.stats.as_ref().unwrap())?;
+        let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
+        let mape = gcn_perf::util::stats::mape(&truth, &preds);
+        println!("{:<8} {:>12.2}", layers, mape);
+    }
+    Ok(())
+}
+
+/// Parameter list for an ablation variant (same construction as
+/// `model.param_specs(k)` in python).
+fn ablation_params(layers: usize) -> Vec<gcn_perf::runtime::manifest::ParamSpec> {
+    use gcn_perf::constants::*;
+    use gcn_perf::runtime::manifest::ParamSpec;
+    let mut specs = vec![
+        ParamSpec { name: "w_inv".into(), shape: vec![INV_DIM, EMB_INV] },
+        ParamSpec { name: "b_inv".into(), shape: vec![EMB_INV] },
+        ParamSpec { name: "w_dep".into(), shape: vec![DEP_DIM, EMB_DEP] },
+        ParamSpec { name: "b_dep".into(), shape: vec![EMB_DEP] },
+    ];
+    for k in 0..layers {
+        specs.push(ParamSpec { name: format!("conv{k}_w"), shape: vec![HIDDEN, HIDDEN] });
+        specs.push(ParamSpec { name: format!("conv{k}_b"), shape: vec![HIDDEN] });
+        specs.push(ParamSpec { name: format!("conv{k}_scale"), shape: vec![HIDDEN] });
+        specs.push(ParamSpec { name: format!("conv{k}_shift"), shape: vec![HIDDEN] });
+    }
+    specs.push(ParamSpec { name: "w_out".into(), shape: vec![NODE_DIM * (layers + 1), 1] });
+    specs.push(ParamSpec { name: "b_out".into(), shape: vec![1] });
+    specs
+}
+
+fn cmd_active(args: &Args) -> Result<()> {
+    use gcn_perf::train::active::{active_learning_study, ActiveConfig};
+    let ds = load_dataset(args)?;
+    let (pool, test) = split_dataset(args, &ds);
+    let rt = GcnRuntime::load(&artifacts_dir(args), true)?;
+    let cfg = ActiveConfig {
+        seed_frac: args.f64_or("seed-frac", 0.1),
+        acquire: args.usize_or("acquire", 1024),
+        rounds: args.usize_or("rounds", 4),
+        epochs_per_round: args.usize_or("epochs", 8),
+        seed: args.u64_or("seed", 3),
+    };
+    println!("§VI active learning: committee disagreement vs random acquisition");
+    println!("{:<7} {:>9} {:>16} {:>16}", "round", "labeled", "active MAPE %", "random MAPE %");
+    for r in active_learning_study(&rt, &pool, &test, &cfg)? {
+        println!(
+            "{:<7} {:>9} {:>16.2} {:>16.2}",
+            r.round, r.labeled, r.test_mape_active, r.test_mape_random
+        );
+    }
+    Ok(())
+}
+
+fn cmd_transfer(args: &Args) -> Result<()> {
+    // §VI-A: "while the current set of features is applicable across CPU
+    // platforms, it would require significant rework when porting to other
+    // hardware architectures". Study: train on the Xeon dataset (the given
+    // checkpoint), evaluate ranking on datasets benchmarked on *other* CPU
+    // presets. Features are machine-aware (cache-fit flags etc. use each
+    // machine's geometry), so CPU→CPU transfer should hold.
+    let ds = load_dataset(args)?;
+    let (train_ds, _) = split_dataset(args, &ds);
+    let (rt, params) = load_runtime_and_params(args, false)?;
+    let stats = train_ds.stats.as_ref().context("stats")?;
+    let schedules = args.usize_or("schedules", 60);
+    println!("§VI-A cross-machine transfer (trained on xeon_d2191)");
+    println!("{:<16} {:>14} {:>12}", "machine", "rank acc %", "MAPE %");
+    for name in ["xeon_d2191", "desktop_4core", "server_64core"] {
+        let machine = Machine::by_name(name).unwrap();
+        let rows = harness::run_fig9(&rt, &params, stats, &machine, schedules, 17)?;
+        let (rows, avg) = rank_networks(rows);
+        // also a MAPE over all the generated samples
+        let _ = rows;
+        println!("{:<16} {:>14.1} {:>12}", name, avg, "—");
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let name = args.str_or("network", "unet");
+    let net = gcn_perf::zoo::all_networks()
+        .into_iter()
+        .find(|n| n.name == name)
+        .with_context(|| format!("unknown network '{name}'"))?;
+    let nests = gcn_perf::lower::lower_pipeline(&net);
+    let machine = Machine::default();
+    let model_kind = args.str_or("model", "oracle");
+    let cfg = BeamConfig {
+        beam_width: args.usize_or("beam", 8),
+        candidates_per_stage: args.usize_or("candidates", 12),
+        seed: args.u64_or("seed", 1),
+    };
+
+    let model: Box<dyn CostModel> = match model_kind.as_str() {
+        "oracle" => Box::new(SimCost { machine: machine.clone() }),
+        "gcn" => {
+            let (rt, params) = load_runtime_and_params(args, false)?;
+            let ds = load_dataset(args)?;
+            let (train_ds, _) = split_dataset(args, &ds);
+            Box::new(GcnCost {
+                rt,
+                params,
+                stats: train_ds.stats.clone().context("stats")?,
+                machine: machine.clone(),
+            })
+        }
+        other => bail!("unknown cost model '{other}' (oracle|gcn)"),
+    };
+
+    let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+    let default_t = gcn_perf::sim::simulate(
+        &net,
+        &nests,
+        &gcn_perf::schedule::primitives::PipelineSchedule::default_for(&ranks),
+        &machine,
+    );
+    let (best, score) = beam_search(&net, &nests, model.as_ref(), &cfg);
+    let true_t = gcn_perf::sim::simulate(&net, &nests, &best, &machine);
+    println!("network {name}: default {:.3} ms", default_t * 1e3);
+    println!(
+        "beam search ({}): found {:.3} ms (model score {:.3} ms) — {:.2}x speedup",
+        model.name(),
+        true_t * 1e3,
+        score * 1e3,
+        default_t / true_t
+    );
+    Ok(())
+}
+
+/// GCN-backed cost model for beam search: featurize candidates, batch
+/// through the PJRT inference executable.
+pub struct GcnCost {
+    rt: GcnRuntime,
+    params: Params,
+    stats: gcn_perf::features::normalize::FeatureStats,
+    machine: Machine,
+}
+
+impl CostModel for GcnCost {
+    fn score(
+        &self,
+        p: &gcn_perf::ir::pipeline::Pipeline,
+        nests: &[gcn_perf::lower::LoopNest],
+        scheds: &[gcn_perf::schedule::primitives::PipelineSchedule],
+    ) -> Vec<f64> {
+        let mut rng = gcn_perf::util::rng::Rng::new(0);
+        let samples: Vec<gcn_perf::dataset::sample::GraphSample> = scheds
+            .iter()
+            .map(|s| {
+                gcn_perf::dataset::builder::sample_from_schedule(
+                    p,
+                    nests,
+                    s,
+                    &self.machine,
+                    0,
+                    0,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = samples.iter().collect();
+        self.rt
+            .predict_runtimes(&self.params, &refs, &self.stats)
+            .expect("gcn inference")
+    }
+    fn name(&self) -> String {
+        "gcn".into()
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = gcn_perf::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!(
+        "model: {} conv layers, node dim {}, batch {}, max nodes {}",
+        manifest.n_conv, manifest.node_dim, manifest.batch, manifest.max_nodes
+    );
+    println!(
+        "params: {} tensors, {} elements",
+        manifest.params.len(),
+        manifest.total_param_elems()
+    );
+    println!("ablation variants: {:?}", manifest.ablation_layers);
+    let rt = GcnRuntime::load(&dir, false)?;
+    println!("pjrt platform: {}", rt.client.platform_name());
+    Ok(())
+}

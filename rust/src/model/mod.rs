@@ -1,0 +1,7 @@
+//! Model-side data preparation: padded graph batches and the normalized
+//! adjacency transform — the rust half of the contract with the AOT'd JAX
+//! model (shapes fixed by `artifacts/manifest.json`).
+
+pub mod batch;
+
+pub use batch::{build_adjacency, Batch};

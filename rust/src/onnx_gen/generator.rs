@@ -1,0 +1,444 @@
+//! BUILD_RANDOM_ONNX_MODEL / BUILD_NEW_STAGE / BUILD_RANDOM_NODE
+//! (Algorithm 1, §III-A).
+
+use crate::constants::MAX_NODES;
+use crate::ir::op::{Op, OpAttrs, OpKind};
+use crate::ir::pipeline::{Pipeline, SourceRef};
+use crate::util::rng::Rng;
+
+/// Generator configuration; defaults follow §III-A.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub min_inputs: usize,
+    pub max_inputs: usize,
+    /// Stage *layers* (Algorithm 1 `num_stages`).
+    pub min_layers: usize,
+    pub max_layers: usize,
+    /// Nodes per layer (Algorithm 1 `width`).
+    pub min_width: usize,
+    pub max_width: usize,
+    /// Paper: `depth_thresh = 5`.
+    pub depth_thresh: usize,
+    /// Paper: discard *most* graphs with more than `output_thresh` outputs.
+    pub output_thresh: usize,
+    /// Probability of keeping a model that violates the output filter.
+    pub multi_output_keep_prob: f64,
+    /// Probability of keeping a model with no favored ops.
+    pub unfavored_keep_prob: f64,
+    /// Reject stages whose output exceeds this many elements.
+    pub max_stage_elems: usize,
+    /// Hard cap on total stages (the GCN pads graphs to MAX_NODES).
+    pub max_total_stages: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            min_inputs: 1,
+            max_inputs: 3,
+            min_layers: 4,
+            max_layers: 12,
+            min_width: 1,
+            max_width: 4,
+            depth_thresh: 5,
+            output_thresh: 1,
+            multi_output_keep_prob: 0.05,
+            unfavored_keep_prob: 0.1,
+            max_stage_elems: 16 << 20, // 64 MiB f32
+            max_total_stages: MAX_NODES,
+        }
+    }
+}
+
+/// Unary op distribution (Algorithm 1 line 35: pad, pool, softmax, …).
+const UNARY_OPS: &[(OpKind, f64)] = &[
+    (OpKind::Relu, 8.0),
+    (OpKind::Sigmoid, 2.0),
+    (OpKind::Tanh, 1.5),
+    (OpKind::LeakyRelu, 1.5),
+    (OpKind::Elu, 0.7),
+    (OpKind::Gelu, 1.0),
+    (OpKind::HardSwish, 0.7),
+    (OpKind::Softplus, 0.5),
+    (OpKind::Erf, 0.3),
+    (OpKind::Exp, 0.7),
+    (OpKind::Log, 0.5),
+    (OpKind::Sqrt, 0.5),
+    (OpKind::Reciprocal, 0.3),
+    (OpKind::Abs, 0.5),
+    (OpKind::Neg, 0.4),
+    (OpKind::Clip, 0.8),
+    (OpKind::Floor, 0.2),
+    (OpKind::Ceil, 0.2),
+    (OpKind::Round, 0.2),
+    (OpKind::Sign, 0.2),
+    (OpKind::Not, 0.1),
+    (OpKind::MaxPool, 3.0),
+    (OpKind::AveragePool, 2.0),
+    (OpKind::GlobalAveragePool, 1.0),
+    (OpKind::ReduceMean, 0.7),
+    (OpKind::ReduceSum, 0.7),
+    (OpKind::ReduceMax, 0.5),
+    (OpKind::Softmax, 1.5),
+    (OpKind::LogSoftmax, 0.4),
+    (OpKind::Pad, 0.8),
+    (OpKind::Slice, 0.6),
+    (OpKind::Transpose, 0.6),
+    (OpKind::Flatten, 0.8),
+    (OpKind::Upsample, 0.7),
+    (OpKind::Identity, 0.3),
+    // weight-bearing "unary" graph ops (weights are implicit params)
+    (OpKind::Conv2d, 10.0),
+    (OpKind::DepthwiseConv2d, 2.5),
+    (OpKind::Gemm, 4.0),
+    (OpKind::BatchNorm, 4.0),
+    (OpKind::LayerNorm, 1.0),
+    (OpKind::InstanceNorm, 0.5),
+];
+
+/// Binary op distribution (Algorithm 1 line 38).
+const BINARY_OPS: &[(OpKind, f64)] = &[
+    (OpKind::Add, 8.0),
+    (OpKind::Sub, 1.5),
+    (OpKind::Mul, 3.0),
+    (OpKind::Div, 0.8),
+    (OpKind::Pow, 0.3),
+    (OpKind::Min, 0.6),
+    (OpKind::Max, 0.6),
+    (OpKind::PRelu, 0.8),
+    (OpKind::And, 0.2),
+    (OpKind::Or, 0.2),
+    (OpKind::Xor, 0.1),
+    (OpKind::Greater, 0.3),
+    (OpKind::Less, 0.3),
+    (OpKind::Equal, 0.2),
+    (OpKind::Concat, 2.0),
+    (OpKind::MatMul, 1.5),
+];
+
+fn sample_from(table: &[(OpKind, f64)], rng: &mut Rng) -> OpKind {
+    let weights: Vec<f64> = table.iter().map(|(_, w)| *w).collect();
+    table[rng.categorical(&weights)].0
+}
+
+fn sample_attrs(kind: OpKind, in_shape: &[usize], rng: &mut Rng) -> OpAttrs {
+    let mut a = OpAttrs::default();
+    match kind {
+        OpKind::Conv2d | OpKind::DepthwiseConv2d => {
+            let k = *rng.choice(&[1usize, 3, 3, 3, 5, 7]);
+            a.kernel = (k, k);
+            a.pad = if rng.chance(0.8) { k / 2 } else { 0 };
+            a.stride = if rng.chance(0.25) { 2 } else { 1 };
+            a.out_channels = *rng.choice(&[8usize, 16, 24, 32, 48, 64, 96, 128]);
+        }
+        OpKind::MaxPool | OpKind::AveragePool => {
+            let k = *rng.choice(&[2usize, 2, 3]);
+            a.kernel = (k, k);
+            a.stride = if rng.chance(0.8) { k } else { 1 };
+            a.pad = 0;
+        }
+        OpKind::Gemm => {
+            a.out_channels = *rng.choice(&[16usize, 32, 64, 128, 256, 512, 1024]);
+        }
+        OpKind::ReduceMean | OpKind::ReduceSum | OpKind::ReduceMax => {
+            a.axis = rng.gen_range(in_shape.len().max(1));
+            a.keepdims = rng.chance(0.6);
+        }
+        OpKind::Softmax | OpKind::LogSoftmax => {
+            a.axis = in_shape.len().saturating_sub(1);
+        }
+        OpKind::Concat => {
+            a.axis = if in_shape.len() >= 2 { 1 } else { 0 };
+        }
+        OpKind::Pad => {
+            a.pad = rng.gen_range_incl(1, 3);
+        }
+        OpKind::Slice => {
+            a.axis = rng.gen_range(in_shape.len().max(1));
+            a.slice_frac = (1, 2);
+        }
+        OpKind::Transpose => {
+            let mut perm: Vec<usize> = (0..in_shape.len()).collect();
+            rng.shuffle(&mut perm);
+            a.perm = perm;
+        }
+        OpKind::Flatten => {
+            a.axis = 1;
+        }
+        OpKind::Upsample => {
+            a.scale = 2;
+        }
+        OpKind::Reshape => {
+            // collapse to 2D preserving numel
+            let n: usize = in_shape.iter().product();
+            let d = *rng.choice(&[2usize, 4, 8]);
+            if n % d == 0 {
+                a.target_shape = vec![d, n / d];
+            } else {
+                a.target_shape = vec![n];
+            }
+        }
+        _ => {}
+    }
+    a
+}
+
+/// BUILD_RANDOM_NODE: sample a node and wire it to compatible tensors from
+/// `avail`. Returns the added stage's SourceRef, or `None` after `tries`
+/// failed attempts.
+fn build_random_node(
+    p: &mut Pipeline,
+    avail: &[SourceRef],
+    cfg: &GenConfig,
+    rng: &mut Rng,
+    node_idx: usize,
+) -> Option<SourceRef> {
+    for _try in 0..12 {
+        let is_binary = rng.chance(0.3);
+        let kind = if is_binary {
+            sample_from(BINARY_OPS, rng)
+        } else {
+            sample_from(UNARY_OPS, rng)
+        };
+        let arity = kind.graph_arity();
+        if arity > avail.len() {
+            continue;
+        }
+        // pick operands (first uniformly; rest searched for compatibility)
+        let first = *rng.choice(avail);
+        let first_shape = p.shape_of(first).to_vec();
+        let attrs = sample_attrs(kind, &first_shape, rng);
+        let op = Op::with_attrs(kind, attrs);
+
+        let mut operands = vec![first];
+        let mut shapes: Vec<Vec<usize>> = vec![first_shape];
+        let mut ok = true;
+        for _ in 1..arity {
+            // search available tensors for one that type-checks
+            let mut cand_order = rng.sample_indices(avail.len(), avail.len());
+            let mut found = None;
+            for ci in cand_order.drain(..) {
+                let cand = avail[ci];
+                let mut test_shapes: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
+                let cand_shape = p.shape_of(cand).to_vec();
+                test_shapes.push(&cand_shape);
+                // pad remaining operand slots with the candidate to test
+                while test_shapes.len() < arity {
+                    test_shapes.push(&cand_shape);
+                }
+                if op.infer_shape(&test_shapes).is_some() {
+                    found = Some((cand, cand_shape));
+                    break;
+                }
+            }
+            match found {
+                Some((cand, cs)) => {
+                    operands.push(cand);
+                    shapes.push(cs);
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        // fill ternary (Where) remaining slot by reusing an operand
+        while operands.len() < arity {
+            operands.push(operands[operands.len() - 1]);
+        }
+        let shape_refs: Vec<&[usize]> = operands.iter().map(|&s| p.shape_of(s)).collect();
+        if let Some(out) = op.infer_shape(&shape_refs) {
+            if out.iter().product::<usize>() > cfg.max_stage_elems || out.iter().any(|&d| d == 0) {
+                continue;
+            }
+            let name = format!("n{}_{}", node_idx, kind.name().to_lowercase());
+            return p.add_stage(&name, op, operands);
+        }
+    }
+    None
+}
+
+/// BUILD_RANDOM_ONNX_MODEL: one attempt. Returns `None` when a filter
+/// rejects the model (callers loop; see [`generate_model`]).
+fn build_random_model(cfg: &GenConfig, rng: &mut Rng, name: &str) -> Option<Pipeline> {
+    let mut p = Pipeline::new(name);
+
+    // line 3-4: inputs
+    let num_inputs = rng.gen_range_incl(cfg.min_inputs, cfg.max_inputs);
+    let mut input_stage: Vec<SourceRef> = Vec::new();
+    for _ in 0..num_inputs {
+        let shape = match rng.gen_range(3) {
+            0 => {
+                // rank-4 NCHW feature map
+                let c = *rng.choice(&[3usize, 8, 16, 24, 32]);
+                let hw = *rng.choice(&[14usize, 28, 32, 56, 64, 112, 128, 224]);
+                vec![1, c, hw, hw]
+            }
+            1 => {
+                // rank-2 matrix
+                let r = *rng.choice(&[16usize, 32, 64, 128, 256]);
+                let c = *rng.choice(&[64usize, 128, 256, 512, 1024]);
+                vec![r, c]
+            }
+            _ => {
+                // rank-3 sequence
+                let b = *rng.choice(&[1usize, 4, 8]);
+                let t = *rng.choice(&[32usize, 64, 128, 256]);
+                let d = *rng.choice(&[64usize, 128, 256]);
+                vec![b, t, d]
+            }
+        };
+        input_stage.push(p.add_input(shape));
+    }
+
+    // line 5-9: stages layer by layer
+    let num_layers = rng.gen_range_incl(cfg.min_layers, cfg.max_layers);
+    for _layer in 0..num_layers {
+        if p.num_stages() >= cfg.max_total_stages {
+            break;
+        }
+        let width = rng
+            .gen_range_incl(cfg.min_width, cfg.max_width)
+            .min(cfg.max_total_stages - p.num_stages());
+        let mut new_stage: Vec<SourceRef> = Vec::new();
+        let mut used: Vec<SourceRef> = Vec::new();
+        for w in 0..width {
+            let node_idx = p.num_stages() + w;
+            if let Some(node) = build_random_node(&mut p, &input_stage, cfg, rng, node_idx) {
+                // remember which tensors got consumed
+                if let SourceRef::Stage(id) = node {
+                    used.extend(p.stages[id].inputs.iter().copied());
+                }
+                new_stage.push(node);
+            }
+        }
+        if new_stage.is_empty() {
+            return None; // dead end
+        }
+        // line 27: carry over unused tensors so later layers can still read
+        // them (skip connections)
+        for &t in &input_stage {
+            if !used.contains(&t) && rng.chance(0.5) {
+                new_stage.push(t);
+            }
+        }
+        input_stage = new_stage;
+    }
+
+    // --- filters (lines 10-20)
+    if p.num_stages() < 2 || p.num_stages() > cfg.max_total_stages {
+        return None;
+    }
+    let outputs = p.outputs();
+    if outputs.len() > cfg.output_thresh && !rng.chance(cfg.multi_output_keep_prob) {
+        return None;
+    }
+    if p.depth() < cfg.depth_thresh {
+        return None;
+    }
+    let has_favored = p.stages.iter().any(|s| s.op.kind.is_favored());
+    if !has_favored && !rng.chance(cfg.unfavored_keep_prob) {
+        return None;
+    }
+    debug_assert!(p.validate().is_ok(), "{:?}", p.validate());
+    Some(p)
+}
+
+/// Generate one valid random model (retrying internally until the filters
+/// pass — the paper's generator likewise loops until a model is accepted).
+pub fn generate_model(cfg: &GenConfig, rng: &mut Rng, id: usize) -> Pipeline {
+    for attempt in 0.. {
+        let name = format!("rand_{id}");
+        if let Some(p) = build_random_model(cfg, rng, &name) {
+            return p;
+        }
+        assert!(attempt < 10_000, "generator failed to produce a valid model");
+    }
+    unreachable!()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn generates_valid_filtered_models() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(1);
+        for i in 0..20 {
+            let p = generate_model(&cfg, &mut rng, i);
+            p.validate().unwrap();
+            assert!(p.depth() >= cfg.depth_thresh, "depth {}", p.depth());
+            assert!(p.num_stages() <= cfg.max_total_stages);
+            assert!(p.num_stages() >= 2);
+        }
+    }
+
+    #[test]
+    fn prop_generated_models_structurally_sound() {
+        propcheck::check_rng("onnx_gen sound", 0xDEAD, 24, |rng| {
+            let cfg = GenConfig::default();
+            let p = generate_model(&cfg, rng, 0);
+            p.validate().map_err(|e| e)?;
+            // every stage's buffers bounded
+            for s in &p.stages {
+                let elems: usize = s.shape.iter().product();
+                if elems > cfg.max_stage_elems {
+                    return Err(format!("stage {} too big: {elems}", s.id));
+                }
+                if elems == 0 {
+                    return Err(format!("stage {} empty shape {:?}", s.id, s.shape));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let cfg = GenConfig::default();
+        let a = generate_model(&cfg, &mut Rng::new(99), 0);
+        let b = generate_model(&cfg, &mut Rng::new(99), 0);
+        assert_eq!(a.num_stages(), b.num_stages());
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(x.op.kind, y.op.kind);
+            assert_eq!(x.shape, y.shape);
+        }
+    }
+
+    #[test]
+    fn models_are_diverse() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(7);
+        let mut sizes = std::collections::HashSet::new();
+        let mut kinds = std::collections::HashSet::new();
+        for i in 0..30 {
+            let p = generate_model(&cfg, &mut rng, i);
+            sizes.insert(p.num_stages());
+            for s in &p.stages {
+                kinds.insert(s.op.kind);
+            }
+        }
+        assert!(sizes.len() >= 5, "stage-count diversity {sizes:?}");
+        assert!(kinds.len() >= 15, "op diversity: {} kinds", kinds.len());
+    }
+
+    #[test]
+    fn favored_ops_mostly_present() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(3);
+        let favored = (0..30)
+            .filter(|i| {
+                generate_model(&cfg, &mut rng, *i)
+                    .stages
+                    .iter()
+                    .any(|s| s.op.kind.is_favored())
+            })
+            .count();
+        assert!(favored >= 25, "{favored}/30 favored");
+    }
+}

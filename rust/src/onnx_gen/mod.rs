@@ -1,0 +1,11 @@
+//! Random ONNX-style model generation — Algorithm 1 of the paper.
+//!
+//! Models are built stage-layer by stage-layer; each node samples a type
+//! (unary / binary / ternary) and an operation from per-type categorical
+//! distributions, then wires itself to compatible tensors from the previous
+//! layer. Candidate models pass the paper's filters: ≤ 1 output (mostly),
+//! depth ≥ 5 and presence of favored operators (conv / relu / …).
+
+pub mod generator;
+
+pub use generator::{generate_model, GenConfig};

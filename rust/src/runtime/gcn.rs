@@ -1,0 +1,155 @@
+//! The GCN model runtime: PJRT-compiled infer + train executables.
+//!
+//! Artifact signatures (see `aot.py`):
+//!   infer: (*params, inv, dep, adj, mask) -> (z[B],)
+//!   train: (*params, *accum, inv, dep, adj, mask, log_y, weight,
+//!           sample_mask) -> (*params', *accum', loss)
+
+use crate::constants::{BATCH, DEP_DIM, INV_DIM, MAX_NODES};
+use crate::model::Batch;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::params::Params;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct GcnRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    infer_exe: xla::PjRtLoadedExecutable,
+    train_exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parse HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl GcnRuntime {
+    /// Load the default artifacts (`gcn_infer.hlo.txt` / `gcn_train.hlo.txt`).
+    pub fn load(artifacts_dir: &Path, with_train: bool) -> Result<GcnRuntime> {
+        Self::load_variant(artifacts_dir, "", with_train)
+    }
+
+    /// Load an ablation variant (`suffix` e.g. "_l0", "_l1", "_l4").
+    pub fn load_variant(
+        artifacts_dir: &Path,
+        suffix: &str,
+        with_train: bool,
+    ) -> Result<GcnRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let infer_exe = compile(&client, &artifacts_dir.join(format!("gcn_infer{suffix}.hlo.txt")))?;
+        let train_exe = if with_train {
+            Some(compile(&client, &artifacts_dir.join(format!("gcn_train{suffix}.hlo.txt")))?)
+        } else {
+            None
+        };
+        Ok(GcnRuntime { client, manifest, infer_exe, train_exe })
+    }
+
+    /// Parameter specs for a variant (ablations have their own param lists).
+    pub fn init_params(&self, seed: u64) -> Params {
+        Params::init(&self.manifest, seed)
+    }
+
+    fn buffers_for_params(&self, params: &Params) -> Result<Vec<xla::PjRtBuffer>> {
+        params
+            .values
+            .iter()
+            .zip(&params.shapes)
+            .map(|(v, s)| Ok(self.client.buffer_from_host_buffer(v, s, None)?))
+            .collect()
+    }
+
+    fn batch_buffers(&self, batch: &Batch) -> Result<Vec<xla::PjRtBuffer>> {
+        let n = MAX_NODES;
+        let c = &self.client;
+        Ok(vec![
+            c.buffer_from_host_buffer(&batch.inv, &[BATCH, n, INV_DIM], None)?,
+            c.buffer_from_host_buffer(&batch.dep, &[BATCH, n, DEP_DIM], None)?,
+            c.buffer_from_host_buffer(&batch.adj, &[BATCH, n, n], None)?,
+            c.buffer_from_host_buffer(&batch.mask, &[BATCH, n], None)?,
+        ])
+    }
+
+    /// Predicted log-runtimes for the real samples of the batch.
+    pub fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>> {
+        let mut args = self.buffers_for_params(params)?;
+        args.extend(self.batch_buffers(batch)?);
+        let result = self.infer_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let z = result.to_tuple1()?;
+        let v = z.to_vec::<f32>()?;
+        Ok(v[..batch.len].to_vec())
+    }
+
+    /// One Adagrad step at the paper's lr; updates `params`/`accum` in
+    /// place, returns the batch loss.
+    pub fn train_step(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &Batch,
+    ) -> Result<f32> {
+        self.train_step_lr(params, accum, batch, self.manifest.learning_rate as f32)
+    }
+
+    /// One Adagrad step with an explicit learning rate (runtime input to
+    /// the artifact — no re-AOT needed to tune/schedule it).
+    pub fn train_step_lr(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        let train_exe = self
+            .train_exe
+            .as_ref()
+            .context("runtime loaded without the train executable")?;
+        let mut args = self.buffers_for_params(params)?;
+        args.extend(self.buffers_for_params(accum)?);
+        args.extend(self.batch_buffers(batch)?);
+        let c = &self.client;
+        args.push(c.buffer_from_host_buffer(&batch.log_y, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&batch.weight, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&batch.sample_mask, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&[lr], &[], None)?);
+
+        let result = train_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let np = params.values.len();
+        anyhow::ensure!(parts.len() == 2 * np + 1, "train tuple arity {}", parts.len());
+        for (i, part) in parts.iter().take(np).enumerate() {
+            params.values[i] = part.to_vec::<f32>()?;
+        }
+        for (i, part) in parts.iter().skip(np).take(np).enumerate() {
+            accum.values[i] = part.to_vec::<f32>()?;
+        }
+        let loss = parts[2 * np].to_vec::<f32>()?[0];
+        Ok(loss)
+    }
+
+    /// Predict mean runtimes in seconds for a set of samples (any count —
+    /// batches are padded internally).
+    pub fn predict_runtimes(
+        &self,
+        params: &Params,
+        samples: &[&crate::dataset::sample::GraphSample],
+        stats: &crate::features::normalize::FeatureStats,
+    ) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(BATCH) {
+            // α/β are irrelevant for inference; feed zeros
+            let best = vec![1.0f64; chunk.len()];
+            let batch = Batch::build(chunk, stats, &best);
+            let z = self.infer(params, &batch)?;
+            out.extend(z.iter().map(|&v| (v as f64).exp()));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,170 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the rust
+//! runtime: model dimensions and the flat parameter calling convention.
+
+use crate::constants;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub inv_dim: usize,
+    pub dep_dim: usize,
+    pub node_dim: usize,
+    pub n_conv: usize,
+    pub max_nodes: usize,
+    pub batch: usize,
+    pub learning_rate: f64,
+    pub weight_decay: f64,
+    pub params: Vec<ParamSpec>,
+    /// Conv-depth ablation variants present in the artifacts (may be empty).
+    pub ablation_layers: Vec<usize>,
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
+    let arr = j.as_arr().context("params not an array")?;
+    arr.iter()
+        .map(|e| {
+            Ok(ParamSpec {
+                name: e
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .context("param name")?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .context("param shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).with_context(|| format!("manifest key {k}"))
+        };
+        let m = Manifest {
+            inv_dim: get("inv_dim")?,
+            dep_dim: get("dep_dim")?,
+            node_dim: get("node_dim")?,
+            n_conv: get("n_conv")?,
+            max_nodes: get("max_nodes")?,
+            batch: get("batch")?,
+            learning_rate: j
+                .get("learning_rate")
+                .and_then(|v| v.as_f64())
+                .context("learning_rate")?,
+            weight_decay: j
+                .get("weight_decay")
+                .and_then(|v| v.as_f64())
+                .context("weight_decay")?,
+            params: parse_params(j.get("params").context("params")?)?,
+            ablation_layers: j
+                .get("ablation_layers")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+        };
+        m.check_against_constants()?;
+        Ok(m)
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Fail fast when python and rust dims drift.
+    fn check_against_constants(&self) -> Result<()> {
+        if self.inv_dim != constants::INV_DIM
+            || self.dep_dim != constants::DEP_DIM
+            || self.max_nodes != constants::MAX_NODES
+            || self.batch != constants::BATCH
+        {
+            bail!(
+                "manifest dims {:?} disagree with rust constants ({}, {}, {}, {}) — \
+                 rebuild artifacts",
+                (self.inv_dim, self.dep_dim, self.max_nodes, self.batch),
+                constants::INV_DIM,
+                constants::DEP_DIM,
+                constants::MAX_NODES,
+                constants::BATCH
+            );
+        }
+        Ok(())
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        format!(
+            r#"{{"inv_dim": {}, "dep_dim": {}, "node_dim": 80, "hidden": 80,
+                "n_conv": 2, "readout": 240, "max_nodes": {}, "batch": {},
+                "learning_rate": 0.0075, "weight_decay": 0.0001,
+                "params": [
+                  {{"name": "w_inv", "shape": [{}, 32]}},
+                  {{"name": "b_out", "shape": [1]}}
+                ]}}"#,
+            constants::INV_DIM,
+            constants::DEP_DIM,
+            constants::MAX_NODES,
+            constants::BATCH,
+            constants::INV_DIM,
+        )
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(&sample_manifest()).unwrap();
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].name, "w_inv");
+        assert_eq!(m.params[0].numel(), constants::INV_DIM * 32);
+        assert!((m.learning_rate - 0.0075).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_dim_drift() {
+        let bad = sample_manifest().replace(
+            &format!("\"batch\": {}", constants::BATCH),
+            "\"batch\": 7",
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.n_conv, constants::N_CONV);
+            assert!(m.total_param_elems() > 10_000);
+        }
+    }
+}

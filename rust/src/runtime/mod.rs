@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and drive
+//! inference / training from rust. Python is never on this path.
+
+pub mod manifest;
+pub mod params;
+pub mod gcn;
+
+pub use gcn::GcnRuntime;
+pub use manifest::Manifest;
+pub use params::Params;

@@ -1,0 +1,201 @@
+//! Model parameters + Adagrad accumulators, host-side.
+//!
+//! Initialization matches `model.init_params` (He for matrices, zeros for
+//! biases, ones for norm scales) — the exact values differ (different RNG)
+//! but the distribution is the same; training happens in rust anyway.
+
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GCNPARAM";
+
+/// Flat parameter set in manifest order.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub values: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+    pub names: Vec<String>,
+}
+
+impl Params {
+    /// He/zeros/ones initialization per the parameter's role.
+    pub fn init(manifest: &Manifest, seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let mut values = Vec::new();
+        let mut shapes = Vec::new();
+        let mut names = Vec::new();
+        for spec in &manifest.params {
+            let n = spec.numel();
+            let v = if spec.name.ends_with("_scale") {
+                vec![1.0f32; n]
+            } else if spec.shape.len() == 1 {
+                vec![0.0f32; n]
+            } else {
+                let fan_in = spec.shape[0] as f64;
+                let std = (2.0 / fan_in).sqrt();
+                (0..n).map(|_| (rng.normal() * std) as f32).collect()
+            };
+            values.push(v);
+            shapes.push(spec.shape.clone());
+            names.push(spec.name.clone());
+        }
+        Params { values, shapes, names }
+    }
+
+    /// All-zeros clone with the same shapes (Adagrad accumulator init).
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            values: self.values.iter().map(|v| vec![0.0; v.len()]).collect(),
+            shapes: self.shapes.clone(),
+            names: self.names.clone(),
+        }
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+
+    /// Save to a binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.values.len() as u32).to_le_bytes())?;
+        for (v, (shape, name)) in self.values.iter().zip(self.shapes.iter().zip(&self.names)) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint and verify it matches the manifest layout.
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<Params> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a param checkpoint");
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        if n != manifest.params.len() {
+            bail!("checkpoint has {n} tensors, manifest expects {}", manifest.params.len());
+        }
+        let mut values = Vec::new();
+        let mut shapes = Vec::new();
+        let mut names = Vec::new();
+        for spec in &manifest.params {
+            f.read_exact(&mut b4)?;
+            let name_len = u32::from_le_bytes(b4) as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            if name != spec.name {
+                bail!("checkpoint param '{name}' where manifest expects '{}'", spec.name);
+            }
+            f.read_exact(&mut b4)?;
+            let rank = u32::from_le_bytes(b4) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut b4)?;
+                shape.push(u32::from_le_bytes(b4) as usize);
+            }
+            if shape != spec.shape {
+                bail!("param '{name}' shape {shape:?} != manifest {:?}", spec.shape);
+            }
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            f.read_exact(&mut buf)?;
+            values.push(
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+            shapes.push(shape);
+            names.push(name);
+        }
+        Ok(Params { values, shapes, names })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, ParamSpec};
+
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            inv_dim: crate::constants::INV_DIM,
+            dep_dim: crate::constants::DEP_DIM,
+            node_dim: 80,
+            n_conv: 0,
+            max_nodes: crate::constants::MAX_NODES,
+            batch: crate::constants::BATCH,
+            learning_rate: 0.0075,
+            weight_decay: 1e-4,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![4, 8] },
+                ParamSpec { name: "b".into(), shape: vec![8] },
+                ParamSpec { name: "n_scale".into(), shape: vec![8] },
+            ],
+            ablation_layers: vec![],
+        }
+    }
+
+    #[test]
+    fn init_roles() {
+        let p = Params::init(&tiny_manifest(), 1);
+        assert_eq!(p.values[0].len(), 32);
+        assert!(p.values[0].iter().any(|&x| x != 0.0)); // weights random
+        assert!(p.values[1].iter().all(|&x| x == 0.0)); // bias zero
+        assert!(p.values[2].iter().all(|&x| x == 1.0)); // scale one
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = tiny_manifest();
+        let p = Params::init(&m, 2);
+        let path = std::env::temp_dir().join("gcn_perf_test_params.bin");
+        p.save(&path).unwrap();
+        let q = Params::load(&path, &m).unwrap();
+        assert_eq!(p.values, q.values);
+        assert_eq!(p.shapes, q.shapes);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_shape_mismatch() {
+        let m = tiny_manifest();
+        let p = Params::init(&m, 3);
+        let path = std::env::temp_dir().join("gcn_perf_test_params2.bin");
+        p.save(&path).unwrap();
+        let mut m2 = m.clone();
+        m2.params[0].shape = vec![5, 8];
+        assert!(Params::load(&path, &m2).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zeros_like_matches_layout() {
+        let p = Params::init(&tiny_manifest(), 4);
+        let z = p.zeros_like();
+        assert_eq!(z.total_elems(), p.total_elems());
+        assert!(z.values.iter().flatten().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,200 @@
+//! Schedule legality rules (the subset of Halide's constraints our IR
+//! exposes). The random sampler and beam search only emit schedules that
+//! pass [`check_pipeline`]; the simulator asserts it in debug builds.
+
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
+
+/// Validate one stage schedule against its loop nest.
+pub fn check_stage(
+    nest: &LoopNest,
+    sched: &StageSchedule,
+    consumers: &[usize],
+    all_scheds: &[StageSchedule],
+) -> Result<(), String> {
+    let rank = nest.spatial.len();
+    // order must be a permutation of 0..rank
+    if sched.order.len() != rank {
+        return Err(format!("order len {} != rank {}", sched.order.len(), rank));
+    }
+    let mut seen = vec![false; rank];
+    for &d in &sched.order {
+        if d >= rank || seen[d] {
+            return Err(format!("order {:?} is not a permutation", sched.order));
+        }
+        seen[d] = true;
+    }
+    if sched.tile.len() != rank {
+        return Err(format!("tile len {} != rank {}", sched.tile.len(), rank));
+    }
+    if sched.tile.iter().any(|&f| f == 0) {
+        return Err("zero split factor".into());
+    }
+    // vectorization: innermost loop only, must be power of two 1/4/8, and
+    // requires the innermost extent to cover the vector width
+    match sched.vector_width {
+        1 | 4 | 8 => {}
+        w => return Err(format!("unsupported vector width {w}")),
+    }
+    if sched.vector_width > 1 {
+        let inner = sched
+            .innermost_dim()
+            .ok_or_else(|| "vectorize on rank-0 stage".to_string())?;
+        let extent = if sched.tile[inner] > 1 {
+            sched.tile[inner]
+        } else {
+            nest.spatial[inner]
+        };
+        if extent < sched.vector_width {
+            return Err(format!(
+                "vector width {} exceeds innermost extent {}",
+                sched.vector_width, extent
+            ));
+        }
+    }
+    match sched.unroll {
+        1 | 2 | 4 | 8 => {}
+        u => return Err(format!("unsupported unroll factor {u}")),
+    }
+    // parallel depth bounded by loop count
+    let n_loops = sched.loop_extents(&nest.spatial).len();
+    if sched.parallel_depth > n_loops.min(3) {
+        return Err(format!(
+            "parallel depth {} exceeds limit (loops={})",
+            sched.parallel_depth, n_loops
+        ));
+    }
+    // compute location rules
+    match sched.compute {
+        ComputeLoc::Root => {}
+        ComputeLoc::Inline => {
+            // Halide can only inline pure (no-reduction) single-valued funcs
+            if !nest.pointwise || !nest.reduction.is_empty() {
+                return Err("inline of non-pointwise stage".into());
+            }
+            if consumers.is_empty() {
+                return Err("inline of an output stage".into());
+            }
+        }
+        ComputeLoc::At { consumer, level } => {
+            if !consumers.contains(&consumer) {
+                return Err(format!("compute_at non-consumer {consumer}"));
+            }
+            // only legal when the consumer materializes (is not inlined)
+            if consumer < all_scheds.len()
+                && matches!(all_scheds[consumer].compute, ComputeLoc::Inline)
+            {
+                return Err("compute_at an inlined consumer".into());
+            }
+            if level == 0 || level > 3 {
+                return Err(format!("compute_at level {level} out of range"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate a whole pipeline schedule.
+pub fn check_pipeline(
+    p: &Pipeline,
+    nests: &[LoopNest],
+    sched: &PipelineSchedule,
+) -> Result<(), String> {
+    if sched.stages.len() != p.num_stages() {
+        return Err(format!(
+            "schedule covers {} stages, pipeline has {}",
+            sched.stages.len(),
+            p.num_stages()
+        ));
+    }
+    let consumers = p.consumers();
+    for (i, s) in sched.stages.iter().enumerate() {
+        check_stage(&nests[i], s, &consumers[i], &sched.stages)
+            .map_err(|e| format!("stage {i} ({}): {e}", p.stages[i].op.kind.name()))?;
+    }
+    // compute_at must not form chains deeper than the consumer's own nest
+    // (we conservatively allow producer->consumer only when consumer is Root
+    // or At — checked above — and forbid At cycles, impossible by topo order).
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::lower::lower_pipeline;
+
+    fn two_stage() -> (Pipeline, Vec<LoopNest>) {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 8;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let nests = lower_pipeline(&p);
+        (p, nests)
+    }
+
+    #[test]
+    fn default_schedule_is_legal() {
+        let (p, nests) = two_stage();
+        let sched = PipelineSchedule::default_for(
+            &p.stages.iter().map(|s| s.shape.len()).collect::<Vec<_>>(),
+        );
+        check_pipeline(&p, &nests, &sched).unwrap();
+    }
+
+    #[test]
+    fn bad_order_rejected() {
+        let (p, nests) = two_stage();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        sched.stages[0].order = vec![0, 0, 1, 2];
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+
+    #[test]
+    fn vector_width_needs_extent() {
+        let (p, nests) = two_stage();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        // innermost dim of conv output (w=32) supports width 8
+        sched.stages[0].vector_width = 8;
+        check_pipeline(&p, &nests, &sched).unwrap();
+        // but reorder so innermost is batch (extent 1) -> illegal
+        sched.stages[0].order = vec![1, 2, 3, 0];
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+
+    #[test]
+    fn inline_only_pointwise() {
+        let (p, nests) = two_stage();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        // conv (has reduction) cannot inline
+        sched.stages[0].compute = ComputeLoc::Inline;
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+        // relu is an output stage -> cannot inline either
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        sched.stages[1].compute = ComputeLoc::Inline;
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+
+    #[test]
+    fn compute_at_requires_consumer_edge() {
+        let (p, nests) = two_stage();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 2 };
+        check_pipeline(&p, &nests, &sched).unwrap();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 0, level: 2 };
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+
+    #[test]
+    fn parallel_depth_bounded() {
+        let (p, nests) = two_stage();
+        let mut sched = PipelineSchedule::default_for(&[4, 4]);
+        sched.stages[0].parallel_depth = 3;
+        check_pipeline(&p, &nests, &sched).unwrap();
+        sched.stages[0].parallel_depth = 9;
+        assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+}

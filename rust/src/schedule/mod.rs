@@ -1,0 +1,15 @@
+//! Scheduling: the Halide-style per-stage schedule space (§II-A).
+//!
+//! A [`StageSchedule`] records the choices made for one stage: loop tiling
+//! (split), loop order (reorder), vectorization, parallelization, unrolling
+//! and the compute location (`compute_root` / `compute_at` / inline). A
+//! [`PipelineSchedule`] is one schedule per stage; [`legal`](legality) checks
+//! enforce Halide's constraints, and [`random`] samples the space the way the
+//! paper's noisy auto-scheduler explores it.
+
+pub mod primitives;
+pub mod legality;
+pub mod random;
+pub mod space;
+
+pub use primitives::{ComputeLoc, PipelineSchedule, StageSchedule};

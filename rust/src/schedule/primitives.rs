@@ -1,0 +1,159 @@
+//! Schedule data model.
+
+/// Where a stage's computation happens relative to its consumers (§II-A.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeLoc {
+    /// `compute_root()`: materialize the whole buffer before consumers run.
+    Root,
+    /// `compute_at(consumer, level)`: compute per consumer tile; `level` is
+    /// the consumer loop depth (0 = outermost) the producer nests under.
+    At { consumer: usize, level: usize },
+    /// Inline the expression into every use (Halide's default for pure
+    /// `Func`s): no buffer, possible recompute.
+    Inline,
+}
+
+/// Scheduling decisions for one stage.
+///
+/// Loops are identified by their spatial dimension index (0 = outermost
+/// output dim). `tile[d]` is the split factor of dim `d` (1 = unsplit); a
+/// split produces `d_outer` with extent `ceil(extent/f)` and `d_inner` with
+/// extent `f`, and the tiled order is all outers (in `order`) followed by
+/// all inners (in `order`) followed by reduction loops — the classic
+/// tiled/blocked execution of §II-A.3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSchedule {
+    /// Permutation of spatial dims, outermost-first traversal order.
+    pub order: Vec<usize>,
+    /// Split factor per spatial dim (aligned to dim index, not order).
+    pub tile: Vec<usize>,
+    /// SIMD width applied to the innermost loop (1 = scalar; 4/8 = vector).
+    pub vector_width: usize,
+    /// Number of outermost loops (in `order`) annotated `parallel`.
+    pub parallel_depth: usize,
+    /// Unroll factor of the innermost loop (1 = none).
+    pub unroll: usize,
+    pub compute: ComputeLoc,
+}
+
+impl StageSchedule {
+    /// The Halide default: compute_root, natural order, no tiling, scalar.
+    pub fn default_for(rank: usize) -> StageSchedule {
+        StageSchedule {
+            order: (0..rank).collect(),
+            tile: vec![1; rank],
+            vector_width: 1,
+            parallel_depth: 0,
+            unroll: 1,
+            compute: ComputeLoc::Root,
+        }
+    }
+
+    /// Innermost spatial dim after reordering.
+    pub fn innermost_dim(&self) -> Option<usize> {
+        self.order.last().copied()
+    }
+
+    /// True if any dim is split.
+    pub fn is_tiled(&self) -> bool {
+        self.tile.iter().any(|&f| f > 1)
+    }
+
+    /// Extents of the loop nest after applying order+tiling to `spatial`,
+    /// outermost-first: [outer loops.., inner loops..]. Inner loops appear
+    /// only for split dims.
+    pub fn loop_extents(&self, spatial: &[usize]) -> Vec<usize> {
+        let mut outer = Vec::new();
+        let mut inner = Vec::new();
+        for &d in &self.order {
+            let extent = spatial[d];
+            let f = self.tile[d].max(1);
+            if f > 1 && f < extent {
+                outer.push(extent.div_ceil(f));
+                inner.push(f);
+            } else {
+                outer.push(extent);
+            }
+        }
+        outer.extend(inner);
+        outer
+    }
+
+    /// Number of parallel tasks this schedule exposes (product of the
+    /// extents of the `parallel_depth` outermost loops).
+    pub fn parallel_tasks(&self, spatial: &[usize]) -> usize {
+        let extents = self.loop_extents(spatial);
+        extents.iter().take(self.parallel_depth).product::<usize>().max(1)
+    }
+}
+
+/// One schedule per stage of a pipeline (index = stage id).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSchedule {
+    pub stages: Vec<StageSchedule>,
+}
+
+impl PipelineSchedule {
+    pub fn default_for(ranks: &[usize]) -> PipelineSchedule {
+        PipelineSchedule {
+            stages: ranks.iter().map(|&r| StageSchedule::default_for(r)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_schedule_shape() {
+        let s = StageSchedule::default_for(3);
+        assert_eq!(s.order, vec![0, 1, 2]);
+        assert_eq!(s.tile, vec![1, 1, 1]);
+        assert_eq!(s.compute, ComputeLoc::Root);
+        assert!(!s.is_tiled());
+    }
+
+    #[test]
+    fn loop_extents_with_split() {
+        let mut s = StageSchedule::default_for(2);
+        s.tile = vec![1, 8];
+        // dims [16, 32], split dim1 by 8 -> loops [16, 4, 8]
+        assert_eq!(s.loop_extents(&[16, 32]), vec![16, 4, 8]);
+    }
+
+    #[test]
+    fn loop_extents_with_reorder_and_split() {
+        let mut s = StageSchedule::default_for(2);
+        s.order = vec![1, 0];
+        s.tile = vec![4, 1];
+        // order [d1, d0], d0 split by 4: outers [32, 4], inners [4]
+        assert_eq!(s.loop_extents(&[16, 32]), vec![32, 4, 4]);
+    }
+
+    #[test]
+    fn split_equal_or_larger_than_extent_is_noop() {
+        let mut s = StageSchedule::default_for(1);
+        s.tile = vec![64];
+        assert_eq!(s.loop_extents(&[64]), vec![64]);
+        s.tile = vec![128];
+        assert_eq!(s.loop_extents(&[64]), vec![64]);
+    }
+
+    #[test]
+    fn parallel_tasks_product_of_outer() {
+        let mut s = StageSchedule::default_for(3);
+        s.parallel_depth = 2;
+        assert_eq!(s.parallel_tasks(&[4, 6, 100]), 24);
+        s.parallel_depth = 0;
+        assert_eq!(s.parallel_tasks(&[4, 6, 100]), 1);
+    }
+
+    #[test]
+    fn nonuniform_split_rounds_up() {
+        let mut s = StageSchedule::default_for(1);
+        s.tile = vec![7];
+        // 30 / 7 -> 5 outer iterations of 7 (last partial)
+        assert_eq!(s.loop_extents(&[30]), vec![5, 7]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Random schedule sampling — the stand-in for the paper's noise-injected
+//! auto-scheduler (§III-A: "By injecting the performance model with random
+//! noise, we can derive multiple schedules for each pipeline").
+//!
+//! Sampling is biased the way real auto-scheduler output is: vectorization
+//! and parallelism are common, deep tilings and exotic reorders are rarer,
+//! and cheap pointwise stages are frequently inlined.
+
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::schedule::legality::check_pipeline;
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
+use crate::util::rng::Rng;
+
+const SPLIT_FACTORS: &[usize] = &[2, 4, 8, 16, 32, 64];
+
+/// Sample a random legal schedule for one stage.
+pub fn random_stage_schedule(
+    nest: &LoopNest,
+    consumers: &[usize],
+    rng: &mut Rng,
+) -> StageSchedule {
+    let rank = nest.spatial.len();
+    let mut s = StageSchedule::default_for(rank);
+
+    // -- compute location
+    if !consumers.is_empty() {
+        let r = rng.f64();
+        if nest.pointwise && nest.reduction.is_empty() && r < 0.35 {
+            s.compute = ComputeLoc::Inline;
+        } else if r < 0.55 {
+            s.compute = ComputeLoc::At {
+                consumer: *rng.choice(consumers),
+                level: rng.gen_range_incl(1, 3),
+            };
+        }
+    }
+
+    // -- reorder (keep natural order 60% of the time)
+    if rank >= 2 && rng.chance(0.4) {
+        // swap a random adjacent pair or fully shuffle (rarely)
+        if rng.chance(0.25) {
+            rng.shuffle(&mut s.order);
+        } else {
+            let i = rng.gen_range(rank - 1);
+            s.order.swap(i, i + 1);
+        }
+    }
+
+    // -- tiling: split up to 2 dims with a factor <= extent
+    let n_splits = rng.categorical(&[0.45, 0.35, 0.20]); // 0,1,2 dims
+    for _ in 0..n_splits {
+        let d = rng.gen_range(rank);
+        let extent = nest.spatial[d];
+        let candidates: Vec<usize> =
+            SPLIT_FACTORS.iter().copied().filter(|&f| f < extent).collect();
+        if !candidates.is_empty() {
+            s.tile[d] = *rng.choice(&candidates);
+        }
+    }
+
+    // -- vectorize the innermost loop when wide enough (very common)
+    let inner = s.innermost_dim().unwrap_or(0);
+    if rank > 0 {
+        let inner_extent = if s.tile[inner] > 1 { s.tile[inner] } else { nest.spatial[inner] };
+        if inner_extent >= 8 && rng.chance(0.7) {
+            s.vector_width = 8;
+        } else if inner_extent >= 4 && rng.chance(0.5) {
+            s.vector_width = 4;
+        }
+    }
+
+    // -- parallelize outer loops (common for big stages)
+    if rank > 0 && nest.points() > 4096.0 {
+        s.parallel_depth = rng.categorical(&[0.25, 0.55, 0.20]); // 0,1,2
+    } else if rank > 0 {
+        s.parallel_depth = rng.categorical(&[0.7, 0.3]); // 0,1
+    }
+    // cap by loop count (legality also checks)
+    s.parallel_depth = s.parallel_depth.min(s.loop_extents(&nest.spatial).len().min(3));
+
+    // -- unroll
+    if rng.chance(0.2) {
+        s.unroll = *rng.choice(&[2usize, 4]);
+    }
+    s
+}
+
+/// Sample a random legal schedule for the whole pipeline.
+///
+/// Stages are scheduled consumer-first (reverse topological order), the way
+/// the Halide auto-scheduler walks the DAG (§II-C.2: "The pipeline is
+/// scheduled stage-by-stage, beginning from the last/output stage").
+pub fn random_pipeline_schedule(
+    p: &Pipeline,
+    nests: &[LoopNest],
+    rng: &mut Rng,
+) -> PipelineSchedule {
+    let consumers = p.consumers();
+    let mut stages: Vec<StageSchedule> = p
+        .stages
+        .iter()
+        .map(|s| StageSchedule::default_for(s.shape.len()))
+        .collect();
+    for id in (0..p.num_stages()).rev() {
+        stages[id] = random_stage_schedule(&nests[id], &consumers[id], rng);
+        // compute_at an inlined consumer is illegal; retarget to Root
+        if let ComputeLoc::At { consumer, .. } = stages[id].compute {
+            if matches!(stages[consumer].compute, ComputeLoc::Inline) {
+                stages[id].compute = ComputeLoc::Root;
+            }
+        }
+    }
+    let sched = PipelineSchedule { stages };
+    debug_assert!(
+        check_pipeline(p, nests, &sched).is_ok(),
+        "sampler produced illegal schedule: {:?}",
+        check_pipeline(p, nests, &sched)
+    );
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::lower::lower_pipeline;
+    use crate::util::propcheck;
+
+    fn sample_pipeline(rng: &mut Rng) -> Pipeline {
+        // small random chain: conv -> relu -> pool -> sigmoid
+        let mut p = Pipeline::new("chain");
+        let h = 8 << rng.gen_range(3); // 8..64
+        let x = p.add_input(vec![1, 3, h, h]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 4 << rng.gen_range(3);
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let mut pool = OpAttrs::default();
+        pool.kernel = (2, 2);
+        pool.stride = 2;
+        pool.pad = 0;
+        let q = p.add_stage("pool", Op::with_attrs(OpKind::MaxPool, pool), vec![r]).unwrap();
+        p.add_stage("sig", Op::new(OpKind::Sigmoid), vec![q]).unwrap();
+        p
+    }
+
+    #[test]
+    fn prop_sampled_schedules_always_legal() {
+        propcheck::check_rng("random schedules legal", 0xBEEF, propcheck::default_cases(), |rng| {
+            let p = sample_pipeline(rng);
+            let nests = lower_pipeline(&p);
+            for _ in 0..8 {
+                let s = random_pipeline_schedule(&p, &nests, rng);
+                check_pipeline(&p, &nests, &s).map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampler_is_deterministic_per_seed() {
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let p = sample_pipeline(&mut Rng::new(1));
+        let nests = lower_pipeline(&p);
+        let a = random_pipeline_schedule(&p, &nests, &mut r1);
+        let b = random_pipeline_schedule(&p, &nests, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sampler_produces_diversity() {
+        let p = sample_pipeline(&mut Rng::new(2));
+        let nests = lower_pipeline(&p);
+        let mut rng = Rng::new(3);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let s = random_pipeline_schedule(&p, &nests, &mut rng);
+            distinct.insert(format!("{s:?}"));
+        }
+        assert!(distinct.len() > 30, "only {} distinct schedules", distinct.len());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-guided schedule search (Fig 2): "the search technique generates a
+//! pool of candidate schedules and uses the performance model to select the
+//! most promising candidates for further exploration."
+
+pub mod beam;
+
+pub use beam::{beam_search, BeamConfig, CostModel, NoisySimCost, SimCost};

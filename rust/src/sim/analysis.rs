@@ -1,0 +1,391 @@
+//! Schedule analysis: turn (pipeline, loop nests, schedule) into per-stage
+//! derived quantities. Shared by the cost model ([`super::cost`]) and the
+//! featurizer ([`crate::features`]) so that features measure the same
+//! effects the machine model charges for — exactly the situation the
+//! paper's hand-engineered features are in with respect to real hardware.
+
+use crate::ir::pipeline::{Pipeline, SourceRef};
+use crate::lower::{AccessPattern, LoopNest, WorkProfile};
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule};
+use crate::sim::Machine;
+
+/// Memory hierarchy level serving a traffic stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    L1,
+    L2,
+    Llc,
+    Dram,
+}
+
+/// One operand's traffic, split into compulsory (cold) and reuse traffic.
+#[derive(Debug, Clone)]
+pub struct Traffic {
+    /// Bytes that must come from `cold_level` once (compulsory misses,
+    /// inflated by poor cache-line utilization).
+    pub cold_bytes: f64,
+    pub cold_level: Level,
+    /// Bytes re-read beyond the first touch, served by `reuse_level`.
+    pub reuse_bytes: f64,
+    pub reuse_level: Level,
+    /// Fraction of each cache line actually used (1.0 = perfect).
+    pub line_utilization: f64,
+}
+
+/// Everything the cost model / featurizer needs to know about one stage
+/// under a given schedule.
+#[derive(Debug, Clone)]
+pub struct StageAnalysis {
+    pub stage_id: usize,
+    /// True when the stage is inlined — its cost is carried by consumers.
+    pub inlined: bool,
+    /// Output points computed, including recompute inflation (≥ nest points).
+    pub points: f64,
+    /// Recompute factor ≥ 1 (inlining multiplicity / compute_at halo).
+    pub recompute: f64,
+    /// Work per output point including work absorbed from inlined producers.
+    pub work: WorkProfile,
+    /// Effective SIMD width for this stage's inner loop.
+    pub vector_width: usize,
+    /// Number of parallel tasks the schedule exposes.
+    pub parallel_tasks: usize,
+    /// Innermost-loop iteration count (drives loop overhead), post
+    /// vectorization/unroll.
+    pub inner_iters: f64,
+    pub unroll: usize,
+    /// Traffic per operand buffer (graph + weights, incl. inlined producers').
+    pub traffic: Vec<Traffic>,
+    /// Bytes written to the stage's own output.
+    pub out_bytes: f64,
+    /// Level absorbing the output writes.
+    pub out_level: Level,
+    /// Heap bytes allocated for the output buffer (0 when inlined or tiled
+    /// into a small pool).
+    pub alloc_bytes: f64,
+    /// Estimated page faults from first-touch of freshly allocated memory.
+    pub page_faults: f64,
+    /// Total unique bytes this stage touches (all operands + output).
+    pub footprint: f64,
+    /// Working-set bytes of one tile (≤ footprint; = footprint when untiled).
+    pub tile_ws: f64,
+}
+
+fn smallest_fitting_level(bytes: f64, m: &Machine) -> Level {
+    if bytes <= m.l1_bytes {
+        Level::L1
+    } else if bytes <= m.l2_bytes {
+        Level::L2
+    } else if bytes <= m.llc_bytes {
+        Level::Llc
+    } else {
+        Level::Dram
+    }
+}
+
+/// Cache-line utilization of an access pattern (f32 elements, 64 B lines).
+fn line_util(pattern: AccessPattern) -> f64 {
+    match pattern {
+        AccessPattern::Contiguous | AccessPattern::Broadcast | AccessPattern::Stencil => 1.0,
+        AccessPattern::Strided(s) => (16.0 / s as f64).min(1.0).max(1.0 / 16.0),
+        AccessPattern::Transposed => 1.0 / 16.0,
+    }
+}
+
+/// Analyze the whole pipeline under `sched`.
+pub fn analyze_pipeline(
+    p: &Pipeline,
+    nests: &[LoopNest],
+    sched: &PipelineSchedule,
+    m: &Machine,
+) -> Vec<StageAnalysis> {
+    let n = p.num_stages();
+    let consumers = p.consumers();
+
+    // --- pass 1: effective (transitively inlined) per-point work and the
+    // operand accesses each stage performs once inlining is resolved.
+    // eff_work[i] / eff_accesses[i] describe computing ONE point of stage i.
+    let mut eff_work: Vec<WorkProfile> = vec![WorkProfile::default(); n];
+    let mut eff_accesses: Vec<Vec<(Option<SourceRef>, f64, f64, AccessPattern)>> = vec![vec![]; n];
+    for i in 0..n {
+        let nest = &nests[i];
+        let mut w = nest.work;
+        let mut accs: Vec<(Option<SourceRef>, f64, f64, AccessPattern)> = Vec::new();
+        for a in &nest.accesses {
+            match a.source {
+                Some(SourceRef::Stage(pid))
+                    if matches!(sched.stages[pid].compute, ComputeLoc::Inline) =>
+                {
+                    // Absorb the inlined producer: its per-point work and its
+                    // own operand reads happen per consumer point. (Stages are
+                    // topologically ordered, so eff_* of pid is final.)
+                    let ratio = a.bytes_per_point / 4.0; // uses per point
+                    w = w.add(&eff_work[pid].scale(ratio));
+                    for (src, fpb, bpp, pat) in &eff_accesses[pid] {
+                        accs.push((*src, *fpb, bpp * ratio, *pat));
+                    }
+                }
+                _ => accs.push((a.source, a.footprint_bytes, a.bytes_per_point, a.pattern)),
+            }
+        }
+        eff_work[i] = w;
+        eff_accesses[i] = accs;
+    }
+
+    // --- pass 2: per-stage analysis
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let nest = &nests[i];
+        let s = &sched.stages[i];
+        let base_points = nest.points();
+
+        if matches!(s.compute, ComputeLoc::Inline) {
+            out.push(StageAnalysis {
+                stage_id: i,
+                inlined: true,
+                points: 0.0,
+                recompute: consumers[i].len().max(1) as f64,
+                work: eff_work[i],
+                vector_width: 1,
+                parallel_tasks: 1,
+                inner_iters: 0.0,
+                unroll: 1,
+                traffic: vec![],
+                out_bytes: 0.0,
+                out_level: Level::L1,
+                alloc_bytes: 0.0,
+                page_faults: 0.0,
+                footprint: 0.0,
+                tile_ws: 0.0,
+            });
+            continue;
+        }
+
+        // recompute from compute_at halo (stencil consumers recompute
+        // producer rows shared between tiles; finer levels → more halo)
+        let recompute = match s.compute {
+            ComputeLoc::At { consumer, level } => {
+                let stencil_consumer = nests[consumer]
+                    .accesses
+                    .iter()
+                    .any(|a| a.source == Some(SourceRef::Stage(i)) && a.pattern == AccessPattern::Stencil);
+                if stencil_consumer {
+                    1.0 + 0.12 * level as f64 * level as f64
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
+        };
+        let points = base_points * recompute;
+
+        // tile working set: fraction of the iteration space one tile covers
+        let tile_frac: f64 = (0..nest.spatial.len())
+            .map(|d| {
+                let f = s.tile[d].max(1);
+                if f > 1 && f < nest.spatial[d] {
+                    f as f64 / nest.spatial[d] as f64
+                } else {
+                    1.0
+                }
+            })
+            .product();
+        // compute_at also confines the producer to the consumer's tile
+        let at_frac = match s.compute {
+            ComputeLoc::At { level, .. } => (0.5f64).powi(2 * level as i32),
+            _ => 1.0,
+        };
+        let eff_tile_frac = (tile_frac * at_frac).min(1.0);
+
+        // traffic per operand
+        let red = nest.red_extent();
+        let mut traffic = Vec::new();
+        let mut footprint = nest.out_bytes;
+        for (src, fp_bytes, bpp, pattern) in &eff_accesses[i] {
+            footprint += fp_bytes;
+            let total_read = bpp * points;
+            let util = line_util(*pattern);
+
+            // where do compulsory misses come from?
+            let cold_level = match src {
+                Some(SourceRef::Stage(pid)) => match sched.stages[*pid].compute {
+                    // producer left its tile in cache for us
+                    ComputeLoc::At { .. } => Level::L2,
+                    _ => {
+                        // materialized buffer: DRAM if it spilled the LLC
+                        smallest_fitting_level(*fp_bytes, m).max(Level::Llc)
+                    }
+                },
+                _ => smallest_fitting_level(*fp_bytes, m).max(Level::Llc),
+            };
+            // poor line utilization fetches whole lines for few useful
+            // bytes: inflate by 1/util, bounded by the line-inflated total
+            let cold_bytes = (fp_bytes / util).min((total_read / util).max(*fp_bytes));
+
+            // reuse traffic: reads beyond first touch, served where the
+            // reuse working set fits. Tiling shrinks the working set.
+            let reuse_bytes = (total_read - fp_bytes).max(0.0);
+            let reuse_ws = match pattern {
+                AccessPattern::Broadcast => *fp_bytes,
+                AccessPattern::Stencil => {
+                    // a few rows of the input stay hot between window steps
+                    (fp_bytes * 0.1).max(4.0 * red)
+                }
+                _ if red > 1.0 => fp_bytes * eff_tile_frac,
+                _ => 64.0,
+            };
+            let reuse_level = smallest_fitting_level(reuse_ws, m);
+            traffic.push(Traffic {
+                cold_bytes,
+                cold_level,
+                reuse_bytes,
+                reuse_level,
+                line_utilization: util,
+            });
+        }
+
+        // output writes + allocation
+        let out_bytes = nest.out_bytes * recompute;
+        let (out_level, alloc_bytes, page_faults) = match s.compute {
+            ComputeLoc::At { .. } => {
+                // tile-sized scratch buffer, reused across tiles
+                let tile_bytes = nest.out_bytes * eff_tile_frac;
+                (smallest_fitting_level(tile_bytes, m), tile_bytes, tile_bytes / 4096.0)
+            }
+            _ => {
+                let lvl = smallest_fitting_level(nest.out_bytes, m);
+                (lvl, nest.out_bytes, nest.out_bytes / 4096.0)
+            }
+        };
+
+        // vector width effective only if the (possibly tiled) inner extent
+        // covers it; legality already checks, so take it as-is
+        let vw = s.vector_width.max(1);
+        let inner_iters = points * red / (vw as f64 * s.unroll as f64);
+
+        out.push(StageAnalysis {
+            stage_id: i,
+            inlined: false,
+            points,
+            recompute,
+            work: eff_work[i],
+            vector_width: vw,
+            parallel_tasks: s.parallel_tasks(&nest.spatial),
+            inner_iters,
+            unroll: s.unroll,
+            traffic,
+            out_bytes,
+            out_level,
+            alloc_bytes,
+            page_faults,
+            footprint,
+            tile_ws: footprint * eff_tile_frac,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::lower::lower_pipeline;
+    use crate::schedule::primitives::PipelineSchedule;
+
+    fn chain() -> (Pipeline, Vec<LoopNest>) {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 32;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        p.add_stage("exp", Op::new(OpKind::Exp), vec![r]).unwrap();
+        let nests = lower_pipeline(&p);
+        (p, nests)
+    }
+
+    fn default_sched(p: &Pipeline) -> PipelineSchedule {
+        PipelineSchedule::default_for(&p.stages.iter().map(|s| s.shape.len()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn default_analysis_sane() {
+        let (p, nests) = chain();
+        let m = Machine::default();
+        let a = analyze_pipeline(&p, &nests, &default_sched(&p), &m);
+        assert_eq!(a.len(), 3);
+        for st in &a {
+            assert!(!st.inlined);
+            assert!(st.points > 0.0);
+            assert_eq!(st.recompute, 1.0);
+            assert!(st.footprint > 0.0);
+        }
+        // conv reads input + weights
+        assert_eq!(a[0].traffic.len(), 2);
+    }
+
+    #[test]
+    fn inlined_relu_work_moves_to_consumer() {
+        let (p, nests) = chain();
+        let m = Machine::default();
+        let mut s = default_sched(&p);
+        s.stages[1].compute = ComputeLoc::Inline;
+        let a = analyze_pipeline(&p, &nests, &s, &m);
+        assert!(a[1].inlined);
+        assert_eq!(a[1].out_bytes, 0.0);
+        // exp stage now carries relu's cmp work
+        assert!(a[2].work.cmp_ops >= 1.0, "absorbed work: {:?}", a[2].work);
+        // and reads conv's buffer directly
+        assert!(a[2]
+            .traffic
+            .iter()
+            .any(|t| t.cold_bytes > 0.0));
+    }
+
+    #[test]
+    fn compute_at_moves_cold_traffic_to_cache() {
+        let (p, nests) = chain();
+        let m = Machine::default();
+        let mut s = default_sched(&p);
+        s.stages[1].compute = ComputeLoc::At { consumer: 2, level: 2 };
+        let a = analyze_pipeline(&p, &nests, &s, &m);
+        // relu's output is a tile-sized scratch buffer now
+        assert!(a[1].alloc_bytes < nests[1].out_bytes);
+        // exp's read of relu comes from L2, not DRAM
+        let t = &a[2].traffic[0];
+        assert_eq!(t.cold_level, Level::L2);
+    }
+
+    #[test]
+    fn tiling_shrinks_reuse_working_set() {
+        // gemm with large K: untiled reuse is DRAM-resident, tiled fits L2
+        let mut p = Pipeline::new("g");
+        let x = p.add_input(vec![512, 4096]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 512;
+        p.add_stage("fc", Op::with_attrs(OpKind::Gemm, attrs), vec![x]).unwrap();
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let mut s = default_sched(&p);
+        let base = analyze_pipeline(&p, &nests, &s, &m);
+        s.stages[0].tile = vec![32, 32];
+        let tiled = analyze_pipeline(&p, &nests, &s, &m);
+        let base_lvl = base[0].traffic[0].reuse_level;
+        let tiled_lvl = tiled[0].traffic[0].reuse_level;
+        assert!(tiled_lvl < base_lvl, "tiled {tiled_lvl:?} !< base {base_lvl:?}");
+    }
+
+    #[test]
+    fn transposed_access_inflates_cold_traffic() {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![2048, 2048]);
+        let mut attrs = OpAttrs::default();
+        attrs.perm = vec![1, 0];
+        p.add_stage("tr", Op::with_attrs(OpKind::Transpose, attrs), vec![x]).unwrap();
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let a = analyze_pipeline(&p, &nests, &default_sched(&p), &m);
+        let t = &a[0].traffic[0];
+        assert!(t.line_utilization < 0.1);
+        assert!(t.cold_bytes > nests[0].accesses[0].footprint_bytes * 10.0);
+    }
+}

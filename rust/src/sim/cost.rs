@@ -1,0 +1,184 @@
+//! Cost model: [`StageAnalysis`] → seconds on a [`Machine`].
+//!
+//! Per stage we compute a compute-side time and a memory-side time and take
+//! the roofline max, then add parallelization, allocation and page-fault
+//! overheads. Pipeline time is the sum over materialized stages (Halide
+//! executes the DAG stage by stage under compute_root granularity).
+
+use crate::sim::analysis::{Level, StageAnalysis};
+use crate::sim::Machine;
+
+/// Cycles per element for long-latency ops, scalar vs vectorized.
+const DIV_CYCLES_SCALAR: f64 = 8.0;
+const DIV_CYCLES_VEC: f64 = 2.0;
+const TRANS_CYCLES_SCALAR: f64 = 16.0;
+const TRANS_CYCLES_VEC: f64 = 4.0;
+/// Loop-control overhead per (post-unroll, post-vectorize) inner iteration.
+const LOOP_CYCLES: f64 = 2.0;
+
+/// Compute-side seconds for one stage on ONE core.
+fn compute_seconds(a: &StageAnalysis, m: &Machine) -> f64 {
+    let w = &a.work;
+    let vec = a.vector_width > 1;
+    let lanes = a.vector_width as f64;
+
+    // FMA-pairable flops
+    let flops = (w.fmul + w.fadd) * a.points;
+    let flop_cycles = if vec {
+        flops / m.vec_flops_per_cycle
+    } else {
+        flops / m.scalar_flops_per_cycle
+    };
+    // divides and transcendentals
+    let div_cycles = w.fdiv * a.points
+        * (if vec { DIV_CYCLES_VEC } else { DIV_CYCLES_SCALAR });
+    let trans_cycles = w.transcendental * a.points
+        * (if vec { TRANS_CYCLES_VEC } else { TRANS_CYCLES_SCALAR });
+    // integer / bool / compare issue on the scalar ports; vectorization
+    // amortizes indexing across lanes
+    let misc = (w.int_ops + w.bool_ops + w.cmp_ops) * a.points
+        / (2.0 * if vec { lanes } else { 1.0 });
+    // loop control
+    let loop_cycles = a.inner_iters * LOOP_CYCLES;
+
+    (flop_cycles + div_cycles + trans_cycles + misc + loop_cycles) / m.freq_hz
+}
+
+fn level_bw(level: Level, m: &Machine, cores_used: f64) -> f64 {
+    match level {
+        // per-core bandwidths scale with cores; shared ones don't
+        Level::L1 => m.l1_bw * cores_used,
+        Level::L2 => m.l2_bw * cores_used,
+        Level::Llc => m.llc_bw,
+        Level::Dram => m.dram_bw,
+    }
+}
+
+/// Memory-side seconds for one stage, given `cores_used` active cores.
+fn memory_seconds(a: &StageAnalysis, m: &Machine, cores_used: f64) -> f64 {
+    let mut t = 0.0;
+    for tr in &a.traffic {
+        t += tr.cold_bytes / level_bw(tr.cold_level, m, cores_used);
+        t += tr.reuse_bytes / level_bw(tr.reuse_level, m, cores_used);
+    }
+    t + a.out_bytes / level_bw(a.out_level, m, cores_used)
+}
+
+/// Seconds for one stage under its schedule.
+pub fn cost_stage(a: &StageAnalysis, m: &Machine) -> f64 {
+    if a.inlined {
+        return 0.0; // carried by consumers
+    }
+    let tasks = a.parallel_tasks.max(1);
+    let cores_used = (tasks.min(m.cores)) as f64;
+    // load imbalance: last wave of tasks may underfill the cores
+    let waves = (tasks as f64 / cores_used).ceil();
+    let efficiency = tasks as f64 / (waves * cores_used);
+
+    let comp = compute_seconds(a, m) / (cores_used * efficiency);
+    let mem = memory_seconds(a, m, cores_used);
+    let roofline = comp.max(mem);
+
+    let task_overhead = if tasks > 1 { tasks as f64 * m.task_overhead_s } else { 0.0 };
+    let alloc_overhead = if a.alloc_bytes > 0.0 { m.malloc_s } else { 0.0 };
+    let fault_overhead = a.page_faults * m.page_fault_s;
+
+    roofline + task_overhead + alloc_overhead + fault_overhead + m.stage_overhead_s
+}
+
+/// Total pipeline seconds.
+pub fn cost_pipeline(analyses: &[StageAnalysis], m: &Machine) -> f64 {
+    analyses.iter().map(|a| cost_stage(a, m)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::WorkProfile;
+
+    fn dummy_analysis(points: f64) -> StageAnalysis {
+        StageAnalysis {
+            stage_id: 0,
+            inlined: false,
+            points,
+            recompute: 1.0,
+            work: WorkProfile { fmul: 1.0, fadd: 1.0, ..Default::default() },
+            vector_width: 1,
+            parallel_tasks: 1,
+            inner_iters: points,
+            unroll: 1,
+            traffic: vec![],
+            out_bytes: points * 4.0,
+            out_level: Level::Dram,
+            alloc_bytes: points * 4.0,
+            page_faults: points * 4.0 / 4096.0,
+            footprint: points * 4.0,
+            tile_ws: points * 4.0,
+        }
+    }
+
+    #[test]
+    fn inlined_stage_costs_nothing() {
+        let mut a = dummy_analysis(1e6);
+        a.inlined = true;
+        assert_eq!(cost_stage(&a, &Machine::default()), 0.0);
+    }
+
+    #[test]
+    fn vectorization_reduces_compute_time() {
+        let m = Machine::default();
+        let mut a = dummy_analysis(1e8);
+        a.out_bytes = 0.0;
+        a.page_faults = 0.0;
+        let scalar = cost_stage(&a, &m);
+        a.vector_width = 8;
+        a.inner_iters = 1e8 / 8.0;
+        let vec = cost_stage(&a, &m);
+        assert!(vec < scalar / 3.0, "scalar={scalar} vec={vec}");
+    }
+
+    #[test]
+    fn parallel_efficiency_with_imbalance() {
+        let m = Machine::default();
+        let mut a = dummy_analysis(1e8);
+        a.page_faults = 0.0;
+        a.out_bytes = 0.0;
+        a.parallel_tasks = 18;
+        let even = cost_stage(&a, &m);
+        a.parallel_tasks = 19; // 2 waves, half-empty second wave
+        let uneven = cost_stage(&a, &m);
+        assert!(uneven > even, "imbalance should hurt: even={even} uneven={uneven}");
+    }
+
+    #[test]
+    fn dram_slower_than_l2() {
+        let m = Machine::default();
+        let mut a = dummy_analysis(1e4);
+        a.work = WorkProfile::default();
+        a.inner_iters = 0.0;
+        a.page_faults = 0.0;
+        a.alloc_bytes = 0.0;
+        a.out_bytes = 0.0;
+        a.traffic = vec![crate::sim::analysis::Traffic {
+            cold_bytes: 1e8,
+            cold_level: Level::Dram,
+            reuse_bytes: 0.0,
+            reuse_level: Level::L1,
+            line_utilization: 1.0,
+        }];
+        let dram = cost_stage(&a, &m);
+        a.traffic[0].cold_level = Level::L2;
+        let l2 = cost_stage(&a, &m);
+        assert!(dram > l2, "dram={dram} l2={l2}");
+    }
+
+    #[test]
+    fn page_faults_add_cost() {
+        let m = Machine::default();
+        let mut a = dummy_analysis(1e6);
+        let with = cost_stage(&a, &m);
+        a.page_faults = 0.0;
+        let without = cost_stage(&a, &m);
+        assert!(with > without);
+    }
+}

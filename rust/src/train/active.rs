@@ -1,0 +1,162 @@
+//! Active learning (paper §VI-B future work: "examine the role active
+//! learning can play … and help retain the same accuracy with a smaller
+//! training set").
+//!
+//! Committee-disagreement acquisition: train the GCN on a seed subset, fit
+//! a cheap GBT committee member on the same subset, and at each round move
+//! the pool samples where the two models disagree most (in log-runtime)
+//! into the labeled set. Compare against random acquisition at equal
+//! budget.
+
+use crate::baselines::gbt::{Gbt, GbtConfig};
+use crate::dataset::sample::Dataset;
+use crate::runtime::GcnRuntime;
+use crate::train::{train, TrainConfig};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct ActiveConfig {
+    /// Initial labeled fraction of the training pool.
+    pub seed_frac: f64,
+    /// Samples acquired per round.
+    pub acquire: usize,
+    pub rounds: usize,
+    /// GCN epochs per round (short — this is a sample-efficiency study).
+    pub epochs_per_round: usize,
+    pub seed: u64,
+}
+
+impl Default for ActiveConfig {
+    fn default() -> Self {
+        ActiveConfig { seed_frac: 0.1, acquire: 1024, rounds: 4, epochs_per_round: 8, seed: 3 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ActiveRound {
+    pub round: usize,
+    pub labeled: usize,
+    pub test_mape_active: f64,
+    pub test_mape_random: f64,
+}
+
+fn subset(ds: &Dataset, idx: &[usize]) -> Dataset {
+    let mut out = Dataset {
+        samples: idx.iter().map(|&i| ds.samples[i].clone()).collect(),
+        stats: None,
+    };
+    out.fit_stats();
+    out
+}
+
+fn eval_mape(rt: &GcnRuntime, params: &crate::runtime::Params, ds: &Dataset, test: &Dataset) -> Result<f64> {
+    let stats = ds.stats.as_ref().unwrap();
+    let refs: Vec<&crate::dataset::sample::GraphSample> = test.samples.iter().collect();
+    let preds = rt.predict_runtimes(params, &refs, stats)?;
+    let truth: Vec<f64> = test.samples.iter().map(|s| s.mean_runtime()).collect();
+    Ok(crate::util::stats::mape(&truth, &preds))
+}
+
+/// Run the active-learning study; returns per-round test MAPE for the
+/// committee-disagreement strategy vs random acquisition.
+pub fn active_learning_study(
+    rt: &GcnRuntime,
+    pool: &Dataset,
+    test: &Dataset,
+    cfg: &ActiveConfig,
+) -> Result<Vec<ActiveRound>> {
+    let mut rng = Rng::new(cfg.seed);
+    let n = pool.len();
+    let n_seed = ((n as f64 * cfg.seed_frac) as usize).max(crate::constants::BATCH);
+
+    let mut all: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut all);
+    let seed_idx: Vec<usize> = all[..n_seed].to_vec();
+
+    let mut labeled_active = seed_idx.clone();
+    let mut pool_active: Vec<usize> = all[n_seed..].to_vec();
+    let mut labeled_random = seed_idx;
+    let mut pool_random: Vec<usize> = all[n_seed..].to_vec();
+
+    let tcfg = TrainConfig {
+        epochs: cfg.epochs_per_round,
+        seed: cfg.seed,
+        patience: cfg.epochs_per_round + 1,
+        verbose: false,
+        eval_every: cfg.epochs_per_round.max(1),
+        ..Default::default()
+    };
+
+    let mut rounds = Vec::new();
+    for round in 0..cfg.rounds {
+        // --- active arm
+        let ds_a = subset(pool, &labeled_active);
+        let res_a = train(rt, &ds_a, test, &tcfg)?;
+        let mape_a = eval_mape(rt, &res_a.params, &ds_a, test)?;
+
+        // --- random arm (same budget)
+        let ds_r = subset(pool, &labeled_random);
+        let res_r = train(rt, &ds_r, test, &tcfg)?;
+        let mape_r = eval_mape(rt, &res_r.params, &ds_r, test)?;
+
+        rounds.push(ActiveRound {
+            round,
+            labeled: labeled_active.len(),
+            test_mape_active: mape_a,
+            test_mape_random: mape_r,
+        });
+
+        if round + 1 == cfg.rounds {
+            break;
+        }
+
+        // --- acquisition: committee disagreement on the remaining pool
+        let stats = ds_a.stats.as_ref().unwrap();
+        let gbt = Gbt::fit(&ds_a, GbtConfig { n_trees: 40, ..Default::default() });
+        let pool_refs: Vec<&crate::dataset::sample::GraphSample> =
+            pool_active.iter().map(|&i| &pool.samples[i]).collect();
+        let gcn_pred = rt.predict_runtimes(&res_a.params, &pool_refs, stats)?;
+        let mut scored: Vec<(usize, f64)> = pool_active
+            .iter()
+            .zip(&gcn_pred)
+            .map(|(&i, &g)| {
+                let t = gbt.predict_sample(&pool.samples[i]);
+                let disagreement = (g.max(1e-12).ln() - t.max(1e-12).ln()).abs();
+                (i, disagreement)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let take = cfg.acquire.min(scored.len());
+        let acquired: Vec<usize> = scored[..take].iter().map(|(i, _)| *i).collect();
+        labeled_active.extend(&acquired);
+        pool_active.retain(|i| !acquired.contains(i));
+
+        // random arm acquires the same count uniformly
+        let take_r = cfg.acquire.min(pool_random.len());
+        for _ in 0..take_r {
+            let j = rng.gen_range(pool_random.len());
+            labeled_random.push(pool_random.swap_remove(j));
+        }
+    }
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_refits_stats() {
+        use crate::dataset::builder::{build_dataset, DataGenConfig};
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 4,
+            seed: 3,
+            ..Default::default()
+        });
+        let sub = subset(&ds, &[0, 3, 7]);
+        assert_eq!(sub.len(), 3);
+        assert!(sub.stats.is_some());
+    }
+}

@@ -1,0 +1,135 @@
+//! Criterion-like micro-benchmark harness (criterion itself is not in the
+//! offline vendor set). Warmup, fixed-duration sampling, and a summary with
+//! mean / median / p95 and throughput.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ns)
+    }
+    pub fn median_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 50.0)
+    }
+    pub fn p95_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 95.0)
+    }
+    pub fn std_ns(&self) -> f64 {
+        crate::util::stats::std_dev(&self.samples_ns)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>12} {:>12} {:>12} {:>10}",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p95_ns()),
+            format!("±{:.1}%", 100.0 * self.std_ns() / self.mean_ns().max(1e-12)),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{:.1} ns", ns)
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then collect samples until
+/// `measure` elapses (at least 10 samples). Each sample times `iters`
+/// consecutive calls, where `iters` is auto-calibrated so one sample takes
+/// roughly 1–10 ms.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let wstart = Instant::now();
+    let mut calib_iters = 0u64;
+    while wstart.elapsed() < warmup || calib_iters == 0 {
+        f();
+        calib_iters += 1;
+    }
+    let per_call_ns = (wstart.elapsed().as_nanos() as f64 / calib_iters as f64).max(1.0);
+    let iters = ((2e6 / per_call_ns).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples = Vec::new();
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure || samples.len() < 10 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        if samples.len() >= 5000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Convenience wrapper with default durations honoring `GCN_PERF_BENCH_FAST`.
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let fast = std::env::var("GCN_PERF_BENCH_FAST").is_ok();
+    let (w, m) = if fast {
+        (Duration::from_millis(50), Duration::from_millis(200))
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(2))
+    };
+    bench(name, w, m, f)
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<42} {:>12} {:>12} {:>12} {:>10}",
+        "benchmark", "mean", "median", "p95", "stddev"
+    )
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench(
+            "noop",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            || {
+                black_box(1 + 1);
+            },
+        );
+        assert!(r.samples_ns.len() >= 10);
+        assert!(r.mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny argument parser: `prog <subcommand> --key value --flag`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(tok) = iter.peek() {
+            if !tok.starts_with("--") {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value or --key value or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --epochs 5 --lr=0.01 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("epochs", 0), 5);
+        assert!((a.f64_or("lr", 0.0) - 0.01).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("eval");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse("gen --fast --out file.bin");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.str_opt("out"), Some("file.bin"));
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free infrastructure.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, rayon, serde, clap,
+//! criterion, proptest) are unavailable. This module provides the small
+//! subset of their functionality the rest of the crate needs.
+
+pub mod rng;
+pub mod threadpool;
+pub mod json;
+pub mod stats;
+pub mod cli;
+pub mod bench;
+pub mod propcheck;
+pub mod progress;

@@ -1,0 +1,69 @@
+//! Terse stderr progress reporting for long-running pipeline stages.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+pub struct Progress {
+    label: String,
+    total: usize,
+    done: AtomicUsize,
+    start: Instant,
+    every: usize,
+    quiet: bool,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize) -> Self {
+        let quiet = std::env::var("GCN_PERF_QUIET").is_ok();
+        Progress {
+            label: label.to_string(),
+            total,
+            done: AtomicUsize::new(0),
+            start: Instant::now(),
+            every: (total / 20).max(1),
+            quiet,
+        }
+    }
+
+    /// Record one completed unit; prints roughly every 5%.
+    pub fn tick(&self) {
+        let d = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.quiet && (d % self.every == 0 || d == self.total) {
+            let elapsed = self.start.elapsed().as_secs_f64();
+            let rate = d as f64 / elapsed.max(1e-9);
+            let eta = (self.total - d) as f64 / rate.max(1e-9);
+            eprintln!(
+                "[{}] {}/{} ({:.0}%) {:.1}/s eta {:.0}s",
+                self.label,
+                d,
+                self.total,
+                100.0 * d as f64 / self.total.max(1) as f64,
+                rate,
+                eta
+            );
+        }
+    }
+
+    pub fn finish(&self) -> f64 {
+        let elapsed = self.start.elapsed().as_secs_f64();
+        if !self.quiet {
+            eprintln!("[{}] done in {:.1}s", self.label, elapsed);
+        }
+        elapsed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_to_completion() {
+        std::env::set_var("GCN_PERF_QUIET", "1");
+        let p = Progress::new("test", 10);
+        for _ in 0..10 {
+            p.tick();
+        }
+        assert!(p.finish() >= 0.0);
+    }
+}

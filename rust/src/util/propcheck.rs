@@ -1,0 +1,82 @@
+//! Lightweight property-based testing (proptest is not in the offline vendor
+//! set). Generates random cases from a seeded `Rng`, reports the failing
+//! seed + iteration so a failure replays deterministically.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (respects `GCN_PERF_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("GCN_PERF_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. Panics with the
+/// seed and case index on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Variant for properties that want the rng themselves (e.g. to drive a
+/// random sequence of operations rather than a single value).
+pub fn check_rng(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        if let Err(msg) = prop(&mut case_rng) {
+            panic!("property '{name}' failed (seed={seed}, case={case}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            "reverse-twice",
+            1,
+            32,
+            |r| (0..r.gen_range(20)).map(|_| r.gen_range(100)).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("reverse∘reverse != id".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 2, 8, |r| r.gen_range(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,120 @@
+//! Summary statistics used by the simulator, evaluation and bench harness.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Coefficient of determination R² of predictions vs observations.
+pub fn r2_score(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let m = mean(y_true);
+    let ss_res: f64 = y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum();
+    let ss_tot: f64 = y_true.iter().map(|t| (t - m) * (t - m)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Mean absolute percentage error: mean(|pred - true| / |true|) * 100.
+pub fn mape(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    let xs: Vec<f64> = y_true
+        .iter()
+        .zip(y_pred)
+        .filter(|(t, _)| t.abs() > 0.0)
+        .map(|(t, p)| ((p - t) / t).abs() * 100.0)
+        .collect();
+    mean(&xs)
+}
+
+/// Maximum absolute percentage error.
+pub fn max_ape(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    y_true
+        .iter()
+        .zip(y_pred)
+        .filter(|(t, _)| t.abs() > 0.0)
+        .map(|(t, p)| ((p - t) / t).abs() * 100.0)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let t = [1.0, 2.0, 3.0, 4.0];
+        assert!((r2_score(&t, &t) - 1.0).abs() < 1e-12);
+        let m = [2.5, 2.5, 2.5, 2.5];
+        assert!(r2_score(&t, &m).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let t = [100.0, 200.0];
+        let p = [110.0, 180.0];
+        assert!((mape(&t, &p) - 10.0).abs() < 1e-9);
+        assert!((max_ape(&t, &p) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_mean_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+}

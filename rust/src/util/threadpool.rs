@@ -1,0 +1,102 @@
+//! Data-parallel helpers built on `std::thread::scope`.
+//!
+//! The dataset pipeline and evaluation harnesses are embarrassingly parallel;
+//! scoped threads with work-stealing-by-chunks cover everything we need
+//! without an external runtime.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (respects `GCN_PERF_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("GCN_PERF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` in parallel, collecting results in
+/// order. Work is claimed one index at a time from a shared atomic counter,
+/// which load-balances well when per-item cost varies (e.g. benchmarking
+/// schedules of very different pipelines).
+pub fn parallel_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                // Short critical section: store one result.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Parallel map over a slice, preserving order.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_indexed(items.len(), |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let v: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&v, |x| x * 2);
+        assert_eq!(out, (0..257).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map_indexed(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        let out = parallel_map_indexed(1, |i| i + 10);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // items with wildly different costs still all complete, in order
+        let out = parallel_map_indexed(64, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i * 1000) {
+                acc = acc.wrapping_add(k as u64);
+            }
+            (i, acc)
+        });
+        for (i, item) in out.iter().enumerate() {
+            assert_eq!(item.0, i);
+        }
+    }
+}

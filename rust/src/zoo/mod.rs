@@ -1,0 +1,429 @@
+//! The nine real-world networks of Fig 9, built from the op set in
+//! [`crate::ir`]: resnet, mobilenet, shufflenet, squeezenet, alexnet, vgg,
+//! unet, wavenet and a transformer block stack.
+//!
+//! Each is a reduced ("-lite") variant sized to the MAX_NODES = 48 stage
+//! budget the GCN artifacts are padded to — the macro-structure (residual
+//! adds, fire modules, channel shuffles, encoder-decoder skips, gated
+//! dilated convs, attention) is preserved; block counts are trimmed.
+//! Input resolutions are reduced accordingly (DESIGN.md §Substitutions).
+
+#[cfg(test)]
+use crate::constants::MAX_NODES;
+use crate::ir::op::{Op, OpAttrs, OpKind};
+use crate::ir::pipeline::{Pipeline, SourceRef};
+
+/// Small builder wrapper so network definitions read like model code.
+struct Net {
+    p: Pipeline,
+}
+
+impl Net {
+    fn new(name: &str) -> Net {
+        Net { p: Pipeline::new(name) }
+    }
+
+    fn input(&mut self, shape: Vec<usize>) -> SourceRef {
+        self.p.add_input(shape)
+    }
+
+    fn conv(&mut self, x: SourceRef, name: &str, out_c: usize, k: usize, stride: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.kernel = (k, k);
+        a.pad = k / 2;
+        a.stride = stride;
+        a.out_channels = out_c;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Conv2d, a), vec![x]).expect(name)
+    }
+
+    fn conv_hw(&mut self, x: SourceRef, name: &str, out_c: usize, kh: usize, kw: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.kernel = (kh, kw);
+        a.pad = 0;
+        a.stride = 1;
+        a.out_channels = out_c;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Conv2d, a), vec![x]).expect(name)
+    }
+
+    fn dwconv(&mut self, x: SourceRef, name: &str, k: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.kernel = (k, k);
+        a.pad = k / 2;
+        a.stride = 1;
+        self.p.add_stage(name, Op::with_attrs(OpKind::DepthwiseConv2d, a), vec![x]).expect(name)
+    }
+
+    fn bn(&mut self, x: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::BatchNorm), vec![x]).expect(name)
+    }
+
+    fn relu(&mut self, x: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::Relu), vec![x]).expect(name)
+    }
+
+    fn unary(&mut self, x: SourceRef, name: &str, kind: OpKind) -> SourceRef {
+        self.p.add_stage(name, Op::new(kind), vec![x]).expect(name)
+    }
+
+    fn pool(&mut self, x: SourceRef, name: &str, k: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.kernel = (k, k);
+        a.stride = k;
+        a.pad = 0;
+        self.p.add_stage(name, Op::with_attrs(OpKind::MaxPool, a), vec![x]).expect(name)
+    }
+
+    fn gap(&mut self, x: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::GlobalAveragePool), vec![x]).expect(name)
+    }
+
+    fn add(&mut self, a: SourceRef, b: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::Add), vec![a, b]).expect(name)
+    }
+
+    fn mul(&mut self, a: SourceRef, b: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::Mul), vec![a, b]).expect(name)
+    }
+
+    fn flatten(&mut self, x: SourceRef, name: &str) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.axis = 1;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Flatten, a), vec![x]).expect(name)
+    }
+
+    fn gemm(&mut self, x: SourceRef, name: &str, out: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.out_channels = out;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Gemm, a), vec![x]).expect(name)
+    }
+
+    fn concat(&mut self, a: SourceRef, b: SourceRef, name: &str, axis: usize) -> SourceRef {
+        let mut at = OpAttrs::default();
+        at.axis = axis;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Concat, at), vec![a, b]).expect(name)
+    }
+
+    fn transpose(&mut self, x: SourceRef, name: &str, perm: Vec<usize>) -> SourceRef {
+        let mut at = OpAttrs::default();
+        at.perm = perm;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Transpose, at), vec![x]).expect(name)
+    }
+
+    fn softmax(&mut self, x: SourceRef, name: &str, axis: usize) -> SourceRef {
+        let mut at = OpAttrs::default();
+        at.axis = axis;
+        self.p.add_stage(name, Op::with_attrs(OpKind::Softmax, at), vec![x]).expect(name)
+    }
+
+    fn upsample(&mut self, x: SourceRef, name: &str) -> SourceRef {
+        let a = OpAttrs::default(); // scale 2
+        self.p.add_stage(name, Op::with_attrs(OpKind::Upsample, a), vec![x]).expect(name)
+    }
+
+    fn matmul(&mut self, a: SourceRef, b: SourceRef, name: &str) -> SourceRef {
+        self.p.add_stage(name, Op::new(OpKind::MatMul), vec![a, b]).expect(name)
+    }
+
+    fn slice_to(&mut self, x: SourceRef, name: &str, axis: usize, num: usize, den: usize) -> SourceRef {
+        let mut a = OpAttrs::default();
+        a.axis = axis;
+        a.slice_frac = (num, den);
+        self.p.add_stage(name, Op::with_attrs(OpKind::Slice, a), vec![x]).expect(name)
+    }
+
+    /// conv → bn → relu, the ubiquitous block.
+    fn cbr(&mut self, x: SourceRef, name: &str, out_c: usize, k: usize, stride: usize) -> SourceRef {
+        let c = self.conv(x, &format!("{name}_conv"), out_c, k, stride);
+        let b = self.bn(c, &format!("{name}_bn"));
+        self.relu(b, &format!("{name}_relu"))
+    }
+
+    /// conv → relu.
+    fn cr(&mut self, x: SourceRef, name: &str, out_c: usize, k: usize, stride: usize) -> SourceRef {
+        let c = self.conv(x, &format!("{name}_conv"), out_c, k, stride);
+        self.relu(c, &format!("{name}_relu"))
+    }
+}
+
+// --------------------------------------------------------------- networks
+
+pub fn alexnet() -> Pipeline {
+    let mut n = Net::new("alexnet");
+    let x = n.input(vec![1, 3, 64, 64]);
+    let c1 = n.cr(x, "c1", 48, 7, 2);
+    let p1 = n.pool(c1, "pool1", 2);
+    let c2 = n.cr(p1, "c2", 96, 5, 1);
+    let p2 = n.pool(c2, "pool2", 2);
+    let c3 = n.cr(p2, "c3", 128, 3, 1);
+    let c4 = n.cr(c3, "c4", 128, 3, 1);
+    let c5 = n.cr(c4, "c5", 96, 3, 1);
+    let p3 = n.pool(c5, "pool3", 2);
+    let f = n.flatten(p3, "flatten");
+    let g1 = n.gemm(f, "fc6", 512);
+    let r1 = n.relu(g1, "relu6");
+    let g2 = n.gemm(r1, "fc7", 256);
+    let r2 = n.relu(g2, "relu7");
+    let g3 = n.gemm(r2, "fc8", 100);
+    n.softmax(g3, "softmax", 1);
+    n.p
+}
+
+pub fn vgg16() -> Pipeline {
+    let mut n = Net::new("vgg16");
+    let x = n.input(vec![1, 3, 64, 64]);
+    let mut cur = x;
+    let blocks: &[(usize, usize)] = &[(32, 2), (64, 2), (128, 2), (128, 2)];
+    for (bi, &(ch, reps)) in blocks.iter().enumerate() {
+        for ci in 0..reps {
+            cur = n.cr(cur, &format!("b{bi}c{ci}"), ch, 3, 1);
+        }
+        cur = n.pool(cur, &format!("pool{bi}"), 2);
+    }
+    let f = n.flatten(cur, "flatten");
+    let g1 = n.gemm(f, "fc1", 512);
+    let r1 = n.relu(g1, "fc1_relu");
+    n.gemm(r1, "fc2", 100);
+    n.p
+}
+
+pub fn resnet18() -> Pipeline {
+    let mut n = Net::new("resnet18");
+    let x = n.input(vec![1, 3, 56, 56]);
+    let stem = n.cbr(x, "stem", 32, 7, 2);
+    let mut cur = n.pool(stem, "stem_pool", 2);
+    let mut ch = 32;
+    for blk in 0..4 {
+        if blk == 2 {
+            ch *= 2;
+            cur = n.conv(cur, &format!("down{blk}"), ch, 1, 1);
+        }
+        let c1 = n.cbr(cur, &format!("b{blk}a"), ch, 3, 1);
+        let c2 = n.conv(c1, &format!("b{blk}b_conv"), ch, 3, 1);
+        let b2 = n.bn(c2, &format!("b{blk}b_bn"));
+        let res = n.add(b2, cur, &format!("b{blk}_add"));
+        cur = n.relu(res, &format!("b{blk}_relu"));
+    }
+    let g = n.gap(cur, "gap");
+    let f = n.flatten(g, "flatten");
+    n.gemm(f, "fc", 100);
+    n.p
+}
+
+pub fn squeezenet() -> Pipeline {
+    let mut n = Net::new("squeezenet");
+    let x = n.input(vec![1, 3, 56, 56]);
+    let stem = n.cr(x, "stem", 48, 3, 2);
+    let mut cur = n.pool(stem, "pool0", 2);
+    for (fi, sq) in [16usize, 16, 24, 24].iter().enumerate() {
+        let s = n.cr(cur, &format!("f{fi}s"), *sq, 1, 1);
+        let e1 = n.cr(s, &format!("f{fi}e1"), sq * 2, 1, 1);
+        let e3 = n.cr(s, &format!("f{fi}e3"), sq * 2, 3, 1);
+        cur = n.concat(e1, e3, &format!("f{fi}cat"), 1);
+        if fi == 1 {
+            cur = n.pool(cur, "pool1", 2);
+        }
+    }
+    let head = n.conv(cur, "head_conv", 100, 1, 1);
+    n.gap(head, "gap");
+    n.p
+}
+
+pub fn mobilenet_v2() -> Pipeline {
+    let mut n = Net::new("mobilenet_v2");
+    let x = n.input(vec![1, 3, 56, 56]);
+    let mut cur = n.cbr(x, "stem", 16, 3, 2);
+    let ch = 16;
+    for blk in 0..3 {
+        let ex = n.cbr(cur, &format!("m{blk}ex"), ch * 4, 1, 1);
+        let dwc = n.dwconv(ex, &format!("m{blk}dw_conv"), 3);
+        let dwb = n.bn(dwc, &format!("m{blk}dw_bn"));
+        let dw = n.relu(dwb, &format!("m{blk}dw_relu"));
+        let prc = n.conv(dw, &format!("m{blk}pr_conv"), ch, 1, 1);
+        let pr = n.bn(prc, &format!("m{blk}pr_bn"));
+        cur = n.add(pr, cur, &format!("m{blk}_add"));
+    }
+    let head = n.cr(cur, "head", 64, 1, 1);
+    let g = n.gap(head, "gap");
+    let f = n.flatten(g, "flatten");
+    n.gemm(f, "fc", 100);
+    n.p
+}
+
+pub fn shufflenet() -> Pipeline {
+    let mut n = Net::new("shufflenet");
+    let x = n.input(vec![1, 3, 56, 56]);
+    let stem = n.cr(x, "stem", 24, 3, 2);
+    let mut cur = n.pool(stem, "stem_pool", 2);
+    for blk in 0..3 {
+        let c1 = n.cbr(cur, &format!("s{blk}a"), 24, 1, 1);
+        // channel shuffle ≈ transpose (C,H) and back in our IR
+        let sh = n.transpose(c1, &format!("s{blk}_shuffle"), vec![0, 2, 1, 3]);
+        let sh2 = n.transpose(sh, &format!("s{blk}_unshuffle"), vec![0, 2, 1, 3]);
+        let dwc = n.dwconv(sh2, &format!("s{blk}dw_conv"), 3);
+        let dw = n.bn(dwc, &format!("s{blk}dw_bn"));
+        let c2c = n.conv(dw, &format!("s{blk}b_conv"), 24, 1, 1);
+        let c2 = n.bn(c2c, &format!("s{blk}b_bn"));
+        let res = n.add(c2, cur, &format!("s{blk}_add"));
+        cur = n.relu(res, &format!("s{blk}_relu"));
+    }
+    let g = n.gap(cur, "gap");
+    let f = n.flatten(g, "flatten");
+    n.gemm(f, "fc", 100);
+    n.p
+}
+
+pub fn unet() -> Pipeline {
+    let mut n = Net::new("unet");
+    let x = n.input(vec![1, 3, 64, 64]);
+    let e1 = n.cr(x, "e1a", 16, 3, 1);
+    let e1b = n.cr(e1, "e1b", 16, 3, 1);
+    let d1 = n.pool(e1b, "down1", 2);
+    let e2 = n.cr(d1, "e2a", 32, 3, 1);
+    let e2b = n.cr(e2, "e2b", 32, 3, 1);
+    let d2 = n.pool(e2b, "down2", 2);
+    let b = n.cr(d2, "bott", 64, 3, 1);
+    let u2 = n.upsample(b, "up2");
+    let cat2 = n.concat(u2, e2b, "cat2", 1);
+    let dc2 = n.cr(cat2, "d2a", 32, 3, 1);
+    let dc2b = n.cr(dc2, "d2b", 32, 3, 1);
+    let u1 = n.upsample(dc2b, "up1");
+    let cat1 = n.concat(u1, e1b, "cat1", 1);
+    let dc1 = n.cr(cat1, "d1a", 16, 3, 1);
+    let dc1b = n.cr(dc1, "d1b", 16, 3, 1);
+    n.conv(dc1b, "out_conv", 1, 1, 1);
+    n.p
+}
+
+pub fn wavenet() -> Pipeline {
+    let mut n = Net::new("wavenet");
+    // 1-D audio as [1, C, 1, T]; causal convs shrink T by kw-1 per layer
+    let x = n.input(vec![1, 16, 1, 256]);
+    let mut cur = n.conv_hw(x, "in_conv", 24, 1, 2);
+    let mut skip: Option<SourceRef> = None;
+    for blk in 0..4 {
+        let f = n.conv_hw(cur, &format!("w{blk}f"), 24, 1, 2);
+        let filt = n.unary(f, &format!("w{blk}tanh"), OpKind::Tanh);
+        let g = n.conv_hw(cur, &format!("w{blk}g"), 24, 1, 2);
+        let gate = n.unary(g, &format!("w{blk}sig"), OpKind::Sigmoid);
+        let gated = n.mul(filt, gate, &format!("w{blk}mul"));
+        let res = n.conv_hw(gated, &format!("w{blk}res"), 24, 1, 1);
+        skip = Some(match skip {
+            None => res,
+            Some(s) => {
+                let s_t = n.p.shape_of(s)[3];
+                let r_t = n.p.shape_of(res)[3];
+                let cut = if s_t != r_t {
+                    n.slice_to(s, &format!("w{blk}cut"), 3, r_t, s_t)
+                } else {
+                    s
+                };
+                n.add(cut, res, &format!("w{blk}skip"))
+            }
+        });
+        cur = res;
+    }
+    let sk = skip.unwrap();
+    let r = n.relu(sk, "post_relu");
+    let h = n.conv_hw(r, "post_conv", 32, 1, 1);
+    let r2 = n.relu(h, "post_relu2");
+    n.conv_hw(r2, "out_conv", 16, 1, 1);
+    n.p
+}
+
+pub fn transformer() -> Pipeline {
+    let mut n = Net::new("transformer");
+    let (t, d) = (64usize, 128usize);
+    let x = n.input(vec![t, d]);
+    let mut cur = x;
+    for blk in 0..2 {
+        let ln = n.unary(cur, &format!("t{blk}_ln1"), OpKind::LayerNorm);
+        let q = n.gemm(ln, &format!("t{blk}_q"), d);
+        let k = n.gemm(ln, &format!("t{blk}_k"), d);
+        let v = n.gemm(ln, &format!("t{blk}_v"), d);
+        let kt = n.transpose(k, &format!("t{blk}_kt"), vec![1, 0]);
+        let scores = n.matmul(q, kt, &format!("t{blk}_qk"));
+        let attn = n.softmax(scores, &format!("t{blk}_sm"), 1);
+        let ctx = n.matmul(attn, v, &format!("t{blk}_av"));
+        let proj = n.gemm(ctx, &format!("t{blk}_proj"), d);
+        let res1 = n.add(proj, cur, &format!("t{blk}_add1"));
+        let ln2 = n.unary(res1, &format!("t{blk}_ln2"), OpKind::LayerNorm);
+        let f1 = n.gemm(ln2, &format!("t{blk}_ff1"), d * 2);
+        let fr = n.relu(f1, &format!("t{blk}_ffr"));
+        let f2 = n.gemm(fr, &format!("t{blk}_ff2"), d);
+        cur = n.add(f2, res1, &format!("t{blk}_add2"));
+    }
+    n.gemm(cur, "head", 100);
+    n.p
+}
+
+/// All nine Fig 9 networks.
+pub fn all_networks() -> Vec<Pipeline> {
+    vec![
+        resnet18(),
+        mobilenet_v2(),
+        shufflenet(),
+        squeezenet(),
+        alexnet(),
+        vgg16(),
+        unet(),
+        wavenet(),
+        transformer(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_valid_and_sized() {
+        for net in all_networks() {
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            assert!(
+                net.num_stages() <= MAX_NODES,
+                "{} has {} stages > {MAX_NODES}",
+                net.name,
+                net.num_stages()
+            );
+            assert!(net.depth() >= 5, "{} depth {} < 5", net.name, net.depth());
+        }
+    }
+
+    #[test]
+    fn nine_distinct_networks() {
+        let nets = all_networks();
+        assert_eq!(nets.len(), 9);
+        let names: std::collections::BTreeSet<&str> =
+            nets.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names.len(), 9);
+    }
+
+    #[test]
+    fn residual_networks_have_joins() {
+        for net in [resnet18(), mobilenet_v2(), shufflenet()] {
+            let has_join = net.stages.iter().any(|s| {
+                s.op.kind == OpKind::Add
+                    && s.inputs
+                        .iter()
+                        .all(|i| matches!(i, crate::ir::pipeline::SourceRef::Stage(_)))
+            });
+            assert!(has_join, "{} lacks residual joins", net.name);
+        }
+    }
+
+    #[test]
+    fn networks_lower_and_schedule() {
+        use crate::lower::lower_pipeline;
+        use crate::schedule::random::random_pipeline_schedule;
+        use crate::sim::{simulate, Machine};
+        use crate::util::rng::Rng;
+        let m = Machine::default();
+        let mut rng = Rng::new(5);
+        for net in all_networks() {
+            let nests = lower_pipeline(&net);
+            let sched = random_pipeline_schedule(&net, &nests, &mut rng);
+            let t = simulate(&net, &nests, &sched, &m);
+            assert!(t.is_finite() && t > 0.0, "{}: t = {t}", net.name);
+        }
+    }
+}
