@@ -1,6 +1,7 @@
 //! Quickstart: the paper's §II linear-layer example end to end —
 //! build a pipeline, apply Halide-style schedules, simulate-benchmark them,
-//! featurize, and (if artifacts are built) run the GCN performance model.
+//! featurize, and run the GCN performance model (the native backend needs
+//! no artifacts and no external runtime).
 //!
 //!     cargo run --release --example quickstart
 
@@ -8,6 +9,7 @@ use gcn_perf::dataset::builder::sample_from_schedule;
 use gcn_perf::ir::op::{Op, OpAttrs, OpKind};
 use gcn_perf::ir::pipeline::Pipeline;
 use gcn_perf::lower::lower_pipeline;
+use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::schedule::primitives::{ComputeLoc, PipelineSchedule};
 use gcn_perf::schedule::random::random_pipeline_schedule;
 use gcn_perf::sim::{simulate, Machine};
@@ -69,32 +71,28 @@ fn main() -> anyhow::Result<()> {
         sample.std_runtime() * 1e6
     );
 
-    // --- GCN inference through PJRT, if artifacts are present
-    let artifacts = Path::new("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        let rt = gcn_perf::runtime::GcnRuntime::load(artifacts, false)?;
-        let params = rt.init_params(42); // untrained — see examples/train_e2e.rs
-        let mut samples = vec![sample];
-        for i in 1..6 {
-            let s = random_pipeline_schedule(&p, &nests, &mut rng);
-            samples.push(sample_from_schedule(&p, &nests, &s, &machine, 0, i, &mut rng));
-        }
-        let mut ds = gcn_perf::dataset::sample::Dataset { samples, stats: None };
-        ds.fit_stats();
-        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
-        let preds = rt.predict_runtimes(&params, &refs, ds.stats.as_ref().unwrap())?;
-        println!("\nGCN (untrained, PJRT {}):", rt.client.platform_name());
-        for (s, pred) in ds.samples.iter().zip(&preds) {
-            println!(
-                "  schedule {}: measured {:>9.1} µs   predicted {:>9.1} µs",
-                s.schedule_id,
-                s.mean_runtime() * 1e6,
-                pred * 1e6
-            );
-        }
-        println!("(train with `gcn-perf train` or examples/train_e2e for real predictions)");
-    } else {
-        println!("\n(artifacts/ not built — run `make artifacts` to try GCN inference)");
+    // --- GCN inference through the Backend trait (native by default;
+    // PJRT if built with `--features pjrt` and artifacts are present)
+    let rt = load_backend(Path::new("artifacts"), false)?;
+    let params = rt.init_params(42); // untrained — see examples/train_e2e.rs
+    let mut samples = vec![sample];
+    for i in 1..6 {
+        let s = random_pipeline_schedule(&p, &nests, &mut rng);
+        samples.push(sample_from_schedule(&p, &nests, &s, &machine, 0, i, &mut rng));
     }
+    let mut ds = gcn_perf::dataset::sample::Dataset { samples, stats: None };
+    ds.fit_stats();
+    let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
+    let preds = rt.predict_runtimes(&params, &refs, ds.stats.as_ref().unwrap())?;
+    println!("\nGCN (untrained, {} backend):", rt.name());
+    for (s, pred) in ds.samples.iter().zip(&preds) {
+        println!(
+            "  schedule {}: measured {:>9.1} µs   predicted {:>9.1} µs",
+            s.schedule_id,
+            s.mean_runtime() * 1e6,
+            pred * 1e6
+        );
+    }
+    println!("(train with `gcn-perf train` or examples/train_e2e for real predictions)");
     Ok(())
 }

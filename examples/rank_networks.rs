@@ -9,18 +9,18 @@
 
 use gcn_perf::eval::harness;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
-use gcn_perf::runtime::{GcnRuntime, Params};
+use gcn_perf::runtime::{load_backend, Backend, Params};
 use gcn_perf::sim::Machine;
 use gcn_perf::util::cli::Args;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
-    let rt = GcnRuntime::load(Path::new("artifacts"), false)?;
+    let rt = load_backend(Path::new("artifacts"), false)?;
 
     let (params, stats) = match (args.str_opt("ckpt"), args.str_opt("data")) {
         (Some(ckpt), Some(data)) => {
-            let params = Params::load(Path::new(ckpt), &rt.manifest)?;
+            let params = Params::load(Path::new(ckpt), rt.manifest())?;
             let ds = gcn_perf::dataset::store::load(Path::new(data))?;
             let (train_ds, _) = ds.split(0.1, 1234);
             (params, train_ds.stats.clone().unwrap())
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let rows = harness::run_fig9(
-        &rt,
+        rt.as_ref(),
         &params,
         &stats,
         &Machine::default(),

@@ -4,8 +4,8 @@
 //!
 //!   1. generate random ONNX-style pipelines, lower, sample schedules,
 //!      benchmark them on the simulated 18-core Xeon;
-//!   2. train the GCN through the AOT PJRT train-step executable,
-//!      logging the loss curve;
+//!   2. train the GCN through the Backend trait (native engine by
+//!      default), logging the loss curve;
 //!   3. fit the Halide-FFN and TVM-GBT baselines on the same data;
 //!   4. report Fig 8 (avg/max error, R²) and Fig 9 (ranking) numbers.
 //!
@@ -17,7 +17,7 @@ use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
 use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
-use gcn_perf::runtime::GcnRuntime;
+use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train, TrainConfig};
 use gcn_perf::util::cli::Args;
@@ -55,12 +55,12 @@ fn main() -> anyhow::Result<()> {
         test_ds.len()
     );
 
-    // ---- 2. train the GCN via PJRT
-    eprintln!("[2/4] training GCN ({epochs} epochs, batch 32, Adagrad lr=0.0075)...");
-    let rt = GcnRuntime::load(Path::new("artifacts"), true)?;
+    // ---- 2. train the GCN through the Backend trait
+    let rt = load_backend(Path::new("artifacts"), true)?;
+    eprintln!("[2/4] training GCN ({epochs} epochs, batch 32, Adagrad, {} backend)...", rt.name());
     let t1 = Instant::now();
     let result = train(
-        &rt,
+        rt.as_ref(),
         &train_ds,
         &test_ds,
         &TrainConfig { epochs, seed: 7, patience: 10, lr, ..Default::default() },
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3 + 4. baselines + Fig 8
     eprintln!("[3/4] fitting baselines + Fig 8 comparison...");
-    let rows = harness::run_fig8(&rt, &result.params, &train_ds, &test_ds, 25, true)?;
+    let rows = harness::run_fig8(rt.as_ref(), &result.params, &train_ds, &test_ds, 25, true)?;
     println!("\nFig 8 — prediction quality on the unseen test split");
     println!("{}", RegressionMetrics::header());
     for r in &rows {
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Fig 9 on the zoo networks
     eprintln!("[4/4] Fig 9 ranking on the 9 real-world networks...");
     let fig9 = harness::run_fig9(
-        &rt,
+        rt.as_ref(),
         &result.params,
         train_ds.stats.as_ref().unwrap(),
         &Machine::default(),

@@ -6,7 +6,8 @@
 //!   features  — §II-C featurization
 //!   dataset   — end-to-end sample generation rate
 //!   baselines — Halide-FFN fwd, TVM-GBT fit/predict (Fig 8 comparators)
-//!   gcn       — PJRT inference / train-step latency (the served model)
+//!   gcn       — native-backend inference / train-step latency (the served
+//!               model); PJRT variants when built with `--features pjrt`
 //!   search    — beam-search step (Fig 2 deployment loop)
 //!
 //! Set GCN_PERF_BENCH_FAST=1 for quick runs.
@@ -18,13 +19,12 @@ use gcn_perf::dataset::builder::{build_dataset, sample_from_schedule, DataGenCon
 use gcn_perf::features::featurize;
 use gcn_perf::lower::lower_pipeline;
 use gcn_perf::model::Batch;
-use gcn_perf::runtime::GcnRuntime;
+use gcn_perf::runtime::{Backend, NativeBackend};
 use gcn_perf::schedule::random::random_pipeline_schedule;
 use gcn_perf::search::{beam_search, BeamConfig, SimCost};
 use gcn_perf::sim::{simulate, Machine};
 use gcn_perf::util::bench::{bench_default, black_box, header, BenchResult};
 use gcn_perf::util::rng::Rng;
-use std::path::Path;
 
 fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
@@ -108,40 +108,48 @@ fn main() {
     }));
 
     // ---------------------------------------------------------------- gcn
-    let artifacts = Path::new("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        let rt = GcnRuntime::load(artifacts, true).expect("load artifacts");
-        let params = rt.init_params(1);
-        let batch = Batch::build(&refs, &stats, &bests);
-        run(bench_default("gcn/pjrt infer (batch 32)", || {
-            black_box(rt.infer(&params, &batch).unwrap());
-        }));
-        let mut p = params.clone();
-        let mut a = p.zeros_like();
-        run(bench_default("gcn/pjrt train step (batch 32)", || {
-            black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
-        }));
-    } else {
-        eprintln!("(artifacts/ missing — skipping gcn PJRT benches)");
-    }
+    let rt = NativeBackend::new();
+    let params = rt.init_params(1);
+    let batch = Batch::build(&refs, &stats, &bests);
+    run(bench_default("gcn/native infer (batch 32)", || {
+        black_box(rt.infer(&params, &batch).unwrap());
+    }));
+    let mut p = params.clone();
+    let mut a = p.zeros_like();
+    run(bench_default("gcn/native train step (batch 32)", || {
+        black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
+    }));
+    let many_refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
+    run(bench_default("gcn/native predict_runtimes (192 samples, parallel)", || {
+        black_box(rt.predict_runtimes(&params, &many_refs, &stats).unwrap());
+    }));
 
-    // A/B: same model lowered without the Pallas kernels (pure jnp) — the
-    // interpret-mode pallas grid becomes an XLA while-loop over the batch,
-    // this variant lets XLA batch the matmuls directly. §Perf evidence for
-    // the CPU-artifact choice (TPU artifacts keep the Pallas path).
-    let ab = Path::new("artifacts_nopallas");
-    if ab.join("manifest.json").exists() {
-        let rt = GcnRuntime::load(ab, true).expect("load A/B artifacts");
-        let params = rt.init_params(1);
-        let batch = Batch::build(&refs, &stats, &bests);
-        run(bench_default("gcn/pjrt infer no-pallas (batch 32)", || {
-            black_box(rt.infer(&params, &batch).unwrap());
-        }));
-        let mut p = params.clone();
-        let mut a = p.zeros_like();
-        run(bench_default("gcn/pjrt train no-pallas (batch 32)", || {
-            black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
-        }));
+    // PJRT benches (require `--features pjrt`, a real xla binding and
+    // built artifacts — see DESIGN.md §Backends). The `artifacts_nopallas`
+    // directory, when built with `aot.py --no-pallas`, gives the
+    // Pallas-vs-jnp lowering A/B for the same model.
+    #[cfg(feature = "pjrt")]
+    for (dir, tag) in [("artifacts", ""), ("artifacts_nopallas", " no-pallas")] {
+        use gcn_perf::runtime::GcnRuntime;
+        let artifacts = std::path::Path::new(dir);
+        if !artifacts.join("manifest.json").exists() {
+            eprintln!("({dir}/ missing — skipping gcn PJRT{tag} benches)");
+            continue;
+        }
+        match GcnRuntime::load(artifacts, true) {
+            Ok(prt) => {
+                let pparams = prt.init_params(1);
+                run(bench_default(&format!("gcn/pjrt infer{tag} (batch 32)"), || {
+                    black_box(prt.infer(&pparams, &batch).unwrap());
+                }));
+                let mut pp = pparams.clone();
+                let mut pa = pp.zeros_like();
+                run(bench_default(&format!("gcn/pjrt train step{tag} (batch 32)"), || {
+                    black_box(prt.train_step(&mut pp, &mut pa, &batch).unwrap());
+                }));
+            }
+            Err(e) => eprintln!("(pjrt unavailable — {e:#})"),
+        }
     }
 
     // -------------------------------------------------------------- search

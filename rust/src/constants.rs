@@ -1,7 +1,20 @@
-//! Dimensions shared between the rust featurizer and the JAX model.
+//! Dimensions shared between the rust featurizer and the GCN model.
 //!
 //! These MUST agree with `python/compile/dims.py`; `runtime::manifest`
-//! cross-checks them against `artifacts/manifest.json` at load time.
+//! cross-checks them against `artifacts/manifest.json` at load time, and
+//! `runtime::native` builds its in-memory manifest directly from them.
+//!
+//! Artifact tensor shapes derived from these dimensions (see
+//! `python/compile/aot.py`):
+//!
+//! * `inv`:  `[BATCH, MAX_NODES, INV_DIM]` — normalized schedule-invariant
+//!   stage features;
+//! * `dep`:  `[BATCH, MAX_NODES, DEP_DIM]` — normalized schedule-dependent
+//!   (+compound) stage features;
+//! * `adj`:  `[BATCH, MAX_NODES, MAX_NODES]` — row-normalized adjacency
+//!   with self loops (A′);
+//! * `mask`: `[BATCH, MAX_NODES]` — 1.0 for real stages, 0.0 for padding;
+//! * output `z`: `[BATCH]` — predicted log-runtime per graph.
 
 /// Schedule-invariant feature vector length (per stage). §II-C.1.
 pub const INV_DIM: usize = 48;
@@ -28,6 +41,13 @@ pub const BENCH_RUNS: usize = 10;
 
 /// Number of hand-crafted terms in the Halide FFN baseline head (Fig 3).
 pub const FFN_TERMS: usize = 27;
+
+/// Adagrad learning rate (§III-C; `dims.LEARNING_RATE`).
+pub const LEARNING_RATE: f64 = 0.0075;
+/// Weight decay added to the gradients before the Adagrad step (§III-C).
+pub const WEIGHT_DECAY: f64 = 1e-4;
+/// Adagrad denominator epsilon (`dims.ADAGRAD_EPS`).
+pub const ADAGRAD_EPS: f64 = 1e-10;
 
 #[cfg(test)]
 mod tests {

@@ -10,7 +10,7 @@ use crate::eval::metrics::{regression_metrics, RegressionMetrics};
 use crate::eval::ranking::{pairwise_ranking_accuracy, RankResult};
 use crate::features::normalize::FeatureStats;
 use crate::lower::lower_pipeline;
-use crate::runtime::{GcnRuntime, Params};
+use crate::runtime::{Backend, Params};
 use crate::schedule::primitives::PipelineSchedule;
 use crate::schedule::random::random_pipeline_schedule;
 use crate::sim::Machine;
@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 /// Fig 8: evaluate the trained GCN + freshly fitted baselines on the test
 /// split. Returns (rows, improvement factors vs GCN).
 pub fn run_fig8(
-    rt: &GcnRuntime,
+    rt: &dyn Backend,
     params: &Params,
     train_ds: &Dataset,
     test_ds: &Dataset,
@@ -31,7 +31,7 @@ pub fn run_fig8(
     let stats = train_ds.stats.as_ref().context("train stats")?;
     let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
 
-    // ours (GCN via PJRT)
+    // ours (GCN through the active backend)
     let refs: Vec<&crate::dataset::sample::GraphSample> = test_ds.samples.iter().collect();
     let gcn_pred = rt.predict_runtimes(params, &refs, stats)?;
     let mut rows = vec![regression_metrics("gcn (ours)", &truth, &gcn_pred)];
@@ -103,7 +103,7 @@ pub fn gbt_online_eval(test_ds: &Dataset) -> (Vec<f64>, Vec<f64>) {
 /// Fig 9: pairwise ranking on the nine zoo networks. `n_schedules` per
 /// network ("several hundred schedules" in the paper; configurable here).
 pub fn run_fig9(
-    rt: &GcnRuntime,
+    rt: &dyn Backend,
     params: &Params,
     stats: &FeatureStats,
     machine: &Machine,

@@ -11,9 +11,11 @@
 //! * a simulated 18-core Xeon benchmarking machine ([`sim`]) standing in for
 //!   the paper's hardware testbed;
 //! * the §II-C featurization ([`features`]) and dataset pipeline ([`dataset`]);
-//! * the PJRT runtime that loads the AOT-compiled JAX/Pallas GCN
-//!   ([`runtime`]), the training driver ([`train`]) and graph batching
-//!   ([`model`]);
+//! * the GCN execution backends behind the [`runtime::Backend`] trait —
+//!   the default pure-Rust native engine and, behind the `pjrt` cargo
+//!   feature, the PJRT path for the AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]) — plus the training driver ([`train`]) and graph
+//!   batching ([`model`]);
 //! * the two baselines from the paper's evaluation ([`baselines`]): the
 //!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
 //! * the evaluation harnesses for Fig 8 and Fig 9 ([`eval`]), the nine

@@ -2,14 +2,15 @@
 //!
 //! Subcommands:
 //!   gen-data   generate a dataset (random pipelines → schedules → sim bench)
-//!   train      train the GCN via the AOT train-step executable
+//!   train      train the GCN (native backend by default; PJRT with the
+//!              `pjrt` feature and built artifacts)
 //!   fig8       regenerate Fig 8 (avg/max error, R² vs Halide + TVM models)
 //!   fig9       regenerate Fig 9 (pairwise ranking on the 9 zoo networks)
 //!   ablate     §III-C conv-depth ablation (0/1/2/4 layers)
 //!   search     model-guided beam search on a zoo network (Fig 2)
-//!   info       artifact / manifest info
+//!   info       backend / manifest info
 //!
-//! Everything is driven from rust; python only built the artifacts.
+//! Everything is driven from rust; python is never on the runtime path.
 
 use anyhow::{bail, Context, Result};
 use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
@@ -19,7 +20,7 @@ use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
 use gcn_perf::onnx_gen::GenConfig;
-use gcn_perf::runtime::{GcnRuntime, Params};
+use gcn_perf::runtime::{load_backend, load_variant_backend, Backend, Params};
 use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train_and_save, TrainConfig};
@@ -118,16 +119,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         test_ds.len(),
         test_ds.num_pipelines()
     );
-    let rt = GcnRuntime::load(&artifacts_dir(args), true)?;
+    let rt = load_backend(&artifacts_dir(args), true)?;
     let cfg = TrainConfig {
         epochs: args.usize_or("epochs", 40),
         seed: args.u64_or("seed", 7),
         patience: args.usize_or("patience", 8),
-        lr: args.f64_or("lr", 0.0075) as f32,
+        lr: args.f64_or("lr", gcn_perf::constants::LEARNING_RATE) as f32,
         ..Default::default()
     };
     let ckpt = PathBuf::from(args.str_or("ckpt", "data/gcn.ckpt"));
-    let result = train_and_save(&rt, &train_ds, &test_ds, &cfg, &ckpt)?;
+    let result = train_and_save(rt.as_ref(), &train_ds, &test_ds, &cfg, &ckpt)?;
     println!(
         "best test MAPE {:.2}% after {} epochs; checkpoint: {}",
         result.best_test_mape,
@@ -137,10 +138,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_runtime_and_params(args: &Args, with_train: bool) -> Result<(GcnRuntime, Params)> {
-    let rt = GcnRuntime::load(&artifacts_dir(args), with_train)?;
+fn load_runtime_and_params(args: &Args, with_train: bool) -> Result<(Box<dyn Backend>, Params)> {
+    let rt = load_backend(&artifacts_dir(args), with_train)?;
     let ckpt = args.str_opt("ckpt").context("--ckpt required")?;
-    let params = Params::load(Path::new(ckpt), &rt.manifest)?;
+    let params = Params::load(Path::new(ckpt), rt.manifest())?;
     Ok((rt, params))
 }
 
@@ -164,7 +165,7 @@ fn cmd_fig8(args: &Args) -> Result<()> {
     let (train_ds, test_ds) = split_dataset(args, &ds);
     let (rt, params) = load_runtime_and_params(args, false)?;
     let mut rows = harness::run_fig8(
-        &rt,
+        rt.as_ref(),
         &params,
         &train_ds,
         &test_ds,
@@ -203,7 +204,7 @@ fn cmd_fig9(args: &Args) -> Result<()> {
     let (rt, params) = load_runtime_and_params(args, false)?;
     let stats = train_ds.stats.as_ref().context("stats")?;
     let rows = harness::run_fig9(
-        &rt,
+        rt.as_ref(),
         &params,
         stats,
         &Machine::default(),
@@ -226,13 +227,12 @@ fn cmd_ablate(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 0.03) as f32;
     let dir = artifacts_dir(args);
     println!("conv-depth ablation (§III-C parametric sweep), {epochs} epochs each, lr {lr}");
-    println!("{:<8} {:>12}", "layers", "test MAPE %");
-    for (suffix, layers) in [("_l0", 0usize), ("_l1", 1), ("", 2), ("_l4", 4)] {
-        let rt = GcnRuntime::load_variant(&dir, suffix, true)
-            .with_context(|| format!("variant {suffix} — build artifacts with --ablation"))?;
-        let mut manifest = rt.manifest.clone();
-        manifest.params = ablation_params(layers);
-        let mut params = Params::init(&manifest, 7);
+    println!("{:<8} {:>12} {:>9}", "layers", "test MAPE %", "backend");
+    for layers in [0usize, 1, 2, 4] {
+        // infallible in the default build (native fallback); the backend
+        // column makes a mixed pjrt/native sweep visible
+        let rt = load_variant_backend(&dir, layers, true)?;
+        let mut params = rt.init_params(7);
         // output-bias init at the train mean log-runtime (as train() does)
         let mean_log_y: f64 = train_ds
             .samples
@@ -267,38 +267,16 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         let preds = rt.predict_runtimes(&params, &refs, test_ds.stats.as_ref().unwrap())?;
         let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
         let mape = gcn_perf::util::stats::mape(&truth, &preds);
-        println!("{:<8} {:>12.2}", layers, mape);
+        println!("{:<8} {:>12.2} {:>9}", layers, mape, rt.name());
     }
     Ok(())
-}
-
-/// Parameter list for an ablation variant (same construction as
-/// `model.param_specs(k)` in python).
-fn ablation_params(layers: usize) -> Vec<gcn_perf::runtime::manifest::ParamSpec> {
-    use gcn_perf::constants::*;
-    use gcn_perf::runtime::manifest::ParamSpec;
-    let mut specs = vec![
-        ParamSpec { name: "w_inv".into(), shape: vec![INV_DIM, EMB_INV] },
-        ParamSpec { name: "b_inv".into(), shape: vec![EMB_INV] },
-        ParamSpec { name: "w_dep".into(), shape: vec![DEP_DIM, EMB_DEP] },
-        ParamSpec { name: "b_dep".into(), shape: vec![EMB_DEP] },
-    ];
-    for k in 0..layers {
-        specs.push(ParamSpec { name: format!("conv{k}_w"), shape: vec![HIDDEN, HIDDEN] });
-        specs.push(ParamSpec { name: format!("conv{k}_b"), shape: vec![HIDDEN] });
-        specs.push(ParamSpec { name: format!("conv{k}_scale"), shape: vec![HIDDEN] });
-        specs.push(ParamSpec { name: format!("conv{k}_shift"), shape: vec![HIDDEN] });
-    }
-    specs.push(ParamSpec { name: "w_out".into(), shape: vec![NODE_DIM * (layers + 1), 1] });
-    specs.push(ParamSpec { name: "b_out".into(), shape: vec![1] });
-    specs
 }
 
 fn cmd_active(args: &Args) -> Result<()> {
     use gcn_perf::train::active::{active_learning_study, ActiveConfig};
     let ds = load_dataset(args)?;
     let (pool, test) = split_dataset(args, &ds);
-    let rt = GcnRuntime::load(&artifacts_dir(args), true)?;
+    let rt = load_backend(&artifacts_dir(args), true)?;
     let cfg = ActiveConfig {
         seed_frac: args.f64_or("seed-frac", 0.1),
         acquire: args.usize_or("acquire", 1024),
@@ -308,7 +286,7 @@ fn cmd_active(args: &Args) -> Result<()> {
     };
     println!("§VI active learning: committee disagreement vs random acquisition");
     println!("{:<7} {:>9} {:>16} {:>16}", "round", "labeled", "active MAPE %", "random MAPE %");
-    for r in active_learning_study(&rt, &pool, &test, &cfg)? {
+    for r in active_learning_study(rt.as_ref(), &pool, &test, &cfg)? {
         println!(
             "{:<7} {:>9} {:>16.2} {:>16.2}",
             r.round, r.labeled, r.test_mape_active, r.test_mape_random
@@ -333,7 +311,7 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     println!("{:<16} {:>14} {:>12}", "machine", "rank acc %", "MAPE %");
     for name in ["xeon_d2191", "desktop_4core", "server_64core"] {
         let machine = Machine::by_name(name).unwrap();
-        let rows = harness::run_fig9(&rt, &params, stats, &machine, schedules, 17)?;
+        let rows = harness::run_fig9(rt.as_ref(), &params, stats, &machine, schedules, 17)?;
         let (rows, avg) = rank_networks(rows);
         // also a MAPE over all the generated samples
         let _ = rows;
@@ -394,9 +372,9 @@ fn cmd_search(args: &Args) -> Result<()> {
 }
 
 /// GCN-backed cost model for beam search: featurize candidates, batch
-/// through the PJRT inference executable.
+/// through the backend's (chunk-parallel) inference path.
 pub struct GcnCost {
-    rt: GcnRuntime,
+    rt: Box<dyn Backend>,
     params: Params,
     stats: gcn_perf::features::normalize::FeatureStats,
     machine: Machine,
@@ -436,8 +414,24 @@ impl CostModel for GcnCost {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let manifest = gcn_perf::runtime::Manifest::load(&dir)?;
-    println!("artifacts: {}", dir.display());
+    let rt = load_backend(&dir, false)?;
+    println!("backend: {}", rt.name());
+    if dir.join("manifest.json").exists() {
+        // parse + validate the on-disk contract (dim-drift fails fast here
+        // even when the native engine is what actually runs)
+        let disk = gcn_perf::runtime::Manifest::load(&dir)?;
+        println!(
+            "artifacts: {} ({} conv layers, {} param tensors, ablation variants {:?})",
+            dir.display(),
+            disk.n_conv,
+            disk.params.len(),
+            disk.ablation_layers
+        );
+    } else {
+        println!("artifacts: none (native backend needs no artifacts)");
+    }
+    // what this binary actually executes
+    let manifest = rt.manifest();
     println!(
         "model: {} conv layers, node dim {}, batch {}, max nodes {}",
         manifest.n_conv, manifest.node_dim, manifest.batch, manifest.max_nodes
@@ -447,8 +441,5 @@ fn cmd_info(args: &Args) -> Result<()> {
         manifest.params.len(),
         manifest.total_param_elems()
     );
-    println!("ablation variants: {:?}", manifest.ablation_layers);
-    let rt = GcnRuntime::load(&dir, false)?;
-    println!("pjrt platform: {}", rt.client.platform_name());
     Ok(())
 }

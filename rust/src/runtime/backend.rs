@@ -1,0 +1,178 @@
+//! The [`Backend`] trait: everything the rest of the system needs from a
+//! GCN execution engine — inference, the Adagrad train step, and batched
+//! runtime prediction.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::NativeBackend`] — the default pure-Rust engine; no
+//!   artifacts, no external runtime, always available;
+//! * `crate::runtime::GcnRuntime` (behind the `pjrt` cargo feature) — the
+//!   PJRT path that executes the AOT HLO artifacts built by
+//!   `python/compile/aot.py`.
+//!
+//! `train/`, `eval/`, `search/` and the examples are written against
+//! `&dyn Backend`, so switching engines is a loader decision, not a code
+//! change.
+
+use crate::constants::BATCH;
+use crate::dataset::sample::GraphSample;
+use crate::features::normalize::FeatureStats;
+use crate::model::Batch;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::params::Params;
+use anyhow::Result;
+use std::path::Path;
+
+/// A GCN execution engine. Object-safe: the training/eval/search layers
+/// hold `&dyn Backend` / `Box<dyn Backend>`.
+pub trait Backend {
+    /// Model dimensions and the flat parameter calling convention.
+    fn manifest(&self) -> &Manifest;
+
+    /// Short identifier for logs ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Predicted log-runtimes for the real samples of the batch
+    /// (`batch.len` values).
+    fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>>;
+
+    /// One Adagrad step with an explicit learning rate; updates `params`
+    /// and `accum` in place and returns the batch loss.
+    fn train_step_lr(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// One Adagrad step at the manifest's learning rate.
+    fn train_step(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &Batch,
+    ) -> Result<f32> {
+        let lr = self.manifest().learning_rate as f32;
+        self.train_step_lr(params, accum, batch, lr)
+    }
+
+    /// Fresh parameters for this backend's manifest (He/zeros/ones init).
+    fn init_params(&self, seed: u64) -> Params {
+        Params::init(self.manifest(), seed)
+    }
+
+    /// Predict mean runtimes in seconds for any number of samples; batches
+    /// are padded internally. Backends may override this to parallelize
+    /// over batch chunks (the native backend does); each chunk must go
+    /// through [`predict_chunk`] so the inference convention stays shared.
+    fn predict_runtimes(
+        &self,
+        params: &Params,
+        samples: &[&GraphSample],
+        stats: &FeatureStats,
+    ) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(BATCH) {
+            out.extend(predict_chunk(self, params, chunk, stats)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Run one padded chunk (≤ `BATCH` samples) through `infer`: α/β loss
+/// weights are irrelevant for inference (fed as ones) and predictions come
+/// back as mean runtimes in seconds (`exp` of the predicted log-runtime).
+/// Shared by the sequential [`Backend::predict_runtimes`] default and the
+/// native backend's parallel override so the two cannot drift.
+pub fn predict_chunk<B: Backend + ?Sized>(
+    backend: &B,
+    params: &Params,
+    chunk: &[&GraphSample],
+    stats: &FeatureStats,
+) -> Result<Vec<f64>> {
+    let best = vec![1.0f64; chunk.len()];
+    let batch = Batch::build(chunk, stats, &best);
+    let z = backend.infer(params, &batch)?;
+    Ok(z.iter().map(|&v| (v as f64).exp()).collect())
+}
+
+/// Load the preferred backend for `artifacts_dir`.
+///
+/// With the `pjrt` feature enabled and artifacts present, the PJRT engine
+/// is tried first and the native engine is the fallback; the default build
+/// always returns the native engine (and needs no artifacts at all).
+pub fn load_backend(artifacts_dir: &Path, with_train: bool) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_dir.join("manifest.json").exists() {
+            match crate::runtime::gcn::GcnRuntime::load(artifacts_dir, with_train) {
+                Ok(rt) => return Ok(Box::new(rt)),
+                Err(e) => {
+                    eprintln!("pjrt backend unavailable ({e:#}); falling back to native")
+                }
+            }
+        }
+    }
+    let _ = (artifacts_dir, with_train);
+    Ok(Box::new(NativeBackend::new()))
+}
+
+/// Load a conv-depth ablation variant (`layers` graph-convolution layers).
+///
+/// Mirrors [`load_backend`]: PJRT variant artifacts when available under
+/// the `pjrt` feature, the native engine otherwise.
+pub fn load_variant_backend(
+    artifacts_dir: &Path,
+    layers: usize,
+    with_train: bool,
+) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_dir.join("manifest.json").exists() {
+            let suffix = if layers == crate::constants::N_CONV {
+                String::new()
+            } else {
+                format!("_l{layers}")
+            };
+            match crate::runtime::gcn::GcnRuntime::load_variant(artifacts_dir, &suffix, with_train)
+            {
+                Ok(mut rt) => {
+                    // variants carry their own parameter lists
+                    rt.manifest.n_conv = layers;
+                    rt.manifest.params = crate::runtime::manifest::param_specs(layers);
+                    return Ok(Box::new(rt));
+                }
+                Err(e) => {
+                    eprintln!("pjrt variant unavailable ({e:#}); falling back to native")
+                }
+            }
+        }
+    }
+    let _ = (artifacts_dir, with_train);
+    Ok(Box::new(NativeBackend::with_layers(layers)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_is_native_without_artifacts() {
+        let dir = std::env::temp_dir().join("gcn_perf_no_artifacts_here");
+        let be = load_backend(&dir, true).unwrap();
+        assert_eq!(be.name(), "native");
+        assert_eq!(be.manifest().n_conv, crate::constants::N_CONV);
+    }
+
+    #[test]
+    fn variant_backend_layer_counts() {
+        let dir = std::env::temp_dir().join("gcn_perf_no_artifacts_here");
+        for layers in [0usize, 1, 2, 4] {
+            let be = load_variant_backend(&dir, layers, false).unwrap();
+            assert_eq!(be.manifest().n_conv, layers);
+            assert_eq!(be.manifest().params.len(), 6 + 4 * layers);
+        }
+    }
+}

@@ -1,12 +1,20 @@
-//! The GCN model runtime: PJRT-compiled infer + train executables.
+//! The PJRT GCN runtime (`pjrt` cargo feature): executes the AOT-compiled
+//! infer + train HLO artifacts.
 //!
-//! Artifact signatures (see `aot.py`):
-//!   infer: (*params, inv, dep, adj, mask) -> (z[B],)
-//!   train: (*params, *accum, inv, dep, adj, mask, log_y, weight,
-//!           sample_mask) -> (*params', *accum', loss)
+//! Artifact signatures (see `aot.py`), with `B = BATCH`, `N = MAX_NODES`:
+//!
+//! * infer: `(*params, inv[B,N,INV_DIM], dep[B,N,DEP_DIM], adj[B,N,N],
+//!   mask[B,N]) -> (z[B],)` — all tensors `f32`, `z` is log-runtime;
+//! * train: `(*params, *accum, inv, dep, adj, mask, log_y[B], weight[B],
+//!   sample_mask[B], lr) -> (*params', *accum', loss)`.
+//!
+//! This module only typechecks against the in-tree `xla` API stub by
+//! default; the [`crate::runtime::load_backend`] loader falls back to the
+//! native backend when PJRT is unavailable at runtime.
 
 use crate::constants::{BATCH, DEP_DIM, INV_DIM, MAX_NODES};
 use crate::model::Batch;
+use crate::runtime::backend::Backend;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::Params;
 use anyhow::{Context, Result};
@@ -51,11 +59,6 @@ impl GcnRuntime {
         Ok(GcnRuntime { client, manifest, infer_exe, train_exe })
     }
 
-    /// Parameter specs for a variant (ablations have their own param lists).
-    pub fn init_params(&self, seed: u64) -> Params {
-        Params::init(&self.manifest, seed)
-    }
-
     fn buffers_for_params(&self, params: &Params) -> Result<Vec<xla::PjRtBuffer>> {
         params
             .values
@@ -76,8 +79,22 @@ impl GcnRuntime {
         ])
     }
 
+}
+
+/// `init_params`, `train_step` and `predict_runtimes` come from the trait
+/// defaults; `predict_runtimes` stays sequential because the PJRT client
+/// is driven from one thread.
+impl Backend for GcnRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
     /// Predicted log-runtimes for the real samples of the batch.
-    pub fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>> {
+    fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>> {
         let mut args = self.buffers_for_params(params)?;
         args.extend(self.batch_buffers(batch)?);
         let result = self.infer_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0]
@@ -87,20 +104,9 @@ impl GcnRuntime {
         Ok(v[..batch.len].to_vec())
     }
 
-    /// One Adagrad step at the paper's lr; updates `params`/`accum` in
-    /// place, returns the batch loss.
-    pub fn train_step(
-        &self,
-        params: &mut Params,
-        accum: &mut Params,
-        batch: &Batch,
-    ) -> Result<f32> {
-        self.train_step_lr(params, accum, batch, self.manifest.learning_rate as f32)
-    }
-
     /// One Adagrad step with an explicit learning rate (runtime input to
     /// the artifact — no re-AOT needed to tune/schedule it).
-    pub fn train_step_lr(
+    fn train_step_lr(
         &self,
         params: &mut Params,
         accum: &mut Params,
@@ -132,24 +138,5 @@ impl GcnRuntime {
         }
         let loss = parts[2 * np].to_vec::<f32>()?[0];
         Ok(loss)
-    }
-
-    /// Predict mean runtimes in seconds for a set of samples (any count —
-    /// batches are padded internally).
-    pub fn predict_runtimes(
-        &self,
-        params: &Params,
-        samples: &[&crate::dataset::sample::GraphSample],
-        stats: &crate::features::normalize::FeatureStats,
-    ) -> Result<Vec<f64>> {
-        let mut out = Vec::with_capacity(samples.len());
-        for chunk in samples.chunks(BATCH) {
-            // α/β are irrelevant for inference; feed zeros
-            let best = vec![1.0f64; chunk.len()];
-            let batch = Batch::build(chunk, stats, &best);
-            let z = self.infer(params, &batch)?;
-            out.extend(z.iter().map(|&v| (v as f64).exp()));
-        }
-        Ok(out)
     }
 }

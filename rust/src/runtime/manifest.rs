@@ -55,7 +55,50 @@ fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
         .collect()
 }
 
+/// Ordered parameter specs for an `n_conv`-layer model — the flat calling
+/// convention shared with `model.param_specs` in `python/compile/model.py`.
+pub fn param_specs(n_conv: usize) -> Vec<ParamSpec> {
+    let mut specs = vec![
+        ParamSpec { name: "w_inv".into(), shape: vec![constants::INV_DIM, constants::EMB_INV] },
+        ParamSpec { name: "b_inv".into(), shape: vec![constants::EMB_INV] },
+        ParamSpec { name: "w_dep".into(), shape: vec![constants::DEP_DIM, constants::EMB_DEP] },
+        ParamSpec { name: "b_dep".into(), shape: vec![constants::EMB_DEP] },
+    ];
+    for k in 0..n_conv {
+        specs.push(ParamSpec {
+            name: format!("conv{k}_w"),
+            shape: vec![constants::HIDDEN, constants::HIDDEN],
+        });
+        specs.push(ParamSpec { name: format!("conv{k}_b"), shape: vec![constants::HIDDEN] });
+        specs.push(ParamSpec { name: format!("conv{k}_scale"), shape: vec![constants::HIDDEN] });
+        specs.push(ParamSpec { name: format!("conv{k}_shift"), shape: vec![constants::HIDDEN] });
+    }
+    specs.push(ParamSpec {
+        name: "w_out".into(),
+        shape: vec![constants::NODE_DIM * (n_conv + 1), 1],
+    });
+    specs.push(ParamSpec { name: "b_out".into(), shape: vec![1] });
+    specs
+}
+
 impl Manifest {
+    /// In-memory manifest for the native backend — no artifact files
+    /// required; dimensions come straight from [`crate::constants`].
+    pub fn native(n_conv: usize) -> Manifest {
+        Manifest {
+            inv_dim: constants::INV_DIM,
+            dep_dim: constants::DEP_DIM,
+            node_dim: constants::NODE_DIM,
+            n_conv,
+            max_nodes: constants::MAX_NODES,
+            batch: constants::BATCH,
+            learning_rate: constants::LEARNING_RATE,
+            weight_decay: constants::WEIGHT_DECAY,
+            params: param_specs(n_conv),
+            ablation_layers: vec![],
+        }
+    }
+
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
         let get = |k: &str| -> Result<usize> {
@@ -156,6 +199,20 @@ mod tests {
             "\"batch\": 7",
         );
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn native_manifest_matches_python_spec() {
+        let m = Manifest::native(2);
+        assert_eq!(m.params.len(), 14);
+        assert_eq!(m.params[0].name, "w_inv");
+        assert_eq!(m.params[4].name, "conv0_w");
+        assert_eq!(m.params[12].name, "w_out");
+        assert_eq!(m.params[12].shape, vec![crate::constants::READOUT, 1]);
+        assert_eq!(m.params[13].name, "b_out");
+        assert_eq!(Manifest::native(0).params.len(), 6);
+        assert_eq!(Manifest::native(4).params.len(), 22);
+        m.check_against_constants().unwrap();
     }
 
     #[test]

@@ -1,11 +1,26 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compile them on the CPU PJRT client, and drive
-//! inference / training from rust. Python is never on this path.
+//! GCN execution backends behind the [`Backend`] trait.
+//!
+//! * [`native`] — the default pure-Rust engine (no artifacts, no external
+//!   runtime); implements the forward pass and the Adagrad train step with
+//!   the exact artifact semantics of `python/compile/aot.py`.
+//! * `gcn` (behind the `pjrt` cargo feature) — loads the AOT HLO-text
+//!   artifacts produced by `python/compile/aot.py`, compiles them on the
+//!   PJRT CPU client and drives inference/training through XLA.
+//!
+//! Use [`load_backend`] / [`load_variant_backend`] to get the right engine
+//! for the current build; python is never on either path at runtime.
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
 pub mod params;
+
+#[cfg(feature = "pjrt")]
 pub mod gcn;
 
+pub use backend::{load_backend, load_variant_backend, Backend};
+#[cfg(feature = "pjrt")]
 pub use gcn::GcnRuntime;
 pub use manifest::Manifest;
+pub use native::NativeBackend;
 pub use params::Params;

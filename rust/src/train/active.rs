@@ -10,7 +10,7 @@
 
 use crate::baselines::gbt::{Gbt, GbtConfig};
 use crate::dataset::sample::Dataset;
-use crate::runtime::GcnRuntime;
+use crate::runtime::Backend;
 use crate::train::{train, TrainConfig};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -50,7 +50,7 @@ fn subset(ds: &Dataset, idx: &[usize]) -> Dataset {
     out
 }
 
-fn eval_mape(rt: &GcnRuntime, params: &crate::runtime::Params, ds: &Dataset, test: &Dataset) -> Result<f64> {
+fn eval_mape(rt: &dyn Backend, params: &crate::runtime::Params, ds: &Dataset, test: &Dataset) -> Result<f64> {
     let stats = ds.stats.as_ref().unwrap();
     let refs: Vec<&crate::dataset::sample::GraphSample> = test.samples.iter().collect();
     let preds = rt.predict_runtimes(params, &refs, stats)?;
@@ -61,7 +61,7 @@ fn eval_mape(rt: &GcnRuntime, params: &crate::runtime::Params, ds: &Dataset, tes
 /// Run the active-learning study; returns per-round test MAPE for the
 /// committee-disagreement strategy vs random acquisition.
 pub fn active_learning_study(
-    rt: &GcnRuntime,
+    rt: &dyn Backend,
     pool: &Dataset,
     test: &Dataset,
     cfg: &ActiveConfig,

@@ -1,4 +1,4 @@
-//! Training driver: mini-batch epochs over the PJRT train-step executable,
+//! Training driver: mini-batch epochs over any [`Backend`] train step,
 //! test-set evaluation, early stopping and checkpointing.
 
 pub mod active;
@@ -6,7 +6,7 @@ pub mod active;
 use crate::constants::BATCH;
 use crate::dataset::sample::Dataset;
 use crate::model::Batch;
-use crate::runtime::{GcnRuntime, Params};
+use crate::runtime::{Backend, Params};
 use crate::util::rng::Rng;
 use crate::util::stats;
 use anyhow::{Context, Result};
@@ -33,7 +33,7 @@ impl Default for TrainConfig {
             patience: 8,
             eval_every: 1,
             verbose: true,
-            lr: 0.0075,
+            lr: crate::constants::LEARNING_RATE as f32,
         }
     }
 }
@@ -70,7 +70,7 @@ fn epoch_batches<'a>(
 }
 
 /// Mean-absolute-percentage error of the runtime predictions on `ds`.
-pub fn evaluate_mape(rt: &GcnRuntime, params: &Params, ds: &Dataset) -> Result<f64> {
+pub fn evaluate_mape(rt: &dyn Backend, params: &Params, ds: &Dataset) -> Result<f64> {
     let stats = ds.stats.as_ref().context("dataset stats")?;
     let refs: Vec<&crate::dataset::sample::GraphSample> = ds.samples.iter().collect();
     let preds = rt.predict_runtimes(params, &refs, stats)?;
@@ -81,7 +81,7 @@ pub fn evaluate_mape(rt: &GcnRuntime, params: &Params, ds: &Dataset) -> Result<f
 /// Train the GCN on `train`, tracking MAPE on `test`; returns the params
 /// from the best epoch.
 pub fn train(
-    rt: &GcnRuntime,
+    rt: &dyn Backend,
     train_ds: &Dataset,
     test_ds: &Dataset,
     cfg: &TrainConfig,
@@ -154,7 +154,7 @@ pub fn train(
 
 /// Convenience: train and checkpoint.
 pub fn train_and_save(
-    rt: &GcnRuntime,
+    rt: &dyn Backend,
     train_ds: &Dataset,
     test_ds: &Dataset,
     cfg: &TrainConfig,

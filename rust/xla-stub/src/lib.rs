@@ -1,0 +1,132 @@
+//! API stub of the `xla` (xla-rs) PJRT binding.
+//!
+//! This crate exists so `cargo check --features pjrt` typechecks the PJRT
+//! backend (`runtime::gcn`) in environments without the real XLA runtime:
+//! every constructor returns an error at runtime, and the higher-level
+//! backend loader falls back to the pure-Rust native backend. To execute
+//! the AOT HLO artifacts for real, point the `xla` dependency in
+//! `Cargo.toml` at an actual xla-rs checkout — the surface here mirrors
+//! the subset of its API that `runtime::gcn` uses.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: a plain message, usable with `?`
+/// under `anyhow`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime not available in this build (offline xla stub; \
+         link a real xla-rs binding to execute HLO artifacts)"
+            .to_string(),
+    ))
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (as emitted by `python/compile/aot.py`).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation ready for compilation (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A PJRT client (stub of the CPU client).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Construct the CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    /// Upload a host buffer with the given dimensions to the device.
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with buffer arguments; returns per-device output buffers.
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A host-side literal value (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Unwrap a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}

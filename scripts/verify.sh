@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification, exactly what CI runs. Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (deny rustdoc warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> cargo check --features pjrt --all-targets"
+cargo check --features pjrt --all-targets --quiet
+
+echo "verify: OK"
