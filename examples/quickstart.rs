@@ -9,6 +9,7 @@ use gcn_perf::dataset::builder::sample_from_schedule;
 use gcn_perf::ir::op::{Op, OpAttrs, OpKind};
 use gcn_perf::ir::pipeline::Pipeline;
 use gcn_perf::lower::lower_pipeline;
+use gcn_perf::predictor::{GcnPredictor, Predictor};
 use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::schedule::primitives::{ComputeLoc, PipelineSchedule};
 use gcn_perf::schedule::random::random_pipeline_schedule;
@@ -71,9 +72,11 @@ fn main() -> anyhow::Result<()> {
         sample.std_runtime() * 1e6
     );
 
-    // --- GCN inference through the Backend trait (native by default;
-    // PJRT if built with `--features pjrt` and artifacts are present)
-    let rt = load_backend(Path::new("artifacts"), false)?;
+    // --- GCN inference through a Predictor session (native backend by
+    // default; PJRT if built with `--features pjrt` and artifacts exist).
+    // The session owns backend + params + stats and is what `gcn-perf
+    // train` saves as a single-file bundle.
+    let rt = load_backend(Path::new("artifacts"), false)?.warn_to_stderr();
     let params = rt.init_params(42); // untrained — see examples/train_e2e.rs
     let mut samples = vec![sample];
     for i in 1..6 {
@@ -82,9 +85,11 @@ fn main() -> anyhow::Result<()> {
     }
     let mut ds = gcn_perf::dataset::sample::Dataset { samples, stats: None };
     ds.fit_stats();
+    let stats = ds.stats.clone().unwrap();
+    let session = GcnPredictor::new(rt, params, stats);
     let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
-    let preds = rt.predict_runtimes(&params, &refs, ds.stats.as_ref().unwrap())?;
-    println!("\nGCN (untrained, {} backend):", rt.name());
+    let preds = session.predict(&refs)?;
+    println!("\nGCN (untrained, {} backend):", session.backend().name());
     for (s, pred) in ds.samples.iter().zip(&preds) {
         println!(
             "  schedule {}: measured {:>9.1} µs   predicted {:>9.1} µs",
@@ -93,6 +98,18 @@ fn main() -> anyhow::Result<()> {
             pred * 1e6
         );
     }
+
+    // the session round-trips through a single-file model bundle; bundles
+    // always reload onto the native backend, so compare at the documented
+    // pjrt/native parity tolerance (bit-exact in the default build)
+    let bundle = std::env::temp_dir().join("quickstart_gcn.bundle");
+    session.save(&bundle)?;
+    let reloaded = GcnPredictor::load(&bundle)?;
+    for (a, b) in session.predict(&refs)?.iter().zip(&reloaded.predict(&refs)?) {
+        assert!((a - b).abs() <= 1e-3 * a.abs().max(1e-12), "round trip drift: {a} vs {b}");
+    }
+    println!("bundle round trip OK: {}", bundle.display());
+    std::fs::remove_file(&bundle).ok();
     println!("(train with `gcn-perf train` or examples/train_e2e for real predictions)");
     Ok(())
 }

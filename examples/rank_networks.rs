@@ -1,32 +1,28 @@
 //! Fig 9 standalone driver: pairwise ranking of schedules on the nine
-//! real-world networks with a trained GCN checkpoint.
+//! real-world networks with a trained GCN bundle.
 //!
 //!     cargo run --release --example rank_networks -- \
-//!         --data data/dataset.bin --ckpt data/gcn.ckpt [--schedules 100]
+//!         --bundle data/gcn.bundle [--schedules 100]
 //!
-//! Without --ckpt it falls back to untrained parameters, which documents
+//! Without --bundle it falls back to an untrained session, which documents
 //! the null baseline (≈50% ranking accuracy = coin flip).
 
 use gcn_perf::eval::harness;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
-use gcn_perf::runtime::{load_backend, Backend, Params};
+use gcn_perf::predictor::GcnPredictor;
+use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::sim::Machine;
 use gcn_perf::util::cli::Args;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
-    let rt = load_backend(Path::new("artifacts"), false)?;
 
-    let (params, stats) = match (args.str_opt("ckpt"), args.str_opt("data")) {
-        (Some(ckpt), Some(data)) => {
-            let params = Params::load(Path::new(ckpt), rt.manifest())?;
-            let ds = gcn_perf::dataset::store::load(Path::new(data))?;
-            let (train_ds, _) = ds.split(0.1, 1234);
-            (params, train_ds.stats.clone().unwrap())
-        }
-        _ => {
-            eprintln!("no --ckpt/--data given: using UNTRAINED params (expect ~50%)");
+    let gcn = match args.str_opt("bundle").or_else(|| args.str_opt("ckpt")) {
+        Some(bundle) => GcnPredictor::load(Path::new(bundle))?,
+        None => {
+            eprintln!("no --bundle given: using an UNTRAINED session (expect ~50%)");
+            let rt = load_backend(Path::new("artifacts"), false)?.warn_to_stderr();
             // identity-ish stats from a tiny generated set
             let ds = gcn_perf::dataset::builder::build_dataset(
                 &gcn_perf::dataset::builder::DataGenConfig {
@@ -36,14 +32,13 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 },
             );
-            (rt.init_params(42), ds.stats.clone().unwrap())
+            let params = rt.init_params(42);
+            GcnPredictor::new(rt, params, ds.stats.clone().unwrap())
         }
     };
 
     let rows = harness::run_fig9(
-        rt.as_ref(),
-        &params,
-        &stats,
+        &gcn,
         &Machine::default(),
         args.usize_or("schedules", 100),
         args.u64_or("seed", 5),

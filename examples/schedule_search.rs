@@ -73,6 +73,10 @@ fn main() -> anyhow::Result<()> {
             default_t / oracle_t
         );
     }
-    println!("\n(speedup = default / oracle-beam; the GCN-guided variant is `gcn-perf search --model gcn`)");
+    println!(
+        "\n(speedup = default / oracle-beam; model-guided variants run through the \
+         Predictor registry with a cached cost model: `gcn-perf search --model \
+         gcn|ffn|rnn|gbt`)"
+    );
     Ok(())
 }

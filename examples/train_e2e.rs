@@ -17,6 +17,7 @@ use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
 use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
+use gcn_perf::predictor::{GcnPredictor, Predictor};
 use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train, TrainConfig};
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 2. train the GCN through the Backend trait
-    let rt = load_backend(Path::new("artifacts"), true)?;
+    let rt = load_backend(Path::new("artifacts"), true)?.warn_to_stderr();
     eprintln!("[2/4] training GCN ({epochs} epochs, batch 32, Adagrad, {} backend)...", rt.name());
     let t1 = Instant::now();
     let result = train(
@@ -77,9 +78,13 @@ fn main() -> anyhow::Result<()> {
             .join(" → ")
     );
 
+    // wrap the trained model in a Predictor session; everything downstream
+    // (Fig 8, Fig 9, the saved bundle) speaks to this one interface
+    let gcn = GcnPredictor::new(rt, result.params.clone(), train_ds.stats.clone().unwrap());
+
     // ---- 3 + 4. baselines + Fig 8
     eprintln!("[3/4] fitting baselines + Fig 8 comparison...");
-    let rows = harness::run_fig8(rt.as_ref(), &result.params, &train_ds, &test_ds, 25, true)?;
+    let rows = harness::run_fig8(&gcn, &train_ds, &test_ds, 25, true)?;
     println!("\nFig 8 — prediction quality on the unseen test split");
     println!("{}", RegressionMetrics::header());
     for r in &rows {
@@ -93,14 +98,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Fig 9 on the zoo networks
     eprintln!("[4/4] Fig 9 ranking on the 9 real-world networks...");
-    let fig9 = harness::run_fig9(
-        rt.as_ref(),
-        &result.params,
-        train_ds.stats.as_ref().unwrap(),
-        &Machine::default(),
-        fig9_schedules,
-        5,
-    )?;
+    let fig9 = harness::run_fig9(&gcn, &Machine::default(), fig9_schedules, 5)?;
     let (fig9, avg) = rank_networks(fig9);
     println!("\nFig 9 — pairwise ranking accuracy");
     println!("{}", RankResult::header());
@@ -110,6 +108,7 @@ fn main() -> anyhow::Result<()> {
     println!("{:<14} {:>10} {:>10} {:>10.1}%  (paper avg ≈75%)", "AVERAGE", "", "", avg);
 
     harness::write_report(Path::new("results/train_e2e.json"), &rows, &fig9, avg)?;
-    println!("\nreport: results/train_e2e.json");
+    gcn.save(Path::new("results/gcn.bundle"))?;
+    println!("\nreport: results/train_e2e.json   bundle: results/gcn.bundle");
     Ok(())
 }

@@ -19,9 +19,10 @@ use gcn_perf::dataset::builder::{build_dataset, sample_from_schedule, DataGenCon
 use gcn_perf::features::featurize;
 use gcn_perf::lower::lower_pipeline;
 use gcn_perf::model::Batch;
+use gcn_perf::predictor::GcnPredictor;
 use gcn_perf::runtime::{Backend, NativeBackend};
 use gcn_perf::schedule::random::random_pipeline_schedule;
-use gcn_perf::search::{beam_search, BeamConfig, SimCost};
+use gcn_perf::search::{beam_search, BeamConfig, CostModel, PredictorCost, SimCost};
 use gcn_perf::sim::{simulate, Machine};
 use gcn_perf::util::bench::{bench_default, black_box, header, BenchResult};
 use gcn_perf::util::rng::Rng;
@@ -163,6 +164,27 @@ fn main() {
             &oracle,
             &BeamConfig { beam_width: 2, candidates_per_stage: 4, seed: 1 },
         ));
+    }));
+
+    // cached vs uncached predictor-cost scoring: the same 16 schedules
+    // re-scored every call models beam re-scoring surviving states
+    let mut srng = Rng::new(4);
+    let scheds16: Vec<_> = (0..16)
+        .map(|_| random_pipeline_schedule(&unet, &unests, &mut srng))
+        .collect();
+    let mk_gcn = || {
+        let be = NativeBackend::new();
+        let p = be.init_params(1);
+        GcnPredictor::new(Box::new(be), p, stats.clone())
+    };
+    let uncached = PredictorCost::uncached(Box::new(mk_gcn()), machine.clone());
+    run(bench_default("search/predictor-cost uncached (16 scheds)", || {
+        black_box(uncached.score(&unet, &unests, &scheds16));
+    }));
+    let cached = PredictorCost::new(Box::new(mk_gcn()), machine.clone());
+    black_box(cached.score(&unet, &unests, &scheds16)); // warm the cache
+    run(bench_default("search/predictor-cost cached (16 scheds)", || {
+        black_box(cached.score(&unet, &unests, &scheds16));
     }));
 
     // summary for EXPERIMENTS.md §Perf

@@ -8,9 +8,9 @@
 //! per-stage features, and the model regresses log-runtime with squared
 //! error (predictions are exponentiated back to seconds).
 
-use crate::baselines::PerfModel;
 use crate::constants::{DEP_DIM, INV_DIM};
 use crate::dataset::sample::{Dataset, GraphSample};
+use anyhow::{bail, Result};
 
 pub const GBT_FEATS: usize = 3 * (INV_DIM + DEP_DIM) + 2;
 
@@ -174,6 +174,80 @@ impl Gbt {
     pub fn bin_count(&self) -> usize {
         self.bins.iter().map(|b| b.len()).sum()
     }
+
+    pub fn base(&self) -> f32 {
+        self.base
+    }
+
+    /// Flatten each tree to `[tag, feat, threshold/value, left, right]`
+    /// rows (tag 0 = leaf with its value in slot 2; tag 1 = split) — for
+    /// bundle serialization by `predictor::GbtPredictor`.
+    pub fn export_trees(&self) -> Vec<Vec<[f32; 5]>> {
+        self.trees
+            .iter()
+            .map(|t| {
+                t.nodes
+                    .iter()
+                    .map(|n| match n {
+                        Node::Leaf(v) => [0.0, 0.0, *v, 0.0, 0.0],
+                        Node::Split { feat, threshold, left, right } => {
+                            [1.0, *feat as f32, *threshold, *left as f32, *right as f32]
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Rebuild from flattened trees (inverse of [`Self::export_trees`]).
+    /// Bins are fit-time state only and come back empty. Child indices are
+    /// validated so a corrupt bundle fails here, not by panicking in
+    /// `predict`.
+    pub fn from_export(cfg: GbtConfig, base: f32, trees: Vec<Vec<[f32; 5]>>) -> Result<Gbt> {
+        let mut parsed = Vec::with_capacity(trees.len());
+        for (ti, rows) in trees.iter().enumerate() {
+            let mut nodes = Vec::with_capacity(rows.len());
+            for (ni, row) in rows.iter().enumerate() {
+                let node = match row[0] {
+                    t if t == 0.0 => Node::Leaf(row[2]),
+                    t if t == 1.0 => {
+                        let (left, right) = (row[3] as usize, row[4] as usize);
+                        if left >= rows.len() || right >= rows.len() {
+                            bail!(
+                                "gbt tree {ti} node {ni}: child index out of range \
+                                 ({left}/{right} of {})",
+                                rows.len()
+                            );
+                        }
+                        // children always follow their parent (build_node
+                        // pushes the placeholder first), so forward-only
+                        // links also rule out cycles in `Tree::predict`
+                        if left <= ni || right <= ni {
+                            bail!(
+                                "gbt tree {ti} node {ni}: child index must be forward \
+                                 (got {left}/{right})"
+                            );
+                        }
+                        let feat = row[1] as usize;
+                        if feat >= GBT_FEATS {
+                            bail!(
+                                "gbt tree {ti} node {ni}: feature index {feat} out of \
+                                 range (this build has {GBT_FEATS} features)"
+                            );
+                        }
+                        Node::Split { feat, threshold: row[2], left, right }
+                    }
+                    other => bail!("gbt tree {ti} node {ni}: unknown node tag {other}"),
+                };
+                nodes.push(node);
+            }
+            if nodes.is_empty() {
+                bail!("gbt tree {ti} is empty");
+            }
+            parsed.push(Tree { nodes });
+        }
+        Ok(Gbt { cfg, base, trees: parsed, bins: Vec::new() })
+    }
 }
 
 /// Recursively grow one node; returns its index in `nodes`.
@@ -239,15 +313,6 @@ fn build_node(ctx: &BuildCtx, idx: &[u32], depth: usize, nodes: &mut Vec<Node>) 
             nodes[me] = Node::Split { feat, threshold, left, right };
             me
         }
-    }
-}
-
-impl PerfModel for Gbt {
-    fn predict(&self, ds: &Dataset) -> Vec<f64> {
-        ds.samples.iter().map(|s| self.predict_sample(s)).collect()
-    }
-    fn name(&self) -> &'static str {
-        "tvm-gbt"
     }
 }
 
@@ -327,7 +392,7 @@ mod tests {
         });
         let gbt = Gbt::fit(&ds, GbtConfig { n_trees: 40, ..Default::default() });
         let truth: Vec<f64> = ds.samples.iter().map(|s| s.mean_runtime()).collect();
-        let preds = gbt.predict(&ds);
+        let preds: Vec<f64> = ds.samples.iter().map(|s| gbt.predict_sample(s)).collect();
         let log_t: Vec<f64> = truth.iter().map(|t| t.ln()).collect();
         let log_p: Vec<f64> = preds.iter().map(|p| p.ln()).collect();
         let r2 = crate::util::stats::r2_score(&log_t, &log_p);

@@ -9,7 +9,6 @@
 //! and the pipeline runtime is the sum over stages.
 
 use crate::baselines::nn::Linear;
-use crate::baselines::PerfModel;
 use crate::constants::{DEP_DIM, FFN_TERMS, INV_DIM};
 use crate::dataset::sample::{Dataset, GraphSample};
 use crate::features::normalize::FeatureStats;
@@ -28,6 +27,13 @@ const TERM_IDX: [usize; FFN_TERMS] = [
     52, 54, 22, 33, // alloc, faults, tasks, recompute flops
     51, 11, 58, // flops/pt, reduction, arithmetic intensity
 ];
+
+/// Layer widths of the Adams et al. architecture — shared with the bundle
+/// loader in `predictor` so saved models and this definition cannot drift.
+pub const FFN_EMB_INV: usize = 32;
+pub const FFN_EMB_DEP: usize = 48;
+pub const FFN_CAT: usize = FFN_EMB_INV + FFN_EMB_DEP;
+pub const FFN_HIDDEN: usize = 64;
 
 /// Hand-crafted terms for one stage (seconds-ish scale).
 pub fn stage_terms(dep_raw: &[f32; DEP_DIM]) -> [f32; FFN_TERMS] {
@@ -74,10 +80,10 @@ impl HalideFfn {
     pub fn new(stats: FeatureStats, seed: u64) -> HalideFfn {
         let mut rng = Rng::new(seed);
         HalideFfn {
-            emb_inv: Linear::new(INV_DIM, 32, true, &mut rng),
-            emb_dep: Linear::new(DEP_DIM, 48, true, &mut rng),
-            hidden: Linear::new(80, 64, true, &mut rng),
-            head: Linear::new(64, FFN_TERMS, false, &mut rng),
+            emb_inv: Linear::new(INV_DIM, FFN_EMB_INV, true, &mut rng),
+            emb_dep: Linear::new(DEP_DIM, FFN_EMB_DEP, true, &mut rng),
+            hidden: Linear::new(FFN_CAT, FFN_HIDDEN, true, &mut rng),
+            head: Linear::new(FFN_HIDDEN, FFN_TERMS, false, &mut rng),
             stats,
         }
     }
@@ -188,31 +194,22 @@ impl HalideFfn {
     pub fn predict_sample(&mut self, s: &GraphSample) -> f64 {
         self.forward_sample(s).0.max(1e-9)
     }
-}
 
-impl PerfModel for HalideFfn {
-    fn predict(&self, ds: &Dataset) -> Vec<f64> {
-        // forward caches activations; clone the layers to keep &self
-        let mut me = HalideFfn {
-            emb_inv: clone_linear(&self.emb_inv),
-            emb_dep: clone_linear(&self.emb_dep),
-            hidden: clone_linear(&self.hidden),
-            head: clone_linear(&self.head),
-            stats: self.stats.clone(),
-        };
-        ds.samples.iter().map(|s| me.predict_sample(s)).collect()
+    /// The four layers in forward order (inv/dep embeddings, hidden, head)
+    /// — for bundle serialization by `predictor::FfnPredictor`.
+    pub fn linears(&self) -> [&Linear; 4] {
+        [&self.emb_inv, &self.emb_dep, &self.hidden, &self.head]
     }
-    fn name(&self) -> &'static str {
-        "halide-ffn"
-    }
-}
 
-fn clone_linear(l: &Linear) -> Linear {
-    let mut rng = Rng::new(0);
-    let mut c = Linear::new(l.n_in, l.n_out, l.relu, &mut rng);
-    c.w = l.w.clone();
-    c.b = l.b.clone();
-    c
+    /// Rebuild from deserialized layers (same order as [`Self::linears`]).
+    pub fn from_linears(stats: FeatureStats, linears: [Linear; 4]) -> HalideFfn {
+        let [emb_inv, emb_dep, hidden, head] = linears;
+        HalideFfn { emb_inv, emb_dep, hidden, head, stats }
+    }
+
+    pub fn stats(&self) -> &FeatureStats {
+        &self.stats
+    }
 }
 
 #[cfg(test)]

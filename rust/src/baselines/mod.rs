@@ -1,4 +1,4 @@
-//! The two comparison models from the paper's evaluation (§IV):
+//! The comparison models from the paper's evaluation (§IV):
 //!
 //! * [`halide_ffn`] — the Halide auto-scheduler model of Adams et al. 2019
 //!   (Fig 3): per-stage embedding MLPs whose head emits coefficients over 27
@@ -8,17 +8,15 @@
 //! * [`gbt`] — the TVM auto-scheduler model (Chen et al. 2018): XGBoost-style
 //!   gradient-boosted regression trees over flattened per-program features,
 //!   written from scratch (histogram splits, second-order gain, shrinkage).
+//! * [`rnn`] — a bi-GRU extension standing in for the Halide value-learning
+//!   LSTM family (sequence order without DAG structure).
+//!
+//! These modules hold the models and their training loops only; the
+//! crate-wide prediction interface is [`crate::predictor::Predictor`],
+//! with adapters (`FfnPredictor`, `GbtPredictor`, `GruPredictor`) in
+//! [`crate::predictor`].
 
 pub mod nn;
 pub mod halide_ffn;
 pub mod gbt;
 pub mod rnn;
-
-use crate::dataset::sample::Dataset;
-
-/// Common interface for baseline models in the eval harness.
-pub trait PerfModel {
-    /// Predicted mean runtimes (seconds), one per sample.
-    fn predict(&self, ds: &Dataset) -> Vec<f64>;
-    fn name(&self) -> &'static str;
-}

@@ -15,7 +15,6 @@
 //! not DAG structure.
 
 use crate::baselines::nn::Linear;
-use crate::baselines::PerfModel;
 use crate::constants::{DEP_DIM, INV_DIM};
 use crate::dataset::sample::{Dataset, GraphSample};
 use crate::features::normalize::FeatureStats;
@@ -315,25 +314,59 @@ impl BiGru {
         let (z, _, _) = self.forward_sample(s);
         (z as f64).exp()
     }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    pub fn stats(&self) -> &FeatureStats {
+        &self.stats
+    }
+
+    /// Clone out all learned weights — for bundle serialization by
+    /// `predictor::GruPredictor`.
+    pub fn export_weights(&self) -> BiGruWeights {
+        BiGruWeights {
+            fwd_wx: self.fwd.wx.clone(),
+            fwd_wh: self.fwd.wh.clone(),
+            fwd_b: self.fwd.b.clone(),
+            bwd_wx: self.bwd.wx.clone(),
+            bwd_wh: self.bwd.wh.clone(),
+            bwd_b: self.bwd.b.clone(),
+            head_w: self.head.w.clone(),
+            head_b: self.head.b.clone(),
+        }
+    }
+
+    /// Rebuild from exported weights (fresh optimizer state and caches).
+    /// Callers are expected to have validated the vector lengths against
+    /// `hidden` and `INV_DIM + DEP_DIM`.
+    pub fn from_weights(stats: FeatureStats, hidden: usize, w: BiGruWeights) -> BiGru {
+        let mut me = BiGru::new(stats, hidden, 0);
+        me.fwd.wx = w.fwd_wx;
+        me.fwd.wh = w.fwd_wh;
+        me.fwd.b = w.fwd_b;
+        me.bwd.wx = w.bwd_wx;
+        me.bwd.wh = w.bwd_wh;
+        me.bwd.b = w.bwd_b;
+        me.head.w = w.head_w;
+        me.head.b = w.head_b;
+        me
+    }
 }
 
-impl PerfModel for BiGru {
-    fn predict(&self, ds: &Dataset) -> Vec<f64> {
-        // forward mutates caches; work on a shadow copy of the weights
-        let mut me = BiGru::new(self.stats.clone(), self.hidden, 0);
-        me.fwd.wx = self.fwd.wx.clone();
-        me.fwd.wh = self.fwd.wh.clone();
-        me.fwd.b = self.fwd.b.clone();
-        me.bwd.wx = self.bwd.wx.clone();
-        me.bwd.wh = self.bwd.wh.clone();
-        me.bwd.b = self.bwd.b.clone();
-        me.head.w = self.head.w.clone();
-        me.head.b = self.head.b.clone();
-        ds.samples.iter().map(|s| me.predict_sample(s)).collect()
-    }
-    fn name(&self) -> &'static str {
-        "bi-gru"
-    }
+/// Flat learned-weight set of a [`BiGru`] (gate order z | r | n, row-major
+/// `[in, 3H]` / `[H, 3H]` matrices — the in-memory layout, unchanged).
+#[derive(Debug, Clone)]
+pub struct BiGruWeights {
+    pub fwd_wx: Vec<f32>,
+    pub fwd_wh: Vec<f32>,
+    pub fwd_b: Vec<f32>,
+    pub bwd_wx: Vec<f32>,
+    pub bwd_wh: Vec<f32>,
+    pub bwd_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
 }
 
 #[cfg(test)]

@@ -37,22 +37,19 @@ impl Default for DataGenConfig {
     }
 }
 
-/// Featurize + benchmark one (pipeline, schedule) pair into a sample.
-pub fn sample_from_schedule(
+/// Featurize one (pipeline, schedule) pair into a sample with zeroed
+/// measurements — for model *input* (e.g. search cost scoring), where the
+/// 10 simulated benchmark runs of [`sample_from_schedule`] would be pure
+/// waste: predictors read features, never `runs`.
+pub fn featurize_schedule(
     p: &Pipeline,
     nests: &[crate::lower::LoopNest],
     sched: &PipelineSchedule,
     machine: &Machine,
     pipeline_id: u32,
     schedule_id: u32,
-    rng: &mut Rng,
 ) -> GraphSample {
     let feats = features::featurize(p, nests, sched, machine);
-    let runs_v = bench_schedule(p, nests, sched, machine, rng);
-    let mut runs = [0f32; BENCH_RUNS];
-    for (i, r) in runs_v.iter().enumerate() {
-        runs[i] = *r as f32;
-    }
     let mut edges = Vec::new();
     for s in &p.stages {
         for &inp in &s.inputs {
@@ -68,8 +65,27 @@ pub fn sample_from_schedule(
         edges,
         inv: feats.iter().map(|f| f.invariant).collect(),
         dep: feats.iter().map(|f| f.dependent).collect(),
-        runs,
+        runs: [0f32; BENCH_RUNS],
     }
+}
+
+/// Featurize + benchmark one (pipeline, schedule) pair into a training
+/// sample (features plus the noisy measured runtimes).
+pub fn sample_from_schedule(
+    p: &Pipeline,
+    nests: &[crate::lower::LoopNest],
+    sched: &PipelineSchedule,
+    machine: &Machine,
+    pipeline_id: u32,
+    schedule_id: u32,
+    rng: &mut Rng,
+) -> GraphSample {
+    let mut sample = featurize_schedule(p, nests, sched, machine, pipeline_id, schedule_id);
+    let runs_v = bench_schedule(p, nests, sched, machine, rng);
+    for (i, r) in runs_v.iter().enumerate() {
+        sample.runs[i] = *r as f32;
+    }
+    sample
 }
 
 /// Generate all samples for one pipeline id.

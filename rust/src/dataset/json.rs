@@ -1,0 +1,195 @@
+//! JSON interchange for [`GraphSample`]s — the input format of the
+//! `gcn-perf predict` subcommand, so external tooling can request
+//! predictions from a saved bundle without speaking the binary dataset
+//! format.
+//!
+//! A sample file is a JSON array of objects:
+//!
+//! ```json
+//! [{"pipeline_id": 0, "schedule_id": 0,
+//!   "edges": [[0, 1]],
+//!   "inv": [[...INV_DIM floats...], ...one row per stage...],
+//!   "dep": [[...DEP_DIM floats...], ...],
+//!   "runs": [...BENCH_RUNS floats, optional...]}]
+//! ```
+//!
+//! `n_stages` is implied by the row count; `runs` may be omitted (zeros)
+//! since predictors never read measurements.
+
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM, MAX_NODES};
+use crate::dataset::sample::GraphSample;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Serialize samples to the JSON interchange format.
+pub fn samples_to_json(samples: &[GraphSample]) -> String {
+    let arr: Vec<Json> = samples
+        .iter()
+        .map(|s| {
+            let edges: Vec<Json> = s
+                .edges
+                .iter()
+                .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                .collect();
+            let rows = |m: &[Vec<f64>]| -> Vec<Json> {
+                m.iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v)).collect()))
+                    .collect()
+            };
+            let inv: Vec<Vec<f64>> =
+                s.inv.iter().map(|r| r.iter().map(|&v| v as f64).collect()).collect();
+            let dep: Vec<Vec<f64>> =
+                s.dep.iter().map(|r| r.iter().map(|&v| v as f64).collect()).collect();
+            Json::obj(vec![
+                ("pipeline_id", Json::Num(s.pipeline_id as f64)),
+                ("schedule_id", Json::Num(s.schedule_id as f64)),
+                ("edges", Json::Arr(edges)),
+                ("inv", Json::Arr(rows(&inv))),
+                ("dep", Json::Arr(rows(&dep))),
+                (
+                    "runs",
+                    Json::Arr(s.runs.iter().map(|&v| Json::Num(v as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::Arr(arr).to_string()
+}
+
+fn feature_rows<const D: usize>(j: &Json, key: &str, idx: usize) -> Result<Vec<[f32; D]>> {
+    let rows = j
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .with_context(|| format!("sample {idx}: missing '{key}' array"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (ri, row) in rows.iter().enumerate() {
+        let vals = row
+            .as_arr()
+            .with_context(|| format!("sample {idx}: '{key}'[{ri}] is not an array"))?;
+        if vals.len() != D {
+            bail!(
+                "sample {idx}: '{key}'[{ri}] has {} values, this build expects {D}",
+                vals.len()
+            );
+        }
+        let mut arr = [0f32; D];
+        for (ci, v) in vals.iter().enumerate() {
+            arr[ci] = v
+                .as_f64()
+                .with_context(|| format!("sample {idx}: '{key}'[{ri}][{ci}] is not a number"))?
+                as f32;
+        }
+        out.push(arr);
+    }
+    Ok(out)
+}
+
+/// Parse samples from the JSON interchange format.
+pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
+    let root = Json::parse(text).map_err(|e| anyhow::anyhow!("sample json: {e}"))?;
+    let arr = root.as_arr().context("sample file must be a JSON array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (idx, j) in arr.iter().enumerate() {
+        let num_or = |key: &str, default: f64| -> f64 {
+            j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+        };
+        let inv = feature_rows::<INV_DIM>(j, "inv", idx)?;
+        let dep = feature_rows::<DEP_DIM>(j, "dep", idx)?;
+        if inv.len() != dep.len() {
+            bail!("sample {idx}: {} inv rows but {} dep rows", inv.len(), dep.len());
+        }
+        if inv.is_empty() {
+            bail!("sample {idx}: no stages");
+        }
+        let n_stages = inv.len();
+        if n_stages > MAX_NODES {
+            bail!(
+                "sample {idx}: {n_stages} stages exceeds this build's MAX_NODES = {MAX_NODES} \
+                 (the GCN batcher would reject it)"
+            );
+        }
+        let mut edges = Vec::new();
+        if let Some(es) = j.get("edges").and_then(|v| v.as_arr()) {
+            for (ei, e) in es.iter().enumerate() {
+                let pair = e
+                    .as_arr()
+                    .with_context(|| format!("sample {idx}: edges[{ei}] is not a pair"))?;
+                if pair.len() != 2 {
+                    bail!("sample {idx}: edges[{ei}] must be [src, dst]");
+                }
+                let a = pair[0].as_usize().context("edge src")?;
+                let b = pair[1].as_usize().context("edge dst")?;
+                if a >= n_stages || b >= n_stages {
+                    bail!(
+                        "sample {idx}: edge [{a}, {b}] out of range for {n_stages} stages"
+                    );
+                }
+                edges.push((a as u16, b as u16));
+            }
+        }
+        let mut runs = [0f32; BENCH_RUNS];
+        if let Some(rs) = j.get("runs").and_then(|v| v.as_arr()) {
+            if rs.len() != BENCH_RUNS {
+                bail!("sample {idx}: 'runs' has {} values, expected {BENCH_RUNS}", rs.len());
+            }
+            for (ri, v) in rs.iter().enumerate() {
+                runs[ri] = v.as_f64().context("runs value")? as f32;
+            }
+        }
+        out.push(GraphSample {
+            pipeline_id: num_or("pipeline_id", 0.0) as u32,
+            schedule_id: num_or("schedule_id", 0.0) as u32,
+            n_stages: n_stages as u16,
+            edges,
+            inv,
+            dep,
+            runs,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    #[test]
+    fn json_roundtrip_preserves_samples() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 3,
+            schedules_per_pipeline: 3,
+            seed: 81,
+            ..Default::default()
+        });
+        let text = samples_to_json(&ds.samples);
+        let back = samples_from_json(&text).unwrap();
+        assert_eq!(back.len(), ds.samples.len());
+        for (a, b) in ds.samples.iter().zip(&back) {
+            assert_eq!(a.pipeline_id, b.pipeline_id);
+            assert_eq!(a.schedule_id, b.schedule_id);
+            assert_eq!(a.n_stages, b.n_stages);
+            assert_eq!(a.edges, b.edges);
+            assert_eq!(a.inv, b.inv);
+            assert_eq!(a.dep, b.dep);
+            assert_eq!(a.runs, b.runs);
+        }
+    }
+
+    #[test]
+    fn runs_are_optional_and_dims_are_checked() {
+        let text = format!(
+            r#"[{{"edges": [[0, 1]], "inv": [{inv}, {inv}], "dep": [{dep}, {dep}]}}]"#,
+            inv = Json::Arr(vec![Json::Num(1.0); INV_DIM]).to_string(),
+            dep = Json::Arr(vec![Json::Num(2.0); DEP_DIM]).to_string(),
+        );
+        let samples = samples_from_json(&text).unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].n_stages, 2);
+        assert!(samples[0].runs.iter().all(|&r| r == 0.0));
+
+        let bad = r#"[{"inv": [[1.0]], "dep": [[2.0]]}]"#;
+        assert!(samples_from_json(bad).is_err(), "short feature rows must be rejected");
+        assert!(samples_from_json("{}").is_err());
+    }
+}

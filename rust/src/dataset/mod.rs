@@ -3,6 +3,7 @@
 
 pub mod sample;
 pub mod builder;
+pub mod json;
 pub mod store;
 
 pub use builder::{build_dataset, DataGenConfig};

@@ -1,50 +1,50 @@
 //! End-to-end experiment orchestration for the paper's figures — shared by
 //! the `gcn-perf` CLI and the `examples/` binaries.
 
-use crate::baselines::gbt::{Gbt, GbtConfig};
-use crate::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
-use crate::baselines::PerfModel;
+use crate::baselines::gbt::GbtConfig;
+use crate::baselines::halide_ffn::FfnTrainConfig;
 use crate::dataset::builder::sample_from_schedule;
 use crate::dataset::sample::Dataset;
 use crate::eval::metrics::{regression_metrics, RegressionMetrics};
 use crate::eval::ranking::{pairwise_ranking_accuracy, RankResult};
-use crate::features::normalize::FeatureStats;
 use crate::lower::lower_pipeline;
-use crate::runtime::{Backend, Params};
+use crate::predictor::{FfnPredictor, GbtPredictor, GruPredictor, Predictor};
 use crate::schedule::primitives::PipelineSchedule;
 use crate::schedule::random::random_pipeline_schedule;
 use crate::sim::Machine;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-/// Fig 8: evaluate the trained GCN + freshly fitted baselines on the test
-/// split. Returns (rows, improvement factors vs GCN).
+/// Fig 8: evaluate the trained GCN (any [`Predictor`] — usually a
+/// `GcnPredictor` session or a training-loop `GcnView`) plus freshly
+/// fitted baselines on the test split.
 pub fn run_fig8(
-    rt: &dyn Backend,
-    params: &Params,
+    gcn: &dyn Predictor,
     train_ds: &Dataset,
     test_ds: &Dataset,
     ffn_epochs: usize,
     verbose: bool,
 ) -> Result<Vec<RegressionMetrics>> {
-    let stats = train_ds.stats.as_ref().context("train stats")?;
     let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
 
-    // ours (GCN through the active backend)
+    // ours (the GCN session)
     let refs: Vec<&crate::dataset::sample::GraphSample> = test_ds.samples.iter().collect();
-    let gcn_pred = rt.predict_runtimes(params, &refs, stats)?;
-    let mut rows = vec![regression_metrics("gcn (ours)", &truth, &gcn_pred)];
+    let gcn_pred = gcn.predict(&refs)?;
+    let mut rows = vec![regression_metrics(&format!("{} (ours)", gcn.name()), &truth, &gcn_pred)];
 
     // Halide FFN baseline — trained on the same train split (§IV-A: "we
     // train and evaluate it on our train and test set")
     if verbose {
         eprintln!("fitting halide-ffn baseline ({ffn_epochs} epochs)...");
     }
-    let mut ffn = HalideFfn::new(stats.clone(), 99);
-    ffn.fit(train_ds, &FfnTrainConfig { epochs: ffn_epochs, ..Default::default() });
-    let ffn_pred = ffn.predict(test_ds);
-    rows.push(regression_metrics("halide-ffn", &truth, &ffn_pred));
+    let ffn = FfnPredictor::fit(
+        train_ds,
+        &FfnTrainConfig { epochs: ffn_epochs, ..Default::default() },
+        99,
+    )?;
+    let ffn_pred = ffn.predict(&refs)?;
+    rows.push(regression_metrics(&ffn.name(), &truth, &ffn_pred));
 
     // TVM GBT baseline — "Since it does not require any pre-training, we
     // used the test split of our dataset on this XGBoost based model": the
@@ -54,7 +54,7 @@ pub fn run_fig8(
     if verbose {
         eprintln!("fitting tvm-gbt baseline (online protocol)...");
     }
-    let (gbt_truth, gbt_pred) = gbt_online_eval(test_ds);
+    let (gbt_truth, gbt_pred) = gbt_online_eval(test_ds)?;
     rows.push(regression_metrics("tvm-gbt", &gbt_truth, &gbt_pred));
 
     Ok(rows)
@@ -69,22 +69,22 @@ pub fn run_fig8_rnn(
     epochs: usize,
     verbose: bool,
 ) -> Result<RegressionMetrics> {
-    use crate::baselines::rnn::{BiGru, RnnTrainConfig};
+    use crate::baselines::rnn::RnnTrainConfig;
     if verbose {
         eprintln!("fitting bi-gru baseline ({epochs} epochs)...");
     }
-    let stats = train_ds.stats.as_ref().context("train stats")?;
-    let mut gru = BiGru::new(stats.clone(), 64, 41);
-    gru.fit(train_ds, &RnnTrainConfig { epochs, ..Default::default() });
+    let gru =
+        GruPredictor::fit(train_ds, &RnnTrainConfig { epochs, ..Default::default() }, 64, 41)?;
     let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
-    let pred = gru.predict(test_ds);
+    let refs: Vec<&crate::dataset::sample::GraphSample> = test_ds.samples.iter().collect();
+    let pred = gru.predict(&refs)?;
     Ok(regression_metrics("bi-gru (ext)", &truth, &pred))
 }
 
 /// TVM online protocol: per the paper, the GBT model sees measurements from
 /// the same pipelines it predicts (its exploration phase). Fit on the even
 /// schedule ids of the test split, evaluate on the odd ones.
-pub fn gbt_online_eval(test_ds: &Dataset) -> (Vec<f64>, Vec<f64>) {
+pub fn gbt_online_eval(test_ds: &Dataset) -> Result<(Vec<f64>, Vec<f64>)> {
     let mut fit = Dataset::default();
     let mut eval = Dataset::default();
     for s in &test_ds.samples {
@@ -94,18 +94,19 @@ pub fn gbt_online_eval(test_ds: &Dataset) -> (Vec<f64>, Vec<f64>) {
             eval.samples.push(s.clone());
         }
     }
-    let gbt = Gbt::fit(&fit, GbtConfig::default());
+    let gbt = GbtPredictor::fit(&fit, GbtConfig::default());
     let truth: Vec<f64> = eval.samples.iter().map(|s| s.mean_runtime()).collect();
-    let pred = gbt.predict(&eval);
-    (truth, pred)
+    let refs: Vec<&crate::dataset::sample::GraphSample> = eval.samples.iter().collect();
+    let pred = gbt.predict(&refs)?;
+    Ok((truth, pred))
 }
 
 /// Fig 9: pairwise ranking on the nine zoo networks. `n_schedules` per
 /// network ("several hundred schedules" in the paper; configurable here).
+/// The predictor is self-contained (a bundle-loaded session carries its
+/// own feature stats), so this needs no dataset.
 pub fn run_fig9(
-    rt: &dyn Backend,
-    params: &Params,
-    stats: &FeatureStats,
+    p: &dyn Predictor,
     machine: &Machine,
     n_schedules: usize,
     seed: u64,
@@ -129,7 +130,7 @@ pub fn run_fig9(
         }
         let truth: Vec<f64> = samples.iter().map(|s| s.mean_runtime()).collect();
         let refs: Vec<&crate::dataset::sample::GraphSample> = samples.iter().collect();
-        let pred = rt.predict_runtimes(params, &refs, stats)?;
+        let pred = p.predict(&refs)?;
         results.push(pairwise_ranking_accuracy(&net.name, &truth, &pred, 0.02));
     }
     Ok(results)
@@ -190,7 +191,7 @@ mod tests {
             seed: 77,
             ..Default::default()
         });
-        let (truth, pred) = gbt_online_eval(&ds);
+        let (truth, pred) = gbt_online_eval(&ds).unwrap();
         assert_eq!(truth.len(), 6 * 4); // odd schedule ids
         assert_eq!(truth.len(), pred.len());
         assert!(pred.iter().all(|p| p.is_finite() && *p > 0.0));

@@ -16,13 +16,31 @@
 //!   feature, the PJRT path for the AOT-compiled JAX/Pallas artifacts
 //!   ([`runtime`]) — plus the training driver ([`train`]) and graph
 //!   batching ([`model`]);
-//! * the two baselines from the paper's evaluation ([`baselines`]): the
+//! * the crate's one prediction API ([`predictor`]): the object-safe
+//!   [`predictor::Predictor`] trait, the [`predictor::GcnPredictor`]
+//!   session with single-file model bundles, adapters for every baseline,
+//!   a name registry and the caching [`predictor::PredictorCost`] search
+//!   bridge;
+//! * the comparison models from the paper's evaluation ([`baselines`]): the
 //!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
 //! * the evaluation harnesses for Fig 8 and Fig 9 ([`eval`]), the nine
 //!   real-world networks ([`zoo`]) and the beam-search auto-scheduler
 //!   ([`search`]);
 //! * dependency-free infrastructure ([`util`]): PRNG, thread pool, JSON,
 //!   stats, CLI parsing, bench + property-test harnesses.
+
+// Stylistic clippy lints this numeric, dependency-free codebase opts out
+// of wholesale: index-heavy kernel loops and wide explicit signatures are
+// the local idiom, and `Json::to_string` predates the lint.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::inherent_to_string,
+    clippy::comparison_chain,
+    clippy::manual_range_contains
+)]
 
 pub mod util;
 pub mod ir;
@@ -34,6 +52,7 @@ pub mod features;
 pub mod dataset;
 pub mod model;
 pub mod runtime;
+pub mod predictor;
 pub mod train;
 pub mod baselines;
 pub mod eval;

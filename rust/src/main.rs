@@ -2,15 +2,20 @@
 //!
 //! Subcommands:
 //!   gen-data   generate a dataset (random pipelines → schedules → sim bench)
-//!   train      train the GCN (native backend by default; PJRT with the
-//!              `pjrt` feature and built artifacts)
+//!   train      train the GCN and save a single-file model bundle
+//!   predict    load any model bundle and serve predictions for a JSON
+//!              sample file (or a binary dataset)
 //!   fig8       regenerate Fig 8 (avg/max error, R² vs Halide + TVM models)
 //!   fig9       regenerate Fig 9 (pairwise ranking on the 9 zoo networks)
 //!   ablate     §III-C conv-depth ablation (0/1/2/4 layers)
-//!   search     model-guided beam search on a zoo network (Fig 2)
-//!   info       backend / manifest info
+//!   search     model-guided beam search on a zoo network (Fig 2); accepts
+//!              any registered model name via the Predictor registry
+//!   info       backend / manifest / bundle info
 //!
 //! Everything is driven from rust; python is never on the runtime path.
+//! All model loading goes through `predictor` bundles — one file carries
+//! parameters and feature stats, so eval commands no longer re-derive
+//! stats from a dataset split.
 
 use anyhow::{bail, Context, Result};
 use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
@@ -20,11 +25,14 @@ use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
 use gcn_perf::onnx_gen::GenConfig;
-use gcn_perf::runtime::{load_backend, load_variant_backend, Backend, Params};
+use gcn_perf::predictor::registry::{self, FitConfig};
+use gcn_perf::predictor::{GcnPredictor, Predictor, PredictorCost};
+use gcn_perf::runtime::{load_backend, load_variant_backend, Backend};
 use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train_and_save, TrainConfig};
 use gcn_perf::util::cli::Args;
+use gcn_perf::util::json::Json;
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -38,6 +46,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("gen-data") => cmd_gen_data(&args),
         Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
         Some("fig8") => cmd_fig8(&args),
         Some("fig9") => cmd_fig9(&args),
         Some("ablate") => cmd_ablate(&args),
@@ -61,15 +70,20 @@ const USAGE: &str = "gcn-perf — GNN performance model for DNN compiler schedul
 USAGE: gcn-perf <subcommand> [--key value ...]
 
   gen-data  --pipelines N --schedules M --out data/dataset.bin [--seed S]
-  train     --data data/dataset.bin --ckpt data/gcn.ckpt [--epochs E]
+  train     --data data/dataset.bin --bundle data/gcn.bundle [--epochs E]
             [--test-frac F] [--artifacts DIR]
-  fig8      --data ... --ckpt ... [--ffn-epochs E] [--report results/report.json]
-  fig9      --data ... --ckpt ... [--schedules K] [--report ...]
+  predict   --bundle data/gcn.bundle (--samples s.json | --data ds.bin)
+            [--out preds.json]
+  fig8      --data ... --bundle ... [--ffn-epochs E] [--report results/report.json]
+  fig9      --bundle ... [--schedules K] [--report ...]
   ablate    --data ... [--epochs E]     (conv layers 0/1/2/4 sweep)
   active    --data ... [--rounds R --acquire K]  (§VI active-learning study)
-  transfer  --data ... --ckpt ...  (§VI-A cross-machine portability study)
-  search    --network NAME [--model oracle] [--ckpt ... --data ...]
-  info      [--artifacts DIR]";
+  transfer  --bundle ...  (§VI-A cross-machine portability study)
+  search    --network NAME [--model oracle|gcn|ffn|rnn|gbt]
+            [--bundle ... | --data ...]
+  info      [--artifacts DIR] [--bundle ...]
+
+(--ckpt is accepted as an alias for --bundle.)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
@@ -83,6 +97,38 @@ fn load_dataset(args: &Args) -> Result<Dataset> {
 fn split_dataset(args: &Args, ds: &Dataset) -> (Dataset, Dataset) {
     let frac = args.f64_or("test-frac", 0.1);
     ds.split(frac, args.u64_or("split-seed", 1234))
+}
+
+/// Load the execution backend, printing any loader warnings — the one
+/// place in the stack that decides warnings go to stderr.
+fn load_backend_verbose(args: &Args, with_train: bool) -> Result<Box<dyn Backend>> {
+    Ok(load_backend(&artifacts_dir(args), with_train)?.warn_to_stderr())
+}
+
+/// `--bundle`, with `--ckpt` as a compatibility alias.
+fn bundle_path_opt(args: &Args) -> Option<PathBuf> {
+    args.str_opt("bundle")
+        .or_else(|| args.str_opt("ckpt"))
+        .map(PathBuf::from)
+}
+
+fn bundle_path(args: &Args) -> Result<PathBuf> {
+    bundle_path_opt(args).context("--bundle required (a model bundle saved by `gcn-perf train`)")
+}
+
+fn load_gcn(args: &Args) -> Result<GcnPredictor> {
+    GcnPredictor::load(&bundle_path(args)?)
+}
+
+fn fit_config(args: &Args) -> FitConfig {
+    let defaults = FitConfig::default();
+    FitConfig {
+        ffn_epochs: args.usize_or("ffn-epochs", defaults.ffn_epochs),
+        rnn_epochs: args.usize_or("rnn-epochs", defaults.rnn_epochs),
+        rnn_hidden: defaults.rnn_hidden,
+        gbt_trees: args.usize_or("gbt-trees", defaults.gbt_trees),
+        seed: args.u64_or("fit-seed", defaults.seed),
+    }
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -119,7 +165,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         test_ds.len(),
         test_ds.num_pipelines()
     );
-    let rt = load_backend(&artifacts_dir(args), true)?;
+    let rt = load_backend_verbose(args, true)?;
     let cfg = TrainConfig {
         epochs: args.usize_or("epochs", 40),
         seed: args.u64_or("seed", 7),
@@ -127,22 +173,57 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.f64_or("lr", gcn_perf::constants::LEARNING_RATE) as f32,
         ..Default::default()
     };
-    let ckpt = PathBuf::from(args.str_or("ckpt", "data/gcn.ckpt"));
-    let result = train_and_save(rt.as_ref(), &train_ds, &test_ds, &cfg, &ckpt)?;
+    let bundle = bundle_path_opt(args).unwrap_or_else(|| PathBuf::from("data/gcn.bundle"));
+    let result = train_and_save(rt.as_ref(), &train_ds, &test_ds, &cfg, &bundle)?;
     println!(
-        "best test MAPE {:.2}% after {} epochs; checkpoint: {}",
+        "best test MAPE {:.2}% after {} epochs; bundle: {}",
         result.best_test_mape,
         result.history.len(),
-        ckpt.display()
+        bundle.display()
     );
     Ok(())
 }
 
-fn load_runtime_and_params(args: &Args, with_train: bool) -> Result<(Box<dyn Backend>, Params)> {
-    let rt = load_backend(&artifacts_dir(args), with_train)?;
-    let ckpt = args.str_opt("ckpt").context("--ckpt required")?;
-    let params = Params::load(Path::new(ckpt), rt.manifest())?;
-    Ok((rt, params))
+fn cmd_predict(args: &Args) -> Result<()> {
+    let path = bundle_path(args)?;
+    let model = registry::load_bundle(&path)?;
+    let samples = if let Some(f) = args.str_opt("samples") {
+        let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
+        gcn_perf::dataset::json::samples_from_json(&text)?
+    } else if args.str_opt("data").is_some() {
+        load_dataset(args)?.samples
+    } else {
+        bail!("predict needs --samples file.json or --data dataset.bin");
+    };
+    let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = samples.iter().collect();
+    let preds = model.predict(&refs)?;
+    let rows: Vec<Json> = samples
+        .iter()
+        .zip(&preds)
+        .map(|(s, &p)| {
+            Json::obj(vec![
+                ("pipeline_id", Json::Num(s.pipeline_id as f64)),
+                ("schedule_id", Json::Num(s.schedule_id as f64)),
+                ("predicted_runtime_s", Json::Num(p)),
+            ])
+        })
+        .collect();
+    let report = Json::obj(vec![
+        ("model", Json::Str(model.name())),
+        ("predictions", Json::Arr(rows)),
+    ]);
+    match args.str_opt("out") {
+        Some(out) => {
+            let out = Path::new(out);
+            if let Some(dir) = out.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(out, report.to_string())?;
+            eprintln!("{} predictions ({}) written to {}", preds.len(), model.name(), out.display());
+        }
+        None => println!("{}", report.to_string()),
+    }
+    Ok(())
 }
 
 fn print_fig8(rows: &[RegressionMetrics]) {
@@ -163,10 +244,9 @@ fn print_fig8(rows: &[RegressionMetrics]) {
 fn cmd_fig8(args: &Args) -> Result<()> {
     let ds = load_dataset(args)?;
     let (train_ds, test_ds) = split_dataset(args, &ds);
-    let (rt, params) = load_runtime_and_params(args, false)?;
+    let gcn = load_gcn(args)?;
     let mut rows = harness::run_fig8(
-        rt.as_ref(),
-        &params,
+        &gcn,
         &train_ds,
         &test_ds,
         args.usize_or("ffn-epochs", 30),
@@ -199,14 +279,9 @@ fn print_fig9(rows: &[RankResult], avg: f64) {
 }
 
 fn cmd_fig9(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
-    let (train_ds, _) = split_dataset(args, &ds);
-    let (rt, params) = load_runtime_and_params(args, false)?;
-    let stats = train_ds.stats.as_ref().context("stats")?;
+    let gcn = load_gcn(args)?;
     let rows = harness::run_fig9(
-        rt.as_ref(),
-        &params,
-        stats,
+        &gcn,
         &Machine::default(),
         args.usize_or("schedules", 100),
         args.u64_or("seed", 5),
@@ -231,7 +306,7 @@ fn cmd_ablate(args: &Args) -> Result<()> {
     for layers in [0usize, 1, 2, 4] {
         // infallible in the default build (native fallback); the backend
         // column makes a mixed pjrt/native sweep visible
-        let rt = load_variant_backend(&dir, layers, true)?;
+        let rt = load_variant_backend(&dir, layers, true)?.warn_to_stderr();
         let mut params = rt.init_params(7);
         // output-bias init at the train mean log-runtime (as train() does)
         let mean_log_y: f64 = train_ds
@@ -262,11 +337,13 @@ fn cmd_ablate(args: &Args) -> Result<()> {
                 rt.train_step_lr(&mut params, &mut accum, &batch, lr)?;
             }
         }
-        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> =
-            test_ds.samples.iter().collect();
-        let preds = rt.predict_runtimes(&params, &refs, test_ds.stats.as_ref().unwrap())?;
-        let truth: Vec<f64> = test_ds.samples.iter().map(|s| s.mean_runtime()).collect();
-        let mape = gcn_perf::util::stats::mape(&truth, &preds);
+        // evaluate this variant through the unified predictor path
+        let view = gcn_perf::predictor::GcnView {
+            backend: rt.as_ref(),
+            params: &params,
+            stats: test_ds.stats.as_ref().unwrap(),
+        };
+        let mape = gcn_perf::train::evaluate_predictor_mape(&view, &test_ds)?;
         println!("{:<8} {:>12.2} {:>9}", layers, mape, rt.name());
     }
     Ok(())
@@ -276,7 +353,7 @@ fn cmd_active(args: &Args) -> Result<()> {
     use gcn_perf::train::active::{active_learning_study, ActiveConfig};
     let ds = load_dataset(args)?;
     let (pool, test) = split_dataset(args, &ds);
-    let rt = load_backend(&artifacts_dir(args), true)?;
+    let rt = load_backend_verbose(args, true)?;
     let cfg = ActiveConfig {
         seed_frac: args.f64_or("seed-frac", 0.1),
         acquire: args.usize_or("acquire", 1024),
@@ -299,25 +376,37 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     // §VI-A: "while the current set of features is applicable across CPU
     // platforms, it would require significant rework when porting to other
     // hardware architectures". Study: train on the Xeon dataset (the given
-    // checkpoint), evaluate ranking on datasets benchmarked on *other* CPU
+    // bundle), evaluate ranking on datasets benchmarked on *other* CPU
     // presets. Features are machine-aware (cache-fit flags etc. use each
     // machine's geometry), so CPU→CPU transfer should hold.
-    let ds = load_dataset(args)?;
-    let (train_ds, _) = split_dataset(args, &ds);
-    let (rt, params) = load_runtime_and_params(args, false)?;
-    let stats = train_ds.stats.as_ref().context("stats")?;
+    let gcn = load_gcn(args)?;
     let schedules = args.usize_or("schedules", 60);
     println!("§VI-A cross-machine transfer (trained on xeon_d2191)");
-    println!("{:<16} {:>14} {:>12}", "machine", "rank acc %", "MAPE %");
+    println!("{:<16} {:>14}", "machine", "rank acc %");
     for name in ["xeon_d2191", "desktop_4core", "server_64core"] {
         let machine = Machine::by_name(name).unwrap();
-        let rows = harness::run_fig9(rt.as_ref(), &params, stats, &machine, schedules, 17)?;
-        let (rows, avg) = rank_networks(rows);
-        // also a MAPE over all the generated samples
-        let _ = rows;
-        println!("{:<16} {:>14.1} {:>12}", name, avg, "—");
+        let rows = harness::run_fig9(&gcn, &machine, schedules, 17)?;
+        let (_, avg) = rank_networks(rows);
+        println!("{:<16} {:>14.1}", name, avg);
     }
     Ok(())
+}
+
+/// The search cost model: the oracle scores schedules directly in the
+/// simulator; every registered predictor goes through the caching
+/// [`PredictorCost`] bridge.
+enum SearchCost {
+    Oracle(SimCost),
+    Learned(PredictorCost),
+}
+
+impl SearchCost {
+    fn as_cost_model(&self) -> &dyn CostModel {
+        match self {
+            SearchCost::Oracle(m) => m,
+            SearchCost::Learned(m) => m,
+        }
+    }
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -328,27 +417,55 @@ fn cmd_search(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown network '{name}'"))?;
     let nests = gcn_perf::lower::lower_pipeline(&net);
     let machine = Machine::default();
-    let model_kind = args.str_or("model", "oracle");
+    let bundle = bundle_path_opt(args);
+    let bundle_kind = match &bundle {
+        Some(b) => Some(registry::bundle_kind(b)?),
+        None => None,
+    };
+    // --model defaults to the bundle's own kind when one is given, and to
+    // the oracle otherwise; an explicit --model must match the bundle
+    let model_kind = args
+        .str_opt("model")
+        .map(str::to_string)
+        .or_else(|| bundle_kind.clone())
+        .unwrap_or_else(|| "oracle".to_string());
     let cfg = BeamConfig {
         beam_width: args.usize_or("beam", 8),
         candidates_per_stage: args.usize_or("candidates", 12),
         seed: args.u64_or("seed", 1),
     };
 
-    let model: Box<dyn CostModel> = match model_kind.as_str() {
-        "oracle" => Box::new(SimCost { machine: machine.clone() }),
-        "gcn" => {
-            let (rt, params) = load_runtime_and_params(args, false)?;
-            let ds = load_dataset(args)?;
-            let (train_ds, _) = split_dataset(args, &ds);
-            Box::new(GcnCost {
-                rt,
-                params,
-                stats: train_ds.stats.clone().context("stats")?,
-                machine: machine.clone(),
-            })
+    let cost = if model_kind == "oracle" {
+        if let Some(b) = &bundle {
+            bail!(
+                "--model oracle does not use a model bundle; drop --bundle {} or pick its model",
+                b.display()
+            );
         }
-        other => bail!("unknown cost model '{other}' (oracle|gcn)"),
+        SearchCost::Oracle(SimCost { machine: machine.clone() })
+    } else {
+        // any registered model: from a saved bundle when given, otherwise
+        // fitted on the training split of --data (baselines only)
+        let predictor: Box<dyn Predictor> = match &bundle {
+            Some(b) => {
+                let kind = bundle_kind.as_deref().unwrap_or_default();
+                if kind != model_kind {
+                    bail!(
+                        "--model {model_kind} conflicts with bundle {} (kind '{kind}')",
+                        b.display()
+                    );
+                }
+                registry::load_bundle(b)?
+            }
+            None => {
+                let ds = load_dataset(args).with_context(|| {
+                    format!("model '{model_kind}' needs --bundle or --data to fit from")
+                })?;
+                let (train_ds, _) = split_dataset(args, &ds);
+                registry::fit_model(&model_kind, &train_ds, &fit_config(args))?
+            }
+        };
+        SearchCost::Learned(PredictorCost::new(predictor, machine.clone()))
     };
 
     let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
@@ -358,63 +475,29 @@ fn cmd_search(args: &Args) -> Result<()> {
         &gcn_perf::schedule::primitives::PipelineSchedule::default_for(&ranks),
         &machine,
     );
-    let (best, score) = beam_search(&net, &nests, model.as_ref(), &cfg);
+    let (best, score) = beam_search(&net, &nests, cost.as_cost_model(), &cfg);
     let true_t = gcn_perf::sim::simulate(&net, &nests, &best, &machine);
     println!("network {name}: default {:.3} ms", default_t * 1e3);
     println!(
         "beam search ({}): found {:.3} ms (model score {:.3} ms) — {:.2}x speedup",
-        model.name(),
+        cost.as_cost_model().name(),
         true_t * 1e3,
         score * 1e3,
         default_t / true_t
     );
+    if let SearchCost::Learned(m) = &cost {
+        let (hits, evals) = m.cache_stats();
+        println!(
+            "cost cache: {hits} hits / {evals} model evaluations ({} unique schedules)",
+            m.cache_len()
+        );
+    }
     Ok(())
-}
-
-/// GCN-backed cost model for beam search: featurize candidates, batch
-/// through the backend's (chunk-parallel) inference path.
-pub struct GcnCost {
-    rt: Box<dyn Backend>,
-    params: Params,
-    stats: gcn_perf::features::normalize::FeatureStats,
-    machine: Machine,
-}
-
-impl CostModel for GcnCost {
-    fn score(
-        &self,
-        p: &gcn_perf::ir::pipeline::Pipeline,
-        nests: &[gcn_perf::lower::LoopNest],
-        scheds: &[gcn_perf::schedule::primitives::PipelineSchedule],
-    ) -> Vec<f64> {
-        let mut rng = gcn_perf::util::rng::Rng::new(0);
-        let samples: Vec<gcn_perf::dataset::sample::GraphSample> = scheds
-            .iter()
-            .map(|s| {
-                gcn_perf::dataset::builder::sample_from_schedule(
-                    p,
-                    nests,
-                    s,
-                    &self.machine,
-                    0,
-                    0,
-                    &mut rng,
-                )
-            })
-            .collect();
-        let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = samples.iter().collect();
-        self.rt
-            .predict_runtimes(&self.params, &refs, &self.stats)
-            .expect("gcn inference")
-    }
-    fn name(&self) -> String {
-        "gcn".into()
-    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let rt = load_backend(&dir, false)?;
+    let rt = load_backend_verbose(args, false)?;
     println!("backend: {}", rt.name());
     if dir.join("manifest.json").exists() {
         // parse + validate the on-disk contract (dim-drift fails fast here
@@ -441,5 +524,18 @@ fn cmd_info(args: &Args) -> Result<()> {
         manifest.params.len(),
         manifest.total_param_elems()
     );
+    if let Some(b) = bundle_path_opt(args) {
+        let bundle = gcn_perf::predictor::bundle::Bundle::load(&b)?;
+        let elems: usize = bundle.tensors.iter().map(|t| t.numel()).sum();
+        println!(
+            "bundle: {} — kind '{}', {} tensors ({} elements), stats {}, meta {:?}",
+            b.display(),
+            bundle.kind,
+            bundle.tensors.len(),
+            elems,
+            if bundle.stats.is_some() { "present" } else { "absent" },
+            bundle.meta
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,354 @@
+//! Single-file model bundles — the on-disk format behind
+//! [`crate::predictor::Predictor::save`] and the loaders in
+//! [`crate::predictor::registry`].
+//!
+//! A bundle replaces the loose params/stats files of the pre-`Predictor`
+//! CLI: one file carries everything needed to serve a model — a versioned
+//! header, the model kind, the training-set feature statistics and the
+//! model payload as named tensors plus scalar metadata.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//!   magic "GCNPBNDL" + u32 format version
+//!   kind string                  (u32 len + utf8: "gcn" | "ffn" | ...)
+//!   u8 has_stats [+ u32 len + f64*len]   feature mean/std, dims checked
+//!   meta:    u32 count, (string key, f64 value)*
+//!   tensors: u32 count, (string name, u32 rank, u32 dims*, f32 data)*
+//! ```
+//!
+//! The container is model-agnostic: every in-tree model (GCN, Halide FFN,
+//! bi-GRU, GBT) flattens into named tensors + metadata, so one reader
+//! serves them all and version/shape mismatches fail with a clear error
+//! instead of garbage predictions.
+
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::features::normalize::FeatureStats;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GCNPBNDL";
+
+/// Current bundle format version. Bump on any layout change; loaders
+/// reject other versions outright.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One named parameter tensor of a bundled model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An in-memory model bundle: kind tag + stats + metadata + tensors.
+#[derive(Debug, Clone)]
+pub struct Bundle {
+    /// Registry kind ("gcn", "ffn", "rnn", "gbt").
+    pub kind: String,
+    /// Feature normalization fitted on the training set (models that take
+    /// raw features, like the GBT, carry `None`).
+    pub stats: Option<FeatureStats>,
+    /// Scalar metadata (e.g. `n_conv` for the GCN, `hidden` for the GRU).
+    pub meta: BTreeMap<String, f64>,
+    pub tensors: Vec<NamedTensor>,
+}
+
+impl Bundle {
+    pub fn new(kind: &str) -> Bundle {
+        Bundle { kind: kind.to_string(), stats: None, meta: BTreeMap::new(), tensors: Vec::new() }
+    }
+
+    /// Required metadata entry as usize.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        let v = *self
+            .meta
+            .get(key)
+            .with_context(|| format!("bundle missing meta key '{key}'"))?;
+        Ok(v as usize)
+    }
+
+    /// Required metadata entry as f64.
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta
+            .get(key)
+            .copied()
+            .with_context(|| format!("bundle missing meta key '{key}'"))
+    }
+
+    /// Required tensor by name.
+    pub fn tensor(&self, name: &str) -> Result<&NamedTensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("bundle missing tensor '{name}'"))
+    }
+
+    /// Write the bundle to one file (parent directories are created).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = Bw { w: BufWriter::new(f) };
+        w.bytes(MAGIC)?;
+        w.u32(FORMAT_VERSION)?;
+        w.string(&self.kind)?;
+        match &self.stats {
+            None => w.u8(0)?,
+            Some(stats) => {
+                w.u8(1)?;
+                let flat = stats.to_flat();
+                w.u32(flat.len() as u32)?;
+                w.f64s(&flat)?;
+            }
+        }
+        w.u32(self.meta.len() as u32)?;
+        for (k, v) in &self.meta {
+            w.string(k)?;
+            w.f64s(&[*v])?;
+        }
+        w.u32(self.tensors.len() as u32)?;
+        for t in &self.tensors {
+            if t.data.len() != t.numel() {
+                bail!("tensor '{}': {} values but shape {:?}", t.name, t.data.len(), t.shape);
+            }
+            w.string(&t.name)?;
+            w.u32(t.shape.len() as u32)?;
+            for &d in &t.shape {
+                w.u32(d as u32)?;
+            }
+            w.f32s(&t.data)?;
+        }
+        w.w.flush()?;
+        Ok(())
+    }
+
+    /// Read just the header (magic, version, kind) — for dispatching on
+    /// the model kind without deserializing tensors.
+    pub fn peek_kind(path: &Path) -> Result<String> {
+        let f = std::fs::File::open(path).with_context(|| format!("open bundle {path:?}"))?;
+        let mut r = Br { r: BufReader::new(f) };
+        Bundle::read_header(&mut r, path)
+    }
+
+    fn read_header<R: Read>(r: &mut Br<R>, path: &Path) -> Result<String> {
+        let mut magic = [0u8; 8];
+        r.r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a gcn-perf model bundle (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            bail!(
+                "bundle {path:?} has format version {version}, this build reads {FORMAT_VERSION}"
+            );
+        }
+        r.string()
+    }
+
+    /// Read a bundle; fails cleanly on bad magic, unknown format version or
+    /// a feature-dimension mismatch with this build.
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let f = std::fs::File::open(path).with_context(|| format!("open bundle {path:?}"))?;
+        let mut r = Br { r: BufReader::new(f) };
+        let kind = Bundle::read_header(&mut r, path)?;
+        let stats = if r.u8()? != 0 {
+            let n = r.u32()? as usize;
+            if n != 2 * (INV_DIM + DEP_DIM) {
+                bail!(
+                    "bundle feature stats have {n} entries, this build expects {} \
+                     (INV_DIM/DEP_DIM drift — retrain the model)",
+                    2 * (INV_DIM + DEP_DIM)
+                );
+            }
+            Some(FeatureStats::from_flat(&r.f64s(n)?))
+        } else {
+            None
+        };
+        let n_meta = r.u32()? as usize;
+        let mut meta = BTreeMap::new();
+        for _ in 0..n_meta {
+            let k = r.string()?;
+            let v = r.f64s(1)?[0];
+            meta.insert(k, v);
+        }
+        let n_tensors = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let name = r.string()?;
+            let rank = r.u32()? as usize;
+            if rank > 8 {
+                bail!("tensor '{name}': implausible rank {rank} (corrupt bundle?)");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u32()? as usize);
+            }
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("tensor '{name}': shape {shape:?} overflows"))?;
+            if numel > 64 << 20 {
+                bail!("tensor '{name}': implausible size {numel} (corrupt bundle?)");
+            }
+            let data = r.f32s(numel)?;
+            tensors.push(NamedTensor { name, shape, data });
+        }
+        Ok(Bundle { kind, stats, meta, tensors })
+    }
+}
+
+struct Bw<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Bw<W> {
+    fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.w.write_all(b)?;
+        Ok(())
+    }
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.bytes(&[v])
+    }
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.bytes(&v.to_le_bytes())
+    }
+    fn string(&mut self, s: &str) -> Result<()> {
+        self.u32(s.len() as u32)?;
+        self.bytes(s.as_bytes())
+    }
+    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+        for v in vs {
+            self.bytes(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn f64s(&mut self, vs: &[f64]) -> Result<()> {
+        for v in vs {
+            self.bytes(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct Br<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Br<R> {
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 4096 {
+            bail!("implausible string length {n} (corrupt bundle?)");
+        }
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(String::from_utf8(buf)?)
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; n * 8];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::StageFeatures;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    fn some_stats() -> FeatureStats {
+        let feats: Vec<StageFeatures> = (0..4)
+            .map(|i| StageFeatures {
+                invariant: [i as f32; INV_DIM],
+                dependent: [i as f32 * 0.5; DEP_DIM],
+            })
+            .collect();
+        FeatureStats::fit(feats.iter())
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut b = Bundle::new("gcn");
+        b.stats = Some(some_stats());
+        b.meta.insert("n_conv".into(), 2.0);
+        b.tensors.push(NamedTensor {
+            name: "w".into(),
+            shape: vec![2, 3],
+            data: vec![1.0, -2.5, 3.25, 0.0, 5.0, -0.125],
+        });
+        let path = tmp("gcn_perf_bundle_rt.bundle");
+        b.save(&path).unwrap();
+        let r = Bundle::load(&path).unwrap();
+        assert_eq!(r.kind, "gcn");
+        assert_eq!(r.meta_usize("n_conv").unwrap(), 2);
+        assert_eq!(r.tensors, b.tensors);
+        assert_eq!(r.stats.unwrap().to_flat(), b.stats.unwrap().to_flat());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let path = tmp("gcn_perf_bundle_bad.bundle");
+        std::fs::write(&path, b"NOTABNDL rest").unwrap();
+        assert!(Bundle::load(&path).unwrap_err().to_string().contains("bad magic"));
+
+        let mut b = Bundle::new("gcn");
+        b.tensors.push(NamedTensor { name: "w".into(), shape: vec![1], data: vec![1.0] });
+        b.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = Bundle::load(&path).unwrap_err().to_string();
+        assert!(err.contains("format version 99"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tensor_shape_data_consistency_enforced_on_save() {
+        let mut b = Bundle::new("gcn");
+        b.tensors.push(NamedTensor { name: "w".into(), shape: vec![2, 2], data: vec![1.0] });
+        assert!(b.save(&tmp("gcn_perf_bundle_inconsistent.bundle")).is_err());
+    }
+
+    #[test]
+    fn missing_meta_and_tensor_are_clean_errors() {
+        let b = Bundle::new("gcn");
+        assert!(b.meta_usize("n_conv").is_err());
+        assert!(b.tensor("w_inv").is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! [`PredictorCost`] — the generic bridge from any [`Predictor`] to
+//! [`crate::search::CostModel`], with a schedule-keyed memoization cache.
+//!
+//! Beam search re-scores its surviving states at every expansion step: a
+//! beam state that survives `k` steps is featurized and scored `k+1` times
+//! by a naive cost model. The cache keys on the complete
+//! [`PipelineSchedule`] (hashable by construction — all-integer fields),
+//! so unchanged beam prefixes cost one hash lookup instead of a
+//! featurization plus a model evaluation. Scoring also goes through
+//! [`crate::dataset::builder::featurize_schedule`], which skips the
+//! simulated benchmark runs a training sample would need — the model only
+//! reads features.
+
+use crate::dataset::builder::featurize_schedule;
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::predictor::Predictor;
+use crate::schedule::primitives::PipelineSchedule;
+use crate::search::beam::CostModel;
+use crate::sim::Machine;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+/// Cost model over any predictor. Construct one per (pipeline, search);
+/// the cache is invalidated automatically if a different pipeline shows
+/// up, so a reused instance is safe, just no longer warm.
+pub struct PredictorCost {
+    predictor: Box<dyn Predictor>,
+    machine: Machine,
+    caching: bool,
+    cache: RefCell<HashMap<PipelineSchedule, f64>>,
+    /// Identity tag of the pipeline the cache entries belong to (see
+    /// [`pipeline_identity`] — structural, so two different pipelines
+    /// sharing a name do not serve each other's scores).
+    cached_pipeline: RefCell<Option<String>>,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+impl PredictorCost {
+    pub fn new(predictor: Box<dyn Predictor>, machine: Machine) -> PredictorCost {
+        PredictorCost {
+            predictor,
+            machine,
+            caching: true,
+            cache: RefCell::new(HashMap::new()),
+            cached_pipeline: RefCell::new(None),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        }
+    }
+
+    /// Caching disabled — every score featurizes and runs the model. Used
+    /// by the benches and the cache-equivalence tests as the reference.
+    pub fn uncached(predictor: Box<dyn Predictor>, machine: Machine) -> PredictorCost {
+        PredictorCost { caching: false, ..PredictorCost::new(predictor, machine) }
+    }
+
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+        *self.cached_pipeline.borrow_mut() = None;
+    }
+
+    /// (cache hits, model evaluations) since construction.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Structural identity of a pipeline for cache invalidation: name plus
+/// every stage's op (kind + attrs), output shape and inputs — anything
+/// featurization reads. Cheap next to a model evaluation.
+fn pipeline_identity(p: &Pipeline) -> String {
+    use std::fmt::Write as _;
+    let mut id = String::with_capacity(64 + 32 * p.stages.len());
+    let _ = write!(id, "{}", p.name);
+    for s in &p.stages {
+        let _ = write!(id, "|{:?}{:?}{:?}", s.op, s.shape, s.inputs);
+    }
+    id
+}
+
+impl CostModel for PredictorCost {
+    fn score(&self, p: &Pipeline, nests: &[LoopNest], scheds: &[PipelineSchedule]) -> Vec<f64> {
+        if self.caching {
+            let identity = pipeline_identity(p);
+            let mut tag = self.cached_pipeline.borrow_mut();
+            if tag.as_deref() != Some(identity.as_str()) {
+                self.cache.borrow_mut().clear();
+                *tag = Some(identity);
+            }
+        }
+
+        let mut out = vec![f64::NAN; scheds.len()];
+        // (output index, position in the evaluation batch); duplicates
+        // within one call share a position when caching is on
+        let mut assign: Vec<(usize, usize)> = Vec::new();
+        // representative scheds index per evaluation-batch position
+        let mut evals: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache.borrow();
+            let mut pending: HashMap<&PipelineSchedule, usize> = HashMap::new();
+            for (i, sched) in scheds.iter().enumerate() {
+                if self.caching {
+                    if let Some(&v) = cache.get(sched) {
+                        out[i] = v;
+                        self.hits.set(self.hits.get() + 1);
+                        continue;
+                    }
+                    if let Some(&pos) = pending.get(sched) {
+                        assign.push((i, pos));
+                        self.hits.set(self.hits.get() + 1);
+                        continue;
+                    }
+                    pending.insert(sched, evals.len());
+                }
+                assign.push((i, evals.len()));
+                evals.push(i);
+            }
+        }
+
+        if !evals.is_empty() {
+            self.misses.set(self.misses.get() + evals.len());
+            let samples: Vec<_> = evals
+                .iter()
+                .map(|&i| featurize_schedule(p, nests, &scheds[i], &self.machine, 0, i as u32))
+                .collect();
+            let refs: Vec<&crate::dataset::sample::GraphSample> = samples.iter().collect();
+            let preds = self.predictor.predict(&refs).unwrap_or_else(|e| {
+                panic!("{} cost model inference failed: {e:#}", self.predictor.name())
+            });
+            for &(i, pos) in &assign {
+                out[i] = preds[pos];
+            }
+            if self.caching {
+                let mut cache = self.cache.borrow_mut();
+                for (&i, pred) in evals.iter().zip(&preds) {
+                    cache.insert(scheds[i].clone(), *pred);
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> String {
+        self.predictor.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::gbt::GbtConfig;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+    use crate::predictor::{GbtPredictor, GcnPredictor};
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::schedule::random::random_pipeline_schedule;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn gcn_cost(caching: bool) -> PredictorCost {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 4,
+            seed: 61,
+            ..Default::default()
+        });
+        let backend = NativeBackend::new();
+        let params = backend.init_params(2);
+        let p = GcnPredictor::new(Box::new(backend), params, ds.stats.clone().unwrap());
+        if caching {
+            PredictorCost::new(Box::new(p), Machine::default())
+        } else {
+            PredictorCost::uncached(Box::new(p), Machine::default())
+        }
+    }
+
+    #[test]
+    fn cached_scores_match_uncached_exactly() {
+        let net = crate::zoo::unet();
+        let nests = crate::lower::lower_pipeline(&net);
+        let cached = gcn_cost(true);
+        let uncached = gcn_cost(false);
+        propcheck::check_rng("predictor-cost cache equivalence", 17, 12, |rng| {
+            // batch with deliberate duplicates, as beam expansion produces
+            let mut scheds = Vec::new();
+            for _ in 0..3 {
+                scheds.push(random_pipeline_schedule(&net, &nests, rng));
+            }
+            scheds.push(scheds[0].clone());
+            scheds.push(scheds[1].clone());
+            let a = cached.score(&net, &nests, &scheds);
+            let b = uncached.score(&net, &nests, &scheds);
+            if a != b {
+                return Err(format!("cached {a:?} != uncached {b:?}"));
+            }
+            // duplicates must agree within one batch too
+            if a[0] != a[3] || a[1] != a[4] {
+                return Err(format!("duplicate schedules scored differently: {a:?}"));
+            }
+            Ok(())
+        });
+        let (hits, misses) = cached.cache_stats();
+        assert!(hits > 0, "repeated schedules should hit the cache");
+        assert!(misses > 0);
+        let (h2, _) = uncached.cache_stats();
+        assert_eq!(h2, 0, "uncached reference must never hit");
+    }
+
+    #[test]
+    fn cache_invalidates_across_pipelines() {
+        let unet = crate::zoo::unet();
+        let unet_nests = crate::lower::lower_pipeline(&unet);
+        let sq = crate::zoo::squeezenet();
+        let sq_nests = crate::lower::lower_pipeline(&sq);
+        let cost = gcn_cost(true);
+        let mut rng = Rng::new(3);
+        let s1 = vec![random_pipeline_schedule(&unet, &unet_nests, &mut rng)];
+        cost.score(&unet, &unet_nests, &s1);
+        assert_eq!(cost.cache_len(), 1);
+        let s2 = vec![random_pipeline_schedule(&sq, &sq_nests, &mut rng)];
+        cost.score(&sq, &sq_nests, &s2);
+        assert_eq!(cost.cache_len(), 1, "switching pipelines must clear the cache");
+    }
+
+    #[test]
+    fn beam_search_runs_on_a_learned_cost() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 6,
+            seed: 67,
+            ..Default::default()
+        });
+        let gbt = GbtPredictor::fit(&ds, GbtConfig { n_trees: 10, ..Default::default() });
+        let cost = PredictorCost::new(Box::new(gbt), Machine::default());
+        let net = crate::zoo::unet();
+        let nests = crate::lower::lower_pipeline(&net);
+        let (sched, score) = crate::search::beam_search(
+            &net,
+            &nests,
+            &cost,
+            &crate::search::BeamConfig { beam_width: 2, candidates_per_stage: 3, seed: 5 },
+        );
+        crate::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
+        assert!(score.is_finite() && score > 0.0);
+        let (hits, _) = cost.cache_stats();
+        assert!(hits > 0, "beam prefixes must hit the cache");
+    }
+}

@@ -1,0 +1,560 @@
+//! The crate's one prediction API.
+//!
+//! Historically the repo exposed three incompatible prediction interfaces:
+//! `runtime::Backend` threaded `(backend, params, stats)` triples through
+//! `train/` and `eval/`, `baselines::PerfModel` used per-sample `&mut self`
+//! calls, and `search::CostModel` implementations were hand-wired in
+//! `main.rs`. [`Predictor`] unifies them: every model — the GCN and all
+//! three baselines — answers batched [`Predictor::predict`] calls behind
+//! one object-safe trait, serializes to a single-file bundle
+//! ([`bundle`]), resolves by name through [`registry`], and drives beam
+//! search through the caching [`PredictorCost`] bridge ([`cost`]).
+//!
+//! * [`GcnPredictor`] — the owning GCN session: `Box<dyn Backend>` +
+//!   [`Params`] + [`FeatureStats`] in one value, saved/loaded as a bundle.
+//! * [`GcnView`] — the borrowing variant for code that still holds the
+//!   parts separately (the training loop evaluates candidate params every
+//!   epoch; cloning them into a session each time would be waste).
+//! * [`FfnPredictor`] / [`GruPredictor`] / [`GbtPredictor`] — adapters
+//!   giving the baselines the same batched `&self` interface (the FFN and
+//!   GRU forward passes cache activations, so they keep interior scratch
+//!   state behind a mutex).
+
+pub mod bundle;
+pub mod cost;
+pub mod registry;
+
+use crate::baselines::gbt::{Gbt, GbtConfig};
+use crate::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
+use crate::baselines::nn::Linear;
+use crate::baselines::rnn::{BiGru, BiGruWeights, RnnTrainConfig};
+use crate::constants::{DEP_DIM, FFN_TERMS, INV_DIM};
+use crate::dataset::sample::{Dataset, GraphSample};
+use crate::features::normalize::FeatureStats;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::params::Params;
+use crate::runtime::Backend;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use self::bundle::{Bundle, NamedTensor};
+use std::path::Path;
+use std::sync::Mutex;
+
+pub use self::cost::PredictorCost;
+
+/// A ready-to-serve performance model. Object-safe: the CLI, the eval
+/// harnesses and beam search all hold `&dyn Predictor` / `Box<dyn
+/// Predictor>`.
+pub trait Predictor {
+    /// Short identifier for tables and logs ("gcn", "halide-ffn", ...).
+    fn name(&self) -> String;
+
+    /// Predicted mean runtimes in seconds, one per sample, in order.
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>>;
+
+    /// Serialize to a single-file model bundle (see [`bundle`]).
+    fn save(&self, path: &Path) -> Result<()>;
+}
+
+// ---------------------------------------------------------------- GCN
+
+/// Owning GCN session: execution backend, parameters and feature
+/// normalization in one value. This is what `gcn-perf train` saves and
+/// every downstream consumer (eval, search, `predict`) loads.
+pub struct GcnPredictor {
+    backend: Box<dyn Backend>,
+    params: Params,
+    stats: FeatureStats,
+}
+
+impl GcnPredictor {
+    pub fn new(backend: Box<dyn Backend>, params: Params, stats: FeatureStats) -> GcnPredictor {
+        GcnPredictor { backend, params, stats }
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn stats(&self) -> &FeatureStats {
+        &self.stats
+    }
+
+    /// Load a GCN bundle. The native backend serves it; the parameter list
+    /// is validated tensor-by-tensor against the manifest of the bundled
+    /// conv depth, so a stale or foreign bundle fails loudly.
+    pub fn load(path: &Path) -> Result<GcnPredictor> {
+        let b = Bundle::load(path)?;
+        if b.kind != registry::KIND_GCN {
+            bail!("bundle {path:?} holds a '{}' model, not a GCN", b.kind);
+        }
+        let n_conv = b.meta_usize("n_conv")?;
+        let backend: Box<dyn Backend> = Box::new(NativeBackend::with_layers(n_conv));
+        let params = params_from_bundle(&b, backend.as_ref())?;
+        let stats = b.stats.context("gcn bundle carries no feature stats")?;
+        Ok(GcnPredictor { backend, params, stats })
+    }
+}
+
+impl Predictor for GcnPredictor {
+    fn name(&self) -> String {
+        "gcn".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        self.backend.predict_runtimes(&self.params, samples, &self.stats)
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        save_gcn_bundle(path, self.backend.manifest().n_conv, &self.params, &self.stats)
+    }
+}
+
+/// Borrowing GCN view over separately-held parts. Same predict/save code
+/// paths as [`GcnPredictor`], so the two cannot drift.
+pub struct GcnView<'a> {
+    pub backend: &'a dyn Backend,
+    pub params: &'a Params,
+    pub stats: &'a FeatureStats,
+}
+
+impl Predictor for GcnView<'_> {
+    fn name(&self) -> String {
+        "gcn".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        self.backend.predict_runtimes(self.params, samples, self.stats)
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        save_gcn_bundle(path, self.backend.manifest().n_conv, self.params, self.stats)
+    }
+}
+
+/// Write a GCN bundle from its parts (shared by [`GcnPredictor`],
+/// [`GcnView`] and [`crate::train::train_and_save`]).
+pub fn save_gcn_bundle(
+    path: &Path,
+    n_conv: usize,
+    params: &Params,
+    stats: &FeatureStats,
+) -> Result<()> {
+    let mut b = Bundle::new(registry::KIND_GCN);
+    b.stats = Some(stats.clone());
+    b.meta.insert("n_conv".into(), n_conv as f64);
+    for ((name, shape), values) in
+        params.names.iter().zip(&params.shapes).zip(&params.values)
+    {
+        b.tensors.push(NamedTensor {
+            name: name.clone(),
+            shape: shape.clone(),
+            data: values.clone(),
+        });
+    }
+    b.save(path)
+}
+
+/// Rebuild [`Params`] from a bundle, validating names and shapes against
+/// the backend's manifest (order is the manifest's flat calling
+/// convention).
+fn params_from_bundle(b: &Bundle, backend: &dyn Backend) -> Result<Params> {
+    let specs = &backend.manifest().params;
+    if b.tensors.len() != specs.len() {
+        bail!(
+            "gcn bundle has {} tensors, manifest expects {}",
+            b.tensors.len(),
+            specs.len()
+        );
+    }
+    let mut values = Vec::with_capacity(specs.len());
+    let mut shapes = Vec::with_capacity(specs.len());
+    let mut names = Vec::with_capacity(specs.len());
+    for (spec, t) in specs.iter().zip(&b.tensors) {
+        if t.name != spec.name {
+            bail!("gcn bundle tensor '{}' where manifest expects '{}'", t.name, spec.name);
+        }
+        if t.shape != spec.shape {
+            bail!(
+                "gcn bundle tensor '{}' has shape {:?}, manifest expects {:?}",
+                t.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        values.push(t.data.clone());
+        shapes.push(t.shape.clone());
+        names.push(t.name.clone());
+    }
+    Ok(Params { values, shapes, names })
+}
+
+// ---------------------------------------------------------- Halide FFN
+
+/// [`Predictor`] adapter for the Halide FFN baseline. The FFN forward pass
+/// caches layer activations for backprop, so prediction needs `&mut`
+/// internally; the adapter keeps that scratch state behind a mutex and
+/// presents the shared-reference batched interface.
+pub struct FfnPredictor {
+    inner: Mutex<HalideFfn>,
+}
+
+impl FfnPredictor {
+    pub fn from_model(model: HalideFfn) -> FfnPredictor {
+        FfnPredictor { inner: Mutex::new(model) }
+    }
+
+    /// Fit on a dataset (stats must be fitted) and wrap.
+    pub fn fit(ds: &Dataset, cfg: &FfnTrainConfig, seed: u64) -> Result<FfnPredictor> {
+        let stats = ds.stats.as_ref().context("dataset stats required to fit halide-ffn")?;
+        let mut model = HalideFfn::new(stats.clone(), seed);
+        model.fit(ds, cfg);
+        Ok(FfnPredictor::from_model(model))
+    }
+
+    pub fn load(path: &Path) -> Result<FfnPredictor> {
+        let b = Bundle::load(path)?;
+        if b.kind != registry::KIND_FFN {
+            bail!("bundle {path:?} holds a '{}' model, not the halide-ffn", b.kind);
+        }
+        use crate::baselines::halide_ffn::{FFN_CAT, FFN_EMB_DEP, FFN_EMB_INV, FFN_HIDDEN};
+        let emb_inv = linear_from_bundle(&b, "emb_inv", INV_DIM, FFN_EMB_INV, true)?;
+        let emb_dep = linear_from_bundle(&b, "emb_dep", DEP_DIM, FFN_EMB_DEP, true)?;
+        let hidden = linear_from_bundle(&b, "hidden", FFN_CAT, FFN_HIDDEN, true)?;
+        let head = linear_from_bundle(&b, "head", FFN_HIDDEN, FFN_TERMS, false)?;
+        let stats = b.stats.context("ffn bundle carries no feature stats")?;
+        Ok(FfnPredictor::from_model(HalideFfn::from_linears(
+            stats,
+            [emb_inv, emb_dep, hidden, head],
+        )))
+    }
+}
+
+impl Predictor for FfnPredictor {
+    fn name(&self) -> String {
+        "halide-ffn".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        let mut m = self.inner.lock().map_err(|_| anyhow!("ffn scratch state poisoned"))?;
+        Ok(samples.iter().map(|s| m.predict_sample(s)).collect())
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        let m = self.inner.lock().map_err(|_| anyhow!("ffn scratch state poisoned"))?;
+        let mut b = Bundle::new(registry::KIND_FFN);
+        b.stats = Some(m.stats().clone());
+        for (prefix, l) in ["emb_inv", "emb_dep", "hidden", "head"]
+            .into_iter()
+            .zip(m.linears())
+        {
+            push_linear(&mut b, prefix, l);
+        }
+        b.save(path)
+    }
+}
+
+fn push_linear(b: &mut Bundle, prefix: &str, l: &Linear) {
+    b.tensors.push(NamedTensor {
+        name: format!("{prefix}_w"),
+        shape: vec![l.n_in, l.n_out],
+        data: l.w.clone(),
+    });
+    b.tensors.push(NamedTensor {
+        name: format!("{prefix}_b"),
+        shape: vec![l.n_out],
+        data: l.b.clone(),
+    });
+}
+
+fn linear_from_bundle(
+    b: &Bundle,
+    prefix: &str,
+    n_in: usize,
+    n_out: usize,
+    relu: bool,
+) -> Result<Linear> {
+    let w = b.tensor(&format!("{prefix}_w"))?;
+    let bias = b.tensor(&format!("{prefix}_b"))?;
+    if w.shape != [n_in, n_out] || bias.shape != [n_out] {
+        bail!(
+            "bundle layer '{prefix}' has shapes {:?}/{:?}, this build expects [{n_in}, {n_out}]/[{n_out}]",
+            w.shape,
+            bias.shape
+        );
+    }
+    let mut l = Linear::new(n_in, n_out, relu, &mut Rng::new(0));
+    l.w = w.data.clone();
+    l.b = bias.data.clone();
+    Ok(l)
+}
+
+// -------------------------------------------------------------- bi-GRU
+
+/// [`Predictor`] adapter for the bi-GRU baseline (interior scratch state,
+/// same reasoning as [`FfnPredictor`]).
+pub struct GruPredictor {
+    inner: Mutex<BiGru>,
+}
+
+impl GruPredictor {
+    pub fn from_model(model: BiGru) -> GruPredictor {
+        GruPredictor { inner: Mutex::new(model) }
+    }
+
+    pub fn fit(ds: &Dataset, cfg: &RnnTrainConfig, hidden: usize, seed: u64) -> Result<GruPredictor> {
+        let stats = ds.stats.as_ref().context("dataset stats required to fit bi-gru")?;
+        let mut model = BiGru::new(stats.clone(), hidden, seed);
+        model.fit(ds, cfg);
+        Ok(GruPredictor::from_model(model))
+    }
+
+    pub fn load(path: &Path) -> Result<GruPredictor> {
+        let b = Bundle::load(path)?;
+        if b.kind != registry::KIND_RNN {
+            bail!("bundle {path:?} holds a '{}' model, not the bi-gru", b.kind);
+        }
+        let hidden = b.meta_usize("hidden")?;
+        let in_dim = INV_DIM + DEP_DIM;
+        let take = |name: &str, shape: &[usize]| -> Result<Vec<f32>> {
+            let t = b.tensor(name)?;
+            if t.shape != shape {
+                bail!("rnn bundle tensor '{name}' has shape {:?}, expected {shape:?}", t.shape);
+            }
+            Ok(t.data.clone())
+        };
+        let weights = BiGruWeights {
+            fwd_wx: take("fwd_wx", &[in_dim, 3 * hidden])?,
+            fwd_wh: take("fwd_wh", &[hidden, 3 * hidden])?,
+            fwd_b: take("fwd_b", &[3 * hidden])?,
+            bwd_wx: take("bwd_wx", &[in_dim, 3 * hidden])?,
+            bwd_wh: take("bwd_wh", &[hidden, 3 * hidden])?,
+            bwd_b: take("bwd_b", &[3 * hidden])?,
+            head_w: take("head_w", &[2 * hidden, 1])?,
+            head_b: take("head_b", &[1])?,
+        };
+        let stats = b.stats.context("rnn bundle carries no feature stats")?;
+        Ok(GruPredictor::from_model(BiGru::from_weights(stats, hidden, weights)))
+    }
+}
+
+impl Predictor for GruPredictor {
+    fn name(&self) -> String {
+        "bi-gru".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        let mut m = self.inner.lock().map_err(|_| anyhow!("gru scratch state poisoned"))?;
+        Ok(samples.iter().map(|s| m.predict_sample(s)).collect())
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        let m = self.inner.lock().map_err(|_| anyhow!("gru scratch state poisoned"))?;
+        let hidden = m.hidden();
+        let in_dim = INV_DIM + DEP_DIM;
+        let w = m.export_weights();
+        let mut b = Bundle::new(registry::KIND_RNN);
+        b.stats = Some(m.stats().clone());
+        b.meta.insert("hidden".into(), hidden as f64);
+        let tensors = [
+            ("fwd_wx", vec![in_dim, 3 * hidden], w.fwd_wx),
+            ("fwd_wh", vec![hidden, 3 * hidden], w.fwd_wh),
+            ("fwd_b", vec![3 * hidden], w.fwd_b),
+            ("bwd_wx", vec![in_dim, 3 * hidden], w.bwd_wx),
+            ("bwd_wh", vec![hidden, 3 * hidden], w.bwd_wh),
+            ("bwd_b", vec![3 * hidden], w.bwd_b),
+            ("head_w", vec![2 * hidden, 1], w.head_w),
+            ("head_b", vec![1], w.head_b),
+        ];
+        for (name, shape, data) in tensors {
+            b.tensors.push(NamedTensor { name: name.into(), shape, data });
+        }
+        b.save(path)
+    }
+}
+
+// ----------------------------------------------------------------- GBT
+
+/// [`Predictor`] adapter for the TVM-style GBT baseline (stateless
+/// prediction — no scratch mutex needed; the trees take raw features, so
+/// the bundle carries no stats).
+pub struct GbtPredictor {
+    inner: Gbt,
+}
+
+impl GbtPredictor {
+    pub fn from_model(model: Gbt) -> GbtPredictor {
+        GbtPredictor { inner: model }
+    }
+
+    pub fn fit(ds: &Dataset, cfg: GbtConfig) -> GbtPredictor {
+        GbtPredictor::from_model(Gbt::fit(ds, cfg))
+    }
+
+    pub fn load(path: &Path) -> Result<GbtPredictor> {
+        let b = Bundle::load(path)?;
+        if b.kind != registry::KIND_GBT {
+            bail!("bundle {path:?} holds a '{}' model, not the tvm-gbt", b.kind);
+        }
+        let cfg = GbtConfig {
+            n_trees: b.meta_usize("n_trees")?,
+            max_depth: b.meta_usize("max_depth")?,
+            learning_rate: b.meta_f64("learning_rate")? as f32,
+            min_child_weight: b.meta_f64("min_child_weight")? as f32,
+            lambda: b.meta_f64("lambda")? as f32,
+            n_bins: b.meta_usize("n_bins")?,
+            min_gain: b.meta_f64("min_gain")? as f32,
+        };
+        let base = b.meta_f64("base")? as f32;
+        let mut trees = Vec::new();
+        for (i, t) in b.tensors.iter().enumerate() {
+            let expect = format!("tree{i}");
+            if t.name != expect {
+                bail!("gbt bundle tensor '{}' where '{expect}' was expected", t.name);
+            }
+            if t.shape.len() != 2 || t.shape[1] != 5 {
+                bail!("gbt bundle tree '{}' has shape {:?}, expected [n, 5]", t.name, t.shape);
+            }
+            let nodes: Vec<[f32; 5]> = t
+                .data
+                .chunks_exact(5)
+                .map(|c| [c[0], c[1], c[2], c[3], c[4]])
+                .collect();
+            trees.push(nodes);
+        }
+        Ok(GbtPredictor::from_model(Gbt::from_export(cfg, base, trees)?))
+    }
+}
+
+impl Predictor for GbtPredictor {
+    fn name(&self) -> String {
+        "tvm-gbt".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        Ok(samples.iter().map(|s| self.inner.predict_sample(s)).collect())
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        let cfg = &self.inner.cfg;
+        let mut b = Bundle::new(registry::KIND_GBT);
+        b.meta.insert("n_trees".into(), cfg.n_trees as f64);
+        b.meta.insert("max_depth".into(), cfg.max_depth as f64);
+        b.meta.insert("learning_rate".into(), cfg.learning_rate as f64);
+        b.meta.insert("min_child_weight".into(), cfg.min_child_weight as f64);
+        b.meta.insert("lambda".into(), cfg.lambda as f64);
+        b.meta.insert("n_bins".into(), cfg.n_bins as f64);
+        b.meta.insert("min_gain".into(), cfg.min_gain as f64);
+        b.meta.insert("base".into(), self.inner.base() as f64);
+        for (i, nodes) in self.inner.export_trees().into_iter().enumerate() {
+            b.tensors.push(NamedTensor {
+                name: format!("tree{i}"),
+                shape: vec![nodes.len(), 5],
+                data: nodes.into_iter().flatten().collect(),
+            });
+        }
+        b.save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    fn tiny_ds() -> Dataset {
+        build_dataset(&DataGenConfig {
+            n_pipelines: 6,
+            schedules_per_pipeline: 6,
+            seed: 51,
+            ..Default::default()
+        })
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    #[test]
+    fn gcn_predictor_roundtrip_is_bit_exact() {
+        let ds = tiny_ds();
+        let backend = NativeBackend::new();
+        let params = backend.init_params(9);
+        let stats = ds.stats.clone().unwrap();
+        let refs: Vec<&GraphSample> = ds.samples.iter().collect();
+        let p = GcnPredictor::new(Box::new(backend), params, stats);
+        let before = p.predict(&refs).unwrap();
+
+        let path = tmp("gcn_perf_predictor_gcn.bundle");
+        p.save(&path).unwrap();
+        let q = GcnPredictor::load(&path).unwrap();
+        let after = q.predict(&refs).unwrap();
+        assert_eq!(before, after, "bundle round trip must preserve predictions bit-exactly");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gcn_bundle_rejects_wrong_kind_and_shape() {
+        let ds = tiny_ds();
+        let ffn = FfnPredictor::fit(&ds, &FfnTrainConfig { epochs: 1, ..Default::default() }, 3)
+            .unwrap();
+        let path = tmp("gcn_perf_predictor_kind.bundle");
+        ffn.save(&path).unwrap();
+        let err = GcnPredictor::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a GCN"), "{err}");
+
+        // shape drift: a 2-conv bundle declared as 1-conv must fail cleanly
+        let backend = NativeBackend::new();
+        let params = backend.init_params(1);
+        let mut b = Bundle::new(registry::KIND_GCN);
+        b.stats = ds.stats.clone();
+        b.meta.insert("n_conv".into(), 1.0);
+        for ((name, shape), values) in
+            params.names.iter().zip(&params.shapes).zip(&params.values)
+        {
+            b.tensors.push(NamedTensor {
+                name: name.clone(),
+                shape: shape.clone(),
+                data: values.clone(),
+            });
+        }
+        b.save(&path).unwrap();
+        assert!(GcnPredictor::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ffn_and_gru_and_gbt_roundtrip_bit_exact() {
+        let ds = tiny_ds();
+        let refs: Vec<&GraphSample> = ds.samples.iter().collect();
+
+        let ffn = FfnPredictor::fit(&ds, &FfnTrainConfig { epochs: 2, ..Default::default() }, 7)
+            .unwrap();
+        let path = tmp("gcn_perf_predictor_ffn.bundle");
+        ffn.save(&path).unwrap();
+        let before = ffn.predict(&refs).unwrap();
+        let after = FfnPredictor::load(&path).unwrap().predict(&refs).unwrap();
+        assert_eq!(before, after);
+
+        let gru = GruPredictor::fit(&ds, &RnnTrainConfig { epochs: 1, ..Default::default() }, 8, 5)
+            .unwrap();
+        gru.save(&path).unwrap();
+        let before = gru.predict(&refs).unwrap();
+        let after = GruPredictor::load(&path).unwrap().predict(&refs).unwrap();
+        assert_eq!(before, after);
+
+        let gbt = GbtPredictor::fit(&ds, GbtConfig { n_trees: 12, ..Default::default() });
+        gbt.save(&path).unwrap();
+        let before = gbt.predict(&refs).unwrap();
+        let after = GbtPredictor::load(&path).unwrap().predict(&refs).unwrap();
+        assert_eq!(before, after);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn view_and_owner_predict_identically() {
+        let ds = tiny_ds();
+        let backend = NativeBackend::new();
+        let params = backend.init_params(4);
+        let stats = ds.stats.clone().unwrap();
+        let refs: Vec<&GraphSample> = ds.samples.iter().collect();
+        let view = GcnView { backend: &backend, params: &params, stats: &stats };
+        let from_view = view.predict(&refs).unwrap();
+        let owner = GcnPredictor::new(Box::new(backend), params, stats);
+        assert_eq!(from_view, owner.predict(&refs).unwrap());
+    }
+}

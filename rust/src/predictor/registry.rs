@@ -1,0 +1,141 @@
+//! Name → [`Predictor`] resolution for the CLI and any embedding caller.
+//!
+//! Two entry points:
+//!
+//! * [`load_bundle`] — open any saved bundle and dispatch on its kind tag;
+//! * [`fit_model`] — fit a baseline from a training dataset by registry
+//!   name (the GCN trains through `gcn-perf train`, not here).
+//!
+//! `gcn-perf search --model <name>` accepts every name in [`REGISTERED`]
+//! plus `"oracle"` (the simulator itself, which scores schedules directly
+//! and therefore lives in `search`, not behind [`Predictor`]).
+
+use crate::baselines::gbt::GbtConfig;
+use crate::baselines::halide_ffn::FfnTrainConfig;
+use crate::baselines::rnn::RnnTrainConfig;
+use crate::dataset::sample::Dataset;
+use crate::predictor::bundle::Bundle;
+use crate::predictor::{FfnPredictor, GbtPredictor, GcnPredictor, GruPredictor, Predictor};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+pub const KIND_GCN: &str = "gcn";
+pub const KIND_FFN: &str = "ffn";
+pub const KIND_RNN: &str = "rnn";
+pub const KIND_GBT: &str = "gbt";
+
+/// Every model the registry can resolve (bundle kinds double as names).
+pub const REGISTERED: &[&str] = &[KIND_GCN, KIND_FFN, KIND_RNN, KIND_GBT];
+
+/// Knobs for fitting baselines on the fly (e.g. for model-guided search
+/// without a pre-saved bundle).
+#[derive(Debug, Clone)]
+pub struct FitConfig {
+    pub ffn_epochs: usize,
+    pub rnn_epochs: usize,
+    pub rnn_hidden: usize,
+    pub gbt_trees: usize,
+    pub seed: u64,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        FitConfig { ffn_epochs: 20, rnn_epochs: 8, rnn_hidden: 64, gbt_trees: 80, seed: 99 }
+    }
+}
+
+/// The kind tag of a saved bundle ("gcn", "ffn", ...), read from the
+/// header without deserializing the model.
+pub fn bundle_kind(path: &Path) -> Result<String> {
+    Bundle::peek_kind(path)
+}
+
+/// Load any saved bundle, dispatching on its kind tag.
+pub fn load_bundle(path: &Path) -> Result<Box<dyn Predictor>> {
+    let kind = bundle_kind(path)?;
+    Ok(match kind.as_str() {
+        KIND_GCN => Box::new(GcnPredictor::load(path)?),
+        KIND_FFN => Box::new(FfnPredictor::load(path)?),
+        KIND_RNN => Box::new(GruPredictor::load(path)?),
+        KIND_GBT => Box::new(GbtPredictor::load(path)?),
+        other => bail!(
+            "bundle {path:?} has unknown model kind '{other}' (this build knows {REGISTERED:?})"
+        ),
+    })
+}
+
+/// Fit a registered baseline on `train_ds`. The GCN is the one model that
+/// cannot be fitted here (it trains through `gcn-perf train` and arrives
+/// as a bundle).
+pub fn fit_model(name: &str, train_ds: &Dataset, cfg: &FitConfig) -> Result<Box<dyn Predictor>> {
+    Ok(match name {
+        KIND_FFN => Box::new(FfnPredictor::fit(
+            train_ds,
+            &FfnTrainConfig { epochs: cfg.ffn_epochs, ..Default::default() },
+            cfg.seed,
+        )?),
+        KIND_RNN => Box::new(GruPredictor::fit(
+            train_ds,
+            &RnnTrainConfig { epochs: cfg.rnn_epochs, ..Default::default() },
+            cfg.rnn_hidden,
+            cfg.seed,
+        )?),
+        KIND_GBT => Box::new(GbtPredictor::fit(
+            train_ds,
+            GbtConfig { n_trees: cfg.gbt_trees, ..Default::default() },
+        )),
+        KIND_GCN => bail!(
+            "the gcn is trained via `gcn-perf train`; pass its bundle with --bundle"
+        ),
+        other => bail!("unknown model '{other}' (registered: {REGISTERED:?}, plus 'oracle')"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    #[test]
+    fn fits_every_baseline_by_name() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 5,
+            schedules_per_pipeline: 5,
+            seed: 71,
+            ..Default::default()
+        });
+        let cfg = FitConfig { ffn_epochs: 1, rnn_epochs: 1, gbt_trees: 8, ..Default::default() };
+        let refs: Vec<&crate::dataset::sample::GraphSample> =
+            ds.samples.iter().take(4).collect();
+        for name in [KIND_FFN, KIND_RNN, KIND_GBT] {
+            let p = fit_model(name, &ds, &cfg).unwrap();
+            let preds = p.predict(&refs).unwrap();
+            assert_eq!(preds.len(), 4);
+            assert!(preds.iter().all(|v| v.is_finite() && *v > 0.0), "{name}: {preds:?}");
+        }
+        assert!(fit_model("gcn", &ds, &cfg).is_err());
+        assert!(fit_model("nope", &ds, &cfg).is_err());
+    }
+
+    #[test]
+    fn load_bundle_dispatches_on_kind() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 4,
+            seed: 73,
+            ..Default::default()
+        });
+        let cfg = FitConfig { ffn_epochs: 1, rnn_epochs: 1, gbt_trees: 6, ..Default::default() };
+        let path = std::env::temp_dir().join("gcn_perf_registry_dispatch.bundle");
+        for name in [KIND_FFN, KIND_RNN, KIND_GBT] {
+            let p = fit_model(name, &ds, &cfg).unwrap();
+            p.save(&path).unwrap();
+            let q = load_bundle(&path).unwrap();
+            assert_eq!(p.name(), q.name());
+            let refs: Vec<&crate::dataset::sample::GraphSample> =
+                ds.samples.iter().take(3).collect();
+            assert_eq!(p.predict(&refs).unwrap(), q.predict(&refs).unwrap());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

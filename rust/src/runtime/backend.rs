@@ -98,25 +98,76 @@ pub fn predict_chunk<B: Backend + ?Sized>(
     Ok(z.iter().map(|&v| (v as f64).exp()).collect())
 }
 
+/// A non-fatal problem encountered while loading a backend (e.g. PJRT
+/// artifacts present but unusable). The loaders *return* these instead of
+/// printing to stderr, so library embedders stay quiet and the CLI decides
+/// what to surface.
+#[derive(Debug, Clone)]
+pub struct BackendWarning {
+    /// The engine the warning is about ("pjrt", ...).
+    pub backend: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for BackendWarning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} backend: {}", self.backend, self.message)
+    }
+}
+
+/// A loaded backend plus any warnings produced on the way (empty in the
+/// default build — only engine fallbacks warn).
+pub struct LoadedBackend {
+    pub backend: Box<dyn Backend>,
+    pub warnings: Vec<BackendWarning>,
+}
+
+impl LoadedBackend {
+    // only the pjrt success path constructs a warning-free value directly
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    fn clean(backend: Box<dyn Backend>) -> LoadedBackend {
+        LoadedBackend { backend, warnings: Vec::new() }
+    }
+
+    /// Discard warnings (callers that have no user-facing channel).
+    pub fn ignore_warnings(self) -> Box<dyn Backend> {
+        self.backend
+    }
+
+    /// Print warnings to stderr and return the backend — the standard
+    /// CLI/example convenience. Library embedders that want different
+    /// handling read `warnings` directly.
+    pub fn warn_to_stderr(self) -> Box<dyn Backend> {
+        for w in &self.warnings {
+            eprintln!("warning: {w}");
+        }
+        self.backend
+    }
+}
+
 /// Load the preferred backend for `artifacts_dir`.
 ///
 /// With the `pjrt` feature enabled and artifacts present, the PJRT engine
-/// is tried first and the native engine is the fallback; the default build
-/// always returns the native engine (and needs no artifacts at all).
-pub fn load_backend(artifacts_dir: &Path, with_train: bool) -> Result<Box<dyn Backend>> {
+/// is tried first and the native engine is the fallback (with a
+/// [`BackendWarning`] explaining why); the default build always returns
+/// the native engine (and needs no artifacts at all).
+pub fn load_backend(artifacts_dir: &Path, with_train: bool) -> Result<LoadedBackend> {
+    #[allow(unused_mut)]
+    let mut warnings: Vec<BackendWarning> = Vec::new();
     #[cfg(feature = "pjrt")]
     {
         if artifacts_dir.join("manifest.json").exists() {
             match crate::runtime::gcn::GcnRuntime::load(artifacts_dir, with_train) {
-                Ok(rt) => return Ok(Box::new(rt)),
-                Err(e) => {
-                    eprintln!("pjrt backend unavailable ({e:#}); falling back to native")
-                }
+                Ok(rt) => return Ok(LoadedBackend::clean(Box::new(rt))),
+                Err(e) => warnings.push(BackendWarning {
+                    backend: "pjrt",
+                    message: format!("unavailable ({e:#}); falling back to native"),
+                }),
             }
         }
     }
     let _ = (artifacts_dir, with_train);
-    Ok(Box::new(NativeBackend::new()))
+    Ok(LoadedBackend { backend: Box::new(NativeBackend::new()), warnings })
 }
 
 /// Load a conv-depth ablation variant (`layers` graph-convolution layers).
@@ -127,7 +178,9 @@ pub fn load_variant_backend(
     artifacts_dir: &Path,
     layers: usize,
     with_train: bool,
-) -> Result<Box<dyn Backend>> {
+) -> Result<LoadedBackend> {
+    #[allow(unused_mut)]
+    let mut warnings: Vec<BackendWarning> = Vec::new();
     #[cfg(feature = "pjrt")]
     {
         if artifacts_dir.join("manifest.json").exists() {
@@ -142,16 +195,17 @@ pub fn load_variant_backend(
                     // variants carry their own parameter lists
                     rt.manifest.n_conv = layers;
                     rt.manifest.params = crate::runtime::manifest::param_specs(layers);
-                    return Ok(Box::new(rt));
+                    return Ok(LoadedBackend::clean(Box::new(rt)));
                 }
-                Err(e) => {
-                    eprintln!("pjrt variant unavailable ({e:#}); falling back to native")
-                }
+                Err(e) => warnings.push(BackendWarning {
+                    backend: "pjrt",
+                    message: format!("variant unavailable ({e:#}); falling back to native"),
+                }),
             }
         }
     }
     let _ = (artifacts_dir, with_train);
-    Ok(Box::new(NativeBackend::with_layers(layers)))
+    Ok(LoadedBackend { backend: Box::new(NativeBackend::with_layers(layers)), warnings })
 }
 
 #[cfg(test)]
@@ -161,7 +215,9 @@ mod tests {
     #[test]
     fn default_backend_is_native_without_artifacts() {
         let dir = std::env::temp_dir().join("gcn_perf_no_artifacts_here");
-        let be = load_backend(&dir, true).unwrap();
+        let loaded = load_backend(&dir, true).unwrap();
+        assert!(loaded.warnings.is_empty(), "no artifacts, nothing to warn about");
+        let be = loaded.backend;
         assert_eq!(be.name(), "native");
         assert_eq!(be.manifest().n_conv, crate::constants::N_CONV);
     }
@@ -170,7 +226,7 @@ mod tests {
     fn variant_backend_layer_counts() {
         let dir = std::env::temp_dir().join("gcn_perf_no_artifacts_here");
         for layers in [0usize, 1, 2, 4] {
-            let be = load_variant_backend(&dir, layers, false).unwrap();
+            let be = load_variant_backend(&dir, layers, false).unwrap().ignore_warnings();
             assert_eq!(be.manifest().n_conv, layers);
             assert_eq!(be.manifest().params.len(), 6 + 4 * layers);
         }

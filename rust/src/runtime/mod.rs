@@ -18,7 +18,9 @@ pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod gcn;
 
-pub use backend::{load_backend, load_variant_backend, Backend};
+pub use backend::{
+    load_backend, load_variant_backend, Backend, BackendWarning, LoadedBackend,
+};
 #[cfg(feature = "pjrt")]
 pub use gcn::GcnRuntime;
 pub use manifest::Manifest;

@@ -21,7 +21,7 @@ pub enum ComputeLoc {
 /// extent `f`, and the tiled order is all outers (in `order`) followed by
 /// all inners (in `order`) followed by reduction loops — the classic
 /// tiled/blocked execution of §II-A.3.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct StageSchedule {
     /// Permutation of spatial dims, outermost-first traversal order.
     pub order: Vec<usize>,
@@ -87,8 +87,10 @@ impl StageSchedule {
     }
 }
 
-/// One schedule per stage of a pipeline (index = stage id).
-#[derive(Debug, Clone, PartialEq)]
+/// One schedule per stage of a pipeline (index = stage id). All-integer
+/// fields, so schedules are `Eq + Hash` — [`crate::predictor::PredictorCost`]
+/// keys its memoization cache on complete schedules.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PipelineSchedule {
     pub stages: Vec<StageSchedule>,
 }

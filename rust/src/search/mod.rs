@@ -1,7 +1,11 @@
 //! Model-guided schedule search (Fig 2): "the search technique generates a
 //! pool of candidate schedules and uses the performance model to select the
 //! most promising candidates for further exploration."
+//!
+//! Cost models implement [`CostModel`]; any [`crate::predictor::Predictor`]
+//! becomes one through the re-exported caching [`PredictorCost`] bridge.
 
 pub mod beam;
 
+pub use crate::predictor::PredictorCost;
 pub use beam::{beam_search, BeamConfig, CostModel, NoisySimCost, SimCost};

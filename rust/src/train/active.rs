@@ -10,10 +10,11 @@
 
 use crate::baselines::gbt::{Gbt, GbtConfig};
 use crate::dataset::sample::Dataset;
+use crate::predictor::{GcnView, Predictor};
 use crate::runtime::Backend;
-use crate::train::{train, TrainConfig};
+use crate::train::{evaluate_predictor_mape, train, TrainConfig};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 #[derive(Debug, Clone)]
 pub struct ActiveConfig {
@@ -50,12 +51,15 @@ fn subset(ds: &Dataset, idx: &[usize]) -> Dataset {
     out
 }
 
-fn eval_mape(rt: &dyn Backend, params: &crate::runtime::Params, ds: &Dataset, test: &Dataset) -> Result<f64> {
-    let stats = ds.stats.as_ref().unwrap();
-    let refs: Vec<&crate::dataset::sample::GraphSample> = test.samples.iter().collect();
-    let preds = rt.predict_runtimes(params, &refs, stats)?;
-    let truth: Vec<f64> = test.samples.iter().map(|s| s.mean_runtime()).collect();
-    Ok(crate::util::stats::mape(&truth, &preds))
+/// The round's GCN as a borrowing predictor session (stats come from the
+/// labeled subset the round trained on).
+fn round_view<'a>(
+    rt: &'a dyn Backend,
+    params: &'a crate::runtime::Params,
+    ds: &'a Dataset,
+) -> Result<GcnView<'a>> {
+    let stats = ds.stats.as_ref().context("labeled subset stats")?;
+    Ok(GcnView { backend: rt, params, stats })
 }
 
 /// Run the active-learning study; returns per-round test MAPE for the
@@ -93,12 +97,12 @@ pub fn active_learning_study(
         // --- active arm
         let ds_a = subset(pool, &labeled_active);
         let res_a = train(rt, &ds_a, test, &tcfg)?;
-        let mape_a = eval_mape(rt, &res_a.params, &ds_a, test)?;
+        let mape_a = evaluate_predictor_mape(&round_view(rt, &res_a.params, &ds_a)?, test)?;
 
         // --- random arm (same budget)
         let ds_r = subset(pool, &labeled_random);
         let res_r = train(rt, &ds_r, test, &tcfg)?;
-        let mape_r = eval_mape(rt, &res_r.params, &ds_r, test)?;
+        let mape_r = evaluate_predictor_mape(&round_view(rt, &res_r.params, &ds_r)?, test)?;
 
         rounds.push(ActiveRound {
             round,
@@ -112,11 +116,10 @@ pub fn active_learning_study(
         }
 
         // --- acquisition: committee disagreement on the remaining pool
-        let stats = ds_a.stats.as_ref().unwrap();
         let gbt = Gbt::fit(&ds_a, GbtConfig { n_trees: 40, ..Default::default() });
         let pool_refs: Vec<&crate::dataset::sample::GraphSample> =
             pool_active.iter().map(|&i| &pool.samples[i]).collect();
-        let gcn_pred = rt.predict_runtimes(&res_a.params, &pool_refs, stats)?;
+        let gcn_pred = round_view(rt, &res_a.params, &ds_a)?.predict(&pool_refs)?;
         let mut scored: Vec<(usize, f64)> = pool_active
             .iter()
             .zip(&gcn_pred)

@@ -6,6 +6,7 @@ pub mod active;
 use crate::constants::BATCH;
 use crate::dataset::sample::Dataset;
 use crate::model::Batch;
+use crate::predictor::{save_gcn_bundle, GcnView, Predictor};
 use crate::runtime::{Backend, Params};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -69,13 +70,21 @@ fn epoch_batches<'a>(
         .collect()
 }
 
-/// Mean-absolute-percentage error of the runtime predictions on `ds`.
-pub fn evaluate_mape(rt: &dyn Backend, params: &Params, ds: &Dataset) -> Result<f64> {
-    let stats = ds.stats.as_ref().context("dataset stats")?;
+/// Mean-absolute-percentage error of a predictor's runtime predictions on
+/// `ds`.
+pub fn evaluate_predictor_mape(p: &dyn Predictor, ds: &Dataset) -> Result<f64> {
     let refs: Vec<&crate::dataset::sample::GraphSample> = ds.samples.iter().collect();
-    let preds = rt.predict_runtimes(params, &refs, stats)?;
+    let preds = p.predict(&refs)?;
     let truth: Vec<f64> = ds.samples.iter().map(|s| s.mean_runtime()).collect();
     Ok(stats::mape(&truth, &preds))
+}
+
+/// [`evaluate_predictor_mape`] for the training loop's loose
+/// (backend, params) pairs, viewed through [`GcnView`] so the prediction
+/// path is the same one the served session uses.
+pub fn evaluate_mape(rt: &dyn Backend, params: &Params, ds: &Dataset) -> Result<f64> {
+    let stats = ds.stats.as_ref().context("dataset stats")?;
+    evaluate_predictor_mape(&GcnView { backend: rt, params, stats }, ds)
 }
 
 /// Train the GCN on `train`, tracking MAPE on `test`; returns the params
@@ -152,16 +161,20 @@ pub fn train(
     Ok(TrainResult { params: best_params, history, best_test_mape: best_mape })
 }
 
-/// Convenience: train and checkpoint.
+/// Convenience: train and write a single-file model bundle (params +
+/// training-set feature stats) that [`crate::predictor::GcnPredictor::load`]
+/// serves directly — no loose stats file, no dataset re-split at eval
+/// time.
 pub fn train_and_save(
     rt: &dyn Backend,
     train_ds: &Dataset,
     test_ds: &Dataset,
     cfg: &TrainConfig,
-    ckpt: &Path,
+    bundle_path: &Path,
 ) -> Result<TrainResult> {
     let result = train(rt, train_ds, test_ds, cfg)?;
-    result.params.save(ckpt)?;
+    let stats = train_ds.stats.as_ref().context("train stats")?;
+    save_gcn_bundle(bundle_path, rt.manifest().n_conv, &result.params, stats)?;
     Ok(result)
 }
 

@@ -8,6 +8,7 @@ use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
 use gcn_perf::dataset::store;
 use gcn_perf::eval::harness;
 use gcn_perf::model::Batch;
+use gcn_perf::predictor::{GcnPredictor, GcnView, Predictor};
 use gcn_perf::runtime::{load_backend, Backend, NativeBackend};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train, TrainConfig};
@@ -46,8 +47,11 @@ fn fig4_pipeline_end_to_end() {
 
 #[test]
 fn default_backend_loads_without_artifacts() {
-    // the whole point of the native backend: step zero works everywhere
-    let be = load_backend(Path::new("artifacts_that_do_not_exist"), true).unwrap();
+    // the whole point of the native backend: step zero works everywhere;
+    // the loader reports problems as structured warnings, not stderr spam
+    let loaded = load_backend(Path::new("artifacts_that_do_not_exist"), true).unwrap();
+    assert!(loaded.warnings.is_empty());
+    let be = loaded.backend;
     assert_eq!(be.name(), "native");
     assert_eq!(be.manifest().n_conv, N_CONV);
 }
@@ -155,7 +159,9 @@ fn fig8_harness_produces_three_rows() {
         &TrainConfig { epochs: 3, verbose: false, ..Default::default() },
     )
     .unwrap();
-    let rows = harness::run_fig8(&rt, &result.params, &train_ds, &test_ds, 3, false).unwrap();
+    let stats = train_ds.stats.clone().unwrap();
+    let view = GcnView { backend: &rt, params: &result.params, stats: &stats };
+    let rows = harness::run_fig8(&view, &train_ds, &test_ds, 3, false).unwrap();
     assert_eq!(rows.len(), 3);
     assert_eq!(rows[0].model, "gcn (ours)");
     assert_eq!(rows[1].model, "halide-ffn");
@@ -172,7 +178,8 @@ fn fig9_harness_covers_nine_networks() {
     let ds = small_dataset(6, 6, 9);
     let stats = ds.stats.clone().unwrap();
     let params = rt.init_params(5);
-    let rows = harness::run_fig9(&rt, &params, &stats, &Machine::default(), 8, 3).unwrap();
+    let gcn = GcnPredictor::new(Box::new(rt), params, stats);
+    let rows = harness::run_fig9(&gcn, &Machine::default(), 8, 3).unwrap();
     assert_eq!(rows.len(), 9);
     for r in &rows {
         assert_eq!(r.n_schedules, 8);
@@ -238,6 +245,93 @@ fn dataset_scales_runtime_spread() {
         per_pipeline_ratios[per_pipeline_ratios.len() / 2]
     };
     assert!(median > 1.5, "median within-pipeline spread {median}");
+}
+
+#[test]
+fn trained_bundle_roundtrips_through_predict_path() {
+    // the acceptance loop of the predictor API: train → save bundle →
+    // reload via the registry (as `gcn-perf predict` does) → serve the
+    // same samples through the JSON interchange — predictions must match
+    // in-process inference bit-exactly
+    let rt = NativeBackend::new();
+    let ds = small_dataset(12, 8, 21);
+    let (train_ds, test_ds) = ds.split(0.2, 55);
+    let result = train(
+        &rt,
+        &train_ds,
+        &test_ds,
+        &TrainConfig { epochs: 2, verbose: false, ..Default::default() },
+    )
+    .unwrap();
+    let stats = train_ds.stats.clone().unwrap();
+    let view = GcnView { backend: &rt, params: &result.params, stats: &stats };
+    let refs: Vec<_> = test_ds.samples.iter().collect();
+    let in_process = view.predict(&refs).unwrap();
+
+    let path = std::env::temp_dir().join("gcn_perf_it_trained.bundle");
+    view.save(&path).unwrap();
+    let served = gcn_perf::predictor::registry::load_bundle(&path).unwrap();
+    assert_eq!(served.name(), "gcn");
+
+    // through the JSON sample interchange (what `predict --samples` reads)
+    let json = gcn_perf::dataset::json::samples_to_json(&test_ds.samples);
+    let parsed = gcn_perf::dataset::json::samples_from_json(&json).unwrap();
+    let parsed_refs: Vec<_> = parsed.iter().collect();
+    let from_bundle = served.predict(&parsed_refs).unwrap();
+    assert_eq!(in_process, from_bundle, "bundle + JSON round trip must be bit-exact");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn search_accepts_every_registered_model() {
+    // `gcn-perf search --model <name>` resolution: baselines fit from a
+    // training split, the gcn arrives as a bundle; all drive beam search
+    // through the cached PredictorCost bridge
+    use gcn_perf::predictor::registry::{fit_model, load_bundle, FitConfig, REGISTERED};
+    use gcn_perf::search::{beam_search, BeamConfig, CostModel, PredictorCost, SimCost};
+
+    let ds = small_dataset(5, 6, 23);
+    let net = gcn_perf::zoo::unet();
+    let nests = gcn_perf::lower::lower_pipeline(&net);
+    let machine = Machine::default();
+    let cfg = FitConfig { ffn_epochs: 1, rnn_epochs: 1, gbt_trees: 8, ..Default::default() };
+
+    let bundle = std::env::temp_dir().join("gcn_perf_it_search_gcn.bundle");
+    let backend = NativeBackend::new();
+    let params = backend.init_params(11);
+    GcnPredictor::new(Box::new(backend), params, ds.stats.clone().unwrap())
+        .save(&bundle)
+        .unwrap();
+
+    let mut rng = gcn_perf::util::rng::Rng::new(6);
+    let probe: Vec<_> = (0..4)
+        .map(|_| gcn_perf::schedule::random::random_pipeline_schedule(&net, &nests, &mut rng))
+        .collect();
+
+    for &name in REGISTERED {
+        let predictor = if name == "gcn" {
+            load_bundle(&bundle).unwrap()
+        } else {
+            fit_model(name, &ds, &cfg).unwrap()
+        };
+        let cost = PredictorCost::new(predictor, machine.clone());
+        let scores = cost.score(&net, &nests, &probe);
+        assert!(
+            scores.iter().all(|s| s.is_finite() && *s > 0.0),
+            "model '{name}' produced bad scores: {scores:?}"
+        );
+    }
+    std::fs::remove_file(&bundle).ok();
+
+    // the oracle path still works and beam search runs on a learned cost
+    let oracle = SimCost { machine: machine.clone() };
+    let (sched, _) = beam_search(
+        &net,
+        &nests,
+        &oracle,
+        &BeamConfig { beam_width: 2, candidates_per_stage: 3, seed: 1 },
+    );
+    gcn_perf::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
 }
 
 /// PJRT-artifact round trips — only meaningful with a real xla binding and

@@ -9,6 +9,13 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo clippy --all-targets -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets --quiet -- -D warnings
+else
+    echo "(clippy not installed — skipping; CI runs it)"
+fi
+
 echo "==> cargo doc --no-deps (deny rustdoc warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
