@@ -1,5 +1,6 @@
-//! Fig 9 standalone driver: pairwise ranking of schedules on the nine
-//! real-world networks with a trained GCN bundle.
+//! Fig 9 standalone driver: pairwise ranking of schedules on the zoo
+//! networks (the paper's nine + the >48-stage resnet50) with a trained
+//! GCN bundle.
 //!
 //!     cargo run --release --example rank_networks -- \
 //!         --bundle data/gcn.bundle [--schedules 100]

@@ -14,13 +14,13 @@
 
 use gcn_perf::baselines::gbt::{Gbt, GbtConfig};
 use gcn_perf::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
-use gcn_perf::constants::BATCH;
+use gcn_perf::constants::{BATCH, LEARNING_RATE};
 use gcn_perf::dataset::builder::{build_dataset, sample_from_schedule, DataGenConfig};
 use gcn_perf::features::featurize;
 use gcn_perf::lower::lower_pipeline;
-use gcn_perf::model::Batch;
+use gcn_perf::model::PackedBatch;
 use gcn_perf::predictor::GcnPredictor;
-use gcn_perf::runtime::{Backend, NativeBackend};
+use gcn_perf::runtime::{Backend, DenseRefBackend, NativeBackend};
 use gcn_perf::schedule::random::random_pipeline_schedule;
 use gcn_perf::search::{beam_search, BeamConfig, CostModel, PredictorCost, SimCost};
 use gcn_perf::sim::{simulate, Machine};
@@ -89,8 +89,8 @@ fn main() {
     let refs: Vec<&gcn_perf::dataset::sample::GraphSample> =
         ds.samples.iter().take(BATCH).collect();
     let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
-    run(bench_default("model/batch build (32 graphs)", || {
-        black_box(Batch::build(&refs, &stats, &bests));
+    run(bench_default("model/packed batch build (32 graphs)", || {
+        black_box(PackedBatch::build(&refs, &stats, &bests).unwrap());
     }));
 
     // ---------------------------------------------------------- baselines
@@ -111,14 +111,34 @@ fn main() {
     // ---------------------------------------------------------------- gcn
     let rt = NativeBackend::new();
     let params = rt.init_params(1);
-    let batch = Batch::build(&refs, &stats, &bests);
-    run(bench_default("gcn/native infer (batch 32)", || {
+    let batch = PackedBatch::build(&refs, &stats, &bests).unwrap();
+    run(bench_default("gcn/native sparse infer (batch 32)", || {
         black_box(rt.infer(&params, &batch).unwrap());
     }));
     let mut p = params.clone();
     let mut a = p.zeros_like();
-    run(bench_default("gcn/native train step (batch 32)", || {
+    run(bench_default("gcn/native sparse train step (batch 32)", || {
         black_box(rt.train_step(&mut p, &mut a, &batch).unwrap());
+    }));
+
+    // the dense padded reference on the identical batch — the layout the
+    // sparse engine replaced (see `gcn-perf bench` / BENCH_3.json for the
+    // full dense-vs-sparse report). Converted once, outside the timed
+    // loops: the old engine consumed ready-built dense batches, so a fair
+    // comparison must not time the converter.
+    let dense = DenseRefBackend::new();
+    let dense_batch = dense.to_dense(&batch).unwrap();
+    run(bench_default("gcn/dense-ref infer (batch 32)", || {
+        black_box(dense.infer_dense(&params, &dense_batch).unwrap());
+    }));
+    let mut dp = params.clone();
+    let mut da = dp.zeros_like();
+    run(bench_default("gcn/dense-ref train step (batch 32)", || {
+        black_box(
+            dense
+                .train_step_dense(&mut dp, &mut da, &dense_batch, LEARNING_RATE as f32)
+                .unwrap(),
+        );
     }));
     let many_refs: Vec<&gcn_perf::dataset::sample::GraphSample> = ds.samples.iter().collect();
     run(bench_default("gcn/native predict_runtimes (192 samples, parallel)", || {

@@ -4,8 +4,11 @@
 //! cross-checks them against `artifacts/manifest.json` at load time, and
 //! `runtime::native` builds its in-memory manifest directly from them.
 //!
-//! Artifact tensor shapes derived from these dimensions (see
-//! `python/compile/aot.py`):
+//! The native engine runs on the sparse packed layout
+//! (`model::PackedBatch`) with no graph-size or batch-size caps;
+//! `MAX_NODES` and `BATCH` survive as (a) the fixed tensor shapes of the
+//! AOT artifacts on the `pjrt` path and (b) the default graphs-per-batch
+//! chunking policy. Artifact tensor shapes (see `python/compile/aot.py`):
 //!
 //! * `inv`:  `[BATCH, MAX_NODES, INV_DIM]` — normalized schedule-invariant
 //!   stage features;
@@ -32,9 +35,11 @@ pub const HIDDEN: usize = 80;
 pub const N_CONV: usize = 2;
 /// Readout width: initial + one per conv layer, summed over stages (Fig 7).
 pub const READOUT: usize = NODE_DIM * (N_CONV + 1);
-/// Maximum number of stages per pipeline; graphs are padded to this.
+/// Padded node count of the dense layout — a cap only on the `pjrt`
+/// artifact path; the sparse packed layout has no stage limit.
 pub const MAX_NODES: usize = 48;
-/// Training / inference batch size baked into the AOT artifacts.
+/// Graphs per training/inference batch: the chunking policy of the
+/// packed layout, and the fixed batch dim of the AOT artifacts.
 pub const BATCH: usize = 32;
 /// Benchmark repetitions per schedule (paper: N = 10).
 pub const BENCH_RUNS: usize = 10;

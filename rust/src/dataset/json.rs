@@ -16,7 +16,7 @@
 //! `n_stages` is implied by the row count; `runs` may be omitted (zeros)
 //! since predictors never read measurements.
 
-use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM, MAX_NODES};
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
 use crate::dataset::sample::GraphSample;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -95,18 +95,13 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
         };
         let inv = feature_rows::<INV_DIM>(j, "inv", idx)?;
         let dep = feature_rows::<DEP_DIM>(j, "dep", idx)?;
-        if inv.len() != dep.len() {
-            bail!("sample {idx}: {} inv rows but {} dep rows", inv.len(), dep.len());
-        }
-        if inv.is_empty() {
-            bail!("sample {idx}: no stages");
-        }
+        // no model-side stage cap: the packed sparse layout handles any
+        // graph size (only the pjrt dense artifacts are limited, and they
+        // reject oversize batches themselves). The record format stores
+        // stage ids as u16, so that is the one remaining hard bound.
         let n_stages = inv.len();
-        if n_stages > MAX_NODES {
-            bail!(
-                "sample {idx}: {n_stages} stages exceeds this build's MAX_NODES = {MAX_NODES} \
-                 (the GCN batcher would reject it)"
-            );
+        if n_stages > u16::MAX as usize {
+            bail!("sample {idx}: {n_stages} stages exceeds the u16 stage-id range");
         }
         let mut edges = Vec::new();
         if let Some(es) = j.get("edges").and_then(|v| v.as_arr()) {
@@ -117,14 +112,12 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
                 if pair.len() != 2 {
                     bail!("sample {idx}: edges[{ei}] must be [src, dst]");
                 }
-                let a = pair[0].as_usize().context("edge src")?;
-                let b = pair[1].as_usize().context("edge dst")?;
-                if a >= n_stages || b >= n_stages {
-                    bail!(
-                        "sample {idx}: edge [{a}, {b}] out of range for {n_stages} stages"
-                    );
-                }
-                edges.push((a as u16, b as u16));
+                // cast-safety only — range-vs-n_stages is validate()'s job
+                let a = u16::try_from(pair[0].as_usize().context("edge src")?)
+                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] src exceeds u16"))?;
+                let b = u16::try_from(pair[1].as_usize().context("edge dst")?)
+                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] dst exceeds u16"))?;
+                edges.push((a, b));
             }
         }
         let mut runs = [0f32; BENCH_RUNS];
@@ -136,7 +129,7 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
                 runs[ri] = v.as_f64().context("runs value")? as f32;
             }
         }
-        out.push(GraphSample {
+        let sample = GraphSample {
             pipeline_id: num_or("pipeline_id", 0.0) as u32,
             schedule_id: num_or("schedule_id", 0.0) as u32,
             n_stages: n_stages as u16,
@@ -144,7 +137,12 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
             inv,
             dep,
             runs,
-        });
+        };
+        // the canonical structural check, shared with dataset::store::load
+        sample
+            .validate()
+            .with_context(|| format!("sample {idx} is malformed"))?;
+        out.push(sample);
     }
     Ok(out)
 }
@@ -174,6 +172,24 @@ mod tests {
             assert_eq!(a.dep, b.dep);
             assert_eq!(a.runs, b.runs);
         }
+    }
+
+    #[test]
+    fn samples_beyond_the_old_cap_parse() {
+        // 60 stages — rejected by the old MAX_NODES = 48 gate, fine now
+        let s = GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 60,
+            edges: (0..59).map(|i| (i as u16, (i + 1) as u16)).collect(),
+            inv: vec![[0.25; INV_DIM]; 60],
+            dep: vec![[0.75; DEP_DIM]; 60],
+            runs: [1e-3; BENCH_RUNS],
+        };
+        let text = samples_to_json(&[s]);
+        let back = samples_from_json(&text).unwrap();
+        assert_eq!(back[0].n_stages, 60);
+        assert_eq!(back[0].edges.len(), 59);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
 use crate::features::normalize::FeatureStats;
+use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
 
 /// One (pipeline, schedule) pair with its measured runtimes — one training
@@ -22,6 +23,28 @@ pub struct GraphSample {
 }
 
 impl GraphSample {
+    /// Structural validation: every edge references a real stage and the
+    /// feature row counts match `n_stages`. Dataset loaders run this on
+    /// every sample so malformed graphs fail at load time with a clear
+    /// error instead of corrupting batches downstream.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_stages as usize;
+        ensure!(n > 0, "sample has zero stages");
+        ensure!(
+            self.inv.len() == n && self.dep.len() == n,
+            "sample has {n} stages but {}/{} feature rows",
+            self.inv.len(),
+            self.dep.len()
+        );
+        for &(s, d) in &self.edges {
+            ensure!(
+                (s as usize) < n && (d as usize) < n,
+                "edge ({s}, {d}) out of range for a {n}-stage graph"
+            );
+        }
+        Ok(())
+    }
+
     /// ȳ — mean of the measurements (the regression target).
     pub fn mean_runtime(&self) -> f64 {
         self.runs.iter().map(|&r| r as f64).sum::<f64>() / BENCH_RUNS as f64

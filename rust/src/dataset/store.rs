@@ -169,7 +169,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
         let rv = r.f32s(BENCH_RUNS)?;
         let mut runs = [0f32; BENCH_RUNS];
         runs.copy_from_slice(&rv);
-        samples.push(GraphSample {
+        let sample = GraphSample {
             pipeline_id,
             schedule_id,
             n_stages,
@@ -177,7 +177,13 @@ pub fn load(path: &Path) -> Result<Dataset> {
             inv,
             dep,
             runs,
-        });
+        };
+        // fail at load time on malformed graphs (e.g. edges referencing
+        // stages that do not exist) instead of corrupting batches later
+        sample
+            .validate()
+            .with_context(|| format!("sample {} of {path:?} is malformed", samples.len()))?;
+        samples.push(sample);
     }
     Ok(Dataset { samples, stats })
 }
@@ -212,6 +218,28 @@ mod tests {
         let s1 = ds.stats.unwrap().to_flat();
         let s2 = rt.stats.unwrap().to_flat();
         assert_eq!(s1, s2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_edges_at_load() {
+        // save() is a dumb serializer; load() must catch a sample whose
+        // edge references a stage that does not exist
+        let bad = GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 2,
+            edges: vec![(0, 5)], // stage 5 of a 2-stage graph
+            inv: vec![[0.0; INV_DIM]; 2],
+            dep: vec![[0.0; DEP_DIM]; 2],
+            runs: [1e-3; BENCH_RUNS],
+        };
+        let ds = Dataset { samples: vec![bad], stats: None };
+        let dir = std::env::temp_dir().join("gcn_perf_test_store");
+        let path = dir.join("malformed.bin");
+        save(&ds, &path).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("malformed"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

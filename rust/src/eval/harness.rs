@@ -101,10 +101,11 @@ pub fn gbt_online_eval(test_ds: &Dataset) -> Result<(Vec<f64>, Vec<f64>)> {
     Ok((truth, pred))
 }
 
-/// Fig 9: pairwise ranking on the nine zoo networks. `n_schedules` per
-/// network ("several hundred schedules" in the paper; configurable here).
-/// The predictor is self-contained (a bundle-loaded session carries its
-/// own feature stats), so this needs no dataset.
+/// Fig 9: pairwise ranking on the zoo networks — the paper's nine plus
+/// the >48-stage resnet50 the sparse batching unlocked. `n_schedules`
+/// per network ("several hundred schedules" in the paper; configurable
+/// here). The predictor is self-contained (a bundle-loaded session
+/// carries its own feature stats), so this needs no dataset.
 pub fn run_fig9(
     p: &dyn Predictor,
     machine: &Machine,

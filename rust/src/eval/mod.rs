@@ -1,11 +1,13 @@
-//! Evaluation harnesses for the paper's figures.
+//! Evaluation harnesses for the paper's figures, plus the perf bench.
 //!
 //! * [`metrics`] — Fig 8: average error %, maximum error %, R².
 //! * [`ranking`] — Fig 9: pairwise schedule ranking accuracy.
+//! * [`perf`] — dense-vs-sparse engine benchmarks (`BENCH_3.json`).
 
 pub mod metrics;
 pub mod ranking;
 pub mod harness;
+pub mod perf;
 
 pub use metrics::{regression_metrics, RegressionMetrics};
 pub use ranking::{pairwise_ranking_accuracy, rank_networks, RankResult};

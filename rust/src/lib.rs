@@ -12,10 +12,11 @@
 //!   the paper's hardware testbed;
 //! * the §II-C featurization ([`features`]) and dataset pipeline ([`dataset`]);
 //! * the GCN execution backends behind the [`runtime::Backend`] trait —
-//!   the default pure-Rust native engine and, behind the `pjrt` cargo
-//!   feature, the PJRT path for the AOT-compiled JAX/Pallas artifacts
-//!   ([`runtime`]) — plus the training driver ([`train`]) and graph
-//!   batching ([`model`]);
+//!   the default pure-Rust sparse engine (CSR adjacency, block-diagonal
+//!   packed batches, no graph-size caps), the dense padded reference,
+//!   and, behind the `pjrt` cargo feature, the PJRT path for the
+//!   AOT-compiled JAX/Pallas artifacts ([`runtime`]) — plus the training
+//!   driver ([`train`]) and graph batching ([`model`]);
 //! * the crate's one prediction API ([`predictor`]): the object-safe
 //!   [`predictor::Predictor`] trait, the [`predictor::GcnPredictor`]
 //!   session with single-file model bundles, adapters for every baseline,
@@ -23,9 +24,9 @@
 //!   bridge;
 //! * the comparison models from the paper's evaluation ([`baselines`]): the
 //!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
-//! * the evaluation harnesses for Fig 8 and Fig 9 ([`eval`]), the nine
-//!   real-world networks ([`zoo`]) and the beam-search auto-scheduler
-//!   ([`search`]);
+//! * the evaluation harnesses for Fig 8 and Fig 9 plus the
+//!   dense-vs-sparse perf bench ([`eval`]), the real-world networks
+//!   ([`zoo`]) and the beam-search auto-scheduler ([`search`]);
 //! * dependency-free infrastructure ([`util`]): PRNG, thread pool, JSON,
 //!   stats, CLI parsing, bench + property-test harnesses.
 
@@ -59,3 +60,8 @@ pub mod eval;
 pub mod zoo;
 pub mod search;
 pub mod constants;
+
+// Shared test fixtures (JAX-pinned parity tensors, synthetic samples) —
+// test builds only, used by the model and runtime test suites alike.
+#[cfg(test)]
+pub(crate) mod testfix;

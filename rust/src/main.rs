@@ -6,10 +6,11 @@
 //!   predict    load any model bundle and serve predictions for a JSON
 //!              sample file (or a binary dataset)
 //!   fig8       regenerate Fig 8 (avg/max error, R² vs Halide + TVM models)
-//!   fig9       regenerate Fig 9 (pairwise ranking on the 9 zoo networks)
+//!   fig9       regenerate Fig 9 (pairwise ranking on the zoo networks)
 //!   ablate     §III-C conv-depth ablation (0/1/2/4 layers)
 //!   search     model-guided beam search on a zoo network (Fig 2); accepts
 //!              any registered model name via the Predictor registry
+//!   bench      dense-vs-sparse engine benchmarks, written to BENCH_3.json
 //!   info       backend / manifest / bundle info
 //!
 //! Everything is driven from rust; python is never on the runtime path.
@@ -53,6 +54,7 @@ fn main() {
         Some("active") => cmd_active(&args),
         Some("transfer") => cmd_transfer(&args),
         Some("search") => cmd_search(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         _ => {
             println!("{USAGE}");
@@ -81,6 +83,8 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   transfer  --bundle ...  (§VI-A cross-machine portability study)
   search    --network NAME [--model oracle|gcn|ffn|rnn|gbt]
             [--bundle ... | --data ...]
+  bench     [--out BENCH_3.json] [--fast] [--require-speedup]
+            (dense-vs-sparse perf trajectory)
   info      [--artifacts DIR] [--bundle ...]
 
 (--ckpt is accepted as an alias for --bundle.)";
@@ -329,11 +333,11 @@ fn cmd_ablate(args: &Args) -> Result<()> {
                     chunk.iter().map(|&i| &train_ds.samples[i]).collect();
                 let bests: Vec<f64> =
                     samples.iter().map(|s| best_rt[&s.pipeline_id]).collect();
-                let batch = gcn_perf::model::Batch::build(
+                let batch = gcn_perf::model::PackedBatch::build(
                     &samples,
                     train_ds.stats.as_ref().unwrap(),
                     &bests,
-                );
+                )?;
                 rt.train_step_lr(&mut params, &mut accum, &batch, lr)?;
             }
         }
@@ -491,6 +495,25 @@ fn cmd_search(args: &Args) -> Result<()> {
             "cost cache: {hits} hits / {evals} model evaluations ({} unique schedules)",
             m.cache_len()
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = gcn_perf::eval::perf::PerfBenchConfig {
+        fast: args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok(),
+        seed: args.u64_or("seed", 3),
+    };
+    let report = gcn_perf::eval::perf::run_perf_bench(&cfg)?;
+    let out = PathBuf::from(args.str_or("out", "BENCH_3.json"));
+    gcn_perf::eval::perf::write_perf_report(&report, &out)?;
+    println!(
+        "bench report written to {} (padded-workload forward speedup {:.2}x dense/sparse)",
+        out.display(),
+        report.padded_forward_speedup()
+    );
+    if args.has_flag("require-speedup") {
+        report.require_padded_speedup()?;
     }
     Ok(())
 }

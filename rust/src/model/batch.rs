@@ -1,216 +1,116 @@
-//! Padded, normalized graph batches.
+//! The dense padded batch layout — kept for the PJRT path and as the
+//! parity-test reference.
 //!
-//! The AOT artifacts take fixed shapes [B, N, ·] (B = BATCH, N = MAX_NODES).
-//! `Batch` owns the flat row-major buffers in exactly the layout PJRT
-//! expects, so `runtime` can upload without copies.
+//! The AOT artifacts take fixed shapes [B, N, ·] (B = `BATCH`,
+//! N = `MAX_NODES`), so the PJRT backend converts the native engine's
+//! [`crate::model::PackedBatch`] into a [`DenseBatch`] right before
+//! upload ([`DenseBatch::from_packed`] with those exact dims). The dense
+//! reference engine ([`crate::runtime::DenseRefBackend`]) uses the same
+//! layout with free dims to reproduce the pre-sparse execution semantics
+//! for parity tests and the dense-vs-sparse benchmarks. Nothing else in
+//! the stack builds dense batches anymore.
 
-use crate::constants::{BATCH, DEP_DIM, INV_DIM, MAX_NODES};
-#[cfg(test)]
-use crate::constants::BENCH_RUNS;
-use crate::dataset::sample::GraphSample;
-use crate::features::normalize::FeatureStats;
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::model::graph::PackedBatch;
+use anyhow::{ensure, Result};
 
-/// Row-normalized adjacency with self loops: A' = rownorm(A + Aᵀ + I).
-///
-/// The paper's eq. uses A+I; we also add Aᵀ so information flows both
-/// producer→consumer and consumer→producer (a Halide stage's cost depends
-/// on both its producers' and consumers' schedules — see DESIGN.md). Rows
-/// of padding nodes get a bare self loop so the conv is the identity there.
-pub fn build_adjacency(n_stages: usize, edges: &[(u16, u16)], n_pad: usize) -> Vec<f32> {
-    let mut a = vec![0f32; n_pad * n_pad];
-    for i in 0..n_pad {
-        a[i * n_pad + i] = 1.0;
-    }
-    for &(src, dst) in edges {
-        let (s, d) = (src as usize, dst as usize);
-        assert!(s < n_stages && d < n_stages, "edge out of range");
-        a[s * n_pad + d] = 1.0;
-        a[d * n_pad + s] = 1.0;
-    }
-    for r in 0..n_pad {
-        let row = &mut a[r * n_pad..(r + 1) * n_pad];
-        let sum: f32 = row.iter().sum();
-        if sum > 0.0 {
-            row.iter_mut().for_each(|v| *v /= sum);
-        }
-    }
-    a
-}
-
-/// Minimum α weight (Property 2 emphasis floor; see `Batch::build`).
-pub const ALPHA_FLOOR: f64 = 0.2;
-
-/// One fixed-shape batch, flat row-major, ready for PJRT upload.
+/// One fixed-shape dense batch, flat row-major. With `n_graphs = BATCH`
+/// and `n_pad = MAX_NODES` this is byte-for-byte the PJRT upload layout.
 #[derive(Debug, Clone)]
-pub struct Batch {
-    pub inv: Vec<f32>,         // [B, N, INV_DIM]
-    pub dep: Vec<f32>,         // [B, N, DEP_DIM]
-    pub adj: Vec<f32>,         // [B, N, N]
-    pub mask: Vec<f32>,        // [B, N]
-    pub log_y: Vec<f32>,       // [B]
-    pub weight: Vec<f32>,      // [B]  α·β̂ loss weights
-    pub sample_mask: Vec<f32>, // [B]  0 for padding rows
-    /// Number of real samples (≤ BATCH).
+pub struct DenseBatch {
+    /// Padded graph rows (≥ `len`).
+    pub n_graphs: usize,
+    /// Padded node count per graph.
+    pub n_pad: usize,
+    pub inv: Vec<f32>,         // [n_graphs, n_pad, INV_DIM]
+    pub dep: Vec<f32>,         // [n_graphs, n_pad, DEP_DIM]
+    pub adj: Vec<f32>,         // [n_graphs, n_pad, n_pad]
+    pub mask: Vec<f32>,        // [n_graphs, n_pad]
+    pub log_y: Vec<f32>,       // [n_graphs]
+    pub weight: Vec<f32>,      // [n_graphs]  α·β̂ loss weights
+    pub sample_mask: Vec<f32>, // [n_graphs]  0 for padding rows
+    /// Number of real graphs (≤ `n_graphs`).
     pub len: usize,
 }
 
-impl Batch {
-    /// Assemble a batch from ≤ BATCH samples.
-    ///
-    /// * features are standardized with `stats`
-    /// * `best_runtime[i]` = best mean runtime of sample i's pipeline (α)
-    /// * β = 1/std of the runs, normalized to mean 1 within the batch and
-    ///   clamped to [0.2, 5] so a near-noiseless outlier cannot dominate
-    pub fn build(
-        samples: &[&GraphSample],
-        stats: &FeatureStats,
-        best_runtime: &[f64],
-    ) -> Batch {
-        assert!(!samples.is_empty() && samples.len() <= BATCH);
-        assert_eq!(samples.len(), best_runtime.len());
-        let n = MAX_NODES;
-        let mut b = Batch {
-            inv: vec![0.0; BATCH * n * INV_DIM],
-            dep: vec![0.0; BATCH * n * DEP_DIM],
-            adj: vec![0.0; BATCH * n * n],
-            mask: vec![0.0; BATCH * n],
-            log_y: vec![0.0; BATCH],
-            weight: vec![0.0; BATCH],
-            sample_mask: vec![0.0; BATCH],
-            len: samples.len(),
-        };
-
-        // β normalization over the real samples
-        let betas: Vec<f64> = samples
-            .iter()
-            .map(|s| 1.0 / s.std_runtime().max(1e-9))
-            .collect();
-        let beta_mean = betas.iter().sum::<f64>() / betas.len() as f64;
-
-        for (bi, s) in samples.iter().enumerate() {
-            let ns = s.n_stages as usize;
-            assert!(ns <= n, "sample has {ns} stages > MAX_NODES {n}");
-            for (si, (iv, dv)) in s.inv.iter().zip(&s.dep).enumerate() {
-                let mut f = crate::features::StageFeatures {
-                    invariant: *iv,
-                    dependent: *dv,
-                };
-                stats.apply(&mut f);
-                let io = (bi * n + si) * INV_DIM;
-                b.inv[io..io + INV_DIM].copy_from_slice(&f.invariant);
-                let doff = (bi * n + si) * DEP_DIM;
-                b.dep[doff..doff + DEP_DIM].copy_from_slice(&f.dependent);
-                b.mask[bi * n + si] = 1.0;
-            }
-            let adj = build_adjacency(ns, &s.edges, n);
-            b.adj[bi * n * n..(bi + 1) * n * n].copy_from_slice(&adj);
-
-            let mean_y = s.mean_runtime();
-            b.log_y[bi] = (mean_y.max(1e-12)).ln() as f32;
-            // α floor: the paper's α = best/y starves very slow schedules of
-            // gradient entirely (our random schedule space spans >100x within
-            // a pipeline, wider than the paper's noisy-autoscheduler output);
-            // a 0.2 floor keeps Property 2's emphasis while every sample
-            // still trains. See DESIGN.md §Paper-faithfulness.
-            let alpha = (best_runtime[bi] / mean_y).clamp(ALPHA_FLOOR, 1.0);
-            let beta_hat = (betas[bi] / beta_mean).clamp(0.2, 5.0);
-            b.weight[bi] = (alpha * beta_hat) as f32;
-            b.sample_mask[bi] = 1.0;
+impl DenseBatch {
+    /// An all-zero batch of the given padded dims.
+    pub fn zeros(n_graphs: usize, n_pad: usize, len: usize) -> DenseBatch {
+        DenseBatch {
+            n_graphs,
+            n_pad,
+            inv: vec![0.0; n_graphs * n_pad * INV_DIM],
+            dep: vec![0.0; n_graphs * n_pad * DEP_DIM],
+            adj: vec![0.0; n_graphs * n_pad * n_pad],
+            mask: vec![0.0; n_graphs * n_pad],
+            log_y: vec![0.0; n_graphs],
+            weight: vec![0.0; n_graphs],
+            sample_mask: vec![0.0; n_graphs],
+            len,
         }
-        b
     }
 
-    /// Mean measured runtimes (seconds) of the real samples.
-    pub fn targets(&self) -> Vec<f64> {
-        (0..self.len).map(|i| (self.log_y[i] as f64).exp()).collect()
+    /// Pad a packed batch out to fixed dense shapes. Errors when a graph
+    /// exceeds `n_pad` nodes or the batch exceeds `n_graphs` graphs —
+    /// which is exactly the old `MAX_NODES`/`BATCH` cap, now confined to
+    /// the PJRT artifacts that actually require it.
+    pub fn from_packed(p: &PackedBatch, n_pad: usize, n_graphs: usize) -> Result<DenseBatch> {
+        ensure!(
+            p.n_graphs() <= n_graphs,
+            "packed batch has {} graphs, dense layout holds {n_graphs}",
+            p.n_graphs()
+        );
+        let mut d = DenseBatch::zeros(n_graphs, n_pad, p.n_graphs());
+        for g in 0..p.n_graphs() {
+            let nodes = p.graph_nodes(g);
+            let base = nodes.start;
+            let n = nodes.len();
+            ensure!(
+                n <= n_pad,
+                "graph {g} has {n} nodes, dense layout pads to {n_pad}"
+            );
+            for r in 0..n {
+                let dst = g * n_pad + r;
+                let src = base + r;
+                d.inv[dst * INV_DIM..(dst + 1) * INV_DIM]
+                    .copy_from_slice(&p.inv[src * INV_DIM..(src + 1) * INV_DIM]);
+                d.dep[dst * DEP_DIM..(dst + 1) * DEP_DIM]
+                    .copy_from_slice(&p.dep[src * DEP_DIM..(src + 1) * DEP_DIM]);
+                d.mask[dst] = 1.0;
+                let arow = &mut d.adj[(g * n_pad + r) * n_pad..(g * n_pad + r + 1) * n_pad];
+                let (cols, vals) = p.adj.row(src);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let local = c as usize;
+                    ensure!(
+                        nodes.contains(&local),
+                        "adjacency entry {src}->{local} crosses graph {g}'s block"
+                    );
+                    arow[local - base] = v;
+                }
+            }
+            // padding node rows: bare self loop, so the conv is the
+            // identity there (the node mask gates them out anyway)
+            for r in n..n_pad {
+                d.adj[(g * n_pad + r) * n_pad + r] = 1.0;
+            }
+            d.log_y[g] = p.log_y[g];
+            d.weight[g] = p.weight[g];
+            d.sample_mask[g] = 1.0;
+        }
+        Ok(d)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::sample::GraphSample;
-
-    fn mk_sample(n_stages: u16, runtime: f32) -> GraphSample {
-        let ns = n_stages as usize;
-        GraphSample {
-            pipeline_id: 1,
-            schedule_id: 0,
-            n_stages,
-            edges: (0..ns.saturating_sub(1))
-                .map(|i| (i as u16, (i + 1) as u16))
-                .collect(),
-            inv: vec![[0.5; INV_DIM]; ns],
-            dep: vec![[1.5; DEP_DIM]; ns],
-            runs: [runtime; BENCH_RUNS],
-        }
-    }
-
-    fn identity_stats() -> FeatureStats {
-        FeatureStats {
-            inv_mean: vec![0.0; INV_DIM],
-            inv_std: vec![1.0; INV_DIM],
-            dep_mean: vec![0.0; DEP_DIM],
-            dep_std: vec![1.0; DEP_DIM],
-        }
-    }
 
     #[test]
-    fn adjacency_rows_sum_to_one() {
-        let adj = build_adjacency(3, &[(0, 1), (1, 2)], 5);
-        for r in 0..5 {
-            let sum: f32 = adj[r * 5..(r + 1) * 5].iter().sum();
-            assert!((sum - 1.0).abs() < 1e-6, "row {r} sums to {sum}");
-        }
-        // padding rows are pure self loops
-        assert_eq!(adj[3 * 5 + 3], 1.0);
-        assert_eq!(adj[4 * 5 + 4], 1.0);
-        // symmetric off-diagonal structure
-        assert!(adj[1] > 0.0 && adj[5] > 0.0); // 0->1 and 1->0
-    }
-
-    #[test]
-    fn batch_layout_and_masks() {
-        let s1 = mk_sample(3, 1e-3);
-        let s2 = mk_sample(5, 2e-3);
-        let best = vec![1e-3, 1e-3];
-        let b = Batch::build(&[&s1, &s2], &identity_stats(), &best);
-        assert_eq!(b.len, 2);
-        // masks
-        let n = MAX_NODES;
-        assert_eq!(b.mask[0..3], [1.0, 1.0, 1.0]);
-        assert_eq!(b.mask[3], 0.0);
-        assert_eq!(b.mask[n..n + 5], [1.0; 5]);
-        assert_eq!(b.sample_mask[..3], [1.0, 1.0, 0.0]);
-        // features placed at the right offsets
-        assert_eq!(b.inv[0], 0.5);
-        assert_eq!(b.dep[0], 1.5);
-        assert_eq!(b.inv[(n + 4) * INV_DIM], 0.5); // sample 2, stage 4
-        // log targets
-        assert!((b.log_y[0] as f64 - (1e-3f64).ln()).abs() < 1e-3);
-    }
-
-    #[test]
-    fn alpha_weights_best_schedule_highest() {
-        let fast = mk_sample(3, 1e-3); // the best schedule
-        let slow = mk_sample(3, 8e-3);
-        let best = vec![1e-3, 1e-3];
-        let b = Batch::build(&[&fast, &slow], &identity_stats(), &best);
-        assert!(
-            b.weight[0] > b.weight[1] * 4.0,
-            "α should favor fast schedules: {:?}",
-            &b.weight[..2]
-        );
-    }
-
-    #[test]
-    fn beta_clamped() {
-        let mut noisy = mk_sample(3, 1e-3);
-        noisy.runs[0] = 2e-3; // large spread
-        let quiet = mk_sample(3, 1e-3); // zero spread -> huge raw beta
-        let best = vec![1e-3, 1e-3];
-        let b = Batch::build(&[&noisy, &quiet], &identity_stats(), &best);
-        assert!(b.weight.iter().all(|w| w.is_finite()));
-        assert!(b.weight[1] <= 5.0 * 1.0 + 1e-6);
+    fn zeros_has_consistent_shapes() {
+        let d = DenseBatch::zeros(4, 7, 2);
+        assert_eq!(d.inv.len(), 4 * 7 * INV_DIM);
+        assert_eq!(d.adj.len(), 4 * 7 * 7);
+        assert_eq!(d.mask.len(), 4 * 7);
+        assert_eq!(d.len, 2);
     }
 }

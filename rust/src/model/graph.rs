@@ -1,0 +1,499 @@
+//! Sparse, variable-size graph batching: CSR adjacency and the
+//! block-diagonal [`PackedBatch`].
+//!
+//! The paper's stage DAGs are tiny and sparse (a Halide pipeline has
+//! O(N) producer→consumer edges), so the padded dense
+//! `[BATCH, MAX_NODES, MAX_NODES]` layout the AOT artifacts use wastes
+//! almost all of its O(B·N²) adjacency on zeros — and caps every pipeline
+//! at `MAX_NODES` stages. This module is the native engine's layout
+//! instead: every graph keeps exactly its own nodes, all graphs of a
+//! batch are concatenated into one packed node matrix, and the
+//! row-normalized adjacency A′ = rownorm(A + Aᵀ + I) is stored as one
+//! block-diagonal CSR matrix over the packed node ids. There is no
+//! padding, no `MAX_NODES` cap and no fixed graph count; aggregation is
+//! O(E) instead of O(N²).
+//!
+//! The dense padded [`crate::model::DenseBatch`] still exists for the
+//! PJRT artifacts (fixed shapes are baked into the AOT HLO) and as the
+//! reference layout for parity tests; [`DenseBatch::from_packed`] /
+//! [`PackedBatch::from_dense`] convert between the two.
+
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::dataset::sample::GraphSample;
+use crate::features::normalize::FeatureStats;
+use crate::model::batch::DenseBatch;
+use anyhow::{ensure, Result};
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Minimum α weight (Property 2 emphasis floor; see [`PackedBatch::build`]).
+pub const ALPHA_FLOOR: f64 = 0.2;
+
+/// A compressed-sparse-row matrix of f32 weights. Column indices are
+/// ascending within each row, which fixes the floating-point accumulation
+/// order (parity tests rely on it matching a dense in-order sweep).
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    /// Row start offsets into `col_idx`/`val`; length `n_rows + 1`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    pub fn n_rows(&self) -> usize {
+        self.row_ptr.len().saturating_sub(1)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// The columns and values of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.col_idx[a..b], &self.val[a..b])
+    }
+
+    /// The transpose, with ascending column indices per row (counting
+    /// sort over the rows, which are themselves ascending — stable).
+    pub fn transpose(&self) -> Csr {
+        let n = self.n_rows();
+        let mut counts = vec![0u32; n + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut val = vec![0f32; self.nnz()];
+        for r in 0..n {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let slot = counts[c as usize] as usize;
+                col_idx[slot] = r as u32;
+                val[slot] = v;
+                counts[c as usize] += 1;
+            }
+        }
+        Csr { row_ptr, col_idx, val }
+    }
+}
+
+/// Row-normalized adjacency with self loops for one graph:
+/// A′ = rownorm(A + Aᵀ + I), as CSR over the graph's own node ids.
+///
+/// The paper's eq. uses A+I; we also add Aᵀ so information flows both
+/// producer→consumer and consumer→producer (a Halide stage's cost depends
+/// on both its producers' and consumers' schedules — see DESIGN.md).
+/// Returns an error (instead of panicking) when an edge references a
+/// stage outside `0..n_stages`; dataset loaders surface that as a
+/// malformed-sample error.
+pub fn build_csr(n_stages: usize, edges: &[(u16, u16)]) -> Result<Csr> {
+    ensure!(n_stages > 0, "graph must have at least one stage");
+    let mut nbrs: Vec<Vec<u32>> = (0..n_stages).map(|i| vec![i as u32]).collect();
+    for &(src, dst) in edges {
+        let (s, d) = (src as usize, dst as usize);
+        ensure!(
+            s < n_stages && d < n_stages,
+            "edge ({s}, {d}) out of range for a {n_stages}-stage graph"
+        );
+        if s != d {
+            nbrs[s].push(d as u32);
+            nbrs[d].push(s as u32);
+        }
+    }
+    let mut row_ptr = Vec::with_capacity(n_stages + 1);
+    let mut col_idx = Vec::new();
+    let mut val = Vec::new();
+    row_ptr.push(0u32);
+    for row in &mut nbrs {
+        row.sort_unstable();
+        row.dedup();
+        let w = 1.0 / row.len() as f32;
+        col_idx.extend_from_slice(row);
+        val.resize(col_idx.len(), w);
+        row_ptr.push(col_idx.len() as u32);
+    }
+    Ok(Csr { row_ptr, col_idx, val })
+}
+
+/// A block-diagonal batch of variable-size graphs: the nodes of all
+/// graphs concatenated into one packed node matrix, with per-graph
+/// offsets, and the adjacency of the whole batch as one CSR matrix over
+/// packed node ids (block-diagonal by construction — no cross-graph
+/// edges can exist).
+#[derive(Debug, Clone)]
+pub struct PackedBatch {
+    /// Node range of graph `g` is `node_offset[g]..node_offset[g + 1]`;
+    /// length `n_graphs + 1`.
+    pub node_offset: Vec<u32>,
+    /// Standardized schedule-invariant features, `[total_nodes, INV_DIM]`.
+    pub inv: Vec<f32>,
+    /// Standardized schedule-dependent features, `[total_nodes, DEP_DIM]`.
+    pub dep: Vec<f32>,
+    /// A′ over packed node ids (forward aggregation).
+    pub adj: Csr,
+    /// A′ᵀ over packed node ids (backward aggregation) — built lazily on
+    /// first [`PackedBatch::adj_t`] call, so inference-only batches (the
+    /// hot predict/search path) never pay for the transpose.
+    adj_t: OnceLock<Csr>,
+    /// log mean runtime per graph, `[n_graphs]`.
+    pub log_y: Vec<f32>,
+    /// α·β̂ loss weight per graph, `[n_graphs]` (ones for inference).
+    pub weight: Vec<f32>,
+}
+
+impl PackedBatch {
+    pub fn n_graphs(&self) -> usize {
+        self.node_offset.len() - 1
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        *self.node_offset.last().unwrap() as usize
+    }
+
+    /// Packed node-id range of graph `g`.
+    pub fn graph_nodes(&self, g: usize) -> Range<usize> {
+        self.node_offset[g] as usize..self.node_offset[g + 1] as usize
+    }
+
+    /// Largest per-graph node count in the batch.
+    pub fn max_graph_nodes(&self) -> usize {
+        (0..self.n_graphs()).map(|g| self.graph_nodes(g).len()).max().unwrap_or(0)
+    }
+
+    /// A′ᵀ for the backward pass, computed on first use and cached (the
+    /// training loop reuses a batch across its one train step; inference
+    /// never calls this).
+    pub fn adj_t(&self) -> &Csr {
+        self.adj_t.get_or_init(|| self.adj.transpose())
+    }
+
+    /// Assemble a training batch from any number of samples of any size.
+    ///
+    /// * features are standardized with `stats`
+    /// * `best_runtime[i]` = best mean runtime of sample i's pipeline (α)
+    /// * β = 1/std of the runs, normalized to mean 1 within the batch and
+    ///   clamped to [0.2, 5] so a near-noiseless outlier cannot dominate
+    /// * α is floored at [`ALPHA_FLOOR`]: the paper's α = best/y starves
+    ///   very slow schedules of gradient entirely (our random schedule
+    ///   space spans >100x within a pipeline, wider than the paper's
+    ///   noisy-autoscheduler output); the floor keeps Property 2's
+    ///   emphasis while every sample still trains. See DESIGN.md
+    ///   §Paper-faithfulness.
+    pub fn build(
+        samples: &[&GraphSample],
+        stats: &FeatureStats,
+        best_runtime: &[f64],
+    ) -> Result<PackedBatch> {
+        ensure!(!samples.is_empty(), "empty batch");
+        ensure!(
+            samples.len() == best_runtime.len(),
+            "{} samples but {} best-runtime entries",
+            samples.len(),
+            best_runtime.len()
+        );
+
+        // β normalization over the batch
+        let betas: Vec<f64> = samples
+            .iter()
+            .map(|s| 1.0 / s.std_runtime().max(1e-9))
+            .collect();
+        let beta_mean = betas.iter().sum::<f64>() / betas.len() as f64;
+
+        let mut b = PackedBatch::packed_features(samples, stats)?;
+        for (gi, s) in samples.iter().enumerate() {
+            let mean_y = s.mean_runtime();
+            b.log_y[gi] = (mean_y.max(1e-12)).ln() as f32;
+            let alpha = (best_runtime[gi] / mean_y).clamp(ALPHA_FLOOR, 1.0);
+            let beta_hat = (betas[gi] / beta_mean).clamp(0.2, 5.0);
+            b.weight[gi] = (alpha * beta_hat) as f32;
+        }
+        Ok(b)
+    }
+
+    /// Assemble an inference batch: features + adjacency only (loss
+    /// weights are ones, targets zero — predictors never read them).
+    pub fn for_inference(samples: &[&GraphSample], stats: &FeatureStats) -> Result<PackedBatch> {
+        ensure!(!samples.is_empty(), "empty batch");
+        PackedBatch::packed_features(samples, stats)
+    }
+
+    /// Shared feature/adjacency packing; `log_y` zero, `weight` one.
+    fn packed_features(samples: &[&GraphSample], stats: &FeatureStats) -> Result<PackedBatch> {
+        let mut node_offset = Vec::with_capacity(samples.len() + 1);
+        node_offset.push(0u32);
+        let mut total = 0usize;
+        for s in samples {
+            ensure!(
+                s.inv.len() == s.n_stages as usize && s.dep.len() == s.n_stages as usize,
+                "sample (pipeline {}, schedule {}) has {} stages but {}/{} feature rows",
+                s.pipeline_id,
+                s.schedule_id,
+                s.n_stages,
+                s.inv.len(),
+                s.dep.len()
+            );
+            total += s.n_stages as usize;
+            node_offset.push(total as u32);
+        }
+
+        let mut inv = vec![0f32; total * INV_DIM];
+        let mut dep = vec![0f32; total * DEP_DIM];
+        let mut row_ptr = Vec::with_capacity(total + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+
+        for (gi, s) in samples.iter().enumerate() {
+            let base = node_offset[gi] as usize;
+            for (si, (iv, dv)) in s.inv.iter().zip(&s.dep).enumerate() {
+                let mut f = crate::features::StageFeatures {
+                    invariant: *iv,
+                    dependent: *dv,
+                };
+                stats.apply(&mut f);
+                let io = (base + si) * INV_DIM;
+                inv[io..io + INV_DIM].copy_from_slice(&f.invariant);
+                let doff = (base + si) * DEP_DIM;
+                dep[doff..doff + DEP_DIM].copy_from_slice(&f.dependent);
+            }
+            let g = build_csr(s.n_stages as usize, &s.edges)?;
+            // splice the graph's CSR block in at the packed offset
+            let nnz0 = col_idx.len() as u32;
+            col_idx.extend(g.col_idx.iter().map(|&c| c + base as u32));
+            val.extend_from_slice(&g.val);
+            row_ptr.extend(g.row_ptr[1..].iter().map(|&p| p + nnz0));
+        }
+
+        let adj = Csr { row_ptr, col_idx, val };
+        let n_graphs = samples.len();
+        Ok(PackedBatch {
+            node_offset,
+            inv,
+            dep,
+            adj,
+            adj_t: OnceLock::new(),
+            log_y: vec![0f32; n_graphs],
+            weight: vec![1f32; n_graphs],
+        })
+    }
+
+    /// Convert a dense padded batch (the PJRT/fixture layout) into the
+    /// packed layout. Only the real graphs (`sample_mask > 0` rows still
+    /// count as graphs — their `weight` is folded with the mask) and the
+    /// real nodes of each graph survive; adjacency entries into padding
+    /// columns are dropped (their dense contribution is exactly zero, so
+    /// outputs are preserved bit-for-bit up to f64 summation of zeros).
+    pub fn from_dense(d: &DenseBatch) -> Result<PackedBatch> {
+        let np = d.n_pad;
+        let mut node_offset = Vec::with_capacity(d.len + 1);
+        node_offset.push(0u32);
+        let mut sizes = Vec::with_capacity(d.len);
+        let mut total = 0usize;
+        for g in 0..d.len {
+            let mask = &d.mask[g * np..(g + 1) * np];
+            let n = mask.iter().take_while(|&&m| m != 0.0).count();
+            ensure!(
+                mask[n..].iter().all(|&m| m == 0.0),
+                "graph {g}: node mask is not a contiguous prefix"
+            );
+            ensure!(n > 0, "graph {g}: empty node mask");
+            sizes.push(n);
+            total += n;
+            node_offset.push(total as u32);
+        }
+
+        let mut inv = vec![0f32; total * INV_DIM];
+        let mut dep = vec![0f32; total * DEP_DIM];
+        let mut row_ptr = Vec::with_capacity(total + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+        for g in 0..d.len {
+            let n = sizes[g];
+            let base = node_offset[g] as usize;
+            for r in 0..n {
+                let src = g * np + r;
+                inv[(base + r) * INV_DIM..(base + r + 1) * INV_DIM]
+                    .copy_from_slice(&d.inv[src * INV_DIM..(src + 1) * INV_DIM]);
+                dep[(base + r) * DEP_DIM..(base + r + 1) * DEP_DIM]
+                    .copy_from_slice(&d.dep[src * DEP_DIM..(src + 1) * DEP_DIM]);
+                let arow = &d.adj[(g * np + r) * np..(g * np + r) * np + n];
+                for (c, &a) in arow.iter().enumerate() {
+                    if a != 0.0 {
+                        col_idx.push((base + c) as u32);
+                        val.push(a);
+                    }
+                }
+                row_ptr.push(col_idx.len() as u32);
+            }
+        }
+        let adj = Csr { row_ptr, col_idx, val };
+        let log_y = d.log_y[..d.len].to_vec();
+        let weight: Vec<f32> = (0..d.len).map(|g| d.weight[g] * d.sample_mask[g]).collect();
+        Ok(PackedBatch {
+            node_offset,
+            inv,
+            dep,
+            adj,
+            adj_t: OnceLock::new(),
+            log_y,
+            weight,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testfix::{chain_sample as mk_sample, identity_stats};
+
+    #[test]
+    fn csr_rows_sum_to_one_and_are_symmetric_in_structure() {
+        let adj = build_csr(3, &[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(adj.n_rows(), 3);
+        for r in 0..3 {
+            let (_, vals) = adj.row(r);
+            let sum: f32 = vals.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {r} sums to {sum}");
+        }
+        // 0↔1 and 1↔2 both directions, self loops everywhere
+        let (c0, _) = adj.row(0);
+        assert_eq!(c0, &[0, 1]);
+        let (c1, _) = adj.row(1);
+        assert_eq!(c1, &[0, 1, 2]);
+        let (c2, _) = adj.row(2);
+        assert_eq!(c2, &[1, 2]);
+    }
+
+    #[test]
+    fn build_csr_rejects_out_of_range_edges() {
+        let err = build_csr(3, &[(0, 7)]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(build_csr(0, &[]).is_err());
+        // duplicate + self edges are tolerated (dense semantics)
+        let adj = build_csr(2, &[(0, 1), (1, 0), (0, 0)]).unwrap();
+        let (c0, v0) = adj.row(0);
+        assert_eq!(c0, &[0, 1]);
+        assert!((v0[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let adj = build_csr(4, &[(0, 1), (0, 2), (2, 3)]).unwrap();
+        let t = adj.transpose();
+        let tt = t.transpose();
+        assert_eq!(adj.row_ptr, tt.row_ptr);
+        assert_eq!(adj.col_idx, tt.col_idx);
+        assert_eq!(adj.val, tt.val);
+        // A'[r][c] == A'ᵀ[c][r]
+        for r in 0..4 {
+            let (cols, vals) = adj.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let (tc, tv) = t.row(c as usize);
+                let pos = tc.iter().position(|&x| x == r as u32).unwrap();
+                assert_eq!(tv[pos], v);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_layout_and_offsets() {
+        let s1 = mk_sample(3, 1e-3);
+        let s2 = mk_sample(5, 2e-3);
+        let best = vec![1e-3, 1e-3];
+        let b = PackedBatch::build(&[&s1, &s2], &identity_stats(), &best).unwrap();
+        assert_eq!(b.n_graphs(), 2);
+        assert_eq!(b.total_nodes(), 8);
+        assert_eq!(b.graph_nodes(0), 0..3);
+        assert_eq!(b.graph_nodes(1), 3..8);
+        assert_eq!(b.max_graph_nodes(), 5);
+        // features at the packed offsets
+        assert_eq!(b.inv[0], 0.5);
+        assert_eq!(b.dep[0], 1.5);
+        assert_eq!(b.inv[3 * INV_DIM], 0.5); // graph 1, stage 0
+        // the adjacency is block-diagonal: no column crosses its block
+        for g in 0..2 {
+            let r = b.graph_nodes(g);
+            for node in r.clone() {
+                let (cols, _) = b.adj.row(node);
+                for &c in cols {
+                    assert!(r.contains(&(c as usize)), "edge {node}->{c} leaves block {g}");
+                }
+            }
+        }
+        // log targets
+        assert!((b.log_y[0] as f64 - (1e-3f64).ln()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn no_node_cap() {
+        // far beyond the old MAX_NODES = 48 cap
+        let big = mk_sample(200, 1e-3);
+        let b = PackedBatch::build(&[&big], &identity_stats(), &[1e-3]).unwrap();
+        assert_eq!(b.total_nodes(), 200);
+        assert_eq!(b.adj.nnz(), 200 + 2 * 199); // self loops + chain both ways
+    }
+
+    #[test]
+    fn alpha_weights_best_schedule_highest() {
+        let fast = mk_sample(3, 1e-3); // the best schedule
+        let slow = mk_sample(3, 8e-3);
+        let best = vec![1e-3, 1e-3];
+        let b = PackedBatch::build(&[&fast, &slow], &identity_stats(), &best).unwrap();
+        assert!(
+            b.weight[0] > b.weight[1] * 4.0,
+            "α should favor fast schedules: {:?}",
+            &b.weight[..2]
+        );
+    }
+
+    #[test]
+    fn beta_clamped() {
+        let mut noisy = mk_sample(3, 1e-3);
+        noisy.runs[0] = 2e-3; // large spread
+        let quiet = mk_sample(3, 1e-3); // zero spread -> huge raw beta
+        let best = vec![1e-3, 1e-3];
+        let b = PackedBatch::build(&[&noisy, &quiet], &identity_stats(), &best).unwrap();
+        assert!(b.weight.iter().all(|w| w.is_finite()));
+        assert!(b.weight[1] <= 5.0 * 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn build_propagates_malformed_edges() {
+        let mut bad = mk_sample(3, 1e-3);
+        bad.edges.push((0, 40));
+        let err = PackedBatch::build(&[&bad], &identity_stats(), &[1e-3])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn dense_roundtrip_preserves_structure() {
+        let s1 = mk_sample(3, 1e-3);
+        let s2 = mk_sample(5, 2e-3);
+        let best = vec![1e-3, 1e-3];
+        let p = PackedBatch::build(&[&s1, &s2], &identity_stats(), &best).unwrap();
+        let d = DenseBatch::from_packed(&p, 8, 4).unwrap();
+        assert_eq!(d.len, 2);
+        assert_eq!(d.n_pad, 8);
+        assert_eq!(d.n_graphs, 4);
+        let q = PackedBatch::from_dense(&d).unwrap();
+        assert_eq!(p.node_offset, q.node_offset);
+        assert_eq!(p.inv, q.inv);
+        assert_eq!(p.dep, q.dep);
+        assert_eq!(p.adj.row_ptr, q.adj.row_ptr);
+        assert_eq!(p.adj.col_idx, q.adj.col_idx);
+        assert_eq!(p.adj.val, q.adj.val);
+        assert_eq!(p.log_y, q.log_y);
+        assert_eq!(p.weight, q.weight);
+        // a graph bigger than n_pad must be rejected
+        assert!(DenseBatch::from_packed(&p, 4, 4).is_err());
+        assert!(DenseBatch::from_packed(&p, 8, 1).is_err());
+    }
+}

@@ -1,7 +1,13 @@
-//! Model-side data preparation: padded graph batches and the normalized
-//! adjacency transform — the rust half of the contract with the AOT'd JAX
-//! model (shapes fixed by `artifacts/manifest.json`).
+//! Model-side data preparation.
+//!
+//! [`graph`] holds the native engine's layout: CSR adjacency and the
+//! block-diagonal variable-size [`PackedBatch`] (no node caps, no
+//! padding). [`batch`] keeps the dense padded [`DenseBatch`] that the
+//! fixed-shape PJRT artifacts require, plus the converters between the
+//! two layouts.
 
 pub mod batch;
+pub mod graph;
 
-pub use batch::{build_adjacency, Batch};
+pub use batch::DenseBatch;
+pub use graph::{build_csr, Csr, PackedBatch, ALPHA_FLOOR};

@@ -1,7 +1,6 @@
 //! BUILD_RANDOM_ONNX_MODEL / BUILD_NEW_STAGE / BUILD_RANDOM_NODE
 //! (Algorithm 1, §III-A).
 
-use crate::constants::MAX_NODES;
 use crate::ir::op::{Op, OpAttrs, OpKind};
 use crate::ir::pipeline::{Pipeline, SourceRef};
 use crate::util::rng::Rng;
@@ -27,7 +26,13 @@ pub struct GenConfig {
     pub unfavored_keep_prob: f64,
     /// Reject stages whose output exceeds this many elements.
     pub max_stage_elems: usize,
-    /// Hard cap on total stages (the GCN pads graphs to MAX_NODES).
+    /// Hard cap on total stages. A generation knob, not a model limit:
+    /// the sparse packed-batch engine handles any graph size (raise
+    /// `max_layers`/`max_width` along with this to actually generate
+    /// deeper models — see the `deep_configs_generate_past_the_old_cap`
+    /// test). The default stays at `constants::MAX_NODES` only so that
+    /// default-generated datasets remain consumable by the fixed-shape
+    /// pjrt artifacts; the native engine does not care.
     pub max_total_stages: usize,
 }
 
@@ -45,7 +50,7 @@ impl Default for GenConfig {
             multi_output_keep_prob: 0.05,
             unfavored_keep_prob: 0.1,
             max_stage_elems: 16 << 20, // 64 MiB f32
-            max_total_stages: MAX_NODES,
+            max_total_stages: crate::constants::MAX_NODES,
         }
     }
 }
@@ -396,6 +401,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn deep_configs_generate_past_the_old_cap() {
+        // max_total_stages is a knob, not a 48-stage model limit: a deep
+        // config must be able to produce graphs the old dense layout
+        // could not represent
+        let cfg = GenConfig {
+            min_layers: 24,
+            max_layers: 32,
+            min_width: 2,
+            max_width: 4,
+            max_total_stages: 128,
+            ..GenConfig::default()
+        };
+        let mut rng = Rng::new(13);
+        let deepest = (0..8)
+            .map(|i| generate_model(&cfg, &mut rng, i).num_stages())
+            .max()
+            .unwrap();
+        assert!(
+            deepest > crate::constants::MAX_NODES,
+            "deep config topped out at {deepest} stages"
+        );
     }
 
     #[test]

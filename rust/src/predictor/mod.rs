@@ -60,7 +60,9 @@ pub trait Predictor {
 
 /// Owning GCN session: execution backend, parameters and feature
 /// normalization in one value. This is what `gcn-perf train` saves and
-/// every downstream consumer (eval, search, `predict`) loads.
+/// every downstream consumer (eval, search, `predict`) loads. Prediction
+/// goes through the backend's packed sparse batching, so a session
+/// serves graphs of any size — the old 48-stage cap is gone.
 pub struct GcnPredictor {
     backend: Box<dyn Backend>,
     params: Params,

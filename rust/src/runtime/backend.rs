@@ -1,11 +1,15 @@
 //! The [`Backend`] trait: everything the rest of the system needs from a
 //! GCN execution engine — inference, the Adagrad train step, and batched
-//! runtime prediction.
+//! runtime prediction. Every engine consumes the sparse variable-size
+//! [`PackedBatch`]; the dense padded layout exists only inside the PJRT
+//! engine (which converts right before upload) and the dense reference.
 //!
-//! Two implementations exist:
+//! Implementations:
 //!
-//! * [`crate::runtime::NativeBackend`] — the default pure-Rust engine; no
-//!   artifacts, no external runtime, always available;
+//! * [`crate::runtime::NativeBackend`] — the default pure-Rust sparse
+//!   engine; no artifacts, no external runtime, always available;
+//! * [`crate::runtime::DenseRefBackend`] — the padded dense reference,
+//!   for parity tests and dense-vs-sparse benchmarks;
 //! * `crate::runtime::GcnRuntime` (behind the `pjrt` cargo feature) — the
 //!   PJRT path that executes the AOT HLO artifacts built by
 //!   `python/compile/aot.py`.
@@ -17,7 +21,7 @@
 use crate::constants::BATCH;
 use crate::dataset::sample::GraphSample;
 use crate::features::normalize::FeatureStats;
-use crate::model::Batch;
+use crate::model::PackedBatch;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::params::Params;
@@ -30,12 +34,11 @@ pub trait Backend {
     /// Model dimensions and the flat parameter calling convention.
     fn manifest(&self) -> &Manifest;
 
-    /// Short identifier for logs ("native", "pjrt", ...).
+    /// Short identifier for logs ("native", "dense-ref", "pjrt", ...).
     fn name(&self) -> &'static str;
 
-    /// Predicted log-runtimes for the real samples of the batch
-    /// (`batch.len` values).
-    fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>>;
+    /// Predicted log-runtimes, one per graph of the batch.
+    fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>>;
 
     /// One Adagrad step with an explicit learning rate; updates `params`
     /// and `accum` in place and returns the batch loss.
@@ -43,7 +46,7 @@ pub trait Backend {
         &self,
         params: &mut Params,
         accum: &mut Params,
-        batch: &Batch,
+        batch: &PackedBatch,
         lr: f32,
     ) -> Result<f32>;
 
@@ -52,7 +55,7 @@ pub trait Backend {
         &self,
         params: &mut Params,
         accum: &mut Params,
-        batch: &Batch,
+        batch: &PackedBatch,
     ) -> Result<f32> {
         let lr = self.manifest().learning_rate as f32;
         self.train_step_lr(params, accum, batch, lr)
@@ -63,10 +66,11 @@ pub trait Backend {
         Params::init(self.manifest(), seed)
     }
 
-    /// Predict mean runtimes in seconds for any number of samples; batches
-    /// are padded internally. Backends may override this to parallelize
-    /// over batch chunks (the native backend does); each chunk must go
-    /// through [`predict_chunk`] so the inference convention stays shared.
+    /// Predict mean runtimes in seconds for any number of samples of any
+    /// size; samples are packed into batches internally. Backends may
+    /// override this to parallelize over batch chunks (the native backend
+    /// does); each chunk must go through [`predict_chunk`] so the
+    /// inference convention stays shared.
     fn predict_runtimes(
         &self,
         params: &Params,
@@ -81,19 +85,19 @@ pub trait Backend {
     }
 }
 
-/// Run one padded chunk (≤ `BATCH` samples) through `infer`: α/β loss
-/// weights are irrelevant for inference (fed as ones) and predictions come
-/// back as mean runtimes in seconds (`exp` of the predicted log-runtime).
-/// Shared by the sequential [`Backend::predict_runtimes`] default and the
-/// native backend's parallel override so the two cannot drift.
+/// Run one chunk (≤ `BATCH` samples — a chunking policy, not a layout
+/// cap) through `infer`: α/β loss weights are irrelevant for inference
+/// (ones) and predictions come back as mean runtimes in seconds (`exp` of
+/// the predicted log-runtime). Shared by the sequential
+/// [`Backend::predict_runtimes`] default and the native backend's
+/// parallel override so the two cannot drift.
 pub fn predict_chunk<B: Backend + ?Sized>(
     backend: &B,
     params: &Params,
     chunk: &[&GraphSample],
     stats: &FeatureStats,
 ) -> Result<Vec<f64>> {
-    let best = vec![1.0f64; chunk.len()];
-    let batch = Batch::build(chunk, stats, &best);
+    let batch = PackedBatch::for_inference(chunk, stats)?;
     let z = backend.infer(params, &batch)?;
     Ok(z.iter().map(|&v| (v as f64).exp()).collect())
 }

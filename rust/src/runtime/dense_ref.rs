@@ -1,0 +1,580 @@
+//! Dense padded reference engine — the pre-sparse execution semantics,
+//! kept as a [`Backend`] for parity tests and the dense-vs-sparse
+//! benchmarks.
+//!
+//! This is the O(B·N²·D) padded implementation the sparse
+//! [`crate::runtime::NativeBackend`] replaced: every graph padded to a
+//! common node count, a full dense `[n_pad, n_pad]` adjacency sweep per
+//! node (skipping masked rows), masked sum-pool readout. It consumes the
+//! same [`PackedBatch`] as every other backend and converts internally
+//! via [`DenseBatch::from_packed`], padding to
+//! `max(MAX_NODES, largest graph)` — exactly the workload shape the old
+//! engine paid for — so `BENCH_3.json` can report the dense-vs-sparse
+//! gap on identical inputs, and the property tests can pin the sparse
+//! engine against it on arbitrary variable-size graphs.
+//!
+//! The JAX-pinned parity fixtures (dense layout, `REF_Z`/`REF_GRADS`)
+//! also live here, running straight through the dense forward/backward —
+//! they anchor this reference to `python/compile/kernels/ref.py`, and the
+//! sparse engine's own parity tests anchor it to this reference through
+//! `PackedBatch::from_dense`.
+
+use crate::constants::{
+    DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, MAX_NODES, NODE_DIM, N_CONV,
+};
+use crate::model::{DenseBatch, PackedBatch};
+use crate::runtime::backend::Backend;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::{
+    apply_adagrad, check_params_against, xi_and_grad, LN_EPS,
+};
+use crate::runtime::params::Params;
+use anyhow::Result;
+
+/// The dense reference engine. Same manifest and parameter convention as
+/// the native backend; only the batch layout and loop structure differ.
+pub struct DenseRefBackend {
+    manifest: Manifest,
+}
+
+impl Default for DenseRefBackend {
+    fn default() -> Self {
+        DenseRefBackend::new()
+    }
+}
+
+impl DenseRefBackend {
+    pub fn new() -> DenseRefBackend {
+        DenseRefBackend::with_layers(N_CONV)
+    }
+
+    pub fn with_layers(n_conv: usize) -> DenseRefBackend {
+        DenseRefBackend { manifest: Manifest::native(n_conv) }
+    }
+
+    fn n_conv(&self) -> usize {
+        self.manifest.n_conv
+    }
+
+    fn readout(&self) -> usize {
+        NODE_DIM * (self.n_conv() + 1)
+    }
+
+    fn p_w_out(&self) -> usize {
+        4 + 4 * self.n_conv()
+    }
+
+    /// Pad a packed batch to this engine's dense workload shape: at least
+    /// the old `MAX_NODES` width, wider only when a graph demands it.
+    /// Public so benchmarks can convert once, outside their timed loops —
+    /// the pre-sparse engine consumed ready-built dense batches, so a
+    /// fair dense-vs-sparse comparison must not time the converter.
+    pub fn to_dense(&self, batch: &PackedBatch) -> Result<DenseBatch> {
+        let n_pad = batch.max_graph_nodes().max(MAX_NODES);
+        DenseBatch::from_packed(batch, n_pad, batch.n_graphs())
+    }
+
+    /// Forward on a ready-built dense batch (no conversion) — the timed
+    /// kernel of the dense side of `gcn-perf bench`.
+    pub fn infer_dense(&self, params: &Params, batch: &DenseBatch) -> Result<Vec<f32>> {
+        check_params_against(&self.manifest, params)?;
+        let fwd = self.forward(params, batch);
+        Ok(fwd.z[..batch.len].to_vec())
+    }
+
+    /// Train step on a ready-built dense batch (no conversion).
+    pub fn train_step_dense(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &DenseBatch,
+        lr: f32,
+    ) -> Result<f32> {
+        check_params_against(&self.manifest, params)?;
+        check_params_against(&self.manifest, accum)?;
+        let fwd = self.forward(params, batch);
+        let (loss, dz) = dense_loss_and_dz(&fwd.z, batch);
+        let grads = self.backward(params, batch, &fwd, &dz);
+        apply_adagrad(params, accum, &grads, lr as f64, self.manifest.weight_decay);
+        Ok(loss as f32)
+    }
+
+    /// Full dense forward pass, keeping every intermediate backprop needs.
+    fn forward(&self, params: &Params, batch: &DenseBatch) -> DenseForward {
+        let kk = self.n_conv();
+        let readout = self.readout();
+        let nb = batch.n_graphs;
+        let np = batch.n_pad;
+        let n_elems = nb * np * NODE_DIM;
+
+        // ---- Fig 5 embedding, masked: padded nodes stay exactly zero.
+        let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
+        let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
+        let mut e0 = vec![0f32; n_elems];
+        for node in 0..nb * np {
+            if batch.mask[node] == 0.0 {
+                continue;
+            }
+            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
+            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
+            let out = &mut e0[node * NODE_DIM..(node + 1) * NODE_DIM];
+            for j in 0..EMB_INV {
+                let mut acc = b_inv[j] as f64;
+                for (i, &x) in inv.iter().enumerate() {
+                    acc += x as f64 * w_inv[i * EMB_INV + j] as f64;
+                }
+                out[j] = acc.max(0.0) as f32;
+            }
+            for j in 0..EMB_DEP {
+                let mut acc = b_dep[j] as f64;
+                for (i, &x) in dep.iter().enumerate() {
+                    acc += x as f64 * w_dep[i * EMB_DEP + j] as f64;
+                }
+                out[EMB_INV + j] = acc.max(0.0) as f32;
+            }
+        }
+
+        let mut e_list = Vec::with_capacity(kk + 1);
+        e_list.push(e0);
+        let mut h_list = Vec::with_capacity(kk);
+        let mut xhat_list = Vec::with_capacity(kk);
+        let mut rstd_list = Vec::with_capacity(kk);
+
+        // ---- graph convolutions
+        for k in 0..kk {
+            let w = &params.values[4 + 4 * k];
+            let bvec = &params.values[5 + 4 * k];
+            let scale = &params.values[6 + 4 * k];
+            let shift = &params.values[7 + 4 * k];
+            let e_prev = &e_list[k];
+
+            // t = E · W per node (zero rows for padded nodes)
+            let mut t = vec![0f32; n_elems];
+            for node in 0..nb * np {
+                if batch.mask[node] == 0.0 {
+                    continue;
+                }
+                let e_row = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
+                let mut acc = [0f64; NODE_DIM];
+                for (i, &x) in e_row.iter().enumerate() {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let xf = x as f64;
+                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        acc[j] += xf * wrow[j] as f64;
+                    }
+                }
+                let t_row = &mut t[node * NODE_DIM..(node + 1) * NODE_DIM];
+                for j in 0..NODE_DIM {
+                    t_row[j] = acc[j] as f32;
+                }
+            }
+
+            // c = A' · t + b (full dense row sweep), channel norm, ReLU
+            let mut h = vec![0f32; n_elems];
+            let mut xhat = vec![0f32; n_elems];
+            let mut rstd = vec![0f32; nb * np];
+            let mut e_next = vec![0f32; n_elems];
+            for b in 0..nb {
+                for n in 0..np {
+                    let node = b * np + n;
+                    if batch.mask[node] == 0.0 {
+                        continue;
+                    }
+                    let arow = &batch.adj[node * np..(node + 1) * np];
+                    let mut c = [0f64; NODE_DIM];
+                    for (r, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let af = a as f64;
+                        let t_row = &t[(b * np + r) * NODE_DIM..(b * np + r + 1) * NODE_DIM];
+                        for j in 0..NODE_DIM {
+                            c[j] += af * t_row[j] as f64;
+                        }
+                    }
+                    for j in 0..NODE_DIM {
+                        c[j] += bvec[j] as f64;
+                    }
+                    let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
+                    let var =
+                        c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
+                    let rs = 1.0 / (var + LN_EPS).sqrt();
+                    rstd[node] = rs as f32;
+                    let o = node * NODE_DIM;
+                    for j in 0..NODE_DIM {
+                        let xh = (c[j] - mean) * rs;
+                        xhat[o + j] = xh as f32;
+                        let hv = xh * scale[j] as f64 + shift[j] as f64;
+                        h[o + j] = hv as f32;
+                        e_next[o + j] = hv.max(0.0) as f32;
+                    }
+                }
+            }
+            h_list.push(h);
+            xhat_list.push(xhat);
+            rstd_list.push(rstd);
+            e_list.push(e_next);
+        }
+
+        // ---- masked sum-pool readout per conv level + linear head
+        let w_out = &params.values[self.p_w_out()];
+        let b_out = &params.values[self.p_w_out() + 1];
+        let mut feat = vec![0f32; nb * readout];
+        let mut z = vec![0f32; nb];
+        for b in 0..nb {
+            for (k, e) in e_list.iter().enumerate() {
+                let f_off = b * readout + k * NODE_DIM;
+                for n in 0..np {
+                    let node = b * np + n;
+                    if batch.mask[node] == 0.0 {
+                        continue;
+                    }
+                    let row = &e[node * NODE_DIM..(node + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        feat[f_off + j] += row[j];
+                    }
+                }
+            }
+            let mut acc = b_out[0] as f64;
+            for r in 0..readout {
+                acc += feat[b * readout + r] as f64 * w_out[r] as f64;
+            }
+            z[b] = acc as f32;
+        }
+
+        DenseForward { e: e_list, h: h_list, xhat: xhat_list, rstd: rstd_list, feat, z }
+    }
+
+    /// Analytic gradients on the dense layout (weight decay applied in
+    /// the Adagrad step).
+    fn backward(
+        &self,
+        params: &Params,
+        batch: &DenseBatch,
+        fwd: &DenseForward,
+        dz: &[f64],
+    ) -> Vec<Vec<f64>> {
+        let kk = self.n_conv();
+        let readout = self.readout();
+        let iw = self.p_w_out();
+        let w_out = &params.values[iw];
+        let nb = batch.n_graphs;
+        let np = batch.n_pad;
+        let mut grads: Vec<Vec<f64>> =
+            params.values.iter().map(|v| vec![0f64; v.len()]).collect();
+
+        // ---- head: z = feat · w_out + b_out
+        for b in 0..nb {
+            if dz[b] == 0.0 {
+                continue;
+            }
+            grads[iw + 1][0] += dz[b];
+            for r in 0..readout {
+                grads[iw][r] += fwd.feat[b * readout + r] as f64 * dz[b];
+            }
+        }
+
+        // dL/de for the deepest activations
+        let mut de = vec![0f64; nb * np * NODE_DIM];
+        for b in 0..nb {
+            if dz[b] == 0.0 {
+                continue;
+            }
+            for n in 0..np {
+                let node = b * np + n;
+                if batch.mask[node] == 0.0 {
+                    continue;
+                }
+                let o = node * NODE_DIM;
+                for j in 0..NODE_DIM {
+                    de[o + j] = dz[b] * w_out[kk * NODE_DIM + j] as f64;
+                }
+            }
+        }
+
+        // ---- conv layers, deepest first
+        for k in (0..kk).rev() {
+            let w = &params.values[4 + 4 * k];
+            let scale = &params.values[6 + 4 * k];
+            let h = &fwd.h[k];
+            let xh = &fwd.xhat[k];
+            let rstd = &fwd.rstd[k];
+            let e_prev = &fwd.e[k];
+
+            // ReLU + channel-norm backward: de -> dc (per node)
+            let mut dc = vec![0f64; nb * np * NODE_DIM];
+            for node in 0..nb * np {
+                if batch.mask[node] == 0.0 {
+                    continue;
+                }
+                let o = node * NODE_DIM;
+                let mut dxh = [0f64; NODE_DIM];
+                let mut sum1 = 0f64;
+                let mut sum2 = 0f64;
+                for j in 0..NODE_DIM {
+                    let dh = if h[o + j] > 0.0 { de[o + j] } else { 0.0 };
+                    grads[6 + 4 * k][j] += dh * xh[o + j] as f64;
+                    grads[7 + 4 * k][j] += dh;
+                    let dx = dh * scale[j] as f64;
+                    dxh[j] = dx;
+                    sum1 += dx;
+                    sum2 += dx * xh[o + j] as f64;
+                }
+                let rs = rstd[node] as f64;
+                for j in 0..NODE_DIM {
+                    let v =
+                        rs * (dxh[j] - (sum1 + xh[o + j] as f64 * sum2) / NODE_DIM as f64);
+                    dc[o + j] = v;
+                    grads[5 + 4 * k][j] += v;
+                }
+            }
+
+            // dt = A'ᵀ · dc per sample, then de_prev = dt · Wᵀ and
+            // dW += e_prevᵀ · dt
+            let mut de_new = vec![0f64; nb * np * NODE_DIM];
+            let mut dt = vec![0f64; np * NODE_DIM];
+            for b in 0..nb {
+                dt.iter_mut().for_each(|v| *v = 0.0);
+                for r in 0..np {
+                    let rnode = b * np + r;
+                    if batch.mask[rnode] == 0.0 {
+                        continue;
+                    }
+                    let o = rnode * NODE_DIM;
+                    let arow = &batch.adj[rnode * np..(rnode + 1) * np];
+                    for (c_ix, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let af = a as f64;
+                        let trow = &mut dt[c_ix * NODE_DIM..(c_ix + 1) * NODE_DIM];
+                        for j in 0..NODE_DIM {
+                            trow[j] += af * dc[o + j];
+                        }
+                    }
+                }
+                for n in 0..np {
+                    let node = b * np + n;
+                    if batch.mask[node] == 0.0 {
+                        continue;
+                    }
+                    let dtrow = &dt[n * NODE_DIM..(n + 1) * NODE_DIM];
+                    let erow = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
+                    let o = node * NODE_DIM;
+                    for i in 0..NODE_DIM {
+                        let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                        let mut acc = 0f64;
+                        for j in 0..NODE_DIM {
+                            acc += dtrow[j] * wrow[j] as f64;
+                        }
+                        de_new[o + i] = acc;
+                        let ev = erow[i] as f64;
+                        if ev != 0.0 {
+                            let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
+                            for j in 0..NODE_DIM {
+                                gw[j] += ev * dtrow[j];
+                            }
+                        }
+                    }
+                }
+            }
+
+            // pooled-readout gradient for level k
+            for b in 0..nb {
+                if dz[b] == 0.0 {
+                    continue;
+                }
+                for n in 0..np {
+                    let node = b * np + n;
+                    if batch.mask[node] == 0.0 {
+                        continue;
+                    }
+                    let o = node * NODE_DIM;
+                    for j in 0..NODE_DIM {
+                        de_new[o + j] += dz[b] * w_out[k * NODE_DIM + j] as f64;
+                    }
+                }
+            }
+            de = de_new;
+        }
+
+        // ---- embedding backward
+        let e0 = &fwd.e[0];
+        for node in 0..nb * np {
+            if batch.mask[node] == 0.0 {
+                continue;
+            }
+            let o = node * NODE_DIM;
+            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
+            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
+            for j in 0..EMB_INV {
+                if e0[o + j] <= 0.0 {
+                    continue;
+                }
+                let g = de[o + j];
+                if g == 0.0 {
+                    continue;
+                }
+                grads[1][j] += g;
+                for (i, &x) in inv.iter().enumerate() {
+                    grads[0][i * EMB_INV + j] += x as f64 * g;
+                }
+            }
+            for j in 0..EMB_DEP {
+                if e0[o + EMB_INV + j] <= 0.0 {
+                    continue;
+                }
+                let g = de[o + EMB_INV + j];
+                if g == 0.0 {
+                    continue;
+                }
+                grads[3][j] += g;
+                for (i, &x) in dep.iter().enumerate() {
+                    grads[2][i * EMB_DEP + j] += x as f64 * g;
+                }
+            }
+        }
+
+        grads
+    }
+}
+
+/// Forward intermediates of the dense layout.
+struct DenseForward {
+    e: Vec<Vec<f32>>,
+    h: Vec<Vec<f32>>,
+    xhat: Vec<Vec<f32>>,
+    rstd: Vec<Vec<f32>>,
+    feat: Vec<f32>,
+    z: Vec<f32>,
+}
+
+/// §III-C loss on the dense layout: `weight·sample_mask`-weighted mean ξ.
+fn dense_loss_and_dz(z: &[f32], batch: &DenseBatch) -> (f64, Vec<f64>) {
+    let nb = batch.n_graphs;
+    let mut wsum = 0f64;
+    for b in 0..nb {
+        wsum += (batch.weight[b] * batch.sample_mask[b]) as f64;
+    }
+    let denom = wsum.max(1e-6);
+    let mut loss = 0f64;
+    let mut dz = vec![0f64; nb];
+    for b in 0..nb {
+        let w = (batch.weight[b] * batch.sample_mask[b]) as f64;
+        if w == 0.0 {
+            continue;
+        }
+        let d = z[b] as f64 - batch.log_y[b] as f64;
+        let (xi, gr) = xi_and_grad(d);
+        loss += w * xi;
+        dz[b] = w * gr / denom;
+    }
+    (loss / denom, dz)
+}
+
+impl Backend for DenseRefBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-ref"
+    }
+
+    fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
+        let dense = self.to_dense(batch)?;
+        self.infer_dense(params, &dense)
+    }
+
+    fn train_step_lr(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &PackedBatch,
+        lr: f32,
+    ) -> Result<f32> {
+        let dense = self.to_dense(batch)?;
+        self.train_step_dense(params, accum, &dense, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants::BATCH;
+    use crate::testfix::{
+        grad_fixture_batch, parity_batch, parity_params, REF_GRADS, REF_LOSS, REF_Z,
+    };
+
+    #[test]
+    fn forward_matches_jax_reference() {
+        let be = DenseRefBackend::new();
+        let batch = parity_batch();
+        let params = parity_params(be.manifest());
+        let fwd = be.forward(&params, &batch);
+        assert_eq!(fwd.z.len(), BATCH);
+        for (i, (&got, &want)) in fwd.z.iter().zip(REF_Z.iter()).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-5,
+                "z[{i}] = {got}, reference {want} (|diff| = {})",
+                (got - want).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn backward_matches_jax_grads() {
+        let be = DenseRefBackend::new();
+        let batch = grad_fixture_batch();
+        let params = parity_params(be.manifest());
+        let fwd = be.forward(&params, &batch);
+        let (loss, dz) = dense_loss_and_dz(&fwd.z, &batch);
+        assert!(
+            (loss - REF_LOSS).abs() < 5e-3,
+            "loss {loss} vs jax reference {REF_LOSS}"
+        );
+        let grads = be.backward(&params, &batch, &fwd, &dz);
+        for &(t, i, want) in REF_GRADS.iter() {
+            let got = grads[t][i];
+            let tol = 1e-3 + 2e-3 * want.abs();
+            assert!(
+                (got - want).abs() <= tol,
+                "grad[{t}][{i}] = {got}, jax reference {want} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn padding_poison_is_invisible_through_the_dense_path() {
+        // the dense layout's masking contract: poisoning padded feature
+        // rows must not change predictions (regression guard on from_packed
+        // + the masked dense sweep)
+        use crate::constants::{DEP_DIM, INV_DIM};
+        use crate::testfix::{identity_stats, synth_sample};
+        let be = DenseRefBackend::new();
+        let samples: Vec<_> =
+            (0..5).map(|i| synth_sample(0, i, 1e-3 * (1.0 + i as f32))).collect();
+        let refs: Vec<_> = samples.iter().collect();
+        let packed = PackedBatch::for_inference(&refs, &identity_stats()).unwrap();
+        let params = be.init_params(3);
+        let clean = be.to_dense(&packed).unwrap();
+        let z_clean = be.forward(&params, &clean).z;
+        let mut poisoned = clean.clone();
+        let np = poisoned.n_pad;
+        for node in 0..poisoned.n_graphs * np {
+            if poisoned.mask[node] == 0.0 {
+                for v in &mut poisoned.inv[node * INV_DIM..(node + 1) * INV_DIM] {
+                    *v = 1234.5;
+                }
+                for v in &mut poisoned.dep[node * DEP_DIM..(node + 1) * DEP_DIM] {
+                    *v = -77.7;
+                }
+            }
+        }
+        let z_poisoned = be.forward(&params, &poisoned).z;
+        assert_eq!(z_clean, z_poisoned, "padding rows leaked into predictions");
+    }
+}

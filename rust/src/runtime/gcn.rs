@@ -8,12 +8,18 @@
 //! * train: `(*params, *accum, inv, dep, adj, mask, log_y[B], weight[B],
 //!   sample_mask[B], lr) -> (*params', *accum', loss)`.
 //!
+//! The artifacts bake those fixed shapes in, so this is the one backend
+//! that still needs the dense padded layout: every call converts the
+//! sparse [`PackedBatch`] via [`DenseBatch::from_packed`] right before
+//! upload, and fails cleanly when a batch exceeds the artifact's
+//! `BATCH`/`MAX_NODES` envelope (the native engine has no such caps).
+//!
 //! This module only typechecks against the in-tree `xla` API stub by
 //! default; the [`crate::runtime::load_backend`] loader falls back to the
 //! native backend when PJRT is unavailable at runtime.
 
 use crate::constants::{BATCH, DEP_DIM, INV_DIM, MAX_NODES};
-use crate::model::Batch;
+use crate::model::{DenseBatch, PackedBatch};
 use crate::runtime::backend::Backend;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::Params;
@@ -68,7 +74,7 @@ impl GcnRuntime {
             .collect()
     }
 
-    fn batch_buffers(&self, batch: &Batch) -> Result<Vec<xla::PjRtBuffer>> {
+    fn batch_buffers(&self, batch: &DenseBatch) -> Result<Vec<xla::PjRtBuffer>> {
         let n = MAX_NODES;
         let c = &self.client;
         Ok(vec![
@@ -79,6 +85,13 @@ impl GcnRuntime {
         ])
     }
 
+    /// Pad a packed batch to the artifact's fixed dense shapes.
+    fn to_dense(batch: &PackedBatch) -> Result<DenseBatch> {
+        DenseBatch::from_packed(batch, MAX_NODES, BATCH).context(
+            "the PJRT artifacts take fixed [BATCH, MAX_NODES] shapes; \
+             use the native backend for larger graphs or batches",
+        )
+    }
 }
 
 /// `init_params`, `train_step` and `predict_runtimes` come from the trait
@@ -93,15 +106,16 @@ impl Backend for GcnRuntime {
         "pjrt"
     }
 
-    /// Predicted log-runtimes for the real samples of the batch.
-    fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>> {
+    /// Predicted log-runtimes for the graphs of the batch.
+    fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
+        let dense = Self::to_dense(batch)?;
         let mut args = self.buffers_for_params(params)?;
-        args.extend(self.batch_buffers(batch)?);
+        args.extend(self.batch_buffers(&dense)?);
         let result = self.infer_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0]
             .to_literal_sync()?;
         let z = result.to_tuple1()?;
         let v = z.to_vec::<f32>()?;
-        Ok(v[..batch.len].to_vec())
+        Ok(v[..dense.len].to_vec())
     }
 
     /// One Adagrad step with an explicit learning rate (runtime input to
@@ -110,20 +124,21 @@ impl Backend for GcnRuntime {
         &self,
         params: &mut Params,
         accum: &mut Params,
-        batch: &Batch,
+        batch: &PackedBatch,
         lr: f32,
     ) -> Result<f32> {
         let train_exe = self
             .train_exe
             .as_ref()
             .context("runtime loaded without the train executable")?;
+        let dense = Self::to_dense(batch)?;
         let mut args = self.buffers_for_params(params)?;
         args.extend(self.buffers_for_params(accum)?);
-        args.extend(self.batch_buffers(batch)?);
+        args.extend(self.batch_buffers(&dense)?);
         let c = &self.client;
-        args.push(c.buffer_from_host_buffer(&batch.log_y, &[BATCH], None)?);
-        args.push(c.buffer_from_host_buffer(&batch.weight, &[BATCH], None)?);
-        args.push(c.buffer_from_host_buffer(&batch.sample_mask, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&dense.log_y, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&dense.weight, &[BATCH], None)?);
+        args.push(c.buffer_from_host_buffer(&dense.sample_mask, &[BATCH], None)?);
         args.push(c.buffer_from_host_buffer(&[lr], &[], None)?);
 
         let result = train_exe.execute_b::<xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;

@@ -1,16 +1,21 @@
-//! GCN execution backends behind the [`Backend`] trait.
+//! GCN execution backends behind the [`Backend`] trait. Every backend
+//! consumes the sparse variable-size [`crate::model::PackedBatch`].
 //!
 //! * [`native`] — the default pure-Rust engine (no artifacts, no external
-//!   runtime); implements the forward pass and the Adagrad train step with
-//!   the exact artifact semantics of `python/compile/aot.py`.
+//!   runtime): blocked GEMMs over the packed node matrix plus O(E)
+//!   CSR gather-scatter aggregation; no `MAX_NODES`/`BATCH` caps.
+//! * [`dense_ref`] — the padded dense reference engine the sparse path
+//!   replaced; kept for parity tests and dense-vs-sparse benchmarks.
 //! * `gcn` (behind the `pjrt` cargo feature) — loads the AOT HLO-text
-//!   artifacts produced by `python/compile/aot.py`, compiles them on the
-//!   PJRT CPU client and drives inference/training through XLA.
+//!   artifacts produced by `python/compile/aot.py`, converts packed
+//!   batches to the fixed dense shapes the artifacts were compiled for,
+//!   and drives inference/training through XLA.
 //!
 //! Use [`load_backend`] / [`load_variant_backend`] to get the right engine
 //! for the current build; python is never on either path at runtime.
 
 pub mod backend;
+pub mod dense_ref;
 pub mod manifest;
 pub mod native;
 pub mod params;
@@ -21,6 +26,7 @@ pub mod gcn;
 pub use backend::{
     load_backend, load_variant_backend, Backend, BackendWarning, LoadedBackend,
 };
+pub use dense_ref::DenseRefBackend;
 #[cfg(feature = "pjrt")]
 pub use gcn::GcnRuntime;
 pub use manifest::Manifest;

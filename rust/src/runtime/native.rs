@@ -1,36 +1,51 @@
-//! Pure-Rust GCN execution engine — the default [`Backend`].
+//! Pure-Rust GCN execution engine — the default [`Backend`], running on
+//! the sparse block-diagonal [`PackedBatch`] layout.
 //!
 //! Implements the paper's model (Fig 7) with the exact artifact semantics
 //! of `python/compile/aot.py` / `python/compile/model.py`:
 //!
 //! * forward: Fig 5 dual feature embedding → `n_conv` graph convolutions
 //!   (Kipf–Welling aggregate-update `A' · (E · W) + b`, per-node channel
-//!   normalization, ReLU) → masked sum-pool readout per conv level →
+//!   normalization, ReLU) → segment-sum readout per conv level →
 //!   linear head predicting log-runtime `z` (one value per graph);
 //! * train: the §III-C weighted relative-error loss
 //!   `ξ = |exp(z − log ȳ) − 1|` (linearized beyond `|d| = 3`), analytic
 //!   backprop through the whole network, and an Adagrad step with weight
 //!   decay — semantically identical to `model.train_step`.
 //!
+//! Unlike the padded dense layout (kept behind the `pjrt` feature and in
+//! [`crate::runtime::DenseRefBackend`]), the packed layout holds exactly
+//! the real nodes of every graph: the dense projections (embedding and
+//! per-conv `E · W`) run as blocked GEMMs over the packed node matrix and
+//! the aggregation `A' · t` is an O(E) gather over the CSR rows — no
+//! `MAX_NODES` cap, no O(N²) adjacency sweeps over padding. Row blocks
+//! fan out over [`crate::util::threadpool`] when a batch is large enough
+//! to pay for it.
+//!
 //! Tensor math accumulates in `f64` and stores `f32` at the same op
-//! boundaries as the JAX model, so outputs match the dependency-free
-//! reference (`python/compile/kernels/ref.py`) to ≤1e-5; the parity tests
-//! below pin that against JAX-generated reference numbers.
+//! boundaries as the JAX model; because CSR rows keep ascending column
+//! order, every per-element accumulation visits the same nonzero terms in
+//! the same order as the dense in-order sweep, so outputs match the
+//! dependency-free reference (`python/compile/kernels/ref.py`) to ≤1e-5.
+//! The parity tests below pin that against JAX-generated reference
+//! numbers via `PackedBatch::from_dense` over the dense fixtures.
 //!
 //! [`Backend::predict_runtimes`] is overridden to fan batch chunks out
-//! over [`crate::util::threadpool`], which is what lets beam search and
-//! the eval harnesses amortize model queries across cores.
+//! over the thread pool, which is what lets beam search and the eval
+//! harnesses amortize model queries across cores.
 
 use crate::constants::{
-    ADAGRAD_EPS, BATCH, DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, MAX_NODES, NODE_DIM, N_CONV,
+    ADAGRAD_EPS, BATCH, DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, NODE_DIM, N_CONV,
 };
 use crate::dataset::sample::GraphSample;
 use crate::features::normalize::FeatureStats;
-use crate::model::Batch;
+use crate::model::PackedBatch;
 use crate::runtime::backend::{predict_chunk, Backend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::Params;
+use crate::util::threadpool::{chunk_ranges, parallel_map};
 use anyhow::{ensure, Result};
+use std::ops::Range;
 
 // The conv math below indexes weight tensors of manifest shape
 // [HIDDEN, HIDDEN] with NODE_DIM strides; that is only sound while the
@@ -41,9 +56,44 @@ const _: () = assert!(
 );
 
 /// Channel-normalization epsilon (`graph_batch_norm` in `model.py`).
-const LN_EPS: f64 = 1e-5;
+pub(crate) const LN_EPS: f64 = 1e-5;
 /// Loss linearization point: ξ switches to a linear tail beyond |d| = 3.
-const LOSS_CLIP: f64 = 3.0;
+pub(crate) const LOSS_CLIP: f64 = 3.0;
+
+/// Minimum packed rows per parallel block. Below roughly one chunk of
+/// small graphs the scoped fan-out costs more than it saves — and the
+/// chunked [`Backend::predict_runtimes`] path is already parallel at the
+/// batch level, so in-batch blocking only needs to win on big graphs.
+const PAR_MIN_ROWS: usize = 512;
+
+/// Fill a row-major `[n_rows, width]` f32 matrix, parallel over
+/// contiguous row blocks on the shared thread pool when the batch is
+/// large. Deterministic: each row depends only on its own index.
+fn par_rows<F>(n_rows: usize, width: usize, f: F) -> Vec<f32>
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(n_rows, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        let mut out = vec![0f32; n_rows * width];
+        for (r, row) in out.chunks_mut(width.max(1)).enumerate() {
+            f(r, row);
+        }
+        return out;
+    }
+    let parts = parallel_map(&ranges, |range| {
+        let mut block = vec![0f32; range.len() * width];
+        for (i, row) in block.chunks_mut(width.max(1)).enumerate() {
+            f(range.start + i, row);
+        }
+        block
+    });
+    let mut out = Vec::with_capacity(n_rows * width);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
 
 /// The native engine. Stateless apart from its manifest; cheap to build
 /// and `Sync`, so inference parallelizes freely.
@@ -82,42 +132,24 @@ impl NativeBackend {
     }
 
     fn check_params(&self, params: &Params) -> Result<()> {
-        ensure!(
-            params.values.len() == self.manifest.params.len(),
-            "backend expects {} param tensors, got {}",
-            self.manifest.params.len(),
-            params.values.len()
-        );
-        for (v, spec) in params.values.iter().zip(&self.manifest.params) {
-            ensure!(
-                v.len() == spec.numel(),
-                "param '{}' has {} elements, manifest expects {}",
-                spec.name,
-                v.len(),
-                spec.numel()
-            );
-        }
-        Ok(())
+        check_params_against(&self.manifest, params)
     }
 
     /// Full forward pass, keeping every intermediate backprop needs.
-    fn forward(&self, params: &Params, batch: &Batch) -> Forward {
+    fn forward(&self, params: &Params, batch: &PackedBatch) -> Forward {
         let kk = self.n_conv();
         let readout = self.readout();
-        let n_elems = BATCH * MAX_NODES * NODE_DIM;
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
 
-        // ---- Fig 5 embedding: e0 = relu(inv·Wi + bi) ++ relu(dep·Wd + bd),
-        // masked. Padded nodes stay exactly zero (skipped entirely).
+        // ---- Fig 5 embedding: e0 = relu(inv·Wi + bi) ++ relu(dep·Wd + bd)
+        // — a blocked GEMM over the packed node matrix (every row is real;
+        // the packed layout has no padding nodes to skip).
         let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
         let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
-        let mut e0 = vec![0f32; n_elems];
-        for node in 0..BATCH * MAX_NODES {
-            if batch.mask[node] == 0.0 {
-                continue;
-            }
+        let e0 = par_rows(nn, NODE_DIM, |node, out| {
             let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
             let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
-            let out = &mut e0[node * NODE_DIM..(node + 1) * NODE_DIM];
             for j in 0..EMB_INV {
                 let mut acc = b_inv[j] as f64;
                 for (i, &x) in inv.iter().enumerate() {
@@ -132,7 +164,7 @@ impl NativeBackend {
                 }
                 out[EMB_INV + j] = acc.max(0.0) as f32;
             }
-        }
+        });
 
         let mut e_list = Vec::with_capacity(kk + 1);
         e_list.push(e0);
@@ -148,13 +180,8 @@ impl NativeBackend {
             let shift = &params.values[7 + 4 * k];
             let e_prev = &e_list[k];
 
-            // t = E · W per node (zero rows for padded nodes — their
-            // embeddings are zero, so the product is too)
-            let mut t = vec![0f32; n_elems];
-            for node in 0..BATCH * MAX_NODES {
-                if batch.mask[node] == 0.0 {
-                    continue;
-                }
+            // t = E · W per node — blocked GEMM, exploiting ReLU sparsity
+            let t = par_rows(nn, NODE_DIM, |node, t_row| {
                 let e_row = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
                 let mut acc = [0f64; NODE_DIM];
                 for (i, &x) in e_row.iter().enumerate() {
@@ -167,73 +194,29 @@ impl NativeBackend {
                         acc[j] += xf * wrow[j] as f64;
                     }
                 }
-                let t_row = &mut t[node * NODE_DIM..(node + 1) * NODE_DIM];
                 for j in 0..NODE_DIM {
                     t_row[j] = acc[j] as f32;
                 }
-            }
+            });
 
-            // c = A' · t + b, then per-node channel norm, ReLU, mask
-            let mut h = vec![0f32; n_elems];
-            let mut xhat = vec![0f32; n_elems];
-            let mut rstd = vec![0f32; BATCH * MAX_NODES];
-            let mut e_next = vec![0f32; n_elems];
-            for b in 0..BATCH {
-                for n in 0..MAX_NODES {
-                    let node = b * MAX_NODES + n;
-                    if batch.mask[node] == 0.0 {
-                        continue;
-                    }
-                    let arow = &batch.adj[node * MAX_NODES..(node + 1) * MAX_NODES];
-                    let mut c = [0f64; NODE_DIM];
-                    for (r, &a) in arow.iter().enumerate() {
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let af = a as f64;
-                        let t_row =
-                            &t[(b * MAX_NODES + r) * NODE_DIM..(b * MAX_NODES + r + 1) * NODE_DIM];
-                        for j in 0..NODE_DIM {
-                            c[j] += af * t_row[j] as f64;
-                        }
-                    }
-                    for j in 0..NODE_DIM {
-                        c[j] += bvec[j] as f64;
-                    }
-                    let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
-                    let var =
-                        c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
-                    let rs = 1.0 / (var + LN_EPS).sqrt();
-                    rstd[node] = rs as f32;
-                    let o = node * NODE_DIM;
-                    for j in 0..NODE_DIM {
-                        let xh = (c[j] - mean) * rs;
-                        xhat[o + j] = xh as f32;
-                        let hv = xh * scale[j] as f64 + shift[j] as f64;
-                        h[o + j] = hv as f32;
-                        e_next[o + j] = hv.max(0.0) as f32;
-                    }
-                }
-            }
-            h_list.push(h);
-            xhat_list.push(xhat);
-            rstd_list.push(rstd);
-            e_list.push(e_next);
+            // c = A' · t + b (O(E) gather over the CSR row), then per-node
+            // channel norm and ReLU — fused, parallel over row blocks
+            let conv = par_conv(batch, &t, bvec, scale, shift);
+            h_list.push(conv.h);
+            xhat_list.push(conv.xhat);
+            rstd_list.push(conv.rstd);
+            e_list.push(conv.e_next);
         }
 
-        // ---- masked sum-pool readout per conv level + linear head
+        // ---- segment-sum readout per conv level + linear head
         let w_out = &params.values[self.p_w_out()];
         let b_out = &params.values[self.p_w_out() + 1];
-        let mut feat = vec![0f32; BATCH * readout];
-        let mut z = vec![0f32; BATCH];
-        for b in 0..BATCH {
+        let mut feat = vec![0f32; nb * readout];
+        let mut z = vec![0f32; nb];
+        for g in 0..nb {
             for (k, e) in e_list.iter().enumerate() {
-                let f_off = b * readout + k * NODE_DIM;
-                for n in 0..MAX_NODES {
-                    let node = b * MAX_NODES + n;
-                    if batch.mask[node] == 0.0 {
-                        continue;
-                    }
+                let f_off = g * readout + k * NODE_DIM;
+                for node in batch.graph_nodes(g) {
                     let row = &e[node * NODE_DIM..(node + 1) * NODE_DIM];
                     for j in 0..NODE_DIM {
                         feat[f_off + j] += row[j];
@@ -242,9 +225,9 @@ impl NativeBackend {
             }
             let mut acc = b_out[0] as f64;
             for r in 0..readout {
-                acc += feat[b * readout + r] as f64 * w_out[r] as f64;
+                acc += feat[g * readout + r] as f64 * w_out[r] as f64;
             }
-            z[b] = acc as f32;
+            z[g] = acc as f32;
         }
 
         Forward { e: e_list, h: h_list, xhat: xhat_list, rstd: rstd_list, feat, z }
@@ -252,11 +235,12 @@ impl NativeBackend {
 
     /// Analytic gradients of the §III-C loss w.r.t. every parameter
     /// (weight decay is applied later, in the Adagrad step — matching
-    /// `model.train_step`).
+    /// `model.train_step`). Sequential over packed nodes in graph order,
+    /// which keeps the accumulation order of the pre-sparse engine.
     fn backward(
         &self,
         params: &Params,
-        batch: &Batch,
+        batch: &PackedBatch,
         fwd: &Forward,
         dz: &[f64],
     ) -> Vec<Vec<f64>> {
@@ -264,35 +248,34 @@ impl NativeBackend {
         let readout = self.readout();
         let iw = self.p_w_out();
         let w_out = &params.values[iw];
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
         let mut grads: Vec<Vec<f64>> =
             params.values.iter().map(|v| vec![0f64; v.len()]).collect();
 
         // ---- head: z = feat · w_out + b_out
-        for b in 0..BATCH {
-            if dz[b] == 0.0 {
+        for g in 0..nb {
+            if dz[g] == 0.0 {
                 continue;
             }
-            grads[iw + 1][0] += dz[b];
+            grads[iw + 1][0] += dz[g];
             for r in 0..readout {
-                grads[iw][r] += fwd.feat[b * readout + r] as f64 * dz[b];
+                grads[iw][r] += fwd.feat[g * readout + r] as f64 * dz[g];
             }
         }
 
-        // dL/de for the deepest activations: the level-kk pooled readout
-        // broadcasts dz · w_out[kk·F + j] to every (real) node.
-        let mut de = vec![0f64; BATCH * MAX_NODES * NODE_DIM];
-        for b in 0..BATCH {
-            if dz[b] == 0.0 {
+        // dL/de for the deepest activations: the level-kk segment-sum
+        // readout broadcasts dz · w_out[kk·F + j] to every node of the
+        // graph.
+        let mut de = vec![0f64; nn * NODE_DIM];
+        for g in 0..nb {
+            if dz[g] == 0.0 {
                 continue;
             }
-            for n in 0..MAX_NODES {
-                let node = b * MAX_NODES + n;
-                if batch.mask[node] == 0.0 {
-                    continue;
-                }
+            for node in batch.graph_nodes(g) {
                 let o = node * NODE_DIM;
                 for j in 0..NODE_DIM {
-                    de[o + j] = dz[b] * w_out[kk * NODE_DIM + j] as f64;
+                    de[o + j] = dz[g] * w_out[kk * NODE_DIM + j] as f64;
                 }
             }
         }
@@ -307,11 +290,8 @@ impl NativeBackend {
             let e_prev = &fwd.e[k];
 
             // ReLU + channel-norm backward: de -> dc (per node)
-            let mut dc = vec![0f64; BATCH * MAX_NODES * NODE_DIM];
-            for node in 0..BATCH * MAX_NODES {
-                if batch.mask[node] == 0.0 {
-                    continue;
-                }
+            let mut dc = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
                 let o = node * NODE_DIM;
                 let mut dxh = [0f64; NODE_DIM];
                 let mut sum1 = 0f64;
@@ -334,69 +314,55 @@ impl NativeBackend {
                 }
             }
 
-            // dt = A'ᵀ · dc per sample, then de_prev = dt · Wᵀ and
-            // dW += e_prevᵀ · dt
-            let mut de_new = vec![0f64; BATCH * MAX_NODES * NODE_DIM];
-            let mut dt = vec![0f64; MAX_NODES * NODE_DIM];
-            for b in 0..BATCH {
-                dt.iter_mut().for_each(|v| *v = 0.0);
-                for r in 0..MAX_NODES {
-                    let rnode = b * MAX_NODES + r;
-                    if batch.mask[rnode] == 0.0 {
-                        continue;
-                    }
-                    let o = rnode * NODE_DIM;
-                    let arow = &batch.adj[rnode * MAX_NODES..(rnode + 1) * MAX_NODES];
-                    for (c_ix, &a) in arow.iter().enumerate() {
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let af = a as f64;
-                        let trow = &mut dt[c_ix * NODE_DIM..(c_ix + 1) * NODE_DIM];
-                        for j in 0..NODE_DIM {
-                            trow[j] += af * dc[o + j];
-                        }
+            // dt = A'ᵀ · dc — O(E) gather over the transpose CSR (built
+            // lazily on the batch's first train step; ascending source
+            // rows keep the dense accumulation order)
+            let adj_t = batch.adj_t();
+            let mut dt = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
+                let (rows, vals) = adj_t.row(node);
+                let o = node * NODE_DIM;
+                for (&r, &a) in rows.iter().zip(vals) {
+                    let af = a as f64;
+                    let src = &dc[r as usize * NODE_DIM..(r as usize + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        dt[o + j] += af * src[j];
                     }
                 }
-                for n in 0..MAX_NODES {
-                    let node = b * MAX_NODES + n;
-                    if batch.mask[node] == 0.0 {
-                        continue;
+            }
+
+            // de_prev = dt · Wᵀ and dW += e_prevᵀ · dt
+            let mut de_new = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
+                let o = node * NODE_DIM;
+                let dtrow = &dt[o..o + NODE_DIM];
+                let erow = &e_prev[o..o + NODE_DIM];
+                for i in 0..NODE_DIM {
+                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                    let mut acc = 0f64;
+                    for j in 0..NODE_DIM {
+                        acc += dtrow[j] * wrow[j] as f64;
                     }
-                    let dtrow = &dt[n * NODE_DIM..(n + 1) * NODE_DIM];
-                    let erow = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
-                    let o = node * NODE_DIM;
-                    for i in 0..NODE_DIM {
-                        let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
-                        let mut acc = 0f64;
+                    de_new[o + i] = acc;
+                    let ev = erow[i] as f64;
+                    if ev != 0.0 {
+                        let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
                         for j in 0..NODE_DIM {
-                            acc += dtrow[j] * wrow[j] as f64;
-                        }
-                        de_new[o + i] = acc;
-                        let ev = erow[i] as f64;
-                        if ev != 0.0 {
-                            let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
-                            for j in 0..NODE_DIM {
-                                gw[j] += ev * dtrow[j];
-                            }
+                            gw[j] += ev * dtrow[j];
                         }
                     }
                 }
             }
 
-            // pooled-readout gradient for level k
-            for b in 0..BATCH {
-                if dz[b] == 0.0 {
+            // segment-sum readout gradient for level k
+            for g in 0..nb {
+                if dz[g] == 0.0 {
                     continue;
                 }
-                for n in 0..MAX_NODES {
-                    let node = b * MAX_NODES + n;
-                    if batch.mask[node] == 0.0 {
-                        continue;
-                    }
+                for node in batch.graph_nodes(g) {
                     let o = node * NODE_DIM;
                     for j in 0..NODE_DIM {
-                        de_new[o + j] += dz[b] * w_out[k * NODE_DIM + j] as f64;
+                        de_new[o + j] += dz[g] * w_out[k * NODE_DIM + j] as f64;
                     }
                 }
             }
@@ -405,10 +371,7 @@ impl NativeBackend {
 
         // ---- embedding backward
         let e0 = &fwd.e[0];
-        for node in 0..BATCH * MAX_NODES {
-            if batch.mask[node] == 0.0 {
-                continue;
-            }
+        for node in 0..nn {
             let o = node * NODE_DIM;
             let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
             let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
@@ -444,63 +407,176 @@ impl NativeBackend {
     }
 }
 
+/// Validate a flat parameter list against a manifest (shared with the
+/// dense reference engine).
+pub(crate) fn check_params_against(manifest: &Manifest, params: &Params) -> Result<()> {
+    ensure!(
+        params.values.len() == manifest.params.len(),
+        "backend expects {} param tensors, got {}",
+        manifest.params.len(),
+        params.values.len()
+    );
+    for (v, spec) in params.values.iter().zip(&manifest.params) {
+        ensure!(
+            v.len() == spec.numel(),
+            "param '{}' has {} elements, manifest expects {}",
+            spec.name,
+            v.len(),
+            spec.numel()
+        );
+    }
+    Ok(())
+}
+
+/// One conv layer's fused aggregate+norm+ReLU output rows.
+struct ConvRows {
+    h: Vec<f32>,
+    xhat: Vec<f32>,
+    e_next: Vec<f32>,
+    rstd: Vec<f32>,
+}
+
+fn conv_block(
+    batch: &PackedBatch,
+    t: &[f32],
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+    range: Range<usize>,
+) -> ConvRows {
+    let n = range.len();
+    let mut out = ConvRows {
+        h: vec![0f32; n * NODE_DIM],
+        xhat: vec![0f32; n * NODE_DIM],
+        e_next: vec![0f32; n * NODE_DIM],
+        rstd: vec![0f32; n],
+    };
+    for (i, node) in range.enumerate() {
+        let (cols, vals) = batch.adj.row(node);
+        let mut c = [0f64; NODE_DIM];
+        for (&cix, &a) in cols.iter().zip(vals) {
+            let af = a as f64;
+            let t_row = &t[cix as usize * NODE_DIM..(cix as usize + 1) * NODE_DIM];
+            for j in 0..NODE_DIM {
+                c[j] += af * t_row[j] as f64;
+            }
+        }
+        for j in 0..NODE_DIM {
+            c[j] += bvec[j] as f64;
+        }
+        let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
+        let var = c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        out.rstd[i] = rs as f32;
+        let o = i * NODE_DIM;
+        for j in 0..NODE_DIM {
+            let xh = (c[j] - mean) * rs;
+            out.xhat[o + j] = xh as f32;
+            let hv = xh * scale[j] as f64 + shift[j] as f64;
+            out.h[o + j] = hv as f32;
+            out.e_next[o + j] = hv.max(0.0) as f32;
+        }
+    }
+    out
+}
+
+fn par_conv(
+    batch: &PackedBatch,
+    t: &[f32],
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+) -> ConvRows {
+    let nn = batch.total_nodes();
+    let ranges = chunk_ranges(nn, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        return conv_block(batch, t, bvec, scale, shift, 0..nn);
+    }
+    let parts = parallel_map(&ranges, |r| conv_block(batch, t, bvec, scale, shift, r.clone()));
+    let mut out = ConvRows {
+        h: Vec::with_capacity(nn * NODE_DIM),
+        xhat: Vec::with_capacity(nn * NODE_DIM),
+        e_next: Vec::with_capacity(nn * NODE_DIM),
+        rstd: Vec::with_capacity(nn),
+    };
+    for p in parts {
+        out.h.extend_from_slice(&p.h);
+        out.xhat.extend_from_slice(&p.xhat);
+        out.e_next.extend_from_slice(&p.e_next);
+        out.rstd.extend_from_slice(&p.rstd);
+    }
+    out
+}
+
 /// Forward intermediates kept for the backward pass.
 struct Forward {
-    /// Masked node activations per level: `e[k]` for k = 0..=n_conv,
-    /// each flat `BATCH · MAX_NODES · NODE_DIM`.
+    /// Node activations per level: `e[k]` for k = 0..=n_conv, each flat
+    /// `[total_nodes, NODE_DIM]`.
     e: Vec<Vec<f32>>,
     /// Post-norm pre-ReLU activations per conv layer.
     h: Vec<Vec<f32>>,
     /// Normalized (pre scale/shift) activations per conv layer.
     xhat: Vec<Vec<f32>>,
-    /// Reciprocal std per node per conv layer, flat `BATCH · MAX_NODES`.
+    /// Reciprocal std per node per conv layer, flat `[total_nodes]`.
     rstd: Vec<Vec<f32>>,
-    /// Pooled readout features, flat `BATCH · READOUT`.
+    /// Segment-summed readout features, flat `[n_graphs, READOUT]`.
     feat: Vec<f32>,
     /// Predicted log-runtime per graph.
     z: Vec<f32>,
 }
 
-/// §III-C loss and its gradient w.r.t. z.
-///
-/// `ξ = |expm1(clamp(d, ±3))| + |d − clamp(d, ±3)|·e³` with
-/// `d = z − log ȳ`; the loss is the `weight·sample_mask`-weighted mean.
-fn loss_and_dz(z: &[f32], batch: &Batch) -> (f64, Vec<f64>) {
+/// The §III-C ξ loss term and its derivative at `d = z − log ȳ`:
+/// `ξ = |expm1(clamp(d, ±3))| + |d − clamp(d, ±3)|·e³`.
+pub(crate) fn xi_and_grad(d: f64) -> (f64, f64) {
     let e3 = LOSS_CLIP.exp();
+    let dclamped = d.clamp(-LOSS_CLIP, LOSS_CLIP);
+    let xi = dclamped.exp_m1().abs() + (d - dclamped).abs() * e3;
+    let g = if d > LOSS_CLIP {
+        e3
+    } else if d < -LOSS_CLIP {
+        -e3
+    } else if d > 0.0 {
+        d.exp()
+    } else if d < 0.0 {
+        -d.exp()
+    } else {
+        0.0
+    };
+    (xi, g)
+}
+
+/// §III-C loss and its gradient w.r.t. z: the `weight`-weighted mean of ξ
+/// over the batch's graphs.
+fn loss_and_dz(z: &[f32], batch: &PackedBatch) -> (f64, Vec<f64>) {
+    let nb = batch.n_graphs();
     let mut wsum = 0f64;
-    for b in 0..BATCH {
-        wsum += (batch.weight[b] * batch.sample_mask[b]) as f64;
+    for g in 0..nb {
+        wsum += batch.weight[g] as f64;
     }
     let denom = wsum.max(1e-6);
     let mut loss = 0f64;
-    let mut dz = vec![0f64; BATCH];
-    for b in 0..BATCH {
-        let w = (batch.weight[b] * batch.sample_mask[b]) as f64;
+    let mut dz = vec![0f64; nb];
+    for g in 0..nb {
+        let w = batch.weight[g] as f64;
         if w == 0.0 {
             continue;
         }
-        let d = z[b] as f64 - batch.log_y[b] as f64;
-        let dclamped = d.clamp(-LOSS_CLIP, LOSS_CLIP);
-        let xi = dclamped.exp_m1().abs() + (d - dclamped).abs() * e3;
+        let d = z[g] as f64 - batch.log_y[g] as f64;
+        let (xi, gr) = xi_and_grad(d);
         loss += w * xi;
-        let g = if d > LOSS_CLIP {
-            e3
-        } else if d < -LOSS_CLIP {
-            -e3
-        } else if d > 0.0 {
-            d.exp()
-        } else if d < 0.0 {
-            -d.exp()
-        } else {
-            0.0
-        };
-        dz[b] = w * g / denom;
+        dz[g] = w * gr / denom;
     }
     (loss / denom, dz)
 }
 
 /// Adagrad with weight decay: `g += wd·p; a += g²; p −= lr·g/(√a + ε)`.
-fn apply_adagrad(params: &mut Params, accum: &mut Params, grads: &[Vec<f64>], lr: f64, wd: f64) {
+pub(crate) fn apply_adagrad(
+    params: &mut Params,
+    accum: &mut Params,
+    grads: &[Vec<f64>],
+    lr: f64,
+    wd: f64,
+) {
     for (t, g) in grads.iter().enumerate() {
         let pv = &mut params.values[t];
         let av = &mut accum.values[t];
@@ -522,17 +598,17 @@ impl Backend for NativeBackend {
         "native"
     }
 
-    fn infer(&self, params: &Params, batch: &Batch) -> Result<Vec<f32>> {
+    fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
         self.check_params(params)?;
         let fwd = self.forward(params, batch);
-        Ok(fwd.z[..batch.len].to_vec())
+        Ok(fwd.z)
     }
 
     fn train_step_lr(
         &self,
         params: &mut Params,
         accum: &mut Params,
-        batch: &Batch,
+        batch: &PackedBatch,
         lr: f32,
     ) -> Result<f32> {
         self.check_params(params)?;
@@ -544,7 +620,7 @@ impl Backend for NativeBackend {
         Ok(loss as f32)
     }
 
-    /// Parallel over batch chunks: each worker builds its padded batch and
+    /// Parallel over batch chunks: each worker packs its own batch and
     /// runs the forward pass independently (the backend is stateless).
     /// Every chunk goes through the same [`predict_chunk`] helper as the
     /// sequential trait default.
@@ -570,115 +646,19 @@ impl Backend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::constants::BENCH_RUNS;
-
-    /// Deterministic integer-pattern fill shared with the JAX reference
-    /// generator (see the fixture description in DESIGN.md §Testing):
-    /// `h = (i·mul + add) mod m; v = (h − sub) / div` in f32.
-    fn pat(i: usize, mul: u64, add: u64, m: u64, sub: f32, div: f32) -> f32 {
-        let h = ((i as u64) * mul + add) % m;
-        (h as f32 - sub) / div
-    }
-
-    /// The parity fixture: patterned features/adjacency, sample `b` has
-    /// `3 + (7b mod 45)` real stages.
-    fn parity_batch() -> Batch {
-        let n = MAX_NODES;
-        let mut b = Batch {
-            inv: vec![0.0; BATCH * n * INV_DIM],
-            dep: vec![0.0; BATCH * n * DEP_DIM],
-            adj: vec![0.0; BATCH * n * n],
-            mask: vec![0.0; BATCH * n],
-            log_y: vec![0.0; BATCH],
-            weight: vec![0.0; BATCH],
-            sample_mask: vec![0.0; BATCH],
-            len: BATCH,
-        };
-        for (i, v) in b.inv.iter_mut().enumerate() {
-            *v = pat(i, 131, 7, 997, 498.0, 997.0);
-        }
-        for (i, v) in b.dep.iter_mut().enumerate() {
-            *v = pat(i, 131, 307, 997, 498.0, 997.0);
-        }
-        for (i, v) in b.adj.iter_mut().enumerate() {
-            *v = pat(i, 89, 3, 512, 0.0, 24576.0);
-        }
-        for bb in 0..BATCH {
-            let real = 3 + (7 * bb) % 45;
-            for nn in 0..real {
-                b.mask[bb * n + nn] = 1.0;
-            }
-        }
-        b
-    }
-
-    /// Patterned parameters matching the JAX reference generator.
-    fn parity_params(manifest: &Manifest) -> Params {
-        let mut values = Vec::new();
-        let mut shapes = Vec::new();
-        let mut names = Vec::new();
-        for (ti, spec) in manifest.params.iter().enumerate() {
-            let v: Vec<f32> = (0..spec.numel())
-                .map(|i| {
-                    let h = ((ti as u64) * 1009 + (i as u64) * 193) % 1013;
-                    let base = (h as f32 - 506.0) / 1013.0;
-                    if spec.name == "w_out" {
-                        base * 0.05
-                    } else if spec.name.ends_with("_scale") {
-                        1.0 + base * 0.25
-                    } else {
-                        base * 0.25
-                    }
-                })
-                .collect();
-            values.push(v);
-            shapes.push(spec.shape.clone());
-            names.push(spec.name.clone());
-        }
-        Params { values, shapes, names }
-    }
-
-    /// z for the parity fixture, computed by the repo's JAX model with
-    /// `use_pallas=False` (i.e. through `python/compile/kernels/ref.py`).
-    const REF_Z: [f32; 32] = [
-        -2.058540821e0,
-        -6.377158165e0,
-        -9.944972038e0,
-        -1.221917439e1,
-        -1.431323147e1,
-        -1.581014824e1,
-        -1.778214264e1,
-        -4.756258011e0,
-        -8.321274757e0,
-        -1.084673595e1,
-        -1.295297146e1,
-        -1.504773235e1,
-        -1.781664848e1,
-        -2.804502487e0,
-        -7.006120682e0,
-        -9.869874001e0,
-        -1.217363834e1,
-        -1.442363739e1,
-        -1.650897217e1,
-        -1.865101242e1,
-        -5.215301991e0,
-        -8.816872597e0,
-        -1.120118141e1,
-        -1.382463169e1,
-        -1.543310452e1,
-        -1.775400925e1,
-        -3.412985563e0,
-        -7.477596760e0,
-        -1.036118412e1,
-        -1.242816830e1,
-        -1.427667713e1,
-        -1.616724014e1,
-    ];
+    use crate::runtime::dense_ref::DenseRefBackend;
+    use crate::testfix::{
+        grad_fixture_batch, identity_stats, parity_batch, parity_params, synth_packed_batch,
+        synth_sample, REF_GRADS, REF_LOSS, REF_Z,
+    };
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
 
     #[test]
-    fn forward_matches_jax_reference() {
+    fn forward_matches_jax_reference_through_packed_conversion() {
         let be = NativeBackend::new();
-        let batch = parity_batch();
+        let dense = parity_batch();
+        let batch = PackedBatch::from_dense(&dense).unwrap();
         let params = parity_params(be.manifest());
         let z = be.infer(&params, &batch).unwrap();
         assert_eq!(z.len(), BATCH);
@@ -691,41 +671,10 @@ mod tests {
         }
     }
 
-    /// Targets for the gradient parity test (same fixture + these labels).
-    fn grad_fixture_batch() -> Batch {
-        let mut b = parity_batch();
-        for i in 0..BATCH {
-            b.log_y[i] = -11.0 + (((i * 5) % 13) as f32) * 1.3;
-            b.weight[i] = 0.4 + (((i * 7) % 9) as f32) * 0.11;
-            b.sample_mask[i] = if i >= 30 { 0.0 } else { 1.0 };
-        }
-        b
-    }
-
-    /// Selected `jax.grad(model.loss_fn)` entries for the gradient fixture:
-    /// (tensor index, element index, reference value).
-    const REF_GRADS: [(usize, usize, f64); 13] = [
-        (0, 100, -7.715898752e-2),  // w_inv
-        (1, 3, 6.745553493e0),      // b_inv
-        (2, 500, -2.495915815e-2),  // w_dep
-        (3, 17, 5.561747551e0),     // b_dep
-        (4, 321, 1.312017292e-1),   // conv0_w
-        (5, 44, -1.284459591e0),    // conv0_b
-        (6, 10, -5.948795319e1),    // conv0_scale
-        (7, 77, -1.478031921e1),    // conv0_shift
-        (8, 1234, -3.098664856e1),  // conv1_w
-        (10, 63, 2.591241002e-1),   // conv1_scale
-        (12, 100, -5.401177979e2),  // w_out
-        (12, 239, 0.0),             // w_out — ReLU-dead readout channel
-        (13, 0, -1.414331627e1),    // b_out
-    ];
-
-    const REF_LOSS: f64 = 1.421302185e2;
-
     #[test]
-    fn backward_matches_jax_grads() {
+    fn backward_matches_jax_grads_through_packed_conversion() {
         let be = NativeBackend::new();
-        let batch = grad_fixture_batch();
+        let batch = PackedBatch::from_dense(&grad_fixture_batch()).unwrap();
         let params = parity_params(be.manifest());
         let fwd = be.forward(&params, &batch);
         let (loss, dz) = loss_and_dz(&fwd.z, &batch);
@@ -744,78 +693,109 @@ mod tests {
         }
     }
 
-    fn synth_sample(pid: u32, sid: u32, runtime: f32) -> GraphSample {
-        let ns = (4 + (pid as usize + sid as usize) % 5) as u16;
-        let n = ns as usize;
+    /// A random sample with arbitrary node count (beyond the old 48-node
+    /// cap), arbitrary edges and dense-ish random features.
+    fn random_sample(rng: &mut Rng, max_nodes: usize, pid: u32) -> GraphSample {
+        let n = 1 + rng.gen_range(max_nodes);
+        let mut edges = Vec::new();
+        for _ in 0..rng.gen_range(3 * n + 1) {
+            edges.push((rng.gen_range(n) as u16, rng.gen_range(n) as u16));
+        }
         let mut inv = vec![[0f32; INV_DIM]; n];
         let mut dep = vec![[0f32; DEP_DIM]; n];
         for s in 0..n {
-            for j in 0..INV_DIM {
-                inv[s][j] = pat(
-                    (pid as usize * 97 + s) * INV_DIM + j,
-                    211,
-                    5,
-                    883,
-                    441.0,
-                    441.0,
-                );
+            for v in inv[s].iter_mut() {
+                *v = rng.uniform(-2.0, 2.0) as f32;
             }
-            for j in 0..DEP_DIM {
-                dep[s][j] = pat(
-                    ((pid as usize * 31 + sid as usize * 7 + s) * DEP_DIM) + j,
-                    157,
-                    11,
-                    883,
-                    441.0,
-                    441.0,
-                );
+            for v in dep[s].iter_mut() {
+                *v = rng.uniform(-2.0, 2.0) as f32;
             }
+        }
+        let mut runs = [0f32; crate::constants::BENCH_RUNS];
+        let base = rng.uniform(1e-4, 1e-2);
+        for r in runs.iter_mut() {
+            *r = (base * rng.uniform(0.9, 1.1)) as f32;
         }
         GraphSample {
             pipeline_id: pid,
-            schedule_id: sid,
-            n_stages: ns,
-            edges: (0..n.saturating_sub(1)).map(|i| (i as u16, (i + 1) as u16)).collect(),
+            schedule_id: 0,
+            n_stages: n as u16,
+            edges,
             inv,
             dep,
-            runs: [runtime; BENCH_RUNS],
+            runs,
         }
     }
 
-    fn identity_stats() -> FeatureStats {
-        FeatureStats {
-            inv_mean: vec![0.0; INV_DIM],
-            inv_std: vec![1.0; INV_DIM],
-            dep_mean: vec![0.0; DEP_DIM],
-            dep_std: vec![1.0; DEP_DIM],
-        }
-    }
+    /// Property parity: for random variable-size graphs (including well
+    /// past the old 48-stage cap), the sparse forward and backward match
+    /// the dense reference engine within 1e-5.
+    #[test]
+    fn prop_sparse_matches_dense_reference() {
+        let sparse = NativeBackend::new();
+        let dense = DenseRefBackend::new();
+        propcheck::check_rng("sparse vs dense-ref parity", 0x5EED, 10, |rng| {
+            let n_graphs = 1 + rng.gen_range(5);
+            let samples: Vec<GraphSample> = (0..n_graphs)
+                .map(|g| random_sample(rng, 80, g as u32))
+                .collect();
+            let refs: Vec<&GraphSample> = samples.iter().collect();
+            let min_rt = refs
+                .iter()
+                .map(|s| s.mean_runtime())
+                .fold(f64::INFINITY, f64::min);
+            let best = vec![min_rt; refs.len()];
+            let batch = PackedBatch::build(&refs, &identity_stats(), &best)
+                .map_err(|e| e.to_string())?;
 
-    /// Fixed-seed synthetic batch: 4 pipelines × 8 schedules with runtimes
-    /// spread ~6×, plus the per-pipeline best for the α weights.
-    fn synth_batch() -> Batch {
-        let mut samples = Vec::new();
-        let mut best = Vec::new();
-        for i in 0..BATCH {
-            let pid = (i / 8) as u32;
-            let sid = (i % 8) as u32;
-            let base = 1e-3 * (1.0 + pid as f32);
-            samples.push(synth_sample(pid, sid, base * (1.0 + 0.7 * sid as f32)));
-            best.push(base as f64);
-        }
-        let refs: Vec<&GraphSample> = samples.iter().collect();
-        Batch::build(&refs, &identity_stats(), &best)
+            let params = sparse.init_params(rng.next_u64());
+            let zs = sparse.infer(&params, &batch).map_err(|e| e.to_string())?;
+            let zd = dense.infer(&params, &batch).map_err(|e| e.to_string())?;
+            if zs.len() != zd.len() {
+                return Err(format!("length mismatch {} vs {}", zs.len(), zd.len()));
+            }
+            for (i, (a, b)) in zs.iter().zip(&zd).enumerate() {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("forward diverges at graph {i}: {a} vs {b}"));
+                }
+            }
+
+            let mut ps = params.clone();
+            let mut as_ = ps.zeros_like();
+            let mut pd = params.clone();
+            let mut ad = pd.zeros_like();
+            let ls = sparse
+                .train_step_lr(&mut ps, &mut as_, &batch, 0.01)
+                .map_err(|e| e.to_string())?;
+            let ld = dense
+                .train_step_lr(&mut pd, &mut ad, &batch, 0.01)
+                .map_err(|e| e.to_string())?;
+            if (ls - ld).abs() > 1e-5 * ld.abs().max(1.0) {
+                return Err(format!("loss diverges: sparse {ls} vs dense {ld}"));
+            }
+            for (t, (vs, vd)) in ps.values.iter().zip(&pd.values).enumerate() {
+                for (i, (a, b)) in vs.iter().zip(vd).enumerate() {
+                    if (a - b).abs() > 1e-5 {
+                        return Err(format!(
+                            "post-step param[{t}][{i}] diverges: {a} vs {b}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
     fn adagrad_training_reduces_loss_over_50_steps() {
         let be = NativeBackend::new();
-        let batch = synth_batch();
+        let batch = synth_packed_batch();
         // deterministic patterned init (the JAX simulation of this exact
         // fixture converges 6.06 -> 0.33 in 50 steps at lr 0.01)
         let mut params = parity_params(be.manifest());
         // output-bias init at the batch mean log-runtime (as train() does)
-        let mean_log_y: f32 = batch.log_y.iter().sum::<f32>() / BATCH as f32;
+        let nb = batch.n_graphs();
+        let mean_log_y: f32 = batch.log_y.iter().sum::<f32>() / nb as f32;
         params.values.last_mut().unwrap()[0] = mean_log_y;
         let mut accum = params.zeros_like();
         let mut losses = Vec::with_capacity(50);
@@ -840,33 +820,40 @@ mod tests {
     }
 
     #[test]
-    fn infer_is_deterministic_and_masks_padding() {
+    fn infer_is_deterministic_across_repeats() {
         let be = NativeBackend::new();
         let samples: Vec<GraphSample> =
             (0..5).map(|i| synth_sample(0, i, 1e-3 * (1.0 + i as f32))).collect();
         let refs: Vec<&GraphSample> = samples.iter().collect();
-        let best = vec![1e-3f64; refs.len()];
-        let clean = Batch::build(&refs, &identity_stats(), &best);
+        let batch = PackedBatch::for_inference(&refs, &identity_stats()).unwrap();
         let params = be.init_params(3);
-        let z1 = be.infer(&params, &clean).unwrap();
-        let z2 = be.infer(&params, &clean).unwrap();
+        let z1 = be.infer(&params, &batch).unwrap();
+        let z2 = be.infer(&params, &batch).unwrap();
         assert_eq!(z1.len(), 5);
         assert_eq!(z1, z2);
         assert!(z1.iter().all(|v| v.is_finite()));
+    }
 
-        // poisoning the padded region must not change predictions
-        let mut poisoned = clean.clone();
-        let n = MAX_NODES;
-        for b in 5..BATCH {
-            for v in &mut poisoned.inv[b * n * INV_DIM..(b + 1) * n * INV_DIM] {
-                *v = 1234.5;
-            }
-            for v in &mut poisoned.dep[b * n * DEP_DIM..(b + 1) * n * DEP_DIM] {
-                *v = -77.7;
-            }
-        }
-        let z3 = be.infer(&params, &poisoned).unwrap();
-        assert_eq!(z1, z3, "padding rows leaked into predictions");
+    #[test]
+    fn graphs_beyond_the_old_cap_run() {
+        // 200 stages — impossible to even represent in the padded layout
+        let be = NativeBackend::new();
+        let big = GraphSample {
+            pipeline_id: 7,
+            schedule_id: 0,
+            n_stages: 200,
+            edges: (0..199).map(|i| (i as u16, (i + 1) as u16)).collect(),
+            inv: vec![[0.1; INV_DIM]; 200],
+            dep: vec![[0.2; DEP_DIM]; 200],
+            runs: [1e-3; crate::constants::BENCH_RUNS],
+        };
+        let refs = vec![&big];
+        let batch = PackedBatch::for_inference(&refs, &identity_stats()).unwrap();
+        assert_eq!(batch.total_nodes(), 200);
+        let params = be.init_params(2);
+        let z = be.infer(&params, &batch).unwrap();
+        assert_eq!(z.len(), 1);
+        assert!(z[0].is_finite());
     }
 
     #[test]
@@ -881,11 +868,10 @@ mod tests {
         let parallel = be.predict_runtimes(&params, &refs, &stats).unwrap();
         assert_eq!(parallel.len(), 70);
 
-        // sequential reference: one padded batch per chunk
+        // sequential reference: one packed batch per chunk
         let mut sequential = Vec::new();
         for chunk in refs.chunks(BATCH) {
-            let best = vec![1.0f64; chunk.len()];
-            let batch = Batch::build(chunk, &stats, &best);
+            let batch = PackedBatch::for_inference(chunk, &stats).unwrap();
             let z = be.infer(&params, &batch).unwrap();
             sequential.extend(z.iter().map(|&v| (v as f64).exp()));
         }
@@ -898,10 +884,10 @@ mod tests {
         for layers in [0usize, 1, 4] {
             let be = NativeBackend::with_layers(layers);
             assert_eq!(be.manifest().params.len(), 6 + 4 * layers);
-            let batch = synth_batch();
+            let batch = synth_packed_batch();
             let params = be.init_params(5);
             let z = be.infer(&params, &batch).unwrap();
-            assert_eq!(z.len(), BATCH);
+            assert_eq!(z.len(), batch.n_graphs());
             assert!(z.iter().all(|v| v.is_finite()));
             let mut p = params.clone();
             let mut a = p.zeros_like();
@@ -915,7 +901,7 @@ mod tests {
         let be = NativeBackend::new();
         let wrong = be.init_params(1);
         let be0 = NativeBackend::with_layers(0);
-        let batch = synth_batch();
+        let batch = synth_packed_batch();
         assert!(be0.infer(&wrong, &batch).is_err());
     }
 }

@@ -1,0 +1,225 @@
+//! Shared test fixtures (test builds only): the JAX-pinned parity
+//! fixtures used by both GCN engines, plus the synthetic-sample builders
+//! the model/runtime test suites share.
+//!
+//! The fixtures are deterministic integer patterns matching the JAX
+//! reference generator (see DESIGN.md §Testing): the dense batch is the
+//! exact tensor layout the reference `python/compile/kernels/ref.py`
+//! forward consumed, and `REF_Z` / `REF_GRADS` / `REF_LOSS` are the
+//! numbers that JAX model produced on it. The sparse engine must
+//! reproduce them through `PackedBatch::from_dense` — that conversion
+//! plus parity is what makes the sparse rewrite a refactor instead of a
+//! fork.
+
+use crate::constants::{BATCH, BENCH_RUNS, DEP_DIM, INV_DIM, MAX_NODES};
+use crate::dataset::sample::GraphSample;
+use crate::features::normalize::FeatureStats;
+use crate::model::{DenseBatch, PackedBatch};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::params::Params;
+
+/// Deterministic integer-pattern fill shared with the JAX reference
+/// generator: `h = (i·mul + add) mod m; v = (h − sub) / div` in f32.
+pub fn pat(i: usize, mul: u64, add: u64, m: u64, sub: f32, div: f32) -> f32 {
+    let h = ((i as u64) * mul + add) % m;
+    (h as f32 - sub) / div
+}
+
+/// The parity fixture: patterned features/adjacency, sample `b` has
+/// `3 + (7b mod 45)` real stages.
+pub fn parity_batch() -> DenseBatch {
+    let n = MAX_NODES;
+    let mut b = DenseBatch::zeros(BATCH, n, BATCH);
+    for (i, v) in b.inv.iter_mut().enumerate() {
+        *v = pat(i, 131, 7, 997, 498.0, 997.0);
+    }
+    for (i, v) in b.dep.iter_mut().enumerate() {
+        *v = pat(i, 131, 307, 997, 498.0, 997.0);
+    }
+    for (i, v) in b.adj.iter_mut().enumerate() {
+        *v = pat(i, 89, 3, 512, 0.0, 24576.0);
+    }
+    for bb in 0..BATCH {
+        let real = 3 + (7 * bb) % 45;
+        for nn in 0..real {
+            b.mask[bb * n + nn] = 1.0;
+        }
+        b.sample_mask[bb] = 1.0;
+    }
+    b
+}
+
+/// Patterned parameters matching the JAX reference generator.
+pub fn parity_params(manifest: &Manifest) -> Params {
+    let mut values = Vec::new();
+    let mut shapes = Vec::new();
+    let mut names = Vec::new();
+    for (ti, spec) in manifest.params.iter().enumerate() {
+        let v: Vec<f32> = (0..spec.numel())
+            .map(|i| {
+                let h = ((ti as u64) * 1009 + (i as u64) * 193) % 1013;
+                let base = (h as f32 - 506.0) / 1013.0;
+                if spec.name == "w_out" {
+                    base * 0.05
+                } else if spec.name.ends_with("_scale") {
+                    1.0 + base * 0.25
+                } else {
+                    base * 0.25
+                }
+            })
+            .collect();
+        values.push(v);
+        shapes.push(spec.shape.clone());
+        names.push(spec.name.clone());
+    }
+    Params { values, shapes, names }
+}
+
+/// z for the parity fixture, computed by the repo's JAX model with
+/// `use_pallas=False` (i.e. through `python/compile/kernels/ref.py`).
+pub const REF_Z: [f32; 32] = [
+    -2.058540821e0,
+    -6.377158165e0,
+    -9.944972038e0,
+    -1.221917439e1,
+    -1.431323147e1,
+    -1.581014824e1,
+    -1.778214264e1,
+    -4.756258011e0,
+    -8.321274757e0,
+    -1.084673595e1,
+    -1.295297146e1,
+    -1.504773235e1,
+    -1.781664848e1,
+    -2.804502487e0,
+    -7.006120682e0,
+    -9.869874001e0,
+    -1.217363834e1,
+    -1.442363739e1,
+    -1.650897217e1,
+    -1.865101242e1,
+    -5.215301991e0,
+    -8.816872597e0,
+    -1.120118141e1,
+    -1.382463169e1,
+    -1.543310452e1,
+    -1.775400925e1,
+    -3.412985563e0,
+    -7.477596760e0,
+    -1.036118412e1,
+    -1.242816830e1,
+    -1.427667713e1,
+    -1.616724014e1,
+];
+
+/// Targets for the gradient parity test (the same fixture + these labels).
+pub fn grad_fixture_batch() -> DenseBatch {
+    let mut b = parity_batch();
+    for i in 0..BATCH {
+        b.log_y[i] = -11.0 + (((i * 5) % 13) as f32) * 1.3;
+        b.weight[i] = 0.4 + (((i * 7) % 9) as f32) * 0.11;
+        b.sample_mask[i] = if i >= 30 { 0.0 } else { 1.0 };
+    }
+    b
+}
+
+/// Selected `jax.grad(model.loss_fn)` entries for the gradient fixture:
+/// (tensor index, element index, reference value).
+pub const REF_GRADS: [(usize, usize, f64); 13] = [
+    (0, 100, -7.715898752e-2),  // w_inv
+    (1, 3, 6.745553493e0),      // b_inv
+    (2, 500, -2.495915815e-2),  // w_dep
+    (3, 17, 5.561747551e0),     // b_dep
+    (4, 321, 1.312017292e-1),   // conv0_w
+    (5, 44, -1.284459591e0),    // conv0_b
+    (6, 10, -5.948795319e1),    // conv0_scale
+    (7, 77, -1.478031921e1),    // conv0_shift
+    (8, 1234, -3.098664856e1),  // conv1_w
+    (10, 63, 2.591241002e-1),   // conv1_scale
+    (12, 100, -5.401177979e2),  // w_out
+    (12, 239, 0.0),             // w_out — ReLU-dead readout channel
+    (13, 0, -1.414331627e1),    // b_out
+];
+
+pub const REF_LOSS: f64 = 1.421302185e2;
+
+/// A chain-topology sample with an explicit stage count — the minimal
+/// fixture for batching/layout tests.
+pub fn chain_sample(n_stages: u16, runtime: f32) -> GraphSample {
+    let ns = n_stages as usize;
+    GraphSample {
+        pipeline_id: 1,
+        schedule_id: 0,
+        n_stages,
+        edges: (0..ns.saturating_sub(1))
+            .map(|i| (i as u16, (i + 1) as u16))
+            .collect(),
+        inv: vec![[0.5; INV_DIM]; ns],
+        dep: vec![[1.5; DEP_DIM]; ns],
+        runs: [runtime; BENCH_RUNS],
+    }
+}
+
+/// Deterministic synthetic sample shared by the training/inference tests.
+pub fn synth_sample(pid: u32, sid: u32, runtime: f32) -> GraphSample {
+    let ns = (4 + (pid as usize + sid as usize) % 5) as u16;
+    let n = ns as usize;
+    let mut inv = vec![[0f32; INV_DIM]; n];
+    let mut dep = vec![[0f32; DEP_DIM]; n];
+    for s in 0..n {
+        for j in 0..INV_DIM {
+            inv[s][j] = pat(
+                (pid as usize * 97 + s) * INV_DIM + j,
+                211,
+                5,
+                883,
+                441.0,
+                441.0,
+            );
+        }
+        for j in 0..DEP_DIM {
+            dep[s][j] = pat(
+                ((pid as usize * 31 + sid as usize * 7 + s) * DEP_DIM) + j,
+                157,
+                11,
+                883,
+                441.0,
+                441.0,
+            );
+        }
+    }
+    GraphSample {
+        pipeline_id: pid,
+        schedule_id: sid,
+        n_stages: ns,
+        edges: (0..n.saturating_sub(1)).map(|i| (i as u16, (i + 1) as u16)).collect(),
+        inv,
+        dep,
+        runs: [runtime; BENCH_RUNS],
+    }
+}
+
+pub fn identity_stats() -> FeatureStats {
+    FeatureStats {
+        inv_mean: vec![0.0; INV_DIM],
+        inv_std: vec![1.0; INV_DIM],
+        dep_mean: vec![0.0; DEP_DIM],
+        dep_std: vec![1.0; DEP_DIM],
+    }
+}
+
+/// Fixed-seed synthetic batch: 4 pipelines × 8 schedules with runtimes
+/// spread ~6×, plus the per-pipeline best for the α weights.
+pub fn synth_packed_batch() -> PackedBatch {
+    let mut samples = Vec::new();
+    let mut best = Vec::new();
+    for i in 0..BATCH {
+        let pid = (i / 8) as u32;
+        let sid = (i % 8) as u32;
+        let base = 1e-3 * (1.0 + pid as f32);
+        samples.push(synth_sample(pid, sid, base * (1.0 + 0.7 * sid as f32)));
+        best.push(base as f64);
+    }
+    let refs: Vec<&GraphSample> = samples.iter().collect();
+    PackedBatch::build(&refs, &identity_stats(), &best).unwrap()
+}

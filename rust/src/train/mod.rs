@@ -5,7 +5,7 @@ pub mod active;
 
 use crate::constants::BATCH;
 use crate::dataset::sample::Dataset;
-use crate::model::Batch;
+use crate::model::PackedBatch;
 use crate::predictor::{save_gcn_bundle, GcnView, Predictor};
 use crate::runtime::{Backend, Params};
 use crate::util::rng::Rng;
@@ -52,20 +52,21 @@ pub struct TrainResult {
     pub best_test_mape: f64,
 }
 
-/// Build all batches for an epoch from shuffled sample indices.
-fn epoch_batches<'a>(
-    ds: &'a Dataset,
+/// Build all packed batches for an epoch from shuffled sample indices
+/// (`BATCH` graphs per batch — a chunking policy, not a layout cap).
+fn epoch_batches(
+    ds: &Dataset,
     order: &[usize],
     best: &std::collections::BTreeMap<u32, f64>,
-) -> Vec<Batch> {
-    let stats = ds.stats.as_ref().expect("dataset stats fitted");
+) -> Result<Vec<PackedBatch>> {
+    let stats = ds.stats.as_ref().context("dataset stats fitted")?;
     order
         .chunks(BATCH)
         .map(|chunk| {
             let samples: Vec<&crate::dataset::sample::GraphSample> =
                 chunk.iter().map(|&i| &ds.samples[i]).collect();
             let bests: Vec<f64> = samples.iter().map(|s| best[&s.pipeline_id]).collect();
-            Batch::build(&samples, stats, &bests)
+            PackedBatch::build(&samples, stats, &bests)
         })
         .collect()
 }
@@ -122,7 +123,7 @@ pub fn train(
     for epoch in 0..cfg.epochs {
         let mut order: Vec<usize> = (0..train_ds.len()).collect();
         rng.shuffle(&mut order);
-        let batches = epoch_batches(train_ds, &order, &best_rt);
+        let batches = epoch_batches(train_ds, &order, &best_rt)?;
         let mut losses = Vec::with_capacity(batches.len());
         for b in &batches {
             losses.push(rt.train_step_lr(&mut params, &mut accum, b, cfg.lr)? as f64);
@@ -194,14 +195,14 @@ mod tests {
         let ds = build_dataset(&cfg);
         let best = ds.best_per_pipeline();
         let order: Vec<usize> = (0..ds.len()).collect();
-        let batches = epoch_batches(&ds, &order, &best);
-        let covered: usize = batches.iter().map(|b| b.len).sum();
+        let batches = epoch_batches(&ds, &order, &best).unwrap();
+        let covered: usize = batches.iter().map(|b| b.n_graphs()).sum();
         assert_eq!(covered, ds.len());
-        // all batches fully masked where padded
+        // no batch exceeds the chunk size; every graph keeps its own nodes
         for b in &batches {
-            for i in b.len..BATCH {
-                assert_eq!(b.sample_mask[i], 0.0);
-            }
+            assert!(b.n_graphs() <= BATCH);
+            let nodes: usize = (0..b.n_graphs()).map(|g| b.graph_nodes(g).len()).sum();
+            assert_eq!(nodes, b.total_nodes());
         }
     }
 }

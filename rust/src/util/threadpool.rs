@@ -62,6 +62,20 @@ where
     parallel_map_indexed(items.len(), |i| f(&items[i]))
 }
 
+/// Contiguous index ranges covering `0..n`: at most [`num_threads`] of
+/// them, each at least `min_len` long (the last may be shorter). The
+/// native engine uses these as its parallel row blocks — callers get one
+/// range back (i.e. "stay sequential") whenever `n` is below the point
+/// where fan-out pays for itself.
+pub fn chunk_ranges(n: usize, min_len: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = num_threads().max(1);
+    let len = n.div_ceil(t).max(min_len.max(1));
+    (0..n).step_by(len).map(|s| s..(s + len).min(n)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +97,23 @@ mod tests {
     fn single_item() {
         let out = parallel_map_indexed(1, |i| i + 10);
         assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, min) in [(0usize, 16usize), (1, 16), (15, 16), (16, 16), (1000, 64), (1000, 1)] {
+            let ranges = chunk_ranges(n, min);
+            let covered: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, n, "n={n} min={min}");
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert!(ranges.len() <= num_threads().max(1));
+        }
+        assert_eq!(chunk_ranges(15, 16).len(), 1, "below min_len stays one block");
     }
 
     #[test]

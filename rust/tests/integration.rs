@@ -4,12 +4,12 @@
 //! the `pjrt` module at the bottom and only build with `--features pjrt`.
 
 use gcn_perf::constants::*;
-use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
+use gcn_perf::dataset::builder::{build_dataset, sample_from_schedule, DataGenConfig};
 use gcn_perf::dataset::store;
 use gcn_perf::eval::harness;
-use gcn_perf::model::Batch;
+use gcn_perf::model::PackedBatch;
 use gcn_perf::predictor::{GcnPredictor, GcnView, Predictor};
-use gcn_perf::runtime::{load_backend, Backend, NativeBackend};
+use gcn_perf::runtime::{load_backend, Backend, DenseRefBackend, NativeBackend};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train, TrainConfig};
 use std::path::Path;
@@ -64,41 +64,38 @@ fn native_infer_shape_and_determinism() {
     let best = ds.best_per_pipeline();
     let refs: Vec<_> = ds.samples.iter().take(BATCH).collect();
     let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
-    let batch = Batch::build(&refs, &stats, &bests);
+    let batch = PackedBatch::build(&refs, &stats, &bests).unwrap();
     let params = rt.init_params(3);
     let z1 = rt.infer(&params, &batch).unwrap();
     let z2 = rt.infer(&params, &batch).unwrap();
-    assert_eq!(z1.len(), BATCH.min(refs.len()));
+    assert_eq!(z1.len(), refs.len());
     assert_eq!(z1, z2, "inference must be deterministic");
     assert!(z1.iter().all(|v| v.is_finite()));
 }
 
 #[test]
-fn native_partial_batch_padding_invisible() {
-    let rt = NativeBackend::new();
+fn sparse_and_dense_reference_agree_on_real_pipelines() {
+    // the two engines share params and batches; on generator output they
+    // must agree within the parity budget (the in-crate property test
+    // covers random graphs — this covers the real featurization path)
+    let sparse = NativeBackend::new();
+    let dense = DenseRefBackend::new();
     let ds = small_dataset(4, 8, 6);
     let stats = ds.stats.clone().unwrap();
     let best = ds.best_per_pipeline();
-    let params = rt.init_params(4);
-    // a 5-sample batch: the remaining 27 rows are padding (sample_mask = 0,
-    // node mask = 0). Poisoning the padded feature/adjacency region must not
-    // change the predictions for the real samples.
-    let refs: Vec<_> = ds.samples.iter().take(5).collect();
+    let refs: Vec<_> = ds.samples.iter().take(BATCH).collect();
     let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
-    let clean = Batch::build(&refs, &stats, &bests);
-    let mut poisoned = clean.clone();
-    let n = MAX_NODES;
-    for b in 5..BATCH {
-        for v in &mut poisoned.inv[b * n * INV_DIM..(b + 1) * n * INV_DIM] {
-            *v = 1234.5;
-        }
-        for v in &mut poisoned.dep[b * n * DEP_DIM..(b + 1) * n * DEP_DIM] {
-            *v = -77.7;
-        }
+    let batch = PackedBatch::build(&refs, &stats, &bests).unwrap();
+    let params = sparse.init_params(4);
+    let zs = sparse.infer(&params, &batch).unwrap();
+    let zd = dense.infer(&params, &batch).unwrap();
+    assert_eq!(zs.len(), zd.len());
+    for (i, (a, b)) in zs.iter().zip(&zd).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5,
+            "engines diverge at graph {i}: sparse {a} vs dense {b}"
+        );
     }
-    let z_clean = rt.infer(&params, &clean).unwrap();
-    let z_poisoned = rt.infer(&params, &poisoned).unwrap();
-    assert_eq!(z_clean, z_poisoned, "padding rows leaked into predictions");
 }
 
 #[test]
@@ -136,7 +133,7 @@ fn native_ablation_variants_run() {
     let best = ds.best_per_pipeline();
     let refs: Vec<_> = ds.samples.iter().take(BATCH).collect();
     let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
-    let batch = Batch::build(&refs, &stats, &bests);
+    let batch = PackedBatch::build(&refs, &stats, &bests).unwrap();
     for layers in [0usize, 1, 4] {
         let rt = NativeBackend::with_layers(layers);
         assert_eq!(rt.manifest().batch, BATCH);
@@ -173,19 +170,69 @@ fn fig8_harness_produces_three_rows() {
 }
 
 #[test]
-fn fig9_harness_covers_nine_networks() {
+fn fig9_harness_covers_all_zoo_networks() {
     let rt = NativeBackend::new();
     let ds = small_dataset(6, 6, 9);
     let stats = ds.stats.clone().unwrap();
     let params = rt.init_params(5);
     let gcn = GcnPredictor::new(Box::new(rt), params, stats);
     let rows = harness::run_fig9(&gcn, &Machine::default(), 8, 3).unwrap();
-    assert_eq!(rows.len(), 9);
+    // the nine paper networks plus the >48-stage resnet50
+    assert_eq!(rows.len(), 10);
+    assert!(rows.iter().any(|r| r.network == "resnet50"));
     for r in &rows {
         assert_eq!(r.n_schedules, 8);
         assert!(r.n_pairs > 0);
         assert!(r.accuracy_pct() >= 0.0 && r.accuracy_pct() <= 100.0);
     }
+}
+
+#[test]
+fn big_network_trains_and_predicts_end_to_end() {
+    // the >48-stage zoo network through the full stack: featurize →
+    // packed batches → train → bundle round trip → predict. None of this
+    // was representable in the old padded layout.
+    let net = gcn_perf::zoo::resnet50();
+    assert!(net.num_stages() > MAX_NODES);
+    let nests = gcn_perf::lower::lower_pipeline(&net);
+    let machine = Machine::default();
+    let mut rng = gcn_perf::util::rng::Rng::new(31);
+
+    let mut ds = gcn_perf::dataset::Dataset::default();
+    for sid in 0..8u32 {
+        let sched = gcn_perf::schedule::random::random_pipeline_schedule(&net, &nests, &mut rng);
+        ds.samples
+            .push(sample_from_schedule(&net, &nests, &sched, &machine, 100, sid, &mut rng));
+    }
+    // mix in small pipelines so the batch spans graph sizes
+    let small = small_dataset(3, 4, 17);
+    ds.samples.extend(small.samples);
+    ds.fit_stats();
+
+    let rt = NativeBackend::new();
+    let result = train(
+        &rt,
+        &ds,
+        &ds,
+        &TrainConfig { epochs: 2, verbose: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(result.history.iter().all(|e| e.train_loss.is_finite()));
+
+    let stats = ds.stats.clone().unwrap();
+    let view = GcnView { backend: &rt, params: &result.params, stats: &stats };
+    let refs: Vec<_> = ds.samples.iter().collect();
+    let preds = view.predict(&refs).unwrap();
+    assert_eq!(preds.len(), ds.len());
+    assert!(preds.iter().all(|p| p.is_finite() && *p > 0.0));
+
+    // bundle round trip serves the big graphs identically
+    let path = std::env::temp_dir().join("gcn_perf_it_bignet.bundle");
+    view.save(&path).unwrap();
+    let served = gcn_perf::predictor::registry::load_bundle(&path).unwrap();
+    let again = served.predict(&refs).unwrap();
+    assert_eq!(preds, again, "bundle round trip must preserve big-graph predictions");
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
@@ -367,10 +414,10 @@ mod pjrt {
         let best = ds.best_per_pipeline();
         let refs: Vec<_> = ds.samples.iter().take(BATCH).collect();
         let bests: Vec<f64> = refs.iter().map(|s| best[&s.pipeline_id]).collect();
-        let batch = Batch::build(&refs, &stats, &bests);
+        let batch = PackedBatch::build(&refs, &stats, &bests).unwrap();
         let params = rt.init_params(3);
         let z = rt.infer(&params, &batch).unwrap();
-        assert_eq!(z.len(), BATCH.min(refs.len()));
+        assert_eq!(z.len(), refs.len());
         assert_eq!(z, rt.infer(&params, &batch).unwrap(), "pjrt inference must be deterministic");
         assert!(z.iter().all(|v| v.is_finite()));
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Dense-vs-sparse perf trajectory: builds the release binary and writes
+# BENCH_3.json at the repository root. Pass --fast for the short smoke
+# variant CI runs.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+FAST_FLAG=""
+if [[ "${1:-}" == "--fast" ]]; then
+    FAST_FLAG="--fast"
+fi
+
+cargo run --release -- bench ${FAST_FLAG} --out ../BENCH_3.json
+echo "wrote $(cd .. && pwd)/BENCH_3.json"

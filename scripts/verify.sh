@@ -3,6 +3,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+echo "==> cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "(rustfmt not installed — skipping; CI runs it)"
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
