@@ -10,11 +10,12 @@
 
 use gcn_perf::eval::harness;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
-use gcn_perf::predictor::GcnPredictor;
+use gcn_perf::predictor::{GcnPredictor, PredictService};
 use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::sim::Machine;
 use gcn_perf::util::cli::Args;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
@@ -37,6 +38,8 @@ fn main() -> anyhow::Result<()> {
             GcnPredictor::new(rt, params, ds.stats.clone().unwrap())
         }
     };
+    // ranking traffic rides the serving layer, like every other consumer
+    let gcn = PredictService::with_defaults(Arc::new(gcn));
 
     let rows = harness::run_fig9(
         &gcn,

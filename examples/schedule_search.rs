@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             &nests,
             &noisy,
             &BeamConfig { beam_width: 6, candidates_per_stage: 10, seed: 3 },
-        );
+        )?;
         let noisy_t = simulate(&net, &nests, &noisy_sched, &machine);
 
         // oracle beam (upper bound)
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
             &nests,
             &oracle,
             &BeamConfig { beam_width: 6, candidates_per_stage: 10, seed: 3 },
-        );
+        )?;
         let oracle_t = simulate(&net, &nests, &oracle_sched, &machine);
 
         println!(

@@ -17,12 +17,13 @@ use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
 use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
-use gcn_perf::predictor::{GcnPredictor, Predictor};
+use gcn_perf::predictor::{GcnPredictor, PredictService, Predictor};
 use gcn_perf::runtime::{load_backend, Backend};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train, TrainConfig};
 use gcn_perf::util::cli::Args;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -78,9 +79,12 @@ fn main() -> anyhow::Result<()> {
             .join(" → ")
     );
 
-    // wrap the trained model in a Predictor session; everything downstream
-    // (Fig 8, Fig 9, the saved bundle) speaks to this one interface
-    let gcn = GcnPredictor::new(rt, result.params.clone(), train_ds.stats.clone().unwrap());
+    // wrap the trained model in a Predictor session served through the
+    // coalescing PredictService; everything downstream (Fig 8, Fig 9, the
+    // saved bundle) is a client of this one serving seam — exactly what
+    // `gcn-perf serve` runs long-lived
+    let session = GcnPredictor::new(rt, result.params.clone(), train_ds.stats.clone().unwrap());
+    let gcn = PredictService::with_defaults(Arc::new(session));
 
     // ---- 3 + 4. baselines + Fig 8
     eprintln!("[3/4] fitting baselines + Fig 8 comparison...");

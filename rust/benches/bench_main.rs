@@ -178,12 +178,15 @@ fn main() {
     let unests = lower_pipeline(&unet);
     let oracle = SimCost { machine: machine.clone() };
     run(bench_default("search/beam unet (w=2, c=4)", || {
-        black_box(beam_search(
-            &unet,
-            &unests,
-            &oracle,
-            &BeamConfig { beam_width: 2, candidates_per_stage: 4, seed: 1 },
-        ));
+        black_box(
+            beam_search(
+                &unet,
+                &unests,
+                &oracle,
+                &BeamConfig { beam_width: 2, candidates_per_stage: 4, seed: 1 },
+            )
+            .unwrap(),
+        );
     }));
 
     // cached vs uncached predictor-cost scoring: the same 16 schedules
@@ -199,12 +202,12 @@ fn main() {
     };
     let uncached = PredictorCost::uncached(Box::new(mk_gcn()), machine.clone());
     run(bench_default("search/predictor-cost uncached (16 scheds)", || {
-        black_box(uncached.score(&unet, &unests, &scheds16));
+        black_box(uncached.score(&unet, &unests, &scheds16).unwrap());
     }));
     let cached = PredictorCost::new(Box::new(mk_gcn()), machine.clone());
-    black_box(cached.score(&unet, &unests, &scheds16)); // warm the cache
+    black_box(cached.score(&unet, &unests, &scheds16).unwrap()); // warm the cache
     run(bench_default("search/predictor-cost cached (16 scheds)", || {
-        black_box(cached.score(&unet, &unests, &scheds16));
+        black_box(cached.score(&unet, &unests, &scheds16).unwrap());
     }));
 
     // summary for EXPERIMENTS.md §Perf

@@ -1,5 +1,11 @@
 //! End-to-end experiment orchestration for the paper's figures — shared by
 //! the `gcn-perf` CLI and the `examples/` binaries.
+//!
+//! The harnesses take `&dyn Predictor`, and
+//! [`crate::predictor::PredictService`] *is* a predictor — the CLI passes
+//! a service around the loaded bundle, so harness traffic rides the
+//! coalescing serving layer (and shares its cache with any concurrent
+//! clients) without the harness knowing.
 
 use crate::baselines::gbt::GbtConfig;
 use crate::baselines::halide_ffn::FfnTrainConfig;

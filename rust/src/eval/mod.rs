@@ -3,11 +3,14 @@
 //! * [`metrics`] — Fig 8: average error %, maximum error %, R².
 //! * [`ranking`] — Fig 9: pairwise schedule ranking accuracy.
 //! * [`perf`] — dense-vs-sparse engine benchmarks (`BENCH_3.json`).
+//! * [`serve_bench`] — naive-vs-coalesced serving benchmark
+//!   (`BENCH_4.json`).
 
 pub mod metrics;
 pub mod ranking;
 pub mod harness;
 pub mod perf;
+pub mod serve_bench;
 
 pub use metrics::{regression_metrics, RegressionMetrics};
 pub use ranking::{pairwise_ranking_accuracy, rank_networks, RankResult};

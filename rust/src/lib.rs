@@ -17,11 +17,13 @@
 //!   and, behind the `pjrt` cargo feature, the PJRT path for the
 //!   AOT-compiled JAX/Pallas artifacts ([`runtime`]) — plus the training
 //!   driver ([`train`]) and graph batching ([`model`]);
-//! * the crate's one prediction API ([`predictor`]): the object-safe
-//!   [`predictor::Predictor`] trait, the [`predictor::GcnPredictor`]
-//!   session with single-file model bundles, adapters for every baseline,
-//!   a name registry and the caching [`predictor::PredictorCost`] search
-//!   bridge;
+//! * the crate's one prediction API ([`predictor`]): the object-safe,
+//!   thread-safe [`predictor::Predictor`] trait, the
+//!   [`predictor::GcnPredictor`] session with single-file model bundles,
+//!   adapters for every baseline, a name registry, the concurrent
+//!   coalescing [`predictor::PredictService`] serving layer (bounded
+//!   queue, shared memo cache, `gcn-perf serve` daemon) and the
+//!   [`predictor::PredictorCost`] search bridge riding it;
 //! * the comparison models from the paper's evaluation ([`baselines`]): the
 //!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
 //! * the evaluation harnesses for Fig 8 and Fig 9 plus the

@@ -1,22 +1,29 @@
 //! `gcn-perf` — leader CLI for the GCN performance-model reproduction.
 //!
 //! Subcommands:
-//!   gen-data   generate a dataset (random pipelines → schedules → sim bench)
-//!   train      train the GCN and save a single-file model bundle
-//!   predict    load any model bundle and serve predictions for a JSON
-//!              sample file (or a binary dataset)
-//!   fig8       regenerate Fig 8 (avg/max error, R² vs Halide + TVM models)
-//!   fig9       regenerate Fig 9 (pairwise ranking on the zoo networks)
-//!   ablate     §III-C conv-depth ablation (0/1/2/4 layers)
-//!   search     model-guided beam search on a zoo network (Fig 2); accepts
-//!              any registered model name via the Predictor registry
-//!   bench      dense-vs-sparse engine benchmarks, written to BENCH_3.json
-//!   info       backend / manifest / bundle info
+//!   gen-data       generate a dataset (random pipelines → schedules → sim
+//!                  bench)
+//!   train          train the GCN and save a single-file model bundle
+//!   predict        load any model bundle and serve predictions for a JSON
+//!                  sample file (or a binary dataset)
+//!   export-samples write a binary dataset's samples as the JSON
+//!                  interchange format `predict`/`serve` consume
+//!   fig8           regenerate Fig 8 (avg/max error, R² vs Halide + TVM)
+//!   fig9           regenerate Fig 9 (pairwise ranking on the zoo networks)
+//!   ablate         §III-C conv-depth ablation (0/1/2/4 layers)
+//!   active         §VI active-learning study
+//!   transfer       §VI-A cross-machine portability study
+//!   search         model-guided beam search on a zoo network (Fig 2)
+//!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json) and
+//!                  naive-vs-coalesced serving (BENCH_4.json)
+//!   serve          long-lived prediction daemon: line-delimited JSON
+//!                  requests on stdin, predictions on stdout
+//!   info           backend / manifest / bundle info
 //!
 //! Everything is driven from rust; python is never on the runtime path.
-//! All model loading goes through `predictor` bundles — one file carries
-//! parameters and feature stats, so eval commands no longer re-derive
-//! stats from a dataset split.
+//! All model loading goes through `predictor` bundles, and every command
+//! that answers prediction queries does so through the coalescing
+//! `PredictService` serving layer.
 
 use anyhow::{bail, Context, Result};
 use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
@@ -27,7 +34,9 @@ use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
 use gcn_perf::onnx_gen::GenConfig;
 use gcn_perf::predictor::registry::{self, FitConfig};
-use gcn_perf::predictor::{GcnPredictor, Predictor, PredictorCost};
+use gcn_perf::predictor::{
+    GcnPredictor, PredictRequest, PredictService, Predictor, PredictorCost, ServiceConfig,
+};
 use gcn_perf::runtime::{load_backend, load_variant_backend, Backend};
 use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
 use gcn_perf::sim::Machine;
@@ -35,6 +44,54 @@ use gcn_perf::train::{train_and_save, TrainConfig};
 use gcn_perf::util::cli::Args;
 use gcn_perf::util::json::Json;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Per-subcommand accepted `--key value` options and bare `--flags`.
+/// `main` rejects anything outside this table with a nonzero exit, so a
+/// typo'd flag cannot be silently swallowed by a default.
+const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
+    ("gen-data", &["pipelines", "schedules", "out", "seed"], &[]),
+    (
+        "train",
+        &[
+            "data", "bundle", "ckpt", "epochs", "test-frac", "split-seed", "artifacts", "seed",
+            "patience", "lr",
+        ],
+        &[],
+    ),
+    ("predict", &["bundle", "ckpt", "samples", "data", "out"], &[]),
+    ("export-samples", &["data", "out", "limit"], &[]),
+    (
+        "fig8",
+        &[
+            "data", "bundle", "ckpt", "test-frac", "split-seed", "ffn-epochs", "rnn-epochs",
+            "report",
+        ],
+        &["with-rnn"],
+    ),
+    ("fig9", &["bundle", "ckpt", "schedules", "seed", "report"], &[]),
+    ("ablate", &["data", "epochs", "lr", "artifacts", "test-frac", "split-seed"], &[]),
+    (
+        "active",
+        &[
+            "data", "seed-frac", "acquire", "rounds", "epochs", "seed", "test-frac", "split-seed",
+            "artifacts",
+        ],
+        &[],
+    ),
+    ("transfer", &["bundle", "ckpt", "schedules"], &[]),
+    (
+        "search",
+        &[
+            "network", "model", "bundle", "ckpt", "data", "beam", "candidates", "seed",
+            "test-frac", "split-seed", "ffn-epochs", "rnn-epochs", "gbt-trees", "fit-seed",
+        ],
+        &[],
+    ),
+    ("bench", &["out", "serve-out", "seed"], &["fast", "require-speedup"]),
+    ("serve", &["bundle", "ckpt", "workers", "queue-cap"], &[]),
+    ("info", &["artifacts", "bundle", "ckpt"], &[]),
+];
 
 fn main() {
     let args = match Args::from_env() {
@@ -44,22 +101,38 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let result = match args.subcommand.as_deref() {
-        Some("gen-data") => cmd_gen_data(&args),
-        Some("train") => cmd_train(&args),
-        Some("predict") => cmd_predict(&args),
-        Some("fig8") => cmd_fig8(&args),
-        Some("fig9") => cmd_fig9(&args),
-        Some("ablate") => cmd_ablate(&args),
-        Some("active") => cmd_active(&args),
-        Some("transfer") => cmd_transfer(&args),
-        Some("search") => cmd_search(&args),
-        Some("bench") => cmd_bench(&args),
-        Some("info") => cmd_info(&args),
-        _ => {
-            println!("{USAGE}");
-            Ok(())
+    let Some(cmd) = args.subcommand.as_deref() else {
+        println!("{USAGE}");
+        return;
+    };
+    match KNOWN_ARGS.iter().find(|(name, _, _)| *name == cmd) {
+        None => {
+            eprintln!("error: unknown subcommand '{cmd}'\n\n{USAGE}");
+            std::process::exit(2);
         }
+        Some((_, keys, flags)) => {
+            if let Err(e) = args.check_known(cmd, keys, flags) {
+                eprintln!("error: {e}\n\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let result = match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "export-samples" => cmd_export_samples(&args),
+        "fig8" => cmd_fig8(&args),
+        "fig9" => cmd_fig9(&args),
+        "ablate" => cmd_ablate(&args),
+        "active" => cmd_active(&args),
+        "transfer" => cmd_transfer(&args),
+        "search" => cmd_search(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        // unreachable: KNOWN_ARGS gates every dispatched name above
+        other => Err(anyhow::anyhow!("unhandled subcommand '{other}'")),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
@@ -71,22 +144,29 @@ const USAGE: &str = "gcn-perf — GNN performance model for DNN compiler schedul
 
 USAGE: gcn-perf <subcommand> [--key value ...]
 
-  gen-data  --pipelines N --schedules M --out data/dataset.bin [--seed S]
-  train     --data data/dataset.bin --bundle data/gcn.bundle [--epochs E]
-            [--test-frac F] [--artifacts DIR]
-  predict   --bundle data/gcn.bundle (--samples s.json | --data ds.bin)
-            [--out preds.json]
-  fig8      --data ... --bundle ... [--ffn-epochs E] [--report results/report.json]
-  fig9      --bundle ... [--schedules K] [--report ...]
-  ablate    --data ... [--epochs E]     (conv layers 0/1/2/4 sweep)
-  active    --data ... [--rounds R --acquire K]  (§VI active-learning study)
-  transfer  --bundle ...  (§VI-A cross-machine portability study)
-  search    --network NAME [--model oracle|gcn|ffn|rnn|gbt]
-            [--bundle ... | --data ...]
-  bench     [--out BENCH_3.json] [--fast] [--require-speedup]
-            (dense-vs-sparse perf trajectory)
-  info      [--artifacts DIR] [--bundle ...]
+  gen-data        --pipelines N --schedules M --out data/dataset.bin [--seed S]
+  train           --data data/dataset.bin --bundle data/gcn.bundle [--epochs E]
+                  [--test-frac F] [--artifacts DIR]
+  predict         --bundle data/gcn.bundle (--samples s.json | --data ds.bin)
+                  [--out preds.json]
+  export-samples  --data ds.bin [--out samples.json] [--limit N]
+                  (binary dataset → the JSON interchange predict/serve read)
+  fig8            --data ... --bundle ... [--ffn-epochs E] [--with-rnn]
+                  [--report results/report.json]
+  fig9            --bundle ... [--schedules K] [--report ...]
+  ablate          --data ... [--epochs E]     (conv layers 0/1/2/4 sweep)
+  active          --data ... [--rounds R --acquire K]  (§VI active learning)
+  transfer        --bundle ...  (§VI-A cross-machine portability study)
+  search          --network NAME [--model oracle|gcn|ffn|rnn|gbt]
+                  [--bundle ... | --data ...] [--beam W --candidates C]
+  bench           [--out BENCH_3.json] [--serve-out BENCH_4.json] [--fast]
+                  [--require-speedup]  (dense-vs-sparse + serving benches)
+  serve           --bundle data/gcn.bundle [--workers N] [--queue-cap Q]
+                  (daemon: one JSON sample-array request per stdin line,
+                   one JSON prediction response per stdout line)
+  info            [--artifacts DIR] [--bundle ...]
 
+Unknown subcommands, options or flags exit nonzero with the valid set.
 (--ckpt is accepted as an alias for --bundle.)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -120,8 +200,12 @@ fn bundle_path(args: &Args) -> Result<PathBuf> {
     bundle_path_opt(args).context("--bundle required (a model bundle saved by `gcn-perf train`)")
 }
 
-fn load_gcn(args: &Args) -> Result<GcnPredictor> {
-    GcnPredictor::load(&bundle_path(args)?)
+/// Load the GCN bundle and stand a serving layer in front of it: the eval
+/// harnesses and figure commands are service clients, so their traffic
+/// rides the same coalescing path the daemon serves.
+fn load_gcn_service(args: &Args) -> Result<PredictService> {
+    let gcn = GcnPredictor::load(&bundle_path(args)?)?;
+    Ok(PredictService::with_defaults(Arc::new(gcn)))
 }
 
 fn fit_config(args: &Args) -> FitConfig {
@@ -188,9 +272,36 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// (pipeline_id, schedule_id) pairs — all a prediction report needs from
+/// the request, captured before the samples move into the service.
+fn sample_ids(samples: &[gcn_perf::dataset::sample::GraphSample]) -> Vec<(u32, u32)> {
+    samples.iter().map(|s| (s.pipeline_id, s.schedule_id)).collect()
+}
+
+/// Build the `{"model": ..., "predictions": [...]}` response object for a
+/// set of served samples (shared by `predict` and the `serve` daemon).
+fn prediction_report(model: &str, ids: &[(u32, u32)], preds: &[f64]) -> Json {
+    let rows: Vec<Json> = ids
+        .iter()
+        .zip(preds)
+        .map(|(&(pid, sid), &p)| {
+            Json::obj(vec![
+                ("pipeline_id", Json::Num(pid as f64)),
+                ("schedule_id", Json::Num(sid as f64)),
+                ("predicted_runtime_s", Json::Num(p)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("predictions", Json::Arr(rows)),
+    ])
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
     let path = bundle_path(args)?;
-    let model = registry::load_bundle(&path)?;
+    // one-shot client of the same serving layer `serve` runs long-lived
+    let service = PredictService::with_defaults(Arc::from(registry::load_bundle(&path)?));
     let samples = if let Some(f) = args.str_opt("samples") {
         let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
         gcn_perf::dataset::json::samples_from_json(&text)?
@@ -199,23 +310,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
     } else {
         bail!("predict needs --samples file.json or --data dataset.bin");
     };
-    let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = samples.iter().collect();
-    let preds = model.predict(&refs)?;
-    let rows: Vec<Json> = samples
-        .iter()
-        .zip(&preds)
-        .map(|(s, &p)| {
-            Json::obj(vec![
-                ("pipeline_id", Json::Num(s.pipeline_id as f64)),
-                ("schedule_id", Json::Num(s.schedule_id as f64)),
-                ("predicted_runtime_s", Json::Num(p)),
-            ])
-        })
-        .collect();
-    let report = Json::obj(vec![
-        ("model", Json::Str(model.name())),
-        ("predictions", Json::Arr(rows)),
-    ]);
+    let ids = sample_ids(&samples);
+    let resp = service.predict_blocking(PredictRequest::new(samples))?;
+    let report = prediction_report(&resp.model, &ids, &resp.predictions);
     match args.str_opt("out") {
         Some(out) => {
             let out = Path::new(out);
@@ -223,10 +320,125 @@ fn cmd_predict(args: &Args) -> Result<()> {
                 std::fs::create_dir_all(dir)?;
             }
             std::fs::write(out, report.to_string())?;
-            eprintln!("{} predictions ({}) written to {}", preds.len(), model.name(), out.display());
+            eprintln!(
+                "{} predictions ({}) written to {}",
+                resp.predictions.len(),
+                resp.model,
+                out.display()
+            );
         }
         None => println!("{}", report.to_string()),
     }
+    Ok(())
+}
+
+fn cmd_export_samples(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let n = args.usize_or("limit", ds.len()).min(ds.len());
+    let text = gcn_perf::dataset::json::samples_to_json(&ds.samples[..n]);
+    match args.str_opt("out") {
+        Some(out) => {
+            let out = Path::new(out);
+            if let Some(dir) = out.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(out, &text)?;
+            eprintln!("{n} samples written to {}", out.display());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// The first real serving entrypoint: a long-lived daemon reading one
+/// JSON request per stdin line (a sample array in the `predict --samples`
+/// interchange format) and streaming one JSON response line per request
+/// on stdout, in request order. Requests are *pipelined*: the reader
+/// submits each line to the service immediately and a writer thread
+/// drains completions in FIFO order, so up to `--queue-cap` requests are
+/// in flight at once and concurrent lines coalesce into shared batches
+/// (a strictly serial read→predict→write loop would leave the coalescer
+/// with nothing to fuse). Malformed requests answer with an
+/// `{"error": ...}` line and the daemon keeps serving; EOF shuts it down
+/// cleanly, draining everything in flight.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::{BufRead, Write};
+    use std::sync::mpsc;
+
+    /// What the writer thread emits for one request line: either an
+    /// immediate response (parse/submit error) or a pending completion.
+    enum Outcome {
+        Ready(Json),
+        Pending(Vec<(u32, u32)>, gcn_perf::predictor::PredictHandle),
+    }
+    fn error_json(e: &anyhow::Error) -> Json {
+        Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+    }
+
+    let path = bundle_path(args)?;
+    let cfg = ServiceConfig {
+        workers: args.usize_or("workers", 1),
+        queue_cap: args.usize_or("queue-cap", 64),
+        ..Default::default()
+    };
+    let service = PredictService::spawn(Arc::from(registry::load_bundle(&path)?), cfg.clone());
+    eprintln!(
+        "serving '{}' from {} — one JSON sample-array request per stdin line; ctrl-d to stop",
+        service.model_name(),
+        path.display()
+    );
+
+    // bounded: a slow stdout consumer must stall the reader instead of
+    // letting completed responses pile up without limit
+    let (tx, rx) = mpsc::sync_channel::<Outcome>(cfg.queue_cap.max(1));
+    let writer = std::thread::spawn(move || -> Result<()> {
+        let mut out = std::io::stdout().lock();
+        for item in rx {
+            let json = match item {
+                Outcome::Ready(j) => j,
+                Outcome::Pending(ids, handle) => match handle.wait() {
+                    Ok(resp) => prediction_report(&resp.model, &ids, &resp.predictions),
+                    Err(e) => error_json(&e),
+                },
+            };
+            writeln!(out, "{}", json.to_string()).context("write response to stdout")?;
+            out.flush().context("flush stdout")?;
+        }
+        Ok(())
+    });
+
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line.context("read request line from stdin")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let outcome = match gcn_perf::dataset::json::samples_from_json(&line) {
+            Ok(samples) => {
+                let ids = sample_ids(&samples);
+                // submit blocks when queue-cap requests are in flight —
+                // stdin stops being read, which is the backpressure
+                match service.submit(PredictRequest::new(samples)) {
+                    Ok(handle) => Outcome::Pending(ids, handle),
+                    Err(e) => Outcome::Ready(error_json(&e)),
+                }
+            }
+            Err(e) => Outcome::Ready(error_json(&e)),
+        };
+        if tx.send(outcome).is_err() {
+            break; // writer gone (stdout closed) — stop reading
+        }
+    }
+    drop(tx);
+    match writer.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("serve writer thread panicked"),
+    }
+    let stats = service.stats();
+    eprintln!(
+        "served {} requests: {} samples evaluated in {} fused batches, {} cache hits",
+        stats.requests, stats.samples_evaluated, stats.batches, stats.cache_hits
+    );
     Ok(())
 }
 
@@ -248,7 +460,7 @@ fn print_fig8(rows: &[RegressionMetrics]) {
 fn cmd_fig8(args: &Args) -> Result<()> {
     let ds = load_dataset(args)?;
     let (train_ds, test_ds) = split_dataset(args, &ds);
-    let gcn = load_gcn(args)?;
+    let gcn = load_gcn_service(args)?;
     let mut rows = harness::run_fig8(
         &gcn,
         &train_ds,
@@ -283,7 +495,7 @@ fn print_fig9(rows: &[RankResult], avg: f64) {
 }
 
 fn cmd_fig9(args: &Args) -> Result<()> {
-    let gcn = load_gcn(args)?;
+    let gcn = load_gcn_service(args)?;
     let rows = harness::run_fig9(
         &gcn,
         &Machine::default(),
@@ -383,7 +595,7 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     // bundle), evaluate ranking on datasets benchmarked on *other* CPU
     // presets. Features are machine-aware (cache-fit flags etc. use each
     // machine's geometry), so CPU→CPU transfer should hold.
-    let gcn = load_gcn(args)?;
+    let gcn = load_gcn_service(args)?;
     let schedules = args.usize_or("schedules", 60);
     println!("§VI-A cross-machine transfer (trained on xeon_d2191)");
     println!("{:<16} {:>14}", "machine", "rank acc %");
@@ -479,7 +691,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         &gcn_perf::schedule::primitives::PipelineSchedule::default_for(&ranks),
         &machine,
     );
-    let (best, score) = beam_search(&net, &nests, cost.as_cost_model(), &cfg);
+    let (best, score) = beam_search(&net, &nests, cost.as_cost_model(), &cfg)?;
     let true_t = gcn_perf::sim::simulate(&net, &nests, &best, &machine);
     println!("network {name}: default {:.3} ms", default_t * 1e3);
     println!(
@@ -500,10 +712,8 @@ fn cmd_search(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let cfg = gcn_perf::eval::perf::PerfBenchConfig {
-        fast: args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok(),
-        seed: args.u64_or("seed", 3),
-    };
+    let fast = args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok();
+    let cfg = gcn_perf::eval::perf::PerfBenchConfig { fast, seed: args.u64_or("seed", 3) };
     let report = gcn_perf::eval::perf::run_perf_bench(&cfg)?;
     let out = PathBuf::from(args.str_or("out", "BENCH_3.json"));
     gcn_perf::eval::perf::write_perf_report(&report, &out)?;
@@ -512,8 +722,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
         out.display(),
         report.padded_forward_speedup()
     );
+
+    // the serving trajectory: concurrent per-candidate calls vs the
+    // coalescing service on the same mixed-size workload
+    let serve_cfg =
+        gcn_perf::eval::serve_bench::ServeBenchConfig { fast, seed: args.u64_or("seed", 3) };
+    let serve_report = gcn_perf::eval::serve_bench::run_serve_bench(&serve_cfg)?;
+    let serve_out = PathBuf::from(args.str_or("serve-out", "BENCH_4.json"));
+    gcn_perf::eval::serve_bench::write_serve_report(&serve_report, &serve_out)?;
+    println!(
+        "serving report written to {} ({} clients x {} candidates: {:.2}x naive/coalesced, {} fused batches)",
+        serve_out.display(),
+        serve_report.clients,
+        serve_report.candidates_per_client,
+        serve_report.speedup,
+        serve_report.coalesced_batches
+    );
+
     if args.has_flag("require-speedup") {
         report.require_padded_speedup()?;
+        serve_report.require_speedup()?;
     }
     Ok(())
 }

@@ -1,77 +1,104 @@
-//! [`PredictorCost`] — the generic bridge from any [`Predictor`] to
-//! [`crate::search::CostModel`], with a schedule-keyed memoization cache.
+//! [`PredictorCost`] — the bridge from the serving layer to
+//! [`crate::search::CostModel`].
 //!
 //! Beam search re-scores its surviving states at every expansion step: a
-//! beam state that survives `k` steps is featurized and scored `k+1` times
-//! by a naive cost model. The cache keys on the complete
-//! [`PipelineSchedule`] (hashable by construction — all-integer fields),
-//! so unchanged beam prefixes cost one hash lookup instead of a
-//! featurization plus a model evaluation. Scoring also goes through
-//! [`crate::dataset::builder::featurize_schedule`], which skips the
-//! simulated benchmark runs a training sample would need — the model only
-//! reads features.
+//! beam state that survives `k` steps is featurized and scored `k+1`
+//! times by a naive cost model. The bridge scores a whole frontier with
+//! **one service round-trip** ([`PredictService::predict_blocking`]) and
+//! memoizes per-schedule results in the **service's shared cache**, keyed
+//! on (pipeline identity, machine, schedule) — so concurrent searches
+//! over the same pipeline share scores, and unchanged beam prefixes cost
+//! one cache probe instead of a featurization plus a model evaluation.
+//! The probe ([`PredictService::cache_lookup`]) happens *before*
+//! featurization, which also goes through
+//! [`crate::dataset::builder::featurize_schedule`] — no simulated
+//! benchmark runs; the model only reads features.
 
 use crate::dataset::builder::featurize_schedule;
+use crate::dataset::sample::GraphSample;
 use crate::ir::pipeline::Pipeline;
 use crate::lower::LoopNest;
+use crate::predictor::service::{
+    cache_key, CacheKey, PredictRequest, PredictService, ServiceConfig,
+};
 use crate::predictor::Predictor;
 use crate::schedule::primitives::PipelineSchedule;
 use crate::search::beam::CostModel;
 use crate::sim::Machine;
-use std::cell::{Cell, RefCell};
+use anyhow::{ensure, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-/// Cost model over any predictor. Construct one per (pipeline, search);
-/// the cache is invalidated automatically if a different pipeline shows
-/// up, so a reused instance is safe, just no longer warm.
+/// Cost model over any predictor, served through a [`PredictService`].
+/// Construct with [`PredictorCost::new`] for a private single-worker
+/// service, or [`PredictorCost::with_service`] to share one service (and
+/// its cache) across searches and other clients. Keys are namespaced by
+/// pipeline identity and machine, so one cache safely serves any mix of
+/// pipelines.
 pub struct PredictorCost {
-    predictor: Box<dyn Predictor>,
+    service: Arc<PredictService>,
     machine: Machine,
+    /// Cache-key namespace component for the machine, precomputed once —
+    /// featurization is machine-aware (cache-fit flags etc.), so the same
+    /// schedule scores differently per machine preset.
+    machine_tag: String,
     caching: bool,
-    cache: RefCell<HashMap<PipelineSchedule, f64>>,
-    /// Identity tag of the pipeline the cache entries belong to (see
-    /// [`pipeline_identity`] — structural, so two different pipelines
-    /// sharing a name do not serve each other's scores).
-    cached_pipeline: RefCell<Option<String>>,
-    hits: Cell<usize>,
-    misses: Cell<usize>,
+    /// In-frontier duplicate schedules deduplicated before submission
+    /// (beam expansion re-proposes surviving states verbatim); counted as
+    /// cache hits in [`PredictorCost::cache_stats`].
+    dup_hits: AtomicUsize,
 }
 
 impl PredictorCost {
+    /// Wrap a predictor in a private default service.
     pub fn new(predictor: Box<dyn Predictor>, machine: Machine) -> PredictorCost {
+        let service = PredictService::spawn(Arc::from(predictor), ServiceConfig::default());
+        PredictorCost::with_service(Arc::new(service), machine)
+    }
+
+    /// Score through an existing (possibly shared) service.
+    pub fn with_service(service: Arc<PredictService>, machine: Machine) -> PredictorCost {
         PredictorCost {
-            predictor,
+            service,
+            machine_tag: format!("{machine:?}"),
             machine,
             caching: true,
-            cache: RefCell::new(HashMap::new()),
-            cached_pipeline: RefCell::new(None),
-            hits: Cell::new(0),
-            misses: Cell::new(0),
+            dup_hits: AtomicUsize::new(0),
         }
     }
 
-    /// Caching disabled — every score featurizes and runs the model. Used
-    /// by the benches and the cache-equivalence tests as the reference.
+    /// Caching disabled — every score featurizes and runs the model
+    /// (requests carry no cache keys, so the service memoizes nothing).
+    /// Used by the benches and the cache-equivalence tests as the
+    /// reference.
     pub fn uncached(predictor: Box<dyn Predictor>, machine: Machine) -> PredictorCost {
         PredictorCost { caching: false, ..PredictorCost::new(predictor, machine) }
     }
 
-    pub fn clear_cache(&self) {
-        self.cache.borrow_mut().clear();
-        *self.cached_pipeline.borrow_mut() = None;
+    /// The service this bridge scores through.
+    pub fn service(&self) -> &Arc<PredictService> {
+        &self.service
     }
 
-    /// (cache hits, model evaluations) since construction.
+    pub fn clear_cache(&self) {
+        self.service.clear_cache();
+    }
+
+    /// (cache hits, model evaluations) observed by the backing service
+    /// since its construction — shared across every client of a shared
+    /// service — plus this bridge's in-frontier duplicate hits.
     pub fn cache_stats(&self) -> (usize, usize) {
-        (self.hits.get(), self.misses.get())
+        let s = self.service.stats();
+        (s.cache_hits + self.dup_hits.load(Ordering::Relaxed), s.samples_evaluated)
     }
 
     pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.service.cache_len()
     }
 }
 
-/// Structural identity of a pipeline for cache invalidation: name plus
+/// Structural identity of a pipeline for cache namespacing: name plus
 /// every stage's op (kind + attrs), output shape and inputs — anything
 /// featurization reads. Cheap next to a model evaluation.
 fn pipeline_identity(p: &Pipeline) -> String {
@@ -85,69 +112,71 @@ fn pipeline_identity(p: &Pipeline) -> String {
 }
 
 impl CostModel for PredictorCost {
-    fn score(&self, p: &Pipeline, nests: &[LoopNest], scheds: &[PipelineSchedule]) -> Vec<f64> {
-        if self.caching {
-            let identity = pipeline_identity(p);
-            let mut tag = self.cached_pipeline.borrow_mut();
-            if tag.as_deref() != Some(identity.as_str()) {
-                self.cache.borrow_mut().clear();
-                *tag = Some(identity);
-            }
-        }
-
+    fn score(
+        &self,
+        p: &Pipeline,
+        nests: &[LoopNest],
+        scheds: &[PipelineSchedule],
+    ) -> Result<Vec<f64>> {
+        use std::fmt::Write as _;
+        let identity = if self.caching { pipeline_identity(p) } else { String::new() };
+        // reused per-candidate Debug buffer: the hot (all-hits) path pays
+        // formatting but no per-schedule allocation
+        let mut sched_buf = String::new();
         let mut out = vec![f64::NAN; scheds.len()];
         // (output index, position in the evaluation batch); duplicates
-        // within one call share a position when caching is on
+        // within one frontier share a position when caching is on
         let mut assign: Vec<(usize, usize)> = Vec::new();
-        // representative scheds index per evaluation-batch position
-        let mut evals: Vec<usize> = Vec::new();
-        {
-            let cache = self.cache.borrow();
-            let mut pending: HashMap<&PipelineSchedule, usize> = HashMap::new();
-            for (i, sched) in scheds.iter().enumerate() {
-                if self.caching {
-                    if let Some(&v) = cache.get(sched) {
-                        out[i] = v;
-                        self.hits.set(self.hits.get() + 1);
-                        continue;
-                    }
-                    if let Some(&pos) = pending.get(sched) {
-                        assign.push((i, pos));
-                        self.hits.set(self.hits.get() + 1);
-                        continue;
-                    }
-                    pending.insert(sched, evals.len());
+        // representative scheds index + cache key per evaluation position
+        let mut eval_idx: Vec<usize> = Vec::new();
+        let mut eval_keys: Vec<Option<CacheKey>> = Vec::new();
+        let mut pending: HashMap<CacheKey, usize> = HashMap::new();
+        for (i, sched) in scheds.iter().enumerate() {
+            if self.caching {
+                sched_buf.clear();
+                let _ = write!(sched_buf, "{sched:?}");
+                let key = cache_key(&[&identity, &self.machine_tag, &sched_buf]);
+                if let Some(v) = self.service.cache_lookup(key) {
+                    out[i] = v;
+                    continue;
                 }
-                assign.push((i, evals.len()));
-                evals.push(i);
+                if let Some(&pos) = pending.get(&key) {
+                    assign.push((i, pos));
+                    self.dup_hits.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                pending.insert(key, eval_idx.len());
+                eval_keys.push(Some(key));
+            } else {
+                eval_keys.push(None);
             }
+            assign.push((i, eval_idx.len()));
+            eval_idx.push(i);
         }
 
-        if !evals.is_empty() {
-            self.misses.set(self.misses.get() + evals.len());
-            let samples: Vec<_> = evals
+        if !eval_idx.is_empty() {
+            let samples: Vec<GraphSample> = eval_idx
                 .iter()
                 .map(|&i| featurize_schedule(p, nests, &scheds[i], &self.machine, 0, i as u32))
                 .collect();
-            let refs: Vec<&crate::dataset::sample::GraphSample> = samples.iter().collect();
-            let preds = self.predictor.predict(&refs).unwrap_or_else(|e| {
-                panic!("{} cost model inference failed: {e:#}", self.predictor.name())
-            });
+            let keys = if self.caching { eval_keys } else { Vec::new() };
+            let resp = self.service.predict_blocking(PredictRequest::with_keys(samples, keys))?;
+            ensure!(
+                resp.predictions.len() == eval_idx.len(),
+                "{} returned {} scores for {} schedules",
+                resp.model,
+                resp.predictions.len(),
+                eval_idx.len()
+            );
             for &(i, pos) in &assign {
-                out[i] = preds[pos];
-            }
-            if self.caching {
-                let mut cache = self.cache.borrow_mut();
-                for (&i, pred) in evals.iter().zip(&preds) {
-                    cache.insert(scheds[i].clone(), *pred);
-                }
+                out[i] = resp.predictions[pos];
             }
         }
-        out
+        Ok(out)
     }
 
     fn name(&self) -> String {
-        self.predictor.name()
+        self.service.model_name()
     }
 }
 
@@ -162,7 +191,7 @@ mod tests {
     use crate::util::propcheck;
     use crate::util::rng::Rng;
 
-    fn gcn_cost(caching: bool) -> PredictorCost {
+    fn gcn_predictor() -> GcnPredictor {
         let ds = build_dataset(&DataGenConfig {
             n_pipelines: 4,
             schedules_per_pipeline: 4,
@@ -171,11 +200,14 @@ mod tests {
         });
         let backend = NativeBackend::new();
         let params = backend.init_params(2);
-        let p = GcnPredictor::new(Box::new(backend), params, ds.stats.clone().unwrap());
+        GcnPredictor::new(Box::new(backend), params, ds.stats.clone().unwrap())
+    }
+
+    fn gcn_cost(caching: bool) -> PredictorCost {
         if caching {
-            PredictorCost::new(Box::new(p), Machine::default())
+            PredictorCost::new(Box::new(gcn_predictor()), Machine::default())
         } else {
-            PredictorCost::uncached(Box::new(p), Machine::default())
+            PredictorCost::uncached(Box::new(gcn_predictor()), Machine::default())
         }
     }
 
@@ -193,8 +225,8 @@ mod tests {
             }
             scheds.push(scheds[0].clone());
             scheds.push(scheds[1].clone());
-            let a = cached.score(&net, &nests, &scheds);
-            let b = uncached.score(&net, &nests, &scheds);
+            let a = cached.score(&net, &nests, &scheds).map_err(|e| e.to_string())?;
+            let b = uncached.score(&net, &nests, &scheds).map_err(|e| e.to_string())?;
             if a != b {
                 return Err(format!("cached {a:?} != uncached {b:?}"));
             }
@@ -212,7 +244,11 @@ mod tests {
     }
 
     #[test]
-    fn cache_invalidates_across_pipelines() {
+    fn shared_cache_namespaces_pipelines() {
+        // one shared service serves two different pipelines: keys are
+        // namespaced by pipeline identity, so entries coexist and a
+        // schedule re-scored on its own pipeline hits while the other
+        // pipeline's entries are never served for it
         let unet = crate::zoo::unet();
         let unet_nests = crate::lower::lower_pipeline(&unet);
         let sq = crate::zoo::squeezenet();
@@ -220,11 +256,19 @@ mod tests {
         let cost = gcn_cost(true);
         let mut rng = Rng::new(3);
         let s1 = vec![random_pipeline_schedule(&unet, &unet_nests, &mut rng)];
-        cost.score(&unet, &unet_nests, &s1);
+        cost.score(&unet, &unet_nests, &s1).unwrap();
         assert_eq!(cost.cache_len(), 1);
         let s2 = vec![random_pipeline_schedule(&sq, &sq_nests, &mut rng)];
-        cost.score(&sq, &sq_nests, &s2);
-        assert_eq!(cost.cache_len(), 1, "switching pipelines must clear the cache");
+        cost.score(&sq, &sq_nests, &s2).unwrap();
+        assert_eq!(cost.cache_len(), 2, "pipelines must not evict each other");
+        // re-score the first pipeline's schedule: pure cache hit
+        let evals_before = cost.cache_stats().1;
+        let (hits_before, _) = cost.cache_stats();
+        cost.score(&unet, &unet_nests, &s1).unwrap();
+        let (hits_after, evals_after) = cost.cache_stats();
+        assert_eq!(evals_after, evals_before, "hit must not re-evaluate");
+        assert!(hits_after > hits_before);
+        assert_eq!(cost.cache_len(), 2);
     }
 
     #[test]
@@ -244,10 +288,39 @@ mod tests {
             &nests,
             &cost,
             &crate::search::BeamConfig { beam_width: 2, candidates_per_stage: 3, seed: 5 },
-        );
+        )
+        .unwrap();
         crate::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
         assert!(score.is_finite() && score > 0.0);
         let (hits, _) = cost.cache_stats();
         assert!(hits > 0, "beam prefixes must hit the cache");
+    }
+
+    #[test]
+    fn beam_search_issues_one_service_call_per_frontier_expansion() {
+        // the serving acceptance bar: scoring goes frontier-at-once, not
+        // per candidate — ≤ 1 service round-trip per expansion plus the
+        // final beam scoring
+        let service = Arc::new(PredictService::with_defaults(Arc::new(gcn_predictor())));
+        let cost = PredictorCost::with_service(Arc::clone(&service), Machine::default());
+        let net = crate::zoo::unet();
+        let nests = crate::lower::lower_pipeline(&net);
+        let (sched, _) = crate::search::beam_search(
+            &net,
+            &nests,
+            &cost,
+            &crate::search::BeamConfig { beam_width: 2, candidates_per_stage: 3, seed: 9 },
+        )
+        .unwrap();
+        crate::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
+        let stats = service.stats();
+        let expansions = net.num_stages() + 1; // one per stage + final beam scoring
+        assert!(
+            stats.requests <= expansions,
+            "beam search issued {} service calls for {} expansions",
+            stats.requests,
+            expansions
+        );
+        assert!(stats.requests > 0);
     }
 }

@@ -19,10 +19,16 @@
 //!   giving the baselines the same batched `&self` interface (the FFN and
 //!   GRU forward passes cache activations, so they keep interior scratch
 //!   state behind a mutex).
+//! * [`PredictService`] ([`service`]) — the concurrent serving layer:
+//!   callers submit [`PredictRequest`]s to a bounded queue, a coalescer
+//!   fuses in-flight requests into shared packed batches and scatters
+//!   results back through completion handles. The shared memo cache the
+//!   search bridge uses lives here.
 
 pub mod bundle;
 pub mod cost;
 pub mod registry;
+pub mod service;
 
 use crate::baselines::gbt::{Gbt, GbtConfig};
 use crate::baselines::halide_ffn::{FfnTrainConfig, HalideFfn};
@@ -41,11 +47,20 @@ use std::path::Path;
 use std::sync::Mutex;
 
 pub use self::cost::PredictorCost;
+pub use self::service::{
+    PredictHandle, PredictRequest, PredictResponse, PredictService, ServiceConfig, ServiceStats,
+};
 
 /// A ready-to-serve performance model. Object-safe: the CLI, the eval
 /// harnesses and beam search all hold `&dyn Predictor` / `Box<dyn
 /// Predictor>`.
-pub trait Predictor {
+///
+/// `Send + Sync` is part of the contract: [`PredictService`] shares one
+/// model across worker threads and concurrent callers, so prediction
+/// state must be immutable or internally synchronized (the FFN/GRU
+/// adapters keep their scratch activations behind a mutex for exactly
+/// this reason).
+pub trait Predictor: Send + Sync {
     /// Short identifier for tables and logs ("gcn", "halide-ffn", ...).
     fn name(&self) -> String;
 

@@ -1,0 +1,901 @@
+//! `PredictService` — the concurrent serving seam over any [`Predictor`].
+//!
+//! The paper's deployment story is throughput: an auto-scheduler scores
+//! enormous candidate sets, so the model must sustain as many queries per
+//! second as the serving path allows. A bare [`Predictor`] is a function
+//! call — concurrent callers each pack their own (often tiny) batches and
+//! the sparse packed engine never sees the traffic it was built for. The
+//! service turns the function call into a shared, coalescing pipeline:
+//!
+//! ```text
+//!   caller A ──┐  submit(PredictRequest)            ┌─> PredictHandle A
+//!   caller B ──┤     │                              ├─> PredictHandle B
+//!   caller C ──┘     v                              │
+//!            bounded queue ─> coalescer ─> one fused predict ─> scatter
+//!                            (worker thread; drains every in-flight
+//!                             request, dedups against the shared cache,
+//!                             packs the misses into variable-size
+//!                             `PackedBatch` chunks via `Predictor::predict`)
+//! ```
+//!
+//! * **Backpressure.** The queue is bounded ([`ServiceConfig::queue_cap`]
+//!   requests): [`PredictService::submit`] blocks until space frees up,
+//!   [`PredictService::try_submit`] fails fast instead. Either way a full
+//!   queue slows producers down rather than growing without bound.
+//! * **Coalescing.** A worker drains up to [`ServiceConfig::max_coalesce`]
+//!   queued requests at once and evaluates all their samples through a
+//!   single `Predictor::predict` call — heterogeneous graphs from
+//!   different callers share one block-diagonal packed batch (chunked at
+//!   `BATCH` graphs by the backend). Per-graph results are independent of
+//!   batch composition, so coalesced predictions are bitwise-equal to
+//!   direct single-caller calls (pinned by the integration stress test).
+//! * **Shared cache.** Callers may attach a [`CacheKey`] per sample;
+//!   keyed results are memoized in one service-wide map, so e.g. two beam
+//!   searches over the same pipeline share scores. In-flight duplicates
+//!   (same key, same drain) are evaluated once. [`crate::predictor::PredictorCost`]
+//!   keys on (pipeline, machine, schedule) and checks
+//!   [`PredictService::cache_lookup`] *before* featurizing, so hits skip
+//!   featurization entirely.
+//! * **No panics across the seam.** Inference errors — and even panics in
+//!   a model implementation — are caught and delivered to every affected
+//!   handle as an error; one bad request cannot take down unrelated
+//!   in-flight callers or the worker itself.
+//! * **Clean shutdown.** Dropping the service closes the queue, lets the
+//!   workers drain every already-accepted request, and joins them — no
+//!   handle is left waiting forever.
+//!
+//! Everything is `std::sync` (mutex + condvar + atomics); no new
+//! dependencies.
+
+use crate::dataset::sample::GraphSample;
+use crate::predictor::Predictor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Stable 128-bit cache key. Wide enough that hash collisions are not a
+/// practical concern for a memo cache (compare: the pre-service cache
+/// stored whole `PipelineSchedule` keys to avoid collisions at much
+/// higher per-entry cost).
+pub type CacheKey = u128;
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// FNV-1a over the concatenated parts (with separators, so
+/// `["ab", "c"]` and `["a", "bc"]` hash differently). This is how
+/// [`crate::predictor::PredictorCost`] derives its (pipeline, machine,
+/// schedule) keys; any caller-side key derivation works as long as equal
+/// keys imply equal predictions.
+pub fn cache_key(parts: &[&str]) -> CacheKey {
+    let mut h = FNV128_OFFSET;
+    for part in parts {
+        for &b in part.as_bytes() {
+            h ^= b as u128;
+            h = h.wrapping_mul(FNV128_PRIME);
+        }
+        // fold each part's length as the separator, so shifting bytes
+        // across a part boundary changes the key
+        h ^= part.len() as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// One caller's batch of samples to score. `keys` is either empty (no
+/// caching for this request) or one optional [`CacheKey`] per sample.
+#[derive(Debug, Clone, Default)]
+pub struct PredictRequest {
+    pub samples: Vec<GraphSample>,
+    pub keys: Vec<Option<CacheKey>>,
+}
+
+impl PredictRequest {
+    /// A request with no cache participation.
+    pub fn new(samples: Vec<GraphSample>) -> PredictRequest {
+        PredictRequest { samples, keys: Vec::new() }
+    }
+
+    /// A request whose samples carry cache keys (`keys.len()` must equal
+    /// `samples.len()`; enforced at submit time).
+    pub fn with_keys(samples: Vec<GraphSample>, keys: Vec<Option<CacheKey>>) -> PredictRequest {
+        PredictRequest { samples, keys }
+    }
+}
+
+/// The answer to one [`PredictRequest`]: mean runtimes in seconds, one
+/// per sample, in request order.
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    pub predictions: Vec<f64>,
+    /// The serving model's name (e.g. "gcn").
+    pub model: String,
+    /// How many of this request's samples were answered from the shared
+    /// cache (or deduplicated against an in-flight twin).
+    pub cache_hits: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Coalescing worker threads. One worker maximizes coalescing (the
+    /// predictor itself parallelizes over batch chunks); more workers
+    /// trade batch size for pipeline overlap.
+    pub workers: usize,
+    /// Bounded queue depth, in requests. Submissions past this block (or
+    /// fail, via [`PredictService::try_submit`]).
+    pub queue_cap: usize,
+    /// Maximum requests drained into one fused evaluation.
+    pub max_coalesce: usize,
+    /// Cache entry budget; the cache is wiped when an insert would
+    /// exceed it. `0` disables caching entirely.
+    pub cache_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 1, queue_cap: 64, max_coalesce: 64, cache_cap: 1 << 20 }
+    }
+}
+
+/// Monotonic service counters (snapshot via [`PredictService::stats`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests accepted into the queue.
+    pub requests: usize,
+    /// Fused `Predictor::predict` calls issued by the coalescer.
+    pub batches: usize,
+    /// Samples that reached the model (cache misses).
+    pub samples_evaluated: usize,
+    /// Samples answered from the cache, an in-flight duplicate, or a
+    /// caller-side [`PredictService::cache_lookup`] hit.
+    pub cache_hits: usize,
+}
+
+// ------------------------------------------------------------- promise
+
+/// One-shot completion slot: the worker fulfills it, the caller waits on
+/// it. Errors travel as `String` so one failed batch can fan out to every
+/// affected caller (anyhow errors are not cloneable). Fulfillment is
+/// idempotent (first value wins) so the worker's panic safety net can
+/// blanket-fail a drained batch without clobbering results already
+/// delivered.
+struct Promise {
+    slot: Mutex<Option<Result<PredictResponse, String>>>,
+    ready: Condvar,
+    done: std::sync::atomic::AtomicBool,
+}
+
+impl Promise {
+    fn new() -> Promise {
+        Promise {
+            slot: Mutex::new(None),
+            ready: Condvar::new(),
+            done: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    fn fulfill(&self, value: Result<PredictResponse, String>) {
+        if self.done.swap(true, Ordering::AcqRel) {
+            return; // already fulfilled — first value wins
+        }
+        let mut slot = lock(&self.slot);
+        *slot = Some(value);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Result<PredictResponse, String> {
+        let mut slot = lock(&self.slot);
+        loop {
+            if let Some(v) = slot.take() {
+                return v;
+            }
+            slot = self.ready.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Completion handle for a submitted request. [`PredictHandle::wait`]
+/// blocks until the coalescer has answered (or failed) the request.
+pub struct PredictHandle {
+    promise: Arc<Promise>,
+}
+
+impl PredictHandle {
+    pub fn wait(self) -> Result<PredictResponse> {
+        self.promise.wait().map_err(|e| anyhow!(e))
+    }
+}
+
+/// Poison-tolerant lock: a panicked *other* thread must not cascade into
+/// panics here (the whole point of the service is that one caller's
+/// failure stays contained).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------------------- service
+
+struct Job {
+    req: PredictRequest,
+    promise: Arc<Promise>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Shared {
+    predictor: Arc<dyn Predictor>,
+    cfg: ServiceConfig,
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cache: Mutex<HashMap<CacheKey, f64>>,
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    samples_evaluated: AtomicUsize,
+    cache_hits: AtomicUsize,
+}
+
+/// The shared, concurrency-first serving layer. See the module docs for
+/// the architecture. The service itself implements [`Predictor`], so any
+/// consumer written against `&dyn Predictor` (the eval harnesses, the
+/// CLI) becomes a service client without code changes.
+pub struct PredictService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl PredictService {
+    /// Spawn the worker threads and return the ready service.
+    pub fn spawn(predictor: Arc<dyn Predictor>, cfg: ServiceConfig) -> PredictService {
+        let n_workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            predictor,
+            cfg,
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cache: Mutex::new(HashMap::new()),
+            requests: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            samples_evaluated: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                crate::util::threadpool::spawn_named(format!("predict-worker-{i}"), move || {
+                    worker_loop(&s)
+                })
+            })
+            .collect();
+        PredictService { shared, workers }
+    }
+
+    /// Convenience: spawn with the default configuration.
+    pub fn with_defaults(predictor: Arc<dyn Predictor>) -> PredictService {
+        PredictService::spawn(predictor, ServiceConfig::default())
+    }
+
+    /// Enqueue a request, blocking while the queue is full (backpressure).
+    pub fn submit(&self, req: PredictRequest) -> Result<PredictHandle> {
+        self.submit_inner(req, true)
+    }
+
+    /// Enqueue a request, failing immediately if the queue is full.
+    pub fn try_submit(&self, req: PredictRequest) -> Result<PredictHandle> {
+        self.submit_inner(req, false)
+    }
+
+    /// Submit and wait — the synchronous client path.
+    pub fn predict_blocking(&self, req: PredictRequest) -> Result<PredictResponse> {
+        self.submit(req)?.wait()
+    }
+
+    fn submit_inner(&self, req: PredictRequest, block: bool) -> Result<PredictHandle> {
+        if !req.keys.is_empty() && req.keys.len() != req.samples.len() {
+            bail!(
+                "predict request has {} samples but {} cache keys",
+                req.samples.len(),
+                req.keys.len()
+            );
+        }
+        let mut q = lock(&self.shared.queue);
+        loop {
+            if q.closed {
+                bail!("predict service is shut down");
+            }
+            if q.jobs.len() < self.shared.cfg.queue_cap.max(1) {
+                break;
+            }
+            if !block {
+                bail!(
+                    "predict service queue is full ({} requests)",
+                    self.shared.cfg.queue_cap.max(1)
+                );
+            }
+            q = self.shared.not_full.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+        let promise = Arc::new(Promise::new());
+        q.jobs.push_back(Job { req, promise: Arc::clone(&promise) });
+        drop(q);
+        self.shared.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.not_empty.notify_one();
+        Ok(PredictHandle { promise })
+    }
+
+    /// Probe the shared cache without submitting. The cost bridge uses
+    /// this to skip featurization for already-scored schedules.
+    pub fn cache_lookup(&self, key: CacheKey) -> Option<f64> {
+        if self.shared.cfg.cache_cap == 0 {
+            return None;
+        }
+        let hit = lock(&self.shared.cache).get(&key).copied();
+        if hit.is_some() {
+            self.shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    pub fn cache_len(&self) -> usize {
+        lock(&self.shared.cache).len()
+    }
+
+    pub fn clear_cache(&self) {
+        lock(&self.shared.cache).clear();
+    }
+
+    /// Snapshot of the monotonic counters.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            samples_evaluated: self.shared.samples_evaluated.load(Ordering::Relaxed),
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The served model's name.
+    pub fn model_name(&self) -> String {
+        self.shared.predictor.name()
+    }
+}
+
+impl Drop for PredictService {
+    /// Close the queue, drain every accepted request, join the workers.
+    fn drop(&mut self) {
+        {
+            let mut q = lock(&self.shared.queue);
+            q.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A service is itself a predictor (submit + wait per call), so
+/// `&dyn Predictor` consumers become service clients transparently.
+/// Requests are owned, so this path clones the samples once; callers on
+/// a hot loop with huge sample sets can build owned [`PredictRequest`]s
+/// themselves and keep the copies out of the loop.
+impl Predictor for PredictService {
+    fn name(&self) -> String {
+        self.shared.predictor.name()
+    }
+
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        let owned: Vec<GraphSample> = samples.iter().copied().cloned().collect();
+        Ok(self.predict_blocking(PredictRequest::new(owned))?.predictions)
+    }
+
+    fn save(&self, path: &Path) -> Result<()> {
+        self.shared.predictor.save(path)
+    }
+}
+
+// ------------------------------------------------------------ coalescer
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let jobs: Vec<Job> = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+            let take = q.jobs.len().min(shared.cfg.max_coalesce.max(1));
+            q.jobs.drain(..take).collect()
+        };
+        shared.not_full.notify_all();
+        // safety net beyond the predict-level guard inside run_coalesced:
+        // if *any* coalescer code unwinds (a panicking `name()`, a future
+        // bookkeeping bug), fail whatever promises are still pending —
+        // fulfill is idempotent, so delivered results are untouched — and
+        // keep the worker alive for the next drain
+        if catch_unwind(AssertUnwindSafe(|| run_coalesced(shared, &jobs))).is_err() {
+            for job in &jobs {
+                job.promise
+                    .fulfill(Err("predict service worker panicked serving this batch".into()));
+            }
+        }
+    }
+}
+
+/// Evaluate one drained set of requests: resolve cache hits, dedup
+/// in-flight twins, run every remaining sample through **one**
+/// `Predictor::predict` call, scatter the results back and memoize the
+/// keyed ones.
+fn run_coalesced(shared: &Shared, jobs: &[Job]) {
+    let caching = shared.cfg.cache_cap > 0;
+    let mut outs: Vec<Vec<f64>> =
+        jobs.iter().map(|j| vec![f64::NAN; j.req.samples.len()]).collect();
+    let mut hits: Vec<usize> = vec![0; jobs.len()];
+
+    // gather the evaluation set (job index, sample index) per miss
+    let mut eval_refs: Vec<&GraphSample> = Vec::new();
+    let mut eval_slots: Vec<(usize, usize)> = Vec::new();
+    let mut eval_keys: Vec<Option<CacheKey>> = Vec::new();
+    // (job, sample, eval position) for in-flight duplicates
+    let mut dup_slots: Vec<(usize, usize, usize)> = Vec::new();
+    {
+        let cache = lock(&shared.cache);
+        let mut in_flight: HashMap<CacheKey, usize> = HashMap::new();
+        for (ji, job) in jobs.iter().enumerate() {
+            for (si, sample) in job.req.samples.iter().enumerate() {
+                let key = job.req.keys.get(si).copied().flatten().filter(|_| caching);
+                if let Some(k) = key {
+                    if let Some(&v) = cache.get(&k) {
+                        outs[ji][si] = v;
+                        hits[ji] += 1;
+                        continue;
+                    }
+                    if let Some(&pos) = in_flight.get(&k) {
+                        dup_slots.push((ji, si, pos));
+                        hits[ji] += 1;
+                        continue;
+                    }
+                    in_flight.insert(k, eval_refs.len());
+                }
+                eval_slots.push((ji, si));
+                eval_keys.push(key);
+                eval_refs.push(sample);
+            }
+        }
+    }
+    let total_hits: usize = hits.iter().sum();
+    if total_hits > 0 {
+        shared.cache_hits.fetch_add(total_hits, Ordering::Relaxed);
+    }
+
+    let outcome: Result<Vec<f64>, String> = if eval_refs.is_empty() {
+        Ok(Vec::new())
+    } else {
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.samples_evaluated.fetch_add(eval_refs.len(), Ordering::Relaxed);
+        // a panicking model must fail its callers, not kill the worker
+        // (and with it every future request)
+        match catch_unwind(AssertUnwindSafe(|| shared.predictor.predict(&eval_refs))) {
+            Ok(Ok(p)) if p.len() == eval_refs.len() => Ok(p),
+            Ok(Ok(p)) => Err(format!(
+                "{} returned {} predictions for {} samples",
+                shared.predictor.name(),
+                p.len(),
+                eval_refs.len()
+            )),
+            Ok(Err(e)) => Err(format!("{} inference failed: {e:#}", shared.predictor.name())),
+            Err(_) => Err(format!("{} inference panicked", shared.predictor.name())),
+        }
+    };
+    let model = shared.predictor.name();
+
+    let preds = match outcome {
+        Ok(preds) => preds,
+        Err(msg) => {
+            // the failed evaluation only dooms the jobs that needed it;
+            // jobs answered entirely from the cache still succeed
+            let mut needed = vec![false; jobs.len()];
+            for &(ji, _) in &eval_slots {
+                needed[ji] = true;
+            }
+            for &(ji, _, _) in &dup_slots {
+                needed[ji] = true;
+            }
+            for (((job, out), h), job_needed) in jobs.iter().zip(outs).zip(hits).zip(needed) {
+                if job_needed {
+                    job.promise.fulfill(Err(msg.clone()));
+                } else {
+                    job.promise.fulfill(Ok(PredictResponse {
+                        predictions: out,
+                        model: model.clone(),
+                        cache_hits: h,
+                    }));
+                }
+            }
+            return;
+        }
+    };
+
+    for (pos, &(ji, si)) in eval_slots.iter().enumerate() {
+        outs[ji][si] = preds[pos];
+    }
+    for &(ji, si, pos) in &dup_slots {
+        outs[ji][si] = preds[pos];
+    }
+
+    // only keyed results enter the cache — size the wipe check on those,
+    // so a large keyless batch cannot evict the shared memo entries
+    let new_keyed = eval_keys.iter().flatten().count();
+    if caching && new_keyed > 0 {
+        let mut cache = lock(&shared.cache);
+        if cache.len() + new_keyed > shared.cfg.cache_cap {
+            // crude but bounded: a memo cache may be wiped at any time
+            cache.clear();
+        }
+        for (key, &p) in eval_keys.iter().zip(&preds) {
+            if let Some(k) = key {
+                cache.insert(*k, p);
+            }
+        }
+    }
+
+    for ((job, out), h) in jobs.iter().zip(outs).zip(hits) {
+        job.promise.fulfill(Ok(PredictResponse {
+            predictions: out,
+            model: model.clone(),
+            cache_hits: h,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+
+    /// n-stage chain sample with features derived from `tag` so distinct
+    /// samples are distinguishable.
+    fn chain_sample(n: u16, tag: f32) -> GraphSample {
+        GraphSample {
+            pipeline_id: tag as u32,
+            schedule_id: n as u32,
+            n_stages: n,
+            edges: (1..n).map(|i| (i - 1, i)).collect(),
+            inv: vec![[tag; INV_DIM]; n as usize],
+            dep: vec![[tag * 0.5; DEP_DIM]; n as usize],
+            runs: [1e-3; BENCH_RUNS],
+        }
+    }
+
+    /// Deterministic stand-in model: prediction = n_stages * scale.
+    struct ConstPredictor {
+        scale: f64,
+    }
+
+    impl Predictor for ConstPredictor {
+        fn name(&self) -> String {
+            "const".into()
+        }
+        fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+            Ok(samples.iter().map(|s| s.n_stages as f64 * self.scale).collect())
+        }
+        fn save(&self, _: &Path) -> Result<()> {
+            bail!("const predictor cannot be saved")
+        }
+    }
+
+    fn const_service(scale: f64) -> PredictService {
+        PredictService::with_defaults(Arc::new(ConstPredictor { scale }))
+    }
+
+    /// Blocks inside `predict` until released; signals entry so tests can
+    /// wait for the worker to be mid-flight deterministically.
+    struct GatedPredictor {
+        entered: Arc<(Mutex<usize>, Condvar)>,
+        release: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl GatedPredictor {
+        fn new() -> (GatedPredictor, Arc<(Mutex<usize>, Condvar)>, Arc<(Mutex<bool>, Condvar)>) {
+            let entered = Arc::new((Mutex::new(0usize), Condvar::new()));
+            let release = Arc::new((Mutex::new(false), Condvar::new()));
+            let p = GatedPredictor { entered: Arc::clone(&entered), release: Arc::clone(&release) };
+            (p, entered, release)
+        }
+    }
+
+    impl Predictor for GatedPredictor {
+        fn name(&self) -> String {
+            "gated".into()
+        }
+        fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+            {
+                let (m, c) = &*self.entered;
+                *lock(m) += 1;
+                c.notify_all();
+            }
+            let (m, c) = &*self.release;
+            let mut open = lock(m);
+            while !*open {
+                open = c.wait(open).unwrap_or_else(|e| e.into_inner());
+            }
+            Ok(vec![1.0; samples.len()])
+        }
+        fn save(&self, _: &Path) -> Result<()> {
+            bail!("gated predictor cannot be saved")
+        }
+    }
+
+    // the tentpole's object-safety + thread-safety contract
+    #[test]
+    fn predictor_trait_objects_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<dyn Predictor>();
+        assert_send_sync::<dyn crate::runtime::Backend>();
+        assert_send_sync::<PredictService>();
+    }
+
+    #[test]
+    fn coalesced_requests_scatter_back_in_order() {
+        let service = const_service(2.0);
+        let a = service
+            .submit(PredictRequest::new(vec![chain_sample(1, 0.1), chain_sample(3, 0.2)]))
+            .unwrap();
+        let b = service.submit(PredictRequest::new(vec![chain_sample(5, 0.3)])).unwrap();
+        let ra = a.wait().unwrap();
+        let rb = b.wait().unwrap();
+        assert_eq!(ra.predictions, vec![2.0, 6.0]);
+        assert_eq!(ra.model, "const");
+        assert_eq!(rb.predictions, vec![10.0]);
+        assert!(service.stats().requests >= 2);
+    }
+
+    #[test]
+    fn empty_request_resolves_immediately() {
+        let service = const_service(1.0);
+        let r = service.predict_blocking(PredictRequest::new(Vec::new())).unwrap();
+        assert!(r.predictions.is_empty());
+    }
+
+    #[test]
+    fn keyed_results_are_cached_and_shared() {
+        let service = const_service(3.0);
+        let k = cache_key(&["pipeline-x", "schedule-7"]);
+        let req = PredictRequest::with_keys(vec![chain_sample(2, 0.5)], vec![Some(k)]);
+        let r1 = service.predict_blocking(req.clone()).unwrap();
+        assert_eq!(r1.cache_hits, 0);
+        assert_eq!(service.cache_len(), 1);
+        // second identical request: answered from the cache, no new batch
+        let batches_before = service.stats().batches;
+        let r2 = service.predict_blocking(req).unwrap();
+        assert_eq!(r2.predictions, r1.predictions);
+        assert_eq!(r2.cache_hits, 1);
+        assert_eq!(service.stats().batches, batches_before);
+        assert!(service.cache_lookup(k).is_some());
+        service.clear_cache();
+        assert_eq!(service.cache_len(), 0);
+    }
+
+    #[test]
+    fn in_flight_duplicates_evaluate_once() {
+        let service = const_service(1.0);
+        let k = cache_key(&["dup"]);
+        // one request carrying the same key twice: the coalescer must
+        // evaluate a single representative
+        let req = PredictRequest::with_keys(
+            vec![chain_sample(4, 0.1), chain_sample(4, 0.1)],
+            vec![Some(k), Some(k)],
+        );
+        let r = service.predict_blocking(req).unwrap();
+        assert_eq!(r.predictions, vec![4.0, 4.0]);
+        assert_eq!(r.cache_hits, 1, "the twin should dedup in flight");
+        assert_eq!(service.stats().samples_evaluated, 1);
+    }
+
+    #[test]
+    fn mismatched_keys_are_rejected() {
+        let service = const_service(1.0);
+        let bad = PredictRequest::with_keys(vec![chain_sample(1, 0.0)], vec![None, None]);
+        assert!(service.submit(bad).is_err());
+    }
+
+    #[test]
+    fn full_queue_backpressure_and_try_submit() {
+        let (gated, entered, release) = GatedPredictor::new();
+        let service = PredictService::spawn(
+            Arc::new(gated),
+            ServiceConfig { workers: 1, queue_cap: 2, ..Default::default() },
+        );
+        // first request: wait until the worker is inside predict, so the
+        // queue is empty again and its capacity is exactly 2
+        let h0 = service.submit(PredictRequest::new(vec![chain_sample(1, 0.0)])).unwrap();
+        {
+            let (m, c) = &*entered;
+            let mut n = lock(m);
+            while *n == 0 {
+                n = c.wait(n).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let h1 = service.submit(PredictRequest::new(vec![chain_sample(2, 0.0)])).unwrap();
+        let h2 = service.submit(PredictRequest::new(vec![chain_sample(3, 0.0)])).unwrap();
+        // queue holds 2 requests — the bound — so a non-blocking submit
+        // must fail with a helpful error
+        let err = service
+            .try_submit(PredictRequest::new(vec![chain_sample(4, 0.0)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("full"), "{err}");
+        // release the model; everything in flight completes
+        {
+            let (m, c) = &*release;
+            *lock(m) = true;
+            c.notify_all();
+        }
+        for h in [h0, h1, h2] {
+            assert_eq!(h.wait().unwrap().predictions, vec![1.0]);
+        }
+    }
+
+    #[test]
+    fn drop_drains_accepted_requests() {
+        let service = const_service(1.0);
+        let handles: Vec<PredictHandle> = (0..16)
+            .map(|i| {
+                service
+                    .submit(PredictRequest::new(vec![chain_sample(1 + (i % 5), 0.1)]))
+                    .unwrap()
+            })
+            .collect();
+        drop(service); // close + drain + join
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert_eq!(r.predictions.len(), 1);
+            assert!(r.predictions[0].is_finite());
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails_cleanly() {
+        struct Hollow;
+        impl Predictor for Hollow {
+            fn name(&self) -> String {
+                "hollow".into()
+            }
+            fn predict(&self, s: &[&GraphSample]) -> Result<Vec<f64>> {
+                Ok(vec![0.0; s.len()])
+            }
+            fn save(&self, _: &Path) -> Result<()> {
+                bail!("nope")
+            }
+        }
+        let service = PredictService::with_defaults(Arc::new(Hollow));
+        // simulate a caller holding the shared state across shutdown
+        let shared = Arc::clone(&service.shared);
+        drop(service);
+        let orphan = PredictService { shared, workers: Vec::new() };
+        let err = orphan
+            .submit(PredictRequest::new(vec![chain_sample(1, 0.0)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn model_errors_fail_every_coalesced_caller_without_killing_the_worker() {
+        struct Flaky;
+        impl Predictor for Flaky {
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+            fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+                if samples.iter().any(|s| s.n_stages == 13) {
+                    bail!("unlucky batch");
+                }
+                Ok(vec![1.0; samples.len()])
+            }
+            fn save(&self, _: &Path) -> Result<()> {
+                bail!("nope")
+            }
+        }
+        let service = PredictService::with_defaults(Arc::new(Flaky));
+        let bad = service.predict_blocking(PredictRequest::new(vec![chain_sample(13, 0.0)]));
+        let msg = bad.unwrap_err().to_string();
+        assert!(msg.contains("unlucky"), "{msg}");
+        // the worker survives and serves the next request
+        let good = service.predict_blocking(PredictRequest::new(vec![chain_sample(2, 0.0)]));
+        assert_eq!(good.unwrap().predictions, vec![1.0]);
+    }
+
+    #[test]
+    fn cache_hit_only_jobs_survive_a_failing_coalesced_batch() {
+        // Gated so we can coalesce deterministically, poisoned on
+        // n_stages == 13: a cached-only request drained together with a
+        // failing one must still succeed.
+        struct GatedFlaky {
+            entered: Arc<(Mutex<usize>, Condvar)>,
+            release: Arc<(Mutex<bool>, Condvar)>,
+        }
+        impl Predictor for GatedFlaky {
+            fn name(&self) -> String {
+                "gated-flaky".into()
+            }
+            fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+                {
+                    let (m, c) = &*self.entered;
+                    *lock(m) += 1;
+                    c.notify_all();
+                }
+                let (m, c) = &*self.release;
+                let mut open = lock(m);
+                while !*open {
+                    open = c.wait(open).unwrap_or_else(|e| e.into_inner());
+                }
+                drop(open);
+                if samples.iter().any(|s| s.n_stages == 13) {
+                    bail!("poisoned batch");
+                }
+                Ok(samples.iter().map(|s| s.n_stages as f64).collect())
+            }
+            fn save(&self, _: &Path) -> Result<()> {
+                bail!("nope")
+            }
+        }
+        let entered = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let release = Arc::new((Mutex::new(true), Condvar::new()));
+        let service = PredictService::spawn(
+            Arc::new(GatedFlaky { entered: Arc::clone(&entered), release: Arc::clone(&release) }),
+            ServiceConfig { workers: 1, ..Default::default() },
+        );
+        let k = cache_key(&["good"]);
+        // prime the cache while the gate is open
+        let keyed = PredictRequest::with_keys(vec![chain_sample(2, 0.3)], vec![Some(k)]);
+        let primed = service.predict_blocking(keyed.clone()).unwrap();
+        assert_eq!(primed.predictions, vec![2.0]);
+        // close the gate and park the worker on an unrelated request
+        *lock(&release.0) = false;
+        let entered_before = *lock(&entered.0);
+        let parked = service.submit(PredictRequest::new(vec![chain_sample(5, 0.0)])).unwrap();
+        {
+            let (m, c) = &*entered;
+            let mut n = lock(m);
+            while *n == entered_before {
+                n = c.wait(n).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // these two queue up and will be drained together: one poisoned,
+        // one answerable purely from the cache
+        let bad = service.submit(PredictRequest::new(vec![chain_sample(13, 0.0)])).unwrap();
+        let cached = service.submit(keyed).unwrap();
+        {
+            let (m, c) = &*release;
+            *lock(m) = true;
+            c.notify_all();
+        }
+        assert_eq!(parked.wait().unwrap().predictions, vec![5.0]);
+        let err = bad.wait().unwrap_err().to_string();
+        assert!(err.contains("poisoned"), "{err}");
+        let ok = cached.wait().unwrap();
+        assert_eq!(ok.predictions, vec![2.0], "cache-hit-only job must survive the bad batch");
+        assert_eq!(ok.cache_hits, 1);
+    }
+
+    #[test]
+    fn cache_key_separators_matter() {
+        assert_ne!(cache_key(&["ab", "c"]), cache_key(&["a", "bc"]));
+        assert_ne!(cache_key(&["x"]), cache_key(&["x", ""]));
+        assert_eq!(cache_key(&["x", "y"]), cache_key(&["x", "y"]));
+    }
+}

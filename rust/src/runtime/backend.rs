@@ -30,7 +30,14 @@ use std::path::Path;
 
 /// A GCN execution engine. Object-safe: the training/eval/search layers
 /// hold `&dyn Backend` / `Box<dyn Backend>`.
-pub trait Backend {
+///
+/// Engines are `Send + Sync`: the predict service shares one engine (via
+/// its owning [`crate::predictor::Predictor`]) across worker threads and
+/// concurrent callers, so all inference state must be immutable or
+/// internally synchronized. The in-tree engines are plain data; a real
+/// external PJRT binding substituted for the `xla` stub must be
+/// thread-safe too.
+pub trait Backend: Send + Sync {
     /// Model dimensions and the flat parameter calling convention.
     fn manifest(&self) -> &Manifest;
 

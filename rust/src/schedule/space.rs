@@ -187,7 +187,8 @@ mod tests {
             &nests,
             &model,
             &BeamConfig { beam_width: 8, candidates_per_stage: 24, seed: 4 },
-        );
+        )
+        .unwrap();
         // beam samples randomly, exhaustive enumerates structured options —
         // beam should land within 2x of the enumerated optimum
         assert!(

@@ -3,6 +3,13 @@
 //! scheduled one at a time from the output stage up the DAG; at each step
 //! the beam expands with candidate schedules for the next stage and the
 //! model keeps the top-k.
+//!
+//! [`CostModel::score`] is fallible and scores whole frontiers at once:
+//! learned models serve through the coalescing
+//! [`crate::predictor::PredictService`] (one service round-trip per
+//! expansion), and an inference failure surfaces as an error to the
+//! search caller instead of a panic that would take down every other
+//! in-flight client of a shared service.
 
 use crate::ir::pipeline::Pipeline;
 use crate::lower::LoopNest;
@@ -10,10 +17,16 @@ use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
 use crate::schedule::random::random_stage_schedule;
 use crate::sim::{simulate, Machine};
 use crate::util::rng::Rng;
+use anyhow::{Context, Result};
 
 /// Anything that can score complete pipeline schedules (lower = better).
 pub trait CostModel {
-    fn score(&self, p: &Pipeline, nests: &[LoopNest], scheds: &[PipelineSchedule]) -> Vec<f64>;
+    fn score(
+        &self,
+        p: &Pipeline,
+        nests: &[LoopNest],
+        scheds: &[PipelineSchedule],
+    ) -> Result<Vec<f64>>;
     fn name(&self) -> String;
 }
 
@@ -23,8 +36,13 @@ pub struct SimCost {
 }
 
 impl CostModel for SimCost {
-    fn score(&self, p: &Pipeline, nests: &[LoopNest], scheds: &[PipelineSchedule]) -> Vec<f64> {
-        scheds.iter().map(|s| simulate(p, nests, s, &self.machine)).collect()
+    fn score(
+        &self,
+        p: &Pipeline,
+        nests: &[LoopNest],
+        scheds: &[PipelineSchedule],
+    ) -> Result<Vec<f64>> {
+        Ok(scheds.iter().map(|s| simulate(p, nests, s, &self.machine)).collect())
     }
     fn name(&self) -> String {
         "sim-oracle".into()
@@ -40,12 +58,17 @@ pub struct NoisySimCost {
 }
 
 impl CostModel for NoisySimCost {
-    fn score(&self, p: &Pipeline, nests: &[LoopNest], scheds: &[PipelineSchedule]) -> Vec<f64> {
+    fn score(
+        &self,
+        p: &Pipeline,
+        nests: &[LoopNest],
+        scheds: &[PipelineSchedule],
+    ) -> Result<Vec<f64>> {
         let mut rng = Rng::new(self.seed);
-        scheds
+        Ok(scheds
             .iter()
             .map(|s| simulate(p, nests, s, &self.machine) * rng.lognormal(self.sigma))
-            .collect()
+            .collect())
     }
     fn name(&self) -> String {
         format!("noisy-sim(σ={})", self.sigma)
@@ -71,13 +94,16 @@ impl Default for BeamConfig {
 ///
 /// Unscheduled stages hold the Halide default (compute_root, scalar), so
 /// every beam state is a *complete* legal schedule the model can score —
-/// the same trick the Halide auto-scheduler plays.
+/// the same trick the Halide auto-scheduler plays. The model scores each
+/// frontier in one call (one service round-trip for served models);
+/// ranking uses `f64::total_cmp`, so a model emitting NaN sorts last
+/// instead of panicking the search.
 pub fn beam_search(
     p: &Pipeline,
     nests: &[LoopNest],
     model: &dyn CostModel,
     cfg: &BeamConfig,
-) -> (PipelineSchedule, f64) {
+) -> Result<(PipelineSchedule, f64)> {
     let ranks: Vec<usize> = p.stages.iter().map(|s| s.shape.len()).collect();
     let consumers = p.consumers();
     let mut rng = Rng::new(cfg.seed);
@@ -104,10 +130,12 @@ pub fn beam_search(
                 candidates.push(next);
             }
         }
-        // prune with the model
-        let scores = model.score(p, nests, &candidates);
+        // prune with the model — one frontier, one score call
+        let scores = model
+            .score(p, nests, &candidates)
+            .with_context(|| format!("{} failed scoring stage {stage_id}'s frontier", model.name()))?;
         let mut idx: Vec<usize> = (0..candidates.len()).collect();
-        idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+        idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
         beam = idx
             .into_iter()
             .take(cfg.beam_width)
@@ -115,13 +143,15 @@ pub fn beam_search(
             .collect();
     }
 
-    let final_scores = model.score(p, nests, &beam);
+    let final_scores = model
+        .score(p, nests, &beam)
+        .with_context(|| format!("{} failed scoring the final beam", model.name()))?;
     let (best_i, best_s) = final_scores
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap();
-    (beam[best_i].clone(), *best_s)
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .context("beam search produced an empty beam")?;
+    Ok((beam[best_i].clone(), *best_s))
 }
 
 #[cfg(test)]
@@ -147,7 +177,8 @@ mod tests {
             &nests,
             &model,
             &BeamConfig { beam_width: 4, candidates_per_stage: 6, seed: 3 },
-        );
+        )
+        .unwrap();
         check_pipeline(&p, &nests, &best).unwrap();
         assert!(score < default_t, "beam {score} !< default {default_t}");
         // model score == true sim time for the oracle
@@ -165,13 +196,15 @@ mod tests {
             &nests,
             &model,
             &BeamConfig { beam_width: 1, candidates_per_stage: 4, seed: 9 },
-        );
+        )
+        .unwrap();
         let (_, wide) = beam_search(
             &p,
             &nests,
             &model,
             &BeamConfig { beam_width: 8, candidates_per_stage: 4, seed: 9 },
-        );
+        )
+        .unwrap();
         assert!(wide <= narrow * 1.001, "wide {wide} vs narrow {narrow}");
     }
 
@@ -188,9 +221,34 @@ mod tests {
                 &nests,
                 &model,
                 &BeamConfig { beam_width: 2, candidates_per_stage: 4, seed },
-            );
+            )
+            .unwrap();
             results.insert(format!("{sched:?}"));
         }
         assert!(results.len() >= 2, "noise should diversify schedules");
+    }
+
+    #[test]
+    fn failing_cost_model_errors_instead_of_panicking() {
+        struct Broken;
+        impl CostModel for Broken {
+            fn score(
+                &self,
+                _: &Pipeline,
+                _: &[LoopNest],
+                _: &[PipelineSchedule],
+            ) -> Result<Vec<f64>> {
+                anyhow::bail!("model exploded")
+            }
+            fn name(&self) -> String {
+                "broken".into()
+            }
+        }
+        let p = test_pipeline();
+        let nests = lower_pipeline(&p);
+        let err = beam_search(&p, &nests, &Broken, &BeamConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("broken"), "{err}");
     }
 }

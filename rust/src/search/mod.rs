@@ -3,7 +3,10 @@
 //! most promising candidates for further exploration."
 //!
 //! Cost models implement [`CostModel`]; any [`crate::predictor::Predictor`]
-//! becomes one through the re-exported caching [`PredictorCost`] bridge.
+//! becomes one through the re-exported [`PredictorCost`] bridge, which
+//! scores whole beam frontiers in one round-trip through the coalescing
+//! [`crate::predictor::PredictService`] and shares its memo cache with
+//! every other client of that service.
 
 pub mod beam;
 

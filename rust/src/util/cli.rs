@@ -70,6 +70,38 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Validate that every `--key value` option and bare `--flag` the user
+    /// passed is one `cmd` understands. A value option given without a
+    /// value parses as a flag, so a flag matching a value key gets a
+    /// "expects a value" message rather than "unknown".
+    pub fn check_known(&self, cmd: &str, keys: &[&str], flags: &[&str]) -> Result<(), String> {
+        let list = |xs: &[&str]| {
+            xs.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+        };
+        for k in self.options.keys() {
+            if !keys.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k} for '{cmd}' (valid options: {})",
+                    list(keys)
+                ));
+            }
+        }
+        for f in &self.flags {
+            if keys.contains(&f.as_str()) {
+                return Err(format!("--{f} expects a value (e.g. --{f} <value>)"));
+            }
+            if !flags.contains(&f.as_str()) {
+                let valid = if flags.is_empty() {
+                    "none".to_string()
+                } else {
+                    list(flags)
+                };
+                return Err(format!("unknown flag --{f} for '{cmd}' (valid flags: {valid})"));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +139,24 @@ mod tests {
     #[test]
     fn rejects_stray_positional() {
         assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn check_known_accepts_declared_and_rejects_unknown() {
+        let a = parse("bench --out x.json --fast");
+        assert!(a.check_known("bench", &["out", "seed"], &["fast"]).is_ok());
+        let err = a.check_known("bench", &["seed"], &["fast"]).unwrap_err();
+        assert!(err.contains("--out") && err.contains("bench"), "{err}");
+        let err = a.check_known("bench", &["out", "seed"], &[]).unwrap_err();
+        assert!(err.contains("--fast"), "{err}");
+    }
+
+    #[test]
+    fn check_known_flags_that_want_values_get_a_hint() {
+        // `--out` at end of line parses as a flag; the message should say
+        // a value is expected, not "unknown flag"
+        let a = parse("bench --out");
+        let err = a.check_known("bench", &["out"], &[]).unwrap_err();
+        assert!(err.contains("expects a value"), "{err}");
     }
 }

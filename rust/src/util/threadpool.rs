@@ -19,6 +19,21 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Spawn a named detached OS thread (the predict-service workers use
+/// this so stack traces and debuggers show which subsystem a thread
+/// belongs to). Thread-spawn failure means OS resource exhaustion, which
+/// nothing above this layer can recover from — it aborts loudly rather
+/// than limping on with fewer workers than the caller sized for.
+pub fn spawn_named<F>(name: String, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("failed to spawn thread '{name}': {e}"))
+}
+
 /// Apply `f` to every index in `0..n` in parallel, collecting results in
 /// order. Work is claimed one index at a time from a shared atomic counter,
 /// which load-balances well when per-item cost varies (e.g. benchmarking

@@ -248,7 +248,8 @@ fn beam_search_with_gcn_shaped_cost_runs() {
         &nests,
         &model,
         &BeamConfig { beam_width: 3, candidates_per_stage: 5, seed: 2 },
-    );
+    )
+    .unwrap();
     gcn_perf::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
     assert!(score > 0.0 && score.is_finite());
 }
@@ -362,7 +363,7 @@ fn search_accepts_every_registered_model() {
             fit_model(name, &ds, &cfg).unwrap()
         };
         let cost = PredictorCost::new(predictor, machine.clone());
-        let scores = cost.score(&net, &nests, &probe);
+        let scores = cost.score(&net, &nests, &probe).unwrap();
         assert!(
             scores.iter().all(|s| s.is_finite() && *s > 0.0),
             "model '{name}' produced bad scores: {scores:?}"
@@ -377,8 +378,131 @@ fn search_accepts_every_registered_model() {
         &nests,
         &oracle,
         &BeamConfig { beam_width: 2, candidates_per_stage: 3, seed: 1 },
-    );
+    )
+    .unwrap();
     gcn_perf::schedule::legality::check_pipeline(&net, &nests, &sched).unwrap();
+}
+
+/// The serving layer against the real GCN — the PR 4 acceptance tests:
+/// coalesced results bitwise-equal to direct single-caller predictions
+/// under concurrent mixed-size traffic, plus backpressure and clean
+/// shutdown semantics end to end.
+mod service {
+    use super::*;
+    use gcn_perf::dataset::builder::sample_from_schedule;
+    use gcn_perf::dataset::sample::GraphSample;
+    use gcn_perf::predictor::{PredictHandle, PredictRequest, PredictService, ServiceConfig};
+    use std::sync::Arc;
+
+    /// Mixed-size workload: generator pipelines (~5–10 stages) plus
+    /// >48-stage resnet50 schedules.
+    fn mixed_samples(
+        seed: u64,
+    ) -> (Vec<GraphSample>, gcn_perf::features::normalize::FeatureStats) {
+        let ds = small_dataset(6, 4, seed);
+        let stats = ds.stats.clone().unwrap();
+        let mut samples = ds.samples;
+        let net = gcn_perf::zoo::resnet50();
+        let nests = gcn_perf::lower::lower_pipeline(&net);
+        let machine = Machine::default();
+        let mut rng = gcn_perf::util::rng::Rng::new(seed ^ 0xA5);
+        for sid in 0..6u32 {
+            let sched =
+                gcn_perf::schedule::random::random_pipeline_schedule(&net, &nests, &mut rng);
+            samples.push(sample_from_schedule(
+                &net, &nests, &sched, &machine, 500, sid, &mut rng,
+            ));
+        }
+        (samples, stats)
+    }
+
+    fn gcn_session(
+        stats: gcn_perf::features::normalize::FeatureStats,
+        seed: u64,
+    ) -> Arc<GcnPredictor> {
+        let backend = NativeBackend::new();
+        let params = backend.init_params(seed);
+        Arc::new(GcnPredictor::new(Box::new(backend), params, stats))
+    }
+
+    #[test]
+    fn stress_coalesced_equals_direct_bitwise() {
+        let (samples, stats) = mixed_samples(41);
+        let predictor = gcn_session(stats, 9);
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let direct = predictor.predict(&refs).unwrap();
+
+        let service = PredictService::spawn(
+            predictor.clone(),
+            ServiceConfig { workers: 2, queue_cap: 8, max_coalesce: 16, ..Default::default() },
+        );
+        // 8 concurrent clients; each interleaves whole-list requests with
+        // per-candidate (size-1) requests over a rotated view of the
+        // samples, so drains coalesce heterogeneous graph sizes
+        std::thread::scope(|scope| {
+            for c in 0..8usize {
+                let service = &service;
+                let samples = &samples;
+                let direct = &direct;
+                scope.spawn(move || {
+                    for round in 0..3usize {
+                        let rot = (c * 5 + round) % samples.len();
+                        if round % 2 == 0 {
+                            // whole rotated list in one request
+                            let list: Vec<GraphSample> = samples[rot..]
+                                .iter()
+                                .chain(&samples[..rot])
+                                .cloned()
+                                .collect();
+                            let want: Vec<f64> = direct[rot..]
+                                .iter()
+                                .chain(&direct[..rot])
+                                .copied()
+                                .collect();
+                            let resp = service
+                                .predict_blocking(PredictRequest::new(list))
+                                .unwrap();
+                            assert_eq!(
+                                resp.predictions, want,
+                                "client {c} round {round}: coalesced != direct"
+                            );
+                        } else {
+                            // per-candidate singles
+                            for (i, s) in samples.iter().enumerate().skip(rot).take(4) {
+                                let resp = service
+                                    .predict_blocking(PredictRequest::new(vec![s.clone()]))
+                                    .unwrap();
+                                assert_eq!(resp.predictions, vec![direct[i]]);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let stats = service.stats();
+        assert!(stats.requests >= 8, "stress traffic not recorded: {stats:?}");
+        assert!(stats.samples_evaluated > 0);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_gcn_requests() {
+        let (samples, stats) = mixed_samples(43);
+        let predictor = gcn_session(stats, 11);
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let direct = predictor.predict(&refs).unwrap();
+
+        let service = PredictService::spawn(
+            predictor,
+            ServiceConfig { queue_cap: 64, ..Default::default() },
+        );
+        let handles: Vec<(usize, PredictHandle)> = (0..samples.len())
+            .map(|i| (i, service.submit(PredictRequest::new(vec![samples[i].clone()])).unwrap()))
+            .collect();
+        drop(service); // drain-on-drop: every accepted request completes
+        for (i, h) in handles {
+            assert_eq!(h.wait().unwrap().predictions, vec![direct[i]]);
+        }
+    }
 }
 
 /// PJRT-artifact round trips — only meaningful with a real xla binding and

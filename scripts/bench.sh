@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Dense-vs-sparse perf trajectory: builds the release binary and writes
-# BENCH_3.json at the repository root. Pass --fast for the short smoke
-# variant CI runs.
+# Perf trajectory: builds the release binary and writes BENCH_3.json
+# (dense-vs-sparse engines) and BENCH_4.json (naive-vs-coalesced serving)
+# at the repository root. Pass --fast for the short smoke variant CI runs.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -10,5 +10,5 @@ if [[ "${1:-}" == "--fast" ]]; then
     FAST_FLAG="--fast"
 fi
 
-cargo run --release -- bench ${FAST_FLAG} --out ../BENCH_3.json
-echo "wrote $(cd .. && pwd)/BENCH_3.json"
+cargo run --release -- bench ${FAST_FLAG} --out ../BENCH_3.json --serve-out ../BENCH_4.json
+echo "wrote $(cd .. && pwd)/BENCH_3.json and BENCH_4.json"

@@ -29,4 +29,13 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "==> cargo check --features pjrt --all-targets"
 cargo check --features pjrt --all-targets --quiet
 
+echo "==> serve smoke (tiny bundle, one JSON request through the daemon)"
+SMOKE="$(mktemp -d)"
+trap 'rm -rf "$SMOKE"' EXIT
+cargo run --release --quiet -- gen-data --pipelines 8 --schedules 4 --seed 1 --out "$SMOKE/ds.bin"
+cargo run --release --quiet -- train --data "$SMOKE/ds.bin" --bundle "$SMOKE/gcn.bundle" --epochs 1 --test-frac 0.25
+cargo run --release --quiet -- export-samples --data "$SMOKE/ds.bin" --limit 2 --out "$SMOKE/req.json"
+timeout 120 bash -c "cargo run --release --quiet -- serve --bundle '$SMOKE/gcn.bundle' < '$SMOKE/req.json' > '$SMOKE/resp.json'"
+grep -q predicted_runtime_s "$SMOKE/resp.json"
+
 echo "verify: OK"
