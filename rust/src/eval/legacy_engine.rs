@@ -1,0 +1,472 @@
+//! Frozen snapshot of the **PR-4 native engine's compute core** — the
+//! baseline `gcn-perf bench --engine` (`BENCH_5.json`) measures the
+//! PR-5 engine against, and the anchor for the fast-path parity check
+//! inside the bench run.
+//!
+//! Characteristics deliberately preserved from PR 4 (do **not** optimize
+//! this module — its whole value is staying slow in exactly the old ways):
+//!
+//! * every forward allocates all of its buffers fresh, and the parallel
+//!   row fill allocates per-block `Vec`s and then re-copies them into a
+//!   joined output;
+//! * inference materializes the full training stash (`e`/`h`/`xhat`/
+//!   `rstd`) it never reads;
+//! * the embedding GEMM is output-outer (strided weight reads), untiled;
+//! * `backward` is a single sequential pass over the packed nodes.
+//!
+//! Semantically it is the same model, so its outputs are bit-identical
+//! to the PR-5 engine's (the bench asserts this before timing anything).
+
+use crate::constants::{DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, NODE_DIM, N_CONV};
+use crate::model::PackedBatch;
+use crate::runtime::native::{apply_adagrad, loss_and_dz, LN_EPS};
+use crate::runtime::params::Params;
+use crate::runtime::Manifest;
+use crate::util::threadpool::{chunk_ranges, parallel_map};
+use std::ops::Range;
+
+/// PR-4 parallel-block threshold (same value the old engine used).
+const PAR_MIN_ROWS: usize = 512;
+
+/// PR-4 row fill: per-block `Vec` allocations joined by `extend_from_slice`.
+fn par_rows<F>(n_rows: usize, width: usize, f: F) -> Vec<f32>
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let ranges = chunk_ranges(n_rows, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        let mut out = vec![0f32; n_rows * width];
+        for (r, row) in out.chunks_mut(width.max(1)).enumerate() {
+            f(r, row);
+        }
+        return out;
+    }
+    let parts = parallel_map(&ranges, |range| {
+        let mut block = vec![0f32; range.len() * width];
+        for (i, row) in block.chunks_mut(width.max(1)).enumerate() {
+            f(range.start + i, row);
+        }
+        block
+    });
+    let mut out = Vec::with_capacity(n_rows * width);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+struct ConvRows {
+    h: Vec<f32>,
+    xhat: Vec<f32>,
+    e_next: Vec<f32>,
+    rstd: Vec<f32>,
+}
+
+fn conv_block(
+    batch: &PackedBatch,
+    t: &[f32],
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+    range: Range<usize>,
+) -> ConvRows {
+    let n = range.len();
+    let mut out = ConvRows {
+        h: vec![0f32; n * NODE_DIM],
+        xhat: vec![0f32; n * NODE_DIM],
+        e_next: vec![0f32; n * NODE_DIM],
+        rstd: vec![0f32; n],
+    };
+    for (i, node) in range.enumerate() {
+        let (cols, vals) = batch.adj.row(node);
+        let mut c = [0f64; NODE_DIM];
+        for (&cix, &a) in cols.iter().zip(vals) {
+            let af = a as f64;
+            let t_row = &t[cix as usize * NODE_DIM..(cix as usize + 1) * NODE_DIM];
+            for j in 0..NODE_DIM {
+                c[j] += af * t_row[j] as f64;
+            }
+        }
+        for j in 0..NODE_DIM {
+            c[j] += bvec[j] as f64;
+        }
+        let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
+        let var = c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        out.rstd[i] = rs as f32;
+        let o = i * NODE_DIM;
+        for j in 0..NODE_DIM {
+            let xh = (c[j] - mean) * rs;
+            out.xhat[o + j] = xh as f32;
+            let hv = xh * scale[j] as f64 + shift[j] as f64;
+            out.h[o + j] = hv as f32;
+            out.e_next[o + j] = hv.max(0.0) as f32;
+        }
+    }
+    out
+}
+
+fn par_conv(
+    batch: &PackedBatch,
+    t: &[f32],
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+) -> ConvRows {
+    let nn = batch.total_nodes();
+    let ranges = chunk_ranges(nn, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        return conv_block(batch, t, bvec, scale, shift, 0..nn);
+    }
+    let parts = parallel_map(&ranges, |r| conv_block(batch, t, bvec, scale, shift, r.clone()));
+    let mut out = ConvRows {
+        h: Vec::with_capacity(nn * NODE_DIM),
+        xhat: Vec::with_capacity(nn * NODE_DIM),
+        e_next: Vec::with_capacity(nn * NODE_DIM),
+        rstd: Vec::with_capacity(nn),
+    };
+    for p in parts {
+        out.h.extend_from_slice(&p.h);
+        out.xhat.extend_from_slice(&p.xhat);
+        out.e_next.extend_from_slice(&p.e_next);
+        out.rstd.extend_from_slice(&p.rstd);
+    }
+    out
+}
+
+struct Forward {
+    e: Vec<Vec<f32>>,
+    h: Vec<Vec<f32>>,
+    xhat: Vec<Vec<f32>>,
+    rstd: Vec<Vec<f32>>,
+    feat: Vec<f32>,
+    z: Vec<f32>,
+}
+
+/// The PR-4 engine: same model, yesterday's loops.
+pub(crate) struct LegacyEngine {
+    manifest: Manifest,
+}
+
+impl LegacyEngine {
+    pub(crate) fn new() -> LegacyEngine {
+        LegacyEngine { manifest: Manifest::native(N_CONV) }
+    }
+
+    fn n_conv(&self) -> usize {
+        self.manifest.n_conv
+    }
+
+    fn readout(&self) -> usize {
+        NODE_DIM * (self.n_conv() + 1)
+    }
+
+    fn p_w_out(&self) -> usize {
+        4 + 4 * self.n_conv()
+    }
+
+    fn forward(&self, params: &Params, batch: &PackedBatch) -> Forward {
+        let kk = self.n_conv();
+        let readout = self.readout();
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
+
+        // PR-4 embedding: output-outer, strided weight reads
+        let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
+        let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
+        let e0 = par_rows(nn, NODE_DIM, |node, out| {
+            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
+            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
+            for j in 0..EMB_INV {
+                let mut acc = b_inv[j] as f64;
+                for (i, &x) in inv.iter().enumerate() {
+                    acc += x as f64 * w_inv[i * EMB_INV + j] as f64;
+                }
+                out[j] = acc.max(0.0) as f32;
+            }
+            for j in 0..EMB_DEP {
+                let mut acc = b_dep[j] as f64;
+                for (i, &x) in dep.iter().enumerate() {
+                    acc += x as f64 * w_dep[i * EMB_DEP + j] as f64;
+                }
+                out[EMB_INV + j] = acc.max(0.0) as f32;
+            }
+        });
+
+        let mut e_list = Vec::with_capacity(kk + 1);
+        e_list.push(e0);
+        let mut h_list = Vec::with_capacity(kk);
+        let mut xhat_list = Vec::with_capacity(kk);
+        let mut rstd_list = Vec::with_capacity(kk);
+
+        for k in 0..kk {
+            let w = &params.values[4 + 4 * k];
+            let bvec = &params.values[5 + 4 * k];
+            let scale = &params.values[6 + 4 * k];
+            let shift = &params.values[7 + 4 * k];
+            let e_prev = &e_list[k];
+
+            let t = par_rows(nn, NODE_DIM, |node, t_row| {
+                let e_row = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
+                let mut acc = [0f64; NODE_DIM];
+                for (i, &x) in e_row.iter().enumerate() {
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let xf = x as f64;
+                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        acc[j] += xf * wrow[j] as f64;
+                    }
+                }
+                for j in 0..NODE_DIM {
+                    t_row[j] = acc[j] as f32;
+                }
+            });
+
+            let conv = par_conv(batch, &t, bvec, scale, shift);
+            h_list.push(conv.h);
+            xhat_list.push(conv.xhat);
+            rstd_list.push(conv.rstd);
+            e_list.push(conv.e_next);
+        }
+
+        let w_out = &params.values[self.p_w_out()];
+        let b_out = &params.values[self.p_w_out() + 1];
+        let mut feat = vec![0f32; nb * readout];
+        let mut z = vec![0f32; nb];
+        for g in 0..nb {
+            for (k, e) in e_list.iter().enumerate() {
+                let f_off = g * readout + k * NODE_DIM;
+                for node in batch.graph_nodes(g) {
+                    let row = &e[node * NODE_DIM..(node + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        feat[f_off + j] += row[j];
+                    }
+                }
+            }
+            let mut acc = b_out[0] as f64;
+            for r in 0..readout {
+                acc += feat[g * readout + r] as f64 * w_out[r] as f64;
+            }
+            z[g] = acc as f32;
+        }
+
+        Forward { e: e_list, h: h_list, xhat: xhat_list, rstd: rstd_list, feat, z }
+    }
+
+    /// PR-4 inference: the full training forward, keeping every
+    /// intermediate it will never read.
+    pub(crate) fn infer(&self, params: &Params, batch: &PackedBatch) -> Vec<f32> {
+        self.forward(params, batch).z
+    }
+
+    /// PR-4 backward: one sequential pass over the packed nodes.
+    fn backward(
+        &self,
+        params: &Params,
+        batch: &PackedBatch,
+        fwd: &Forward,
+        dz: &[f64],
+    ) -> Vec<Vec<f64>> {
+        let kk = self.n_conv();
+        let readout = self.readout();
+        let iw = self.p_w_out();
+        let w_out = &params.values[iw];
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
+        let mut grads: Vec<Vec<f64>> =
+            params.values.iter().map(|v| vec![0f64; v.len()]).collect();
+
+        for g in 0..nb {
+            if dz[g] == 0.0 {
+                continue;
+            }
+            grads[iw + 1][0] += dz[g];
+            for r in 0..readout {
+                grads[iw][r] += fwd.feat[g * readout + r] as f64 * dz[g];
+            }
+        }
+
+        let mut de = vec![0f64; nn * NODE_DIM];
+        for g in 0..nb {
+            if dz[g] == 0.0 {
+                continue;
+            }
+            for node in batch.graph_nodes(g) {
+                let o = node * NODE_DIM;
+                for j in 0..NODE_DIM {
+                    de[o + j] = dz[g] * w_out[kk * NODE_DIM + j] as f64;
+                }
+            }
+        }
+
+        for k in (0..kk).rev() {
+            let w = &params.values[4 + 4 * k];
+            let scale = &params.values[6 + 4 * k];
+            let h = &fwd.h[k];
+            let xh = &fwd.xhat[k];
+            let rstd = &fwd.rstd[k];
+            let e_prev = &fwd.e[k];
+
+            let mut dc = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
+                let o = node * NODE_DIM;
+                let mut dxh = [0f64; NODE_DIM];
+                let mut sum1 = 0f64;
+                let mut sum2 = 0f64;
+                for j in 0..NODE_DIM {
+                    let dh = if h[o + j] > 0.0 { de[o + j] } else { 0.0 };
+                    grads[6 + 4 * k][j] += dh * xh[o + j] as f64;
+                    grads[7 + 4 * k][j] += dh;
+                    let dx = dh * scale[j] as f64;
+                    dxh[j] = dx;
+                    sum1 += dx;
+                    sum2 += dx * xh[o + j] as f64;
+                }
+                let rs = rstd[node] as f64;
+                for j in 0..NODE_DIM {
+                    let v =
+                        rs * (dxh[j] - (sum1 + xh[o + j] as f64 * sum2) / NODE_DIM as f64);
+                    dc[o + j] = v;
+                    grads[5 + 4 * k][j] += v;
+                }
+            }
+
+            let adj_t = batch.adj_t();
+            let mut dt = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
+                let (rows, vals) = adj_t.row(node);
+                let o = node * NODE_DIM;
+                for (&r, &a) in rows.iter().zip(vals) {
+                    let af = a as f64;
+                    let src = &dc[r as usize * NODE_DIM..(r as usize + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        dt[o + j] += af * src[j];
+                    }
+                }
+            }
+
+            let mut de_new = vec![0f64; nn * NODE_DIM];
+            for node in 0..nn {
+                let o = node * NODE_DIM;
+                let dtrow = &dt[o..o + NODE_DIM];
+                let erow = &e_prev[o..o + NODE_DIM];
+                for i in 0..NODE_DIM {
+                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                    let mut acc = 0f64;
+                    for j in 0..NODE_DIM {
+                        acc += dtrow[j] * wrow[j] as f64;
+                    }
+                    de_new[o + i] = acc;
+                    let ev = erow[i] as f64;
+                    if ev != 0.0 {
+                        let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
+                        for j in 0..NODE_DIM {
+                            gw[j] += ev * dtrow[j];
+                        }
+                    }
+                }
+            }
+
+            for g in 0..nb {
+                if dz[g] == 0.0 {
+                    continue;
+                }
+                for node in batch.graph_nodes(g) {
+                    let o = node * NODE_DIM;
+                    for j in 0..NODE_DIM {
+                        de_new[o + j] += dz[g] * w_out[k * NODE_DIM + j] as f64;
+                    }
+                }
+            }
+            de = de_new;
+        }
+
+        let e0 = &fwd.e[0];
+        for node in 0..nn {
+            let o = node * NODE_DIM;
+            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
+            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
+            for j in 0..EMB_INV {
+                if e0[o + j] <= 0.0 {
+                    continue;
+                }
+                let g = de[o + j];
+                if g == 0.0 {
+                    continue;
+                }
+                grads[1][j] += g;
+                for (i, &x) in inv.iter().enumerate() {
+                    grads[0][i * EMB_INV + j] += x as f64 * g;
+                }
+            }
+            for j in 0..EMB_DEP {
+                if e0[o + EMB_INV + j] <= 0.0 {
+                    continue;
+                }
+                let g = de[o + EMB_INV + j];
+                if g == 0.0 {
+                    continue;
+                }
+                grads[3][j] += g;
+                for (i, &x) in dep.iter().enumerate() {
+                    grads[2][i * EMB_DEP + j] += x as f64 * g;
+                }
+            }
+        }
+
+        grads
+    }
+
+    /// PR-4 train step: full forward, sequential backward, Adagrad.
+    pub(crate) fn train_step_lr(
+        &self,
+        params: &mut Params,
+        accum: &mut Params,
+        batch: &PackedBatch,
+        lr: f32,
+    ) -> f32 {
+        let fwd = self.forward(params, batch);
+        let (loss, dz) = loss_and_dz(&fwd.z, batch);
+        let grads = self.backward(params, batch, &fwd, &dz);
+        apply_adagrad(params, accum, &grads, lr as f64, self.manifest.weight_decay);
+        loss as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::testfix::synth_packed_batch;
+
+    #[test]
+    fn legacy_engine_matches_current_engine() {
+        // the baseline must stay semantically identical to the current
+        // engine, or BENCH_5's speedups would compare different models
+        let legacy = LegacyEngine::new();
+        let current = NativeBackend::new();
+        let batch = synth_packed_batch();
+        let params = current.init_params(21);
+        let z_legacy = legacy.infer(&params, &batch);
+        let z_current = current.infer(&params, &batch).unwrap();
+        assert_eq!(z_legacy, z_current, "legacy and current engines diverge on inference");
+
+        let mut pl = params.clone();
+        let mut al = pl.zeros_like();
+        let mut pc = params.clone();
+        let mut ac = pc.zeros_like();
+        let ll = legacy.train_step_lr(&mut pl, &mut al, &batch, 0.01);
+        let lc = current.train_step_lr(&mut pc, &mut ac, &batch, 0.01).unwrap();
+        assert!((ll - lc).abs() <= 1e-6 * lc.abs().max(1.0), "loss diverges: {ll} vs {lc}");
+        for (t, (vl, vc)) in pl.values.iter().zip(&pc.values).enumerate() {
+            for (i, (a, b)) in vl.iter().zip(vc).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6,
+                    "post-step param[{t}][{i}] diverges: {a} vs {b}"
+                );
+            }
+        }
+    }
+}

@@ -1,16 +1,21 @@
-//! Evaluation harnesses for the paper's figures, plus the perf bench.
+//! Evaluation harnesses for the paper's figures, plus the perf benches.
 //!
 //! * [`metrics`] — Fig 8: average error %, maximum error %, R².
 //! * [`ranking`] — Fig 9: pairwise schedule ranking accuracy.
 //! * [`perf`] — dense-vs-sparse engine benchmarks (`BENCH_3.json`).
 //! * [`serve_bench`] — naive-vs-coalesced serving benchmark
 //!   (`BENCH_4.json`).
+//! * [`engine_bench`] — native-engine micro-benchmarks against the
+//!   frozen PR-4 compute core (`BENCH_5.json`), with the baseline kept
+//!   in `legacy_engine`.
 
 pub mod metrics;
 pub mod ranking;
 pub mod harness;
 pub mod perf;
 pub mod serve_bench;
+pub mod engine_bench;
+pub(crate) mod legacy_engine;
 
 pub use metrics::{regression_metrics, RegressionMetrics};
 pub use ranking::{pairwise_ranking_accuracy, rank_networks, RankResult};

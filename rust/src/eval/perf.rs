@@ -78,7 +78,8 @@ fn row(r: &BenchResult, batch_graphs: usize) -> PerfRow {
 
 /// The small-graph workload: one `BATCH`-graph packed batch from the
 /// standard generator (graphs of ~5–10 stages — the padded regime).
-fn small_workload(seed: u64) -> Result<(PackedBatch, FeatureStats)> {
+/// Shared with the engine micro-bench (`eval::engine_bench`).
+pub(crate) fn small_workload(seed: u64) -> Result<(PackedBatch, FeatureStats)> {
     let ds = build_dataset(&DataGenConfig {
         n_pipelines: 8,
         schedules_per_pipeline: 4,
@@ -95,7 +96,12 @@ fn small_workload(seed: u64) -> Result<(PackedBatch, FeatureStats)> {
 
 /// The large-graph workload: schedules of the >48-stage zoo network —
 /// graphs the dense layout cannot hold at its old pad width at all.
-fn large_workload(seed: u64, stats: &FeatureStats, n_graphs: usize) -> Result<PackedBatch> {
+/// Shared with the engine micro-bench (`eval::engine_bench`).
+pub(crate) fn large_workload(
+    seed: u64,
+    stats: &FeatureStats,
+    n_graphs: usize,
+) -> Result<PackedBatch> {
     let net = crate::zoo::resnet50();
     let nests = lower_pipeline(&net);
     let machine = Machine::default();

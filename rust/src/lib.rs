@@ -47,6 +47,17 @@
 
 pub mod util;
 pub mod ir;
+
+// Count every heap allocation (one relaxed atomic add over `System`) so
+// the workspace tests can pin the inference fast path's steady-state
+// allocation budget. Installed only in this crate's own test harness —
+// the `gcn-perf` binary installs the same allocator in `main.rs` for
+// `bench --engine` — so library embedders keep their own choice of
+// global allocator. See `util::alloc_count`.
+#[cfg(test)]
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 pub mod onnx_gen;
 pub mod lower;
 pub mod schedule;

@@ -14,8 +14,9 @@
 //!   active         §VI active-learning study
 //!   transfer       §VI-A cross-machine portability study
 //!   search         model-guided beam search on a zoo network (Fig 2)
-//!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json) and
-//!                  naive-vs-coalesced serving (BENCH_4.json)
+//!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json),
+//!                  naive-vs-coalesced serving (BENCH_4.json) and the
+//!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
 //!                  requests on stdin, predictions on stdout
 //!   info           backend / manifest / bundle info
@@ -45,6 +46,14 @@ use gcn_perf::util::cli::Args;
 use gcn_perf::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+// Counting allocator (relaxed-atomic + TLS adds over `System`): lets
+// `bench --engine` report real allocations/op in BENCH_5.json. Installed
+// in the binary — not the library — so embedders keep their own global
+// allocator. The library's test harness installs its own copy (lib.rs).
+#[global_allocator]
+static GLOBAL_ALLOC: gcn_perf::util::alloc_count::CountingAlloc =
+    gcn_perf::util::alloc_count::CountingAlloc;
 
 /// Per-subcommand accepted `--key value` options and bare `--flags`.
 /// `main` rejects anything outside this table with a nonzero exit, so a
@@ -88,7 +97,11 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
         ],
         &[],
     ),
-    ("bench", &["out", "serve-out", "seed"], &["fast", "require-speedup"]),
+    (
+        "bench",
+        &["out", "serve-out", "engine-out", "seed"],
+        &["fast", "require-speedup", "engine"],
+    ),
     ("serve", &["bundle", "ckpt", "workers", "queue-cap"], &[]),
     ("info", &["artifacts", "bundle", "ckpt"], &[]),
 ];
@@ -159,8 +172,10 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   transfer        --bundle ...  (§VI-A cross-machine portability study)
   search          --network NAME [--model oracle|gcn|ffn|rnn|gbt]
                   [--bundle ... | --data ...] [--beam W --candidates C]
-  bench           [--out BENCH_3.json] [--serve-out BENCH_4.json] [--fast]
-                  [--require-speedup]  (dense-vs-sparse + serving benches)
+  bench           [--out BENCH_3.json] [--serve-out BENCH_4.json]
+                  [--engine-out BENCH_5.json] [--fast] [--engine]
+                  [--require-speedup]  (dense-vs-sparse + serving + engine
+                   micro-benches; --engine runs only the engine suite)
   serve           --bundle data/gcn.bundle [--workers N] [--queue-cap Q]
                   (daemon: one JSON sample-array request per stdin line,
                    one JSON prediction response per stdout line)
@@ -436,8 +451,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = service.stats();
     eprintln!(
-        "served {} requests: {} samples evaluated in {} fused batches, {} cache hits",
-        stats.requests, stats.samples_evaluated, stats.batches, stats.cache_hits
+        "served {} requests: {} samples evaluated in {} fused batches; \
+         memo cache {} hits / {} misses; peak queue depth {}",
+        stats.requests,
+        stats.samples_evaluated,
+        stats.batches,
+        stats.cache_hits,
+        stats.cache_misses,
+        stats.peak_queue
     );
     Ok(())
 }
@@ -713,35 +734,63 @@ fn cmd_search(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let fast = args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok();
-    let cfg = gcn_perf::eval::perf::PerfBenchConfig { fast, seed: args.u64_or("seed", 3) };
-    let report = gcn_perf::eval::perf::run_perf_bench(&cfg)?;
-    let out = PathBuf::from(args.str_or("out", "BENCH_3.json"));
-    gcn_perf::eval::perf::write_perf_report(&report, &out)?;
-    println!(
-        "bench report written to {} (padded-workload forward speedup {:.2}x dense/sparse)",
-        out.display(),
-        report.padded_forward_speedup()
-    );
+    let seed = args.u64_or("seed", 3);
+    // --engine: run only the engine micro-suite (what scripts/profile.sh
+    // wraps for flamegraph work — no serving threads muddying the profile)
+    let engine_only = args.has_flag("engine");
 
-    // the serving trajectory: concurrent per-candidate calls vs the
-    // coalescing service on the same mixed-size workload
-    let serve_cfg =
-        gcn_perf::eval::serve_bench::ServeBenchConfig { fast, seed: args.u64_or("seed", 3) };
-    let serve_report = gcn_perf::eval::serve_bench::run_serve_bench(&serve_cfg)?;
-    let serve_out = PathBuf::from(args.str_or("serve-out", "BENCH_4.json"));
-    gcn_perf::eval::serve_bench::write_serve_report(&serve_report, &serve_out)?;
+    let mut earlier_reports = None;
+    if !engine_only {
+        let cfg = gcn_perf::eval::perf::PerfBenchConfig { fast, seed };
+        let report = gcn_perf::eval::perf::run_perf_bench(&cfg)?;
+        let out = PathBuf::from(args.str_or("out", "BENCH_3.json"));
+        gcn_perf::eval::perf::write_perf_report(&report, &out)?;
+        println!(
+            "bench report written to {} (padded-workload forward speedup {:.2}x dense/sparse)",
+            out.display(),
+            report.padded_forward_speedup()
+        );
+
+        // the serving trajectory: concurrent per-candidate calls vs the
+        // coalescing service on the same mixed-size workload
+        let serve_cfg = gcn_perf::eval::serve_bench::ServeBenchConfig { fast, seed };
+        let serve_report = gcn_perf::eval::serve_bench::run_serve_bench(&serve_cfg)?;
+        let serve_out = PathBuf::from(args.str_or("serve-out", "BENCH_4.json"));
+        gcn_perf::eval::serve_bench::write_serve_report(&serve_report, &serve_out)?;
+        println!(
+            "serving report written to {} ({} clients x {} candidates: {:.2}x naive/coalesced, {} fused batches)",
+            serve_out.display(),
+            serve_report.clients,
+            serve_report.candidates_per_client,
+            serve_report.speedup,
+            serve_report.coalesced_batches
+        );
+        earlier_reports = Some((report, serve_report));
+    }
+
+    // the PR-5 engine core: fast path / tiled kernels / parallel
+    // backward vs the frozen PR-4 compute core
+    let engine_cfg = gcn_perf::eval::engine_bench::EngineBenchConfig { fast, seed };
+    let engine_report = gcn_perf::eval::engine_bench::run_engine_bench(&engine_cfg)?;
+    let engine_out = PathBuf::from(args.str_or("engine-out", "BENCH_5.json"));
+    gcn_perf::eval::engine_bench::write_engine_report(&engine_report, &engine_out)?;
     println!(
-        "serving report written to {} ({} clients x {} candidates: {:.2}x naive/coalesced, {} fused batches)",
-        serve_out.display(),
-        serve_report.clients,
-        serve_report.candidates_per_client,
-        serve_report.speedup,
-        serve_report.coalesced_batches
+        "engine report written to {} (infer speedup vs PR-4: padded {:.2}x, resnet50 {:.2}x; \
+         train-step {:.2}x/{:.2}x; {:.1} allocs/op steady-state)",
+        engine_out.display(),
+        engine_report.speedup("padded/infer"),
+        engine_report.speedup("resnet50/infer"),
+        engine_report.speedup("padded/train-step"),
+        engine_report.speedup("resnet50/train-step"),
+        engine_report.allocs_per_infer
     );
 
     if args.has_flag("require-speedup") {
-        report.require_padded_speedup()?;
-        serve_report.require_speedup()?;
+        if let Some((report, serve_report)) = &earlier_reports {
+            report.require_padded_speedup()?;
+            serve_report.require_speedup()?;
+        }
+        engine_report.require_speedup()?;
     }
     Ok(())
 }

@@ -172,6 +172,35 @@ impl PackedBatch {
         self.adj_t.get_or_init(|| self.adj.transpose())
     }
 
+    /// Contiguous graph ranges whose node totals reach `min_nodes` (the
+    /// final range may fall short). Because the adjacency is
+    /// block-diagonal, each block's nodes reference only nodes of the
+    /// same block, so a worker can run an entire backward pass over its
+    /// block without seeing any other block's scratch state.
+    ///
+    /// The partition depends only on the batch — never on the thread
+    /// count — which is what makes the parallel backward's block-order
+    /// gradient reduction bitwise-deterministic across thread counts.
+    pub fn graph_blocks(&self, min_nodes: usize) -> Vec<Range<usize>> {
+        let nb = self.n_graphs();
+        let min_nodes = min_nodes.max(1);
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for g in 0..nb {
+            acc += self.graph_nodes(g).len();
+            if acc >= min_nodes {
+                out.push(start..g + 1);
+                start = g + 1;
+                acc = 0;
+            }
+        }
+        if start < nb {
+            out.push(start..nb);
+        }
+        out
+    }
+
     /// Assemble a training batch from any number of samples of any size.
     ///
     /// * features are standardized with `stats`
@@ -428,6 +457,40 @@ mod tests {
         }
         // log targets
         assert!((b.log_y[0] as f64 - (1e-3f64).ln()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn graph_blocks_tile_graphs_and_respect_node_budget() {
+        let samples: Vec<_> = [3u16, 5, 40, 2, 2, 60, 4]
+            .iter()
+            .map(|&n| mk_sample(n, 1e-3))
+            .collect();
+        let refs: Vec<_> = samples.iter().collect();
+        let b = PackedBatch::for_inference(&refs, &identity_stats()).unwrap();
+        let blocks = b.graph_blocks(10);
+        // blocks tile 0..n_graphs contiguously in order
+        let mut next = 0;
+        for r in &blocks {
+            assert_eq!(r.start, next);
+            assert!(!r.is_empty());
+            next = r.end;
+        }
+        assert_eq!(next, b.n_graphs());
+        // every block except the last reaches the node budget, and no
+        // block keeps absorbing graphs once it has
+        for (i, r) in blocks.iter().enumerate() {
+            let nodes: usize = r.clone().map(|g| b.graph_nodes(g).len()).sum();
+            if i + 1 < blocks.len() {
+                assert!(nodes >= 10, "block {i} holds only {nodes} nodes");
+                let without_last: usize =
+                    (r.start..r.end - 1).map(|g| b.graph_nodes(g).len()).sum();
+                assert!(without_last < 10, "block {i} overshot the budget");
+            }
+        }
+        // degenerate budgets still tile everything
+        assert_eq!(b.graph_blocks(1).len(), b.n_graphs());
+        assert_eq!(b.graph_blocks(usize::MAX).len(), 1);
+        assert_eq!(b.graph_blocks(0).len(), b.n_graphs());
     }
 
     #[test]

@@ -148,11 +148,18 @@ pub struct ServiceStats {
     pub requests: usize,
     /// Fused `Predictor::predict` calls issued by the coalescer.
     pub batches: usize,
-    /// Samples that reached the model (cache misses).
+    /// Samples that reached the model (keyed *and* keyless misses).
     pub samples_evaluated: usize,
     /// Samples answered from the cache, an in-flight duplicate, or a
     /// caller-side [`PredictService::cache_lookup`] hit.
     pub cache_hits: usize,
+    /// Keyed samples that probed the memo cache and missed (so were
+    /// evaluated and then memoized). Keyless samples are not counted —
+    /// they never probe the cache.
+    pub cache_misses: usize,
+    /// Deepest the bounded queue has ever been, in requests. Shows how
+    /// close the service has come to its `queue_cap` backpressure bound.
+    pub peak_queue: usize,
 }
 
 // ------------------------------------------------------------- promise
@@ -227,6 +234,9 @@ struct Job {
 struct QueueState {
     jobs: VecDeque<Job>,
     closed: bool,
+    /// Deepest `jobs` has ever been; maintained under the queue lock so
+    /// the high-water mark is exact.
+    peak: usize,
 }
 
 struct Shared {
@@ -240,6 +250,7 @@ struct Shared {
     batches: AtomicUsize,
     samples_evaluated: AtomicUsize,
     cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
 }
 
 /// The shared, concurrency-first serving layer. See the module docs for
@@ -258,7 +269,7 @@ impl PredictService {
         let shared = Arc::new(Shared {
             predictor,
             cfg,
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false, peak: 0 }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cache: Mutex::new(HashMap::new()),
@@ -266,6 +277,7 @@ impl PredictService {
             batches: AtomicUsize::new(0),
             samples_evaluated: AtomicUsize::new(0),
             cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
         });
         let workers = (0..n_workers)
             .map(|i| {
@@ -324,6 +336,7 @@ impl PredictService {
         }
         let promise = Arc::new(Promise::new());
         q.jobs.push_back(Job { req, promise: Arc::clone(&promise) });
+        q.peak = q.peak.max(q.jobs.len());
         drop(q);
         self.shared.requests.fetch_add(1, Ordering::Relaxed);
         self.shared.not_empty.notify_one();
@@ -353,11 +366,14 @@ impl PredictService {
 
     /// Snapshot of the monotonic counters.
     pub fn stats(&self) -> ServiceStats {
+        let peak_queue = lock(&self.shared.queue).peak;
         ServiceStats {
             requests: self.shared.requests.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
             samples_evaluated: self.shared.samples_evaluated.load(Ordering::Relaxed),
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+            peak_queue,
         }
     }
 
@@ -480,6 +496,11 @@ fn run_coalesced(shared: &Shared, jobs: &[Job]) {
     if total_hits > 0 {
         shared.cache_hits.fetch_add(total_hits, Ordering::Relaxed);
     }
+    // keyed samples that probed the cache and lost; counted into
+    // `cache_misses` only once their evaluation succeeds (below), so a
+    // failing batch does not inflate the miss count for keys that were
+    // never memoized
+    let keyed_misses = eval_keys.iter().flatten().count();
 
     let outcome: Result<Vec<f64>, String> = if eval_refs.is_empty() {
         Ok(Vec::new())
@@ -535,10 +556,13 @@ fn run_coalesced(shared: &Shared, jobs: &[Job]) {
     for &(ji, si, pos) in &dup_slots {
         outs[ji][si] = preds[pos];
     }
+    if keyed_misses > 0 {
+        shared.cache_misses.fetch_add(keyed_misses, Ordering::Relaxed);
+    }
 
     // only keyed results enter the cache — size the wipe check on those,
     // so a large keyless batch cannot evict the shared memo entries
-    let new_keyed = eval_keys.iter().flatten().count();
+    let new_keyed = keyed_misses;
     if caching && new_keyed > 0 {
         let mut cache = lock(&shared.cache);
         if cache.len() + new_keyed > shared.cfg.cache_cap {
@@ -703,6 +727,85 @@ mod tests {
         assert_eq!(r.predictions, vec![4.0, 4.0]);
         assert_eq!(r.cache_hits, 1, "the twin should dedup in flight");
         assert_eq!(service.stats().samples_evaluated, 1);
+    }
+
+    #[test]
+    fn stats_report_peak_queue_depth() {
+        // park the worker so queued requests pile up deterministically
+        let (gated, entered, release) = GatedPredictor::new();
+        let service = PredictService::spawn(
+            Arc::new(gated),
+            ServiceConfig { workers: 1, queue_cap: 16, ..Default::default() },
+        );
+        let h0 = service.submit(PredictRequest::new(vec![chain_sample(1, 0.0)])).unwrap();
+        {
+            let (m, c) = &*entered;
+            let mut n = lock(m);
+            while *n == 0 {
+                n = c.wait(n).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // exactly 3 requests queue up behind the parked worker
+        let handles: Vec<PredictHandle> = (0..3u16)
+            .map(|i| {
+                service.submit(PredictRequest::new(vec![chain_sample(2 + i, 0.0)])).unwrap()
+            })
+            .collect();
+        assert_eq!(service.stats().peak_queue, 3);
+        {
+            let (m, c) = &*release;
+            *lock(m) = true;
+            c.notify_all();
+        }
+        h0.wait().unwrap();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert_eq!(
+            service.stats().peak_queue,
+            3,
+            "peak is a high-water mark, not the current depth"
+        );
+    }
+
+    #[test]
+    fn stress_keyed_traffic_accounts_hits_and_misses() {
+        // concurrent clients hammer 5 distinct keys: every keyed sample
+        // must be accounted as exactly one hit or one miss, and each
+        // distinct key must be evaluated exactly once (workers = 1, so
+        // drains are sequential and memoization races cannot double-count)
+        let service = Arc::new(const_service(1.0));
+        let n_threads = 6usize;
+        let per_thread = 20usize;
+        std::thread::scope(|scope| {
+            for th in 0..n_threads {
+                let svc = Arc::clone(&service);
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        let kix = (th + i) % 5;
+                        let tag = kix.to_string();
+                        let k = cache_key(&["stress", tag.as_str()]);
+                        let req = PredictRequest::with_keys(
+                            vec![chain_sample((1 + kix) as u16, 0.1)],
+                            vec![Some(k)],
+                        );
+                        let r = svc.predict_blocking(req).unwrap();
+                        assert_eq!(r.predictions, vec![(1 + kix) as f64]);
+                    }
+                });
+            }
+        });
+        let stats = service.stats();
+        let total = n_threads * per_thread;
+        assert_eq!(stats.requests, total);
+        assert_eq!(
+            stats.cache_hits + stats.cache_misses,
+            total,
+            "every keyed sample is exactly one hit or one miss: {stats:?}"
+        );
+        assert_eq!(stats.cache_misses, 5, "each distinct key misses exactly once");
+        assert_eq!(stats.samples_evaluated, 5);
+        assert!(stats.peak_queue >= 1, "concurrent clients must have queued");
     }
 
     #[test]

@@ -76,8 +76,9 @@ pub trait Backend: Send + Sync {
     /// Predict mean runtimes in seconds for any number of samples of any
     /// size; samples are packed into batches internally. Backends may
     /// override this to parallelize over batch chunks (the native backend
-    /// does); each chunk must go through [`predict_chunk`] so the
-    /// inference convention stays shared.
+    /// does, balancing chunks by total packed nodes so one big graph
+    /// cannot straggle); each chunk must go through [`predict_chunk`] so
+    /// the inference convention stays shared.
     fn predict_runtimes(
         &self,
         params: &Params,

@@ -16,9 +16,11 @@
 
 pub mod backend;
 pub mod dense_ref;
+pub(crate) mod kernels;
 pub mod manifest;
 pub mod native;
 pub mod params;
+pub mod workspace;
 
 #[cfg(feature = "pjrt")]
 pub mod gcn;
@@ -32,3 +34,4 @@ pub use gcn::GcnRuntime;
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 pub use params::Params;
+pub use workspace::{Workspace, WorkspaceStats};

@@ -13,14 +13,36 @@
 //!   backprop through the whole network, and an Adagrad step with weight
 //!   decay — semantically identical to `model.train_step`.
 //!
-//! Unlike the padded dense layout (kept behind the `pjrt` feature and in
-//! [`crate::runtime::DenseRefBackend`]), the packed layout holds exactly
-//! the real nodes of every graph: the dense projections (embedding and
-//! per-conv `E · W`) run as blocked GEMMs over the packed node matrix and
-//! the aggregation `A' · t` is an O(E) gather over the CSR rows — no
-//! `MAX_NODES` cap, no O(N²) adjacency sweeps over padding. Row blocks
-//! fan out over [`crate::util::threadpool`] when a batch is large enough
-//! to pay for it.
+//! The compute core is organized for the serving layer's traffic
+//! (PR 5 — see DESIGN.md §"Native engine: workspace & kernels"):
+//!
+//! * **Workspace memory.** Every buffer the engine touches comes from a
+//!   recycled [`Workspace`] arena (a backend-owned pool at the public
+//!   entry points — warm even for the short-lived scoped workers of a
+//!   `predict_runtimes` fan-out — caller-held for tests/benches).
+//!   Parallel row fills write blocks *directly* into one preallocated
+//!   output via [`crate::util::threadpool::split_rows`] — no per-block
+//!   staging `Vec`s, no join-time re-copy — so repeated
+//!   `infer`/`train_step` calls do no steady-state node-matrix
+//!   allocation at all (pinned by the allocation-budget test below).
+//! * **Inference fast path.** [`Backend::infer`] never materializes the
+//!   training `Forward` stash: it ping-pongs two node matrices
+//!   (activations and the `E·W` projection), fuses the CSR gather with
+//!   bias/norm/ReLU per row, and folds the segment-sum readout
+//!   incrementally per conv level. `PredictService`, `predict_runtimes`
+//!   and the `PredictorCost` search bridge all reach inference through
+//!   this path. The fast path and the training forward share the
+//!   `runtime::kernels` microkernels and the same per-accumulator
+//!   summation chains, so their outputs are bit-identical (pinned
+//!   against the zoo, incl. the 59-stage `resnet50`).
+//! * **Tiled kernels + parallel backward.** The embedding/conv GEMMs run
+//!   as register-tiled panels over `chunks_exact` (f64 accumulation in
+//!   the pre-tiled chain order, so the JAX parity fixtures still pass at
+//!   ≤1e-5), and `backward` fans out over *graph-aligned* row blocks
+//!   ([`PackedBatch::graph_blocks`]): the block-diagonal adjacency keeps
+//!   every block self-contained, each worker accumulates private
+//!   gradients, and the per-block results are reduced in fixed block
+//!   order — bitwise-deterministic for any thread count.
 //!
 //! Tensor math accumulates in `f64` and stores `f32` at the same op
 //! boundaries as the JAX model; because CSR rows keep ascending column
@@ -31,21 +53,28 @@
 //! numbers via `PackedBatch::from_dense` over the dense fixtures.
 //!
 //! [`Backend::predict_runtimes`] is overridden to fan batch chunks out
-//! over the thread pool, which is what lets beam search and the eval
-//! harnesses amortize model queries across cores.
+//! over the thread pool, balancing chunks by total packed *nodes* (not
+//! graph count) so one giant graph cannot straggle behind a queue of
+//! tiny ones.
 
 use crate::constants::{
     ADAGRAD_EPS, BATCH, DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, NODE_DIM, N_CONV,
 };
 use crate::dataset::sample::GraphSample;
 use crate::features::normalize::FeatureStats;
-use crate::model::PackedBatch;
+use crate::model::{Csr, PackedBatch};
 use crate::runtime::backend::{predict_chunk, Backend};
+use crate::runtime::kernels;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::Params;
-use crate::util::threadpool::{chunk_ranges, parallel_map};
+use crate::runtime::workspace::{Workspace, WorkspaceStats};
+use crate::util::threadpool::{
+    chunk_ranges, num_threads, parallel_map, parallel_map_vec, parallel_map_vec_threads,
+    split_rows,
+};
 use anyhow::{ensure, Result};
 use std::ops::Range;
+use std::sync::Mutex;
 
 // The conv math below indexes weight tensors of manifest shape
 // [HIDDEN, HIDDEN] with NODE_DIM strides; that is only sound while the
@@ -66,39 +95,97 @@ pub(crate) const LOSS_CLIP: f64 = 3.0;
 /// batch level, so in-batch blocking only needs to win on big graphs.
 const PAR_MIN_ROWS: usize = 512;
 
-/// Fill a row-major `[n_rows, width]` f32 matrix, parallel over
+/// Node budget per graph-aligned backward block. Fixed — never derived
+/// from the thread count — so the block partition, and therefore the
+/// order in which per-block gradient accumulators are reduced, depends
+/// only on the batch: parallel backward is bitwise-deterministic across
+/// thread counts.
+const BACKWARD_BLOCK_NODES: usize = 512;
+
+/// Fill a row-major `[n_rows, width]` f32 matrix in place, parallel over
 /// contiguous row blocks on the shared thread pool when the batch is
-/// large. Deterministic: each row depends only on its own index.
-fn par_rows<F>(n_rows: usize, width: usize, f: F) -> Vec<f32>
+/// large. Workers write their block directly into `out` (disjoint
+/// sub-slices via [`split_rows`]) — no per-block staging buffer, no
+/// re-copy. Deterministic: each row depends only on its own index.
+fn par_rows_into<F>(n_rows: usize, width: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
-    let ranges = chunk_ranges(n_rows, PAR_MIN_ROWS);
-    if ranges.len() <= 1 {
-        let mut out = vec![0f32; n_rows * width];
+    debug_assert_eq!(out.len(), n_rows * width);
+    let serial = |out: &mut [f32]| {
         for (r, row) in out.chunks_mut(width.max(1)).enumerate() {
             f(r, row);
         }
-        return out;
+    };
+    if n_rows <= PAR_MIN_ROWS {
+        // below the fan-out threshold: no range bookkeeping, no allocs
+        serial(out);
+        return;
     }
-    let parts = parallel_map(&ranges, |range| {
-        let mut block = vec![0f32; range.len() * width];
+    let ranges = chunk_ranges(n_rows, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        serial(out);
+        return;
+    }
+    let blocks: Vec<(Range<usize>, &mut [f32])> =
+        ranges.iter().cloned().zip(split_rows(out, &ranges, width)).collect();
+    parallel_map_vec(blocks, |(range, block)| {
         for (i, row) in block.chunks_mut(width.max(1)).enumerate() {
             f(range.start + i, row);
         }
-        block
     });
-    let mut out = Vec::with_capacity(n_rows * width);
-    for p in parts {
-        out.extend_from_slice(&p);
-    }
-    out
 }
 
-/// The native engine. Stateless apart from its manifest; cheap to build
-/// and `Sync`, so inference parallelizes freely.
+/// Contiguous sample chunks balanced by total packed **nodes**, capped
+/// at [`BATCH`] graphs each. A 59-stage `resnet50` schedule is an order
+/// of magnitude more work than a generator pipeline, so fixed
+/// graph-count chunks leave whichever worker draws the big graphs
+/// straggling; node-budget chunks equalize work instead. Several chunks
+/// per worker are produced so the claim-one-at-a-time scheduler can
+/// smooth the residual imbalance. Predictions are chunk-invariant (the
+/// packed layout is block-diagonal), so this is purely a scheduling
+/// policy.
+pub(crate) fn balanced_chunks<'s, 'a>(
+    samples: &'s [&'a GraphSample],
+    workers: usize,
+) -> Vec<&'s [&'a GraphSample]> {
+    if samples.is_empty() {
+        return Vec::new();
+    }
+    let total_nodes: usize = samples.iter().map(|s| s.n_stages as usize).sum();
+    let want = (workers.max(1) * 4).max(1);
+    let budget = total_nodes.div_ceil(want).max(1);
+    let mut chunks = Vec::new();
+    let (mut start, mut acc) = (0usize, 0usize);
+    for (i, s) in samples.iter().enumerate() {
+        let n = (s.n_stages as usize).max(1);
+        if i > start && (acc + n > budget || i - start >= BATCH) {
+            chunks.push(&samples[start..i]);
+            start = i;
+            acc = 0;
+        }
+        acc += n;
+    }
+    chunks.push(&samples[start..]);
+    chunks
+}
+
+/// Upper bound on idle pooled workspaces per backend. Each concurrent
+/// caller holds at most one; anything beyond the fan-out width is idle
+/// memory.
+const WS_POOL_CAP: usize = 32;
+
+/// The native engine: its manifest plus a pool of warm [`Workspace`]
+/// arenas. Model state is immutable, so inference parallelizes freely;
+/// the pool is the one synchronized bit (lock held only to pop/push).
 pub struct NativeBackend {
     manifest: Manifest,
+    /// Warm buffer arenas shared across *calling threads*. A
+    /// thread-local arena would start cold on every `predict_runtimes`
+    /// fan-out (the thread pool spawns fresh scoped workers per call),
+    /// re-paying all node-matrix allocations per chunk; a backend-owned
+    /// pool keeps buffers warm no matter which thread runs the kernels.
+    ws_pool: Mutex<Vec<Workspace>>,
 }
 
 impl Default for NativeBackend {
@@ -115,7 +202,38 @@ impl NativeBackend {
 
     /// A conv-depth ablation variant (§III-C sweep: 0/1/2/4 layers).
     pub fn with_layers(n_conv: usize) -> NativeBackend {
-        NativeBackend { manifest: Manifest::native(n_conv) }
+        NativeBackend { manifest: Manifest::native(n_conv), ws_pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Run `f` with a warm workspace from the backend's shared pool
+    /// (fresh on first use; returned afterwards so the buffers recycle).
+    /// A panicking `f` drops its workspace instead of poisoning state.
+    fn with_ws<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let mut ws = self
+            .ws_pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default();
+        let r = f(&mut ws);
+        let mut pool = self.ws_pool.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < WS_POOL_CAP {
+            pool.push(ws);
+        }
+        r
+    }
+
+    /// Aggregate buffer-reuse counters over the currently idle pooled
+    /// workspaces (in-flight ones are counted once they return).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        let pool = self.ws_pool.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = WorkspaceStats::default();
+        for ws in pool.iter() {
+            let s = ws.stats();
+            out.hits += s.hits;
+            out.misses += s.misses;
+        }
+        out
     }
 
     fn n_conv(&self) -> usize {
@@ -135,35 +253,30 @@ impl NativeBackend {
         check_params_against(&self.manifest, params)
     }
 
-    /// Full forward pass, keeping every intermediate backprop needs.
-    fn forward(&self, params: &Params, batch: &PackedBatch) -> Forward {
+    /// Full training forward pass, keeping every intermediate backprop
+    /// needs. All buffers come from (and are later recycled into) `ws`.
+    fn forward(&self, params: &Params, batch: &PackedBatch, ws: &mut Workspace) -> Forward {
         let kk = self.n_conv();
         let readout = self.readout();
         let nn = batch.total_nodes();
         let nb = batch.n_graphs();
 
         // ---- Fig 5 embedding: e0 = relu(inv·Wi + bi) ++ relu(dep·Wd + bd)
-        // — a blocked GEMM over the packed node matrix (every row is real;
-        // the packed layout has no padding nodes to skip).
+        // — tiled rank-1-update GEMM over the packed node matrix (every
+        // row is real; the packed layout has no padding nodes to skip).
         let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
         let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
-        let e0 = par_rows(nn, NODE_DIM, |node, out| {
-            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
-            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
-            for j in 0..EMB_INV {
-                let mut acc = b_inv[j] as f64;
-                for (i, &x) in inv.iter().enumerate() {
-                    acc += x as f64 * w_inv[i * EMB_INV + j] as f64;
-                }
-                out[j] = acc.max(0.0) as f32;
-            }
-            for j in 0..EMB_DEP {
-                let mut acc = b_dep[j] as f64;
-                for (i, &x) in dep.iter().enumerate() {
-                    acc += x as f64 * w_dep[i * EMB_DEP + j] as f64;
-                }
-                out[EMB_INV + j] = acc.max(0.0) as f32;
-            }
+        let mut e0 = ws.take_f32(nn * NODE_DIM);
+        par_rows_into(nn, NODE_DIM, &mut e0, |node, out| {
+            kernels::embed_row(
+                &batch.inv[node * INV_DIM..(node + 1) * INV_DIM],
+                &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM],
+                w_inv,
+                b_inv,
+                w_dep,
+                b_dep,
+                out,
+            );
         });
 
         let mut e_list = Vec::with_capacity(kk + 1);
@@ -171,6 +284,7 @@ impl NativeBackend {
         let mut h_list = Vec::with_capacity(kk);
         let mut xhat_list = Vec::with_capacity(kk);
         let mut rstd_list = Vec::with_capacity(kk);
+        let mut t = ws.take_f32(nn * NODE_DIM);
 
         // ---- graph convolutions
         for k in 0..kk {
@@ -180,229 +294,193 @@ impl NativeBackend {
             let shift = &params.values[7 + 4 * k];
             let e_prev = &e_list[k];
 
-            // t = E · W per node — blocked GEMM, exploiting ReLU sparsity
-            let t = par_rows(nn, NODE_DIM, |node, t_row| {
-                let e_row = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
-                let mut acc = [0f64; NODE_DIM];
-                for (i, &x) in e_row.iter().enumerate() {
-                    if x == 0.0 {
-                        continue;
-                    }
-                    let xf = x as f64;
-                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
-                    for j in 0..NODE_DIM {
-                        acc[j] += xf * wrow[j] as f64;
-                    }
-                }
-                for j in 0..NODE_DIM {
-                    t_row[j] = acc[j] as f32;
-                }
+            // t = E · W per node — tiled GEMM, exploiting ReLU sparsity
+            par_rows_into(nn, NODE_DIM, &mut t, |node, t_row| {
+                kernels::gemm_row(&e_prev[node * NODE_DIM..(node + 1) * NODE_DIM], w, t_row);
             });
 
             // c = A' · t + b (O(E) gather over the CSR row), then per-node
-            // channel norm and ReLU — fused, parallel over row blocks
-            let conv = par_conv(batch, &t, bvec, scale, shift);
-            h_list.push(conv.h);
-            xhat_list.push(conv.xhat);
-            rstd_list.push(conv.rstd);
-            e_list.push(conv.e_next);
+            // channel norm and ReLU — fused, parallel over row blocks,
+            // stashing h/xhat/rstd for backprop
+            let mut h = ws.take_f32(nn * NODE_DIM);
+            let mut xhat = ws.take_f32(nn * NODE_DIM);
+            let mut e_next = ws.take_f32(nn * NODE_DIM);
+            let mut rstd = ws.take_f32(nn);
+            par_conv_train(
+                batch,
+                &t,
+                bvec,
+                scale,
+                shift,
+                &mut h,
+                &mut xhat,
+                &mut e_next,
+                &mut rstd,
+            );
+            h_list.push(h);
+            xhat_list.push(xhat);
+            rstd_list.push(rstd);
+            e_list.push(e_next);
         }
+        ws.recycle_f32(t);
 
         // ---- segment-sum readout per conv level + linear head
         let w_out = &params.values[self.p_w_out()];
         let b_out = &params.values[self.p_w_out() + 1];
-        let mut feat = vec![0f32; nb * readout];
-        let mut z = vec![0f32; nb];
+        let mut feat = ws.take_f32(nb * readout);
+        for (k, e) in e_list.iter().enumerate() {
+            kernels::readout_level(batch, e, k, readout, &mut feat);
+        }
+        let mut z = ws.take_f32(nb);
         for g in 0..nb {
-            for (k, e) in e_list.iter().enumerate() {
-                let f_off = g * readout + k * NODE_DIM;
-                for node in batch.graph_nodes(g) {
-                    let row = &e[node * NODE_DIM..(node + 1) * NODE_DIM];
-                    for j in 0..NODE_DIM {
-                        feat[f_off + j] += row[j];
-                    }
-                }
-            }
-            let mut acc = b_out[0] as f64;
-            for r in 0..readout {
-                acc += feat[g * readout + r] as f64 * w_out[r] as f64;
-            }
-            z[g] = acc as f32;
+            z[g] = kernels::head_row(&feat[g * readout..(g + 1) * readout], w_out, b_out[0]);
         }
 
         Forward { e: e_list, h: h_list, xhat: xhat_list, rstd: rstd_list, feat, z }
     }
 
+    /// Inference fast path: the same kernel chain as [`Self::forward`],
+    /// but ping-ponging two node matrices and folding the readout
+    /// incrementally per level — the training stash (`h`/`xhat`/`rstd`,
+    /// the per-level activation list) is never materialized. Outputs are
+    /// bit-identical to the training forward's `z`.
+    fn infer_ws(&self, params: &Params, batch: &PackedBatch, ws: &mut Workspace) -> Vec<f32> {
+        let kk = self.n_conv();
+        let readout = self.readout();
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
+
+        let mut e = ws.take_f32(nn * NODE_DIM);
+        let mut t = ws.take_f32(nn * NODE_DIM);
+        let mut feat = ws.take_f32(nb * readout);
+
+        let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
+        let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
+        par_rows_into(nn, NODE_DIM, &mut e, |node, out| {
+            kernels::embed_row(
+                &batch.inv[node * INV_DIM..(node + 1) * INV_DIM],
+                &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM],
+                w_inv,
+                b_inv,
+                w_dep,
+                b_dep,
+                out,
+            );
+        });
+        kernels::readout_level(batch, &e, 0, readout, &mut feat);
+
+        for k in 0..kk {
+            let w = &params.values[4 + 4 * k];
+            let bvec = &params.values[5 + 4 * k];
+            let scale = &params.values[6 + 4 * k];
+            let shift = &params.values[7 + 4 * k];
+            par_rows_into(nn, NODE_DIM, &mut t, |node, t_row| {
+                kernels::gemm_row(&e[node * NODE_DIM..(node + 1) * NODE_DIM], w, t_row);
+            });
+            // the gather reads only `t`, so the activations regenerate
+            // in place over the dead previous level
+            par_rows_into(nn, NODE_DIM, &mut e, |node, row| {
+                kernels::conv_row_infer(batch, &t, node, bvec, scale, shift, row);
+            });
+            kernels::readout_level(batch, &e, k + 1, readout, &mut feat);
+        }
+
+        let w_out = &params.values[self.p_w_out()];
+        let b_out = &params.values[self.p_w_out() + 1];
+        let mut z = Vec::with_capacity(nb);
+        for g in 0..nb {
+            z.push(kernels::head_row(&feat[g * readout..(g + 1) * readout], w_out, b_out[0]));
+        }
+        ws.recycle_f32(e);
+        ws.recycle_f32(t);
+        ws.recycle_f32(feat);
+        z
+    }
+
+    /// The training-path forward (full intermediate materialization),
+    /// returning only `z`. Exists so the parity tests and the engine
+    /// micro-bench can compare the fast path against the full forward.
+    pub(crate) fn infer_full(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        Ok(self.with_ws(|ws| {
+            let fwd = self.forward(params, batch, ws);
+            let z = fwd.z.clone();
+            recycle_forward(ws, fwd);
+            z
+        }))
+    }
+
     /// Analytic gradients of the §III-C loss w.r.t. every parameter
     /// (weight decay is applied later, in the Adagrad step — matching
-    /// `model.train_step`). Sequential over packed nodes in graph order,
-    /// which keeps the accumulation order of the pre-sparse engine.
-    fn backward(
+    /// `model.train_step`), parallel over graph-aligned row blocks with
+    /// `threads` workers. Each block runs the entire backward pass for
+    /// its graphs (the block-diagonal adjacency keeps it self-contained)
+    /// into private gradient accumulators; block results are reduced in
+    /// fixed block order, so the output is bitwise-identical for every
+    /// `threads` value.
+    fn backward_threads(
         &self,
         params: &Params,
         batch: &PackedBatch,
         fwd: &Forward,
         dz: &[f64],
+        ws: &mut Workspace,
+        threads: usize,
     ) -> Vec<Vec<f64>> {
         let kk = self.n_conv();
         let readout = self.readout();
         let iw = self.p_w_out();
-        let w_out = &params.values[iw];
         let nn = batch.total_nodes();
-        let nb = batch.n_graphs();
+        let blocks = batch.graph_blocks(BACKWARD_BLOCK_NODES);
+        // build the transpose once, before the fan-out
+        let adj_t = batch.adj_t();
+
+        let node_ranges: Vec<Range<usize>> = blocks
+            .iter()
+            .map(|gr| batch.node_offset[gr.start] as usize..batch.node_offset[gr.end] as usize)
+            .collect();
+
+        // per-block scratch: disjoint slices of four shared node buffers
+        let mut de_buf = ws.take_f64(nn * NODE_DIM);
+        let mut de_next_buf = ws.take_f64(nn * NODE_DIM);
+        let mut dc_buf = ws.take_f64(nn * NODE_DIM);
+        let mut dt_buf = ws.take_f64(nn * NODE_DIM);
+        let results = {
+            let mut de_parts = split_rows(&mut de_buf, &node_ranges, NODE_DIM).into_iter();
+            let mut de_next_parts =
+                split_rows(&mut de_next_buf, &node_ranges, NODE_DIM).into_iter();
+            let mut dc_parts = split_rows(&mut dc_buf, &node_ranges, NODE_DIM).into_iter();
+            let mut dt_parts = split_rows(&mut dt_buf, &node_ranges, NODE_DIM).into_iter();
+            let mut tasks = Vec::with_capacity(blocks.len());
+            for (gr, nr) in blocks.iter().zip(&node_ranges) {
+                tasks.push(BlockTask {
+                    graphs: gr.clone(),
+                    nodes: nr.clone(),
+                    de: de_parts.next().unwrap(),
+                    de_next: de_next_parts.next().unwrap(),
+                    dc: dc_parts.next().unwrap(),
+                    dt: dt_parts.next().unwrap(),
+                });
+            }
+            parallel_map_vec_threads(tasks, threads, |task| {
+                backward_block(params, batch, fwd, dz, adj_t, kk, readout, iw, task)
+            })
+        };
+        ws.recycle_f64(de_buf);
+        ws.recycle_f64(de_next_buf);
+        ws.recycle_f64(dc_buf);
+        ws.recycle_f64(dt_buf);
+
+        // deterministic reduction: block results added in block order
         let mut grads: Vec<Vec<f64>> =
             params.values.iter().map(|v| vec![0f64; v.len()]).collect();
-
-        // ---- head: z = feat · w_out + b_out
-        for g in 0..nb {
-            if dz[g] == 0.0 {
-                continue;
-            }
-            grads[iw + 1][0] += dz[g];
-            for r in 0..readout {
-                grads[iw][r] += fwd.feat[g * readout + r] as f64 * dz[g];
-            }
-        }
-
-        // dL/de for the deepest activations: the level-kk segment-sum
-        // readout broadcasts dz · w_out[kk·F + j] to every node of the
-        // graph.
-        let mut de = vec![0f64; nn * NODE_DIM];
-        for g in 0..nb {
-            if dz[g] == 0.0 {
-                continue;
-            }
-            for node in batch.graph_nodes(g) {
-                let o = node * NODE_DIM;
-                for j in 0..NODE_DIM {
-                    de[o + j] = dz[g] * w_out[kk * NODE_DIM + j] as f64;
+        for bg in results {
+            for (g, b) in grads.iter_mut().zip(bg) {
+                for (gi, bv) in g.iter_mut().zip(b) {
+                    *gi += bv;
                 }
             }
         }
-
-        // ---- conv layers, deepest first
-        for k in (0..kk).rev() {
-            let w = &params.values[4 + 4 * k];
-            let scale = &params.values[6 + 4 * k];
-            let h = &fwd.h[k];
-            let xh = &fwd.xhat[k];
-            let rstd = &fwd.rstd[k];
-            let e_prev = &fwd.e[k];
-
-            // ReLU + channel-norm backward: de -> dc (per node)
-            let mut dc = vec![0f64; nn * NODE_DIM];
-            for node in 0..nn {
-                let o = node * NODE_DIM;
-                let mut dxh = [0f64; NODE_DIM];
-                let mut sum1 = 0f64;
-                let mut sum2 = 0f64;
-                for j in 0..NODE_DIM {
-                    let dh = if h[o + j] > 0.0 { de[o + j] } else { 0.0 };
-                    grads[6 + 4 * k][j] += dh * xh[o + j] as f64;
-                    grads[7 + 4 * k][j] += dh;
-                    let dx = dh * scale[j] as f64;
-                    dxh[j] = dx;
-                    sum1 += dx;
-                    sum2 += dx * xh[o + j] as f64;
-                }
-                let rs = rstd[node] as f64;
-                for j in 0..NODE_DIM {
-                    let v =
-                        rs * (dxh[j] - (sum1 + xh[o + j] as f64 * sum2) / NODE_DIM as f64);
-                    dc[o + j] = v;
-                    grads[5 + 4 * k][j] += v;
-                }
-            }
-
-            // dt = A'ᵀ · dc — O(E) gather over the transpose CSR (built
-            // lazily on the batch's first train step; ascending source
-            // rows keep the dense accumulation order)
-            let adj_t = batch.adj_t();
-            let mut dt = vec![0f64; nn * NODE_DIM];
-            for node in 0..nn {
-                let (rows, vals) = adj_t.row(node);
-                let o = node * NODE_DIM;
-                for (&r, &a) in rows.iter().zip(vals) {
-                    let af = a as f64;
-                    let src = &dc[r as usize * NODE_DIM..(r as usize + 1) * NODE_DIM];
-                    for j in 0..NODE_DIM {
-                        dt[o + j] += af * src[j];
-                    }
-                }
-            }
-
-            // de_prev = dt · Wᵀ and dW += e_prevᵀ · dt
-            let mut de_new = vec![0f64; nn * NODE_DIM];
-            for node in 0..nn {
-                let o = node * NODE_DIM;
-                let dtrow = &dt[o..o + NODE_DIM];
-                let erow = &e_prev[o..o + NODE_DIM];
-                for i in 0..NODE_DIM {
-                    let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
-                    let mut acc = 0f64;
-                    for j in 0..NODE_DIM {
-                        acc += dtrow[j] * wrow[j] as f64;
-                    }
-                    de_new[o + i] = acc;
-                    let ev = erow[i] as f64;
-                    if ev != 0.0 {
-                        let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
-                        for j in 0..NODE_DIM {
-                            gw[j] += ev * dtrow[j];
-                        }
-                    }
-                }
-            }
-
-            // segment-sum readout gradient for level k
-            for g in 0..nb {
-                if dz[g] == 0.0 {
-                    continue;
-                }
-                for node in batch.graph_nodes(g) {
-                    let o = node * NODE_DIM;
-                    for j in 0..NODE_DIM {
-                        de_new[o + j] += dz[g] * w_out[k * NODE_DIM + j] as f64;
-                    }
-                }
-            }
-            de = de_new;
-        }
-
-        // ---- embedding backward
-        let e0 = &fwd.e[0];
-        for node in 0..nn {
-            let o = node * NODE_DIM;
-            let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
-            let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
-            for j in 0..EMB_INV {
-                if e0[o + j] <= 0.0 {
-                    continue;
-                }
-                let g = de[o + j];
-                if g == 0.0 {
-                    continue;
-                }
-                grads[1][j] += g;
-                for (i, &x) in inv.iter().enumerate() {
-                    grads[0][i * EMB_INV + j] += x as f64 * g;
-                }
-            }
-            for j in 0..EMB_DEP {
-                if e0[o + EMB_INV + j] <= 0.0 {
-                    continue;
-                }
-                let g = de[o + EMB_INV + j];
-                if g == 0.0 {
-                    continue;
-                }
-                grads[3][j] += g;
-                for (i, &x) in dep.iter().enumerate() {
-                    grads[2][i * EMB_DEP + j] += x as f64 * g;
-                }
-            }
-        }
-
         grads
     }
 }
@@ -428,87 +506,272 @@ pub(crate) fn check_params_against(manifest: &Manifest, params: &Params) -> Resu
     Ok(())
 }
 
-/// One conv layer's fused aggregate+norm+ReLU output rows.
-struct ConvRows {
-    h: Vec<f32>,
-    xhat: Vec<f32>,
-    e_next: Vec<f32>,
-    rstd: Vec<f32>,
+/// Training conv layer, parallel over row blocks: gather + norm + ReLU
+/// per node, writing `h`/`xhat`/`e_next`/`rstd` directly into the
+/// caller's buffers (disjoint block slices — no staging copies).
+fn par_conv_train(
+    batch: &PackedBatch,
+    t: &[f32],
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+    h: &mut [f32],
+    xhat: &mut [f32],
+    e_next: &mut [f32],
+    rstd: &mut [f32],
+) {
+    let nn = batch.total_nodes();
+    if nn <= PAR_MIN_ROWS {
+        conv_train_block(batch, t, bvec, scale, shift, 0..nn, h, xhat, e_next, rstd);
+        return;
+    }
+    let ranges = chunk_ranges(nn, PAR_MIN_ROWS);
+    if ranges.len() <= 1 {
+        conv_train_block(batch, t, bvec, scale, shift, 0..nn, h, xhat, e_next, rstd);
+        return;
+    }
+    let mut hs = split_rows(h, &ranges, NODE_DIM).into_iter();
+    let mut xs = split_rows(xhat, &ranges, NODE_DIM).into_iter();
+    let mut es = split_rows(e_next, &ranges, NODE_DIM).into_iter();
+    let mut rs = split_rows(rstd, &ranges, 1).into_iter();
+    let mut tasks = Vec::with_capacity(ranges.len());
+    for range in &ranges {
+        tasks.push((
+            range.clone(),
+            hs.next().unwrap(),
+            xs.next().unwrap(),
+            es.next().unwrap(),
+            rs.next().unwrap(),
+        ));
+    }
+    parallel_map_vec(tasks, |(range, h, x, e, r)| {
+        conv_train_block(batch, t, bvec, scale, shift, range, h, x, e, r)
+    });
 }
 
-fn conv_block(
+/// One contiguous row block of the training conv layer. Free function
+/// (not a closure) so it can be called with block slices of any
+/// lifetime from both the serial and the parallel paths.
+fn conv_train_block(
     batch: &PackedBatch,
     t: &[f32],
     bvec: &[f32],
     scale: &[f32],
     shift: &[f32],
     range: Range<usize>,
-) -> ConvRows {
-    let n = range.len();
-    let mut out = ConvRows {
-        h: vec![0f32; n * NODE_DIM],
-        xhat: vec![0f32; n * NODE_DIM],
-        e_next: vec![0f32; n * NODE_DIM],
-        rstd: vec![0f32; n],
-    };
+    h: &mut [f32],
+    xhat: &mut [f32],
+    e_next: &mut [f32],
+    rstd: &mut [f32],
+) {
     for (i, node) in range.enumerate() {
-        let (cols, vals) = batch.adj.row(node);
-        let mut c = [0f64; NODE_DIM];
-        for (&cix, &a) in cols.iter().zip(vals) {
-            let af = a as f64;
-            let t_row = &t[cix as usize * NODE_DIM..(cix as usize + 1) * NODE_DIM];
+        let o = i * NODE_DIM;
+        rstd[i] = kernels::conv_row_train(
+            batch,
+            t,
+            node,
+            bvec,
+            scale,
+            shift,
+            &mut h[o..o + NODE_DIM],
+            &mut xhat[o..o + NODE_DIM],
+            &mut e_next[o..o + NODE_DIM],
+        );
+    }
+}
+
+/// One backward block: the graphs `graphs` (packed nodes `nodes`) plus
+/// this block's disjoint slices of the shared scratch buffers. All node
+/// indices inside the scratch slices are block-local (`global - nodes.start`);
+/// reads of the forward stash and the batch stay global.
+struct BlockTask<'a> {
+    graphs: Range<usize>,
+    nodes: Range<usize>,
+    de: &'a mut [f64],
+    de_next: &'a mut [f64],
+    dc: &'a mut [f64],
+    dt: &'a mut [f64],
+}
+
+/// Run the entire backward pass for one graph-aligned block, returning
+/// the block's private gradient accumulators (summed into the final
+/// gradients in block order by the caller).
+fn backward_block(
+    params: &Params,
+    batch: &PackedBatch,
+    fwd: &Forward,
+    dz: &[f64],
+    adj_t: &Csr,
+    kk: usize,
+    readout: usize,
+    iw: usize,
+    task: BlockTask<'_>,
+) -> Vec<Vec<f64>> {
+    let BlockTask { graphs, nodes, mut de, mut de_next, dc, dt } = task;
+    let base = nodes.start;
+    let nloc = nodes.len();
+    let w_out = &params.values[iw];
+    let mut grads: Vec<Vec<f64>> = params.values.iter().map(|v| vec![0f64; v.len()]).collect();
+
+    // ---- head: z = feat · w_out + b_out
+    for g in graphs.clone() {
+        if dz[g] == 0.0 {
+            continue;
+        }
+        grads[iw + 1][0] += dz[g];
+        for r in 0..readout {
+            grads[iw][r] += fwd.feat[g * readout + r] as f64 * dz[g];
+        }
+    }
+
+    // dL/de for the deepest activations: the level-kk segment-sum
+    // readout broadcasts dz · w_out[kk·F + j] to every node of the graph.
+    for v in de.iter_mut() {
+        *v = 0.0;
+    }
+    for g in graphs.clone() {
+        if dz[g] == 0.0 {
+            continue;
+        }
+        for node in batch.graph_nodes(g) {
+            let lo = (node - base) * NODE_DIM;
             for j in 0..NODE_DIM {
-                c[j] += af * t_row[j] as f64;
+                de[lo + j] = dz[g] * w_out[kk * NODE_DIM + j] as f64;
             }
         }
-        for j in 0..NODE_DIM {
-            c[j] += bvec[j] as f64;
+    }
+
+    // ---- conv layers, deepest first
+    for k in (0..kk).rev() {
+        let w = &params.values[4 + 4 * k];
+        let scale = &params.values[6 + 4 * k];
+        let h = &fwd.h[k];
+        let xh = &fwd.xhat[k];
+        let rstd = &fwd.rstd[k];
+        let e_prev = &fwd.e[k];
+
+        // ReLU + channel-norm backward: de -> dc (per node)
+        for ln in 0..nloc {
+            let node = base + ln;
+            let o = node * NODE_DIM;
+            let lo = ln * NODE_DIM;
+            let mut dxh = [0f64; NODE_DIM];
+            let mut sum1 = 0f64;
+            let mut sum2 = 0f64;
+            for j in 0..NODE_DIM {
+                let dh = if h[o + j] > 0.0 { de[lo + j] } else { 0.0 };
+                grads[6 + 4 * k][j] += dh * xh[o + j] as f64;
+                grads[7 + 4 * k][j] += dh;
+                let dx = dh * scale[j] as f64;
+                dxh[j] = dx;
+                sum1 += dx;
+                sum2 += dx * xh[o + j] as f64;
+            }
+            let rs = rstd[node] as f64;
+            for j in 0..NODE_DIM {
+                let v = rs * (dxh[j] - (sum1 + xh[o + j] as f64 * sum2) / NODE_DIM as f64);
+                dc[lo + j] = v;
+                grads[5 + 4 * k][j] += v;
+            }
         }
-        let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
-        let var = c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
-        let rs = 1.0 / (var + LN_EPS).sqrt();
-        out.rstd[i] = rs as f32;
-        let o = i * NODE_DIM;
-        for j in 0..NODE_DIM {
-            let xh = (c[j] - mean) * rs;
-            out.xhat[o + j] = xh as f32;
-            let hv = xh * scale[j] as f64 + shift[j] as f64;
-            out.h[o + j] = hv as f32;
-            out.e_next[o + j] = hv.max(0.0) as f32;
+
+        // dt = A'ᵀ · dc — O(E) gather over the transpose CSR. The
+        // adjacency is block-diagonal and the block is graph-aligned, so
+        // every referenced row lives inside this block's scratch.
+        for v in dt.iter_mut() {
+            *v = 0.0;
+        }
+        for ln in 0..nloc {
+            let (rows, vals) = adj_t.row(base + ln);
+            let lo = ln * NODE_DIM;
+            for (&r, &a) in rows.iter().zip(vals) {
+                let af = a as f64;
+                let src = &dc[(r as usize - base) * NODE_DIM..(r as usize - base + 1) * NODE_DIM];
+                for j in 0..NODE_DIM {
+                    dt[lo + j] += af * src[j];
+                }
+            }
+        }
+
+        // de_prev = dt · Wᵀ and dW += e_prevᵀ · dt
+        for ln in 0..nloc {
+            let node = base + ln;
+            let lo = ln * NODE_DIM;
+            let dtrow = &dt[lo..lo + NODE_DIM];
+            let erow = &e_prev[node * NODE_DIM..(node + 1) * NODE_DIM];
+            for i in 0..NODE_DIM {
+                let wrow = &w[i * NODE_DIM..(i + 1) * NODE_DIM];
+                let mut acc = 0f64;
+                for j in 0..NODE_DIM {
+                    acc += dtrow[j] * wrow[j] as f64;
+                }
+                de_next[lo + i] = acc;
+                let ev = erow[i] as f64;
+                if ev != 0.0 {
+                    let gw = &mut grads[4 + 4 * k][i * NODE_DIM..(i + 1) * NODE_DIM];
+                    for j in 0..NODE_DIM {
+                        gw[j] += ev * dtrow[j];
+                    }
+                }
+            }
+        }
+
+        // segment-sum readout gradient for level k
+        for g in graphs.clone() {
+            if dz[g] == 0.0 {
+                continue;
+            }
+            for node in batch.graph_nodes(g) {
+                let lo = (node - base) * NODE_DIM;
+                for j in 0..NODE_DIM {
+                    de_next[lo + j] += dz[g] * w_out[k * NODE_DIM + j] as f64;
+                }
+            }
+        }
+        std::mem::swap(&mut de, &mut de_next);
+    }
+
+    // ---- embedding backward
+    let e0 = &fwd.e[0];
+    for ln in 0..nloc {
+        let node = base + ln;
+        let o = node * NODE_DIM;
+        let lo = ln * NODE_DIM;
+        let inv = &batch.inv[node * INV_DIM..(node + 1) * INV_DIM];
+        let dep = &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM];
+        for j in 0..EMB_INV {
+            if e0[o + j] <= 0.0 {
+                continue;
+            }
+            let g = de[lo + j];
+            if g == 0.0 {
+                continue;
+            }
+            grads[1][j] += g;
+            for (i, &x) in inv.iter().enumerate() {
+                grads[0][i * EMB_INV + j] += x as f64 * g;
+            }
+        }
+        for j in 0..EMB_DEP {
+            if e0[o + EMB_INV + j] <= 0.0 {
+                continue;
+            }
+            let g = de[lo + EMB_INV + j];
+            if g == 0.0 {
+                continue;
+            }
+            grads[3][j] += g;
+            for (i, &x) in dep.iter().enumerate() {
+                grads[2][i * EMB_DEP + j] += x as f64 * g;
+            }
         }
     }
-    out
+
+    grads
 }
 
-fn par_conv(
-    batch: &PackedBatch,
-    t: &[f32],
-    bvec: &[f32],
-    scale: &[f32],
-    shift: &[f32],
-) -> ConvRows {
-    let nn = batch.total_nodes();
-    let ranges = chunk_ranges(nn, PAR_MIN_ROWS);
-    if ranges.len() <= 1 {
-        return conv_block(batch, t, bvec, scale, shift, 0..nn);
-    }
-    let parts = parallel_map(&ranges, |r| conv_block(batch, t, bvec, scale, shift, r.clone()));
-    let mut out = ConvRows {
-        h: Vec::with_capacity(nn * NODE_DIM),
-        xhat: Vec::with_capacity(nn * NODE_DIM),
-        e_next: Vec::with_capacity(nn * NODE_DIM),
-        rstd: Vec::with_capacity(nn),
-    };
-    for p in parts {
-        out.h.extend_from_slice(&p.h);
-        out.xhat.extend_from_slice(&p.xhat);
-        out.e_next.extend_from_slice(&p.e_next);
-        out.rstd.extend_from_slice(&p.rstd);
-    }
-    out
-}
-
-/// Forward intermediates kept for the backward pass.
+/// Forward intermediates kept for the backward pass. Buffers are arena
+/// property: return them via [`recycle_forward`] after the step.
 struct Forward {
     /// Node activations per level: `e[k]` for k = 0..=n_conv, each flat
     /// `[total_nodes, NODE_DIM]`.
@@ -523,6 +786,24 @@ struct Forward {
     feat: Vec<f32>,
     /// Predicted log-runtime per graph.
     z: Vec<f32>,
+}
+
+/// Return every forward buffer to the workspace arena.
+fn recycle_forward(ws: &mut Workspace, fwd: Forward) {
+    for v in fwd.e {
+        ws.recycle_f32(v);
+    }
+    for v in fwd.h {
+        ws.recycle_f32(v);
+    }
+    for v in fwd.xhat {
+        ws.recycle_f32(v);
+    }
+    for v in fwd.rstd {
+        ws.recycle_f32(v);
+    }
+    ws.recycle_f32(fwd.feat);
+    ws.recycle_f32(fwd.z);
 }
 
 /// The §III-C ξ loss term and its derivative at `d = z − log ȳ`:
@@ -547,7 +828,7 @@ pub(crate) fn xi_and_grad(d: f64) -> (f64, f64) {
 
 /// §III-C loss and its gradient w.r.t. z: the `weight`-weighted mean of ξ
 /// over the batch's graphs.
-fn loss_and_dz(z: &[f32], batch: &PackedBatch) -> (f64, Vec<f64>) {
+pub(crate) fn loss_and_dz(z: &[f32], batch: &PackedBatch) -> (f64, Vec<f64>) {
     let nb = batch.n_graphs();
     let mut wsum = 0f64;
     for g in 0..nb {
@@ -598,10 +879,11 @@ impl Backend for NativeBackend {
         "native"
     }
 
+    /// The inference fast path (see `infer_ws`): zero steady-state node
+    /// allocation, no training stash.
     fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
         self.check_params(params)?;
-        let fwd = self.forward(params, batch);
-        Ok(fwd.z)
+        Ok(self.with_ws(|ws| self.infer_ws(params, batch, ws)))
     }
 
     fn train_step_lr(
@@ -613,17 +895,23 @@ impl Backend for NativeBackend {
     ) -> Result<f32> {
         self.check_params(params)?;
         self.check_params(accum)?;
-        let fwd = self.forward(params, batch);
-        let (loss, dz) = loss_and_dz(&fwd.z, batch);
-        let grads = self.backward(params, batch, &fwd, &dz);
-        apply_adagrad(params, accum, &grads, lr as f64, self.manifest.weight_decay);
+        let loss = self.with_ws(|ws| {
+            let fwd = self.forward(params, batch, ws);
+            let (loss, dz) = loss_and_dz(&fwd.z, batch);
+            let grads = self.backward_threads(params, batch, &fwd, &dz, ws, num_threads());
+            apply_adagrad(params, accum, &grads, lr as f64, self.manifest.weight_decay);
+            recycle_forward(ws, fwd);
+            loss
+        });
         Ok(loss as f32)
     }
 
-    /// Parallel over batch chunks: each worker packs its own batch and
-    /// runs the forward pass independently (the backend is stateless).
-    /// Every chunk goes through the same [`predict_chunk`] helper as the
-    /// sequential trait default.
+    /// Parallel over batch chunks balanced by total packed nodes: each
+    /// worker packs its own batch and runs the fast-path forward
+    /// independently (the backend is stateless). Every chunk goes
+    /// through the same [`predict_chunk`] helper as the sequential trait
+    /// default, and predictions are chunk-invariant, so the policy only
+    /// moves work between threads.
     fn predict_runtimes(
         &self,
         params: &Params,
@@ -631,10 +919,8 @@ impl Backend for NativeBackend {
         stats: &FeatureStats,
     ) -> Result<Vec<f64>> {
         self.check_params(params)?;
-        let chunks: Vec<&[&GraphSample]> = samples.chunks(BATCH).collect();
-        let outs = crate::util::threadpool::parallel_map(&chunks, |chunk| {
-            predict_chunk(self, params, chunk, stats)
-        });
+        let chunks = balanced_chunks(samples, num_threads());
+        let outs = parallel_map(&chunks, |chunk| predict_chunk(self, params, chunk, stats));
         let mut out = Vec::with_capacity(samples.len());
         for r in outs {
             out.extend(r?);
@@ -648,9 +934,10 @@ mod tests {
     use super::*;
     use crate::runtime::dense_ref::DenseRefBackend;
     use crate::testfix::{
-        grad_fixture_batch, identity_stats, parity_batch, parity_params, synth_packed_batch,
-        synth_sample, REF_GRADS, REF_LOSS, REF_Z,
+        chain_sample, grad_fixture_batch, identity_stats, parity_batch, parity_params,
+        synth_packed_batch, synth_sample, REF_GRADS, REF_LOSS, REF_Z,
     };
+    use crate::util::alloc_count::thread_alloc_count;
     use crate::util::propcheck;
     use crate::util::rng::Rng;
 
@@ -676,13 +963,14 @@ mod tests {
         let be = NativeBackend::new();
         let batch = PackedBatch::from_dense(&grad_fixture_batch()).unwrap();
         let params = parity_params(be.manifest());
-        let fwd = be.forward(&params, &batch);
+        let mut ws = Workspace::new();
+        let fwd = be.forward(&params, &batch, &mut ws);
         let (loss, dz) = loss_and_dz(&fwd.z, &batch);
         assert!(
             (loss - REF_LOSS).abs() < 5e-3,
             "loss {loss} vs jax reference {REF_LOSS}"
         );
-        let grads = be.backward(&params, &batch, &fwd, &dz);
+        let grads = be.backward_threads(&params, &batch, &fwd, &dz, &mut ws, num_threads());
         for &(t, i, want) in REF_GRADS.iter() {
             let got = grads[t][i];
             let tol = 1e-3 + 2e-3 * want.abs();
@@ -786,6 +1074,110 @@ mod tests {
         });
     }
 
+    /// The tentpole's core parity bar: the inference fast path and the
+    /// full training forward share kernels and summation chains, so
+    /// their outputs must match *bitwise* — across the whole zoo,
+    /// including the 59-stage resnet50 the padded layout could not even
+    /// represent.
+    #[test]
+    fn fast_path_matches_full_forward_bitwise_across_zoo() {
+        use crate::dataset::builder::sample_from_schedule;
+        use crate::lower::lower_pipeline;
+        use crate::schedule::random::random_pipeline_schedule;
+        use crate::sim::Machine;
+
+        let machine = Machine::default();
+        let mut rng = Rng::new(0xFA57);
+        let mut samples = Vec::new();
+        let nets = [crate::zoo::resnet50(), crate::zoo::resnet18(), crate::zoo::unet()];
+        for (pid, net) in nets.iter().enumerate() {
+            let nests = lower_pipeline(net);
+            for sid in 0..3u32 {
+                let sched = random_pipeline_schedule(net, &nests, &mut rng);
+                samples.push(sample_from_schedule(
+                    net, &nests, &sched, &machine, pid as u32, sid, &mut rng,
+                ));
+            }
+        }
+        assert!(samples.iter().any(|s| s.n_stages > 48), "zoo must exceed the old cap");
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let batch = PackedBatch::for_inference(&refs, &identity_stats()).unwrap();
+
+        for layers in [0usize, 1, 2] {
+            let be = NativeBackend::with_layers(layers);
+            let params = be.init_params(42 + layers as u64);
+            let fast = be.infer(&params, &batch).unwrap();
+            let full = be.infer_full(&params, &batch).unwrap();
+            assert_eq!(
+                fast, full,
+                "fast path diverged from the training forward at {layers} conv layers"
+            );
+        }
+    }
+
+    /// Parallel backward must be bitwise-deterministic across thread
+    /// counts: the graph-aligned block partition depends only on the
+    /// batch and blocks are reduced in fixed order.
+    #[test]
+    fn parallel_backward_is_bitwise_deterministic_across_thread_counts() {
+        let be = NativeBackend::new();
+        let mut rng = Rng::new(0xB10C);
+        let samples: Vec<GraphSample> =
+            (0..30).map(|g| random_sample(&mut rng, 80, g as u32)).collect();
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let min_rt = refs.iter().map(|s| s.mean_runtime()).fold(f64::INFINITY, f64::min);
+        let best = vec![min_rt; refs.len()];
+        let batch = PackedBatch::build(&refs, &identity_stats(), &best).unwrap();
+        assert!(
+            batch.graph_blocks(BACKWARD_BLOCK_NODES).len() >= 2,
+            "fixture must span multiple backward blocks ({} nodes)",
+            batch.total_nodes()
+        );
+        let params = be.init_params(9);
+        let mut ws = Workspace::new();
+        let fwd = be.forward(&params, &batch, &mut ws);
+        let (_, dz) = loss_and_dz(&fwd.z, &batch);
+        let reference = be.backward_threads(&params, &batch, &fwd, &dz, &mut ws, 1);
+        for threads in [2usize, 4, 7] {
+            let grads = be.backward_threads(&params, &batch, &fwd, &dz, &mut ws, threads);
+            assert_eq!(
+                reference, grads,
+                "backward gradients changed at {threads} threads"
+            );
+        }
+    }
+
+    /// The workspace contract: once the backend's arena pool has seen a
+    /// workload's shapes, repeated inference performs no node-matrix
+    /// allocation — only the returned z vector (and nothing proportional
+    /// to the node count) touches the heap.
+    #[test]
+    fn inference_fast_path_has_zero_steady_state_node_allocations() {
+        let be = NativeBackend::new();
+        let batch = synth_packed_batch();
+        let params = be.init_params(3);
+        // warm the backend's workspace pool until it stabilizes
+        for _ in 0..3 {
+            be.infer(&params, &batch).unwrap();
+        }
+        let misses0 = be.workspace_stats().misses;
+        let hits0 = be.workspace_stats().hits;
+        let before = thread_alloc_count();
+        let calls = 5u64;
+        for _ in 0..calls {
+            be.infer(&params, &batch).unwrap();
+        }
+        let allocs = thread_alloc_count() - before;
+        let misses1 = be.workspace_stats().misses;
+        let hits1 = be.workspace_stats().hits;
+        assert_eq!(misses1, misses0, "steady-state infer must reuse pooled buffers");
+        assert!(hits1 > hits0, "steady-state infer must hit the pool");
+        assert!(
+            allocs <= 3 * calls,
+            "steady-state infer allocated {allocs} times over {calls} calls"
+        );
+    }
+
     #[test]
     fn adagrad_training_reduces_loss_over_50_steps() {
         let be = NativeBackend::new();
@@ -868,7 +1260,9 @@ mod tests {
         let parallel = be.predict_runtimes(&params, &refs, &stats).unwrap();
         assert_eq!(parallel.len(), 70);
 
-        // sequential reference: one packed batch per chunk
+        // sequential reference: one packed batch per fixed-size chunk —
+        // predictions are chunk-invariant, so the node-balanced policy
+        // must reproduce this bitwise
         let mut sequential = Vec::new();
         for chunk in refs.chunks(BATCH) {
             let batch = PackedBatch::for_inference(chunk, &stats).unwrap();
@@ -877,6 +1271,50 @@ mod tests {
         }
         assert_eq!(parallel, sequential);
         assert!(parallel.iter().all(|p| p.is_finite() && *p > 0.0));
+    }
+
+    /// The straggler fix: chunks are balanced by packed nodes, so one
+    /// 59-stage graph in a sea of tiny ones gets (roughly) its own chunk
+    /// instead of dragging a full BATCH of extra work behind it.
+    #[test]
+    fn predict_chunking_balances_by_nodes() {
+        let mut samples: Vec<GraphSample> =
+            (0..40).map(|i| chain_sample(5, 1e-3 * (1.0 + i as f32))).collect();
+        samples.insert(17, chain_sample(59, 2e-3));
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let workers = 4usize;
+        let chunks = balanced_chunks(&refs, workers);
+
+        // chunks tile the samples contiguously, in order
+        let recombined: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(recombined, refs.len());
+        assert!(chunks.len() > 1);
+
+        let total_nodes: usize = refs.iter().map(|s| s.n_stages as usize).sum();
+        let budget = total_nodes.div_ceil(workers * 4).max(1);
+        for c in &chunks {
+            let nodes: usize = c.iter().map(|s| s.n_stages as usize).sum();
+            assert!(
+                c.len() == 1 || nodes <= budget,
+                "multi-sample chunk holds {nodes} nodes (budget {budget})"
+            );
+            assert!(c.len() <= BATCH);
+        }
+        // the big graph rides (near-)alone rather than with a full batch
+        let big_chunk = chunks
+            .iter()
+            .find(|c| c.iter().any(|s| s.n_stages == 59))
+            .expect("the 59-stage graph must land in some chunk");
+        assert!(
+            big_chunk.len() <= 2,
+            "59-stage graph was grouped with {} small graphs",
+            big_chunk.len() - 1
+        );
+
+        // degenerate inputs
+        assert!(balanced_chunks(&[], workers).is_empty());
+        let one = [refs[0]];
+        assert_eq!(balanced_chunks(&one, workers).len(), 1);
     }
 
     #[test]

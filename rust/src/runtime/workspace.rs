@@ -1,0 +1,175 @@
+//! Reusable buffer arena for the native engine's hot loops.
+//!
+//! Every `forward`/`infer`/`backward` of the pre-PR-5 engine allocated
+//! its node matrices fresh (and the parallel row fill allocated *again*
+//! per block, then copied into a joined `Vec`). Under the serving layer
+//! that cost moved to the top of the profile: the coalescer worker runs
+//! thousands of inference passes over recycled batch shapes, so the same
+//! buffer sizes are requested over and over.
+//!
+//! [`Workspace`] is a size-class-free pool: [`Workspace::take_f32`] /
+//! [`Workspace::take_f64`] return a zeroed buffer of the requested
+//! length, reusing any pooled buffer whose capacity suffices;
+//! [`Workspace::recycle_f32`] / [`Workspace::recycle_f64`] return
+//! buffers to the pool. Once the pool has seen a workload's shapes, a
+//! steady-state `infer`/`train_step` performs no node-matrix heap
+//! allocation at all (pinned by the engine's allocation-budget test via
+//! [`crate::util::alloc_count`]).
+//!
+//! Ownership model: the native engine owns a small **pool** of arenas
+//! (`NativeBackend::with_ws`) and hands one to each call, so buffers
+//! stay warm no matter which thread runs the kernels — long-lived
+//! threads (the `PredictService` coalescer worker, a training loop) and
+//! the short-lived scoped workers of a `predict_runtimes` fan-out alike
+//! (a thread-local arena would start cold on every fresh scoped
+//! thread). Callers that want explicit control (tests, the bench
+//! harness) construct a [`Workspace`] directly and pass it to the `_ws`
+//! engine entry points.
+
+/// Upper bound on pooled buffers per element type. The engine needs ~a
+/// dozen live buffers per train step; anything beyond this cap is
+/// genuinely idle and returned to the allocator instead of hoarded.
+const POOL_CAP: usize = 32;
+
+/// Running reuse counters, for tests and the engine micro-bench report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// `take_*` calls served from the pool without allocating.
+    pub hits: u64,
+    /// `take_*` calls that had to allocate a new buffer.
+    pub misses: u64,
+}
+
+/// A recycled-buffer arena. See the module docs for the lifecycle.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32_pool: Vec<Vec<f32>>,
+    f64_pool: Vec<Vec<f64>>,
+    stats: WorkspaceStats,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed f32 buffer of exactly `len` elements, recycled when the
+    /// pool holds one with enough capacity.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        match self.f32_pool.iter().position(|b| b.capacity() >= len) {
+            Some(pos) => {
+                self.stats.hits += 1;
+                let mut v = self.f32_pool.swap_remove(pos);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.stats.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A zeroed f64 buffer of exactly `len` elements.
+    pub fn take_f64(&mut self, len: usize) -> Vec<f64> {
+        match self.f64_pool.iter().position(|b| b.capacity() >= len) {
+            Some(pos) => {
+                self.stats.hits += 1;
+                let mut v = self.f64_pool.swap_remove(pos);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.stats.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.f32_pool.len() < POOL_CAP && v.capacity() > 0 {
+            self.f32_pool.push(v);
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn recycle_f64(&mut self, v: Vec<f64>) {
+        if self.f64_pool.len() < POOL_CAP && v.capacity() > 0 {
+            self.f64_pool.push(v);
+        }
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        self.stats
+    }
+
+    /// Drop every pooled buffer (the stats survive).
+    pub fn clear(&mut self) {
+        self.f32_pool.clear();
+        self.f64_pool.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_recycling_hits() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(100);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.recycle_f32(a);
+        // same size comes back zeroed, without allocating
+        let b = ws.take_f32(100);
+        assert!(b.iter().all(|&v| v == 0.0), "recycled buffer must be zeroed");
+        assert_eq!(ws.stats(), WorkspaceStats { hits: 1, misses: 1 });
+        ws.recycle_f32(b);
+        // a smaller request reuses the same capacity
+        let c = ws.take_f32(40);
+        assert_eq!(c.len(), 40);
+        assert_eq!(ws.stats().hits, 2);
+        ws.recycle_f32(c);
+        // a larger request cannot reuse it
+        let d = ws.take_f32(4000);
+        assert_eq!(d.len(), 4000);
+        assert_eq!(ws.stats().misses, 2);
+    }
+
+    #[test]
+    fn f64_pool_is_independent() {
+        let mut ws = Workspace::new();
+        let a = ws.take_f64(64);
+        ws.recycle_f64(a);
+        let _f32 = ws.take_f32(64);
+        assert_eq!(ws.stats().misses, 2, "f32 request must not steal the f64 buffer");
+        let b = ws.take_f64(64);
+        assert_eq!(b.len(), 64);
+        assert_eq!(ws.stats().hits, 1);
+    }
+
+    #[test]
+    fn steady_state_take_recycle_does_not_allocate() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let a = ws.take_f32(512);
+            let b = ws.take_f64(256);
+            ws.recycle_f32(a);
+            ws.recycle_f64(b);
+        }
+        let before = crate::util::alloc_count::thread_alloc_count();
+        for _ in 0..10 {
+            let a = ws.take_f32(512);
+            let b = ws.take_f64(256);
+            ws.recycle_f32(a);
+            ws.recycle_f64(b);
+        }
+        let delta = crate::util::alloc_count::thread_alloc_count() - before;
+        assert_eq!(delta, 0, "warm take/recycle cycles must not touch the heap");
+    }
+}

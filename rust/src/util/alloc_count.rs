@@ -1,0 +1,128 @@
+//! Global + per-thread allocation counters — the measurement substrate
+//! behind the "zero steady-state allocation" claim of the native
+//! engine's workspace arena (see `runtime::workspace`).
+//!
+//! [`CountingAlloc`] wraps [`System`]: every heap allocation bumps a
+//! relaxed process-wide atomic *and* a thread-local counter, then
+//! delegates. The overhead is a couple of uncontended adds per
+//! allocation — far below measurement noise for anything this crate
+//! benches — and in exchange `gcn-perf bench --engine` can report real
+//! allocations/op numbers in `BENCH_5.json` and the engine tests can
+//! pin the steady-state allocation budget of the inference fast path.
+//!
+//! It is installed as the global allocator in exactly two places: the
+//! `gcn-perf` binary (`main.rs`) and the library's own test harness
+//! (`lib.rs`, under `#[cfg(test)]`). The plain library build does *not*
+//! install it, so embedders keep their own global allocator; in that
+//! configuration the counters simply stay at zero.
+//!
+//! Measurement windows: [`alloc_count`] is process-wide, so concurrent
+//! threads pollute it (fine for a serial bench run, useless under
+//! `cargo test`). [`thread_alloc_count`] counts only the calling
+//! thread's allocations, which makes single-threaded windows exact no
+//! matter what sibling tests are doing. The thread-local uses `const`
+//! initialization, so reading or bumping it never allocates (no lazy
+//! init) — the allocator cannot recurse into itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TLS_COUNT: Cell<u64> = const { Cell::new(0) };
+    static TLS_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump(bytes: usize) {
+    ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    // `try_with` instead of `with`: never panic inside the allocator,
+    // even if a late allocation races thread teardown.
+    let _ = TLS_COUNT.try_with(|c| c.set(c.get() + 1));
+    let _ = TLS_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+/// Process-wide heap allocations since start (allocs + reallocs; frees
+/// are not counted — this measures churn, not live bytes).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Process-wide bytes requested from the allocator since start.
+pub fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// Heap allocations performed by the *calling thread* since it started.
+/// Exact even while other threads allocate concurrently.
+pub fn thread_alloc_count() -> u64 {
+    TLS_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Bytes requested from the allocator by the calling thread.
+pub fn thread_alloc_bytes() -> u64 {
+    TLS_BYTES.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// [`System`] with allocation counting. Installed as the crate's global
+/// allocator so allocation budgets are observable in tests and benches.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump(layout.size());
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_observe_allocations() {
+        let count0 = thread_alloc_count();
+        let bytes0 = thread_alloc_bytes();
+        let global0 = alloc_count();
+        let v: Vec<u8> = Vec::with_capacity(4096);
+        let count1 = thread_alloc_count();
+        let bytes1 = thread_alloc_bytes();
+        assert!(count1 > count0, "allocation was not counted");
+        assert!(bytes1 >= bytes0 + 4096, "allocation bytes were not counted");
+        assert!(alloc_count() > global0);
+        drop(v);
+    }
+
+    #[test]
+    fn thread_counter_ignores_other_threads() {
+        let before = thread_alloc_count();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let big: Vec<u64> = Vec::with_capacity(1 << 16);
+                drop(big);
+            });
+        });
+        // the scope itself allocates on this thread (join handles), but
+        // the worker's 512 KiB buffer must not land on our counter
+        let delta = thread_alloc_count() - before;
+        assert!(delta < 64, "spawned-thread allocations leaked into the TLS counter: {delta}");
+    }
+}

@@ -5,6 +5,7 @@
 //! criterion, proptest) are unavailable. This module provides the small
 //! subset of their functionality the rest of the crate needs.
 
+pub mod alloc_count;
 pub mod rng;
 pub mod threadpool;
 pub mod json;

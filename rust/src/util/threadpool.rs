@@ -37,34 +37,15 @@ where
 /// Apply `f` to every index in `0..n` in parallel, collecting results in
 /// order. Work is claimed one index at a time from a shared atomic counter,
 /// which load-balances well when per-item cost varies (e.g. benchmarking
-/// schedules of very different pipelines).
+/// schedules of very different pipelines). One scheduler serves every
+/// parallel-map flavor: this is [`parallel_map_vec_threads`] over the
+/// index sequence.
 pub fn parallel_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let slots = Mutex::new(&mut out);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i);
-                // Short critical section: store one result.
-                let mut guard = slots.lock().unwrap();
-                guard[i] = Some(r);
-            });
-        }
-    });
-    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+    parallel_map_vec_threads((0..n).collect(), num_threads(), f)
 }
 
 /// Parallel map over a slice, preserving order.
@@ -75,6 +56,89 @@ where
     F: Fn(&T) -> R + Sync,
 {
     parallel_map_indexed(items.len(), |i| f(&items[i]))
+}
+
+/// Parallel map that passes each item *by value*, preserving order. This
+/// is what lets the native engine hand every worker an owned bundle of
+/// disjoint `&mut` sub-slices of one shared output buffer (a `Fn(&T)`
+/// map cannot mutate through a shared reference to the item).
+///
+/// Results are written by item index, so the output — and any reduction
+/// folded over it in index order — is independent of how workers
+/// interleave.
+pub fn parallel_map_vec<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    parallel_map_vec_threads(items, num_threads(), f)
+}
+
+/// [`parallel_map_vec`] with an explicit worker count. The native
+/// engine's determinism tests run the same work at 1 and N threads and
+/// assert bitwise-equal results; production callers use
+/// [`parallel_map_vec`], which picks [`num_threads`].
+pub fn parallel_map_vec_threads<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = lock_item(&slots[i]).take().expect("each item is claimed once");
+                let r = f(item);
+                // Short critical section: store one result.
+                let mut guard = out_slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+fn lock_item<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Split `data` (a row-major `[n, width]` matrix) into one mutable
+/// sub-slice per range. `ranges` must tile `0..n` contiguously in order
+/// (as [`chunk_ranges`] and `PackedBatch::graph_blocks` produce); the
+/// native engine uses this to let parallel workers write row blocks
+/// directly into one preallocated output with no per-block staging
+/// buffers.
+pub fn split_rows<'a, T>(
+    data: &'a mut [T],
+    ranges: &[std::ops::Range<usize>],
+    width: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut next = 0usize;
+    for r in ranges {
+        assert_eq!(r.start, next, "ranges must tile the rows contiguously");
+        let (head, tail) = rest.split_at_mut(r.len() * width);
+        out.push(head);
+        rest = tail;
+        next = r.end;
+    }
+    assert!(rest.is_empty(), "ranges must cover every row of the buffer");
+    out
 }
 
 /// Contiguous index ranges covering `0..n`: at most [`num_threads`] of
@@ -129,6 +193,48 @@ mod tests {
             assert!(ranges.len() <= num_threads().max(1));
         }
         assert_eq!(chunk_ranges(15, 16).len(), 1, "below min_len stays one block");
+    }
+
+    #[test]
+    fn parallel_map_vec_matches_serial_bitwise() {
+        // per-item floating-point sums must be identical at any worker
+        // count: items are computed independently and stored by index
+        let items: Vec<Vec<f64>> =
+            (0..13).map(|i| (0..257).map(|j| (i * j) as f64 * 0.1).collect()).collect();
+        let serial = parallel_map_vec_threads(items.clone(), 1, |v| v.iter().sum::<f64>());
+        for threads in [2, 4, 8] {
+            let par = parallel_map_vec_threads(items.clone(), threads, |v| v.iter().sum::<f64>());
+            assert_eq!(serial, par, "results must be bitwise thread-count-independent");
+        }
+        assert_eq!(parallel_map_vec(items.clone(), |v| v.len()), vec![257; 13]);
+        let empty: Vec<Vec<f64>> = Vec::new();
+        assert!(parallel_map_vec(empty, |v: Vec<f64>| v.len()).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_vec_passes_mut_slices() {
+        // the engine's pattern: disjoint &mut blocks of one buffer, each
+        // filled by whichever worker claims the item
+        let mut buf = vec![0u32; 100];
+        let ranges = chunk_ranges(10, 1);
+        let parts = split_rows(&mut buf, &ranges, 10);
+        let tasks: Vec<(std::ops::Range<usize>, &mut [u32])> =
+            ranges.iter().cloned().zip(parts).collect();
+        parallel_map_vec(tasks, |(range, block)| {
+            for (i, v) in block.iter_mut().enumerate() {
+                *v = ((range.start + i / 10) * 10 + i % 10) as u32;
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguously")]
+    fn split_rows_rejects_gaps() {
+        let mut buf = vec![0u8; 30];
+        let _ = split_rows(&mut buf, &[0..1, 2..3], 10);
     }
 
     #[test]

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Profile the native engine's hot loops so perf PRs start from a measured
+# baseline instead of a guess.
+#
+# Wraps `gcn-perf bench --engine` (the engine micro-suite only — no
+# serving threads muddying the profile) under `perf record`, then emits a
+# flamegraph if a flamegraph tool is on PATH, falling back to a plain
+# `perf report` summary otherwise.
+#
+# Usage:
+#   scripts/profile.sh            # full measurement windows
+#   scripts/profile.sh --fast     # short windows (quick look)
+#
+# Outputs land in ./profile/ at the repository root:
+#   profile/perf.data       raw samples
+#   profile/flamegraph.svg  (if inferno-flamegraph or flamegraph.pl exist)
+#   profile/report.txt      perf report --stdio summary
+set -euo pipefail
+cd "$(dirname "$0")/.."
+ROOT="$(pwd)"
+OUT="$ROOT/profile"
+mkdir -p "$OUT"
+
+FAST_FLAG=""
+if [[ "${1:-}" == "--fast" ]]; then
+    FAST_FLAG="--fast"
+fi
+
+echo "==> building release with debug symbols"
+( cd rust && CARGO_PROFILE_RELEASE_DEBUG=true cargo build --release )
+
+BIN="$ROOT/rust/target/release/gcn-perf"
+BENCH_CMD=("$BIN" bench --engine ${FAST_FLAG} --engine-out "$OUT/BENCH_5.json")
+
+if ! command -v perf >/dev/null 2>&1; then
+    echo "perf(1) not found — running the engine bench unprofiled." >&2
+    echo "Install linux-tools (or run on a machine with perf) for flamegraphs." >&2
+    exec "${BENCH_CMD[@]}"
+fi
+
+echo "==> perf record: gcn-perf bench --engine ${FAST_FLAG}"
+# -g: call graphs; dwarf unwinding gives readable Rust stacks
+perf record -g --call-graph dwarf,16384 -o "$OUT/perf.data" -- "${BENCH_CMD[@]}"
+
+echo "==> perf report summary -> $OUT/report.txt"
+perf report --stdio -i "$OUT/perf.data" > "$OUT/report.txt" 2>/dev/null || true
+head -n 40 "$OUT/report.txt" || true
+
+# flamegraph, with whichever tool is available
+if command -v inferno-collapse-perf >/dev/null 2>&1 && command -v inferno-flamegraph >/dev/null 2>&1; then
+    echo "==> flamegraph (inferno) -> $OUT/flamegraph.svg"
+    perf script -i "$OUT/perf.data" | inferno-collapse-perf | inferno-flamegraph \
+        > "$OUT/flamegraph.svg"
+elif command -v stackcollapse-perf.pl >/dev/null 2>&1 && command -v flamegraph.pl >/dev/null 2>&1; then
+    echo "==> flamegraph (FlameGraph scripts) -> $OUT/flamegraph.svg"
+    perf script -i "$OUT/perf.data" | stackcollapse-perf.pl | flamegraph.pl \
+        > "$OUT/flamegraph.svg"
+else
+    echo "(no flamegraph tool found — install 'inferno' (cargo install inferno)"
+    echo " or Brendan Gregg's FlameGraph scripts for $OUT/flamegraph.svg)"
+fi
+
+echo "profile: done — artifacts in $OUT/"
