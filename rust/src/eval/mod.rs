@@ -8,6 +8,8 @@
 //! * [`engine_bench`] — native-engine micro-benchmarks against the
 //!   frozen PR-4 compute core (`BENCH_5.json`), with the baseline kept
 //!   in `legacy_engine`.
+//! * [`net_bench`] — the TCP front-end under the loadgen client fleet,
+//!   with bitwise verification (`BENCH_6.json`).
 
 pub mod metrics;
 pub mod ranking;
@@ -15,6 +17,7 @@ pub mod harness;
 pub mod perf;
 pub mod serve_bench;
 pub mod engine_bench;
+pub mod net_bench;
 pub(crate) mod legacy_engine;
 
 pub use metrics::{regression_metrics, RegressionMetrics};

@@ -1,0 +1,229 @@
+//! Network-serving benchmark — `BENCH_6.json`.
+//!
+//! Stands the full TCP front-end up in-process (real sockets on a
+//! loopback ephemeral port), hammers it with the [`loadgen`] client
+//! fleet over a mixed-size sample pool (generator pipelines plus
+//! resnet50 schedules, as in `serve_bench`), and reports throughput and
+//! the latency histogram. Correctness is not sampled, it is total:
+//! every response is verified **bitwise** against direct
+//! `Predictor::predict` on the same samples, so the whole stack —
+//! framing, JSON round-trip, pipelining, coalesced batching — must be
+//! prediction-preserving before any number is trusted. The server
+//! stats in the report come over the wire via `STATS`, exercising that
+//! path end-to-end too.
+//!
+//! CI runs the `--fast` variant via `gcn-perf loadgen --fast
+//! --min-rps ...`, which asserts a throughput floor; like the other
+//! benches, the floor is enforced by that serial CI step and not by
+//! `cargo test`.
+
+use crate::dataset::builder::{build_dataset, sample_from_schedule, DataGenConfig};
+use crate::dataset::sample::GraphSample;
+use crate::lower::lower_pipeline;
+use crate::net::loadgen::{fetch_stats, run_loadgen, LoadgenConfig, LoadgenReport};
+use crate::net::server::{TcpServer, TcpServerConfig};
+use crate::net::session::ServeShared;
+use crate::predictor::{GcnPredictor, PredictService, Predictor, ServiceConfig};
+use crate::runtime::{Backend, NativeBackend};
+use crate::schedule::random::random_pipeline_schedule;
+use crate::sim::Machine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct NetBenchConfig {
+    /// Short run (CI smoke).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl Default for NetBenchConfig {
+    fn default() -> Self {
+        NetBenchConfig { fast: false, seed: 3 }
+    }
+}
+
+/// One benchmark run: the loadgen aggregate plus the server's own view.
+#[derive(Debug, Clone)]
+pub struct NetBenchReport {
+    pub fast: bool,
+    pub workload: LoadgenConfig,
+    pub loadgen: LoadgenReport,
+    /// The `STATS` response object, fetched over the wire.
+    pub server_stats: Option<Json>,
+}
+
+impl NetBenchReport {
+    /// Error unless aggregate throughput met `min_rps` (see
+    /// [`LoadgenReport::require_throughput`]).
+    pub fn require_throughput(&self, min_rps: f64) -> Result<()> {
+        self.loadgen.require_throughput(min_rps)
+    }
+}
+
+/// The mixed-size sample pool: every sample from a small generated
+/// dataset, interleaved with >48-stage resnet50 schedules.
+pub fn build_pool(seed: u64) -> Result<(Arc<dyn Predictor>, Vec<GraphSample>)> {
+    let ds = build_dataset(&DataGenConfig {
+        n_pipelines: 8,
+        schedules_per_pipeline: 4,
+        seed,
+        ..Default::default()
+    });
+    let stats = ds.stats.clone().context("dataset stats")?;
+
+    let net = crate::zoo::resnet50();
+    let nests = lower_pipeline(&net);
+    let machine = Machine::default();
+    let mut rng = Rng::new(seed ^ 0x6E7);
+    let mut pool = ds.samples;
+    for sid in 0..4u32 {
+        let sched = random_pipeline_schedule(&net, &nests, &mut rng);
+        pool.push(sample_from_schedule(&net, &nests, &sched, &machine, 1000, sid, &mut rng));
+    }
+
+    let backend = NativeBackend::new();
+    let params = backend.init_params(seed);
+    let predictor: Arc<dyn Predictor> =
+        Arc::new(GcnPredictor::new(Box::new(backend), params, stats));
+    Ok((predictor, pool))
+}
+
+/// Run the in-process server + client fleet and gather the report.
+pub fn run_net_bench(cfg: &NetBenchConfig) -> Result<NetBenchReport> {
+    let workload = if cfg.fast {
+        LoadgenConfig {
+            clients: 8,
+            requests_per_client: 16,
+            samples_per_request: 3,
+            pipeline_depth: 4,
+            ..Default::default()
+        }
+    } else {
+        LoadgenConfig {
+            clients: 96,
+            requests_per_client: 40,
+            samples_per_request: 4,
+            pipeline_depth: 8,
+            ..Default::default()
+        }
+    };
+
+    let (predictor, pool) = build_pool(cfg.seed)?;
+    let refs: Vec<&GraphSample> = pool.iter().collect();
+    let expected = predictor.predict(&refs)?;
+
+    let service = Arc::new(PredictService::spawn(
+        Arc::clone(&predictor),
+        ServiceConfig { queue_cap: workload.clients.max(8), ..Default::default() },
+    ));
+    let shared = ServeShared::new(service);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = TcpServer::bind(
+        "127.0.0.1:0",
+        shared,
+        TcpServerConfig {
+            max_conns: workload.clients + 8,
+            read_timeout: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        Arc::clone(&shutdown),
+    )?;
+    let addr = server.local_addr().to_string();
+
+    let loadgen = run_loadgen(&addr, &pool, Some(&expected), &workload)?;
+    // no drain ran during the measured load, so the accounting must close
+    ensure!(
+        loadgen.responses_ok + loadgen.responses_err == loadgen.requests_sent,
+        "lost responses: {} sent, {} answered",
+        loadgen.requests_sent,
+        loadgen.responses_ok + loadgen.responses_err
+    );
+    ensure!(
+        loadgen.responses_err == 0,
+        "{} error responses under clean load",
+        loadgen.responses_err
+    );
+    ensure!(
+        loadgen.bitwise_verified == loadgen.responses_ok,
+        "only {}/{} responses verified bitwise",
+        loadgen.bitwise_verified,
+        loadgen.responses_ok
+    );
+
+    let server_stats = fetch_stats(&addr).ok();
+    server.shutdown_now();
+    server.join()?;
+
+    Ok(NetBenchReport { fast: cfg.fast, workload, loadgen, server_stats })
+}
+
+/// Serialize a report to `BENCH_6.json`.
+pub fn write_net_report(report: &NetBenchReport, path: &Path) -> Result<()> {
+    let w = &report.workload;
+    let l = &report.loadgen;
+    let j = Json::obj(vec![
+        ("bench", Json::Str("net: multi-client TCP serving under loadgen".into())),
+        ("fast", Json::Num(if report.fast { 1.0 } else { 0.0 })),
+        ("clients", Json::Num(w.clients as f64)),
+        ("requests_per_client", Json::Num(w.requests_per_client as f64)),
+        ("samples_per_request", Json::Num(w.samples_per_request as f64)),
+        ("rate_per_client", Json::Num(w.rate_per_client)),
+        ("pipeline_depth", Json::Num(w.pipeline_depth as f64)),
+        ("requests_sent", Json::Num(l.requests_sent as f64)),
+        ("responses_ok", Json::Num(l.responses_ok as f64)),
+        ("responses_err", Json::Num(l.responses_err as f64)),
+        ("bitwise_verified", Json::Num(l.bitwise_verified as f64)),
+        ("samples_scored", Json::Num(l.samples_scored as f64)),
+        ("wall_ns", Json::Num(l.wall_ns)),
+        ("requests_per_s", Json::Num(l.requests_per_s)),
+        ("samples_per_s", Json::Num(l.samples_per_s)),
+        ("latency", l.latency.to_json()),
+        ("server", report.server_stats.clone().unwrap_or(Json::Null)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_net_bench_serves_verifies_and_reports() {
+        // Structure + the built-in bitwise verification. The throughput
+        // floor is enforced by the serial CI step (`loadgen --fast
+        // --min-rps ...`), not here — `cargo test` shares cores.
+        let report = run_net_bench(&NetBenchConfig { fast: true, seed: 11 }).unwrap();
+        let total = report.workload.clients * report.workload.requests_per_client;
+        assert_eq!(report.loadgen.requests_sent, total);
+        assert_eq!(report.loadgen.responses_ok, total);
+        assert_eq!(report.loadgen.bitwise_verified, total);
+        assert!(report.loadgen.requests_per_s > 0.0);
+        assert!(report.loadgen.latency.p50_ns > 0.0);
+        assert!(report.loadgen.latency.p99_ns >= report.loadgen.latency.p50_ns);
+        let stats = report.server_stats.as_ref().expect("STATS over the wire");
+        let served =
+            stats.get("stats").and_then(|s| s.get("requests")).and_then(|v| v.as_usize());
+        assert_eq!(served, Some(total));
+
+        let path = std::env::temp_dir().join("gcn_perf_bench6_test.json");
+        write_net_report(&report, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in ["requests_per_s", "p50_ns", "p99_ns", "histogram", "bitwise_verified"] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        Json::parse(&text).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -24,6 +24,11 @@
 //!   coalescing [`predictor::PredictService`] serving layer (bounded
 //!   queue, shared memo cache, `gcn-perf serve` daemon) and the
 //!   [`predictor::PredictorCost`] search bridge riding it;
+//! * the network serving front-end ([`net`]): the newline-framed wire
+//!   protocol, a multi-client TCP server with admission control and
+//!   graceful drain (`gcn-perf serve --listen`), and the concurrent
+//!   load generator (`gcn-perf loadgen`) that verifies served
+//!   predictions bitwise against direct calls;
 //! * the comparison models from the paper's evaluation ([`baselines`]): the
 //!   Halide feed-forward model and a TVM-style gradient-boosted-tree model;
 //! * the evaluation harnesses for Fig 8 and Fig 9 plus the
@@ -67,6 +72,7 @@ pub mod dataset;
 pub mod model;
 pub mod runtime;
 pub mod predictor;
+pub mod net;
 pub mod train;
 pub mod baselines;
 pub mod eval;

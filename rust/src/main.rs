@@ -18,7 +18,10 @@
 //!                  naive-vs-coalesced serving (BENCH_4.json) and the
 //!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
-//!                  requests on stdin, predictions on stdout
+//!                  requests on stdin — or, with --listen, a
+//!                  multi-client TCP server with graceful drain
+//!   loadgen        concurrent client fleet against the TCP server,
+//!                  bitwise-verified; writes BENCH_6.json
 //!   info           backend / manifest / bundle info
 //!
 //! Everything is driven from rust; python is never on the runtime path.
@@ -33,6 +36,7 @@ use gcn_perf::dataset::store;
 use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
+use gcn_perf::net::session::{prediction_report, sample_ids};
 use gcn_perf::onnx_gen::GenConfig;
 use gcn_perf::predictor::registry::{self, FitConfig};
 use gcn_perf::predictor::{
@@ -43,7 +47,6 @@ use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
 use gcn_perf::sim::Machine;
 use gcn_perf::train::{train_and_save, TrainConfig};
 use gcn_perf::util::cli::Args;
-use gcn_perf::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -102,7 +105,22 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
         &["out", "serve-out", "engine-out", "seed"],
         &["fast", "require-speedup", "engine"],
     ),
-    ("serve", &["bundle", "ckpt", "workers", "queue-cap"], &[]),
+    (
+        "serve",
+        &[
+            "bundle", "ckpt", "workers", "queue-cap", "listen", "port-file", "read-timeout-ms",
+            "max-line-bytes", "max-conns", "max-inflight",
+        ],
+        &[],
+    ),
+    (
+        "loadgen",
+        &[
+            "addr", "bundle", "ckpt", "samples", "data", "clients", "requests", "per-request",
+            "rate", "depth", "out", "min-rps", "seed",
+        ],
+        &["fast"],
+    ),
     ("info", &["artifacts", "bundle", "ckpt"], &[]),
 ];
 
@@ -143,6 +161,7 @@ fn main() {
         "search" => cmd_search(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(&args),
         // unreachable: KNOWN_ARGS gates every dispatched name above
         other => Err(anyhow::anyhow!("unhandled subcommand '{other}'")),
@@ -177,8 +196,17 @@ USAGE: gcn-perf <subcommand> [--key value ...]
                   [--require-speedup]  (dense-vs-sparse + serving + engine
                    micro-benches; --engine runs only the engine suite)
   serve           --bundle data/gcn.bundle [--workers N] [--queue-cap Q]
-                  (daemon: one JSON sample-array request per stdin line,
-                   one JSON prediction response per stdout line)
+                  [--listen ADDR [--port-file F] [--read-timeout-ms T]
+                   [--max-conns C] [--max-inflight W]] [--max-line-bytes B]
+                  (daemon: one JSON sample-array request per line — stdin
+                   by default, multi-client TCP with --listen; `STATS`
+                   answers live counters; SIGTERM/ctrl-d drains cleanly)
+  loadgen         [--addr HOST:PORT (--samples s.json | --data ds.bin)
+                   [--bundle ...]] [--clients N] [--requests M] [--rate R]
+                  [--depth W] [--min-rps F] [--out BENCH_6.json] [--fast]
+                  (concurrent client fleet; without --addr, runs the
+                   self-contained in-process net bench; responses are
+                   verified bitwise against direct predictions)
   info            [--artifacts DIR] [--bundle ...]
 
 Unknown subcommands, options or flags exit nonzero with the valid set.
@@ -287,32 +315,6 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// (pipeline_id, schedule_id) pairs — all a prediction report needs from
-/// the request, captured before the samples move into the service.
-fn sample_ids(samples: &[gcn_perf::dataset::sample::GraphSample]) -> Vec<(u32, u32)> {
-    samples.iter().map(|s| (s.pipeline_id, s.schedule_id)).collect()
-}
-
-/// Build the `{"model": ..., "predictions": [...]}` response object for a
-/// set of served samples (shared by `predict` and the `serve` daemon).
-fn prediction_report(model: &str, ids: &[(u32, u32)], preds: &[f64]) -> Json {
-    let rows: Vec<Json> = ids
-        .iter()
-        .zip(preds)
-        .map(|(&(pid, sid), &p)| {
-            Json::obj(vec![
-                ("pipeline_id", Json::Num(pid as f64)),
-                ("schedule_id", Json::Num(sid as f64)),
-                ("predicted_runtime_s", Json::Num(p)),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("model", Json::Str(model.to_string())),
-        ("predictions", Json::Arr(rows)),
-    ])
-}
-
 fn cmd_predict(args: &Args) -> Result<()> {
     let path = bundle_path(args)?;
     // one-shot client of the same serving layer `serve` runs long-lived
@@ -365,30 +367,16 @@ fn cmd_export_samples(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The first real serving entrypoint: a long-lived daemon reading one
-/// JSON request per stdin line (a sample array in the `predict --samples`
-/// interchange format) and streaming one JSON response line per request
-/// on stdout, in request order. Requests are *pipelined*: the reader
-/// submits each line to the service immediately and a writer thread
-/// drains completions in FIFO order, so up to `--queue-cap` requests are
-/// in flight at once and concurrent lines coalesce into shared batches
-/// (a strictly serial read→predict→write loop would leave the coalescer
-/// with nothing to fuse). Malformed requests answer with an
-/// `{"error": ...}` line and the daemon keeps serving; EOF shuts it down
-/// cleanly, draining everything in flight.
+/// The serving daemon. Two front-ends over the identical session loop
+/// (`net::session::serve_session`): with `--listen ADDR`, a multi-client
+/// TCP server — thread per connection, admission control, graceful drain
+/// on SIGTERM/SIGINT — and otherwise the classic stdin/stdout mode.
+/// Either way requests are *pipelined* into the shared service (so
+/// concurrent lines coalesce into fused batches), malformed requests
+/// answer with an `{"error": ...}` line without stopping the daemon, and
+/// the `STATS` keyword answers live counters + latency percentiles.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use std::io::{BufRead, Write};
-    use std::sync::mpsc;
-
-    /// What the writer thread emits for one request line: either an
-    /// immediate response (parse/submit error) or a pending completion.
-    enum Outcome {
-        Ready(Json),
-        Pending(Vec<(u32, u32)>, gcn_perf::predictor::PredictHandle),
-    }
-    fn error_json(e: &anyhow::Error) -> Json {
-        Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
-    }
+    use gcn_perf::net::{serve_session, ServeShared, SessionOpts, TcpServer, TcpServerConfig};
 
     let path = bundle_path(args)?;
     let cfg = ServiceConfig {
@@ -396,70 +384,146 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_or("queue-cap", 64),
         ..Default::default()
     };
-    let service = PredictService::spawn(Arc::from(registry::load_bundle(&path)?), cfg.clone());
-    eprintln!(
-        "serving '{}' from {} — one JSON sample-array request per stdin line; ctrl-d to stop",
-        service.model_name(),
-        path.display()
-    );
+    let service =
+        Arc::new(PredictService::spawn(Arc::from(registry::load_bundle(&path)?), cfg.clone()));
+    let shared = ServeShared::new(Arc::clone(&service));
+    let max_line = args.usize_or("max-line-bytes", gcn_perf::net::DEFAULT_MAX_FRAME_BYTES);
 
-    // bounded: a slow stdout consumer must stall the reader instead of
-    // letting completed responses pile up without limit
-    let (tx, rx) = mpsc::sync_channel::<Outcome>(cfg.queue_cap.max(1));
-    let writer = std::thread::spawn(move || -> Result<()> {
-        let mut out = std::io::stdout().lock();
-        for item in rx {
-            let json = match item {
-                Outcome::Ready(j) => j,
-                Outcome::Pending(ids, handle) => match handle.wait() {
-                    Ok(resp) => prediction_report(&resp.model, &ids, &resp.predictions),
-                    Err(e) => error_json(&e),
-                },
-            };
-            writeln!(out, "{}", json.to_string()).context("write response to stdout")?;
-            out.flush().context("flush stdout")?;
-        }
-        Ok(())
-    });
-
-    let stdin = std::io::stdin();
-    for line in stdin.lock().lines() {
-        let line = line.context("read request line from stdin")?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let outcome = match gcn_perf::dataset::json::samples_from_json(&line) {
-            Ok(samples) => {
-                let ids = sample_ids(&samples);
-                // submit blocks when queue-cap requests are in flight —
-                // stdin stops being read, which is the backpressure
-                match service.submit(PredictRequest::new(samples)) {
-                    Ok(handle) => Outcome::Pending(ids, handle),
-                    Err(e) => Outcome::Ready(error_json(&e)),
-                }
-            }
-            Err(e) => Outcome::Ready(error_json(&e)),
+    if let Some(listen) = args.str_opt("listen") {
+        let shutdown = gcn_perf::net::signal::install_term_flag();
+        let tcp_cfg = TcpServerConfig {
+            max_conns: args.usize_or("max-conns", 256),
+            max_frame_bytes: max_line,
+            max_inflight_per_conn: args.usize_or("max-inflight", 32),
+            read_timeout: match args.u64_or("read-timeout-ms", 0) {
+                0 => None,
+                ms => Some(std::time::Duration::from_millis(ms)),
+            },
         };
-        if tx.send(outcome).is_err() {
-            break; // writer gone (stdout closed) — stop reading
+        let server = TcpServer::bind(listen, shared.clone(), tcp_cfg, shutdown)?;
+        eprintln!(
+            "serving '{}' from {} on {} — line-delimited JSON over TCP; \
+             SIGTERM/SIGINT drains and exits",
+            service.model_name(),
+            path.display(),
+            server.local_addr()
+        );
+        if let Some(pf) = args.str_opt("port-file") {
+            // scripts bind --listen 127.0.0.1:0 and read the real
+            // address back from this file
+            std::fs::write(pf, server.local_addr().to_string())
+                .with_context(|| format!("write {pf}"))?;
         }
+        let report = server.join()?;
+        print_serve_stats(&shared, Some(&report));
+    } else {
+        eprintln!(
+            "serving '{}' from {} — one JSON sample-array request per stdin line; \
+             ctrl-d to stop",
+            service.model_name(),
+            path.display()
+        );
+        let opts = SessionOpts { max_frame_bytes: max_line, max_inflight: cfg.queue_cap.max(1) };
+        let stdin = std::io::stdin();
+        serve_session(stdin.lock(), std::io::stdout(), &shared, &opts)?;
+        print_serve_stats(&shared, None);
     }
-    drop(tx);
-    match writer.join() {
-        Ok(r) => r?,
-        Err(_) => bail!("serve writer thread panicked"),
-    }
-    let stats = service.stats();
+    Ok(())
+}
+
+/// The shutdown summary both serve modes print to stderr; the same
+/// numbers are available live through the `STATS` command.
+fn print_serve_stats(
+    shared: &gcn_perf::net::ServeShared,
+    report: Option<&gcn_perf::net::ServerReport>,
+) {
+    let stats = shared.service.stats();
+    let lat = shared.latency.snapshot();
+    let conns = match report {
+        Some(r) => format!("; {} connections ({} rejected)", r.connections, r.rejected),
+        None => String::new(),
+    };
     eprintln!(
         "served {} requests: {} samples evaluated in {} fused batches; \
-         memo cache {} hits / {} misses; peak queue depth {}",
+         memo cache {} hits / {} misses; peak queue depth {}; \
+         latency p50 {:.1}us / p99 {:.1}us{conns}",
         stats.requests,
         stats.samples_evaluated,
         stats.batches,
         stats.cache_hits,
         stats.cache_misses,
-        stats.peak_queue
+        stats.peak_queue,
+        lat.p50_ns / 1e3,
+        lat.p99_ns / 1e3
     );
+}
+
+/// The load-test client fleet. With `--addr`, hammers an external server
+/// (verifying bitwise when `--bundle` supplies the server's own model);
+/// without it, runs the self-contained `eval::net_bench` — in-process
+/// TCP server + fleet over the mixed-size pool, always bitwise-verified.
+/// Both paths write the BENCH_6.json latency-histogram report, and
+/// `--min-rps` turns the run into a pass/fail throughput gate (the CI
+/// smoke).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use gcn_perf::eval::net_bench::{
+        run_net_bench, write_net_report, NetBenchConfig, NetBenchReport,
+    };
+    use gcn_perf::net::{fetch_stats, run_loadgen, LoadgenConfig};
+
+    let fast = args.has_flag("fast");
+    let out = PathBuf::from(args.str_or("out", "BENCH_6.json"));
+    let min_rps = args.f64_or("min-rps", 0.0);
+
+    let report = if let Some(addr) = args.str_opt("addr") {
+        let samples = if let Some(f) = args.str_opt("samples") {
+            let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
+            gcn_perf::dataset::json::samples_from_json(&text)?
+        } else if args.str_opt("data").is_some() {
+            load_dataset(args)?.samples
+        } else {
+            bail!("loadgen --addr needs --samples file.json or --data dataset.bin");
+        };
+        // direct predictions for bitwise verification — only possible
+        // when the server's own bundle is on hand
+        let expected = match bundle_path_opt(args) {
+            Some(b) => {
+                let predictor = registry::load_bundle(&b)?;
+                let refs: Vec<&gcn_perf::dataset::sample::GraphSample> = samples.iter().collect();
+                Some(predictor.predict(&refs)?)
+            }
+            None => None,
+        };
+        let workload = LoadgenConfig {
+            clients: args.usize_or("clients", if fast { 8 } else { 32 }),
+            requests_per_client: args.usize_or("requests", if fast { 16 } else { 64 }),
+            samples_per_request: args.usize_or("per-request", samples.len().min(4)),
+            rate_per_client: args.f64_or("rate", 0.0),
+            pipeline_depth: args.usize_or("depth", 8),
+        };
+        let loadgen = run_loadgen(addr, &samples, expected.as_deref(), &workload)?;
+        let server_stats = fetch_stats(addr).ok();
+        NetBenchReport { fast, workload, loadgen, server_stats }
+    } else {
+        run_net_bench(&NetBenchConfig { fast, seed: args.u64_or("seed", 3) })?
+    };
+
+    write_net_report(&report, &out)?;
+    let l = &report.loadgen;
+    println!(
+        "loadgen report written to {} ({} clients x {} requests: {:.1} req/s, \
+         {} responses bitwise-verified, latency p50 {:.1}us / p99 {:.1}us)",
+        out.display(),
+        report.workload.clients,
+        report.workload.requests_per_client,
+        l.requests_per_s,
+        l.bitwise_verified,
+        l.latency.p50_ns / 1e3,
+        l.latency.p99_ns / 1e3
+    );
+    if min_rps > 0.0 {
+        report.require_throughput(min_rps)?;
+    }
     Ok(())
 }
 

@@ -1,0 +1,276 @@
+//! Wire framing for the serving protocol: newline-delimited frames.
+//!
+//! One frame is one line — a request is a JSON sample array, a response
+//! is a JSON object, and `STATS` is a bare keyword. `Json::to_string`
+//! never emits a raw newline (control characters are escaped), so any
+//! payload the server produces is a valid single frame by construction;
+//! the property tests in this module pin that invariant.
+//!
+//! [`FrameReader`] does its own buffering on top of any [`Read`] (a
+//! `TcpStream`, stdin, an in-memory slice), so frames split across
+//! arbitrary read boundaries reassemble correctly, and a byte cap turns
+//! unbounded lines — a hostile client streaming garbage without ever
+//! sending `\n` — into a clean [`FrameError::Oversized`] instead of
+//! unbounded memory growth.
+
+use std::io::Read;
+
+/// Default cap on a single frame (8 MiB — a ~2000-stage sample array is
+/// well under 1 MiB).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// Why a frame could not be produced.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The peer buffered more than `limit` bytes without a newline.
+    Oversized { limit: usize, have: usize },
+    /// The underlying reader failed (includes read timeouts; see
+    /// [`is_timeout`]).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { limit, have } => {
+                write!(f, "frame exceeds {limit} bytes ({have} buffered without a newline)")
+            }
+            FrameError::Io(e) => write!(f, "read frame: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// True when an I/O error is a socket read timeout (`SO_RCVTIMEO`
+/// surfaces as `WouldBlock` on unix, `TimedOut` on windows).
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Incremental line framer over any byte stream.
+pub struct FrameReader<R> {
+    inner: R,
+    buf: Vec<u8>,
+    /// Bytes before this offset are known newline-free (scan resume point).
+    scan_from: usize,
+    max_frame: usize,
+    eof: bool,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R, max_frame: usize) -> FrameReader<R> {
+        FrameReader { inner, buf: Vec::new(), scan_from: 0, max_frame: max_frame.max(1), eof: false }
+    }
+
+    /// Next complete frame, without its line terminator (`\r\n` and `\n`
+    /// both accepted). `Ok(None)` is clean end-of-stream. A final
+    /// unterminated line is yielded as a frame — a client that dies after
+    /// half a request still gets that half parsed (and answered with a
+    /// parse error) rather than silently dropped.
+    pub fn next_frame(&mut self) -> Result<Option<String>, FrameError> {
+        loop {
+            if let Some(rel) = self.buf[self.scan_from..].iter().position(|&b| b == b'\n') {
+                let pos = self.scan_from + rel;
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop();
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                self.scan_from = 0;
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            self.scan_from = self.buf.len();
+            if self.buf.len() > self.max_frame {
+                return Err(FrameError::Oversized { limit: self.max_frame, have: self.buf.len() });
+            }
+            if self.eof {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                let mut line = std::mem::take(&mut self.buf);
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                self.scan_from = 0;
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            let mut chunk = [0u8; 8192];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => self.eof = true,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+    }
+}
+
+/// Write one frame: the line plus `\n`, flushed so a pipelining peer sees
+/// it immediately.
+pub fn write_frame<W: std::io::Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    debug_assert!(!line.contains('\n'), "frames are newline-delimited");
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    /// A reader that hands out its bytes in caller-chosen chunk sizes, to
+    /// exercise frames split across arbitrary read boundaries.
+    struct ChunkedReader {
+        data: Vec<u8>,
+        cuts: Vec<usize>,
+        pos: usize,
+        cut_idx: usize,
+    }
+
+    impl ChunkedReader {
+        fn new(data: Vec<u8>, cuts: Vec<usize>) -> ChunkedReader {
+            ChunkedReader { data, cuts, pos: 0, cut_idx: 0 }
+        }
+    }
+
+    impl Read for ChunkedReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let want = if self.cut_idx < self.cuts.len() {
+                let w = self.cuts[self.cut_idx].max(1);
+                self.cut_idx += 1;
+                w
+            } else {
+                self.data.len() - self.pos
+            };
+            let n = want.min(out.len()).min(self.data.len() - self.pos);
+            out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn read_all(reader: ChunkedReader, max: usize) -> Result<Vec<String>, FrameError> {
+        let mut fr = FrameReader::new(reader, max);
+        let mut out = Vec::new();
+        while let Some(frame) = fr.next_frame()? {
+            out.push(frame);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn basic_lines_and_crlf() {
+        let data = b"abc\ndef\r\n\nxyz".to_vec();
+        let frames = read_all(ChunkedReader::new(data, vec![]), 1024).unwrap();
+        assert_eq!(frames, vec!["abc", "def", "", "xyz"]);
+    }
+
+    #[test]
+    fn oversized_line_is_detected_before_newline() {
+        // 100 bytes buffered, cap 64, no newline anywhere: the reader must
+        // fail while buffering, not wait forever for a terminator.
+        let data = vec![b'x'; 100];
+        match read_all(ChunkedReader::new(data, vec![7, 9, 3]), 64) {
+            Err(FrameError::Oversized { limit: 64, .. }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_clean_eof() {
+        let frames = read_all(ChunkedReader::new(Vec::new(), vec![]), 64).unwrap();
+        assert!(frames.is_empty());
+    }
+
+    fn random_frame(r: &mut Rng) -> String {
+        let len = r.gen_range(80);
+        (0..len)
+            .map(|_| {
+                // printable ASCII plus some multi-byte UTF-8, never '\n'
+                match r.gen_range(10) {
+                    0 => 'λ',
+                    1 => '→',
+                    2 => '\t',
+                    _ => (b' ' + r.gen_range(95) as u8) as char,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_frames_roundtrip_across_arbitrary_read_boundaries() {
+        propcheck::check_rng(
+            "framing-roundtrip",
+            0xF8A31,
+            propcheck::default_cases(),
+            |r| {
+                let frames: Vec<String> = (0..r.gen_range_incl(1, 12))
+                    .map(|_| random_frame(r))
+                    .collect();
+                let mut wire = Vec::new();
+                for f in &frames {
+                    write_frame(&mut wire, f).map_err(|e| e.to_string())?;
+                }
+                let cuts: Vec<usize> =
+                    (0..r.gen_range(20)).map(|_| r.gen_range_incl(1, 9)).collect();
+                let got = read_all(ChunkedReader::new(wire, cuts), 1 << 16)
+                    .map_err(|e| e.to_string())?;
+                if got == frames {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch: sent {frames:?}, got {got:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_json_payloads_never_contain_raw_newlines() {
+        // The protocol is sound only because every JSON payload the server
+        // or client emits is newline-free; Json escapes control characters,
+        // and this pins it for strings embedding '\n', '\r' and friends.
+        use crate::util::json::Json;
+        propcheck::check(
+            "json-newline-free",
+            0x11E,
+            propcheck::default_cases(),
+            |r| {
+                let noisy: String = (0..r.gen_range(40))
+                    .map(|_| match r.gen_range(6) {
+                        0 => '\n',
+                        1 => '\r',
+                        2 => '"',
+                        3 => '\\',
+                        _ => (b'a' + r.gen_range(26) as u8) as char,
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("error", Json::Str(noisy)),
+                    ("value", Json::Num(r.f64() * 1e-3)),
+                ])
+            },
+            |j| {
+                let text = j.to_string();
+                if text.contains('\n') || text.contains('\r') {
+                    return Err(format!("raw newline in serialized JSON: {text:?}"));
+                }
+                // and the escaped form still round-trips
+                Json::parse(&text).map(|_| ()).map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn trailing_unterminated_line_is_yielded() {
+        let data = b"complete\nhalf-writ".to_vec();
+        let frames = read_all(ChunkedReader::new(data, vec![4, 4, 4]), 1024).unwrap();
+        assert_eq!(frames, vec!["complete", "half-writ"]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Request-latency recording for the serving layer.
+//!
+//! A fixed-size reservoir (algorithm R, driven by the crate's own
+//! deterministic [`Rng`]) keeps percentiles exact while the sample count
+//! stays under the cap and an unbiased sample beyond it, so a week-long
+//! daemon reports honest p99 without unbounded memory. Snapshots also
+//! bin the sampled values into power-of-two buckets — the latency
+//! histogram `BENCH_6.json` records.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Reservoir size: exact percentiles up to 64 Ki recorded latencies.
+pub const RESERVOIR_CAP: usize = 1 << 16;
+
+struct RecorderState {
+    reservoir: Vec<u64>,
+    seen: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    rng: Rng,
+}
+
+/// Thread-safe latency reservoir; `record` is called from every
+/// connection's writer thread, `snapshot` from `STATS` handlers.
+pub struct LatencyRecorder {
+    state: Mutex<RecorderState>,
+}
+
+fn lock(state: &Mutex<RecorderState>) -> MutexGuard<'_, RecorderState> {
+    state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder {
+            state: Mutex::new(RecorderState {
+                reservoir: Vec::new(),
+                seen: 0,
+                sum_ns: 0,
+                max_ns: 0,
+                rng: Rng::new(0x1A7E1),
+            }),
+        }
+    }
+
+    /// Record one request latency in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        let mut s = lock(&self.state);
+        s.seen += 1;
+        s.sum_ns += ns as u128;
+        s.max_ns = s.max_ns.max(ns);
+        if s.reservoir.len() < RESERVOIR_CAP {
+            s.reservoir.push(ns);
+        } else {
+            let seen = s.seen as usize;
+            let j = s.rng.gen_range(seen);
+            if j < RESERVOIR_CAP {
+                s.reservoir[j] = ns;
+            }
+        }
+    }
+
+    /// Record one request latency from a [`Duration`].
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time summary of everything recorded so far.
+    pub fn snapshot(&self) -> LatencySummary {
+        let s = lock(&self.state);
+        if s.reservoir.is_empty() {
+            return LatencySummary {
+                count: 0,
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p90_ns: 0.0,
+                p99_ns: 0.0,
+                max_ns: 0,
+                buckets: Vec::new(),
+            };
+        }
+        let xs: Vec<f64> = s.reservoir.iter().map(|&v| v as f64).collect();
+        let mut counts = [0u64; 64];
+        for &v in &s.reservoir {
+            counts[v.max(1).ilog2() as usize] += 1;
+        }
+        let buckets = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| LatencyBucket {
+                lo_ns: 1u64 << i,
+                hi_ns: if i + 1 < 64 { (1u64 << (i + 1)) - 1 } else { u64::MAX },
+                count: c,
+            })
+            .collect();
+        LatencySummary {
+            count: s.seen,
+            mean_ns: (s.sum_ns as f64) / (s.seen as f64),
+            p50_ns: percentile(&xs, 50.0),
+            p90_ns: percentile(&xs, 90.0),
+            p99_ns: percentile(&xs, 99.0),
+            max_ns: s.max_ns,
+            buckets,
+        }
+    }
+}
+
+/// One power-of-two histogram bucket: latencies in `[lo_ns, hi_ns]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyBucket {
+    pub lo_ns: u64,
+    pub hi_ns: u64,
+    pub count: u64,
+}
+
+/// Summary statistics over the recorded (or reservoir-sampled) latencies.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    /// Total latencies recorded (not capped by the reservoir).
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: u64,
+    pub buckets: Vec<LatencyBucket>,
+}
+
+impl LatencySummary {
+    /// The JSON shape shared by `STATS` responses and `BENCH_6.json`.
+    pub fn to_json(&self) -> Json {
+        let hist: Vec<Json> = self
+            .buckets
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("lo_ns", Json::Num(b.lo_ns as f64)),
+                    ("hi_ns", Json::Num(b.hi_ns as f64)),
+                    ("count", Json::Num(b.count as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p90_ns", Json::Num(self.p90_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+            ("histogram", Json::Arr(hist)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let rec = LatencyRecorder::new();
+        let s = rec.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max_ns, 0);
+        assert!(s.buckets.is_empty());
+    }
+
+    #[test]
+    fn exact_percentiles_under_cap() {
+        let rec = LatencyRecorder::new();
+        for v in 1..=100u64 {
+            rec.record_ns(v * 1000);
+        }
+        let s = rec.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_ns, 100_000);
+        assert!((s.mean_ns - 50_500.0).abs() < 1e-9);
+        assert!((s.p50_ns - 50_500.0).abs() < 1e-9);
+        // linear interpolation on ranks: p99 of 1k..=100k lands at 99.01k
+        assert!((s.p99_ns - 99_010.0).abs() < 1e-6, "p99 {}", s.p99_ns);
+    }
+
+    #[test]
+    fn histogram_buckets_partition_the_samples() {
+        let rec = LatencyRecorder::new();
+        for v in [3u64, 5, 9, 17, 1000, 1001] {
+            rec.record_ns(v);
+        }
+        let s = rec.snapshot();
+        let total: u64 = s.buckets.iter().map(|b| b.count).sum();
+        assert_eq!(total, 6);
+        for b in &s.buckets {
+            assert!(b.lo_ns <= b.hi_ns);
+            assert!(b.lo_ns.is_power_of_two());
+        }
+        // 1000 and 1001 share the [512, 1023] bucket
+        assert!(s.buckets.iter().any(|b| b.lo_ns == 512 && b.count == 2));
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_past_the_cap() {
+        let rec = LatencyRecorder::new();
+        for v in 0..(RESERVOIR_CAP as u64 + 500) {
+            rec.record_ns(v + 1);
+        }
+        let s = rec.snapshot();
+        assert_eq!(s.count, RESERVOIR_CAP as u64 + 500);
+        assert_eq!(s.max_ns, RESERVOIR_CAP as u64 + 500);
+        // sampled percentiles stay in range even after replacement kicks in
+        assert!(s.p50_ns >= 1.0 && s.p50_ns <= s.max_ns as f64);
+        assert!(s.p99_ns >= s.p50_ns);
+    }
+
+    #[test]
+    fn summary_json_has_the_bench6_fields() {
+        let rec = LatencyRecorder::new();
+        rec.record(Duration::from_micros(120));
+        let j = rec.snapshot().to_json();
+        let text = j.to_string();
+        for key in ["p50_ns", "p99_ns", "histogram", "mean_ns"] {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
+        Json::parse(&text).unwrap();
+    }
+}

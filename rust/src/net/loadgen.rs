@@ -1,0 +1,398 @@
+//! Concurrent load generator for the TCP serving front-end — the
+//! `gcn-perf loadgen` subcommand and the workhorse of
+//! [`crate::eval::net_bench`].
+//!
+//! Simulates many concurrent clients, each pipelining requests over one
+//! connection under a sliding window (`pipeline_depth` in flight) at an
+//! optional per-client arrival rate. Every response is checked
+//! structurally, and — when the caller supplies direct
+//! `Predictor::predict` outputs for the sample pool — **bitwise**: the
+//! serving path (JSON framing included; `Json` float formatting is
+//! round-trip exact) must reproduce direct predictions to the last bit,
+//! whatever batches the coalescer fused. Request composition is a pure
+//! function of `(client, request index, pool)`, so a run is exactly
+//! reproducible and the expected values are known up front.
+//!
+//! Clients tolerate a server that drains mid-load (shutdown tests):
+//! send errors and early EOF end the run gracefully with partial
+//! counts, and every response that did arrive is still verified.
+
+use crate::dataset::json::samples_to_json;
+use crate::dataset::sample::GraphSample;
+use crate::net::framing::{write_frame, FrameReader, DEFAULT_MAX_FRAME_BYTES};
+use crate::net::latency::{LatencyRecorder, LatencySummary};
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Workload shape for one loadgen run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests each client sends over its one connection.
+    pub requests_per_client: usize,
+    /// Samples per request line.
+    pub samples_per_request: usize,
+    /// Per-client arrival rate in requests/s; 0 = send as fast as the
+    /// window allows.
+    pub rate_per_client: f64,
+    /// Sliding window: requests in flight per connection.
+    pub pipeline_depth: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            clients: 32,
+            requests_per_client: 32,
+            samples_per_request: 4,
+            rate_per_client: 0.0,
+            pipeline_depth: 8,
+        }
+    }
+}
+
+/// Aggregated results of one run.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub requests_sent: usize,
+    pub responses_ok: usize,
+    pub responses_err: usize,
+    /// Responses checked bitwise against direct predictions (0 when no
+    /// expected values were supplied).
+    pub bitwise_verified: usize,
+    /// Individual sample predictions received.
+    pub samples_scored: usize,
+    pub wall_ns: f64,
+    pub requests_per_s: f64,
+    pub samples_per_s: f64,
+    pub latency: LatencySummary,
+}
+
+impl LoadgenReport {
+    /// Error unless aggregate throughput met `min_rps`. Enforced by the
+    /// serial CI smoke (`loadgen --fast --min-rps ...`), not by
+    /// `cargo test`, so the test suite stays deterministic on noisy
+    /// shared runners.
+    pub fn require_throughput(&self, min_rps: f64) -> Result<()> {
+        ensure!(
+            self.requests_per_s >= min_rps,
+            "loadgen throughput {:.1} req/s is under the floor of {min_rps:.1} req/s",
+            self.requests_per_s
+        );
+        Ok(())
+    }
+}
+
+/// The pool indices request `(c, i)` scores: deterministic, striding the
+/// pool so every client mixes all graph sizes (tiny generator pipelines
+/// and resnet50 alike, when the pool holds both).
+pub fn request_indices(c: usize, i: usize, spr: usize, pool_len: usize) -> Vec<usize> {
+    (0..spr).map(|j| (c * 131 + i * 17 + j) % pool_len).collect()
+}
+
+/// Pull the per-sample predictions out of one response object.
+fn parse_predictions(j: &Json) -> Result<Vec<f64>> {
+    let rows = j
+        .get("predictions")
+        .and_then(|p| p.as_arr())
+        .context("response lacks a 'predictions' array")?;
+    rows.iter()
+        .map(|r| {
+            r.get("predicted_runtime_s")
+                .and_then(|v| v.as_f64())
+                .context("prediction row lacks 'predicted_runtime_s'")
+        })
+        .collect()
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct WinState {
+    inflight: usize,
+    /// Set by the reader when the connection is done — unblocks a sender
+    /// waiting on the window after an early server close.
+    dead: bool,
+}
+
+struct Window {
+    m: Mutex<WinState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct ClientOut {
+    sent: usize,
+    ok: usize,
+    err: usize,
+    verified: usize,
+    samples: usize,
+}
+
+/// Many concurrent connects can outrun the accept loop's backlog; a
+/// short retry keeps client start-up from being a flake source.
+fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for _ in 0..20 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+    Err(anyhow!("connect {addr}: {}", last.expect("retry loop recorded an error")))
+}
+
+fn client_run(
+    addr: &str,
+    pool: &[GraphSample],
+    expected: Option<&[f64]>,
+    cfg: &LoadgenConfig,
+    c: usize,
+    latency: &LatencyRecorder,
+) -> Result<ClientOut> {
+    let n = cfg.requests_per_client;
+    let spr = cfg.samples_per_request;
+    let depth = cfg.pipeline_depth.max(1);
+    let stream = connect_retry(addr)?;
+    let _ = stream.set_nodelay(true);
+    let reader = stream.try_clone().context("clone client socket")?;
+
+    // expected predictions per request, resolved through the same index
+    // function the sender uses
+    let expected_rows: Option<Vec<Vec<f64>>> = expected.map(|ex| {
+        (0..n)
+            .map(|i| request_indices(c, i, spr, pool.len()).iter().map(|&k| ex[k]).collect())
+            .collect()
+    });
+
+    let window = Window { m: Mutex::new(WinState { inflight: 0, dead: false }), cv: Condvar::new() };
+    let send_ts: Mutex<Vec<Option<Instant>>> = Mutex::new(vec![None; n]);
+
+    std::thread::scope(|scope| {
+        let window = &window;
+        let send_ts = &send_ts;
+        let sender = scope.spawn(move || -> usize {
+            let mut w = stream;
+            let gap = (cfg.rate_per_client > 0.0)
+                .then(|| Duration::from_secs_f64(1.0 / cfg.rate_per_client));
+            let t0 = Instant::now();
+            let mut sent = 0usize;
+            for i in 0..n {
+                {
+                    let mut st = lock(&window.m);
+                    while st.inflight >= depth && !st.dead {
+                        st = window.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                    if st.dead {
+                        break;
+                    }
+                    st.inflight += 1;
+                }
+                if let Some(g) = gap {
+                    // arrival-rate shaping (not synchronization): keep the
+                    // i-th send at t0 + i/rate
+                    let target = t0 + g.mul_f64(i as f64);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                }
+                let samples: Vec<GraphSample> = request_indices(c, i, spr, pool.len())
+                    .iter()
+                    .map(|&k| pool[k].clone())
+                    .collect();
+                let line = samples_to_json(&samples);
+                lock(send_ts)[i] = Some(Instant::now());
+                if write_frame(&mut w, &line).is_err() {
+                    break; // server drained mid-load; reader will see EOF
+                }
+                sent += 1;
+            }
+            // half-close: tells the server this client is done, so its
+            // session answers what it accepted and closes cleanly
+            let _ = w.shutdown(Shutdown::Write);
+            sent
+        });
+
+        let result = (|| -> Result<ClientOut> {
+            let mut frames = FrameReader::new(reader, DEFAULT_MAX_FRAME_BYTES);
+            let mut out = ClientOut::default();
+            let mut next = 0usize;
+            loop {
+                match frames.next_frame() {
+                    Ok(Some(line)) => {
+                        {
+                            let mut st = lock(&window.m);
+                            st.inflight = st.inflight.saturating_sub(1);
+                            window.cv.notify_all();
+                        }
+                        if let Some(t) = lock(send_ts).get(next).copied().flatten() {
+                            latency.record(t.elapsed());
+                        }
+                        let j = Json::parse(&line)
+                            .map_err(|e| anyhow!("client {c}: unparseable response: {e}"))?;
+                        if j.get("error").is_some() {
+                            out.err += 1;
+                        } else {
+                            let preds = parse_predictions(&j)
+                                .with_context(|| format!("client {c} response {next}"))?;
+                            out.samples += preds.len();
+                            if let Some(rows) = &expected_rows {
+                                let want = &rows[next];
+                                ensure!(
+                                    preds.len() == want.len(),
+                                    "client {c} response {next}: {} predictions, expected {}",
+                                    preds.len(),
+                                    want.len()
+                                );
+                                ensure!(
+                                    preds.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                                    "client {c} response {next}: predictions diverge bitwise \
+                                     from direct Predictor::predict"
+                                );
+                                out.verified += 1;
+                            }
+                            out.ok += 1;
+                        }
+                        next += 1;
+                        if next == n {
+                            break;
+                        }
+                    }
+                    Ok(None) => break, // server closed early (drain) — keep partial counts
+                    Err(_) => break,   // reset mid-load — ditto
+                }
+            }
+            Ok(out)
+        })();
+
+        // always unblock the sender before propagating any reader error,
+        // or the scope would deadlock joining it
+        {
+            let mut st = lock(&window.m);
+            st.dead = true;
+            window.cv.notify_all();
+        }
+        let sent = sender.join().unwrap_or(0);
+        result.map(|mut out| {
+            out.sent = sent;
+            out
+        })
+    })
+}
+
+/// Run the full fleet against `addr` and aggregate. `expected[k]` (when
+/// given) is `Predictor::predict`'s direct output for `pool[k]`; every
+/// response is then verified bitwise and any divergence fails the run.
+pub fn run_loadgen(
+    addr: &str,
+    pool: &[GraphSample],
+    expected: Option<&[f64]>,
+    cfg: &LoadgenConfig,
+) -> Result<LoadgenReport> {
+    ensure!(!pool.is_empty(), "loadgen needs a non-empty sample pool");
+    ensure!(
+        cfg.clients >= 1 && cfg.requests_per_client >= 1 && cfg.samples_per_request >= 1,
+        "loadgen config must have at least one client, request and sample"
+    );
+    if let Some(ex) = expected {
+        ensure!(
+            ex.len() == pool.len(),
+            "expected predictions ({}) must match the pool ({})",
+            ex.len(),
+            pool.len()
+        );
+    }
+    let latency = LatencyRecorder::new();
+    let t0 = Instant::now();
+    let outs: Vec<Result<ClientOut>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                let latency = &latency;
+                scope.spawn(move || client_run(addr, pool, expected, cfg, c, latency))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("loadgen client panicked")).and_then(|r| r))
+            .collect()
+    });
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+
+    let mut report = LoadgenReport {
+        clients: cfg.clients,
+        requests_sent: 0,
+        responses_ok: 0,
+        responses_err: 0,
+        bitwise_verified: 0,
+        samples_scored: 0,
+        wall_ns,
+        requests_per_s: 0.0,
+        samples_per_s: 0.0,
+        latency: latency.snapshot(),
+    };
+    for o in outs {
+        let o = o?;
+        report.requests_sent += o.sent;
+        report.responses_ok += o.ok;
+        report.responses_err += o.err;
+        report.bitwise_verified += o.verified;
+        report.samples_scored += o.samples;
+    }
+    let wall_s = (wall_ns / 1e9).max(1e-9);
+    report.requests_per_s = (report.responses_ok + report.responses_err) as f64 / wall_s;
+    report.samples_per_s = report.samples_scored as f64 / wall_s;
+    Ok(report)
+}
+
+/// One-shot `STATS` query over a fresh connection.
+pub fn fetch_stats(addr: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    write_frame(&mut stream, "STATS").context("send STATS")?;
+    let reader = stream.try_clone().context("clone stats socket")?;
+    let mut frames = FrameReader::new(reader, DEFAULT_MAX_FRAME_BYTES);
+    let line = frames
+        .next_frame()
+        .map_err(|e| anyhow!("read STATS response: {e}"))?
+        .context("server closed before answering STATS")?;
+    let _ = stream.shutdown(Shutdown::Both);
+    Json::parse(&line).map_err(|e| anyhow!("parse STATS response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_indices_are_deterministic_and_in_range() {
+        let a = request_indices(3, 7, 4, 36);
+        let b = request_indices(3, 7, 4, 36);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|&k| k < 36));
+        assert_ne!(a, request_indices(4, 7, 4, 36));
+    }
+
+    #[test]
+    fn parse_predictions_reads_the_report_shape() {
+        let j = Json::parse(
+            r#"{"model":"gcn","predictions":[
+                {"pipeline_id":0,"schedule_id":1,"predicted_runtime_s":0.125},
+                {"pipeline_id":0,"schedule_id":2,"predicted_runtime_s":3.5e-4}]}"#,
+        )
+        .unwrap();
+        let p = parse_predictions(&j).unwrap();
+        assert_eq!(p, vec![0.125, 3.5e-4]);
+        assert!(parse_predictions(&Json::parse(r#"{"error":"x"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Network serving: the multi-client TCP front-end for the
+//! [`crate::predictor::PredictService`], plus the load-test harness that
+//! proves it out.
+//!
+//! The wire protocol is the same line-delimited JSON `gcn-perf serve`
+//! has always spoken on stdin — one request (a JSON sample array, or
+//! the `STATS` keyword) per line, one JSON response per line, in
+//! request order — now shared verbatim between both front-ends through
+//! [`session::serve_session`]. Layers:
+//!
+//! * [`framing`] — newline-delimited frames over any byte stream, with
+//!   a byte cap and split-read reassembly;
+//! * [`session`] — one client's protocol loop: pipelined submission
+//!   into the service, FIFO response writer, `STATS`;
+//! * [`server`] — thread-per-connection TCP listener with admission
+//!   control, per-connection fairness windows and graceful drain;
+//! * [`signal`] — SIGTERM/SIGINT → shutdown-flag bridge for the daemon;
+//! * [`latency`] — reservoir latency recorder behind `STATS` p50/p99
+//!   and the `BENCH_6.json` histogram;
+//! * [`loadgen`] — the concurrent client fleet (`gcn-perf loadgen`)
+//!   with bitwise verification against direct predictions.
+//!
+//! See DESIGN.md §"Network serving" for the protocol grammar,
+//! connection lifecycle and drain semantics.
+
+pub mod framing;
+pub mod latency;
+pub mod loadgen;
+pub mod server;
+pub mod session;
+pub mod signal;
+
+pub use framing::{is_timeout, write_frame, FrameError, FrameReader, DEFAULT_MAX_FRAME_BYTES};
+pub use latency::{LatencyRecorder, LatencySummary};
+pub use loadgen::{fetch_stats, run_loadgen, LoadgenConfig, LoadgenReport};
+pub use server::{ServerReport, TcpServer, TcpServerConfig};
+pub use session::{
+    error_json, prediction_report, sample_ids, serve_session, stats_json, CloseReason,
+    ServeShared, ServerCounters, SessionOpts, SessionSummary,
+};

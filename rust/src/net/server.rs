@@ -1,0 +1,224 @@
+//! Multi-client TCP front-end for the [`PredictService`] — the
+//! `gcn-perf serve --listen ADDR` daemon.
+//!
+//! Thread-per-connection over the service's bounded queue: the accept
+//! loop hands each socket to a [`serve_session`] running the same
+//! line-protocol loop stdin mode uses. Scheduling is fair by
+//! construction — every connection gets at most
+//! `max_inflight_per_conn` requests into the *shared FIFO* service
+//! queue, so one flooding client saturates its own window and then
+//! waits behind everyone else's submissions instead of monopolizing the
+//! workers. Admission control caps concurrent connections; excess
+//! clients get one `{"error": ...}` line and a close.
+//!
+//! **Graceful drain.** Shutdown is an `Arc<AtomicBool>` (set by
+//! SIGTERM/SIGINT via [`crate::net::signal`], by [`TcpServer::shutdown_now`],
+//! or directly in tests). The accept loop polls it (the listener is
+//! non-blocking), and on shutdown: stop accepting, half-close every
+//! live connection's *read* side — each session sees EOF, answers
+//! everything already submitted, and exits — then join the connection
+//! threads. Every accepted request still gets exactly one response;
+//! only unread bytes are dropped.
+
+use crate::net::framing::write_frame;
+use crate::net::session::{error_json, serve_session, ServeShared, SessionOpts};
+use crate::predictor::PredictService;
+use crate::util::threadpool::spawn_named;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Knobs for the TCP front-end.
+#[derive(Debug, Clone)]
+pub struct TcpServerConfig {
+    /// Concurrent-connection cap (admission control).
+    pub max_conns: usize,
+    /// Per-line byte cap, enforced by the framer.
+    pub max_frame_bytes: usize,
+    /// Pipelining window per connection (fairness bound).
+    pub max_inflight_per_conn: usize,
+    /// Read timeout per connection; `None` waits forever. Production
+    /// daemons set this to evict slow-loris peers that hold sockets
+    /// open without completing a line.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for TcpServerConfig {
+    fn default() -> Self {
+        TcpServerConfig {
+            max_conns: 256,
+            max_frame_bytes: crate::net::framing::DEFAULT_MAX_FRAME_BYTES,
+            max_inflight_per_conn: 32,
+            read_timeout: None,
+        }
+    }
+}
+
+/// Lifetime totals, reported by [`TcpServer::join`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerReport {
+    pub connections: usize,
+    pub rejected: usize,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A running TCP front-end. Bind with [`TcpServer::bind`], stop by
+/// setting the shutdown flag (or [`TcpServer::shutdown_now`]), then
+/// [`TcpServer::join`] for the drained report.
+pub struct TcpServer {
+    addr: SocketAddr,
+    shared: ServeShared,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting. `shutdown` is the caller's drain trigger.
+    pub fn bind(
+        addr: &str,
+        shared: ServeShared,
+        cfg: TcpServerConfig,
+        shutdown: Arc<AtomicBool>,
+    ) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let accept_thread = {
+            let shared = shared.clone();
+            let shutdown = Arc::clone(&shutdown);
+            spawn_named("net-accept".to_string(), move || {
+                accept_loop(&listener, &shared, &cfg, &shutdown);
+            })
+        };
+        Ok(TcpServer { addr: local, shared, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address — the real port when bound to `:0`.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The underlying service (for direct submissions in tests).
+    pub fn service(&self) -> &Arc<PredictService> {
+        &self.shared.service
+    }
+
+    /// Trigger the graceful drain without waiting for it.
+    pub fn shutdown_now(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait until the shutdown flag stops the accept loop and every
+    /// connection has drained; returns the lifetime totals.
+    pub fn join(mut self) -> Result<ServerReport> {
+        if let Some(h) = self.accept_thread.take() {
+            h.join().map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        }
+        let c = &self.shared.counters;
+        Ok(ServerReport {
+            connections: c.connections_total.load(Ordering::Relaxed),
+            rejected: c.connections_rejected.load(Ordering::Relaxed),
+        })
+    }
+}
+
+impl Drop for TcpServer {
+    /// A dropped (un-`join`ed) server still drains instead of leaking
+    /// its accept loop.
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &ServeShared,
+    cfg: &TcpServerConfig,
+    shutdown: &Arc<AtomicBool>,
+) {
+    // Non-blocking so the loop can poll the shutdown flag; accepted
+    // sockets are switched back to blocking below (accept(2) does not
+    // propagate O_NONBLOCK to them on Linux, but that is not portable).
+    let _ = listener.set_nonblocking(true);
+    let registry: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_id = 0u64;
+
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                if shared.counters.connections_active.load(Ordering::Relaxed) >= cfg.max_conns {
+                    shared.counters.connections_rejected.fetch_add(1, Ordering::Relaxed);
+                    let mut s = stream;
+                    let msg = format!("server at capacity ({} connections)", cfg.max_conns);
+                    let _ = write_frame(&mut s, &error_json(&msg).to_string());
+                    continue; // dropping `s` closes it
+                }
+                shared.counters.connections_total.fetch_add(1, Ordering::Relaxed);
+                shared.counters.connections_active.fetch_add(1, Ordering::Relaxed);
+                let id = next_id;
+                next_id += 1;
+                // a second handle to the socket, so the drain below can
+                // half-close connections the session thread owns
+                if let Ok(clone) = stream.try_clone() {
+                    lock(&registry).insert(id, clone);
+                }
+                let shared = shared.clone();
+                let cfg = cfg.clone();
+                let registry = Arc::clone(&registry);
+                conn_threads.push(spawn_named(format!("net-conn-{id}"), move || {
+                    handle_conn(stream, &shared, &cfg);
+                    lock(&registry).remove(&id);
+                    shared.counters.connections_active.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // poll tick: reap finished sessions, then wait a beat
+                conn_threads.retain(|h| !h.is_finished());
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // transient accept failure (ECONNABORTED, fd pressure):
+            // back off instead of spinning or dying
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+
+    // Graceful drain: half-close every live connection's read side so
+    // its session sees EOF and finishes what was already submitted. A
+    // bounded write timeout keeps a peer that stopped *reading* from
+    // stalling the drain forever.
+    for stream in lock(&registry).values() {
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+        let _ = stream.shutdown(Shutdown::Read);
+    }
+    for h in conn_threads {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &ServeShared, cfg: &TcpServerConfig) {
+    let _ = stream.set_nodelay(true);
+    if let Some(t) = cfg.read_timeout {
+        let _ = stream.set_read_timeout(Some(t));
+    }
+    let Ok(reader) = stream.try_clone() else { return };
+    let opts = SessionOpts {
+        max_frame_bytes: cfg.max_frame_bytes,
+        max_inflight: cfg.max_inflight_per_conn,
+    };
+    // session outcomes (EOF, timeout, oversize) are per-connection by
+    // design — nothing here can poison the shared service
+    let _ = serve_session(reader, stream, shared, &opts);
+}

@@ -1,0 +1,288 @@
+//! One serving session: the line-delimited JSON protocol over any byte
+//! stream.
+//!
+//! Both front-ends run this exact loop — `gcn-perf serve` in stdin mode
+//! passes stdin/stdout, the TCP server passes each accepted socket — so
+//! protocol behavior (pipelining, backpressure, `STATS`, error replies)
+//! cannot drift between the two. Per session:
+//!
+//! * a reader loop frames lines ([`FrameReader`]), parses each request
+//!   and submits it to the shared [`PredictService`] immediately
+//!   (*pipelining*: up to `max_inflight` requests from this peer ride
+//!   the service queue at once, so concurrent lines coalesce into fused
+//!   batches);
+//! * a writer thread drains completions in FIFO order, preserving the
+//!   one-response-per-request-line, in-request-order contract;
+//! * backpressure composes: the FIFO channel is bounded by
+//!   `max_inflight` and `PredictService::submit` blocks at `queue_cap`,
+//!   so a flooding peer stalls its own reader (and, over TCP, its own
+//!   socket) instead of growing server memory.
+//!
+//! The `STATS` keyword answers with a point-in-time counter snapshot
+//! (service counters, connection counters, latency percentiles) through
+//! the same ordered response channel.
+
+use crate::dataset::json::samples_from_json;
+use crate::dataset::sample::GraphSample;
+use crate::net::framing::{is_timeout, write_frame, FrameError, FrameReader};
+use crate::net::latency::LatencyRecorder;
+use crate::predictor::{PredictHandle, PredictRequest, PredictService};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Monotonic front-end counters, shared by every session on one server
+/// (or the single stdin session) and reported by `STATS`.
+#[derive(Debug, Default)]
+pub struct ServerCounters {
+    /// Connections ever accepted (0 in stdin mode).
+    pub connections_total: AtomicUsize,
+    /// Connections currently being served.
+    pub connections_active: AtomicUsize,
+    /// Connections turned away by admission control.
+    pub connections_rejected: AtomicUsize,
+    /// Non-empty request lines read (predictions + `STATS`).
+    pub request_lines: AtomicUsize,
+    /// Response lines written.
+    pub responses: AtomicUsize,
+    /// Requests answered with an `{"error": ...}` line.
+    pub protocol_errors: AtomicUsize,
+}
+
+/// Everything a session needs from its server: the service plus the
+/// shared observability state. Cheap to clone (all `Arc`s).
+#[derive(Clone)]
+pub struct ServeShared {
+    pub service: Arc<PredictService>,
+    pub latency: Arc<LatencyRecorder>,
+    pub counters: Arc<ServerCounters>,
+}
+
+impl ServeShared {
+    /// Wrap a service with fresh counters and latency state.
+    pub fn new(service: Arc<PredictService>) -> ServeShared {
+        ServeShared {
+            service,
+            latency: Arc::new(LatencyRecorder::new()),
+            counters: Arc::new(ServerCounters::default()),
+        }
+    }
+}
+
+/// Per-session knobs (the server derives them from its config; stdin
+/// mode from CLI flags).
+#[derive(Debug, Clone)]
+pub struct SessionOpts {
+    /// Cap on one request line; longer peers get an error and a close.
+    pub max_frame_bytes: usize,
+    /// Pipelining window: requests from this peer in flight at once.
+    pub max_inflight: usize,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            max_frame_bytes: crate::net::framing::DEFAULT_MAX_FRAME_BYTES,
+            max_inflight: 32,
+        }
+    }
+}
+
+/// Why the session's reader stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Clean end-of-stream (peer finished, or the server drained it).
+    Eof,
+    /// The peer held the connection open past the read timeout.
+    ReadTimeout,
+    /// The peer exceeded `max_frame_bytes` on one line.
+    Oversized,
+    /// The write side failed (peer stopped reading / closed), so there
+    /// is nobody left to answer.
+    WriterClosed,
+}
+
+/// What one session did, for logs and tests.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionSummary {
+    /// Prediction requests accepted by the service.
+    pub requests: usize,
+    /// Response lines successfully written (predictions, stats, errors).
+    pub responses: usize,
+    pub reason: CloseReason,
+}
+
+/// What the writer emits for one request line: an immediate answer
+/// (stats snapshot, parse/submit error) or a pending service completion.
+enum Outcome {
+    Ready(Json),
+    Pending { ids: Vec<(u32, u32)>, handle: PredictHandle, submitted: Instant },
+}
+
+/// `(pipeline_id, schedule_id)` pairs — all a prediction report needs
+/// from the request, captured before the samples move into the service.
+pub fn sample_ids(samples: &[GraphSample]) -> Vec<(u32, u32)> {
+    samples.iter().map(|s| (s.pipeline_id, s.schedule_id)).collect()
+}
+
+/// Build the `{"model": ..., "predictions": [...]}` response object for
+/// a set of served samples (shared by `predict`, stdin serve and TCP).
+pub fn prediction_report(model: &str, ids: &[(u32, u32)], preds: &[f64]) -> Json {
+    let rows: Vec<Json> = ids
+        .iter()
+        .zip(preds)
+        .map(|(&(pid, sid), &p)| {
+            Json::obj(vec![
+                ("pipeline_id", Json::Num(pid as f64)),
+                ("schedule_id", Json::Num(sid as f64)),
+                ("predicted_runtime_s", Json::Num(p)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::Str(model.to_string())),
+        ("predictions", Json::Arr(rows)),
+    ])
+}
+
+/// The `{"error": ...}` response line.
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+/// The `STATS` response: one `{"stats": {...}}` object joining service
+/// counters, front-end counters and the latency summary. Identical in
+/// stdin and TCP mode by construction — both call this.
+pub fn stats_json(shared: &ServeShared) -> Json {
+    let s = shared.service.stats();
+    let c = &shared.counters;
+    let n = |v: usize| Json::Num(v as f64);
+    Json::obj(vec![(
+        "stats",
+        Json::obj(vec![
+            ("model", Json::Str(shared.service.model_name())),
+            ("requests", n(s.requests)),
+            ("batches", n(s.batches)),
+            ("samples_evaluated", n(s.samples_evaluated)),
+            ("cache_hits", n(s.cache_hits)),
+            ("cache_misses", n(s.cache_misses)),
+            ("peak_queue", n(s.peak_queue)),
+            ("queue_cap", n(shared.service.queue_cap())),
+            ("connections_total", n(c.connections_total.load(Ordering::Relaxed))),
+            ("connections_active", n(c.connections_active.load(Ordering::Relaxed))),
+            ("connections_rejected", n(c.connections_rejected.load(Ordering::Relaxed))),
+            ("request_lines", n(c.request_lines.load(Ordering::Relaxed))),
+            ("responses", n(c.responses.load(Ordering::Relaxed))),
+            ("protocol_errors", n(c.protocol_errors.load(Ordering::Relaxed))),
+            ("latency", shared.latency.snapshot().to_json()),
+        ]),
+    )])
+}
+
+/// Run one session to completion: read frames from `reader`, write one
+/// response line per request to `writer`, in request order. Returns when
+/// the peer is done (EOF), misbehaves (oversize, timeout) or stops
+/// reading responses — never because of a bad request, which is answered
+/// inline and served past.
+pub fn serve_session<R: Read, W: Write + Send>(
+    reader: R,
+    writer: W,
+    shared: &ServeShared,
+    opts: &SessionOpts,
+) -> Result<SessionSummary> {
+    let mut frames = FrameReader::new(reader, opts.max_frame_bytes);
+    let (tx, rx) = mpsc::sync_channel::<Outcome>(opts.max_inflight.max(1));
+
+    std::thread::scope(|scope| {
+        let writer_handle = scope.spawn(move || -> usize {
+            let mut w = writer;
+            let mut written = 0usize;
+            for item in rx {
+                let json = match item {
+                    Outcome::Ready(j) => j,
+                    Outcome::Pending { ids, handle, submitted } => match handle.wait() {
+                        Ok(resp) => {
+                            shared.latency.record(submitted.elapsed());
+                            prediction_report(&resp.model, &ids, &resp.predictions)
+                        }
+                        Err(e) => {
+                            shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                            error_json(&format!("{e:#}"))
+                        }
+                    },
+                };
+                if write_frame(&mut w, &json.to_string()).is_err() {
+                    // peer stopped reading; drop the rest (their handles
+                    // still resolve inside the service, keeping counters
+                    // and the memo cache consistent)
+                    break;
+                }
+                written += 1;
+                shared.counters.responses.fetch_add(1, Ordering::Relaxed);
+            }
+            written
+        });
+
+        let mut requests = 0usize;
+        let reason = loop {
+            match frames.next_frame() {
+                Ok(None) => break CloseReason::Eof,
+                Ok(Some(line)) => {
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    shared.counters.request_lines.fetch_add(1, Ordering::Relaxed);
+                    let outcome = if line == "STATS" {
+                        Outcome::Ready(stats_json(shared))
+                    } else {
+                        match samples_from_json(line) {
+                            Ok(samples) => {
+                                let ids = sample_ids(&samples);
+                                // blocks at queue_cap: stdin stops being
+                                // read / the socket stops being drained,
+                                // which is the backpressure
+                                match shared.service.submit(PredictRequest::new(samples)) {
+                                    Ok(handle) => {
+                                        requests += 1;
+                                        Outcome::Pending { ids, handle, submitted: Instant::now() }
+                                    }
+                                    Err(e) => {
+                                        shared
+                                            .counters
+                                            .protocol_errors
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        Outcome::Ready(error_json(&format!("{e:#}")))
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                                Outcome::Ready(error_json(&format!("{e:#}")))
+                            }
+                        }
+                    };
+                    if tx.send(outcome).is_err() {
+                        break CloseReason::WriterClosed;
+                    }
+                }
+                Err(FrameError::Oversized { limit, .. }) => {
+                    shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Outcome::Ready(error_json(&format!(
+                        "request line exceeds {limit} bytes"
+                    ))));
+                    break CloseReason::Oversized;
+                }
+                Err(FrameError::Io(e)) if is_timeout(&e) => break CloseReason::ReadTimeout,
+                // connection reset etc. — the peer is gone; treat as EOF
+                Err(FrameError::Io(_)) => break CloseReason::Eof,
+            }
+        };
+        drop(tx); // writer drains everything in flight, then exits
+        let responses = writer_handle.join().unwrap_or(0);
+        Ok(SessionSummary { requests, responses, reason })
+    })
+}

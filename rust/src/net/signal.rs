@@ -1,0 +1,71 @@
+//! SIGTERM/SIGINT → shutdown-flag bridge for the serving daemon.
+//!
+//! The TCP server polls an `Arc<AtomicBool>`; this module flips it from
+//! a signal handler so `kill -TERM` (or ctrl-c) triggers the same
+//! graceful drain the tests drive by storing the flag directly. The
+//! handler body is async-signal-safe: one atomic store through a
+//! pre-initialized `OnceLock`, no allocation, no locks. std exposes no
+//! signal API and this crate vendors no libc, so the one `signal(2)`
+//! entry point is declared here directly; on non-unix targets install
+//! is a no-op and the flag is only ever set programmatically.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static TERM_FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+
+#[cfg(unix)]
+mod ffi {
+    use std::os::raw::c_int;
+
+    pub const SIGINT: c_int = 2;
+    pub const SIGTERM: c_int = 15;
+
+    extern "C" {
+        /// POSIX `signal(2)`. The returned previous handler is unused.
+        pub fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+}
+
+#[cfg(unix)]
+extern "C" fn on_term(_sig: std::os::raw::c_int) {
+    if let Some(flag) = TERM_FLAG.get() {
+        flag.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Install the SIGTERM/SIGINT handler (idempotently) and return the
+/// process-wide shutdown flag it sets. Call once from the daemon's serve
+/// path; library users and tests pass their own flag to the server and
+/// never touch process signal state.
+pub fn install_term_flag() -> Arc<AtomicBool> {
+    let flag = Arc::clone(TERM_FLAG.get_or_init(|| Arc::new(AtomicBool::new(false))));
+    #[cfg(unix)]
+    unsafe {
+        ffi::signal(ffi::SIGTERM, on_term);
+        ffi::signal(ffi::SIGINT, on_term);
+    }
+    flag
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    extern "C" {
+        fn raise(sig: std::os::raw::c_int) -> std::os::raw::c_int;
+    }
+
+    #[test]
+    fn sigterm_sets_the_flag() {
+        let flag = install_term_flag();
+        assert!(Arc::ptr_eq(&flag, &install_term_flag()), "install is idempotent");
+        assert!(!flag.load(Ordering::SeqCst));
+        // POSIX runs the handler on this thread before raise() returns
+        unsafe {
+            raise(ffi::SIGTERM);
+        }
+        assert!(flag.load(Ordering::SeqCst), "handler stored the flag");
+        flag.store(false, Ordering::SeqCst); // leave global state clean
+    }
+}

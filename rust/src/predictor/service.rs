@@ -381,6 +381,12 @@ impl PredictService {
     pub fn model_name(&self) -> String {
         self.shared.predictor.name()
     }
+
+    /// The configured queue bound, as enforced (zero is clamped to one) —
+    /// the serving front-ends report it next to `peak_queue` in `STATS`.
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cfg.queue_cap.max(1)
+    }
 }
 
 impl Drop for PredictService {

@@ -1,0 +1,586 @@
+//! Integration tests for the TCP serving front-end: fault injection
+//! (torn lines, disconnects, slow-loris peers, oversized payloads),
+//! pipelining and ordering, admission control, backpressure under
+//! networked load, drain-during-load, and the stdin/TCP `STATS` parity
+//! contract.
+//!
+//! Determinism policy: no sleeps as synchronization. Every trigger is an
+//! observed event (a response arriving, a counter crossing a threshold,
+//! EOF, a join); the only timeouts are bounds that turn a hang into a
+//! failing test.
+
+use anyhow::{bail, Result};
+use gcn_perf::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+use gcn_perf::dataset::json::samples_to_json;
+use gcn_perf::dataset::sample::GraphSample;
+use gcn_perf::net::{
+    fetch_stats, run_loadgen, serve_session, write_frame, FrameReader, LoadgenConfig, ServeShared,
+    SessionOpts, TcpServer, TcpServerConfig, DEFAULT_MAX_FRAME_BYTES,
+};
+use gcn_perf::predictor::{PredictRequest, PredictService, Predictor, ServiceConfig};
+use gcn_perf::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A linear-chain sample; `n` stages, all features `tag` (invariant) and
+/// `tag * 0.5` (dependent) — distinct `(n, tag)` pairs never collide in
+/// the memo cache.
+fn chain_sample(n: u16, tag: f32) -> GraphSample {
+    GraphSample {
+        pipeline_id: tag as u32,
+        schedule_id: n as u32,
+        n_stages: n,
+        edges: (1..n).map(|i| (i - 1, i)).collect(),
+        inv: vec![[tag; INV_DIM]; n as usize],
+        dep: vec![[tag * 0.5; DEP_DIM]; n as usize],
+        runs: [1e-3; BENCH_RUNS],
+    }
+}
+
+/// Deterministic stand-in model whose output depends on the payload
+/// (stage count *and* a feature value), so a served prediction proves
+/// the request round-tripped the wire intact.
+struct StagesPredictor {
+    scale: f64,
+}
+
+impl Predictor for StagesPredictor {
+    fn name(&self) -> String {
+        "stages".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        Ok(samples.iter().map(|s| s.n_stages as f64 * self.scale + s.inv[0][0] as f64).collect())
+    }
+    fn save(&self, _: &Path) -> Result<()> {
+        bail!("test predictor cannot be saved")
+    }
+}
+
+/// Blocks inside `predict` until released; signals entry so tests can
+/// park the worker deterministically.
+struct GatedPredictor {
+    entered: Arc<(Mutex<usize>, Condvar)>,
+    release: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Predictor for GatedPredictor {
+    fn name(&self) -> String {
+        "gated".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        {
+            let (m, c) = &*self.entered;
+            *lock(m) += 1;
+            c.notify_all();
+        }
+        let (m, c) = &*self.release;
+        let mut open = lock(m);
+        while !*open {
+            open = c.wait(open).unwrap_or_else(|e| e.into_inner());
+        }
+        Ok(vec![0.5; samples.len()])
+    }
+    fn save(&self, _: &Path) -> Result<()> {
+        bail!("gated predictor cannot be saved")
+    }
+}
+
+fn stages_shared(workers: usize, queue_cap: usize) -> (ServeShared, Arc<dyn Predictor>) {
+    let predictor: Arc<dyn Predictor> = Arc::new(StagesPredictor { scale: 1e-3 });
+    let service = Arc::new(PredictService::spawn(
+        Arc::clone(&predictor),
+        ServiceConfig { workers, queue_cap, ..Default::default() },
+    ));
+    (ServeShared::new(service), predictor)
+}
+
+fn start_server(shared: ServeShared, cfg: TcpServerConfig) -> (TcpServer, String) {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = TcpServer::bind("127.0.0.1:0", shared, cfg, shutdown).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+/// Bounded poll: the *condition* is the synchronization; the deadline
+/// only turns a hang into a failing test.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn read_frames_until_eof(stream: TcpStream) -> Vec<String> {
+    let mut frames = FrameReader::new(stream, DEFAULT_MAX_FRAME_BYTES);
+    let mut out = Vec::new();
+    while let Ok(Some(line)) = frames.next_frame() {
+        out.push(line);
+    }
+    out
+}
+
+fn expect_preds(predictor: &dyn Predictor, samples: &[GraphSample]) -> Vec<f64> {
+    let refs: Vec<&GraphSample> = samples.iter().collect();
+    predictor.predict(&refs).unwrap()
+}
+
+/// Assert one response line reports `samples` in order, with predictions
+/// bitwise equal to direct `Predictor::predict` output.
+fn check_response_bitwise(line: &str, model: &str, samples: &[GraphSample], expected: &[f64]) {
+    let j = Json::parse(line).unwrap();
+    assert_eq!(j.get("model").and_then(|m| m.as_str()), Some(model), "in {line}");
+    let rows = j.get("predictions").and_then(|p| p.as_arr()).expect("predictions array");
+    assert_eq!(rows.len(), samples.len());
+    for ((row, s), want) in rows.iter().zip(samples).zip(expected) {
+        let pid = row.get("pipeline_id").and_then(|v| v.as_usize());
+        let sid = row.get("schedule_id").and_then(|v| v.as_usize());
+        assert_eq!(pid, Some(s.pipeline_id as usize));
+        assert_eq!(sid, Some(s.schedule_id as usize));
+        let got = row.get("predicted_runtime_s").and_then(|v| v.as_f64()).expect("runtime");
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "served prediction {got} diverges bitwise from direct {want}"
+        );
+    }
+}
+
+// ---------------------------------------------------- pipelining + order
+
+#[test]
+fn tcp_pipelining_preserves_order_and_matches_direct_predict_bitwise() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let (server, addr) = start_server(shared, TcpServerConfig::default());
+
+    // six requests written back-to-back before any response is read
+    let requests: Vec<Vec<GraphSample>> =
+        (1..=6u16).map(|n| vec![chain_sample(n, 0.5), chain_sample(n + 6, 0.25)]).collect();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    for req in &requests {
+        write_frame(&mut stream, &samples_to_json(req)).unwrap();
+    }
+    stream.shutdown(Shutdown::Write).unwrap();
+
+    let lines = read_frames_until_eof(stream);
+    assert_eq!(lines.len(), requests.len(), "one response per request line");
+    for (line, req) in lines.iter().zip(&requests) {
+        check_response_bitwise(line, "stages", req, &expect_preds(predictor.as_ref(), req));
+    }
+
+    server.shutdown_now();
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.rejected, 0);
+}
+
+#[test]
+fn requests_split_across_many_socket_writes_still_frame() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let (server, addr) = start_server(shared, TcpServerConfig::default());
+
+    // a half-written line is not an error, just an incomplete frame: the
+    // server must reassemble it however the bytes trickle in
+    let req = vec![chain_sample(4, 0.125)];
+    let mut line = samples_to_json(&req).into_bytes();
+    line.push(b'\n');
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    for chunk in line.chunks(7) {
+        stream.write_all(chunk).unwrap();
+        stream.flush().unwrap();
+    }
+    stream.shutdown(Shutdown::Write).unwrap();
+
+    let lines = read_frames_until_eof(stream);
+    assert_eq!(lines.len(), 1);
+    check_response_bitwise(&lines[0], "stages", &req, &expect_preds(predictor.as_ref(), &req));
+    server.shutdown_now();
+    server.join().unwrap();
+}
+
+// ------------------------------------------------------- fault injection
+
+#[test]
+fn mid_request_disconnect_is_contained_to_its_connection() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let shared_view = shared.clone();
+    let (server, addr) = start_server(shared, TcpServerConfig::default());
+
+    // client 1: half a request line, then a hard disconnect
+    let mut c1 = TcpStream::connect(&addr).unwrap();
+    c1.write_all(b"[{\"pipeline_id\": 7, \"n_st").unwrap();
+    drop(c1);
+
+    // the torn line surfaces as exactly one protocol error on that
+    // connection; the service itself never sees a request
+    wait_until("the torn request to be counted", || {
+        shared_view.counters.protocol_errors.load(Ordering::Relaxed) >= 1
+    });
+
+    // client 2 is served normally by the same shared service
+    let req = vec![chain_sample(3, 0.5)];
+    let mut c2 = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut c2, &samples_to_json(&req)).unwrap();
+    c2.shutdown(Shutdown::Write).unwrap();
+    let lines = read_frames_until_eof(c2);
+    assert_eq!(lines.len(), 1);
+    check_response_bitwise(&lines[0], "stages", &req, &expect_preds(predictor.as_ref(), &req));
+
+    assert_eq!(server.service().stats().requests, 1, "torn line must not reach the service");
+    server.shutdown_now();
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, 2);
+}
+
+#[test]
+fn oversized_request_line_gets_one_error_then_close() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let cfg = TcpServerConfig { max_frame_bytes: 1024, ..Default::default() };
+    let (server, addr) = start_server(shared, cfg);
+
+    // 8 KiB without a newline: the framer must reject without buffering
+    // the line to completion, answer once, and close
+    let mut big = TcpStream::connect(&addr).unwrap();
+    big.write_all(&[b'x'; 8 * 1024]).unwrap();
+    let lines = read_frames_until_eof(big);
+    assert_eq!(lines.len(), 1, "exactly one error line, then close");
+    let j = Json::parse(&lines[0]).unwrap();
+    let msg = j.get("error").and_then(|e| e.as_str()).expect("an error response");
+    assert!(msg.contains("1024"), "error should name the limit: {msg}");
+
+    // per-connection containment: the same server keeps serving
+    let req = vec![chain_sample(2, 0.25)];
+    let mut ok = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut ok, &samples_to_json(&req)).unwrap();
+    ok.shutdown(Shutdown::Write).unwrap();
+    let lines = read_frames_until_eof(ok);
+    assert_eq!(lines.len(), 1);
+    check_response_bitwise(&lines[0], "stages", &req, &expect_preds(predictor.as_ref(), &req));
+    server.shutdown_now();
+    server.join().unwrap();
+}
+
+#[test]
+fn slow_loris_peer_is_evicted_by_the_read_timeout() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let cfg = TcpServerConfig {
+        read_timeout: Some(Duration::from_millis(100)),
+        ..Default::default()
+    };
+    let (server, addr) = start_server(shared, cfg);
+
+    // hold a connection open with a line that never completes
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris.write_all(b"[").unwrap();
+    // the server times the connection out and closes it without a
+    // response; the bound below only turns a missed eviction into a
+    // failing test instead of a hang
+    loris.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut buf = Vec::new();
+    let n = loris.read_to_end(&mut buf).unwrap();
+    assert_eq!(n, 0, "evicted peer must get no bytes: {:?}", String::from_utf8_lossy(&buf));
+
+    // eviction is per-connection: a prompt client is unaffected
+    let req = vec![chain_sample(5, 0.75)];
+    let mut ok = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut ok, &samples_to_json(&req)).unwrap();
+    ok.shutdown(Shutdown::Write).unwrap();
+    let lines = read_frames_until_eof(ok);
+    assert_eq!(lines.len(), 1);
+    check_response_bitwise(&lines[0], "stages", &req, &expect_preds(predictor.as_ref(), &req));
+    server.shutdown_now();
+    server.join().unwrap();
+}
+
+#[test]
+fn admission_control_rejects_excess_connections_with_an_error_line() {
+    let (shared, predictor) = stages_shared(1, 8);
+    let cfg = TcpServerConfig { max_conns: 1, ..Default::default() };
+    let (server, addr) = start_server(shared, cfg);
+
+    // first client occupies the only slot; its served response proves
+    // the slot was taken before the second connect below
+    let req = vec![chain_sample(2, 0.5)];
+    let expected = expect_preds(predictor.as_ref(), &req);
+    let mut c1 = TcpStream::connect(&addr).unwrap();
+    let mut frames1 = FrameReader::new(c1.try_clone().unwrap(), DEFAULT_MAX_FRAME_BYTES);
+    write_frame(&mut c1, &samples_to_json(&req)).unwrap();
+    let line = frames1.next_frame().unwrap().expect("first response");
+    check_response_bitwise(&line, "stages", &req, &expected);
+
+    // second client is turned away: one error line, then close
+    let c2 = TcpStream::connect(&addr).unwrap();
+    let lines = read_frames_until_eof(c2);
+    assert_eq!(lines.len(), 1);
+    let j = Json::parse(&lines[0]).unwrap();
+    let msg = j.get("error").and_then(|e| e.as_str()).expect("rejection error line");
+    assert!(msg.contains("capacity"), "{msg}");
+
+    // the occupant is still fully served after the rejection
+    write_frame(&mut c1, &samples_to_json(&req)).unwrap();
+    let line = frames1.next_frame().unwrap().expect("second response");
+    check_response_bitwise(&line, "stages", &req, &expected);
+
+    drop(frames1);
+    drop(c1);
+    server.shutdown_now();
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.rejected, 1);
+}
+
+// --------------------------------------------- backpressure under load
+
+#[test]
+fn backpressure_engages_under_networked_load_and_drains_on_release() {
+    let entered = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let release = Arc::new((Mutex::new(false), Condvar::new()));
+    let predictor: Arc<dyn Predictor> = Arc::new(GatedPredictor {
+        entered: Arc::clone(&entered),
+        release: Arc::clone(&release),
+    });
+    let service = Arc::new(PredictService::spawn(
+        Arc::clone(&predictor),
+        ServiceConfig { workers: 1, queue_cap: 2, ..Default::default() },
+    ));
+    let shared = ServeShared::new(Arc::clone(&service));
+    let (server, addr) = start_server(shared, TcpServerConfig::default());
+
+    let mut c = TcpStream::connect(&addr).unwrap();
+    let mut frames = FrameReader::new(c.try_clone().unwrap(), DEFAULT_MAX_FRAME_BYTES);
+
+    // request 1 parks the sole worker inside predict...
+    write_frame(&mut c, &samples_to_json(&[chain_sample(1, 0.0)])).unwrap();
+    {
+        let (m, cv) = &*entered;
+        let mut n = lock(m);
+        while *n == 0 {
+            n = cv.wait(n).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    // ...then requests 2 and 3 fill the bounded queue to its cap of 2
+    write_frame(&mut c, &samples_to_json(&[chain_sample(2, 0.0)])).unwrap();
+    write_frame(&mut c, &samples_to_json(&[chain_sample(3, 0.0)])).unwrap();
+    wait_until("both pipelined requests to be accepted", || service.stats().requests == 3);
+
+    // the queue is exactly full: a non-blocking submit must fail fast
+    let err = service
+        .try_submit(PredictRequest::new(vec![chain_sample(4, 0.0)]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("full"), "{err}");
+
+    // release the model: everything accepted resolves, exactly once each
+    {
+        let (m, cv) = &*release;
+        *lock(m) = true;
+        cv.notify_all();
+    }
+    for _ in 0..3 {
+        let line = frames.next_frame().unwrap().expect("a drained response");
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "unexpected error line: {line}");
+        let rows = j.get("predictions").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(rows[0].get("predicted_runtime_s").and_then(|v| v.as_f64()), Some(0.5));
+    }
+
+    // recovery: the connection keeps serving after the pressure spike
+    write_frame(&mut c, &samples_to_json(&[chain_sample(5, 0.0)])).unwrap();
+    let line = frames.next_frame().unwrap().expect("post-release response");
+    assert!(Json::parse(&line).unwrap().get("predictions").is_some());
+
+    assert!(service.stats().peak_queue <= 2, "queue exceeded its bound");
+    drop(frames);
+    drop(c);
+    server.shutdown_now();
+    server.join().unwrap();
+}
+
+#[test]
+fn stress_pipelined_fleet_against_a_small_queue_answers_exactly_once() {
+    // 8 clients x 16 pipelined requests against a 2-deep queue: constant
+    // backpressure, zero losses, zero duplicates, all bits intact
+    let pool: Vec<GraphSample> = (1..=6u16).map(|n| chain_sample(n, 0.0625 * n as f32)).collect();
+    let (shared, predictor) = stages_shared(1, 2);
+    let service = Arc::clone(&shared.service);
+    let cfg = TcpServerConfig { max_inflight_per_conn: 4, ..Default::default() };
+    let (server, addr) = start_server(shared, cfg);
+
+    let refs: Vec<&GraphSample> = pool.iter().collect();
+    let expected = predictor.predict(&refs).unwrap();
+    let workload = LoadgenConfig {
+        clients: 8,
+        requests_per_client: 16,
+        samples_per_request: 2,
+        rate_per_client: 0.0,
+        pipeline_depth: 4,
+    };
+    let report = run_loadgen(&addr, &pool, Some(&expected), &workload).unwrap();
+
+    let total = workload.clients * workload.requests_per_client;
+    assert_eq!(report.requests_sent, total);
+    assert_eq!(report.responses_ok, total);
+    assert_eq!(report.responses_err, 0);
+    assert_eq!(report.bitwise_verified, total);
+    assert_eq!(report.samples_scored, total * workload.samples_per_request);
+
+    let stats = service.stats();
+    assert_eq!(stats.requests, total, "exactly one service submission per request line");
+    assert!(stats.peak_queue <= 2, "queue grew past its bound: {}", stats.peak_queue);
+    server.shutdown_now();
+    let srv = server.join().unwrap();
+    assert_eq!(srv.connections, workload.clients);
+    assert_eq!(srv.rejected, 0);
+}
+
+#[test]
+fn shutdown_during_load_drains_accepted_requests_exactly_once() {
+    let pool: Vec<GraphSample> = (1..=5u16).map(|n| chain_sample(n, 0.5)).collect();
+    let (shared, predictor) = stages_shared(1, 4);
+    let service = Arc::clone(&shared.service);
+    let (server, addr) = start_server(shared, TcpServerConfig::default());
+    let refs: Vec<&GraphSample> = pool.iter().collect();
+    let expected = predictor.predict(&refs).unwrap();
+
+    let n_clients = 3usize;
+    let per_client = 30usize;
+    let responses_seen = AtomicUsize::new(0);
+
+    let received: Vec<usize> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let addr = &addr;
+                let pool = &pool;
+                let expected = &expected;
+                let responses_seen = &responses_seen;
+                scope.spawn(move || -> usize {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let reader = stream.try_clone().unwrap();
+                    for i in 0..per_client {
+                        let k = (c * 7 + i) % pool.len();
+                        let line = samples_to_json(std::slice::from_ref(&pool[k]));
+                        if write_frame(&mut stream, &line).is_err() {
+                            break; // the drain closed this socket mid-send
+                        }
+                    }
+                    let mut frames = FrameReader::new(reader, DEFAULT_MAX_FRAME_BYTES);
+                    let mut got = 0usize;
+                    while let Ok(Some(line)) = frames.next_frame() {
+                        if Json::parse(&line).unwrap().get("error").is_some() {
+                            // a line torn by the drain race parses server-side
+                            // as garbage; it was never submitted, so it is not
+                            // a response to count
+                            break;
+                        }
+                        // responses are the exact in-order prefix of what was
+                        // sent — none lost, none duplicated, none reordered
+                        let k = (c * 7 + got) % pool.len();
+                        check_response_bitwise(
+                            &line,
+                            "stages",
+                            std::slice::from_ref(&pool[k]),
+                            std::slice::from_ref(&expected[k]),
+                        );
+                        got += 1;
+                        responses_seen.fetch_add(1, Ordering::SeqCst);
+                    }
+                    got
+                })
+            })
+            .collect();
+
+        // trigger the drain as soon as load is demonstrably in flight
+        wait_until("a first response under load", || responses_seen.load(Ordering::SeqCst) >= 1);
+        server.shutdown_now();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let total: usize = received.iter().sum();
+    assert!(total >= 1, "the drain trigger saw a response");
+    // every request the service accepted produced exactly one response
+    // line that a client received before its clean EOF
+    assert_eq!(service.stats().requests, total);
+    let report = server.join().unwrap();
+    assert_eq!(report.connections, n_clients);
+}
+
+// ------------------------------------------------- stdin / TCP parity
+
+#[test]
+fn stats_counters_agree_between_stdin_and_tcp_modes() {
+    // identical traffic through both front-ends over identical services;
+    // `STATS` must then report identical schemas and identical values
+    // for every deterministic field
+    let reqs: Vec<Vec<GraphSample>> = vec![
+        vec![chain_sample(2, 0.5)],
+        vec![chain_sample(3, 0.25), chain_sample(4, 0.75)],
+        vec![chain_sample(5, 0.125)],
+    ];
+    let mut input = String::new();
+    for r in &reqs {
+        input.push_str(&samples_to_json(r));
+        input.push('\n');
+    }
+
+    // stdin mode: in-memory byte streams through the same serve_session
+    let (shared_a, _) = stages_shared(1, 8);
+    let opts = SessionOpts::default();
+    let summary = serve_session(input.as_bytes(), Vec::new(), &shared_a, &opts).unwrap();
+    assert_eq!(summary.requests, reqs.len());
+    assert_eq!(summary.responses, reqs.len());
+    let mut stats_out = Vec::new();
+    serve_session(&b"STATS\n"[..], &mut stats_out, &shared_a, &opts).unwrap();
+    let stdin_stats = Json::parse(std::str::from_utf8(&stats_out).unwrap().trim()).unwrap();
+
+    // TCP mode: the same three lines over one pipelined connection
+    let (shared_b, _) = stages_shared(1, 8);
+    let shared_view = shared_b.clone();
+    let (server, addr) = start_server(shared_b, TcpServerConfig::default());
+    let mut c = TcpStream::connect(&addr).unwrap();
+    for r in &reqs {
+        write_frame(&mut c, &samples_to_json(r)).unwrap();
+    }
+    c.shutdown(Shutdown::Write).unwrap();
+    let lines = read_frames_until_eof(c);
+    assert_eq!(lines.len(), reqs.len());
+    // the traffic connection retires fully (its writer joined, counters
+    // settled) before STATS reads them — same quiesce point the stdin
+    // session reached when serve_session returned
+    wait_until("the traffic connection to retire", || {
+        shared_view.counters.connections_active.load(Ordering::Relaxed) == 0
+    });
+    let tcp_stats = fetch_stats(&addr).unwrap();
+    server.shutdown_now();
+    server.join().unwrap();
+
+    let a = stdin_stats.get("stats").expect("stdin stats object");
+    let b = tcp_stats.get("stats").expect("tcp stats object");
+    let (am, bm) = match (a, b) {
+        (Json::Obj(am), Json::Obj(bm)) => (am, bm),
+        _ => panic!("stats must be objects"),
+    };
+    let keys_a: Vec<&String> = am.keys().collect();
+    let keys_b: Vec<&String> = bm.keys().collect();
+    assert_eq!(keys_a, keys_b, "the two modes must expose the same stats schema");
+    // connection and latency fields legitimately differ (stdin has no
+    // sockets; timings are wall-clock); everything else must agree
+    for key in [
+        "model", "requests", "samples_evaluated", "cache_hits", "cache_misses", "request_lines",
+        "responses", "protocol_errors", "queue_cap",
+    ] {
+        assert_eq!(
+            am.get(key).map(|v| v.to_string()),
+            bm.get(key).map(|v| v.to_string()),
+            "stats field {key} diverges between stdin and TCP modes"
+        );
+    }
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Perf trajectory: builds the release binary and writes BENCH_3.json
-# (dense-vs-sparse engines), BENCH_4.json (naive-vs-coalesced serving)
-# and BENCH_5.json (PR-5 engine core vs the frozen PR-4 core) at the
+# (dense-vs-sparse engines), BENCH_4.json (naive-vs-coalesced serving),
+# BENCH_5.json (PR-5 engine core vs the frozen PR-4 core) and
+# BENCH_6.json (the TCP front-end under the loadgen client fleet) at the
 # repository root. Pass --fast for the short smoke variant CI runs.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -13,4 +14,5 @@ fi
 
 cargo run --release -- bench ${FAST_FLAG} \
     --out ../BENCH_3.json --serve-out ../BENCH_4.json --engine-out ../BENCH_5.json
-echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json and BENCH_5.json"
+cargo run --release -- loadgen ${FAST_FLAG} --out ../BENCH_6.json
+echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json and BENCH_6.json"

@@ -29,13 +29,26 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "==> cargo check --features pjrt --all-targets"
 cargo check --features pjrt --all-targets --quiet
 
-echo "==> serve smoke (tiny bundle, one JSON request through the daemon)"
+echo "==> serve smoke (tiny bundle, JSON requests + STATS through the stdin daemon)"
 SMOKE="$(mktemp -d)"
 trap 'rm -rf "$SMOKE"' EXIT
 cargo run --release --quiet -- gen-data --pipelines 8 --schedules 4 --seed 1 --out "$SMOKE/ds.bin"
 cargo run --release --quiet -- train --data "$SMOKE/ds.bin" --bundle "$SMOKE/gcn.bundle" --epochs 1 --test-frac 0.25
 cargo run --release --quiet -- export-samples --data "$SMOKE/ds.bin" --limit 2 --out "$SMOKE/req.json"
-timeout 120 bash -c "cargo run --release --quiet -- serve --bundle '$SMOKE/gcn.bundle' < '$SMOKE/req.json' > '$SMOKE/resp.json'"
+{ cat "$SMOKE/req.json"; echo; echo STATS; } > "$SMOKE/req_stats.json"
+timeout 120 bash -c "cargo run --release --quiet -- serve --bundle '$SMOKE/gcn.bundle' < '$SMOKE/req_stats.json' > '$SMOKE/resp.json'"
 grep -q predicted_runtime_s "$SMOKE/resp.json"
+grep -q '"stats"' "$SMOKE/resp.json"
+
+echo "==> TCP serve smoke (daemon + loadgen fleet, throughput floor, SIGTERM drain)"
+./target/release/gcn-perf serve --bundle "$SMOKE/gcn.bundle" --listen 127.0.0.1:0 --port-file "$SMOKE/port" &
+SERVE_PID=$!
+for _ in $(seq 1 100); do [ -s "$SMOKE/port" ] && break; sleep 0.1; done
+ADDR="$(cat "$SMOKE/port")"
+timeout 120 ./target/release/gcn-perf loadgen --addr "$ADDR" --samples "$SMOKE/req.json" \
+    --bundle "$SMOKE/gcn.bundle" --fast --min-rps 25 --out "$SMOKE/bench6_smoke.json"
+grep -q requests_per_s "$SMOKE/bench6_smoke.json"
+kill -TERM "$SERVE_PID"
+wait "$SERVE_PID"
 
 echo "verify: OK"
