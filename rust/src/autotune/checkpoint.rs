@@ -1,0 +1,349 @@
+//! Per-pipeline search checkpoints: JSON on disk, bitwise-resumable.
+//!
+//! A checkpoint captures everything a [`crate::autotune::SearchStrategy`]
+//! needs to continue exactly where it stopped — best schedule and cost,
+//! generation counter, and the strategy's own resumable state including
+//! the raw xoshiro RNG words — so an interrupted fleet restarted with
+//! `--resume` reaches the *identical* best schedule an uninterrupted run
+//! would have (pinned by the round-trip test in `tests/autotune.rs`).
+//!
+//! Format notes:
+//! * RNG words are 64-bit and the JSON layer stores numbers as `f64`
+//!   (exact only up to 2^53), so the four state words serialize as hex
+//!   strings, never as numbers.
+//! * Costs are `f64` and round-trip exactly: the writer emits Rust's
+//!   shortest round-trip `Display` form and the parser is `f64::from_str`.
+//! * Writes go to a sibling `*.tmp` then rename into place, so a kill
+//!   mid-save leaves the previous checkpoint intact instead of a torn
+//!   file.
+
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Current checkpoint format version; bumped on incompatible change.
+pub const CHECKPOINT_VERSION: usize = 1;
+
+// ---------------------------------------------------- schedule <-> JSON
+
+fn compute_to_json(c: &ComputeLoc) -> Json {
+    match c {
+        ComputeLoc::Root => Json::obj(vec![("loc", Json::Str("root".into()))]),
+        ComputeLoc::Inline => Json::obj(vec![("loc", Json::Str("inline".into()))]),
+        ComputeLoc::At { consumer, level } => Json::obj(vec![
+            ("loc", Json::Str("at".into())),
+            ("consumer", Json::Num(*consumer as f64)),
+            ("level", Json::Num(*level as f64)),
+        ]),
+    }
+}
+
+fn compute_from_json(j: &Json) -> Result<ComputeLoc> {
+    let loc = j.get("loc").and_then(|v| v.as_str()).context("compute location missing 'loc'")?;
+    match loc {
+        "root" => Ok(ComputeLoc::Root),
+        "inline" => Ok(ComputeLoc::Inline),
+        "at" => Ok(ComputeLoc::At {
+            consumer: j
+                .get("consumer")
+                .and_then(|v| v.as_usize())
+                .context("compute_at missing 'consumer'")?,
+            level: j.get("level").and_then(|v| v.as_usize()).context("compute_at missing 'level'")?,
+        }),
+        other => bail!("unknown compute location {other:?}"),
+    }
+}
+
+fn usizes_to_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn usizes_from_json(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .with_context(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|v| v.as_usize().with_context(|| format!("{what} holds a non-integer")))
+        .collect()
+}
+
+/// Serialize one schedule to the checkpoint JSON shape.
+pub fn schedule_to_json(sched: &PipelineSchedule) -> Json {
+    let stages: Vec<Json> = sched
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("order", usizes_to_json(&s.order)),
+                ("tile", usizes_to_json(&s.tile)),
+                ("vector_width", Json::Num(s.vector_width as f64)),
+                ("parallel_depth", Json::Num(s.parallel_depth as f64)),
+                ("unroll", Json::Num(s.unroll as f64)),
+                ("compute", compute_to_json(&s.compute)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("stages", Json::Arr(stages))])
+}
+
+/// Parse a schedule back out of [`schedule_to_json`]'s shape.
+pub fn schedule_from_json(j: &Json) -> Result<PipelineSchedule> {
+    let stages = j.get("stages").and_then(|v| v.as_arr()).context("schedule missing 'stages'")?;
+    let stages: Result<Vec<StageSchedule>> = stages
+        .iter()
+        .map(|sj| {
+            Ok(StageSchedule {
+                order: usizes_from_json(
+                    sj.get("order").context("stage missing 'order'")?,
+                    "order",
+                )?,
+                tile: usizes_from_json(sj.get("tile").context("stage missing 'tile'")?, "tile")?,
+                vector_width: sj
+                    .get("vector_width")
+                    .and_then(|v| v.as_usize())
+                    .context("stage missing 'vector_width'")?,
+                parallel_depth: sj
+                    .get("parallel_depth")
+                    .and_then(|v| v.as_usize())
+                    .context("stage missing 'parallel_depth'")?,
+                unroll: sj
+                    .get("unroll")
+                    .and_then(|v| v.as_usize())
+                    .context("stage missing 'unroll'")?,
+                compute: compute_from_json(sj.get("compute").context("stage missing 'compute'")?)?,
+            })
+        })
+        .collect();
+    Ok(PipelineSchedule { stages: stages? })
+}
+
+// --------------------------------------------------- RNG state <-> JSON
+
+/// The four xoshiro256++ words as hex strings (u64 does not survive the
+/// JSON layer's f64 numbers past 2^53).
+pub fn rng_state_to_json(s: [u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|w| Json::Str(format!("{w:016x}"))).collect())
+}
+
+/// Parse a [`rng_state_to_json`] array back into raw state words.
+pub fn rng_state_from_json(j: &Json) -> Result<[u64; 4]> {
+    let arr = j.as_arr().context("rng state must be an array")?;
+    if arr.len() != 4 {
+        bail!("rng state must hold 4 words, got {}", arr.len());
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        let hex = w.as_str().context("rng word must be a hex string")?;
+        s[i] = u64::from_str_radix(hex, 16)
+            .map_err(|e| anyhow!("bad rng word {hex:?}: {e}"))?;
+    }
+    Ok(s)
+}
+
+// ------------------------------------------------------- the checkpoint
+
+/// One pipeline's resumable search state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Zoo name of the pipeline being tuned (guards against resuming the
+    /// wrong file into the wrong search).
+    pub pipeline: String,
+    /// Strategy name ([`crate::autotune::SearchStrategy::name`]); resume
+    /// refuses a strategy mismatch.
+    pub strategy: String,
+    /// The per-pipeline derived seed the strategy was constructed with.
+    pub seed: u64,
+    /// Generations completed when this was saved.
+    pub generation: usize,
+    /// Whether the search had finished (resume skips straight to report).
+    pub done: bool,
+    /// Best (schedule, model cost) so far, if any candidate was scored.
+    pub best: Option<(PipelineSchedule, f64)>,
+    /// Strategy-specific resumable state (beam contents / population /
+    /// RNG words), opaque to this module.
+    pub state: Json,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let best = match &self.best {
+            Some((sched, cost)) => Json::obj(vec![
+                ("schedule", schedule_to_json(sched)),
+                ("cost", Json::Num(*cost)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            // u64 seeds exceed f64's exact-integer range; keep as string
+            ("seed", Json::Str(self.seed.to_string())),
+            ("generation", Json::Num(self.generation as f64)),
+            ("done", Json::Bool(self.done)),
+            ("best", best),
+            ("state", self.state.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint> {
+        let version =
+            j.get("version").and_then(|v| v.as_usize()).context("checkpoint missing 'version'")?;
+        if version != CHECKPOINT_VERSION {
+            bail!("checkpoint version {version} != supported {CHECKPOINT_VERSION}");
+        }
+        let best = match j.get("best") {
+            None | Some(Json::Null) => None,
+            Some(b) => {
+                let sched =
+                    schedule_from_json(b.get("schedule").context("best missing 'schedule'")?)?;
+                let cost = b.get("cost").and_then(|v| v.as_f64()).context("best missing 'cost'")?;
+                Some((sched, cost))
+            }
+        };
+        Ok(Checkpoint {
+            pipeline: j
+                .get("pipeline")
+                .and_then(|v| v.as_str())
+                .context("checkpoint missing 'pipeline'")?
+                .to_string(),
+            strategy: j
+                .get("strategy")
+                .and_then(|v| v.as_str())
+                .context("checkpoint missing 'strategy'")?
+                .to_string(),
+            seed: j
+                .get("seed")
+                .and_then(|v| v.as_str())
+                .context("checkpoint missing 'seed'")?
+                .parse::<u64>()
+                .context("checkpoint seed is not a u64")?,
+            generation: j
+                .get("generation")
+                .and_then(|v| v.as_usize())
+                .context("checkpoint missing 'generation'")?,
+            done: j.get("done").and_then(|v| v.as_bool()).context("checkpoint missing 'done'")?,
+            best,
+            state: j.get("state").context("checkpoint missing 'state'")?.clone(),
+        })
+    }
+
+    /// The checkpoint file for `pipeline` under `dir`.
+    pub fn path_for(dir: &Path, pipeline: &str) -> PathBuf {
+        dir.join(format!("{pipeline}.ckpt.json"))
+    }
+
+    /// Atomically write this checkpoint under `dir` (tmp file + rename,
+    /// so an interrupt never leaves a torn checkpoint behind).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let path = Checkpoint::path_for(dir, &self.pipeline);
+        let tmp = dir.join(format!("{}.ckpt.json.tmp", self.pipeline));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", path.display()))?;
+        Ok(())
+    }
+
+    /// Load `pipeline`'s checkpoint from `dir`; `Ok(None)` when absent.
+    pub fn load(dir: &Path, pipeline: &str) -> Result<Option<Checkpoint>> {
+        let path = Checkpoint::path_for(dir, pipeline);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing checkpoint {}: {e}", path.display()))?;
+        let ckpt = Checkpoint::from_json(&j)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))?;
+        if ckpt.pipeline != pipeline {
+            bail!(
+                "checkpoint {} names pipeline {:?}, expected {pipeline:?}",
+                path.display(),
+                ckpt.pipeline
+            );
+        }
+        Ok(Some(ckpt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::lower_pipeline;
+    use crate::schedule::random::random_pipeline_schedule;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_schedule_json_round_trips_exactly() {
+        let p = crate::zoo::unet();
+        let nests = lower_pipeline(&p);
+        propcheck::check_rng("schedule json round-trip", 0xC4E7, propcheck::default_cases(), |rng| {
+            let s = random_pipeline_schedule(&p, &nests, rng);
+            let back = schedule_from_json(&schedule_to_json(&s)).map_err(|e| e.to_string())?;
+            if back != s {
+                return Err(format!("round trip changed the schedule: {back:?} != {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rng_state_json_preserves_full_u64_words() {
+        // words above 2^53 are exactly why hex strings are used
+        let state = [u64::MAX, 1, 0x9E3779B97F4A7C15, (1u64 << 53) + 1];
+        let j = rng_state_to_json(state);
+        let text = j.to_string();
+        let back = rng_state_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, state);
+    }
+
+    #[test]
+    fn checkpoint_file_round_trip_and_missing_file() {
+        let dir = std::env::temp_dir().join("gcn_perf_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Checkpoint::load(&dir, "unet").unwrap().is_none());
+
+        let p = crate::zoo::unet();
+        let nests = lower_pipeline(&p);
+        let mut rng = Rng::new(5);
+        let sched = random_pipeline_schedule(&p, &nests, &mut rng);
+        let ckpt = Checkpoint {
+            pipeline: "unet".into(),
+            strategy: "evolution".into(),
+            seed: u64::MAX - 7,
+            generation: 3,
+            done: false,
+            best: Some((sched.clone(), 1.25e-3)),
+            state: Json::obj(vec![("rng", rng_state_to_json(rng.state()))]),
+        };
+        ckpt.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir, "unet").unwrap().expect("saved checkpoint");
+        assert_eq!(back.pipeline, "unet");
+        assert_eq!(back.strategy, "evolution");
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.generation, 3);
+        assert!(!back.done);
+        let (bs, bc) = back.best.expect("best survives");
+        assert_eq!(bs, sched);
+        assert_eq!(bc.to_bits(), 1.25e-3f64.to_bits(), "cost must round-trip bitwise");
+        let words = rng_state_from_json(back.state.get("rng").unwrap()).unwrap();
+        assert_eq!(words, rng.state());
+
+        // wrong-pipeline guard
+        let err = Checkpoint::load(&dir, "unet").map(|_| ());
+        assert!(err.is_ok());
+        std::fs::rename(
+            Checkpoint::path_for(&dir, "unet"),
+            Checkpoint::path_for(&dir, "alexnet"),
+        )
+        .unwrap();
+        let msg = Checkpoint::load(&dir, "alexnet").unwrap_err().to_string();
+        assert!(msg.contains("names pipeline"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,449 @@
+//! The fleet driver: tune many pipelines concurrently, all search
+//! workers scoring through one shared [`PredictService`].
+//!
+//! Each pipeline gets its own strategy instance seeded from the fleet
+//! seed (`seed ^ idx·golden-ratio`, the dataset builder's stream-split
+//! idiom) and steps to completion on its own thread. Candidate scoring
+//! funnels through the shared service, so the PR-4 coalescer fuses
+//! frontiers from *different* searches into shared batches and the memo
+//! cache serves repeat schedules across workers — real concurrent search
+//! load on the serving stack. Because service predictions are bitwise
+//! independent of batch composition (pinned since PR 4), the fleet's
+//! results are deterministic for a fixed seed no matter how the workers
+//! interleave, and `--sequential` mode reaches identical schedules.
+//!
+//! The incumbent rule makes tuning safe to apply blindly: the tuned
+//! schedule is the search's best only if the *simulator* confirms it
+//! beats the default schedule; otherwise the default is kept and
+//! `adopted_default` is set. `tuned_cost <= default_cost` therefore holds
+//! for every pipeline, whatever the cost model's quality.
+
+use crate::autotune::checkpoint::Checkpoint;
+use crate::autotune::strategy::{make_strategy, EvolutionConfig, SearchStrategy, StrategyKind};
+use crate::autotune::trace::TraceRecorder;
+use crate::dataset::GraphSample;
+use crate::ir::pipeline::Pipeline;
+use crate::lower::{lower_pipeline, LoopNest};
+use crate::predictor::{PredictService, PredictorCost, ServiceStats};
+use crate::schedule::primitives::PipelineSchedule;
+use crate::search::{BeamConfig, CostModel, SimCost};
+use crate::sim::{simulate, Machine};
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+use crate::util::threadpool::parallel_map_indexed;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// What scores the fleet's candidates.
+pub enum FleetCost {
+    /// The simulator itself (no service; baseline and tests).
+    Oracle,
+    /// A learned model behind a shared [`PredictService`] — every worker
+    /// scores through this one service.
+    Service(Arc<PredictService>),
+}
+
+/// Fleet-level configuration (`gcn-perf autotune`).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Zoo names of the pipelines to tune.
+    pub networks: Vec<String>,
+    pub strategy: StrategyKind,
+    pub beam: BeamConfig,
+    pub evolution: EvolutionConfig,
+    pub machine: Machine,
+    /// Fleet seed; per-pipeline strategy seeds derive from it.
+    pub seed: u64,
+    /// Tune pipelines one at a time instead of concurrently (the
+    /// baseline `eval::autotune_bench` compares against).
+    pub sequential: bool,
+    /// Where per-pipeline checkpoints live; `None` disables them.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Save a checkpoint every this many generations (and always at
+    /// completion).
+    pub checkpoint_every: usize,
+    /// Restart from existing checkpoints instead of from scratch.
+    pub resume: bool,
+    /// Stop each pipeline after this many generations *this invocation*
+    /// (0 = run to completion). With checkpoints this scripts an
+    /// interrupted run: hit the limit, save, `--resume` later.
+    pub step_limit: usize,
+    /// Max scored candidates recorded per pipeline for trace harvesting.
+    pub trace_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            networks: ["unet", "squeezenet", "alexnet", "resnet18"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            strategy: StrategyKind::Evolution,
+            beam: BeamConfig::default(),
+            evolution: EvolutionConfig::default(),
+            machine: Machine::default(),
+            seed: 1,
+            sequential: false,
+            checkpoint_dir: None,
+            checkpoint_every: 2,
+            resume: false,
+            step_limit: 0,
+            trace_cap: 256,
+        }
+    }
+}
+
+/// One pipeline's tuning outcome.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub network: String,
+    /// False when `step_limit` stopped the search early (resume later).
+    pub completed: bool,
+    /// Total generations (across resumed invocations).
+    pub generations: usize,
+    /// Candidates scored in *this* invocation.
+    pub candidates_scored: usize,
+    /// Simulated cost of the default (compute_root, scalar) schedule.
+    pub default_cost: f64,
+    /// The cost model's score for the search's best, if any.
+    pub model_best_cost: Option<f64>,
+    /// Simulated cost of the search's best schedule, if any.
+    pub searched_cost: Option<f64>,
+    /// Simulated cost of the schedule actually adopted (incumbent rule:
+    /// never worse than `default_cost`).
+    pub tuned_cost: f64,
+    /// True when the search's best did not beat the default.
+    pub adopted_default: bool,
+    pub best_schedule: Option<PipelineSchedule>,
+    /// Generation the run resumed from, when `--resume` found a
+    /// checkpoint.
+    pub resumed_from: Option<usize>,
+}
+
+/// The whole fleet's outcome.
+pub struct FleetReport {
+    pub results: Vec<PipelineResult>,
+    /// Harvested search-trace samples (cost-to-go labels), all
+    /// pipelines, in fleet order.
+    pub samples: Vec<GraphSample>,
+    /// Shared-service counters after the run ([`FleetCost::Service`]
+    /// only).
+    pub service_stats: Option<ServiceStats>,
+    pub wall_s: f64,
+}
+
+fn derive_seed(fleet_seed: u64, idx: usize) -> u64 {
+    fleet_seed ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+fn build_strategy(cfg: &FleetConfig, seed: u64) -> Box<dyn SearchStrategy> {
+    let beam = BeamConfig { seed, ..cfg.beam.clone() };
+    let evolution = EvolutionConfig { seed, ..cfg.evolution.clone() };
+    make_strategy(cfg.strategy, &beam, &evolution)
+}
+
+/// Tune one pipeline: restore, step to done (or `step_limit`),
+/// checkpoint, evaluate against the default, harvest the trace.
+fn tune_one(
+    cfg: &FleetConfig,
+    cost: &FleetCost,
+    idx: usize,
+    p: &Pipeline,
+    nests: &[LoopNest],
+) -> Result<(PipelineResult, Vec<GraphSample>)> {
+    let seed = derive_seed(cfg.seed, idx);
+    let mut strat = build_strategy(cfg, seed);
+    let model: Box<dyn CostModel> = match cost {
+        FleetCost::Oracle => Box::new(SimCost { machine: cfg.machine.clone() }),
+        FleetCost::Service(svc) => {
+            Box::new(PredictorCost::with_service(Arc::clone(svc), cfg.machine.clone()))
+        }
+    };
+
+    let mut resumed_from = None;
+    if cfg.resume {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            if let Some(ckpt) = Checkpoint::load(dir, &p.name)? {
+                if ckpt.strategy != strat.name() {
+                    bail!(
+                        "checkpoint for {} was written by strategy {:?}, this run uses {:?}",
+                        p.name,
+                        ckpt.strategy,
+                        strat.name()
+                    );
+                }
+                if ckpt.seed != seed {
+                    bail!(
+                        "checkpoint for {} was written with seed {}, this run derives {seed}",
+                        p.name,
+                        ckpt.seed
+                    );
+                }
+                strat
+                    .restore_state(&ckpt.state)
+                    .with_context(|| format!("restoring {}'s search state", p.name))?;
+                resumed_from = Some(ckpt.generation);
+            }
+        }
+    }
+
+    let save_ckpt = |strat: &dyn SearchStrategy| -> Result<()> {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            Checkpoint {
+                pipeline: p.name.clone(),
+                strategy: strat.name().to_string(),
+                seed,
+                generation: strat.generation(),
+                done: strat.done(),
+                best: strat.best().map(|(s, c)| (s.clone(), c)),
+                state: strat.save_state(),
+            }
+            .save(dir)
+            .with_context(|| format!("checkpointing {}", p.name))?;
+        }
+        Ok(())
+    };
+
+    let mut trace = TraceRecorder::new(cfg.trace_cap);
+    let mut candidates_scored = 0usize;
+    let mut steps = 0usize;
+    while !strat.done() && (cfg.step_limit == 0 || steps < cfg.step_limit) {
+        let gen = strat.generation();
+        let scored = strat
+            .step(p, nests, model.as_ref())
+            .with_context(|| format!("tuning {}", p.name))?;
+        candidates_scored += scored.len();
+        trace.record(gen, &scored);
+        steps += 1;
+        if cfg.checkpoint_every > 0 && strat.generation() % cfg.checkpoint_every == 0 {
+            save_ckpt(strat.as_ref())?;
+        }
+    }
+    save_ckpt(strat.as_ref())?;
+
+    let ranks: Vec<usize> = p.stages.iter().map(|s| s.shape.len()).collect();
+    let default_sched = PipelineSchedule::default_for(&ranks);
+    let default_cost = simulate(p, nests, &default_sched, &cfg.machine);
+    let best = strat.best().map(|(s, c)| (s.clone(), c));
+    let (model_best_cost, searched_cost) = match &best {
+        Some((s, c)) => (Some(*c), Some(simulate(p, nests, s, &cfg.machine))),
+        None => (None, None),
+    };
+    // incumbent rule: adopt the search's best only when the simulator
+    // confirms it beats the default
+    let (tuned_cost, adopted_default, best_schedule) = match (&best, searched_cost) {
+        (Some((s, _)), Some(sc)) if strat.done() && sc <= default_cost => {
+            (sc, false, Some(s.clone()))
+        }
+        _ => (default_cost, true, best.map(|(s, _)| s)),
+    };
+
+    let samples = trace.harvest(p, nests, &cfg.machine, idx as u32);
+    Ok((
+        PipelineResult {
+            network: p.name.clone(),
+            completed: strat.done(),
+            generations: strat.generation(),
+            candidates_scored,
+            default_cost,
+            model_best_cost,
+            searched_cost,
+            tuned_cost,
+            adopted_default,
+            best_schedule,
+            resumed_from,
+        },
+        samples,
+    ))
+}
+
+/// Run the whole fleet. Deterministic for a fixed `cfg.seed`: concurrent
+/// and sequential modes, and interrupted-then-resumed runs, all reach
+/// identical best schedules and costs.
+pub fn run_fleet(cfg: &FleetConfig, cost: &FleetCost) -> Result<FleetReport> {
+    if cfg.networks.is_empty() {
+        bail!("autotune fleet needs at least one network");
+    }
+    let pipelines: Vec<(Pipeline, Vec<LoopNest>)> = cfg
+        .networks
+        .iter()
+        .map(|name| {
+            let p = crate::zoo::by_name(name).with_context(|| {
+                let known: Vec<String> =
+                    crate::zoo::all_networks().iter().map(|p| p.name.clone()).collect();
+                format!("unknown network {name:?} (zoo has: {})", known.join(", "))
+            })?;
+            let nests = lower_pipeline(&p);
+            Ok((p, nests))
+        })
+        .collect::<Result<_>>()?;
+
+    let start = std::time::Instant::now();
+    let outcomes: Vec<Result<(PipelineResult, Vec<GraphSample>)>> = if cfg.sequential {
+        pipelines
+            .iter()
+            .enumerate()
+            .map(|(i, (p, nests))| tune_one(cfg, cost, i, p, nests))
+            .collect()
+    } else {
+        parallel_map_indexed(pipelines.len(), |i| {
+            let (p, nests) = &pipelines[i];
+            tune_one(cfg, cost, i, p, nests)
+        })
+    };
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let mut results = Vec::with_capacity(outcomes.len());
+    let mut samples = Vec::new();
+    for (i, outcome) in outcomes.into_iter().enumerate() {
+        let (r, s) =
+            outcome.with_context(|| format!("fleet member {} failed", cfg.networks[i]))?;
+        results.push(r);
+        samples.extend(s);
+    }
+    let service_stats = match cost {
+        FleetCost::Service(svc) => Some(svc.stats()),
+        FleetCost::Oracle => None,
+    };
+    Ok(FleetReport { results, samples, service_stats, wall_s })
+}
+
+impl PipelineResult {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("network", Json::Str(self.network.clone())),
+            ("completed", Json::Bool(self.completed)),
+            ("generations", Json::Num(self.generations as f64)),
+            ("candidates_scored", Json::Num(self.candidates_scored as f64)),
+            ("default_cost", Json::Num(self.default_cost)),
+            ("model_best_cost", opt(self.model_best_cost)),
+            ("searched_cost", opt(self.searched_cost)),
+            ("tuned_cost", Json::Num(self.tuned_cost)),
+            ("speedup", Json::Num(self.default_cost / self.tuned_cost)),
+            ("adopted_default", Json::Bool(self.adopted_default)),
+            (
+                "resumed_from",
+                self.resumed_from.map(|g| Json::Num(g as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+impl FleetReport {
+    /// Tuned-vs-default speedup per pipeline (>= 1 by the incumbent
+    /// rule).
+    pub fn speedups(&self) -> Vec<f64> {
+        self.results.iter().map(|r| r.default_cost / r.tuned_cost).collect()
+    }
+
+    /// Full report as JSON (the `--report-out` file and the fleet
+    /// section of BENCH_7.json).
+    pub fn to_json(&self, cfg: &FleetConfig) -> Json {
+        let q = Quantiles::new(&self.speedups());
+        Json::obj(vec![
+            (
+                "mode",
+                Json::Str(if cfg.sequential { "sequential" } else { "concurrent" }.into()),
+            ),
+            (
+                "strategy",
+                Json::Str(match cfg.strategy {
+                    StrategyKind::Beam => "beam",
+                    StrategyKind::Evolution => "evolution",
+                }
+                .into()),
+            ),
+            ("seed", Json::Str(cfg.seed.to_string())),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("pipelines", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+            (
+                "speedup",
+                Json::obj(vec![
+                    ("min", Json::Num(q.min())),
+                    ("p50", Json::Num(q.quantile(50.0))),
+                    ("max", Json::Num(q.max())),
+                ]),
+            ),
+            ("trace_samples", Json::Num(self.samples.len() as f64)),
+            (
+                "service",
+                match &self.service_stats {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> FleetConfig {
+        FleetConfig {
+            networks: vec!["alexnet".into(), "squeezenet".into()],
+            evolution: EvolutionConfig {
+                population: 3,
+                offspring: 4,
+                immigrants: 1,
+                generations: 3,
+                seed: 1,
+            },
+            seed: 77,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn oracle_fleet_tunes_and_never_regresses_the_default() {
+        let cfg = tiny_cfg();
+        let report = run_fleet(&cfg, &FleetCost::Oracle).unwrap();
+        assert_eq!(report.results.len(), 2);
+        for r in &report.results {
+            assert!(r.completed);
+            assert!(
+                r.tuned_cost <= r.default_cost,
+                "{}: tuned {} > default {}",
+                r.network,
+                r.tuned_cost,
+                r.default_cost
+            );
+            assert!(r.candidates_scored > 0);
+        }
+        assert!(report.service_stats.is_none());
+        assert!(!report.samples.is_empty(), "trace harvest produced samples");
+        for s in &report.samples {
+            s.validate().unwrap();
+        }
+        // report JSON is well-formed and re-parses
+        let j = report.to_json(&cfg).to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("pipelines").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_and_sequential_fleets_agree_bitwise() {
+        let cfg = tiny_cfg();
+        let conc = run_fleet(&cfg, &FleetCost::Oracle).unwrap();
+        let seq_cfg = FleetConfig { sequential: true, ..cfg };
+        let seq = run_fleet(&seq_cfg, &FleetCost::Oracle).unwrap();
+        for (a, b) in conc.results.iter().zip(&seq.results) {
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.tuned_cost.to_bits(), b.tuned_cost.to_bits());
+            assert_eq!(a.best_schedule, b.best_schedule);
+            assert_eq!(a.generations, b.generations);
+        }
+    }
+
+    #[test]
+    fn unknown_network_fails_with_the_zoo_listing() {
+        let cfg = FleetConfig { networks: vec!["not-a-net".into()], ..tiny_cfg() };
+        let err = run_fleet(&cfg, &FleetCost::Oracle).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown network") && msg.contains("unet"), "{msg}");
+    }
+}

@@ -1,0 +1,35 @@
+//! Fleet autotuner: concurrent multi-pipeline schedule search driving
+//! the shared [`crate::predictor::PredictService`].
+//!
+//! The paper's search loop (Fig 2) tunes one pipeline at a time. This
+//! subsystem scales it out: a fleet of searches — one per pipeline, each
+//! a resumable [`SearchStrategy`] — runs concurrently with every worker
+//! scoring candidates through one shared service, so the coalescer fuses
+//! frontiers from different searches into shared batches and the memo
+//! cache is exercised by real cross-search load. Along the way each
+//! search checkpoints its complete state to disk ([`checkpoint`]) and
+//! records every scored candidate for cost-to-go trace harvesting
+//! ([`trace`]), producing training data in the standard dataset format.
+//!
+//! * [`strategy`] — the [`SearchStrategy`] trait, the refactored
+//!   [`BeamStrategy`] (what [`crate::search::beam_search`] now drives)
+//!   and the seeded (μ+λ) [`EvolutionStrategy`].
+//! * [`checkpoint`] — per-pipeline JSON checkpoints; resume is bitwise
+//!   equivalent to an uninterrupted run.
+//! * [`trace`] — search-trace recording with suffix-minimum cost-to-go
+//!   labels (the Steiner-style value-head target).
+//! * [`fleet`] — the driver: seeding, concurrency, the incumbent rule
+//!   (never adopt a schedule the simulator says is worse than the
+//!   default), and the fleet report.
+
+pub mod checkpoint;
+pub mod fleet;
+pub mod strategy;
+pub mod trace;
+
+pub use checkpoint::Checkpoint;
+pub use fleet::{run_fleet, FleetConfig, FleetCost, FleetReport, PipelineResult};
+pub use strategy::{
+    make_strategy, BeamStrategy, EvolutionConfig, EvolutionStrategy, SearchStrategy, StrategyKind,
+};
+pub use trace::TraceRecorder;

@@ -1,0 +1,204 @@
+//! Search-trace harvesting: turn the candidates a strategy scored into
+//! labeled [`GraphSample`]s the training stack can consume.
+//!
+//! The label is *cost-to-go*, not the raw model score: a candidate seen
+//! at generation `g` is labeled with the best score the search reached
+//! from generation `g` onward (a suffix-minimum over per-generation
+//! bests), clamped by its own score. That is the value-head target of
+//! Steiner et al. (value learning for schedule search, PAPERS.md): "how
+//! good is the best schedule reachable from here", which is what a
+//! lookahead search wants a model to predict — scoring a *prefix* of the
+//! search by its eventual outcome instead of its immediate cost.
+//!
+//! Harvested samples use the `dataset::json` wire format, so
+//! `gcn-perf train --data <trace>` and `train::active` ingest
+//! autotuner-generated data with no conversion step.
+
+use crate::constants::BENCH_RUNS;
+use crate::dataset::builder::featurize_schedule;
+use crate::dataset::GraphSample;
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::schedule::primitives::PipelineSchedule;
+use crate::sim::Machine;
+
+/// One scored candidate, held until harvest assigns its cost-to-go label.
+#[derive(Debug, Clone)]
+struct TraceEntry {
+    generation: usize,
+    sched: PipelineSchedule,
+    score: f64,
+}
+
+/// Records (schedule, model score) pairs per generation and harvests
+/// them as cost-to-go-labeled [`GraphSample`]s.
+///
+/// Capped at `cap` entries; later candidates are counted but dropped
+/// (search frontiers can be large, and the fleet runs many of them).
+#[derive(Debug)]
+pub struct TraceRecorder {
+    entries: Vec<TraceEntry>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl TraceRecorder {
+    pub fn new(cap: usize) -> TraceRecorder {
+        TraceRecorder { entries: Vec::new(), cap, dropped: 0 }
+    }
+
+    /// Record one generation's scored frontier.
+    pub fn record(&mut self, generation: usize, scored: &[(PipelineSchedule, f64)]) {
+        for (sched, score) in scored {
+            if self.entries.len() >= self.cap {
+                self.dropped += 1;
+                continue;
+            }
+            self.entries.push(TraceEntry { generation, sched: sched.clone(), score: *score });
+        }
+    }
+
+    /// Candidates recorded (excluding dropped ones).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Candidates dropped once the cap was hit.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Featurize every recorded candidate with its cost-to-go label.
+    ///
+    /// `pipeline_id` tags all samples (the fleet uses the pipeline's
+    /// fleet index); schedule ids are assigned in record order. All
+    /// `runs` slots repeat the label — the trainer averages runs into
+    /// one target, and a search trace has no per-run noise to model.
+    pub fn harvest(
+        &self,
+        p: &Pipeline,
+        nests: &[LoopNest],
+        machine: &Machine,
+        pipeline_id: u32,
+    ) -> Vec<GraphSample> {
+        if self.entries.is_empty() {
+            return Vec::new();
+        }
+        // best score achieved at each generation...
+        let last_gen = self.entries.iter().map(|e| e.generation).max().unwrap_or(0);
+        let mut gen_best = vec![f64::INFINITY; last_gen + 1];
+        for e in &self.entries {
+            if e.score < gen_best[e.generation] {
+                gen_best[e.generation] = e.score;
+            }
+        }
+        // ...then the best achieved from each generation onward
+        let mut suffix_best = gen_best;
+        for g in (0..last_gen).rev() {
+            if suffix_best[g + 1] < suffix_best[g] {
+                suffix_best[g] = suffix_best[g + 1];
+            }
+        }
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let label = e.score.min(suffix_best[e.generation]);
+                let mut s =
+                    featurize_schedule(p, nests, &e.sched, machine, pipeline_id, i as u32);
+                s.runs = [label as f32; BENCH_RUNS];
+                s
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::lower_pipeline;
+    use crate::schedule::random::random_pipeline_schedule;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn labels_are_suffix_minima_of_generation_bests() {
+        let p = crate::zoo::alexnet();
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let mut rng = Rng::new(7);
+        let scheds: Vec<PipelineSchedule> =
+            (0..4).map(|_| random_pipeline_schedule(&p, &nests, &mut rng)).collect();
+
+        let mut rec = TraceRecorder::new(100);
+        // gen 0 scores 8.0 and 5.0; gen 1 scores 3.0 and 9.0
+        rec.record(0, &[(scheds[0].clone(), 8.0), (scheds[1].clone(), 5.0)]);
+        rec.record(1, &[(scheds[2].clone(), 3.0), (scheds[3].clone(), 9.0)]);
+        let samples = rec.harvest(&p, &nests, &m, 42);
+        assert_eq!(samples.len(), 4);
+        // gen-0 entries see the eventual best (3.0) as their cost-to-go
+        assert_eq!(samples[0].runs[0], 3.0);
+        assert_eq!(samples[1].runs[0], 3.0);
+        // gen-1: best-from-here is 3.0; own 3.0 and min(9, 3) = 3.0
+        assert_eq!(samples[2].runs[0], 3.0);
+        assert_eq!(samples[3].runs[0], 3.0);
+        for (i, s) in samples.iter().enumerate() {
+            s.validate().unwrap();
+            assert_eq!(s.pipeline_id, 42);
+            assert_eq!(s.schedule_id, i as u32);
+            assert!(s.runs.iter().all(|&r| r == s.runs[0]), "uniform runs");
+        }
+    }
+
+    #[test]
+    fn own_score_clamps_the_label_and_cap_drops() {
+        let p = crate::zoo::alexnet();
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let mut rng = Rng::new(8);
+        let s0 = random_pipeline_schedule(&p, &nests, &mut rng);
+        let s1 = random_pipeline_schedule(&p, &nests, &mut rng);
+        let s2 = random_pipeline_schedule(&p, &nests, &mut rng);
+
+        let mut rec = TraceRecorder::new(2);
+        // search got *worse* over time: suffix best from gen 0 is 2.0
+        rec.record(0, &[(s0, 2.0), (s1, 4.0)]);
+        rec.record(1, &[(s2, 6.0)]); // dropped: over cap
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 1);
+        let samples = rec.harvest(&p, &nests, &m, 0);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].runs[0], 2.0);
+        assert_eq!(samples[1].runs[0], 4.0_f32.min(2.0)); // suffix min wins
+    }
+
+    #[test]
+    fn harvested_traces_round_trip_through_dataset_json() {
+        let p = crate::zoo::alexnet();
+        let nests = lower_pipeline(&p);
+        let m = Machine::default();
+        let mut rng = Rng::new(9);
+        let mut rec = TraceRecorder::new(16);
+        for g in 0..3 {
+            let sched = random_pipeline_schedule(&p, &nests, &mut rng);
+            let score = 1.0 + g as f64;
+            rec.record(g, &[(sched, score)]);
+        }
+        let samples = rec.harvest(&p, &nests, &m, 3);
+        let text = crate::dataset::json::samples_to_json(&samples);
+        let back = crate::dataset::json::samples_from_json(&text).unwrap();
+        assert_eq!(back.len(), samples.len());
+        for (a, b) in samples.iter().zip(&back) {
+            assert_eq!(a.runs, b.runs);
+            assert_eq!(a.pipeline_id, b.pipeline_id);
+            assert_eq!(a.n_stages, b.n_stages);
+        }
+        // a trace is trainable data: stats fit without degenerate spread
+        let mut ds = crate::dataset::Dataset { samples: back, stats: None };
+        ds.fit_stats();
+        assert!(ds.stats.is_some());
+    }
+}

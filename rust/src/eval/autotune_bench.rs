@@ -1,0 +1,226 @@
+//! Autotuner fleet benchmark — `BENCH_7.json`.
+//!
+//! Tunes the same set of zoo pipelines twice with identical seeds and a
+//! GCN predictor: once sequentially (one pipeline at a time through a
+//! private-use service) and once as the concurrent fleet, every search
+//! worker sharing one [`PredictService`]. Before any number is reported
+//! the two runs are asserted **bitwise identical** per pipeline — same
+//! best schedule, same tuned cost — which is the fleet's core claim:
+//! concurrency (and the coalescer fusing frontiers from different
+//! searches) changes wall-clock, never results. The report carries both
+//! wall times, the concurrent/sequential speedup, tuned-vs-default cost
+//! per pipeline, and both services' counters (cache hits, fused batches,
+//! queue saturation).
+//!
+//! CI runs the `--fast` variant via `gcn-perf bench --fast
+//! --autotune-out ...`; the `--require-speedup` gate (fleet beats
+//! sequential, tuned never worse than default) is enforced by that
+//! serial CI step, not by `cargo test`, which shares cores.
+
+use crate::autotune::{run_fleet, EvolutionConfig, FleetConfig, FleetCost, FleetReport};
+use crate::dataset::builder::{build_dataset, DataGenConfig};
+use crate::predictor::{GcnPredictor, PredictService, Predictor, ServiceConfig};
+use crate::runtime::{Backend, NativeBackend};
+use crate::util::json::Json;
+use crate::util::threadpool;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct AutotuneBenchConfig {
+    /// Short run (CI smoke).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl Default for AutotuneBenchConfig {
+    fn default() -> Self {
+        AutotuneBenchConfig { fast: false, seed: 7 }
+    }
+}
+
+/// Both runs' outcomes plus the shared workload description.
+pub struct AutotuneBenchReport {
+    pub fast: bool,
+    pub networks: Vec<String>,
+    pub sequential: FleetReport,
+    pub concurrent: FleetReport,
+    /// The fleet configs the runs used (for the report JSON).
+    pub seq_cfg: FleetConfig,
+    pub conc_cfg: FleetConfig,
+}
+
+impl AutotuneBenchReport {
+    /// Concurrent-fleet speedup over sequential tuning (wall-clock).
+    pub fn speedup(&self) -> f64 {
+        self.sequential.wall_s / self.concurrent.wall_s
+    }
+
+    /// Error unless the fleet beat sequential tuning and no pipeline
+    /// regressed past its default schedule (the `--require-speedup`
+    /// gate).
+    pub fn require_speedup(&self) -> Result<()> {
+        ensure!(
+            self.speedup() > 1.0,
+            "concurrent fleet ({:.2}s) did not beat sequential tuning ({:.2}s)",
+            self.concurrent.wall_s,
+            self.sequential.wall_s
+        );
+        for r in &self.concurrent.results {
+            ensure!(
+                r.tuned_cost <= r.default_cost,
+                "{}: tuned cost {} worse than default {}",
+                r.network,
+                r.tuned_cost,
+                r.default_cost
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A small GCN predictor bootstrapped the `net_bench` way: a generated
+/// dataset for feature stats, fresh native-engine parameters. Model
+/// quality is irrelevant here (the incumbent rule guards results); what
+/// matters is real featurize → coalesce → GCN-forward serving load.
+fn build_predictor(seed: u64) -> Result<Arc<dyn Predictor>> {
+    let ds = build_dataset(&DataGenConfig {
+        n_pipelines: 8,
+        schedules_per_pipeline: 4,
+        seed,
+        ..Default::default()
+    });
+    let stats = ds.stats.clone().context("dataset stats")?;
+    let backend = NativeBackend::new();
+    let params = backend.init_params(seed);
+    Ok(Arc::new(GcnPredictor::new(Box::new(backend), params, stats)))
+}
+
+fn fleet_config(cfg: &AutotuneBenchConfig, sequential: bool) -> FleetConfig {
+    let networks: Vec<String> = if cfg.fast {
+        vec!["alexnet".into(), "squeezenet".into(), "unet".into(), "resnet18".into()]
+    } else {
+        vec![
+            "alexnet".into(),
+            "squeezenet".into(),
+            "unet".into(),
+            "resnet18".into(),
+            "mobilenet_v2".into(),
+            "shufflenet".into(),
+        ]
+    };
+    let evolution = if cfg.fast {
+        EvolutionConfig { population: 3, offspring: 6, immigrants: 2, generations: 3, seed: 0 }
+    } else {
+        EvolutionConfig { generations: 8, ..Default::default() }
+    };
+    FleetConfig { networks, evolution, seed: cfg.seed, sequential, ..Default::default() }
+}
+
+fn spawn_service(predictor: &Arc<dyn Predictor>, n_pipelines: usize) -> Arc<PredictService> {
+    Arc::new(PredictService::spawn(
+        Arc::clone(predictor),
+        ServiceConfig {
+            workers: threadpool::num_threads().clamp(1, 4),
+            queue_cap: (2 * n_pipelines).max(8),
+            ..Default::default()
+        },
+    ))
+}
+
+/// Run both modes and cross-check them bitwise.
+pub fn run_autotune_bench(cfg: &AutotuneBenchConfig) -> Result<AutotuneBenchReport> {
+    let predictor = build_predictor(cfg.seed)?;
+
+    let seq_cfg = fleet_config(cfg, true);
+    let seq_service = spawn_service(&predictor, seq_cfg.networks.len());
+    let mut sequential = run_fleet(&seq_cfg, &FleetCost::Service(seq_service))?;
+
+    let conc_cfg = fleet_config(cfg, false);
+    let conc_service = spawn_service(&predictor, conc_cfg.networks.len());
+    let concurrent = run_fleet(&conc_cfg, &FleetCost::Service(conc_service))?;
+
+    // results must be mode-independent before timings mean anything
+    for (a, b) in sequential.results.iter().zip(&concurrent.results) {
+        ensure!(a.network == b.network, "result order diverged: {} vs {}", a.network, b.network);
+        ensure!(
+            a.tuned_cost.to_bits() == b.tuned_cost.to_bits()
+                && a.best_schedule == b.best_schedule,
+            "{}: sequential and concurrent tuning disagree ({} vs {})",
+            a.network,
+            a.tuned_cost,
+            b.tuned_cost
+        );
+    }
+    // traces are labeled from the same scored candidates either way
+    ensure!(
+        sequential.samples.len() == concurrent.samples.len(),
+        "trace sizes diverged: {} vs {}",
+        sequential.samples.len(),
+        concurrent.samples.len()
+    );
+    sequential.samples.clear(); // keep one copy; the runs agree
+
+    Ok(AutotuneBenchReport {
+        fast: cfg.fast,
+        networks: conc_cfg.networks.clone(),
+        sequential,
+        concurrent,
+        seq_cfg,
+        conc_cfg,
+    })
+}
+
+/// Serialize a report to `BENCH_7.json`.
+pub fn write_autotune_report(report: &AutotuneBenchReport, path: &Path) -> Result<()> {
+    let j = Json::obj(vec![
+        (
+            "bench",
+            Json::Str("autotune: concurrent fleet vs sequential tuning, shared service".into()),
+        ),
+        ("fast", Json::Num(if report.fast { 1.0 } else { 0.0 })),
+        ("networks", Json::Arr(report.networks.iter().map(|n| Json::Str(n.clone())).collect())),
+        ("sequential", report.sequential.to_json(&report.seq_cfg)),
+        ("concurrent", report.concurrent.to_json(&report.conc_cfg)),
+        ("speedup", Json::Num(report.speedup())),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_autotune_bench_agrees_across_modes_and_reports() {
+        // Structure + the built-in bitwise cross-check. The speedup gate
+        // is enforced by the serial CI step (`bench --require-speedup`),
+        // not here — `cargo test` shares cores.
+        let report = run_autotune_bench(&AutotuneBenchConfig { fast: true, seed: 13 }).unwrap();
+        assert_eq!(report.networks.len(), 4);
+        assert_eq!(report.concurrent.results.len(), 4);
+        for r in &report.concurrent.results {
+            assert!(r.completed);
+            assert!(r.tuned_cost <= r.default_cost, "{}: incumbent rule violated", r.network);
+        }
+        let svc = report.concurrent.service_stats.as_ref().expect("shared service counters");
+        assert!(svc.requests > 0 && svc.samples_evaluated > 0);
+        assert!(!report.concurrent.samples.is_empty(), "harvested traces");
+
+        let path = std::env::temp_dir().join("gcn_perf_bench7_test.json");
+        write_autotune_report(&report, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for key in ["sequential", "concurrent", "speedup", "tuned_cost", "cache_hits"] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        Json::parse(&text).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

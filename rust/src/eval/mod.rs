@@ -10,6 +10,9 @@
 //!   in `legacy_engine`.
 //! * [`net_bench`] — the TCP front-end under the loadgen client fleet,
 //!   with bitwise verification (`BENCH_6.json`).
+//! * [`autotune_bench`] — concurrent-fleet vs sequential autotuning
+//!   through one shared service, cross-checked bitwise
+//!   (`BENCH_7.json`).
 
 pub mod metrics;
 pub mod ranking;
@@ -18,6 +21,7 @@ pub mod perf;
 pub mod serve_bench;
 pub mod engine_bench;
 pub mod net_bench;
+pub mod autotune_bench;
 pub(crate) mod legacy_engine;
 
 pub use metrics::{regression_metrics, RegressionMetrics};

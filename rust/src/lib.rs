@@ -34,6 +34,11 @@
 //! * the evaluation harnesses for Fig 8 and Fig 9 plus the
 //!   dense-vs-sparse perf bench ([`eval`]), the real-world networks
 //!   ([`zoo`]) and the beam-search auto-scheduler ([`search`]);
+//! * the fleet autotuner ([`autotune`]): resumable search strategies
+//!   (beam + seeded evolutionary) tuning many pipelines concurrently
+//!   through one shared service, with per-pipeline checkpoints and
+//!   search-trace harvesting into the dataset format (`gcn-perf
+//!   autotune`);
 //! * dependency-free infrastructure ([`util`]): PRNG, thread pool, JSON,
 //!   stats, CLI parsing, bench + property-test harnesses.
 
@@ -78,6 +83,7 @@ pub mod baselines;
 pub mod eval;
 pub mod zoo;
 pub mod search;
+pub mod autotune;
 pub mod constants;
 
 // Shared test fixtures (JAX-pinned parity tensors, synthetic samples) —

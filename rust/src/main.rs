@@ -14,9 +14,13 @@
 //!   active         §VI active-learning study
 //!   transfer       §VI-A cross-machine portability study
 //!   search         model-guided beam search on a zoo network (Fig 2)
+//!   autotune       fleet autotuner: tune many zoo networks concurrently
+//!                  through one shared PredictService, with checkpoints,
+//!                  bitwise --resume and search-trace harvesting
 //!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json),
-//!                  naive-vs-coalesced serving (BENCH_4.json) and the
-//!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json)
+//!                  naive-vs-coalesced serving (BENCH_4.json), the
+//!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json) and
+//!                  the fleet-vs-sequential autotuner (BENCH_7.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
 //!                  requests on stdin — or, with --listen, a
 //!                  multi-client TCP server with graceful drain
@@ -101,8 +105,19 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
         &[],
     ),
     (
+        "autotune",
+        &[
+            "networks", "strategy", "model", "bundle", "ckpt", "data", "seed", "machine",
+            "generations", "population", "offspring", "immigrants", "beam", "candidates",
+            "checkpoint-dir", "checkpoint-every", "step-limit", "trace-cap", "trace-out",
+            "report-out", "workers", "queue-cap", "test-frac", "split-seed", "ffn-epochs",
+            "rnn-epochs", "gbt-trees", "fit-seed",
+        ],
+        &["resume", "sequential", "require-improvement"],
+    ),
+    (
         "bench",
-        &["out", "serve-out", "engine-out", "seed"],
+        &["out", "serve-out", "engine-out", "autotune-out", "seed"],
         &["fast", "require-speedup", "engine"],
     ),
     (
@@ -159,6 +174,7 @@ fn main() {
         "active" => cmd_active(&args),
         "transfer" => cmd_transfer(&args),
         "search" => cmd_search(&args),
+        "autotune" => cmd_autotune(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
@@ -191,10 +207,22 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   transfer        --bundle ...  (§VI-A cross-machine portability study)
   search          --network NAME [--model oracle|gcn|ffn|rnn|gbt]
                   [--bundle ... | --data ...] [--beam W --candidates C]
+  autotune        [--networks a,b,c] [--strategy beam|evolution]
+                  [--model oracle|gcn|ffn|rnn|gbt [--bundle ... | --data ...]]
+                  [--generations G --population P --offspring L]
+                  [--beam W --candidates C] [--seed S] [--sequential]
+                  [--checkpoint-dir DIR [--checkpoint-every K] [--resume]]
+                  [--step-limit N] [--trace-out t.json] [--report-out r.json]
+                  [--workers N --queue-cap Q] [--require-improvement]
+                  (tune a fleet of zoo networks concurrently through one
+                   shared PredictService; fixed --seed is deterministic,
+                   --resume restarts bitwise from checkpoints, the trace
+                   file feeds `train --data`)
   bench           [--out BENCH_3.json] [--serve-out BENCH_4.json]
-                  [--engine-out BENCH_5.json] [--fast] [--engine]
-                  [--require-speedup]  (dense-vs-sparse + serving + engine
-                   micro-benches; --engine runs only the engine suite)
+                  [--engine-out BENCH_5.json] [--autotune-out BENCH_7.json]
+                  [--fast] [--engine] [--require-speedup]
+                  (dense-vs-sparse + serving + engine micro-benches +
+                   autotuner fleet; --engine runs only the engine suite)
   serve           --bundle data/gcn.bundle [--workers N] [--queue-cap Q]
                   [--listen ADDR [--port-file F] [--read-timeout-ms T]
                    [--max-conns C] [--max-inflight W]] [--max-line-bytes B]
@@ -444,15 +472,8 @@ fn print_serve_stats(
         None => String::new(),
     };
     eprintln!(
-        "served {} requests: {} samples evaluated in {} fused batches; \
-         memo cache {} hits / {} misses; peak queue depth {}; \
-         latency p50 {:.1}us / p99 {:.1}us{conns}",
-        stats.requests,
-        stats.samples_evaluated,
-        stats.batches,
-        stats.cache_hits,
-        stats.cache_misses,
-        stats.peak_queue,
+        "{}; latency p50 {:.1}us / p99 {:.1}us{conns}",
+        stats.summary_line(),
         lat.p50_ns / 1e3,
         lat.p99_ns / 1e3
     );
@@ -796,6 +817,157 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_autotune(args: &Args) -> Result<()> {
+    use gcn_perf::autotune::{run_fleet, EvolutionConfig, FleetConfig, FleetCost, StrategyKind};
+
+    let defaults = FleetConfig::default();
+    let networks: Vec<String> = match args.str_opt("networks") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => defaults.networks.clone(),
+    };
+    let machine = match args.str_opt("machine") {
+        Some(m) => Machine::by_name(m).with_context(|| format!("unknown machine '{m}'"))?,
+        None => Machine::default(),
+    };
+    let seed = args.u64_or("seed", 1);
+    let cfg = FleetConfig {
+        networks,
+        strategy: StrategyKind::parse(args.str_or("strategy", "evolution"))?,
+        beam: BeamConfig {
+            beam_width: args.usize_or("beam", 8),
+            candidates_per_stage: args.usize_or("candidates", 12),
+            seed,
+        },
+        evolution: EvolutionConfig {
+            population: args.usize_or("population", defaults.evolution.population),
+            offspring: args.usize_or("offspring", defaults.evolution.offspring),
+            immigrants: args.usize_or("immigrants", defaults.evolution.immigrants),
+            generations: args.usize_or("generations", defaults.evolution.generations),
+            seed,
+        },
+        machine: machine.clone(),
+        seed,
+        sequential: args.has_flag("sequential"),
+        checkpoint_dir: args.str_opt("checkpoint-dir").map(PathBuf::from),
+        checkpoint_every: args.usize_or("checkpoint-every", defaults.checkpoint_every),
+        resume: args.has_flag("resume"),
+        step_limit: args.usize_or("step-limit", 0),
+        trace_cap: args.usize_or("trace-cap", defaults.trace_cap),
+    };
+
+    // cost model resolution mirrors `search`: oracle scores in the
+    // simulator; any registered predictor serves through one shared
+    // coalescing service that every fleet worker submits to
+    let bundle = bundle_path_opt(args);
+    let bundle_kind = match &bundle {
+        Some(b) => Some(registry::bundle_kind(b)?),
+        None => None,
+    };
+    let model_kind = args
+        .str_opt("model")
+        .map(str::to_string)
+        .or_else(|| bundle_kind.clone())
+        .unwrap_or_else(|| "oracle".to_string());
+    let cost = if model_kind == "oracle" {
+        if let Some(b) = &bundle {
+            bail!(
+                "--model oracle does not use a model bundle; drop --bundle {} or pick its model",
+                b.display()
+            );
+        }
+        FleetCost::Oracle
+    } else {
+        let predictor: Box<dyn Predictor> = match &bundle {
+            Some(b) => {
+                let kind = bundle_kind.as_deref().unwrap_or_default();
+                if kind != model_kind {
+                    bail!(
+                        "--model {model_kind} conflicts with bundle {} (kind '{kind}')",
+                        b.display()
+                    );
+                }
+                registry::load_bundle(b)?
+            }
+            None => {
+                let ds = load_dataset(args).with_context(|| {
+                    format!("model '{model_kind}' needs --bundle or --data to fit from")
+                })?;
+                let (train_ds, _) = split_dataset(args, &ds);
+                registry::fit_model(&model_kind, &train_ds, &fit_config(args))?
+            }
+        };
+        let workers = args
+            .usize_or("workers", gcn_perf::util::threadpool::num_threads().clamp(1, 4));
+        let service = PredictService::spawn(
+            Arc::from(predictor),
+            ServiceConfig {
+                workers,
+                queue_cap: args.usize_or("queue-cap", 64),
+                ..Default::default()
+            },
+        );
+        FleetCost::Service(Arc::new(service))
+    };
+
+    let report = run_fleet(&cfg, &cost)?;
+    for r in &report.results {
+        let resumed = match r.resumed_from {
+            Some(g) => format!(", resumed from gen {g}"),
+            None => String::new(),
+        };
+        let status = if r.completed { "" } else { " [interrupted — resume to finish]" };
+        println!(
+            "{}: default {:.3} ms → tuned {:.3} ms ({:.2}x, {} gens, {} scored{resumed}){}{}",
+            r.network,
+            r.default_cost * 1e3,
+            r.tuned_cost * 1e3,
+            r.default_cost / r.tuned_cost,
+            r.generations,
+            r.candidates_scored,
+            if r.adopted_default { " [kept default]" } else { "" },
+            status
+        );
+    }
+    if let Some(stats) = &report.service_stats {
+        println!("shared service: {}", stats.summary_line());
+    }
+    println!(
+        "fleet: {} pipelines in {:.2}s ({} mode, {} trace samples)",
+        report.results.len(),
+        report.wall_s,
+        if cfg.sequential { "sequential" } else { "concurrent" },
+        report.samples.len()
+    );
+
+    if let Some(path) = args.str_opt("trace-out") {
+        std::fs::write(path, gcn_perf::dataset::json::samples_to_json(&report.samples))
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!("search trace written to {path} (train with `gcn-perf train --data {path}`)");
+    }
+    if let Some(path) = args.str_opt("report-out") {
+        std::fs::write(path, report.to_json(&cfg).to_string())
+            .with_context(|| format!("writing report to {path}"))?;
+        println!("fleet report written to {path}");
+    }
+    if args.has_flag("require-improvement") {
+        for r in &report.results {
+            anyhow::ensure!(r.completed, "{} did not finish (step limit hit)", r.network);
+            anyhow::ensure!(
+                r.tuned_cost <= r.default_cost,
+                "{}: tuned {} worse than default {}",
+                r.network,
+                r.tuned_cost,
+                r.default_cost
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let fast = args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok();
     let seed = args.u64_or("seed", 3);
@@ -829,7 +1001,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
             serve_report.speedup,
             serve_report.coalesced_batches
         );
-        earlier_reports = Some((report, serve_report));
+        // the autotuner trajectory: sequential single-pipeline tuning vs
+        // the concurrent fleet sharing one service, cross-checked bitwise
+        let at_cfg = gcn_perf::eval::autotune_bench::AutotuneBenchConfig { fast, seed };
+        let at_report = gcn_perf::eval::autotune_bench::run_autotune_bench(&at_cfg)?;
+        let at_out = PathBuf::from(args.str_or("autotune-out", "BENCH_7.json"));
+        gcn_perf::eval::autotune_bench::write_autotune_report(&at_report, &at_out)?;
+        println!(
+            "autotune report written to {} ({} pipelines: fleet {:.2}s vs sequential {:.2}s, \
+             {:.2}x)",
+            at_out.display(),
+            at_report.networks.len(),
+            at_report.concurrent.wall_s,
+            at_report.sequential.wall_s,
+            at_report.speedup()
+        );
+        earlier_reports = Some((report, serve_report, at_report));
     }
 
     // the PR-5 engine core: fast path / tiled kernels / parallel
@@ -850,9 +1037,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     if args.has_flag("require-speedup") {
-        if let Some((report, serve_report)) = &earlier_reports {
+        if let Some((report, serve_report, at_report)) = &earlier_reports {
             report.require_padded_speedup()?;
             serve_report.require_speedup()?;
+            at_report.require_speedup()?;
         }
         engine_report.require_speedup()?;
     }

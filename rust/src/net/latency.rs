@@ -9,7 +9,7 @@
 
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
+use crate::util::stats::Quantiles;
 use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
@@ -84,6 +84,7 @@ impl LatencyRecorder {
             };
         }
         let xs: Vec<f64> = s.reservoir.iter().map(|&v| v as f64).collect();
+        let q = Quantiles::new(&xs);
         let mut counts = [0u64; 64];
         for &v in &s.reservoir {
             counts[v.max(1).ilog2() as usize] += 1;
@@ -101,9 +102,9 @@ impl LatencyRecorder {
         LatencySummary {
             count: s.seen,
             mean_ns: (s.sum_ns as f64) / (s.seen as f64),
-            p50_ns: percentile(&xs, 50.0),
-            p90_ns: percentile(&xs, 90.0),
-            p99_ns: percentile(&xs, 99.0),
+            p50_ns: q.quantile(50.0),
+            p90_ns: q.quantile(90.0),
+            p99_ns: q.quantile(99.0),
             max_ns: s.max_ns,
             buckets,
         }

@@ -157,29 +157,30 @@ pub fn error_json(msg: &str) -> Json {
 /// counters, front-end counters and the latency summary. Identical in
 /// stdin and TCP mode by construction — both call this.
 pub fn stats_json(shared: &ServeShared) -> Json {
-    let s = shared.service.stats();
     let c = &shared.counters;
     let n = |v: usize| Json::Num(v as f64);
-    Json::obj(vec![(
-        "stats",
-        Json::obj(vec![
-            ("model", Json::Str(shared.service.model_name())),
-            ("requests", n(s.requests)),
-            ("batches", n(s.batches)),
-            ("samples_evaluated", n(s.samples_evaluated)),
-            ("cache_hits", n(s.cache_hits)),
-            ("cache_misses", n(s.cache_misses)),
-            ("peak_queue", n(s.peak_queue)),
-            ("queue_cap", n(shared.service.queue_cap())),
-            ("connections_total", n(c.connections_total.load(Ordering::Relaxed))),
-            ("connections_active", n(c.connections_active.load(Ordering::Relaxed))),
-            ("connections_rejected", n(c.connections_rejected.load(Ordering::Relaxed))),
-            ("request_lines", n(c.request_lines.load(Ordering::Relaxed))),
-            ("responses", n(c.responses.load(Ordering::Relaxed))),
-            ("protocol_errors", n(c.protocol_errors.load(Ordering::Relaxed))),
-            ("latency", shared.latency.snapshot().to_json()),
-        ]),
-    )])
+    // The service-counter fields come verbatim from the one canonical
+    // snapshot shape (`ServiceStats::to_json`); this function only adds
+    // the front-end fields around them.
+    let mut obj = match shared.service.stats().to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("ServiceStats::to_json returns an object"),
+    };
+    let front = [
+        ("model", Json::Str(shared.service.model_name())),
+        ("queue_cap", n(shared.service.queue_cap())),
+        ("connections_total", n(c.connections_total.load(Ordering::Relaxed))),
+        ("connections_active", n(c.connections_active.load(Ordering::Relaxed))),
+        ("connections_rejected", n(c.connections_rejected.load(Ordering::Relaxed))),
+        ("request_lines", n(c.request_lines.load(Ordering::Relaxed))),
+        ("responses", n(c.responses.load(Ordering::Relaxed))),
+        ("protocol_errors", n(c.protocol_errors.load(Ordering::Relaxed))),
+        ("latency", shared.latency.snapshot().to_json()),
+    ];
+    for (k, v) in front {
+        obj.insert(k.to_string(), v);
+    }
+    Json::obj(vec![("stats", Json::Obj(obj))])
 }
 
 /// Run one session to completion: read frames from `reader`, write one

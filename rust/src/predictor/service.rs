@@ -49,6 +49,7 @@
 
 use crate::dataset::sample::GraphSample;
 use crate::predictor::Predictor;
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -160,6 +161,40 @@ pub struct ServiceStats {
     /// Deepest the bounded queue has ever been, in requests. Shows how
     /// close the service has come to its `queue_cap` backpressure bound.
     pub peak_queue: usize,
+}
+
+impl ServiceStats {
+    /// The canonical JSON shape of the counters. Every front-end that
+    /// reports service counters — the `STATS` response in both serve
+    /// modes, the autotune fleet report, BENCH_7.json — embeds exactly
+    /// this object, so field names can never drift between them (pinned
+    /// by a parity test in `net::session`).
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        Json::obj(vec![
+            ("requests", n(self.requests)),
+            ("batches", n(self.batches)),
+            ("samples_evaluated", n(self.samples_evaluated)),
+            ("cache_hits", n(self.cache_hits)),
+            ("cache_misses", n(self.cache_misses)),
+            ("peak_queue", n(self.peak_queue)),
+        ])
+    }
+
+    /// The canonical one-line human rendering of the counters, shared by
+    /// the serve shutdown summary and autotune progress output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "served {} requests: {} samples evaluated in {} fused batches; \
+             memo cache {} hits / {} misses; peak queue depth {}",
+            self.requests,
+            self.samples_evaluated,
+            self.batches,
+            self.cache_hits,
+            self.cache_misses,
+            self.peak_queue
+        )
+    }
 }
 
 // ------------------------------------------------------------- promise

@@ -11,10 +11,10 @@
 //! search caller instead of a panic that would take down every other
 //! in-flight client of a shared service.
 
+use crate::autotune::{BeamStrategy, SearchStrategy};
 use crate::ir::pipeline::Pipeline;
 use crate::lower::LoopNest;
-use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
-use crate::schedule::random::random_stage_schedule;
+use crate::schedule::primitives::PipelineSchedule;
 use crate::sim::{simulate, Machine};
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
@@ -98,60 +98,23 @@ impl Default for BeamConfig {
 /// frontier in one call (one service round-trip for served models);
 /// ranking uses `f64::total_cmp`, so a model emitting NaN sorts last
 /// instead of panicking the search.
+///
+/// This is a thin driver over [`crate::autotune::BeamStrategy`] — the
+/// same loop, made resumable for the fleet autotuner — run to
+/// completion in one call. Behavior (RNG draw order, scores, picked
+/// schedules) is identical to the pre-strategy implementation.
 pub fn beam_search(
     p: &Pipeline,
     nests: &[LoopNest],
     model: &dyn CostModel,
     cfg: &BeamConfig,
 ) -> Result<(PipelineSchedule, f64)> {
-    let ranks: Vec<usize> = p.stages.iter().map(|s| s.shape.len()).collect();
-    let consumers = p.consumers();
-    let mut rng = Rng::new(cfg.seed);
-
-    let mut beam: Vec<PipelineSchedule> = vec![PipelineSchedule::default_for(&ranks)];
-
-    // schedule stages output-first (reverse topological order)
-    for stage_id in (0..p.num_stages()).rev() {
-        let mut candidates: Vec<PipelineSchedule> = Vec::new();
-        for state in &beam {
-            // keep-default is always a candidate
-            candidates.push(state.clone());
-            for _ in 0..cfg.candidates_per_stage {
-                let mut next = state.clone();
-                let mut ss: StageSchedule =
-                    random_stage_schedule(&nests[stage_id], &consumers[stage_id], &mut rng);
-                // compute_at an inlined consumer is illegal — retarget
-                if let ComputeLoc::At { consumer, .. } = ss.compute {
-                    if matches!(next.stages[consumer].compute, ComputeLoc::Inline) {
-                        ss.compute = ComputeLoc::Root;
-                    }
-                }
-                next.stages[stage_id] = ss;
-                candidates.push(next);
-            }
-        }
-        // prune with the model — one frontier, one score call
-        let scores = model
-            .score(p, nests, &candidates)
-            .with_context(|| format!("{} failed scoring stage {stage_id}'s frontier", model.name()))?;
-        let mut idx: Vec<usize> = (0..candidates.len()).collect();
-        idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
-        beam = idx
-            .into_iter()
-            .take(cfg.beam_width)
-            .map(|i| candidates[i].clone())
-            .collect();
+    let mut strat = BeamStrategy::new(cfg.clone());
+    while !strat.done() {
+        strat.step(p, nests, model)?;
     }
-
-    let final_scores = model
-        .score(p, nests, &beam)
-        .with_context(|| format!("{} failed scoring the final beam", model.name()))?;
-    let (best_i, best_s) = final_scores
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.total_cmp(b.1))
-        .context("beam search produced an empty beam")?;
-    Ok((beam[best_i].clone(), *best_s))
+    let (sched, score) = strat.best().context("beam search produced an empty beam")?;
+    Ok((sched.clone(), score))
 }
 
 #[cfg(test)]

@@ -26,12 +26,13 @@ impl BenchResult {
     }
 
     pub fn report(&self) -> String {
+        let q = crate::util::stats::Quantiles::new(&self.samples_ns);
         format!(
             "{:<42} {:>12} {:>12} {:>12} {:>10}",
             self.name,
             fmt_ns(self.mean_ns()),
-            fmt_ns(self.median_ns()),
-            fmt_ns(self.p95_ns()),
+            fmt_ns(q.quantile(50.0)),
+            fmt_ns(q.quantile(95.0)),
             format!("±{:.1}%", 100.0 * self.std_ns() / self.mean_ns().max(1e-12)),
         )
     }

@@ -43,6 +43,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Snapshot the raw xoshiro256++ state for checkpointing.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot. Only feed this
+    /// states captured from a live generator: the all-zero state is a fixed
+    /// point of xoshiro and would emit zeros forever (`Rng::new` never
+    /// produces it).
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        assert!(s.iter().any(|&w| w != 0), "all-zero xoshiro state");
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
@@ -245,6 +259,25 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 10);
         assert!(idx.iter().all(|&i| i < 20));
+    }
+
+    #[test]
+    fn state_round_trip_resumes_stream() {
+        let mut a = Rng::new(77);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snap);
+        let resumed: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, resumed);
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn from_state_rejects_zero() {
+        let _ = Rng::from_state([0; 4]);
     }
 
     #[test]

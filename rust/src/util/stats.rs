@@ -17,20 +17,66 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Sort-once quantile view over a set of observations.
+///
+/// The repo used to re-sort the same slice for every percentile asked of it
+/// (latency snapshots computed p50/p90/p99 as three independent sorts); this
+/// is the one shared implementation that `net::latency`, `util::bench`, and
+/// the autotune fleet report all route through — sort once, query many.
+#[derive(Debug, Clone)]
+pub struct Quantiles {
+    sorted: Vec<f64>,
+}
+
+impl Quantiles {
+    /// Sort a copy of `xs` (NaN-safe `total_cmp` order). Input may be empty;
+    /// queries on an empty view return 0.0.
+    pub fn new(xs: &[f64]) -> Quantiles {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        Quantiles { sorted }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    /// p-th percentile (0..=100) by linear interpolation; 0.0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let v = &self.sorted;
+        if v.is_empty() {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            let w = rank - lo as f64;
+            v[lo] * (1.0 - w) + v[hi] * w
+        }
+    }
+}
+
 /// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+/// One-shot convenience over [`Quantiles`]; build the struct when you need
+/// several quantiles of the same data.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        let w = rank - lo as f64;
-        v[lo] * (1.0 - w) + v[hi] * w
-    }
+    Quantiles::new(xs).quantile(p)
 }
 
 /// Coefficient of determination R² of predictions vs observations.
@@ -94,6 +140,23 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 3.0);
         assert_eq!(percentile(&xs, 50.0), 2.0);
+    }
+
+    #[test]
+    fn quantiles_match_percentile_and_handle_empty() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let q = Quantiles::new(&xs);
+        for p in [0.0, 10.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(q.quantile(p), percentile(&xs, p), "p{p}");
+        }
+        assert_eq!(q.min(), 1.0);
+        assert_eq!(q.max(), 9.0);
+        assert_eq!(q.len(), 5);
+        let empty = Quantiles::new(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.quantile(50.0), 0.0);
+        assert_eq!(empty.min(), 0.0);
+        assert_eq!(empty.max(), 0.0);
     }
 
     #[test]

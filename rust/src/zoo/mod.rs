@@ -396,6 +396,11 @@ pub fn transformer() -> Pipeline {
     n.p
 }
 
+/// Look a zoo network up by its pipeline name (e.g. `"unet"`).
+pub fn by_name(name: &str) -> Option<Pipeline> {
+    all_networks().into_iter().find(|p| p.name == name)
+}
+
 /// All zoo networks: the nine Fig 9 networks plus the >48-stage
 /// [`resnet50`].
 pub fn all_networks() -> Vec<Pipeline> {

@@ -1,0 +1,210 @@
+//! Fleet autotuner integration tests: determinism through a shared
+//! service, bitwise checkpoint-resume, legality of every emitted
+//! schedule, and trace harvesting into the training format.
+
+use anyhow::Result;
+use gcn_perf::autotune::{
+    run_fleet, BeamStrategy, EvolutionConfig, EvolutionStrategy, FleetConfig, FleetCost,
+    SearchStrategy, StrategyKind,
+};
+use gcn_perf::dataset::sample::GraphSample;
+use gcn_perf::predictor::{PredictService, Predictor, ServiceConfig};
+use gcn_perf::search::{BeamConfig, SimCost};
+use gcn_perf::sim::Machine;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Deterministic toy model: a fixed linear read of each sample's
+/// schedule-dependent features. Per-sample and order-independent, so
+/// served predictions cannot depend on how the coalescer batches them —
+/// which is what lets the fleet tests assert bitwise determinism.
+struct FeatureSum;
+
+impl Predictor for FeatureSum {
+    fn name(&self) -> String {
+        "feature-sum".into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        Ok(samples
+            .iter()
+            .map(|s| {
+                let mut acc = s.n_stages as f64 * 1e-3;
+                for row in &s.dep {
+                    for (j, v) in row.iter().enumerate() {
+                        acc += (*v as f64) * (1.0 + (j % 7) as f64) * 1e-6;
+                    }
+                }
+                acc
+            })
+            .collect())
+    }
+    fn save(&self, _: &Path) -> Result<()> {
+        anyhow::bail!("toy test model; not saveable")
+    }
+}
+
+fn fleet_cfg(nets: &[&str], seed: u64) -> FleetConfig {
+    FleetConfig {
+        networks: nets.iter().map(|s| s.to_string()).collect(),
+        strategy: StrategyKind::Evolution,
+        evolution: EvolutionConfig {
+            population: 3,
+            offspring: 5,
+            immigrants: 2,
+            generations: 5,
+            seed: 0,
+        },
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn concurrent_fleet_through_one_shared_service_is_deterministic() {
+    // acceptance: >= 4 pipelines tuned concurrently through ONE shared
+    // PredictService, bitwise repeatable for a fixed seed
+    let nets = ["alexnet", "squeezenet", "unet", "resnet18"];
+    let run = |sequential: bool| {
+        let service = Arc::new(PredictService::spawn(
+            Arc::new(FeatureSum),
+            ServiceConfig { workers: 2, queue_cap: 8, ..Default::default() },
+        ));
+        let cfg = FleetConfig { sequential, ..fleet_cfg(&nets, 11) };
+        run_fleet(&cfg, &FleetCost::Service(service)).unwrap()
+    };
+    let a = run(false);
+    let b = run(false);
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.network, y.network);
+        assert_eq!(x.best_schedule, y.best_schedule, "{} diverged across runs", x.network);
+        assert_eq!(x.tuned_cost.to_bits(), y.tuned_cost.to_bits());
+        assert_eq!(
+            x.model_best_cost.map(f64::to_bits),
+            y.model_best_cost.map(f64::to_bits)
+        );
+    }
+    // ...and the interleaving doesn't matter: sequential mode agrees too
+    let s = run(true);
+    for (x, y) in a.results.iter().zip(&s.results) {
+        assert_eq!(x.best_schedule, y.best_schedule, "{}: concurrent != sequential", x.network);
+        assert_eq!(x.tuned_cost.to_bits(), y.tuned_cost.to_bits());
+    }
+    let stats = a.service_stats.expect("shared service counters");
+    assert!(stats.requests >= nets.len(), "every fleet member scored through the service");
+    assert!(stats.samples_evaluated > 0 && stats.batches > 0);
+    for r in &a.results {
+        assert!(r.completed);
+        assert!(r.tuned_cost <= r.default_cost, "{}: incumbent rule violated", r.network);
+    }
+}
+
+#[test]
+fn interrupted_fleet_resumes_bitwise() {
+    let dir = std::env::temp_dir().join("gcn_perf_autotune_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let nets = ["alexnet", "squeezenet"];
+    let base = fleet_cfg(&nets, 23);
+
+    // reference: one uninterrupted run, no checkpoints
+    let full = run_fleet(&base, &FleetCost::Oracle).unwrap();
+
+    // "kill" after 2 generations, checkpointing every generation
+    let interrupted = FleetConfig {
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        step_limit: 2,
+        ..base.clone()
+    };
+    let partial = run_fleet(&interrupted, &FleetCost::Oracle).unwrap();
+    for r in &partial.results {
+        assert!(!r.completed, "{} should have been interrupted", r.network);
+        assert_eq!(r.generations, 2);
+        // the incumbent rule keeps the default until the search finishes
+        assert!(r.adopted_default);
+        assert_eq!(r.tuned_cost.to_bits(), r.default_cost.to_bits());
+    }
+
+    // resume to completion: bitwise identical to the uninterrupted run
+    let resumed_cfg = FleetConfig { resume: true, step_limit: 0, ..interrupted };
+    let resumed = run_fleet(&resumed_cfg, &FleetCost::Oracle).unwrap();
+    for (a, b) in full.results.iter().zip(&resumed.results) {
+        assert!(b.completed);
+        assert_eq!(b.resumed_from, Some(2));
+        assert_eq!(a.best_schedule, b.best_schedule, "{}: resume diverged", a.network);
+        assert_eq!(a.tuned_cost.to_bits(), b.tuned_cost.to_bits());
+        assert_eq!(a.generations, b.generations);
+    }
+
+    // resuming a finished fleet is a no-op reporting the same outcome
+    let again = run_fleet(&resumed_cfg, &FleetCost::Oracle).unwrap();
+    for (a, b) in resumed.results.iter().zip(&again.results) {
+        assert_eq!(a.best_schedule, b.best_schedule);
+        assert_eq!(a.tuned_cost.to_bits(), b.tuned_cost.to_bits());
+        assert_eq!(b.candidates_scored, 0, "finished search must not rescore");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_random_beam_and_evolution_schedules_are_all_legal() {
+    use gcn_perf::schedule::legality::check_pipeline;
+    use gcn_perf::schedule::random::random_pipeline_schedule;
+    use gcn_perf::util::propcheck;
+
+    let p = gcn_perf::zoo::squeezenet();
+    let nests = gcn_perf::lower::lower_pipeline(&p);
+    let model = SimCost { machine: Machine::default() };
+    let cases = propcheck::default_cases().min(8);
+    propcheck::check_rng("autotune schedule legality", 0xA07, cases, |rng| {
+        let seed = rng.next_u64();
+        for _ in 0..4 {
+            let s = random_pipeline_schedule(&p, &nests, rng);
+            check_pipeline(&p, &nests, &s)?;
+        }
+        let mut beam =
+            BeamStrategy::new(BeamConfig { beam_width: 2, candidates_per_stage: 2, seed });
+        let mut evo = EvolutionStrategy::new(EvolutionConfig {
+            population: 3,
+            offspring: 4,
+            immigrants: 1,
+            generations: 2,
+            seed,
+        });
+        for strat in [&mut beam as &mut dyn SearchStrategy, &mut evo] {
+            while !strat.done() {
+                let scored = strat.step(&p, &nests, &model).map_err(|e| e.to_string())?;
+                for (sched, _) in scored {
+                    check_pipeline(&p, &nests, &sched)
+                        .map_err(|e| format!("{}: {e}", strat.name()))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fleet_traces_round_trip_into_the_training_format() {
+    let nets = ["alexnet", "squeezenet"];
+    let cfg = fleet_cfg(&nets, 31);
+    let report = run_fleet(&cfg, &FleetCost::Oracle).unwrap();
+    assert!(!report.samples.is_empty());
+    for s in &report.samples {
+        s.validate().unwrap();
+    }
+    // pipeline ids tag fleet membership
+    let pids: std::collections::BTreeSet<u32> =
+        report.samples.iter().map(|s| s.pipeline_id).collect();
+    assert_eq!(pids.len(), nets.len());
+
+    // the wire format `train --data` reads: serialize, parse, fit stats
+    let text = gcn_perf::dataset::json::samples_to_json(&report.samples);
+    let back = gcn_perf::dataset::json::samples_from_json(&text).unwrap();
+    assert_eq!(back.len(), report.samples.len());
+    for (a, b) in report.samples.iter().zip(&back) {
+        assert_eq!(a.runs, b.runs, "cost-to-go labels must survive the round trip");
+    }
+    let mut ds = gcn_perf::dataset::Dataset { samples: back, stats: None };
+    ds.fit_stats();
+    assert!(ds.stats.is_some());
+}

@@ -584,3 +584,46 @@ fn stats_counters_agree_between_stdin_and_tcp_modes() {
         );
     }
 }
+
+#[test]
+fn stats_response_embeds_the_service_snapshot_verbatim() {
+    // the serve `STATS` object and `ServiceStats::to_json` are the same
+    // source by construction; this pins every snapshot field (name and
+    // value) inside the served response, so autotune reports — which
+    // embed the snapshot directly — can never drift from serve output
+    let (shared, _) = stages_shared(1, 8);
+    let reqs: Vec<Vec<GraphSample>> =
+        vec![vec![chain_sample(2, 0.5)], vec![chain_sample(3, 0.25), chain_sample(4, 0.75)]];
+    let mut input = String::new();
+    for r in &reqs {
+        input.push_str(&samples_to_json(r));
+        input.push('\n');
+    }
+    let opts = SessionOpts::default();
+    serve_session(input.as_bytes(), Vec::new(), &shared, &opts).unwrap();
+
+    let mut out = Vec::new();
+    serve_session(&b"STATS\n"[..], &mut out, &shared, &opts).unwrap();
+    let served = Json::parse(std::str::from_utf8(&out).unwrap().trim()).unwrap();
+    let served_stats = served.get("stats").expect("stats object");
+
+    let snap = shared.service.stats();
+    assert!(snap.requests >= reqs.len(), "traffic must be visible in the snapshot");
+    let snap_fields = match snap.to_json() {
+        Json::Obj(m) => m,
+        other => panic!("snapshot must be an object, got {other:?}"),
+    };
+    assert!(!snap_fields.is_empty());
+    for (key, want) in &snap_fields {
+        assert_eq!(
+            served_stats.get(key).map(|v| v.to_string()),
+            Some(want.to_string()),
+            "served STATS field {key} diverges from ServiceStats::to_json"
+        );
+    }
+    // the human rendering quotes the same numbers
+    let line = snap.summary_line();
+    for v in [snap.requests, snap.samples_evaluated, snap.batches] {
+        assert!(line.contains(&v.to_string()), "{line} missing {v}");
+    }
+}

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Perf trajectory: builds the release binary and writes BENCH_3.json
 # (dense-vs-sparse engines), BENCH_4.json (naive-vs-coalesced serving),
-# BENCH_5.json (PR-5 engine core vs the frozen PR-4 core) and
-# BENCH_6.json (the TCP front-end under the loadgen client fleet) at the
-# repository root. Pass --fast for the short smoke variant CI runs.
+# BENCH_5.json (PR-5 engine core vs the frozen PR-4 core), BENCH_6.json
+# (the TCP front-end under the loadgen client fleet) and BENCH_7.json
+# (concurrent autotune fleet vs sequential tuning through one shared
+# service) at the repository root. Pass --fast for the short smoke
+# variant CI runs.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -13,6 +15,7 @@ if [[ "${1:-}" == "--fast" ]]; then
 fi
 
 cargo run --release -- bench ${FAST_FLAG} \
-    --out ../BENCH_3.json --serve-out ../BENCH_4.json --engine-out ../BENCH_5.json
+    --out ../BENCH_3.json --serve-out ../BENCH_4.json --engine-out ../BENCH_5.json \
+    --autotune-out ../BENCH_7.json
 cargo run --release -- loadgen ${FAST_FLAG} --out ../BENCH_6.json
-echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json and BENCH_6.json"
+echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json, BENCH_6.json and BENCH_7.json"

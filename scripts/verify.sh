@@ -51,4 +51,19 @@ grep -q requests_per_s "$SMOKE/bench6_smoke.json"
 kill -TERM "$SERVE_PID"
 wait "$SERVE_PID"
 
+echo "==> autotune smoke (tiny fleet through one shared service; tuned must not regress the default)"
+cargo run --release --quiet -- autotune --networks alexnet,squeezenet --bundle "$SMOKE/gcn.bundle" \
+    --population 3 --offspring 4 --immigrants 1 --generations 3 --seed 5 \
+    --require-improvement --report-out "$SMOKE/fleet.json" --trace-out "$SMOKE/trace.json"
+grep -q tuned_cost "$SMOKE/fleet.json"
+grep -q pipeline_id "$SMOKE/trace.json"
+
+echo "==> autotune checkpoint smoke (interrupted run, then --resume finishes the search)"
+cargo run --release --quiet -- autotune --networks alexnet --population 3 --offspring 4 \
+    --immigrants 1 --generations 3 --seed 5 \
+    --checkpoint-dir "$SMOKE/ckpt" --checkpoint-every 1 --step-limit 1
+cargo run --release --quiet -- autotune --networks alexnet --population 3 --offspring 4 \
+    --immigrants 1 --generations 3 --seed 5 \
+    --checkpoint-dir "$SMOKE/ckpt" --resume --require-improvement
+
 echo "verify: OK"
