@@ -8,6 +8,8 @@
 //! * [`engine_bench`] — native-engine micro-benchmarks against the
 //!   frozen PR-4 compute core (`BENCH_5.json`), with the baseline kept
 //!   in `legacy_engine`.
+//! * [`simd_bench`] — scalar vs SIMD vs int8 inference lanes of the
+//!   native engine, with the numeric-mode gates (`BENCH_8.json`).
 //! * [`net_bench`] — the TCP front-end under the loadgen client fleet,
 //!   with bitwise verification (`BENCH_6.json`).
 //! * [`autotune_bench`] — concurrent-fleet vs sequential autotuning
@@ -20,6 +22,7 @@ pub mod harness;
 pub mod perf;
 pub mod serve_bench;
 pub mod engine_bench;
+pub mod simd_bench;
 pub mod net_bench;
 pub mod autotune_bench;
 pub(crate) mod legacy_engine;

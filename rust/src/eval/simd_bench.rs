@@ -1,0 +1,410 @@
+//! SIMD / int8 engine benchmarks — `BENCH_8.json`.
+//!
+//! Three-way comparison of the native engine's inference lanes on the
+//! two canonical workloads (`padded`, `resnet50` — shared with
+//! `eval::engine_bench`):
+//!
+//! * **scalar** — the bitwise-deterministic f32 reference (the PR-5
+//!   fast path, still the default everywhere);
+//! * **simd** — the same f32 math through the best runtime-detected
+//!   microkernel tier (`sse2`/`avx2` with the `simd` cargo feature on
+//!   x86_64; identical to scalar otherwise);
+//! * **int8** — the reduced-precision path (per-channel int8 weights,
+//!   f32 accumulation) on the same detected tier.
+//!
+//! Per lane it reports infer latency, throughput and steady-state
+//! allocations/op; numeric-mode validation runs before any timing and
+//! is unconditional: SIMD must match scalar within
+//! [`SIMD_REL_TOL`](crate::runtime::kernels_simd::SIMD_REL_TOL) per
+//! output, int8 must stay inside the z-envelope declared in
+//! [`crate::runtime::quant`], and int8 predictions on zoo (resnet50)
+//! schedules must agree with f32 rankings at
+//! [`INT8_RANK_AGREEMENT_MIN`] or better — a fast lane that answers a
+//! different model is worthless. The wall-clock gates
+//! ([`SimdBenchReport::require_speedup`]) run only in the serial CI
+//! bench step and are skipped (with a note) when the build resolves to
+//! scalar kernels, where there is no speedup to assert.
+
+use crate::dataset::builder::sample_from_schedule;
+use crate::dataset::sample::GraphSample;
+use crate::eval::metrics::regression_metrics;
+use crate::eval::perf::{large_workload, small_workload};
+use crate::eval::ranking::pairwise_ranking_accuracy;
+use crate::lower::lower_pipeline;
+use crate::model::PackedBatch;
+use crate::runtime::kernels_simd::{detected, KernelVariant, SIMD_REL_TOL};
+use crate::runtime::quant::{INT8_RANK_AGREEMENT_MIN, INT8_Z_ABS_TOL, INT8_Z_REL_TOL};
+use crate::runtime::{Backend, NativeBackend, QuantParams};
+use crate::schedule::random::random_pipeline_schedule;
+use crate::sim::Machine;
+use crate::util::alloc_count::{thread_alloc_bytes, thread_alloc_count};
+use crate::util::bench::{bench, black_box, BenchResult};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct SimdBenchConfig {
+    /// Short warmup/measure windows (CI smoke runs).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl Default for SimdBenchConfig {
+    fn default() -> Self {
+        SimdBenchConfig { fast: false, seed: 3 }
+    }
+}
+
+/// One measured lane/workload cell.
+#[derive(Debug, Clone)]
+pub struct SimdRow {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub graphs_per_s: f64,
+}
+
+/// Steady-state allocation profile of one lane (padded workload).
+#[derive(Debug, Clone)]
+pub struct LaneAllocs {
+    pub lane: String,
+    pub allocs_per_infer: f64,
+    pub alloc_bytes_per_infer: f64,
+}
+
+/// The full three-way report.
+#[derive(Debug, Clone)]
+pub struct SimdBenchReport {
+    pub fast: bool,
+    /// The microkernel tier the simd and int8 lanes actually ran on
+    /// ("scalar" in a default build — then the speed gates are moot).
+    pub variant: String,
+    pub rows: Vec<SimdRow>,
+    /// mean scalar latency / mean lane latency, per workload+lane
+    /// (`> 1` means the lane wins).
+    pub speedups: Vec<(String, f64)>,
+    pub allocs: Vec<LaneAllocs>,
+    /// Largest per-output relative deviation of the SIMD lane from
+    /// scalar, across both workloads (gated at `SIMD_REL_TOL`).
+    pub max_rel_dev_simd: f64,
+    /// Largest absolute log-runtime deviation of the int8 lane from
+    /// scalar f32, across both workloads (gated by the z-envelope).
+    pub max_z_dev_int8: f64,
+    /// Pairwise ranking agreement of int8 vs f32 predictions on zoo
+    /// (resnet50) schedules, as a fraction in [0, 1].
+    pub int8_rank_agreement: f64,
+    /// MAPE of f32 and int8 predictions against the zoo samples' mean
+    /// measured runtimes — the end-to-end prediction-error delta int8
+    /// costs.
+    pub mape_f32: f64,
+    pub mape_int8: f64,
+}
+
+impl SimdBenchReport {
+    /// The scalar/lane ratio for a named cell, NaN if absent.
+    pub fn speedup(&self, name: &str) -> f64 {
+        self.speedups
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, x)| *x)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// The wall-clock acceptance bar of the SIMD microkernel layer,
+    /// enforced by the serial CI bench step (`bench --require-speedup`),
+    /// not by `cargo test`: the SIMD f32 lane must beat scalar by ≥1.5x
+    /// on both workloads (>1.0x in `--fast` runs — short windows on
+    /// shared runners cannot hold a tight ratio), and int8 must be at
+    /// least as fast as SIMD f32 (within 20% in `--fast` runs). When the
+    /// build resolves to scalar kernels there is no speedup to assert;
+    /// the gates are skipped with a note. The numeric-mode gates are NOT
+    /// here — they run unconditionally inside [`run_simd_bench`].
+    pub fn require_speedup(&self) -> Result<()> {
+        if self.variant == KernelVariant::Scalar.as_str() {
+            eprintln!(
+                "simd bench: kernels resolved to scalar (no `simd` feature or no CPU \
+                 support) — speed gates skipped, numeric gates already ran"
+            );
+            return Ok(());
+        }
+        let simd_bar = if self.fast { 1.0 } else { 1.5 };
+        let int8_factor = if self.fast { 0.8 } else { 1.0 };
+        for workload in ["padded", "resnet50"] {
+            let simd = self.speedup(&format!("{workload}/simd"));
+            ensure!(
+                simd > simd_bar,
+                "simd infer did not beat scalar on {workload}: {simd:.3}x \
+                 (expected > {simd_bar})"
+            );
+            let int8 = self.speedup(&format!("{workload}/int8"));
+            ensure!(
+                int8 >= simd * int8_factor,
+                "int8 infer fell behind simd f32 on {workload}: {int8:.3}x vs \
+                 {simd:.3}x (expected >= {:.3}x)",
+                simd * int8_factor
+            );
+        }
+        Ok(())
+    }
+}
+
+fn durations(fast: bool) -> (Duration, Duration) {
+    if fast {
+        (Duration::from_millis(30), Duration::from_millis(120))
+    } else {
+        (Duration::from_millis(200), Duration::from_secs(1))
+    }
+}
+
+fn row(r: &BenchResult, batch_graphs: usize) -> SimdRow {
+    let mean = r.mean_ns();
+    SimdRow {
+        name: r.name.clone(),
+        mean_ns: mean,
+        p95_ns: r.p95_ns(),
+        graphs_per_s: batch_graphs as f64 / (mean / 1e9),
+    }
+}
+
+/// Steady-state allocations/op of one lane: warm the thread-local
+/// workspace, then measure a single-threaded loop with the per-thread
+/// counters (exact regardless of concurrent threads).
+fn measure_allocs(mut f: impl FnMut()) -> (f64, f64) {
+    for _ in 0..3 {
+        f();
+    }
+    let calls = 20u64;
+    let count0 = thread_alloc_count();
+    let bytes0 = thread_alloc_bytes();
+    for _ in 0..calls {
+        f();
+    }
+    let count = (thread_alloc_count() - count0) as f64 / calls as f64;
+    let bytes = (thread_alloc_bytes() - bytes0) as f64 / calls as f64;
+    (count, bytes)
+}
+
+/// Random schedules of the 59-stage zoo network, with their simulated
+/// runtimes — the end-to-end sample set the prediction-error and
+/// ranking gates run on.
+fn zoo_samples(seed: u64, n: usize) -> Vec<GraphSample> {
+    let net = crate::zoo::resnet50();
+    let nests = lower_pipeline(&net);
+    let machine = Machine::default();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|sid| {
+            let sched = random_pipeline_schedule(&net, &nests, &mut rng);
+            sample_from_schedule(&net, &nests, &sched, &machine, 0, sid as u32, &mut rng)
+        })
+        .collect()
+}
+
+/// Run the scalar/SIMD/int8 comparison on both workloads, including the
+/// unconditional numeric-mode gates.
+pub fn run_simd_bench(cfg: &SimdBenchConfig) -> Result<SimdBenchReport> {
+    let scalar = NativeBackend::new();
+    let tuned = NativeBackend::with_variant(detected());
+    let variant = tuned.kernel_variant();
+    let (small, stats) = small_workload(cfg.seed)?;
+    let large = large_workload(cfg.seed ^ 0x9E37, &stats, if cfg.fast { 6 } else { 12 })?;
+    let (warm, measure) = durations(cfg.fast);
+
+    let params = scalar.init_params(1);
+    let qp = QuantParams::from_params(&params, scalar.manifest().n_conv)?;
+
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    let mut max_rel_dev_simd = 0f64;
+    let mut max_z_dev_int8 = 0f64;
+    for (workload, batch) in [("padded", &small), ("resnet50", &large)] {
+        let nb = batch.n_graphs();
+
+        // numeric-mode gates, outside the timed loops and unconditional:
+        // a fast lane answering a different model would be meaningless
+        let z_scalar = scalar.infer(&params, batch)?;
+        let z_simd = tuned.infer(&params, batch)?;
+        for (s, v) in z_scalar.iter().zip(&z_simd) {
+            let dev = (*v as f64 - *s as f64).abs() / (*s as f64).abs().max(1.0);
+            max_rel_dev_simd = max_rel_dev_simd.max(dev);
+            ensure!(
+                dev <= SIMD_REL_TOL,
+                "{workload}: {} infer deviates {dev:.2e} from scalar \
+                 (envelope {SIMD_REL_TOL:.0e})",
+                variant.as_str()
+            );
+        }
+        let z_int8 = tuned.infer_quant(&qp, batch)?;
+        for (s, v) in z_scalar.iter().zip(&z_int8) {
+            let dev = (*v as f64 - *s as f64).abs();
+            let tol = INT8_Z_ABS_TOL + INT8_Z_REL_TOL * (*s as f64).abs();
+            max_z_dev_int8 = max_z_dev_int8.max(dev);
+            ensure!(
+                dev <= tol,
+                "{workload}: int8 log-runtime deviates {dev:.4} from f32 \
+                 (envelope {tol:.4})"
+            );
+        }
+
+        let scalar_r = bench(&format!("{workload}/infer/scalar"), warm, measure, || {
+            black_box(scalar.infer(&params, batch).unwrap());
+        });
+        let simd_r = bench(&format!("{workload}/infer/simd"), warm, measure, || {
+            black_box(tuned.infer(&params, batch).unwrap());
+        });
+        let int8_r = bench(&format!("{workload}/infer/int8"), warm, measure, || {
+            black_box(tuned.infer_quant(&qp, batch).unwrap());
+        });
+        speedups.push((format!("{workload}/simd"), scalar_r.mean_ns() / simd_r.mean_ns()));
+        speedups.push((format!("{workload}/int8"), scalar_r.mean_ns() / int8_r.mean_ns()));
+        for r in [&scalar_r, &simd_r, &int8_r] {
+            rows.push(row(r, nb));
+        }
+    }
+
+    let allocs = vec![
+        lane_allocs("scalar", || {
+            black_box(scalar.infer(&params, &small).unwrap());
+        }),
+        lane_allocs("simd", || {
+            black_box(tuned.infer(&params, &small).unwrap());
+        }),
+        lane_allocs("int8", || {
+            black_box(tuned.infer_quant(&qp, &small).unwrap());
+        }),
+    ];
+
+    // end-to-end on zoo schedules: prediction-error delta and ranking
+    // agreement of the reduced-precision path against full f32
+    let zoo = zoo_samples(cfg.seed ^ 0xC0FFEE, if cfg.fast { 24 } else { 64 });
+    let refs: Vec<&GraphSample> = zoo.iter().collect();
+    let truth: Vec<f64> = refs.iter().map(|s| s.mean_runtime()).collect();
+    let pred_f32 = scalar.predict_runtimes(&params, &refs, &stats)?;
+    let pred_int8 = tuned.predict_runtimes_quant(&qp, &refs, &stats)?;
+    let mape_f32 = regression_metrics("gcn-f32", &truth, &pred_f32).avg_error_pct;
+    let mape_int8 = regression_metrics("gcn-int8", &truth, &pred_int8).avg_error_pct;
+    let rank = pairwise_ranking_accuracy("int8-vs-f32", &pred_f32, &pred_int8, 0.01);
+    let int8_rank_agreement = rank.accuracy_pct() / 100.0;
+    ensure!(
+        int8_rank_agreement >= INT8_RANK_AGREEMENT_MIN,
+        "int8 ranking agreement with f32 is {int8_rank_agreement:.3} on zoo schedules \
+         (declared minimum {INT8_RANK_AGREEMENT_MIN})"
+    );
+
+    Ok(SimdBenchReport {
+        fast: cfg.fast,
+        variant: variant.as_str().into(),
+        rows,
+        speedups,
+        allocs,
+        max_rel_dev_simd,
+        max_z_dev_int8,
+        int8_rank_agreement,
+        mape_f32,
+        mape_int8,
+    })
+}
+
+fn lane_allocs(lane: &str, f: impl FnMut()) -> LaneAllocs {
+    let (allocs_per_infer, alloc_bytes_per_infer) = measure_allocs(f);
+    LaneAllocs { lane: lane.into(), allocs_per_infer, alloc_bytes_per_infer }
+}
+
+/// Serialize a report to `BENCH_8.json`.
+pub fn write_simd_report(report: &SimdBenchReport, path: &Path) -> Result<()> {
+    let rows: Vec<Json> = report
+        .rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("p95_ns", Json::Num(r.p95_ns)),
+                ("graphs_per_s", Json::Num(r.graphs_per_s)),
+            ])
+        })
+        .collect();
+    let speedups: Vec<Json> = report
+        .speedups
+        .iter()
+        .map(|(name, x)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("scalar_over_lane", Json::Num(*x)),
+            ])
+        })
+        .collect();
+    let allocs: Vec<Json> = report
+        .allocs
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("lane", Json::Str(a.lane.clone())),
+                ("allocs_per_infer", Json::Num(a.allocs_per_infer)),
+                ("alloc_bytes_per_infer", Json::Num(a.alloc_bytes_per_infer)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::Str("native engine: scalar vs simd vs int8 inference".into())),
+        ("fast", Json::Num(if report.fast { 1.0 } else { 0.0 })),
+        ("kernel_variant", Json::Str(report.variant.clone())),
+        ("results", Json::Arr(rows)),
+        ("speedups", Json::Arr(speedups)),
+        ("allocs", Json::Arr(allocs)),
+        ("max_rel_dev_simd", Json::Num(report.max_rel_dev_simd)),
+        ("max_z_dev_int8", Json::Num(report.max_z_dev_int8)),
+        ("int8_rank_agreement", Json::Num(report.int8_rank_agreement)),
+        ("mape_f32", Json::Num(report.mape_f32)),
+        ("mape_int8", Json::Num(report.mape_int8)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string()).with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_simd_bench_runs_and_gates_numerics() {
+        // Structure + the unconditional numeric-mode gates only. The
+        // wall-clock bars are enforced by the serial CI bench step
+        // (`gcn-perf bench --fast --require-speedup`), not here —
+        // `cargo test` shares cores with sibling tests.
+        let report = run_simd_bench(&SimdBenchConfig { fast: true, seed: 5 }).unwrap();
+        assert_eq!(report.rows.len(), 6);
+        assert!(report.rows.iter().all(|r| r.mean_ns > 0.0 && r.graphs_per_s > 0.0));
+        assert_eq!(report.speedups.len(), 4);
+        for (name, x) in &report.speedups {
+            assert!(x.is_finite() && *x > 0.0, "{name} ratio is {x}");
+        }
+        assert_eq!(report.allocs.len(), 3);
+        assert!(report.max_rel_dev_simd <= SIMD_REL_TOL);
+        assert!(report.int8_rank_agreement >= INT8_RANK_AGREEMENT_MIN);
+        assert!(report.mape_f32.is_finite() && report.mape_int8.is_finite());
+        assert!(report.speedup("padded/simd").is_finite());
+        assert!(report.speedup("no-such-cell").is_nan());
+        // in a default (no-simd) build the speed gates self-skip, so this
+        // must pass everywhere; the simd CI lane exercises the real bars
+        if report.variant == "scalar" {
+            report.require_speedup().unwrap();
+        }
+
+        let path = std::env::temp_dir().join("gcn_perf_bench8_test.json");
+        write_simd_report(&report, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("scalar_over_lane"));
+        assert!(text.contains("int8_rank_agreement"));
+        crate::util::json::Json::parse(&text).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -6,6 +6,8 @@
 //!   train          train the GCN and save a single-file model bundle
 //!   predict        load any model bundle and serve predictions for a JSON
 //!                  sample file (or a binary dataset)
+//!   quantize       mint an int8 per-channel-quantized serving bundle from
+//!                  a trained f32 gcn bundle (serve with --precision int8)
 //!   export-samples write a binary dataset's samples as the JSON
 //!                  interchange format `predict`/`serve` consume
 //!   fig8           regenerate Fig 8 (avg/max error, R² vs Halide + TVM)
@@ -19,8 +21,9 @@
 //!                  bitwise --resume and search-trace harvesting
 //!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json),
 //!                  naive-vs-coalesced serving (BENCH_4.json), the
-//!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json) and
-//!                  the fleet-vs-sequential autotuner (BENCH_7.json)
+//!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json), the
+//!                  fleet-vs-sequential autotuner (BENCH_7.json) and the
+//!                  scalar/SIMD/int8 inference lanes (BENCH_8.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
 //!                  requests on stdin — or, with --listen, a
 //!                  multi-client TCP server with graceful drain
@@ -75,7 +78,8 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
         ],
         &[],
     ),
-    ("predict", &["bundle", "ckpt", "samples", "data", "out"], &[]),
+    ("predict", &["bundle", "ckpt", "samples", "data", "out", "precision"], &[]),
+    ("quantize", &["bundle", "ckpt", "out"], &[]),
     ("export-samples", &["data", "out", "limit"], &[]),
     (
         "fig8",
@@ -117,14 +121,17 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
     ),
     (
         "bench",
-        &["out", "serve-out", "engine-out", "autotune-out", "seed"],
+        &[
+            "out", "serve-out", "engine-out", "autotune-out", "simd-out", "seed", "bundle",
+            "ckpt", "precision",
+        ],
         &["fast", "require-speedup", "engine"],
     ),
     (
         "serve",
         &[
             "bundle", "ckpt", "workers", "queue-cap", "listen", "port-file", "read-timeout-ms",
-            "max-line-bytes", "max-conns", "max-inflight",
+            "max-line-bytes", "max-conns", "max-inflight", "precision",
         ],
         &[],
     ),
@@ -167,6 +174,7 @@ fn main() {
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "quantize" => cmd_quantize(&args),
         "export-samples" => cmd_export_samples(&args),
         "fig8" => cmd_fig8(&args),
         "fig9" => cmd_fig9(&args),
@@ -196,7 +204,10 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   train           --data data/dataset.bin --bundle data/gcn.bundle [--epochs E]
                   [--test-frac F] [--artifacts DIR]
   predict         --bundle data/gcn.bundle (--samples s.json | --data ds.bin)
-                  [--out preds.json]
+                  [--out preds.json] [--precision f32|int8]
+  quantize        --bundle data/gcn.bundle [--out data/gcn-int8.bundle]
+                  (mint an int8 per-channel serving bundle from a trained
+                   f32 gcn bundle; serve it with --precision int8)
   export-samples  --data ds.bin [--out samples.json] [--limit N]
                   (binary dataset → the JSON interchange predict/serve read)
   fig8            --data ... --bundle ... [--ffn-epochs E] [--with-rnn]
@@ -220,10 +231,14 @@ USAGE: gcn-perf <subcommand> [--key value ...]
                    file feeds `train --data`)
   bench           [--out BENCH_3.json] [--serve-out BENCH_4.json]
                   [--engine-out BENCH_5.json] [--autotune-out BENCH_7.json]
-                  [--fast] [--engine] [--require-speedup]
+                  [--simd-out BENCH_8.json] [--fast] [--engine]
+                  [--require-speedup] [--bundle ... --precision f32|int8]
                   (dense-vs-sparse + serving + engine micro-benches +
-                   autotuner fleet; --engine runs only the engine suite)
-  serve           --bundle data/gcn.bundle [--workers N] [--queue-cap Q]
+                   autotuner fleet + scalar/SIMD/int8 lanes; --engine runs
+                   only the engine + simd suites; --bundle/--precision
+                   validate a serving bundle's numeric mode up front)
+  serve           --bundle data/gcn.bundle [--precision f32|int8]
+                  [--workers N] [--queue-cap Q]
                   [--listen ADDR [--port-file F] [--read-timeout-ms T]
                    [--max-conns C] [--max-inflight W]] [--max-line-bytes B]
                   (daemon: one JSON sample-array request per line — stdin
@@ -269,6 +284,19 @@ fn bundle_path_opt(args: &Args) -> Option<PathBuf> {
 
 fn bundle_path(args: &Args) -> Result<PathBuf> {
     bundle_path_opt(args).context("--bundle required (a model bundle saved by `gcn-perf train`)")
+}
+
+/// Reconcile `--precision` with the bundle's kind. Asking an f32 bundle
+/// for int8 (or the reverse) is a *usage* error, so it exits 2 like
+/// every other bad-flag path — not 1 like a runtime failure.
+fn resolve_precision_or_exit(args: &Args, bundle_kind: &str) -> gcn_perf::predictor::Precision {
+    match gcn_perf::predictor::quant::resolve_precision(args.str_opt("precision"), bundle_kind) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// Load the GCN bundle and stand a serving layer in front of it: the eval
@@ -345,8 +373,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let path = bundle_path(args)?;
-    // one-shot client of the same serving layer `serve` runs long-lived
-    let service = PredictService::with_defaults(Arc::from(registry::load_bundle(&path)?));
+    resolve_precision_or_exit(args, &registry::bundle_kind(&path)?);
+    // one-shot client of the same serving layer `serve` runs long-lived;
+    // serving loads pick the best runtime-detected microkernel tier
+    let service =
+        PredictService::with_defaults(Arc::from(registry::load_bundle_serving(&path)?));
+    let engine = service.engine_info();
+    eprintln!("engine: {} kernels, {} precision", engine.kernel_variant, engine.precision);
     let samples = if let Some(f) = args.str_opt("samples") {
         let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
         gcn_perf::dataset::json::samples_from_json(&text)?
@@ -374,6 +407,29 @@ fn cmd_predict(args: &Args) -> Result<()> {
         }
         None => println!("{}", report.to_string()),
     }
+    Ok(())
+}
+
+/// Mint a reduced-precision serving bundle: every GEMM weight matrix
+/// becomes per-output-channel int8 + f32 scales, everything else rides
+/// along verbatim. The result is a first-class registry bundle (kind
+/// "gcn-int8") that `predict`/`serve`/`bench` accept via `--precision
+/// int8`; the original f32 bundle stays the full-precision reference.
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let src_path = bundle_path(args)?;
+    let out = PathBuf::from(args.str_or("out", "data/gcn-int8.bundle"));
+    let src = gcn_perf::predictor::bundle::Bundle::load(&src_path)?;
+    let qb = gcn_perf::predictor::quant::quantize_bundle(&src)?;
+    qb.save(&out)?;
+    println!(
+        "quantized '{}' {} -> '{}' {} ({} int8 tensors, {} f32 tensors)",
+        src.kind,
+        src_path.display(),
+        qb.kind,
+        out.display(),
+        qb.qtensors.len(),
+        qb.tensors.len()
+    );
     Ok(())
 }
 
@@ -407,13 +463,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use gcn_perf::net::{serve_session, ServeShared, SessionOpts, TcpServer, TcpServerConfig};
 
     let path = bundle_path(args)?;
+    resolve_precision_or_exit(args, &registry::bundle_kind(&path)?);
     let cfg = ServiceConfig {
         workers: args.usize_or("workers", 1),
         queue_cap: args.usize_or("queue-cap", 64),
         ..Default::default()
     };
-    let service =
-        Arc::new(PredictService::spawn(Arc::from(registry::load_bundle(&path)?), cfg.clone()));
+    // the daemon serves on the best runtime-detected microkernel tier;
+    // the engine in use is visible in `STATS` and the shutdown summary
+    let service = Arc::new(PredictService::spawn(
+        Arc::from(registry::load_bundle_serving(&path)?),
+        cfg.clone(),
+    ));
+    let engine = service.engine_info();
     let shared = ServeShared::new(Arc::clone(&service));
     let max_line = args.usize_or("max-line-bytes", gcn_perf::net::DEFAULT_MAX_FRAME_BYTES);
 
@@ -430,11 +492,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         let server = TcpServer::bind(listen, shared.clone(), tcp_cfg, shutdown)?;
         eprintln!(
-            "serving '{}' from {} on {} — line-delimited JSON over TCP; \
-             SIGTERM/SIGINT drains and exits",
+            "serving '{}' from {} on {} ({} kernels, {} precision) — line-delimited \
+             JSON over TCP; SIGTERM/SIGINT drains and exits",
             service.model_name(),
             path.display(),
-            server.local_addr()
+            server.local_addr(),
+            engine.kernel_variant,
+            engine.precision
         );
         if let Some(pf) = args.str_opt("port-file") {
             // scripts bind --listen 127.0.0.1:0 and read the real
@@ -446,10 +510,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_serve_stats(&shared, Some(&report));
     } else {
         eprintln!(
-            "serving '{}' from {} — one JSON sample-array request per stdin line; \
-             ctrl-d to stop",
+            "serving '{}' from {} ({} kernels, {} precision) — one JSON sample-array \
+             request per stdin line; ctrl-d to stop",
             service.model_name(),
-            path.display()
+            path.display(),
+            engine.kernel_variant,
+            engine.precision
         );
         let opts = SessionOpts { max_frame_bytes: max_line, max_inflight: cfg.queue_cap.max(1) };
         let stdin = std::io::stdin();
@@ -971,8 +1037,9 @@ fn cmd_autotune(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     let fast = args.has_flag("fast") || std::env::var("GCN_PERF_BENCH_FAST").is_ok();
     let seed = args.u64_or("seed", 3);
-    // --engine: run only the engine micro-suite (what scripts/profile.sh
-    // wraps for flamegraph work — no serving threads muddying the profile)
+    // --engine: run only the engine + simd micro-suites (what
+    // scripts/profile.sh wraps for flamegraph work — no serving threads
+    // muddying the profile)
     let engine_only = args.has_flag("engine");
 
     let mut earlier_reports = None;
@@ -1036,6 +1103,45 @@ fn cmd_bench(args: &Args) -> Result<()> {
         engine_report.allocs_per_infer
     );
 
+    // the PR-8 microkernel layer: scalar vs runtime-detected SIMD vs
+    // int8 inference lanes, numeric-mode gates included. A serving
+    // bundle given here is reconciled with --precision up front — a
+    // mismatch (e.g. --precision int8 with a plain f32 bundle) is a
+    // usage error and exits 2 before any timing runs.
+    match bundle_path_opt(args) {
+        Some(b) => {
+            let kind = registry::bundle_kind(&b)?;
+            let p = resolve_precision_or_exit(args, &kind);
+            eprintln!(
+                "bundle {} (kind '{kind}') serves at {} precision",
+                b.display(),
+                p.as_str()
+            );
+        }
+        None => {
+            // without a bundle, --precision int8 has nothing quantized
+            // to validate against: rejected with the minting hint
+            resolve_precision_or_exit(args, registry::KIND_GCN);
+        }
+    }
+    let simd_cfg = gcn_perf::eval::simd_bench::SimdBenchConfig { fast, seed };
+    let simd_report = gcn_perf::eval::simd_bench::run_simd_bench(&simd_cfg)?;
+    let simd_out = PathBuf::from(args.str_or("simd-out", "BENCH_8.json"));
+    gcn_perf::eval::simd_bench::write_simd_report(&simd_report, &simd_out)?;
+    println!(
+        "simd report written to {} ({} kernels: simd {:.2}x/{:.2}x vs scalar, int8 \
+         {:.2}x/{:.2}x; int8 rank agreement {:.3}, mape {:.2}% f32 vs {:.2}% int8)",
+        simd_out.display(),
+        simd_report.variant,
+        simd_report.speedup("padded/simd"),
+        simd_report.speedup("resnet50/simd"),
+        simd_report.speedup("padded/int8"),
+        simd_report.speedup("resnet50/int8"),
+        simd_report.int8_rank_agreement,
+        simd_report.mape_f32,
+        simd_report.mape_int8
+    );
+
     if args.has_flag("require-speedup") {
         if let Some((report, serve_report, at_report)) = &earlier_reports {
             report.require_padded_speedup()?;
@@ -1043,6 +1149,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             at_report.require_speedup()?;
         }
         engine_report.require_speedup()?;
+        simd_report.require_speedup()?;
     }
     Ok(())
 }

@@ -15,7 +15,13 @@
 //!   u8 has_stats [+ u32 len + f64*len]   feature mean/std, dims checked
 //!   meta:    u32 count, (string key, f64 value)*
 //!   tensors: u32 count, (string name, u32 rank, u32 dims*, f32 data)*
+//!   [v2+] qtensors: u32 count, (string name, u32 rank, u32 dims*, i8 data)*
 //! ```
+//!
+//! Version 2 appends an int8 tensor section for quantized models
+//! (`gcn-perf quantize`); bundles without quantized tensors are still
+//! written as version 1, byte-identical to pre-quantization builds, and
+//! version-1 files load with an empty `qtensors` list.
 //!
 //! The container is model-agnostic: every in-tree model (GCN, Halide FFN,
 //! bi-GRU, GBT) flattens into named tensors + metadata, so one reader
@@ -32,8 +38,13 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"GCNPBNDL";
 
 /// Current bundle format version. Bump on any layout change; loaders
-/// reject other versions outright.
-pub const FORMAT_VERSION: u32 = 1;
+/// accept [`MIN_SUPPORTED_VERSION`]..=[`FORMAT_VERSION`] and reject
+/// anything else outright. The writer emits the oldest version that can
+/// represent the bundle (v1 unless quantized tensors are present).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest format version this build still reads.
+pub const MIN_SUPPORTED_VERSION: u32 = 1;
 
 /// One named parameter tensor of a bundled model.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +55,21 @@ pub struct NamedTensor {
 }
 
 impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named int8 tensor of a quantized model (format v2+). Scales and
+/// other f32 payload ride in the regular [`NamedTensor`] section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantNamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl QuantNamedTensor {
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -60,11 +86,20 @@ pub struct Bundle {
     /// Scalar metadata (e.g. `n_conv` for the GCN, `hidden` for the GRU).
     pub meta: BTreeMap<String, f64>,
     pub tensors: Vec<NamedTensor>,
+    /// Int8 tensors of a quantized model (empty for f32 bundles; forces
+    /// the v2 on-disk layout when non-empty).
+    pub qtensors: Vec<QuantNamedTensor>,
 }
 
 impl Bundle {
     pub fn new(kind: &str) -> Bundle {
-        Bundle { kind: kind.to_string(), stats: None, meta: BTreeMap::new(), tensors: Vec::new() }
+        Bundle {
+            kind: kind.to_string(),
+            stats: None,
+            meta: BTreeMap::new(),
+            tensors: Vec::new(),
+            qtensors: Vec::new(),
+        }
     }
 
     /// Required metadata entry as usize.
@@ -92,6 +127,14 @@ impl Bundle {
             .with_context(|| format!("bundle missing tensor '{name}'"))
     }
 
+    /// Required int8 tensor by name (quantized bundles only).
+    pub fn qtensor(&self, name: &str) -> Result<&QuantNamedTensor> {
+        self.qtensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("bundle missing quantized tensor '{name}'"))
+    }
+
     /// Write the bundle to one file (parent directories are created).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
@@ -100,7 +143,11 @@ impl Bundle {
         let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
         let mut w = Bw { w: BufWriter::new(f) };
         w.bytes(MAGIC)?;
-        w.u32(FORMAT_VERSION)?;
+        // oldest version that can represent this bundle: plain f32
+        // bundles stay byte-identical to what version-1-only readers
+        // (and older builds) expect
+        let version = if self.qtensors.is_empty() { 1 } else { FORMAT_VERSION };
+        w.u32(version)?;
         w.string(&self.kind)?;
         match &self.stats {
             None => w.u8(0)?,
@@ -128,6 +175,25 @@ impl Bundle {
             }
             w.f32s(&t.data)?;
         }
+        if version >= 2 {
+            w.u32(self.qtensors.len() as u32)?;
+            for t in &self.qtensors {
+                if t.data.len() != t.numel() {
+                    bail!(
+                        "qtensor '{}': {} values but shape {:?}",
+                        t.name,
+                        t.data.len(),
+                        t.shape
+                    );
+                }
+                w.string(&t.name)?;
+                w.u32(t.shape.len() as u32)?;
+                for &d in &t.shape {
+                    w.u32(d as u32)?;
+                }
+                w.i8s(&t.data)?;
+            }
+        }
         w.w.flush()?;
         Ok(())
     }
@@ -137,22 +203,23 @@ impl Bundle {
     pub fn peek_kind(path: &Path) -> Result<String> {
         let f = std::fs::File::open(path).with_context(|| format!("open bundle {path:?}"))?;
         let mut r = Br { r: BufReader::new(f) };
-        Bundle::read_header(&mut r, path)
+        Ok(Bundle::read_header(&mut r, path)?.1)
     }
 
-    fn read_header<R: Read>(r: &mut Br<R>, path: &Path) -> Result<String> {
+    fn read_header<R: Read>(r: &mut Br<R>, path: &Path) -> Result<(u32, String)> {
         let mut magic = [0u8; 8];
         r.r.read_exact(&mut magic)?;
         if &magic != MAGIC {
             bail!("{path:?} is not a gcn-perf model bundle (bad magic)");
         }
         let version = r.u32()?;
-        if version != FORMAT_VERSION {
+        if !(MIN_SUPPORTED_VERSION..=FORMAT_VERSION).contains(&version) {
             bail!(
-                "bundle {path:?} has format version {version}, this build reads {FORMAT_VERSION}"
+                "bundle {path:?} has format version {version}, this build reads \
+                 {MIN_SUPPORTED_VERSION}..={FORMAT_VERSION}"
             );
         }
-        r.string()
+        Ok((version, r.string()?))
     }
 
     /// Read a bundle; fails cleanly on bad magic, unknown format version or
@@ -160,7 +227,7 @@ impl Bundle {
     pub fn load(path: &Path) -> Result<Bundle> {
         let f = std::fs::File::open(path).with_context(|| format!("open bundle {path:?}"))?;
         let mut r = Br { r: BufReader::new(f) };
-        let kind = Bundle::read_header(&mut r, path)?;
+        let (version, kind) = Bundle::read_header(&mut r, path)?;
         let stats = if r.u8()? != 0 {
             let n = r.u32()? as usize;
             if n != 2 * (INV_DIM + DEP_DIM) {
@@ -203,7 +270,32 @@ impl Bundle {
             let data = r.f32s(numel)?;
             tensors.push(NamedTensor { name, shape, data });
         }
-        Ok(Bundle { kind, stats, meta, tensors })
+        let mut qtensors = Vec::new();
+        if version >= 2 {
+            let n_q = r.u32()? as usize;
+            qtensors.reserve(n_q.min(1024));
+            for _ in 0..n_q {
+                let name = r.string()?;
+                let rank = r.u32()? as usize;
+                if rank > 8 {
+                    bail!("qtensor '{name}': implausible rank {rank} (corrupt bundle?)");
+                }
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(r.u32()? as usize);
+                }
+                let numel = shape
+                    .iter()
+                    .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                    .with_context(|| format!("qtensor '{name}': shape {shape:?} overflows"))?;
+                if numel > 64 << 20 {
+                    bail!("qtensor '{name}': implausible size {numel} (corrupt bundle?)");
+                }
+                let data = r.i8s(numel)?;
+                qtensors.push(QuantNamedTensor { name, shape, data });
+            }
+        }
+        Ok(Bundle { kind, stats, meta, tensors, qtensors })
     }
 }
 
@@ -229,6 +321,12 @@ impl<W: Write> Bw<W> {
     fn f32s(&mut self, vs: &[f32]) -> Result<()> {
         for v in vs {
             self.bytes(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn i8s(&mut self, vs: &[i8]) -> Result<()> {
+        for v in vs {
+            self.bytes(&[*v as u8])?;
         }
         Ok(())
     }
@@ -271,6 +369,11 @@ impl<R: Read> Br<R> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+    fn i8s(&mut self, n: usize) -> Result<Vec<i8>> {
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf.iter().map(|&b| b as i8).collect())
     }
     fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
         let mut buf = vec![0u8; n * 8];
@@ -336,6 +439,53 @@ mod tests {
         let err = Bundle::load(&path).unwrap_err().to_string();
         assert!(err.contains("format version 99"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plain_bundles_still_write_version_1_bytes() {
+        let mut b = Bundle::new("gcn");
+        b.tensors.push(NamedTensor { name: "w".into(), shape: vec![1], data: vec![1.0] });
+        let path = tmp("gcn_perf_bundle_v1.bundle");
+        b.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[8..12], &1u32.to_le_bytes(), "f32-only bundles stay v1");
+        let r = Bundle::load(&path).unwrap();
+        assert!(r.qtensors.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantized_bundle_roundtrips_as_version_2() {
+        let mut b = Bundle::new("gcn-int8");
+        b.meta.insert("n_conv".into(), 2.0);
+        b.tensors.push(NamedTensor {
+            name: "w_scale".into(),
+            shape: vec![3],
+            data: vec![0.5, 0.25, 1.0],
+        });
+        b.qtensors.push(QuantNamedTensor {
+            name: "w_q".into(),
+            shape: vec![2, 3],
+            data: vec![1, -2, 127, -128, 0, 64],
+        });
+        let path = tmp("gcn_perf_bundle_v2.bundle");
+        b.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[8..12], &2u32.to_le_bytes(), "quantized bundles are v2");
+        let r = Bundle::load(&path).unwrap();
+        assert_eq!(r.kind, "gcn-int8");
+        assert_eq!(r.qtensors, b.qtensors);
+        assert_eq!(r.tensors, b.tensors);
+        assert_eq!(r.qtensor("w_q").unwrap().numel(), 6);
+        assert!(r.qtensor("missing").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn qtensor_shape_data_consistency_enforced_on_save() {
+        let mut b = Bundle::new("gcn-int8");
+        b.qtensors.push(QuantNamedTensor { name: "q".into(), shape: vec![2, 2], data: vec![1] });
+        assert!(b.save(&tmp("gcn_perf_bundle_qbad.bundle")).is_err());
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 pub mod bundle;
 pub mod cost;
+pub mod quant;
 pub mod registry;
 pub mod service;
 
@@ -37,6 +38,7 @@ use crate::baselines::rnn::{BiGru, BiGruWeights, RnnTrainConfig};
 use crate::constants::{DEP_DIM, FFN_TERMS, INV_DIM};
 use crate::dataset::sample::{Dataset, GraphSample};
 use crate::features::normalize::FeatureStats;
+use crate::runtime::kernels_simd::KernelVariant;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::params::Params;
 use crate::runtime::Backend;
@@ -47,6 +49,7 @@ use std::path::Path;
 use std::sync::Mutex;
 
 pub use self::cost::PredictorCost;
+pub use self::quant::{Precision, QuantGcnPredictor};
 pub use self::service::{
     PredictHandle, PredictRequest, PredictResponse, PredictService, ServiceConfig, ServiceStats,
 };
@@ -69,6 +72,33 @@ pub trait Predictor: Send + Sync {
 
     /// Serialize to a single-file model bundle (see [`bundle`]).
     fn save(&self, path: &Path) -> Result<()>;
+
+    /// How this model computes: microkernel tier and numeric precision.
+    /// Baselines (and the default) report the scalar f32 engine; the GCN
+    /// predictors report their backend's resolved kernel variant, and the
+    /// int8 predictor reports `precision: "int8"`.
+    fn engine_info(&self) -> EngineInfo {
+        EngineInfo::default()
+    }
+}
+
+/// The engine a [`Predictor`] answers with: which microkernel tier
+/// (`scalar`/`sse2`/`avx2`) and which numeric precision (`f32`/`int8`).
+/// Surfaced by the serving stats so operators can tell at a glance what
+/// numeric mode a process is running.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineInfo {
+    pub kernel_variant: String,
+    pub precision: String,
+}
+
+impl Default for EngineInfo {
+    fn default() -> EngineInfo {
+        EngineInfo {
+            kernel_variant: KernelVariant::Scalar.as_str().into(),
+            precision: "f32".into(),
+        }
+    }
 }
 
 // ---------------------------------------------------------------- GCN
@@ -101,16 +131,24 @@ impl GcnPredictor {
         &self.stats
     }
 
-    /// Load a GCN bundle. The native backend serves it; the parameter list
-    /// is validated tensor-by-tensor against the manifest of the bundled
-    /// conv depth, so a stale or foreign bundle fails loudly.
+    /// Load a GCN bundle on the scalar (bitwise-deterministic) kernels.
+    /// The native backend serves it; the parameter list is validated
+    /// tensor-by-tensor against the manifest of the bundled conv depth, so
+    /// a stale or foreign bundle fails loudly.
     pub fn load(path: &Path) -> Result<GcnPredictor> {
+        GcnPredictor::load_with_variant(path, KernelVariant::Scalar)
+    }
+
+    /// Like [`GcnPredictor::load`], but requesting a microkernel tier for
+    /// inference (clamped down to what this build and CPU support).
+    pub fn load_with_variant(path: &Path, variant: KernelVariant) -> Result<GcnPredictor> {
         let b = Bundle::load(path)?;
         if b.kind != registry::KIND_GCN {
             bail!("bundle {path:?} holds a '{}' model, not a GCN", b.kind);
         }
         let n_conv = b.meta_usize("n_conv")?;
-        let backend: Box<dyn Backend> = Box::new(NativeBackend::with_layers(n_conv));
+        let backend: Box<dyn Backend> =
+            Box::new(NativeBackend::with_layers_variant(n_conv, variant));
         let params = params_from_bundle(&b, backend.as_ref())?;
         let stats = b.stats.context("gcn bundle carries no feature stats")?;
         Ok(GcnPredictor { backend, params, stats })
@@ -126,6 +164,12 @@ impl Predictor for GcnPredictor {
     }
     fn save(&self, path: &Path) -> Result<()> {
         save_gcn_bundle(path, self.backend.manifest().n_conv, &self.params, &self.stats)
+    }
+    fn engine_info(&self) -> EngineInfo {
+        EngineInfo {
+            kernel_variant: self.backend.kernel_variant().as_str().into(),
+            precision: "f32".into(),
+        }
     }
 }
 
@@ -146,6 +190,12 @@ impl Predictor for GcnView<'_> {
     }
     fn save(&self, path: &Path) -> Result<()> {
         save_gcn_bundle(path, self.backend.manifest().n_conv, self.params, self.stats)
+    }
+    fn engine_info(&self) -> EngineInfo {
+        EngineInfo {
+            kernel_variant: self.backend.kernel_variant().as_str().into(),
+            precision: "f32".into(),
+        }
     }
 }
 
@@ -175,7 +225,7 @@ pub fn save_gcn_bundle(
 /// Rebuild [`Params`] from a bundle, validating names and shapes against
 /// the backend's manifest (order is the manifest's flat calling
 /// convention).
-fn params_from_bundle(b: &Bundle, backend: &dyn Backend) -> Result<Params> {
+pub(crate) fn params_from_bundle(b: &Bundle, backend: &dyn Backend) -> Result<Params> {
     let specs = &backend.manifest().params;
     if b.tensors.len() != specs.len() {
         bail!(

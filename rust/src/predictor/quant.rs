@@ -1,0 +1,331 @@
+//! The int8 serving path: minting quantized bundles (`gcn-perf
+//! quantize`) and serving them ([`QuantGcnPredictor`]).
+//!
+//! A quantized bundle has kind [`registry::KIND_GCN_INT8`] and uses the
+//! version-2 container: every dense GEMM weight `w` is stored as an i8
+//! qtensor `<w>_q` plus an f32 per-output-channel `<w>_scale` tensor,
+//! every other tensor (biases, channel-norm scale/shift) travels
+//! verbatim under its manifest name. See [`crate::runtime::quant`] for
+//! the quantization scheme and the declared numeric envelope.
+//!
+//! [`resolve_precision`] is the one place the `--precision {f32,int8}`
+//! CLI flag is reconciled with what a bundle actually holds; mismatches
+//! are usage errors (the CLI exits 2 on them), never silent fallbacks.
+
+use crate::constants::{DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, NODE_DIM};
+use crate::dataset::sample::GraphSample;
+use crate::features::normalize::FeatureStats;
+use crate::predictor::bundle::{Bundle, NamedTensor, QuantNamedTensor};
+use crate::predictor::{params_from_bundle, registry, EngineInfo, Predictor};
+use crate::runtime::kernels_simd::KernelVariant;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::quant::{QuantConv, QuantMatrix, QuantParams};
+use crate::runtime::Backend;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The numeric mode a model is served in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Reconcile a requested `--precision` value with the kind of the bundle
+/// being loaded. `None` means "whatever the bundle holds". Mismatches are
+/// usage errors — the caller should print the message and exit 2.
+pub fn resolve_precision(
+    requested: Option<&str>,
+    bundle_kind: &str,
+) -> std::result::Result<Precision, String> {
+    let quantized = bundle_kind == registry::KIND_GCN_INT8;
+    let requested = match requested {
+        None => return Ok(if quantized { Precision::Int8 } else { Precision::F32 }),
+        Some("f32") => Precision::F32,
+        Some("int8") => Precision::Int8,
+        Some(other) => {
+            return Err(format!("unknown --precision '{other}' (expected 'f32' or 'int8')"))
+        }
+    };
+    match (requested, quantized) {
+        (Precision::F32, false) | (Precision::Int8, true) => Ok(requested),
+        (Precision::Int8, false) => Err(format!(
+            "--precision int8 needs a quantized bundle, but this bundle holds a \
+             '{bundle_kind}' model — mint one with `gcn-perf quantize` first"
+        )),
+        (Precision::F32, true) => Err(
+            "--precision f32 cannot serve an int8-quantized bundle; keep the original \
+             f32 bundle for full-precision serving"
+                .into(),
+        ),
+    }
+}
+
+/// Quantize a trained f32 GCN bundle into an int8 one (the `gcn-perf
+/// quantize` subcommand). Validates the source against the manifest of
+/// its declared conv depth before touching any weights.
+pub fn quantize_bundle(src: &Bundle) -> Result<Bundle> {
+    if src.kind != registry::KIND_GCN {
+        bail!(
+            "only '{}' bundles can be quantized, this one holds a '{}' model",
+            registry::KIND_GCN,
+            src.kind
+        );
+    }
+    let n_conv = src.meta_usize("n_conv")?;
+    let backend = NativeBackend::with_layers(n_conv);
+    let params = params_from_bundle(src, &backend)?;
+    let qp = QuantParams::from_params(&params, n_conv)?;
+    let stats = src.stats.as_ref().context("gcn bundle carries no feature stats")?;
+    Ok(bundle_from_quant(&qp, stats))
+}
+
+/// Serialize a [`QuantParams`] (plus feature stats) into the int8 bundle
+/// layout described in the module docs.
+fn bundle_from_quant(qp: &QuantParams, stats: &FeatureStats) -> Bundle {
+    let mut b = Bundle::new(registry::KIND_GCN_INT8);
+    b.stats = Some(stats.clone());
+    b.meta.insert("n_conv".into(), qp.n_conv as f64);
+    fn push_qm(b: &mut Bundle, name: &str, qm: &QuantMatrix) {
+        b.qtensors.push(QuantNamedTensor {
+            name: format!("{name}_q"),
+            shape: vec![qm.n_in, qm.n_out],
+            data: qm.q.clone(),
+        });
+        b.tensors.push(NamedTensor {
+            name: format!("{name}_scale"),
+            shape: vec![qm.n_out],
+            data: qm.scale.clone(),
+        });
+    }
+    fn push_fv(b: &mut Bundle, name: &str, v: &[f32]) {
+        b.tensors.push(NamedTensor {
+            name: name.into(),
+            shape: vec![v.len()],
+            data: v.to_vec(),
+        });
+    }
+    push_qm(&mut b, "w_inv", &qp.w_inv);
+    push_fv(&mut b, "b_inv", &qp.b_inv);
+    push_qm(&mut b, "w_dep", &qp.w_dep);
+    push_fv(&mut b, "b_dep", &qp.b_dep);
+    for (k, qc) in qp.convs.iter().enumerate() {
+        push_qm(&mut b, &format!("conv{k}_w"), &qc.w);
+        push_fv(&mut b, &format!("conv{k}_b"), &qc.b);
+        push_fv(&mut b, &format!("conv{k}_scale"), &qc.scale);
+        push_fv(&mut b, &format!("conv{k}_shift"), &qc.shift);
+    }
+    push_qm(&mut b, "w_out", &qp.w_out);
+    push_fv(&mut b, "b_out", &qp.b_out);
+    b
+}
+
+/// Rebuild [`QuantParams`] from an int8 bundle, validating every tensor's
+/// shape against the model dimensions of the declared conv depth.
+fn quant_from_bundle(b: &Bundle) -> Result<QuantParams> {
+    let n_conv = b.meta_usize("n_conv")?;
+    let qm = |name: &str, n_in: usize, n_out: usize| -> Result<QuantMatrix> {
+        let qt = b.qtensor(&format!("{name}_q"))?;
+        if qt.shape != [n_in, n_out] {
+            bail!(
+                "int8 bundle qtensor '{name}_q' has shape {:?}, expected [{n_in}, {n_out}]",
+                qt.shape
+            );
+        }
+        let st = b.tensor(&format!("{name}_scale"))?;
+        if st.shape != [n_out] {
+            bail!(
+                "int8 bundle tensor '{name}_scale' has shape {:?}, expected [{n_out}]",
+                st.shape
+            );
+        }
+        Ok(QuantMatrix { n_in, n_out, q: qt.data.clone(), scale: st.data.clone() })
+    };
+    let fv = |name: &str, len: usize| -> Result<Vec<f32>> {
+        let t = b.tensor(name)?;
+        if t.shape != [len] {
+            bail!("int8 bundle tensor '{name}' has shape {:?}, expected [{len}]", t.shape);
+        }
+        Ok(t.data.clone())
+    };
+    let mut convs = Vec::with_capacity(n_conv);
+    for k in 0..n_conv {
+        convs.push(QuantConv {
+            w: qm(&format!("conv{k}_w"), NODE_DIM, NODE_DIM)?,
+            b: fv(&format!("conv{k}_b"), NODE_DIM)?,
+            scale: fv(&format!("conv{k}_scale"), NODE_DIM)?,
+            shift: fv(&format!("conv{k}_shift"), NODE_DIM)?,
+        });
+    }
+    Ok(QuantParams {
+        n_conv,
+        w_inv: qm("w_inv", INV_DIM, EMB_INV)?,
+        b_inv: fv("b_inv", EMB_INV)?,
+        w_dep: qm("w_dep", DEP_DIM, EMB_DEP)?,
+        b_dep: fv("b_dep", EMB_DEP)?,
+        convs,
+        w_out: qm("w_out", NODE_DIM * (n_conv + 1), 1)?,
+        b_out: fv("b_out", 1)?,
+    })
+}
+
+/// The int8 serving session: native backend + quantized parameters +
+/// feature stats. Prediction runs the reduced-precision inference path
+/// ([`NativeBackend::predict_runtimes_quant`]); like the f32 session, it
+/// can be loaded on any microkernel tier.
+pub struct QuantGcnPredictor {
+    backend: NativeBackend,
+    qp: QuantParams,
+    stats: FeatureStats,
+}
+
+impl QuantGcnPredictor {
+    /// Load an int8 bundle on the scalar kernels.
+    pub fn load(path: &Path) -> Result<QuantGcnPredictor> {
+        QuantGcnPredictor::load_with_variant(path, KernelVariant::Scalar)
+    }
+
+    /// Load an int8 bundle, requesting a microkernel tier (clamped down
+    /// to what this build and CPU support).
+    pub fn load_with_variant(path: &Path, variant: KernelVariant) -> Result<QuantGcnPredictor> {
+        let b = Bundle::load(path)?;
+        if b.kind != registry::KIND_GCN_INT8 {
+            bail!("bundle {path:?} holds a '{}' model, not an int8 GCN", b.kind);
+        }
+        let qp = quant_from_bundle(&b)?;
+        let stats = b.stats.context("int8 gcn bundle carries no feature stats")?;
+        let backend = NativeBackend::with_layers_variant(qp.n_conv, variant);
+        Ok(QuantGcnPredictor { backend, qp, stats })
+    }
+
+    pub fn quant_params(&self) -> &QuantParams {
+        &self.qp
+    }
+
+    pub fn stats(&self) -> &FeatureStats {
+        &self.stats
+    }
+}
+
+impl Predictor for QuantGcnPredictor {
+    fn name(&self) -> String {
+        registry::KIND_GCN_INT8.into()
+    }
+    fn predict(&self, samples: &[&GraphSample]) -> Result<Vec<f64>> {
+        self.backend.predict_runtimes_quant(&self.qp, samples, &self.stats)
+    }
+    fn save(&self, path: &Path) -> Result<()> {
+        bundle_from_quant(&self.qp, &self.stats).save(path)
+    }
+    fn engine_info(&self) -> EngineInfo {
+        EngineInfo {
+            kernel_variant: self.backend.kernel_variant().as_str().into(),
+            precision: "int8".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::halide_ffn::FfnTrainConfig;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+    use crate::predictor::{save_gcn_bundle, FfnPredictor, GcnPredictor};
+    use crate::runtime::quant::{INT8_Z_ABS_TOL, INT8_Z_REL_TOL};
+
+    #[test]
+    fn resolve_precision_covers_the_full_request_table() {
+        let gcn = registry::KIND_GCN;
+        let int8 = registry::KIND_GCN_INT8;
+        assert_eq!(resolve_precision(None, gcn), Ok(Precision::F32));
+        assert_eq!(resolve_precision(None, int8), Ok(Precision::Int8));
+        assert_eq!(resolve_precision(Some("f32"), gcn), Ok(Precision::F32));
+        assert_eq!(resolve_precision(Some("int8"), int8), Ok(Precision::Int8));
+        let err = resolve_precision(Some("int8"), gcn).unwrap_err();
+        assert!(err.contains("gcn-perf quantize"), "{err}");
+        let err = resolve_precision(Some("f32"), int8).unwrap_err();
+        assert!(err.contains("f32 bundle"), "{err}");
+        let err = resolve_precision(Some("fp16"), gcn).unwrap_err();
+        assert!(err.contains("unknown --precision"), "{err}");
+        assert_eq!(Precision::F32.as_str(), "f32");
+        assert_eq!(Precision::Int8.as_str(), "int8");
+    }
+
+    #[test]
+    fn quantize_roundtrip_stays_within_the_declared_envelope() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 6,
+            schedules_per_pipeline: 5,
+            seed: 83,
+            ..Default::default()
+        });
+        let backend = NativeBackend::new();
+        let params = backend.init_params(17);
+        let stats = ds.stats.clone().unwrap();
+        let n_conv = backend.manifest().n_conv;
+
+        let f32_path = std::env::temp_dir().join("gcn_perf_quant_src.bundle");
+        let int8_path = std::env::temp_dir().join("gcn_perf_quant_int8.bundle");
+        save_gcn_bundle(&f32_path, n_conv, &params, &stats).unwrap();
+
+        let qb = quantize_bundle(&Bundle::load(&f32_path).unwrap()).unwrap();
+        assert_eq!(qb.kind, registry::KIND_GCN_INT8);
+        qb.save(&int8_path).unwrap();
+
+        let fp = GcnPredictor::load(&f32_path).unwrap();
+        let qp = QuantGcnPredictor::load(&int8_path).unwrap();
+        assert_eq!(qp.name(), "gcn-int8");
+        assert_eq!(qp.engine_info().precision, "int8");
+
+        let refs: Vec<&GraphSample> = ds.samples.iter().collect();
+        let full = fp.predict(&refs).unwrap();
+        let quant = qp.predict(&refs).unwrap();
+        assert_eq!(full.len(), quant.len());
+        for (f, q) in full.iter().zip(&quant) {
+            let (zf, zq) = (f.ln(), q.ln());
+            let tol = INT8_Z_ABS_TOL + INT8_Z_REL_TOL * zf.abs();
+            assert!(
+                (zf - zq).abs() <= tol,
+                "int8 z {zq} drifted from f32 z {zf} beyond the envelope {tol}"
+            );
+        }
+
+        // int8 bundles round-trip bit-exactly through their own save path,
+        // and the registry dispatches on the new kind.
+        qp.save(&int8_path).unwrap();
+        let again = QuantGcnPredictor::load(&int8_path).unwrap();
+        assert_eq!(quant, again.predict(&refs).unwrap());
+        let via_registry = registry::load_bundle(&int8_path).unwrap();
+        assert_eq!(via_registry.name(), "gcn-int8");
+        assert_eq!(quant, via_registry.predict(&refs).unwrap());
+
+        std::fs::remove_file(&f32_path).ok();
+        std::fs::remove_file(&int8_path).ok();
+    }
+
+    #[test]
+    fn quantize_rejects_non_gcn_bundles() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 4,
+            seed: 97,
+            ..Default::default()
+        });
+        let ffn = FfnPredictor::fit(&ds, &FfnTrainConfig { epochs: 1, ..Default::default() }, 3)
+            .unwrap();
+        let path = std::env::temp_dir().join("gcn_perf_quant_wrong_kind.bundle");
+        ffn.save(&path).unwrap();
+        let err = quantize_bundle(&Bundle::load(&path).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("can be quantized"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -15,17 +15,20 @@ use crate::baselines::halide_ffn::FfnTrainConfig;
 use crate::baselines::rnn::RnnTrainConfig;
 use crate::dataset::sample::Dataset;
 use crate::predictor::bundle::Bundle;
+use crate::predictor::quant::QuantGcnPredictor;
 use crate::predictor::{FfnPredictor, GbtPredictor, GcnPredictor, GruPredictor, Predictor};
+use crate::runtime::kernels_simd::{self, KernelVariant};
 use anyhow::{bail, Result};
 use std::path::Path;
 
 pub const KIND_GCN: &str = "gcn";
+pub const KIND_GCN_INT8: &str = "gcn-int8";
 pub const KIND_FFN: &str = "ffn";
 pub const KIND_RNN: &str = "rnn";
 pub const KIND_GBT: &str = "gbt";
 
 /// Every model the registry can resolve (bundle kinds double as names).
-pub const REGISTERED: &[&str] = &[KIND_GCN, KIND_FFN, KIND_RNN, KIND_GBT];
+pub const REGISTERED: &[&str] = &[KIND_GCN, KIND_GCN_INT8, KIND_FFN, KIND_RNN, KIND_GBT];
 
 /// Knobs for fitting baselines on the fly (e.g. for model-guided search
 /// without a pre-saved bundle).
@@ -50,11 +53,29 @@ pub fn bundle_kind(path: &Path) -> Result<String> {
     Bundle::peek_kind(path)
 }
 
-/// Load any saved bundle, dispatching on its kind tag.
+/// Load any saved bundle, dispatching on its kind tag. GCN-family models
+/// come up on the scalar (bitwise-deterministic) kernels — the default
+/// for training, autotune checkpoints and loadgen verification.
 pub fn load_bundle(path: &Path) -> Result<Box<dyn Predictor>> {
+    load_bundle_variant(path, KernelVariant::Scalar)
+}
+
+/// Load a bundle for serving: like [`load_bundle`], but GCN-family
+/// models dispatch their microkernels through the best tier this build
+/// and CPU support ([`kernels_simd::detected`] — always Scalar unless
+/// the `simd` cargo feature is enabled; overridable down via the
+/// `GCN_PERF_KERNELS` env var). Other kinds are unaffected.
+pub fn load_bundle_serving(path: &Path) -> Result<Box<dyn Predictor>> {
+    load_bundle_variant(path, kernels_simd::detected())
+}
+
+/// Load any saved bundle with an explicitly requested microkernel tier
+/// for GCN-family models (clamped to build/CPU capability).
+pub fn load_bundle_variant(path: &Path, variant: KernelVariant) -> Result<Box<dyn Predictor>> {
     let kind = bundle_kind(path)?;
     Ok(match kind.as_str() {
-        KIND_GCN => Box::new(GcnPredictor::load(path)?),
+        KIND_GCN => Box::new(GcnPredictor::load_with_variant(path, variant)?),
+        KIND_GCN_INT8 => Box::new(QuantGcnPredictor::load_with_variant(path, variant)?),
         KIND_FFN => Box::new(FfnPredictor::load(path)?),
         KIND_RNN => Box::new(GruPredictor::load(path)?),
         KIND_GBT => Box::new(GbtPredictor::load(path)?),
@@ -86,6 +107,10 @@ pub fn fit_model(name: &str, train_ds: &Dataset, cfg: &FitConfig) -> Result<Box<
         )),
         KIND_GCN => bail!(
             "the gcn is trained via `gcn-perf train`; pass its bundle with --bundle"
+        ),
+        KIND_GCN_INT8 => bail!(
+            "int8 models are not trained directly: train an f32 gcn, then mint a \
+             quantized bundle with `gcn-perf quantize`"
         ),
         other => bail!("unknown model '{other}' (registered: {REGISTERED:?}, plus 'oracle')"),
     })

@@ -161,6 +161,11 @@ pub struct ServiceStats {
     /// Deepest the bounded queue has ever been, in requests. Shows how
     /// close the service has come to its `queue_cap` backpressure bound.
     pub peak_queue: usize,
+    /// Microkernel tier the served model computes with ("scalar",
+    /// "sse2", "avx2") — from [`crate::predictor::EngineInfo`].
+    pub kernel_variant: String,
+    /// Numeric precision the served model computes with ("f32", "int8").
+    pub precision: String,
 }
 
 impl ServiceStats {
@@ -178,6 +183,8 @@ impl ServiceStats {
             ("cache_hits", n(self.cache_hits)),
             ("cache_misses", n(self.cache_misses)),
             ("peak_queue", n(self.peak_queue)),
+            ("kernel_variant", Json::Str(self.kernel_variant.clone())),
+            ("precision", Json::Str(self.precision.clone())),
         ])
     }
 
@@ -186,13 +193,16 @@ impl ServiceStats {
     pub fn summary_line(&self) -> String {
         format!(
             "served {} requests: {} samples evaluated in {} fused batches; \
-             memo cache {} hits / {} misses; peak queue depth {}",
+             memo cache {} hits / {} misses; peak queue depth {}; \
+             engine {}/{}",
             self.requests,
             self.samples_evaluated,
             self.batches,
             self.cache_hits,
             self.cache_misses,
-            self.peak_queue
+            self.peak_queue,
+            self.kernel_variant,
+            self.precision
         )
     }
 }
@@ -399,9 +409,12 @@ impl PredictService {
         lock(&self.shared.cache).clear();
     }
 
-    /// Snapshot of the monotonic counters.
+    /// Snapshot of the monotonic counters (plus the served model's
+    /// engine identity, so `STATS` lines show what numeric mode the
+    /// process is actually running).
     pub fn stats(&self) -> ServiceStats {
         let peak_queue = lock(&self.shared.queue).peak;
+        let engine = self.shared.predictor.engine_info();
         ServiceStats {
             requests: self.shared.requests.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
@@ -409,6 +422,8 @@ impl PredictService {
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
             peak_queue,
+            kernel_variant: engine.kernel_variant,
+            precision: engine.precision,
         }
     }
 
@@ -456,6 +471,10 @@ impl Predictor for PredictService {
 
     fn save(&self, path: &Path) -> Result<()> {
         self.shared.predictor.save(path)
+    }
+
+    fn engine_info(&self) -> crate::predictor::EngineInfo {
+        self.shared.predictor.engine_info()
     }
 }
 
@@ -725,7 +744,16 @@ mod tests {
         assert_eq!(ra.predictions, vec![2.0, 6.0]);
         assert_eq!(ra.model, "const");
         assert_eq!(rb.predictions, vec![10.0]);
-        assert!(service.stats().requests >= 2);
+        let stats = service.stats();
+        assert!(stats.requests >= 2);
+        // a plain predictor reports the default engine identity, and the
+        // canonical counter JSON carries it
+        assert_eq!(stats.kernel_variant, "scalar");
+        assert_eq!(stats.precision, "f32");
+        let j = stats.to_json().to_string();
+        assert!(j.contains("\"kernel_variant\""), "{j}");
+        assert!(j.contains("\"precision\""), "{j}");
+        assert!(stats.summary_line().contains("engine scalar/f32"));
     }
 
     #[test]

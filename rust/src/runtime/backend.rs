@@ -22,6 +22,7 @@ use crate::constants::BATCH;
 use crate::dataset::sample::GraphSample;
 use crate::features::normalize::FeatureStats;
 use crate::model::PackedBatch;
+use crate::runtime::kernels_simd::KernelVariant;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::params::Params;
@@ -43,6 +44,13 @@ pub trait Backend: Send + Sync {
 
     /// Short identifier for logs ("native", "dense-ref", "pjrt", ...).
     fn name(&self) -> &'static str;
+
+    /// The microkernel tier this engine runs inference with. Everything
+    /// defaults to the scalar bitwise-deterministic reference; only the
+    /// native engine's explicit SIMD constructors report otherwise.
+    fn kernel_variant(&self) -> KernelVariant {
+        KernelVariant::Scalar
+    }
 
     /// Predicted log-runtimes, one per graph of the batch.
     fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>>;

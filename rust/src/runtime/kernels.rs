@@ -113,9 +113,16 @@ pub(crate) fn gemm_row(e_row: &[f32], w: &[f32], out: &mut [f32]) {
     }
 }
 
-/// `c = A'·t + b` for one node — the O(E) CSR gather — in f64.
+/// `c = A'·t + b` for one node — the O(E) CSR gather — in f64. Shared
+/// with the SIMD layer (`kernels_simd`), whose vectorized gathers must
+/// feed the identical downstream norm chain.
 #[inline]
-fn gather_row(batch: &PackedBatch, t: &[f32], node: usize, bvec: &[f32]) -> [f64; NODE_DIM] {
+pub(crate) fn gather_row(
+    batch: &PackedBatch,
+    t: &[f32],
+    node: usize,
+    bvec: &[f32],
+) -> [f64; NODE_DIM] {
     let (cols, vals) = batch.adj.row(node);
     let mut c = [0f64; NODE_DIM];
     for (&cix, &a) in cols.iter().zip(vals) {
@@ -131,8 +138,12 @@ fn gather_row(batch: &PackedBatch, t: &[f32], node: usize, bvec: &[f32]) -> [f64
     c
 }
 
+/// Channel-norm statistics `(mean, 1/√(var+ε))` over one gathered row.
+/// Horizontal reductions are where SIMD lane order would change the
+/// chain, so every kernel tier — scalar and vectorized — calls this one
+/// scalar implementation.
 #[inline]
-fn norm_stats(c: &[f64; NODE_DIM]) -> (f64, f64) {
+pub(crate) fn norm_stats(c: &[f64; NODE_DIM]) -> (f64, f64) {
     let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
     let var = c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
     (mean, 1.0 / (var + LN_EPS).sqrt())
@@ -219,6 +230,8 @@ pub(crate) fn head_row(feat_row: &[f32], w_out: &[f32], b_out0: f32) -> f32 {
 mod tests {
     use super::*;
     use crate::constants::{DEP_DIM, INV_DIM};
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+    use crate::dataset::sample::GraphSample;
     use crate::util::rng::Rng;
 
     #[test]
@@ -280,6 +293,111 @@ mod tests {
                 acc += x as f64 * w_dep[i * EMB_DEP + j] as f64;
             }
             assert_eq!(out[EMB_INV + j], acc.max(0.0) as f32, "dep half diverges at {j}");
+        }
+    }
+
+    // ---- property pins: scalar kernels vs naive triple-loop references.
+    // The documented contract (per output j, ascending input i, f64
+    // accumulation, zero panels skipped) is what the SIMD layer is
+    // validated against, so it gets pinned bitwise at the kernel level.
+
+    #[test]
+    fn accumulate_tiled_matches_naive_on_odd_shapes() {
+        // pure-remainder (n < TILE_I), odd, and panel+remainder shapes
+        for &(n, m) in &[(1usize, 1usize), (2, 3), (3, 7), (5, 4), (6, 9), (15, 17), (8, 2)] {
+            let mut rng = Rng::new((n * 131 + m * 7) as u64);
+            let x: Vec<f32> = (0..n)
+                .map(|i| if i % 2 == 0 { 0.0 } else { rng.uniform(-2.0, 2.0) as f32 })
+                .collect();
+            let w: Vec<f32> = (0..n * m).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let mut acc = vec![0.5f64; m];
+            let mut naive = acc.clone();
+            accumulate_tiled(&x, &w, m, &mut acc);
+            for (j, r) in naive.iter_mut().enumerate() {
+                for i in 0..n {
+                    *r += x[i] as f64 * w[i * m + j] as f64;
+                }
+            }
+            assert_eq!(acc, naive, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn all_zero_inputs_leave_acc_untouched_even_with_remainders() {
+        // both the panel skip and the remainder skip must fire
+        for &(n, m) in &[(4usize, 3usize), (6, 5), (3, 4), (11, 7)] {
+            let x = vec![0f32; n];
+            let w: Vec<f32> = (0..n * m).map(|k| k as f32 - 1.5).collect();
+            let mut acc: Vec<f64> = (0..m).map(|j| j as f64 + 0.25).collect();
+            let before = acc.clone();
+            accumulate_tiled(&x, &w, m, &mut acc);
+            assert_eq!(acc, before, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn embed_row_on_zero_inputs_is_relu_bias() {
+        // all-zero feature rows exercise the all-zero-panel path end to
+        // end: the output must be exactly relu(bias)
+        let mut rng = Rng::new(55);
+        let inv = vec![0f32; INV_DIM];
+        let dep = vec![0f32; DEP_DIM];
+        let w_inv: Vec<f32> =
+            (0..INV_DIM * EMB_INV).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let w_dep: Vec<f32> =
+            (0..DEP_DIM * EMB_DEP).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let b_inv: Vec<f32> = (0..EMB_INV).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let b_dep: Vec<f32> = (0..EMB_DEP).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let mut out = vec![0f32; NODE_DIM];
+        embed_row(&inv, &dep, &w_inv, &b_inv, &w_dep, &b_dep, &mut out);
+        for j in 0..EMB_INV {
+            assert_eq!(out[j], b_inv[j].max(0.0), "inv half at {j}");
+        }
+        for j in 0..EMB_DEP {
+            assert_eq!(out[EMB_INV + j], b_dep[j].max(0.0), "dep half at {j}");
+        }
+    }
+
+    #[test]
+    fn conv_row_infer_matches_naive_reference() {
+        // pin the fused gather+norm+scale/shift+relu row bitwise against
+        // an independent naive recomputation on a real packed batch
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 3,
+            schedules_per_pipeline: 2,
+            seed: 29,
+            ..Default::default()
+        });
+        let stats = ds.stats.clone().unwrap();
+        let refs: Vec<&GraphSample> = ds.samples.iter().collect();
+        let batch = PackedBatch::for_inference(&refs, &stats).unwrap();
+        let nn = batch.total_nodes();
+        let mut rng = Rng::new(4242);
+        let t: Vec<f32> = (0..nn * NODE_DIM).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let bvec: Vec<f32> = (0..NODE_DIM).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let scale: Vec<f32> = (0..NODE_DIM).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
+        let shift: Vec<f32> = (0..NODE_DIM).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        for node in 0..nn {
+            let mut out = vec![0f32; NODE_DIM];
+            conv_row_infer(&batch, &t, node, &bvec, &scale, &shift, &mut out);
+            let (cols, vals) = batch.adj.row(node);
+            let mut c = [0f64; NODE_DIM];
+            for (&cix, &a) in cols.iter().zip(vals) {
+                for j in 0..NODE_DIM {
+                    c[j] += a as f64 * t[cix as usize * NODE_DIM + j] as f64;
+                }
+            }
+            for j in 0..NODE_DIM {
+                c[j] += bvec[j] as f64;
+            }
+            let mean = c.iter().sum::<f64>() / NODE_DIM as f64;
+            let var =
+                c.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / NODE_DIM as f64;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            for j in 0..NODE_DIM {
+                let hv = (c[j] - mean) * rs * scale[j] as f64 + shift[j] as f64;
+                assert_eq!(out[j], hv.max(0.0) as f32, "node {node} j={j}");
+            }
         }
     }
 }

@@ -1,0 +1,792 @@
+//! SIMD microkernel layer over [`crate::runtime::kernels`], plus the
+//! int8 row kernels the quantized inference path runs on.
+//!
+//! The scalar kernels in `kernels.rs` stay the always-compiled,
+//! bitwise-deterministic reference; everything here is an opt-in numeric
+//! mode behind the `simd` cargo feature:
+//!
+//! * [`KernelVariant`] names the three tiers (`scalar`/`sse2`/`avx2`).
+//!   [`detected`] picks the best tier the running CPU supports, once,
+//!   via `is_x86_feature_detected!`; a build without the `simd` feature
+//!   (or off x86_64) always detects `Scalar`. The `GCN_PERF_KERNELS`
+//!   environment variable can clamp the choice *down* (e.g. `scalar` to
+//!   A/B a machine) — requests above the CPU's capability are clamped by
+//!   [`resolve`], never trusted, because running an AVX2 kernel on a
+//!   non-AVX2 CPU would be undefined behavior.
+//! * The `_v` dispatchers ([`accumulate_tiled_v`], [`embed_row_v`],
+//!   [`gemm_row_v`], [`conv_row_infer_v`], [`qlinear_row_v`]) route one
+//!   row of work to the chosen tier. They are what the native engine's
+//!   inference fast path calls; the training forward keeps calling the
+//!   scalar kernels directly, so train/autotune-checkpoint/loadgen
+//!   verification stay bitwise-reproducible regardless of build flags.
+//!
+//! **Numeric-mode contract.** The engine accumulates in f64 from f32
+//! inputs, so every product of two f32-derived f64 values is exact
+//! (≤ 48 significand bits); the AVX2/SSE2 f64 kernels vectorize over the
+//! *output* index `j` while keeping each output's ascending-`i` chain,
+//! so in practice they reproduce the scalar chain exactly. The declared
+//! contract is nevertheless a tolerance envelope, not bitwise:
+//! per-output agreement within [`SIMD_REL_TOL`] relative, plus the
+//! end-to-end zoo prediction-error/ranking bound `eval::simd_bench`
+//! enforces. The int8 kernels ([`qlinear_row`]) accumulate in f32
+//! against per-output-channel scales and are validated only under the
+//! (larger) quantization envelope in `runtime::quant`.
+
+use crate::model::PackedBatch;
+use crate::runtime::kernels;
+use std::sync::OnceLock;
+
+/// Per-output relative tolerance of the SIMD f64 kernels against the
+/// scalar reference (the declared envelope; in practice they agree
+/// bitwise — see the module docs).
+pub const SIMD_REL_TOL: f64 = 1e-5;
+
+/// The kernel tiers runtime dispatch can select. Ordering is capability
+/// order: `Scalar < Sse2 < Avx2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelVariant {
+    /// The always-compiled reference kernels (bitwise-deterministic).
+    Scalar,
+    /// 2-lane f64 SSE2 kernels (x86_64 baseline; no FMA).
+    Sse2,
+    /// 4-lane f64 / 8-lane f32 AVX2+FMA kernels.
+    Avx2,
+}
+
+impl KernelVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Sse2 => "sse2",
+            KernelVariant::Avx2 => "avx2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelVariant> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelVariant::Scalar),
+            "sse2" => Some(KernelVariant::Sse2),
+            "avx2" => Some(KernelVariant::Avx2),
+            _ => None,
+        }
+    }
+}
+
+/// Clamp a requested variant to what this build + CPU can actually run.
+/// Requests at or below `available` are honored (forcing *down* is how
+/// scalar-vs-SIMD A/B runs work); requests above it fall back.
+pub fn resolve(available: KernelVariant, requested: KernelVariant) -> KernelVariant {
+    if requested <= available {
+        requested
+    } else {
+        available
+    }
+}
+
+fn hardware_best() -> KernelVariant {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return KernelVariant::Avx2;
+        }
+        if is_x86_feature_detected!("sse2") {
+            return KernelVariant::Sse2;
+        }
+    }
+    KernelVariant::Scalar
+}
+
+/// The best variant this process can run, detected once. Honors a
+/// `GCN_PERF_KERNELS` environment override, clamped down to the CPU's
+/// capability (an unparseable value is ignored).
+pub fn detected() -> KernelVariant {
+    static DETECTED: OnceLock<KernelVariant> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let hw = hardware_best();
+        match std::env::var("GCN_PERF_KERNELS").ok().and_then(|v| KernelVariant::parse(&v)) {
+            Some(requested) => resolve(hw, requested),
+            None => hw,
+        }
+    })
+}
+
+// ------------------------------------------------------------ dispatch
+//
+// Callers must pass a variant already clamped through `resolve`/
+// `detected` (the native engine's constructors do); the SIMD arms are
+// `unsafe` precisely because the target features must be present.
+
+/// `acc[j] += Σ_i x[i] · w[i·m + j]` on the chosen tier.
+pub(crate) fn accumulate_tiled_v(
+    v: KernelVariant,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    acc: &mut [f64],
+) {
+    match v {
+        KernelVariant::Scalar => kernels::accumulate_tiled(x, w, m, acc),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: callers only pass Sse2/Avx2 after `detected()` proved
+        // the CPU supports them.
+        KernelVariant::Sse2 => unsafe { sse2::accumulate_tiled(x, w, m, acc) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: as above.
+        KernelVariant::Avx2 => unsafe { avx2::accumulate_tiled(x, w, m, acc) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => kernels::accumulate_tiled(x, w, m, acc),
+    }
+}
+
+/// Fig 5 dual embedding for one node on the chosen tier.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn embed_row_v(
+    v: KernelVariant,
+    inv: &[f32],
+    dep: &[f32],
+    w_inv: &[f32],
+    b_inv: &[f32],
+    w_dep: &[f32],
+    b_dep: &[f32],
+    out: &mut [f32],
+) {
+    match v {
+        KernelVariant::Scalar => kernels::embed_row(inv, dep, w_inv, b_inv, w_dep, b_dep, out),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: variant is CPU-verified by the caller (see above).
+        KernelVariant::Sse2 => unsafe {
+            sse2::embed_row(inv, dep, w_inv, b_inv, w_dep, b_dep, out)
+        },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: as above.
+        KernelVariant::Avx2 => unsafe {
+            avx2::embed_row(inv, dep, w_inv, b_inv, w_dep, b_dep, out)
+        },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => kernels::embed_row(inv, dep, w_inv, b_inv, w_dep, b_dep, out),
+    }
+}
+
+/// One row of the conv projection `t = E · W` on the chosen tier.
+pub(crate) fn gemm_row_v(v: KernelVariant, e_row: &[f32], w: &[f32], out: &mut [f32]) {
+    match v {
+        KernelVariant::Scalar => kernels::gemm_row(e_row, w, out),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: variant is CPU-verified by the caller (see above).
+        KernelVariant::Sse2 => unsafe { sse2::gemm_row(e_row, w, out) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: as above.
+        KernelVariant::Avx2 => unsafe { avx2::gemm_row(e_row, w, out) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => kernels::gemm_row(e_row, w, out),
+    }
+}
+
+/// Fused inference conv row (gather + bias + norm + scale/shift + ReLU)
+/// on the chosen tier. The channel-norm statistics stay scalar f64 on
+/// every tier — only the O(E) gather is vectorized.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_row_infer_v(
+    v: KernelVariant,
+    batch: &PackedBatch,
+    t: &[f32],
+    node: usize,
+    bvec: &[f32],
+    scale: &[f32],
+    shift: &[f32],
+    e_next: &mut [f32],
+) {
+    match v {
+        KernelVariant::Scalar => {
+            kernels::conv_row_infer(batch, t, node, bvec, scale, shift, e_next)
+        }
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: variant is CPU-verified by the caller (see above).
+        KernelVariant::Sse2 => unsafe {
+            sse2::conv_row_infer(batch, t, node, bvec, scale, shift, e_next)
+        },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: as above.
+        KernelVariant::Avx2 => unsafe {
+            avx2::conv_row_infer(batch, t, node, bvec, scale, shift, e_next)
+        },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => kernels::conv_row_infer(batch, t, node, bvec, scale, shift, e_next),
+    }
+}
+
+// ---------------------------------------------------------- int8 rows
+
+/// One int8 linear row, the quantized path's workhorse:
+/// `out[j] = maybe_relu(scale[j] · Σ_i x[i] · q[i·n_out + j] + bias[j])`
+/// with f32 accumulation (`out` doubles as the accumulator, so the call
+/// allocates nothing). This scalar form is the always-compiled
+/// reference for the vectorized tiers.
+pub(crate) fn qlinear_row(
+    x: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let n_out = out.len();
+    debug_assert_eq!(q.len(), x.len() * n_out);
+    debug_assert_eq!(scale.len(), n_out);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let qrow = &q[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            out[j] += xv * qrow[j] as f32;
+        }
+    }
+    for j in 0..n_out {
+        let mut v = out[j] * scale[j];
+        if let Some(b) = bias {
+            v += b[j];
+        }
+        if relu {
+            v = v.max(0.0);
+        }
+        out[j] = v;
+    }
+}
+
+/// [`qlinear_row`] on the chosen tier (SSE2 has no useful int8→f32
+/// widening story at 2 lanes, so it shares the scalar row).
+pub(crate) fn qlinear_row_v(
+    v: KernelVariant,
+    x: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    out: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if v == KernelVariant::Avx2 {
+        // SAFETY: variant is CPU-verified by the caller (see above).
+        return unsafe { avx2::qlinear_row(x, q, scale, bias, relu, out) };
+    }
+    let _ = v;
+    qlinear_row(x, q, scale, bias, relu, out)
+}
+
+// ------------------------------------------------------------- kernels
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod sse2 {
+    //! 2-lane f64 kernels (x86_64 baseline). A product of two
+    //! f32-derived f64 values is exact, so mul-then-add reproduces the
+    //! scalar rounding per step; lanes cover distinct outputs `j`, so
+    //! the per-output chain is unchanged.
+
+    use crate::constants::{EMB_DEP, EMB_INV, NODE_DIM};
+    use crate::model::PackedBatch;
+    use crate::runtime::kernels;
+    use std::arch::x86_64::*;
+
+    /// Load exactly two f32s (8 bytes) into the low lanes.
+    #[inline]
+    unsafe fn load2(p: *const f32) -> __m128 {
+        _mm_castsi128_ps(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn accumulate_tiled(x: &[f32], w: &[f32], m: usize, acc: &mut [f64]) {
+        debug_assert_eq!(acc.len(), m);
+        debug_assert_eq!(w.len(), x.len() * m);
+        let main = m - m % 2;
+        let mut panels = x.chunks_exact(4);
+        let mut i = 0usize;
+        for p in panels.by_ref() {
+            if p[0] == 0.0 && p[1] == 0.0 && p[2] == 0.0 && p[3] == 0.0 {
+                i += 4;
+                continue;
+            }
+            let xv = [
+                _mm_set1_pd(p[0] as f64),
+                _mm_set1_pd(p[1] as f64),
+                _mm_set1_pd(p[2] as f64),
+                _mm_set1_pd(p[3] as f64),
+            ];
+            let rows = [
+                w[i * m..(i + 1) * m].as_ptr(),
+                w[(i + 1) * m..(i + 2) * m].as_ptr(),
+                w[(i + 2) * m..(i + 3) * m].as_ptr(),
+                w[(i + 3) * m..(i + 4) * m].as_ptr(),
+            ];
+            let mut j = 0usize;
+            while j < main {
+                let mut a = _mm_loadu_pd(acc.as_ptr().add(j));
+                for r in 0..4 {
+                    let wv = _mm_cvtps_pd(load2(rows[r].add(j)));
+                    a = _mm_add_pd(a, _mm_mul_pd(xv[r], wv));
+                }
+                _mm_storeu_pd(acc.as_mut_ptr().add(j), a);
+                j += 2;
+            }
+            let (x0, x1, x2, x3) = (p[0] as f64, p[1] as f64, p[2] as f64, p[3] as f64);
+            for j in main..m {
+                let mut a = acc[j];
+                a += x0 * *rows[0].add(j) as f64;
+                a += x1 * *rows[1].add(j) as f64;
+                a += x2 * *rows[2].add(j) as f64;
+                a += x3 * *rows[3].add(j) as f64;
+                acc[j] = a;
+            }
+            i += 4;
+        }
+        for &xs in panels.remainder() {
+            if xs != 0.0 {
+                let xf = xs as f64;
+                let xb = _mm_set1_pd(xf);
+                let wrow = w[i * m..(i + 1) * m].as_ptr();
+                let mut j = 0usize;
+                while j < main {
+                    let a = _mm_loadu_pd(acc.as_ptr().add(j));
+                    let wv = _mm_cvtps_pd(load2(wrow.add(j)));
+                    _mm_storeu_pd(acc.as_mut_ptr().add(j), _mm_add_pd(a, _mm_mul_pd(xb, wv)));
+                    j += 2;
+                }
+                for j in main..m {
+                    acc[j] += xf * *wrow.add(j) as f64;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn embed_row(
+        inv: &[f32],
+        dep: &[f32],
+        w_inv: &[f32],
+        b_inv: &[f32],
+        w_dep: &[f32],
+        b_dep: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), NODE_DIM);
+        let mut acc = [0f64; NODE_DIM];
+        for (a, &b) in acc[..EMB_INV].iter_mut().zip(b_inv) {
+            *a = b as f64;
+        }
+        accumulate_tiled(inv, w_inv, EMB_INV, &mut acc[..EMB_INV]);
+        for (a, &b) in acc[EMB_INV..].iter_mut().zip(b_dep) {
+            *a = b as f64;
+        }
+        accumulate_tiled(dep, w_dep, EMB_DEP, &mut acc[EMB_INV..]);
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a.max(0.0) as f32;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn gemm_row(e_row: &[f32], w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), NODE_DIM);
+        let mut acc = [0f64; NODE_DIM];
+        accumulate_tiled(e_row, w, NODE_DIM, &mut acc);
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a as f32;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn conv_row_infer(
+        batch: &PackedBatch,
+        t: &[f32],
+        node: usize,
+        bvec: &[f32],
+        scale: &[f32],
+        shift: &[f32],
+        e_next: &mut [f32],
+    ) {
+        let (cols, vals) = batch.adj.row(node);
+        let mut c = [0f64; NODE_DIM];
+        for (&cix, &a) in cols.iter().zip(vals) {
+            let ab = _mm_set1_pd(a as f64);
+            let t_row = t[cix as usize * NODE_DIM..(cix as usize + 1) * NODE_DIM].as_ptr();
+            let mut j = 0usize;
+            while j < NODE_DIM {
+                let cv = _mm_loadu_pd(c.as_ptr().add(j));
+                let tv = _mm_cvtps_pd(load2(t_row.add(j)));
+                _mm_storeu_pd(c.as_mut_ptr().add(j), _mm_add_pd(cv, _mm_mul_pd(ab, tv)));
+                j += 2;
+            }
+        }
+        for (cj, &b) in c.iter_mut().zip(bvec) {
+            *cj += b as f64;
+        }
+        let (mean, rs) = kernels::norm_stats(&c);
+        for j in 0..NODE_DIM {
+            let xh = (c[j] - mean) * rs;
+            let hv = xh * scale[j] as f64 + shift[j] as f64;
+            e_next[j] = hv.max(0.0) as f32;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! 4-lane f64 (and 8-lane f32 for int8) AVX2+FMA kernels. FMA
+    //! rounds `a·b + c` once, but `a·b` is already exact here (both
+    //! factors f32-derived), so each step rounds exactly like the
+    //! scalar add; lanes cover distinct outputs `j`, so the per-output
+    //! chain is unchanged.
+
+    use crate::constants::{EMB_DEP, EMB_INV, NODE_DIM};
+    use crate::model::PackedBatch;
+    use crate::runtime::kernels;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn accumulate_tiled(x: &[f32], w: &[f32], m: usize, acc: &mut [f64]) {
+        debug_assert_eq!(acc.len(), m);
+        debug_assert_eq!(w.len(), x.len() * m);
+        let main = m - m % 4;
+        let mut panels = x.chunks_exact(4);
+        let mut i = 0usize;
+        for p in panels.by_ref() {
+            if p[0] == 0.0 && p[1] == 0.0 && p[2] == 0.0 && p[3] == 0.0 {
+                i += 4;
+                continue;
+            }
+            let xv = [
+                _mm256_set1_pd(p[0] as f64),
+                _mm256_set1_pd(p[1] as f64),
+                _mm256_set1_pd(p[2] as f64),
+                _mm256_set1_pd(p[3] as f64),
+            ];
+            let rows = [
+                w[i * m..(i + 1) * m].as_ptr(),
+                w[(i + 1) * m..(i + 2) * m].as_ptr(),
+                w[(i + 2) * m..(i + 3) * m].as_ptr(),
+                w[(i + 3) * m..(i + 4) * m].as_ptr(),
+            ];
+            let mut j = 0usize;
+            while j < main {
+                let mut a = _mm256_loadu_pd(acc.as_ptr().add(j));
+                for r in 0..4 {
+                    let wv = _mm256_cvtps_pd(_mm_loadu_ps(rows[r].add(j)));
+                    a = _mm256_fmadd_pd(xv[r], wv, a);
+                }
+                _mm256_storeu_pd(acc.as_mut_ptr().add(j), a);
+                j += 4;
+            }
+            let (x0, x1, x2, x3) = (p[0] as f64, p[1] as f64, p[2] as f64, p[3] as f64);
+            for j in main..m {
+                let mut a = acc[j];
+                a += x0 * *rows[0].add(j) as f64;
+                a += x1 * *rows[1].add(j) as f64;
+                a += x2 * *rows[2].add(j) as f64;
+                a += x3 * *rows[3].add(j) as f64;
+                acc[j] = a;
+            }
+            i += 4;
+        }
+        for &xs in panels.remainder() {
+            if xs != 0.0 {
+                let xf = xs as f64;
+                let xb = _mm256_set1_pd(xf);
+                let wrow = w[i * m..(i + 1) * m].as_ptr();
+                let mut j = 0usize;
+                while j < main {
+                    let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+                    let wv = _mm256_cvtps_pd(_mm_loadu_ps(wrow.add(j)));
+                    _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_fmadd_pd(xb, wv, a));
+                    j += 4;
+                }
+                for j in main..m {
+                    acc[j] += xf * *wrow.add(j) as f64;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn embed_row(
+        inv: &[f32],
+        dep: &[f32],
+        w_inv: &[f32],
+        b_inv: &[f32],
+        w_dep: &[f32],
+        b_dep: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), NODE_DIM);
+        let mut acc = [0f64; NODE_DIM];
+        for (a, &b) in acc[..EMB_INV].iter_mut().zip(b_inv) {
+            *a = b as f64;
+        }
+        accumulate_tiled(inv, w_inv, EMB_INV, &mut acc[..EMB_INV]);
+        for (a, &b) in acc[EMB_INV..].iter_mut().zip(b_dep) {
+            *a = b as f64;
+        }
+        accumulate_tiled(dep, w_dep, EMB_DEP, &mut acc[EMB_INV..]);
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a.max(0.0) as f32;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gemm_row(e_row: &[f32], w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), NODE_DIM);
+        let mut acc = [0f64; NODE_DIM];
+        accumulate_tiled(e_row, w, NODE_DIM, &mut acc);
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a as f32;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn conv_row_infer(
+        batch: &PackedBatch,
+        t: &[f32],
+        node: usize,
+        bvec: &[f32],
+        scale: &[f32],
+        shift: &[f32],
+        e_next: &mut [f32],
+    ) {
+        let (cols, vals) = batch.adj.row(node);
+        let mut c = [0f64; NODE_DIM];
+        for (&cix, &a) in cols.iter().zip(vals) {
+            let ab = _mm256_set1_pd(a as f64);
+            let t_row = t[cix as usize * NODE_DIM..(cix as usize + 1) * NODE_DIM].as_ptr();
+            let mut j = 0usize;
+            while j < NODE_DIM {
+                let cv = _mm256_loadu_pd(c.as_ptr().add(j));
+                let tv = _mm256_cvtps_pd(_mm_loadu_ps(t_row.add(j)));
+                _mm256_storeu_pd(c.as_mut_ptr().add(j), _mm256_fmadd_pd(ab, tv, cv));
+                j += 4;
+            }
+        }
+        for (cj, &b) in c.iter_mut().zip(bvec) {
+            *cj += b as f64;
+        }
+        let (mean, rs) = kernels::norm_stats(&c);
+        for j in 0..NODE_DIM {
+            let xh = (c[j] - mean) * rs;
+            let hv = xh * scale[j] as f64 + shift[j] as f64;
+            e_next[j] = hv.max(0.0) as f32;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn qlinear_row(
+        x: &[f32],
+        q: &[i8],
+        scale: &[f32],
+        bias: Option<&[f32]>,
+        relu: bool,
+        out: &mut [f32],
+    ) {
+        let n_out = out.len();
+        debug_assert_eq!(q.len(), x.len() * n_out);
+        debug_assert_eq!(scale.len(), n_out);
+        let main = n_out - n_out % 8;
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let xb = _mm256_set1_ps(xv);
+            let qrow = q[i * n_out..(i + 1) * n_out].as_ptr();
+            let mut j = 0usize;
+            while j < main {
+                // 8 i8 weights -> i32 lanes -> f32 lanes, then FMA
+                let qi = _mm_loadl_epi64(qrow.add(j) as *const __m128i);
+                let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qi));
+                let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_fmadd_ps(xb, qf, ov));
+                j += 8;
+            }
+            for j in main..n_out {
+                out[j] += xv * *qrow.add(j) as f32;
+            }
+        }
+        for j in 0..n_out {
+            let mut v = out[j] * scale[j];
+            if let Some(b) = bias {
+                v += b[j];
+            }
+            if relu {
+                v = v.max(0.0);
+            }
+            out[j] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants::{DEP_DIM, EMB_DEP, EMB_INV, INV_DIM, NODE_DIM};
+    use crate::util::rng::Rng;
+
+    fn variants_up_to_detected() -> Vec<KernelVariant> {
+        [KernelVariant::Scalar, KernelVariant::Sse2, KernelVariant::Avx2]
+            .into_iter()
+            .filter(|&v| v <= detected())
+            .collect()
+    }
+
+    fn assert_close(simd: f64, scalar: f64, what: &str) {
+        let tol = SIMD_REL_TOL * scalar.abs().max(1.0);
+        assert!(
+            (simd - scalar).abs() <= tol,
+            "{what}: simd {simd} vs scalar {scalar} (tol {tol})"
+        );
+    }
+
+    #[test]
+    fn variant_parse_roundtrip_and_order() {
+        for v in [KernelVariant::Scalar, KernelVariant::Sse2, KernelVariant::Avx2] {
+            assert_eq!(KernelVariant::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(KernelVariant::parse("AVX2"), Some(KernelVariant::Avx2));
+        assert_eq!(KernelVariant::parse("neon"), None);
+        assert!(KernelVariant::Scalar < KernelVariant::Sse2);
+        assert!(KernelVariant::Sse2 < KernelVariant::Avx2);
+    }
+
+    #[test]
+    fn resolve_clamps_up_requests_and_honors_down() {
+        use KernelVariant::*;
+        // forcing down is always honored (scalar A/B runs)
+        assert_eq!(resolve(Avx2, Scalar), Scalar);
+        assert_eq!(resolve(Avx2, Sse2), Sse2);
+        assert_eq!(resolve(Sse2, Scalar), Scalar);
+        // forcing up is never honored (it would be UB)
+        assert_eq!(resolve(Scalar, Avx2), Scalar);
+        assert_eq!(resolve(Scalar, Sse2), Scalar);
+        assert_eq!(resolve(Sse2, Avx2), Sse2);
+        // exact matches pass through
+        for v in [Scalar, Sse2, Avx2] {
+            assert_eq!(resolve(v, v), v);
+        }
+    }
+
+    #[test]
+    fn detection_is_stable_and_scalar_without_the_feature() {
+        assert_eq!(detected(), detected());
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(detected(), KernelVariant::Scalar);
+    }
+
+    fn randv(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(lo, hi) as f32).collect()
+    }
+
+    /// Random activations with zeros sprinkled in (panel-skip coverage).
+    fn sparse_randv(rng: &mut Rng, n: usize, every: usize) -> Vec<f32> {
+        (0..n).map(|i| if i % every == 0 { 0.0 } else { rng.uniform(-2.0, 2.0) as f32 }).collect()
+    }
+
+    #[test]
+    fn accumulate_tiled_variants_match_scalar_within_envelope() {
+        // every GEMM width in the model plus odd/remainder-heavy shapes
+        for &(n, m) in &[
+            (INV_DIM, EMB_INV),
+            (DEP_DIM, EMB_DEP),
+            (NODE_DIM, NODE_DIM),
+            (7, 13),
+            (9, 5),
+            (4, 1),
+        ] {
+            let mut rng = Rng::new((n * 4099 + m) as u64);
+            let x = sparse_randv(&mut rng, n, 3);
+            let w = randv(&mut rng, n * m, -1.0, 1.0);
+            let mut scalar = vec![0.25f64; m];
+            kernels::accumulate_tiled(&x, &w, m, &mut scalar);
+            for v in variants_up_to_detected() {
+                let mut acc = vec![0.25f64; m];
+                accumulate_tiled_v(v, &x, &w, m, &mut acc);
+                for j in 0..m {
+                    let what = format!("{}: n={n} m={m} j={j}", v.as_str());
+                    assert_close(acc[j], scalar[j], &what);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn embed_and_gemm_variants_match_scalar_within_envelope() {
+        let mut rng = Rng::new(77);
+        let inv = randv(&mut rng, INV_DIM, -1.0, 1.0);
+        let dep = randv(&mut rng, DEP_DIM, -1.0, 1.0);
+        let w_inv = randv(&mut rng, INV_DIM * EMB_INV, -1.0, 1.0);
+        let w_dep = randv(&mut rng, DEP_DIM * EMB_DEP, -1.0, 1.0);
+        let b_inv = randv(&mut rng, EMB_INV, -0.5, 0.5);
+        let b_dep = randv(&mut rng, EMB_DEP, -0.5, 0.5);
+        let mut scalar_e = vec![0f32; NODE_DIM];
+        kernels::embed_row(&inv, &dep, &w_inv, &b_inv, &w_dep, &b_dep, &mut scalar_e);
+        let w = randv(&mut rng, NODE_DIM * NODE_DIM, -0.3, 0.3);
+        let mut scalar_t = vec![0f32; NODE_DIM];
+        kernels::gemm_row(&scalar_e, &w, &mut scalar_t);
+        for v in variants_up_to_detected() {
+            let mut e = vec![0f32; NODE_DIM];
+            embed_row_v(v, &inv, &dep, &w_inv, &b_inv, &w_dep, &b_dep, &mut e);
+            let mut t = vec![0f32; NODE_DIM];
+            gemm_row_v(v, &scalar_e, &w, &mut t);
+            for j in 0..NODE_DIM {
+                let what = format!("embed {} j={j}", v.as_str());
+                assert_close(e[j] as f64, scalar_e[j] as f64, &what);
+                let what = format!("gemm {} j={j}", v.as_str());
+                assert_close(t[j] as f64, scalar_t[j] as f64, &what);
+            }
+        }
+    }
+
+    #[test]
+    fn qlinear_row_matches_naive_reference_and_variants_agree() {
+        // odd n_out exercises the AVX2 remainder; n_out=1 is the head
+        for &(n_in, n_out) in &[(80usize, 80usize), (48, 32), (17, 11), (240, 1)] {
+            let mut rng = Rng::new((n_in * 31 + n_out) as u64);
+            let x = sparse_randv(&mut rng, n_in, 4);
+            let q: Vec<i8> = (0..n_in * n_out).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+            let scale = randv(&mut rng, n_out, 0.001, 0.02);
+            let bias = randv(&mut rng, n_out, -0.5, 0.5);
+
+            let mut out = vec![0f32; n_out];
+            qlinear_row(&x, &q, &scale, Some(&bias), true, &mut out);
+            // naive triple-loop reference
+            for j in 0..n_out {
+                let mut acc = 0f32;
+                for i in 0..n_in {
+                    acc += x[i] * q[i * n_out + j] as f32;
+                }
+                let expect = (acc * scale[j] + bias[j]).max(0.0);
+                assert_eq!(out[j], expect, "scalar qlinear n_in={n_in} n_out={n_out} j={j}");
+            }
+
+            for v in variants_up_to_detected() {
+                let mut vout = vec![0f32; n_out];
+                qlinear_row_v(v, &x, &q, &scale, Some(&bias), true, &mut vout);
+                for j in 0..n_out {
+                    let tol = 1e-4f32 * out[j].abs().max(1.0);
+                    assert!(
+                        (vout[j] - out[j]).abs() <= tol,
+                        "qlinear {} n_out={n_out} j={j}: {} vs {}",
+                        v.as_str(),
+                        vout[j],
+                        out[j]
+                    );
+                }
+            }
+        }
+    }
+}

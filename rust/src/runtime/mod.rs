@@ -11,15 +11,23 @@
 //!   batches to the fixed dense shapes the artifacts were compiled for,
 //!   and drives inference/training through XLA.
 //!
+//! The native engine's inner loops live in `kernels` (the scalar,
+//! bitwise-deterministic reference) and [`kernels_simd`] (opt-in
+//! `std::arch` variants behind the `simd` cargo feature, selected by
+//! one-time runtime CPU detection); [`quant`] holds the int8 per-channel
+//! weight containers for the reduced-precision inference mode.
+//!
 //! Use [`load_backend`] / [`load_variant_backend`] to get the right engine
 //! for the current build; python is never on either path at runtime.
 
 pub mod backend;
 pub mod dense_ref;
 pub(crate) mod kernels;
+pub mod kernels_simd;
 pub mod manifest;
 pub mod native;
 pub mod params;
+pub mod quant;
 pub mod workspace;
 
 #[cfg(feature = "pjrt")]
@@ -31,7 +39,9 @@ pub use backend::{
 pub use dense_ref::DenseRefBackend;
 #[cfg(feature = "pjrt")]
 pub use gcn::GcnRuntime;
+pub use kernels_simd::KernelVariant;
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 pub use params::Params;
+pub use quant::{QuantConv, QuantMatrix, QuantParams};
 pub use workspace::{Workspace, WorkspaceStats};

@@ -65,8 +65,10 @@ use crate::features::normalize::FeatureStats;
 use crate::model::{Csr, PackedBatch};
 use crate::runtime::backend::{predict_chunk, Backend};
 use crate::runtime::kernels;
+use crate::runtime::kernels_simd::{self, KernelVariant};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::Params;
+use crate::runtime::quant::QuantParams;
 use crate::runtime::workspace::{Workspace, WorkspaceStats};
 use crate::util::threadpool::{
     chunk_ranges, num_threads, parallel_map, parallel_map_vec, parallel_map_vec_threads,
@@ -186,6 +188,13 @@ pub struct NativeBackend {
     /// re-paying all node-matrix allocations per chunk; a backend-owned
     /// pool keeps buffers warm no matter which thread runs the kernels.
     ws_pool: Mutex<Vec<Workspace>>,
+    /// Microkernel tier the inference fast path dispatches through.
+    /// `Scalar` (the default for every pre-existing constructor) keeps
+    /// the fast path bitwise-identical to the training forward; SIMD
+    /// tiers are a declared numeric mode within `SIMD_REL_TOL` — see
+    /// `runtime::kernels_simd`. Training and `infer_full` always run the
+    /// scalar kernels regardless of this field.
+    variant: KernelVariant,
 }
 
 impl Default for NativeBackend {
@@ -202,7 +211,28 @@ impl NativeBackend {
 
     /// A conv-depth ablation variant (§III-C sweep: 0/1/2/4 layers).
     pub fn with_layers(n_conv: usize) -> NativeBackend {
-        NativeBackend { manifest: Manifest::native(n_conv), ws_pool: Mutex::new(Vec::new()) }
+        NativeBackend {
+            manifest: Manifest::native(n_conv),
+            ws_pool: Mutex::new(Vec::new()),
+            variant: KernelVariant::Scalar,
+        }
+    }
+
+    /// The paper's configuration with an explicit microkernel tier. The
+    /// request is clamped to what this build and CPU can actually run
+    /// ([`kernels_simd::resolve`] against [`kernels_simd::detected`]), so
+    /// asking for AVX2 on a non-AVX2 host — or in a build without the
+    /// `simd` cargo feature — cleanly falls back instead of faulting.
+    pub fn with_variant(variant: KernelVariant) -> NativeBackend {
+        NativeBackend::with_layers_variant(N_CONV, variant)
+    }
+
+    /// Conv-depth variant with an explicit microkernel tier (clamped the
+    /// same way as [`Self::with_variant`]).
+    pub fn with_layers_variant(n_conv: usize, variant: KernelVariant) -> NativeBackend {
+        let mut be = NativeBackend::with_layers(n_conv);
+        be.variant = kernels_simd::resolve(kernels_simd::detected(), variant);
+        be
     }
 
     /// Run `f` with a warm workspace from the backend's shared pool
@@ -342,9 +372,12 @@ impl NativeBackend {
     /// Inference fast path: the same kernel chain as [`Self::forward`],
     /// but ping-ponging two node matrices and folding the readout
     /// incrementally per level — the training stash (`h`/`xhat`/`rstd`,
-    /// the per-level activation list) is never materialized. Outputs are
-    /// bit-identical to the training forward's `z`.
+    /// the per-level activation list) is never materialized. Row kernels
+    /// dispatch through `self.variant`: on the default `Scalar` tier the
+    /// outputs are bit-identical to the training forward's `z`; SIMD
+    /// tiers are held to the `kernels_simd` numeric envelope instead.
     fn infer_ws(&self, params: &Params, batch: &PackedBatch, ws: &mut Workspace) -> Vec<f32> {
+        let v = self.variant;
         let kk = self.n_conv();
         let readout = self.readout();
         let nn = batch.total_nodes();
@@ -357,7 +390,8 @@ impl NativeBackend {
         let (w_inv, b_inv) = (&params.values[0], &params.values[1]);
         let (w_dep, b_dep) = (&params.values[2], &params.values[3]);
         par_rows_into(nn, NODE_DIM, &mut e, |node, out| {
-            kernels::embed_row(
+            kernels_simd::embed_row_v(
+                v,
                 &batch.inv[node * INV_DIM..(node + 1) * INV_DIM],
                 &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM],
                 w_inv,
@@ -375,12 +409,12 @@ impl NativeBackend {
             let scale = &params.values[6 + 4 * k];
             let shift = &params.values[7 + 4 * k];
             par_rows_into(nn, NODE_DIM, &mut t, |node, t_row| {
-                kernels::gemm_row(&e[node * NODE_DIM..(node + 1) * NODE_DIM], w, t_row);
+                kernels_simd::gemm_row_v(v, &e[node * NODE_DIM..(node + 1) * NODE_DIM], w, t_row);
             });
             // the gather reads only `t`, so the activations regenerate
             // in place over the dead previous level
             par_rows_into(nn, NODE_DIM, &mut e, |node, row| {
-                kernels::conv_row_infer(batch, &t, node, bvec, scale, shift, row);
+                kernels_simd::conv_row_infer_v(v, batch, &t, node, bvec, scale, shift, row);
             });
             kernels::readout_level(batch, &e, k + 1, readout, &mut feat);
         }
@@ -408,6 +442,131 @@ impl NativeBackend {
             recycle_forward(ws, fwd);
             z
         }))
+    }
+
+    /// Int8 inference fast path: the same loop structure as
+    /// [`Self::infer_ws`], with every dense weight product replaced by
+    /// the per-channel-dequantizing `qlinear_row` (f32 accumulate, one
+    /// scale multiply per output channel). The O(E) CSR gather and the
+    /// channel norm stay on the f64 kernels — quantization only touches
+    /// the GEMM weights, per the `runtime::quant` format.
+    fn infer_quant_ws(
+        &self,
+        qp: &QuantParams,
+        batch: &PackedBatch,
+        ws: &mut Workspace,
+    ) -> Vec<f32> {
+        let v = self.variant;
+        let readout = self.readout();
+        let nn = batch.total_nodes();
+        let nb = batch.n_graphs();
+
+        let mut e = ws.take_f32(nn * NODE_DIM);
+        let mut t = ws.take_f32(nn * NODE_DIM);
+        let mut feat = ws.take_f32(nb * readout);
+
+        par_rows_into(nn, NODE_DIM, &mut e, |node, out| {
+            kernels_simd::qlinear_row_v(
+                v,
+                &batch.inv[node * INV_DIM..(node + 1) * INV_DIM],
+                &qp.w_inv.q,
+                &qp.w_inv.scale,
+                Some(&qp.b_inv),
+                true,
+                &mut out[..EMB_INV],
+            );
+            kernels_simd::qlinear_row_v(
+                v,
+                &batch.dep[node * DEP_DIM..(node + 1) * DEP_DIM],
+                &qp.w_dep.q,
+                &qp.w_dep.scale,
+                Some(&qp.b_dep),
+                true,
+                &mut out[EMB_INV..],
+            );
+        });
+        kernels::readout_level(batch, &e, 0, readout, &mut feat);
+
+        for (k, qc) in qp.convs.iter().enumerate() {
+            par_rows_into(nn, NODE_DIM, &mut t, |node, t_row| {
+                kernels_simd::qlinear_row_v(
+                    v,
+                    &e[node * NODE_DIM..(node + 1) * NODE_DIM],
+                    &qc.w.q,
+                    &qc.w.scale,
+                    None,
+                    false,
+                    t_row,
+                );
+            });
+            par_rows_into(nn, NODE_DIM, &mut e, |node, row| {
+                kernels_simd::conv_row_infer_v(
+                    v,
+                    batch,
+                    &t,
+                    node,
+                    &qc.b,
+                    &qc.scale,
+                    &qc.shift,
+                    row,
+                );
+            });
+            kernels::readout_level(batch, &e, k + 1, readout, &mut feat);
+        }
+
+        let mut z = Vec::with_capacity(nb);
+        let mut zrow = [0f32; 1];
+        for g in 0..nb {
+            kernels_simd::qlinear_row_v(
+                v,
+                &feat[g * readout..(g + 1) * readout],
+                &qp.w_out.q,
+                &qp.w_out.scale,
+                Some(&qp.b_out),
+                false,
+                &mut zrow,
+            );
+            z.push(zrow[0]);
+        }
+        ws.recycle_f32(e);
+        ws.recycle_f32(t);
+        ws.recycle_f32(feat);
+        z
+    }
+
+    /// Int8 inference entry point (workspace-pooled, same pool as the
+    /// f32 path). Predictions are held to the declared
+    /// [`crate::runtime::quant`] envelope, not bitwise parity.
+    pub fn infer_quant(&self, qp: &QuantParams, batch: &PackedBatch) -> Result<Vec<f32>> {
+        ensure!(
+            qp.n_conv == self.n_conv(),
+            "quantized params have {} conv layers, backend expects {}",
+            qp.n_conv,
+            self.n_conv()
+        );
+        Ok(self.with_ws(|ws| self.infer_quant_ws(qp, batch, ws)))
+    }
+
+    /// Batched mean-runtime prediction on the int8 path — mirrors the
+    /// parallel [`Backend::predict_runtimes`] override (node-balanced
+    /// chunks, `exp` of the predicted log-runtime).
+    pub fn predict_runtimes_quant(
+        &self,
+        qp: &QuantParams,
+        samples: &[&GraphSample],
+        stats: &FeatureStats,
+    ) -> Result<Vec<f64>> {
+        let chunks = balanced_chunks(samples, num_threads());
+        let outs = parallel_map(&chunks, |chunk| -> Result<Vec<f64>> {
+            let batch = PackedBatch::for_inference(chunk, stats)?;
+            let z = self.infer_quant(qp, &batch)?;
+            Ok(z.iter().map(|&v| (v as f64).exp()).collect())
+        });
+        let mut out = Vec::with_capacity(samples.len());
+        for r in outs {
+            out.extend(r?);
+        }
+        Ok(out)
     }
 
     /// Analytic gradients of the §III-C loss w.r.t. every parameter
@@ -879,6 +1038,10 @@ impl Backend for NativeBackend {
         "native"
     }
 
+    fn kernel_variant(&self) -> KernelVariant {
+        self.variant
+    }
+
     /// The inference fast path (see `infer_ws`): zero steady-state node
     /// allocation, no training stash.
     fn infer(&self, params: &Params, batch: &PackedBatch) -> Result<Vec<f32>> {
@@ -1341,5 +1504,102 @@ mod tests {
         let be0 = NativeBackend::with_layers(0);
         let batch = synth_packed_batch();
         assert!(be0.infer(&wrong, &batch).is_err());
+    }
+
+    /// SIMD numeric-mode contract: every tier this build + CPU can run
+    /// stays within `SIMD_REL_TOL` of the scalar reference per predicted
+    /// log-runtime. In a default (no-`simd`) build every request clamps
+    /// to Scalar and the comparison degenerates to bitwise equality.
+    #[test]
+    fn simd_variants_match_scalar_within_envelope() {
+        use crate::runtime::kernels_simd::{detected, resolve, SIMD_REL_TOL};
+        let scalar = NativeBackend::new();
+        let batch = synth_packed_batch();
+        let params = scalar.init_params(21);
+        let zs = scalar.infer(&params, &batch).unwrap();
+        for req in [KernelVariant::Sse2, KernelVariant::Avx2] {
+            let be = NativeBackend::with_variant(req);
+            assert_eq!(be.kernel_variant(), resolve(detected(), req));
+            let zv = be.infer(&params, &batch).unwrap();
+            assert_eq!(zv.len(), zs.len());
+            for (i, (a, b)) in zv.iter().zip(&zs).enumerate() {
+                let tol = SIMD_REL_TOL * (b.abs() as f64).max(1.0);
+                assert!(
+                    ((a - b).abs() as f64) <= tol,
+                    "variant {req:?} diverges at graph {i}: {a} vs {b} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    /// Forced-fallback contract: requesting a tier beyond what this
+    /// build or CPU supports clamps down and still runs correctly; when
+    /// it clamps all the way to Scalar (always true without the `simd`
+    /// feature) the result is bitwise-identical to the default engine.
+    #[test]
+    fn requesting_unavailable_variant_falls_back_cleanly() {
+        use crate::runtime::kernels_simd::detected;
+        let be = NativeBackend::with_variant(KernelVariant::Avx2);
+        assert!(be.kernel_variant() <= detected(), "clamp must never exceed detection");
+        let batch = synth_packed_batch();
+        let params = be.init_params(7);
+        let z = be.infer(&params, &batch).unwrap();
+        assert_eq!(z.len(), batch.n_graphs());
+        assert!(z.iter().all(|v| v.is_finite()));
+        if be.kernel_variant() == KernelVariant::Scalar {
+            let scalar = NativeBackend::new();
+            assert_eq!(z, scalar.infer(&params, &batch).unwrap());
+        }
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(be.kernel_variant(), KernelVariant::Scalar);
+    }
+
+    /// Int8 envelope: per-channel weight quantization stays within the
+    /// declared log-runtime tolerance of the f32 reference, and a
+    /// layer-count mismatch is rejected instead of misindexing.
+    #[test]
+    fn int8_inference_stays_within_declared_envelope() {
+        use crate::runtime::quant::{INT8_Z_ABS_TOL, INT8_Z_REL_TOL};
+        let be = NativeBackend::new();
+        let batch = synth_packed_batch();
+        let params = be.init_params(13);
+        let qp = QuantParams::from_params(&params, be.manifest().n_conv).unwrap();
+        let zf = be.infer(&params, &batch).unwrap();
+        let zq = be.infer_quant(&qp, &batch).unwrap();
+        assert_eq!(zf.len(), zq.len());
+        for (i, (a, b)) in zq.iter().zip(&zf).enumerate() {
+            let tol = INT8_Z_ABS_TOL + INT8_Z_REL_TOL * (b.abs() as f64);
+            assert!(
+                ((a - b).abs() as f64) <= tol,
+                "int8 z[{i}] = {a} diverges from f32 {b} (tol {tol})"
+            );
+        }
+        let be0 = NativeBackend::with_layers(0);
+        assert!(be0.infer_quant(&qp, &batch).is_err(), "layer mismatch must be rejected");
+    }
+
+    /// The int8 path is chunk-invariant like the f32 path (block-diagonal
+    /// layout, fixed per-row accumulation order), so the node-balanced
+    /// parallel fan-out must reproduce sequential chunking bitwise.
+    #[test]
+    fn predict_runtimes_quant_matches_sequential() {
+        let be = NativeBackend::new();
+        let samples: Vec<GraphSample> = (0..70)
+            .map(|i| synth_sample((i / 10) as u32, (i % 10) as u32, 1e-3 * (1.0 + i as f32)))
+            .collect();
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let stats = identity_stats();
+        let params = be.init_params(11);
+        let qp = QuantParams::from_params(&params, be.manifest().n_conv).unwrap();
+        let parallel = be.predict_runtimes_quant(&qp, &refs, &stats).unwrap();
+        assert_eq!(parallel.len(), 70);
+        let mut sequential = Vec::new();
+        for chunk in refs.chunks(BATCH) {
+            let batch = PackedBatch::for_inference(chunk, &stats).unwrap();
+            let z = be.infer_quant(&qp, &batch).unwrap();
+            sequential.extend(z.iter().map(|&v| (v as f64).exp()));
+        }
+        assert_eq!(parallel, sequential);
+        assert!(parallel.iter().all(|p| p.is_finite() && *p > 0.0));
     }
 }

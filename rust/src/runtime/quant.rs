@@ -1,0 +1,253 @@
+//! Int8 per-channel weight quantization for the reduced-precision
+//! inference mode (`gcn-perf quantize`, `--precision int8`).
+//!
+//! Format: every dense GEMM weight matrix `W: [n_in, n_out]` is stored
+//! as row-major `q: [n_in, n_out] i8` plus a per-output-channel
+//! `scale: [n_out] f32`, with `scale_j = max_i |W[i,j]| / 127` and
+//! `q[i,j] = round(W[i,j] / scale_j)` — symmetric quantization, one
+//! rounding step of error per element. Inference accumulates
+//! `Σ_i x_i · q[i,j]` in f32 and applies the scale (then bias/ReLU) once
+//! per output channel — see `kernels_simd::qlinear_row`. Only the GEMM
+//! weights (`w_inv`, `w_dep`, `conv{k}_w`, `w_out`) are quantized:
+//! biases, channel-norm scale/shift and the O(E) CSR gather stay
+//! f32/f64, so the normalization chain is shared with the f32 engine.
+//!
+//! The declared numeric envelope, asserted by the native-engine tests
+//! and re-checked end-to-end by `eval::simd_bench`: per predicted
+//! log-runtime `|z_int8 − z_f32| ≤` [`INT8_Z_ABS_TOL`]` + `
+//! [`INT8_Z_REL_TOL`]`·|z_f32|`, and pairwise schedule-ranking agreement
+//! with the f32 engine of at least [`INT8_RANK_AGREEMENT_MIN`] on the
+//! zoo workloads. Int8 is opt-in serving precision only — training,
+//! autotune checkpoints and loadgen verification stay on the
+//! bitwise-deterministic f32 scalar path.
+
+use crate::runtime::manifest::param_specs;
+use crate::runtime::params::Params;
+use anyhow::{ensure, Result};
+
+/// Absolute term of the int8 log-runtime envelope.
+pub const INT8_Z_ABS_TOL: f64 = 0.05;
+/// Relative term of the int8 log-runtime envelope.
+pub const INT8_Z_REL_TOL: f64 = 0.05;
+/// Minimum pairwise ranking agreement of int8 vs f32 predictions.
+pub const INT8_RANK_AGREEMENT_MIN: f64 = 0.9;
+
+/// Whether a manifest parameter name is a dense GEMM weight (and is
+/// therefore quantized): `w_inv`/`w_dep`/`w_out` and `conv{k}_w`.
+pub(crate) fn is_gemm_weight(name: &str) -> bool {
+    name.starts_with("w_") || name.ends_with("_w")
+}
+
+/// One quantized matrix: row-major i8 weights plus the per-output-channel
+/// dequantization scales.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMatrix {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row-major `[n_in, n_out]` quantized weights.
+    pub q: Vec<i8>,
+    /// Per-output-channel dequantization scale, `[n_out]`.
+    pub scale: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major `[n_in, n_out]` f32 matrix (symmetric,
+    /// per-output-channel). All-zero channels keep scale 1.0 so their
+    /// reconstruction is exact.
+    pub fn quantize(w: &[f32], n_in: usize, n_out: usize) -> Result<QuantMatrix> {
+        ensure!(
+            w.len() == n_in * n_out,
+            "matrix has {} elements, expected {n_in}x{n_out}",
+            w.len()
+        );
+        let mut scale = vec![0f32; n_out];
+        for (j, s) in scale.iter_mut().enumerate() {
+            let mut mx = 0f32;
+            for i in 0..n_in {
+                mx = mx.max(w[i * n_out + j].abs());
+            }
+            *s = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+        }
+        let mut q = vec![0i8; w.len()];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                q[i * n_out + j] = (w[i * n_out + j] / scale[j]).round() as i8;
+            }
+        }
+        Ok(QuantMatrix { n_in, n_out, q, scale })
+    }
+
+    /// The f32 matrix this quantization represents (`q[i,j] · scale_j`).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.q.len()];
+        for i in 0..self.n_in {
+            for j in 0..self.n_out {
+                out[i * self.n_out + j] = self.q[i * self.n_out + j] as f32 * self.scale[j];
+            }
+        }
+        out
+    }
+}
+
+/// One quantized conv layer: int8 update weights, f32 everything else.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantConv {
+    pub w: QuantMatrix,
+    pub b: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub shift: Vec<f32>,
+}
+
+/// A full quantized model in the manifest's flat layout: GEMM weights as
+/// [`QuantMatrix`], every other tensor verbatim f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantParams {
+    pub n_conv: usize,
+    pub w_inv: QuantMatrix,
+    pub b_inv: Vec<f32>,
+    pub w_dep: QuantMatrix,
+    pub b_dep: Vec<f32>,
+    pub convs: Vec<QuantConv>,
+    pub w_out: QuantMatrix,
+    pub b_out: Vec<f32>,
+}
+
+impl QuantParams {
+    /// Quantize a trained f32 parameter set (manifest layout, validated).
+    pub fn from_params(params: &Params, n_conv: usize) -> Result<QuantParams> {
+        let specs = param_specs(n_conv);
+        ensure!(
+            params.values.len() == specs.len(),
+            "params have {} tensors, a {n_conv}-conv model has {}",
+            params.values.len(),
+            specs.len()
+        );
+        for (v, spec) in params.values.iter().zip(&specs) {
+            ensure!(
+                v.len() == spec.numel(),
+                "param '{}' has {} elements, expected {}",
+                spec.name,
+                v.len(),
+                spec.numel()
+            );
+        }
+        let qm = |idx: usize| -> Result<QuantMatrix> {
+            let shape = &specs[idx].shape;
+            QuantMatrix::quantize(&params.values[idx], shape[0], shape[1])
+        };
+        let mut convs = Vec::with_capacity(n_conv);
+        for k in 0..n_conv {
+            convs.push(QuantConv {
+                w: qm(4 + 4 * k)?,
+                b: params.values[5 + 4 * k].clone(),
+                scale: params.values[6 + 4 * k].clone(),
+                shift: params.values[7 + 4 * k].clone(),
+            });
+        }
+        let iw = 4 + 4 * n_conv;
+        Ok(QuantParams {
+            n_conv,
+            w_inv: qm(0)?,
+            b_inv: params.values[1].clone(),
+            w_dep: qm(2)?,
+            b_dep: params.values[3].clone(),
+            convs,
+            w_out: qm(iw)?,
+            b_out: params.values[iw + 1].clone(),
+        })
+    }
+
+    /// Rebuild an f32 [`Params`] in the manifest layout — weights via
+    /// [`QuantMatrix::dequantize`], all other tensors verbatim. This is
+    /// the model int8 inference effectively computes with.
+    pub fn dequantize(&self) -> Params {
+        let specs = param_specs(self.n_conv);
+        let mut values = Vec::with_capacity(specs.len());
+        values.push(self.w_inv.dequantize());
+        values.push(self.b_inv.clone());
+        values.push(self.w_dep.dequantize());
+        values.push(self.b_dep.clone());
+        for qc in &self.convs {
+            values.push(qc.w.dequantize());
+            values.push(qc.b.clone());
+            values.push(qc.scale.clone());
+            values.push(qc.shift.clone());
+        }
+        values.push(self.w_out.dequantize());
+        values.push(self.b_out.clone());
+        Params {
+            values,
+            shapes: specs.iter().map(|s| s.shape.clone()).collect(),
+            names: specs.iter().map(|s| s.name.clone()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_weight_predicate_matches_manifest_names() {
+        for name in ["w_inv", "w_dep", "w_out", "conv0_w", "conv3_w"] {
+            assert!(is_gemm_weight(name), "{name} is a GEMM weight");
+        }
+        for name in ["b_inv", "b_out", "conv0_b", "conv0_scale", "conv0_shift"] {
+            assert!(!is_gemm_weight(name), "{name} is not a GEMM weight");
+        }
+    }
+
+    #[test]
+    fn quantize_bounds_per_element_error_by_half_a_step() {
+        let (n_in, n_out) = (17usize, 9usize);
+        let mut rng = Rng::new(7);
+        let mut w: Vec<f32> =
+            (0..n_in * n_out).map(|_| rng.uniform(-3.0, 3.0) as f32).collect();
+        // one all-zero output channel
+        for i in 0..n_in {
+            w[i * n_out + 4] = 0.0;
+        }
+        let qm = QuantMatrix::quantize(&w, n_in, n_out).unwrap();
+        assert_eq!(qm.scale.len(), n_out);
+        let back = qm.dequantize();
+        for i in 0..n_in {
+            for j in 0..n_out {
+                let err = (w[i * n_out + j] - back[i * n_out + j]).abs();
+                assert!(
+                    err as f64 <= qm.scale[j] as f64 * 0.5 + 1e-7,
+                    "element ({i},{j}) err {err} exceeds half a step {}",
+                    qm.scale[j]
+                );
+            }
+        }
+        for i in 0..n_in {
+            assert_eq!(back[i * n_out + 4], 0.0, "zero channel must reconstruct exactly");
+        }
+        assert!(QuantMatrix::quantize(&w, n_in, n_out + 1).is_err());
+    }
+
+    #[test]
+    fn from_params_roundtrips_layout_and_non_weight_tensors() {
+        let m = Manifest::native(2);
+        let params = Params::init(&m, 11);
+        let qp = QuantParams::from_params(&params, 2).unwrap();
+        assert_eq!(qp.convs.len(), 2);
+        let back = qp.dequantize();
+        assert_eq!(back.names, params.names);
+        assert_eq!(back.shapes, params.shapes);
+        for (t, name) in params.names.iter().enumerate() {
+            if is_gemm_weight(name) {
+                continue; // weights reconstruct approximately, not bitwise
+            }
+            assert_eq!(back.values[t], params.values[t], "non-weight '{name}' must be verbatim");
+        }
+    }
+
+    #[test]
+    fn from_params_rejects_layer_mismatch() {
+        let params = Params::init(&Manifest::native(2), 3);
+        assert!(QuantParams::from_params(&params, 1).is_err());
+    }
+}

@@ -604,3 +604,105 @@ mod pjrt {
         }
     }
 }
+
+/// Process-level CLI tests of the quantized serving path: the `quantize`
+/// subcommand mints a registry bundle the binary serves at int8, and a
+/// `--precision` request that contradicts the bundle is a *usage* error
+/// (exit 2 with a pointed message), never a runtime crash.
+mod cli {
+    use super::{small_dataset, Backend, NativeBackend};
+    use std::process::Command;
+
+    fn bin() -> Command {
+        Command::new(env!("CARGO_BIN_EXE_gcn-perf"))
+    }
+
+    fn mint_f32_bundle(path: &std::path::Path, seed: u64) -> gcn_perf::dataset::Dataset {
+        let ds = small_dataset(3, 4, seed);
+        let be = NativeBackend::new();
+        gcn_perf::predictor::save_gcn_bundle(
+            path,
+            be.manifest().n_conv,
+            &be.init_params(seed),
+            ds.stats.as_ref().unwrap(),
+        )
+        .unwrap();
+        ds
+    }
+
+    #[test]
+    fn bench_precision_int8_without_a_quantized_bundle_exits_2() {
+        // no bundle at all: nothing quantized to run against
+        let out = bin().args(["bench", "--fast", "--precision", "int8"]).output().unwrap();
+        assert_eq!(out.status.code(), Some(2), "{out:?}");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("gcn-perf quantize"), "stderr: {err}");
+
+        // an explicit f32 bundle on hand: still a usage error, caught
+        // before any benchmark timing starts
+        let f32_path = std::env::temp_dir().join("gcn_perf_cli_bench_f32.bundle");
+        mint_f32_bundle(&f32_path, 33);
+        let out = bin()
+            .args(["bench", "--fast", "--precision", "int8", "--bundle"])
+            .arg(&f32_path)
+            .output()
+            .unwrap();
+        assert_eq!(out.status.code(), Some(2), "{out:?}");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("quantized bundle"), "stderr: {err}");
+        std::fs::remove_file(&f32_path).ok();
+    }
+
+    #[test]
+    fn quantize_then_predict_int8_through_the_binary() {
+        let dir = std::env::temp_dir();
+        let f32_path = dir.join("gcn_perf_cli_q_src.bundle");
+        let int8_path = dir.join("gcn_perf_cli_q_int8.bundle");
+        let samples_path = dir.join("gcn_perf_cli_q_samples.json");
+        let ds = mint_f32_bundle(&f32_path, 77);
+        std::fs::write(
+            &samples_path,
+            gcn_perf::dataset::json::samples_to_json(&ds.samples[..4]),
+        )
+        .unwrap();
+
+        let out = bin()
+            .args(["quantize", "--bundle"])
+            .arg(&f32_path)
+            .arg("--out")
+            .arg(&int8_path)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{out:?}");
+        assert!(String::from_utf8_lossy(&out.stdout).contains("gcn-int8"), "{out:?}");
+
+        // full precision is the original bundle's job, not the int8 one's
+        let out = bin()
+            .args(["predict", "--precision", "f32", "--samples"])
+            .arg(&samples_path)
+            .arg("--bundle")
+            .arg(&int8_path)
+            .output()
+            .unwrap();
+        assert_eq!(out.status.code(), Some(2), "{out:?}");
+        assert!(String::from_utf8_lossy(&out.stderr).contains("f32 bundle"), "{out:?}");
+
+        // the int8 bundle answers predictions through the stock CLI path
+        let out = bin()
+            .args(["predict", "--precision", "int8", "--samples"])
+            .arg(&samples_path)
+            .arg("--bundle")
+            .arg(&int8_path)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{out:?}");
+        assert!(String::from_utf8_lossy(&out.stderr).contains("int8 precision"), "{out:?}");
+        let report = String::from_utf8_lossy(&out.stdout).to_string();
+        assert!(report.contains("gcn-int8"), "stdout: {report}");
+        gcn_perf::util::json::Json::parse(&report).unwrap();
+
+        for p in [&f32_path, &int8_path, &samples_path] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}

@@ -2,10 +2,13 @@
 # Perf trajectory: builds the release binary and writes BENCH_3.json
 # (dense-vs-sparse engines), BENCH_4.json (naive-vs-coalesced serving),
 # BENCH_5.json (PR-5 engine core vs the frozen PR-4 core), BENCH_6.json
-# (the TCP front-end under the loadgen client fleet) and BENCH_7.json
+# (the TCP front-end under the loadgen client fleet), BENCH_7.json
 # (concurrent autotune fleet vs sequential tuning through one shared
-# service) at the repository root. Pass --fast for the short smoke
-# variant CI runs.
+# service) and BENCH_8.json (scalar vs SIMD vs int8 inference lanes) at
+# the repository root. Pass --fast for the short smoke variant CI runs.
+# Build with `cargo build --release --features simd` (ideally under
+# RUSTFLAGS="-C target-cpu=native") for BENCH_8 to exercise real
+# vector kernels; a default build records the scalar-only baseline.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -16,6 +19,6 @@ fi
 
 cargo run --release -- bench ${FAST_FLAG} \
     --out ../BENCH_3.json --serve-out ../BENCH_4.json --engine-out ../BENCH_5.json \
-    --autotune-out ../BENCH_7.json
+    --autotune-out ../BENCH_7.json --simd-out ../BENCH_8.json
 cargo run --release -- loadgen ${FAST_FLAG} --out ../BENCH_6.json
-echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json, BENCH_6.json and BENCH_7.json"
+echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json, BENCH_6.json, BENCH_7.json and BENCH_8.json"

@@ -8,8 +8,24 @@
 # `perf report` summary otherwise.
 #
 # Usage:
-#   scripts/profile.sh            # full measurement windows
-#   scripts/profile.sh --fast     # short windows (quick look)
+#   scripts/profile.sh                          # full measurement windows
+#   scripts/profile.sh --fast                   # short windows (quick look)
+#   scripts/profile.sh --engine-precision int8 --bundle data/gcn-int8.bundle
+#                                               # profile the int8 lane
+#
+# --engine-precision {f32,int8} passes --precision through to the bench
+# binary (int8 needs a quantized bundle — mint one with `gcn-perf
+# quantize` and hand it over with --bundle, or the bench exits 2).
+#
+# Kernel-lane A/B flamegraphs: build with --features simd (the script
+# does when GCN_PERF_PROFILE_SIMD=1), record once per lane and diff the
+# graphs —
+#   GCN_PERF_PROFILE_SIMD=1 scripts/profile.sh            # detected tier
+#   GCN_PERF_PROFILE_SIMD=1 GCN_PERF_KERNELS=scalar \
+#       scripts/profile.sh                                # forced scalar
+# GCN_PERF_KERNELS clamps runtime dispatch downward (scalar/sse2/avx2),
+# so the two runs differ only in the microkernels — any delta in the
+# flamegraph is the vector win, on identical workloads.
 #
 # Outputs land in ./profile/ at the repository root:
 #   profile/perf.data       raw samples
@@ -22,15 +38,44 @@ OUT="$ROOT/profile"
 mkdir -p "$OUT"
 
 FAST_FLAG=""
-if [[ "${1:-}" == "--fast" ]]; then
-    FAST_FLAG="--fast"
+EXTRA_ARGS=()
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --fast)
+            FAST_FLAG="--fast"
+            shift
+            ;;
+        --engine-precision)
+            [[ $# -ge 2 ]] || { echo "--engine-precision needs a value (f32|int8)" >&2; exit 2; }
+            EXTRA_ARGS+=(--precision "$2")
+            shift 2
+            ;;
+        --bundle)
+            [[ $# -ge 2 ]] || { echo "--bundle needs a path" >&2; exit 2; }
+            EXTRA_ARGS+=(--bundle "$2")
+            shift 2
+            ;;
+        *)
+            echo "unknown argument '$1' (valid: --fast, --engine-precision V, --bundle P)" >&2
+            exit 2
+            ;;
+    esac
+done
+
+FEATURES=()
+if [[ "${GCN_PERF_PROFILE_SIMD:-}" == "1" ]]; then
+    FEATURES=(--features simd)
+    export RUSTFLAGS="${RUSTFLAGS:-} -C target-cpu=native"
 fi
 
 echo "==> building release with debug symbols"
-( cd rust && CARGO_PROFILE_RELEASE_DEBUG=true cargo build --release )
+( cd rust && CARGO_PROFILE_RELEASE_DEBUG=true cargo build --release \
+    ${FEATURES[@]+"${FEATURES[@]}"} )
 
 BIN="$ROOT/rust/target/release/gcn-perf"
-BENCH_CMD=("$BIN" bench --engine ${FAST_FLAG} --engine-out "$OUT/BENCH_5.json")
+BENCH_CMD=("$BIN" bench --engine ${FAST_FLAG} --engine-out "$OUT/BENCH_5.json"
+    --simd-out "$OUT/BENCH_8.json")
+BENCH_CMD+=(${EXTRA_ARGS[@]+"${EXTRA_ARGS[@]}"})
 
 if ! command -v perf >/dev/null 2>&1; then
     echo "perf(1) not found — running the engine bench unprofiled." >&2

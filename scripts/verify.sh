@@ -29,6 +29,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "==> cargo check --features pjrt --all-targets"
 cargo check --features pjrt --all-targets --quiet
 
+echo "==> cargo test -q --features simd (SIMD lane: scalar parity + envelopes)"
+cargo test -q --features simd
+
 echo "==> serve smoke (tiny bundle, JSON requests + STATS through the stdin daemon)"
 SMOKE="$(mktemp -d)"
 trap 'rm -rf "$SMOKE"' EXIT
@@ -57,6 +60,17 @@ cargo run --release --quiet -- autotune --networks alexnet,squeezenet --bundle "
     --require-improvement --report-out "$SMOKE/fleet.json" --trace-out "$SMOKE/trace.json"
 grep -q tuned_cost "$SMOKE/fleet.json"
 grep -q pipeline_id "$SMOKE/trace.json"
+
+echo "==> quantize smoke (mint an int8 bundle; precision mismatches must exit 2)"
+cargo run --release --quiet -- quantize --bundle "$SMOKE/gcn.bundle" --out "$SMOKE/gcn-int8.bundle"
+{ cat "$SMOKE/req.json"; echo; echo STATS; } > "$SMOKE/req_stats8.json"
+timeout 120 bash -c "cargo run --release --quiet -- serve --bundle '$SMOKE/gcn-int8.bundle' --precision int8 < '$SMOKE/req_stats8.json' > '$SMOKE/resp8.json'"
+grep -q predicted_runtime_s "$SMOKE/resp8.json"
+grep -q '"precision":"int8"' "$SMOKE/resp8.json"
+if cargo run --release --quiet -- predict --bundle "$SMOKE/gcn.bundle" --precision int8 --samples "$SMOKE/req.json" >/dev/null 2>&1; then
+    echo "expected exit 2 for --precision int8 on an f32 bundle" >&2
+    exit 1
+fi
 
 echo "==> autotune checkpoint smoke (interrupted run, then --resume finishes the search)"
 cargo run --release --quiet -- autotune --networks alexnet --population 3 --offspring 4 \
