@@ -1,0 +1,487 @@
+//! Precomputed per-pipeline analysis tables and the schedule-verification
+//! pass built on them.
+//!
+//! [`AnalyzedPipeline::build`] walks a pipeline + its lowered loop nests
+//! once and captures everything per-candidate legality needs — spatial
+//! extents, inlinability, the consumer table, output-buffer sizes. After
+//! that, [`AnalyzedPipeline::check_schedule`] is pure table lookups: no
+//! consumer-list reallocation per candidate, which is what makes it the
+//! search-side fast path ([`crate::autotune::BeamStrategy`] and
+//! [`crate::autotune::EvolutionStrategy`] build one per pipeline and the
+//! `analysis` micro-bench in [`crate::eval`] records the throughput
+//! delta vs the legacy per-call [`crate::schedule::legality`] path).
+//!
+//! Two entry points with one rule set:
+//!
+//! * [`AnalyzedPipeline::check_schedule`] — first error only, `Result`
+//!   (exact accept/reject twin of `legality::check_pipeline`, which is
+//!   now a shim over it; property-pinned).
+//! * [`AnalyzedPipeline::verify_schedule`] — *all* `S0xx` violations as
+//!   diagnostics, for the `gcn-perf analyze` renderers.
+
+use crate::analysis::diag::{Code, Diagnostic};
+use crate::ir::pipeline::Pipeline;
+use crate::lower::LoopNest;
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
+
+/// Per-stage facts the schedule checks consult.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    /// Op kind name, for diagnostics.
+    pub opname: &'static str,
+    /// Spatial loop extents (= output shape).
+    pub spatial: Vec<usize>,
+    /// True when the stage may be inlined (pointwise, no reduction).
+    pub inlinable: bool,
+    /// Stage ids that consume this stage's output.
+    pub consumers: Vec<usize>,
+    /// Bytes of the stage's output buffer at compute_root.
+    pub out_bytes: f64,
+}
+
+/// A pipeline with its dependence/legality tables computed once.
+#[derive(Debug, Clone)]
+pub struct AnalyzedPipeline {
+    stages: Vec<StageInfo>,
+}
+
+impl AnalyzedPipeline {
+    /// Precompute the tables from a pipeline and its lowered nests.
+    pub fn build(p: &Pipeline, nests: &[LoopNest]) -> AnalyzedPipeline {
+        debug_assert_eq!(p.num_stages(), nests.len(), "nests must match the pipeline");
+        let consumers = p.consumers();
+        let stages = p
+            .stages
+            .iter()
+            .zip(nests)
+            .zip(consumers)
+            .map(|((s, nest), cons)| StageInfo {
+                opname: s.op.kind.name(),
+                spatial: nest.spatial.clone(),
+                inlinable: nest.pointwise && nest.reduction.is_empty(),
+                consumers: cons,
+                out_bytes: nest.out_bytes,
+            })
+            .collect();
+        AnalyzedPipeline { stages }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn stage(&self, i: usize) -> &StageInfo {
+        &self.stages[i]
+    }
+
+    pub fn stage_opt(&self, i: usize) -> Option<&StageInfo> {
+        self.stages.get(i)
+    }
+
+    /// Consumer ids of stage `i` — identical values to
+    /// `Pipeline::consumers()[i]`, without the per-call allocation.
+    pub fn consumers(&self, i: usize) -> &[usize] {
+        &self.stages[i].consumers
+    }
+
+    /// Fast single-candidate legality: first violation as a [`Diagnostic`].
+    ///
+    /// Accept/reject-equivalent to the legacy `legality::check_pipeline`
+    /// (which delegates here); rule order matches the historical checks so
+    /// the *first* error is the same rule too.
+    pub fn check_schedule(&self, sched: &PipelineSchedule) -> Result<(), Diagnostic> {
+        if sched.stages.len() != self.stages.len() {
+            return Err(Diagnostic::new(
+                Code::ScheduleLenMismatch,
+                format!(
+                    "schedule covers {} stages, pipeline has {}",
+                    sched.stages.len(),
+                    self.stages.len()
+                ),
+            ));
+        }
+        for (i, s) in sched.stages.iter().enumerate() {
+            self.check_stage_fast(i, s, &sched.stages)?;
+        }
+        Ok(())
+    }
+
+    fn check_stage_fast(
+        &self,
+        i: usize,
+        s: &StageSchedule,
+        all: &[StageSchedule],
+    ) -> Result<(), Diagnostic> {
+        let info = &self.stages[i];
+        let rank = info.spatial.len();
+        let fail = |code: Code, msg: String| -> Result<(), Diagnostic> {
+            Err(Diagnostic::at_stage(code, i, info.opname, msg))
+        };
+        if s.order.len() != rank {
+            return fail(
+                Code::OrderNotPermutation,
+                format!("order len {} != rank {rank}", s.order.len()),
+            );
+        }
+        // ranks are tiny (tensor ranks), so a u64 bitmask replaces the
+        // legacy `vec![false; rank]` seen-set without allocating
+        debug_assert!(rank < 64);
+        let mut seen = 0u64;
+        for &d in &s.order {
+            if d >= rank || seen & (1 << d) != 0 {
+                return fail(
+                    Code::OrderNotPermutation,
+                    format!("order {:?} is not a permutation", s.order),
+                );
+            }
+            seen |= 1 << d;
+        }
+        if s.tile.len() != rank {
+            return fail(Code::BadTile, format!("tile len {} != rank {rank}", s.tile.len()));
+        }
+        if s.tile.iter().any(|&f| f == 0) {
+            return fail(Code::BadTile, "zero split factor".into());
+        }
+        match s.vector_width {
+            1 | 4 | 8 => {}
+            w => return fail(Code::BadVectorWidth, format!("unsupported vector width {w}")),
+        }
+        if s.vector_width > 1 {
+            let Some(inner) = s.innermost_dim() else {
+                return fail(Code::VectorExceedsExtent, "vectorize on rank-0 stage".into());
+            };
+            let extent =
+                if s.tile[inner] > 1 { s.tile[inner] } else { info.spatial[inner] };
+            if extent < s.vector_width {
+                return fail(
+                    Code::VectorExceedsExtent,
+                    format!("vector width {} exceeds innermost extent {extent}", s.vector_width),
+                );
+            }
+        }
+        match s.unroll {
+            1 | 2 | 4 | 8 => {}
+            u => return fail(Code::BadUnroll, format!("unsupported unroll factor {u}")),
+        }
+        let n_loops = s.loop_extents(&info.spatial).len();
+        if s.parallel_depth > n_loops.min(3) {
+            return fail(
+                Code::ParallelTooDeep,
+                format!("parallel depth {} exceeds limit (loops={n_loops})", s.parallel_depth),
+            );
+        }
+        match s.compute {
+            ComputeLoc::Root => {}
+            ComputeLoc::Inline => {
+                if !info.inlinable {
+                    return fail(Code::InlineNonPointwise, "inline of non-pointwise stage".into());
+                }
+                if info.consumers.is_empty() {
+                    return fail(Code::InlineOutputStage, "inline of an output stage".into());
+                }
+            }
+            ComputeLoc::At { consumer, level } => {
+                if !info.consumers.contains(&consumer) {
+                    return fail(
+                        Code::ComputeAtNonConsumer,
+                        format!("compute_at non-consumer {consumer}"),
+                    );
+                }
+                if consumer < all.len() && matches!(all[consumer].compute, ComputeLoc::Inline) {
+                    return fail(Code::ComputeAtInlined, "compute_at an inlined consumer".into());
+                }
+                if level == 0 || level > 3 {
+                    return fail(
+                        Code::ComputeAtBadLevel,
+                        format!("compute_at level {level} out of range"),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Full verification: every `S0xx` violation in the schedule, not just
+    /// the first. Dependent rules are guarded (e.g. the vector-extent rule
+    /// is only evaluated once order and tile are individually valid), so a
+    /// single root cause does not cascade into spurious findings.
+    pub fn verify_schedule(&self, sched: &PipelineSchedule) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        if sched.stages.len() != self.stages.len() {
+            out.push(Diagnostic::new(
+                Code::ScheduleLenMismatch,
+                format!(
+                    "schedule covers {} stages, pipeline has {}",
+                    sched.stages.len(),
+                    self.stages.len()
+                ),
+            ));
+            return out;
+        }
+        for (i, s) in sched.stages.iter().enumerate() {
+            self.verify_stage(i, s, &sched.stages, &mut out);
+        }
+        out
+    }
+
+    fn verify_stage(
+        &self,
+        i: usize,
+        s: &StageSchedule,
+        all: &[StageSchedule],
+        out: &mut Vec<Diagnostic>,
+    ) {
+        let info = &self.stages[i];
+        let rank = info.spatial.len();
+        let mut push = |code: Code, msg: String| {
+            out.push(Diagnostic::at_stage(code, i, info.opname, msg));
+        };
+
+        let order_ok = s.order.len() == rank && {
+            let mut seen = vec![false; rank];
+            s.order.iter().all(|&d| d < rank && !std::mem::replace(&mut seen[d], true))
+        };
+        if !order_ok {
+            push(
+                Code::OrderNotPermutation,
+                format!("order {:?} is not a permutation of 0..{rank}", s.order),
+            );
+        }
+        let tile_ok = s.tile.len() == rank && s.tile.iter().all(|&f| f > 0);
+        if !tile_ok {
+            push(Code::BadTile, format!("tile {:?} invalid for rank {rank}", s.tile));
+        }
+        let width_ok = matches!(s.vector_width, 1 | 4 | 8);
+        if !width_ok {
+            push(Code::BadVectorWidth, format!("unsupported vector width {}", s.vector_width));
+        }
+        if width_ok && s.vector_width > 1 && order_ok && tile_ok {
+            match s.innermost_dim() {
+                None => push(Code::VectorExceedsExtent, "vectorize on rank-0 stage".into()),
+                Some(inner) => {
+                    let extent =
+                        if s.tile[inner] > 1 { s.tile[inner] } else { info.spatial[inner] };
+                    if extent < s.vector_width {
+                        push(
+                            Code::VectorExceedsExtent,
+                            format!(
+                                "vector width {} exceeds innermost extent {extent}",
+                                s.vector_width
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        if !matches!(s.unroll, 1 | 2 | 4 | 8) {
+            push(Code::BadUnroll, format!("unsupported unroll factor {}", s.unroll));
+        }
+        if order_ok && tile_ok {
+            let n_loops = s.loop_extents(&info.spatial).len();
+            if s.parallel_depth > n_loops.min(3) {
+                push(
+                    Code::ParallelTooDeep,
+                    format!("parallel depth {} exceeds limit (loops={n_loops})", s.parallel_depth),
+                );
+            }
+        }
+        match s.compute {
+            ComputeLoc::Root => {}
+            ComputeLoc::Inline => {
+                if !info.inlinable {
+                    push(Code::InlineNonPointwise, "inline of non-pointwise stage".into());
+                }
+                if info.consumers.is_empty() {
+                    push(Code::InlineOutputStage, "inline of an output stage".into());
+                }
+            }
+            ComputeLoc::At { consumer, level } => {
+                if !info.consumers.contains(&consumer) {
+                    push(
+                        Code::ComputeAtNonConsumer,
+                        format!("compute_at non-consumer {consumer}"),
+                    );
+                }
+                if consumer < all.len() && matches!(all[consumer].compute, ComputeLoc::Inline) {
+                    push(Code::ComputeAtInlined, "compute_at an inlined consumer".into());
+                }
+                if level == 0 || level > 3 {
+                    push(Code::ComputeAtBadLevel, format!("compute_at level {level} out of range"));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::lower::lower_pipeline;
+
+    fn two_stage() -> (Pipeline, Vec<LoopNest>) {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 8;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        let nests = lower_pipeline(&p);
+        (p, nests)
+    }
+
+    fn analyzed() -> (AnalyzedPipeline, PipelineSchedule) {
+        let (p, nests) = two_stage();
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let sched = PipelineSchedule::default_for(&[4, 4]);
+        (ap, sched)
+    }
+
+    /// Assert the mutated schedule triggers exactly `code`, through both
+    /// the first-error and the collect-all paths.
+    fn expect_code(sched: &PipelineSchedule, code: Code) {
+        let (p, nests) = two_stage();
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let err = ap.check_schedule(sched).expect_err("schedule must be illegal");
+        assert_eq!(err.code, code, "first error: {err}");
+        let all = ap.verify_schedule(sched);
+        assert_eq!(all.len(), 1, "exactly one finding expected: {all:?}");
+        assert_eq!(all[0].code, code);
+    }
+
+    #[test]
+    fn default_schedule_is_clean() {
+        let (ap, sched) = analyzed();
+        ap.check_schedule(&sched).unwrap();
+        assert!(ap.verify_schedule(&sched).is_empty());
+    }
+
+    #[test]
+    fn consumers_match_pipeline_consumers() {
+        let (p, nests) = two_stage();
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let legacy = p.consumers();
+        for i in 0..p.num_stages() {
+            assert_eq!(ap.consumers(i), &legacy[i][..]);
+        }
+    }
+
+    #[test]
+    fn s001_len_mismatch() {
+        let (ap, mut sched) = analyzed();
+        sched.stages.pop();
+        let err = ap.check_schedule(&sched).unwrap_err();
+        assert_eq!(err.code, Code::ScheduleLenMismatch);
+        assert_eq!(ap.verify_schedule(&sched)[0].code, Code::ScheduleLenMismatch);
+    }
+
+    #[test]
+    fn s002_order_not_permutation() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].order = vec![0, 0, 1, 2];
+        expect_code(&sched, Code::OrderNotPermutation);
+    }
+
+    #[test]
+    fn s003_bad_tile() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].tile = vec![1, 0, 1, 1];
+        expect_code(&sched, Code::BadTile);
+    }
+
+    #[test]
+    fn s004_bad_vector_width() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].vector_width = 3;
+        expect_code(&sched, Code::BadVectorWidth);
+    }
+
+    #[test]
+    fn s005_vector_exceeds_extent() {
+        let (_, mut sched) = analyzed();
+        // innermost becomes the batch dim (extent 1) — width 8 cannot fit
+        sched.stages[0].order = vec![1, 2, 3, 0];
+        sched.stages[0].vector_width = 8;
+        expect_code(&sched, Code::VectorExceedsExtent);
+    }
+
+    #[test]
+    fn s006_bad_unroll() {
+        let (_, mut sched) = analyzed();
+        sched.stages[1].unroll = 5;
+        expect_code(&sched, Code::BadUnroll);
+    }
+
+    #[test]
+    fn s007_parallel_too_deep() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].parallel_depth = 9;
+        expect_code(&sched, Code::ParallelTooDeep);
+    }
+
+    #[test]
+    fn s008_inline_non_pointwise() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].compute = ComputeLoc::Inline; // conv has a reduction
+        expect_code(&sched, Code::InlineNonPointwise);
+    }
+
+    #[test]
+    fn s009_inline_output_stage() {
+        let (_, mut sched) = analyzed();
+        sched.stages[1].compute = ComputeLoc::Inline; // relu is the output
+        expect_code(&sched, Code::InlineOutputStage);
+    }
+
+    #[test]
+    fn s010_compute_at_non_consumer() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 0, level: 2 };
+        expect_code(&sched, Code::ComputeAtNonConsumer);
+    }
+
+    #[test]
+    fn s011_compute_at_inlined_consumer() {
+        // needs three stages: conv -> relu (inlined) -> abs
+        let mut p = Pipeline::new("t3");
+        let x = p.add_input(vec![1, 16, 32, 32]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 8;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        p.add_stage("abs", Op::new(OpKind::Abs), vec![r]).unwrap();
+        let nests = lower_pipeline(&p);
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let mut sched = PipelineSchedule::default_for(&[4, 4, 4]);
+        sched.stages[1].compute = ComputeLoc::Inline;
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 2 };
+        let err = ap.check_schedule(&sched).unwrap_err();
+        assert_eq!(err.code, Code::ComputeAtInlined);
+        let all = ap.verify_schedule(&sched);
+        assert_eq!(all.len(), 1, "{all:?}");
+        assert_eq!(all[0].code, Code::ComputeAtInlined);
+    }
+
+    #[test]
+    fn s012_compute_at_bad_level() {
+        let (_, mut sched) = analyzed();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 0 };
+        expect_code(&sched, Code::ComputeAtBadLevel);
+    }
+
+    #[test]
+    fn verify_reports_all_violations_at_once() {
+        let (ap, mut sched) = analyzed();
+        sched.stages[0].vector_width = 3;
+        sched.stages[0].unroll = 7;
+        sched.stages[1].compute = ComputeLoc::Inline;
+        let all = ap.verify_schedule(&sched);
+        let codes: Vec<Code> = all.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&Code::BadVectorWidth), "{codes:?}");
+        assert!(codes.contains(&Code::BadUnroll), "{codes:?}");
+        assert!(codes.contains(&Code::InlineOutputStage), "{codes:?}");
+        assert_eq!(all.len(), 3, "{all:?}");
+        // the fast path reports only the first
+        assert_eq!(ap.check_schedule(&sched).unwrap_err().code, Code::BadVectorWidth);
+    }
+}

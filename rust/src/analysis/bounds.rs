@@ -1,0 +1,212 @@
+//! Dependence + bounds pass: producer→consumer footprint regions under
+//! each [`ComputeLoc`], storage-footprint estimates the cost model can
+//! cross-check, and fusion hazards the first-error legality checks never
+//! report (`W003` compute_at deeper than the consumer nest, `W004`
+//! fusing into one of several consumers).
+//!
+//! Everything here reads the tables of an
+//! [`AnalyzedPipeline`](crate::analysis::AnalyzedPipeline) — no pipeline
+//! or nest walks per candidate.
+
+use crate::analysis::analyzed::AnalyzedPipeline;
+use crate::analysis::diag::{Code, Diagnostic};
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
+
+/// True when order/tile are individually valid for `rank` — the guard for
+/// anything that calls [`StageSchedule::loop_extents`] (which indexes
+/// `spatial` by the order entries and would panic on a malformed order).
+fn loops_computable(s: &StageSchedule, rank: usize) -> bool {
+    s.order.len() == rank
+        && s.tile.len() == rank
+        && s.order.iter().all(|&d| d < rank)
+        && s.tile.iter().all(|&f| f > 0)
+}
+
+/// Estimated resident bytes of each stage's output buffer under its
+/// scheduled [`ComputeLoc`]:
+///
+/// * `Root` — the whole buffer is materialized: `out_bytes`.
+/// * `Inline` — no buffer at all: `0`.
+/// * `At { consumer, level }` — one tile per consumer iteration: the full
+///   buffer shrunk by the extents of the consumer loops the producer sits
+///   under, floored at one point's worth of bytes.
+///
+/// Malformed schedules (wrong length, bad order/tile, dangling consumer)
+/// fall back to `out_bytes` for the affected stage — this pass estimates,
+/// the legality passes reject.
+pub fn storage_footprints(ap: &AnalyzedPipeline, sched: &PipelineSchedule) -> Vec<f64> {
+    (0..ap.num_stages())
+        .map(|i| {
+            let info = ap.stage(i);
+            let Some(s) = sched.stages.get(i) else {
+                return info.out_bytes;
+            };
+            match s.compute {
+                ComputeLoc::Root => info.out_bytes,
+                ComputeLoc::Inline => 0.0,
+                ComputeLoc::At { consumer, level } => {
+                    let Some(cs) = sched.stages.get(consumer) else {
+                        return info.out_bytes;
+                    };
+                    let cspatial = match ap.stage_opt(consumer) {
+                        Some(c) if loops_computable(cs, c.spatial.len()) => &c.spatial,
+                        _ => return info.out_bytes,
+                    };
+                    let extents = cs.loop_extents(cspatial);
+                    let shrink: f64 = extents
+                        .iter()
+                        .take(level.min(extents.len()))
+                        .map(|&e| e.max(1) as f64)
+                        .product();
+                    let numel: usize = info.spatial.iter().product::<usize>().max(1);
+                    let per_point = info.out_bytes / numel as f64;
+                    (info.out_bytes / shrink.max(1.0)).max(per_point)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Sum of [`storage_footprints`] — the pipeline's estimated peak
+/// intermediate-buffer residency under this schedule.
+pub fn total_footprint_bytes(ap: &AnalyzedPipeline, sched: &PipelineSchedule) -> f64 {
+    storage_footprints(ap, sched).iter().sum()
+}
+
+/// Dependence warnings for a schedule: findings that are *legal* today but
+/// flag fusion placements the cost model treats pessimistically.
+///
+/// * `W003` — `compute_at` level deeper than the consumer's loop nest:
+///   the placement clamps to the innermost loop, so the extra depth buys
+///   nothing.
+/// * `W004` — a producer fused `At` one consumer while other stages also
+///   read it: the other consumers force either recompute or a full
+///   materialization anyway.
+pub fn dependence_diagnostics(ap: &AnalyzedPipeline, sched: &PipelineSchedule) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let n = ap.num_stages();
+    if sched.stages.len() != n {
+        return out; // S001 territory — the schedule pass reports it
+    }
+    for (i, s) in sched.stages.iter().enumerate() {
+        let info = ap.stage(i);
+        if let ComputeLoc::At { consumer, level } = s.compute {
+            if info.consumers.len() > 1 && info.consumers.contains(&consumer) {
+                let others: Vec<usize> =
+                    info.consumers.iter().copied().filter(|&c| c != consumer).collect();
+                out.push(Diagnostic::at_stage(
+                    Code::FusedMultiConsumer,
+                    i,
+                    info.opname,
+                    format!("fused into stage {consumer} but also consumed by {others:?}"),
+                ));
+            }
+            if let Some(c) = ap.stage_opt(consumer) {
+                let cs = &sched.stages[consumer];
+                if loops_computable(cs, c.spatial.len()) {
+                    let n_loops = cs.loop_extents(&c.spatial).len();
+                    if level > n_loops {
+                        out.push(Diagnostic::at_stage(
+                            Code::ComputeAtDeep,
+                            i,
+                            info.opname,
+                            format!(
+                                "compute_at level {level} deeper than consumer {consumer}'s \
+                                 {n_loops}-loop nest"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::{Op, OpKind};
+    use crate::ir::pipeline::Pipeline;
+    use crate::lower::lower_pipeline;
+    use crate::schedule::primitives::PipelineSchedule;
+
+    /// relu -> abs over a rank-2 input: two pointwise stages.
+    fn chain2() -> (AnalyzedPipeline, PipelineSchedule) {
+        let mut p = Pipeline::new("b");
+        let x = p.add_input(vec![8, 32]);
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![x]).unwrap();
+        p.add_stage("abs", Op::new(OpKind::Abs), vec![r]).unwrap();
+        let nests = lower_pipeline(&p);
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let sched = PipelineSchedule::default_for(&[2, 2]);
+        (ap, sched)
+    }
+
+    #[test]
+    fn root_footprint_is_full_buffer_and_inline_is_zero() {
+        let (ap, mut sched) = chain2();
+        let full = storage_footprints(&ap, &sched);
+        assert_eq!(full[0], ap.stage(0).out_bytes);
+        assert!(full[0] > 0.0);
+        sched.stages[0].compute = ComputeLoc::Inline;
+        let fused = storage_footprints(&ap, &sched);
+        assert_eq!(fused[0], 0.0);
+        assert_eq!(fused[1], full[1]);
+        assert!(total_footprint_bytes(&ap, &sched) < total_footprint_bytes(&ap, &chain2().1));
+    }
+
+    #[test]
+    fn compute_at_shrinks_footprint_by_consumer_extents() {
+        let (ap, mut sched) = chain2();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 1 };
+        let fp = storage_footprints(&ap, &sched);
+        // consumer loop 0 has extent 8 -> one row resident at a time
+        assert!((fp[0] - ap.stage(0).out_bytes / 8.0).abs() < 1e-9, "{fp:?}");
+    }
+
+    #[test]
+    fn compute_at_footprint_floors_at_one_point() {
+        let (ap, mut sched) = chain2();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 3 };
+        // deeper than the 2-loop nest: shrink clamps, floor >= bytes/point
+        let fp = storage_footprints(&ap, &sched);
+        let numel = ap.stage(0).spatial.iter().product::<usize>() as f64;
+        assert!(fp[0] >= ap.stage(0).out_bytes / numel - 1e-9);
+    }
+
+    #[test]
+    fn w003_compute_at_deeper_than_consumer_nest() {
+        let (ap, mut sched) = chain2();
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 3 };
+        // level 3 is *legal* (1..=3) but the rank-2 consumer only has 2 loops
+        ap.check_schedule(&sched).unwrap();
+        let diags = dependence_diagnostics(&ap, &sched);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, Code::ComputeAtDeep);
+    }
+
+    #[test]
+    fn w004_fused_producer_with_other_consumers() {
+        let mut p = Pipeline::new("m");
+        let x = p.add_input(vec![8, 32]);
+        let r = p.add_stage("relu", Op::new(OpKind::Relu), vec![x]).unwrap();
+        let a = p.add_stage("abs", Op::new(OpKind::Abs), vec![r]).unwrap();
+        p.add_stage("sum", Op::new(OpKind::Add), vec![r, a]).unwrap();
+        let nests = lower_pipeline(&p);
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        let mut sched = PipelineSchedule::default_for(&[2, 2, 2]);
+        sched.stages[0].compute = ComputeLoc::At { consumer: 1, level: 1 };
+        ap.check_schedule(&sched).unwrap();
+        let diags = dependence_diagnostics(&ap, &sched);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, Code::FusedMultiConsumer);
+        assert_eq!(diags[0].stage, Some(0));
+    }
+
+    #[test]
+    fn clean_default_schedule_has_no_dependence_findings() {
+        let (ap, sched) = chain2();
+        assert!(dependence_diagnostics(&ap, &sched).is_empty());
+    }
+}

@@ -1,0 +1,326 @@
+//! Numeric/data audit pass over untrusted inputs: dataset samples
+//! (`D001`–`D004`, `D008`), normalization stats (`D005`), bundle tensors
+//! (`D006`), and CSR adjacency (`D007`).
+//!
+//! The dataset loaders ([`crate::dataset::store`], [`crate::dataset::json`])
+//! and [`crate::predictor::bundle`] run the relevant audits at load time so
+//! corrupt files fail with a coded diagnostic instead of panicking or
+//! silently skewing training; `gcn-perf analyze --data/--samples/--bundle`
+//! runs them on demand and renders the full report.
+
+use crate::analysis::diag::{Code, Diagnostic};
+use crate::constants::{DEP_DIM, INV_DIM};
+use crate::dataset::{Dataset, GraphSample};
+use crate::features::normalize::FeatureStats;
+use crate::model::graph::Csr;
+use crate::predictor::bundle::Bundle;
+
+/// Audit one sample: structure (`D001`), edge ranges (`D002`), edge
+/// topology (`D008` — stage graphs are producer→consumer with producer id
+/// strictly below consumer id, so `src >= dst` means a forward ref or
+/// cycle), feature finiteness (`D003`), and runtime labels (`D004` — NaN,
+/// Inf, or negative; zero is allowed because JSON samples may omit runs).
+pub fn audit_sample(s: &GraphSample) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let n = s.n_stages as usize;
+    if n == 0 {
+        out.push(Diagnostic::new(Code::SampleStructure, "sample has zero stages".into()));
+        return out;
+    }
+    if s.inv.len() != n || s.dep.len() != n {
+        out.push(Diagnostic::new(
+            Code::SampleStructure,
+            format!(
+                "sample has {n} stages but {}/{} feature rows",
+                s.inv.len(),
+                s.dep.len()
+            ),
+        ));
+    }
+    for &(src, dst) in &s.edges {
+        if (src as usize) >= n || (dst as usize) >= n {
+            out.push(Diagnostic::new(
+                Code::EdgeOutOfRange,
+                format!("edge ({src}, {dst}) out of range for a {n}-stage graph"),
+            ));
+        } else if src >= dst {
+            out.push(Diagnostic::new(
+                Code::NonTopologicalEdge,
+                format!("edge ({src}, {dst}) is not topological (src must precede dst)"),
+            ));
+        }
+    }
+    let bad_rows = s
+        .inv
+        .iter()
+        .flat_map(|r| r.iter())
+        .chain(s.dep.iter().flat_map(|r| r.iter()))
+        .filter(|x| !x.is_finite())
+        .count();
+    if bad_rows > 0 {
+        out.push(Diagnostic::new(
+            Code::NonFiniteFeature,
+            format!("{bad_rows} non-finite feature value(s)"),
+        ));
+    }
+    for &r in &s.runs {
+        if !r.is_finite() || r < 0.0 {
+            out.push(Diagnostic::new(
+                Code::BadRuntimeLabel,
+                format!("runtime measurement {r} is not a valid label"),
+            ));
+            break;
+        }
+    }
+    out
+}
+
+/// Audit normalization stats: dimension counts, finiteness, positive stds.
+pub fn audit_stats(stats: &FeatureStats) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if stats.inv_mean.len() != INV_DIM
+        || stats.inv_std.len() != INV_DIM
+        || stats.dep_mean.len() != DEP_DIM
+        || stats.dep_std.len() != DEP_DIM
+    {
+        out.push(Diagnostic::new(
+            Code::BadStats,
+            format!(
+                "stats dims {}/{}/{}/{} != expected {INV_DIM}/{INV_DIM}/{DEP_DIM}/{DEP_DIM}",
+                stats.inv_mean.len(),
+                stats.inv_std.len(),
+                stats.dep_mean.len(),
+                stats.dep_std.len()
+            ),
+        ));
+        return out;
+    }
+    let bad_mean = stats
+        .inv_mean
+        .iter()
+        .chain(&stats.dep_mean)
+        .filter(|x| !x.is_finite())
+        .count();
+    let bad_std = stats
+        .inv_std
+        .iter()
+        .chain(&stats.dep_std)
+        .filter(|x| !x.is_finite() || **x <= 0.0)
+        .count();
+    if bad_mean > 0 {
+        out.push(Diagnostic::new(
+            Code::BadStats,
+            format!("{bad_mean} non-finite normalization mean(s)"),
+        ));
+    }
+    if bad_std > 0 {
+        out.push(Diagnostic::new(
+            Code::BadStats,
+            format!("{bad_std} non-finite or non-positive normalization std(s)"),
+        ));
+    }
+    out
+}
+
+/// Audit a whole dataset: each sample (tagged with its index) plus the
+/// fitted stats when present.
+pub fn audit_dataset(ds: &Dataset) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (i, s) in ds.samples.iter().enumerate() {
+        for mut d in audit_sample(s) {
+            if d.location.is_none() {
+                d.location = Some(format!("sample {i}"));
+            }
+            out.push(d);
+        }
+    }
+    if let Some(stats) = &ds.stats {
+        out.extend(audit_stats(stats));
+    }
+    out
+}
+
+/// Audit a model bundle: NaN/Inf over every f32 tensor (`D006`) and the
+/// embedded normalization stats (`D005`). Int8 payloads cannot encode
+/// non-finite values, so qtensors only contribute through their f32 scale
+/// tensors, which live in the regular tensor section.
+pub fn audit_bundle(b: &Bundle) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for t in &b.tensors {
+        let bad = t.data.iter().filter(|x| !x.is_finite()).count();
+        if bad > 0 {
+            out.push(Diagnostic::at(
+                Code::NonFiniteTensor,
+                format!("tensor '{}'", t.name),
+                format!("{bad} of {} values are non-finite", t.data.len()),
+            ));
+        }
+    }
+    for (k, v) in &b.meta {
+        if !v.is_finite() {
+            out.push(Diagnostic::at(
+                Code::NonFiniteTensor,
+                format!("meta '{k}'"),
+                format!("metadata value {v} is non-finite"),
+            ));
+        }
+    }
+    if let Some(stats) = &b.stats {
+        out.extend(audit_stats(stats));
+    }
+    out
+}
+
+/// Audit CSR well-formedness against an expected column count (`D007`):
+/// row_ptr must start at 0, be monotonic, and end at nnz; col/val arrays
+/// must agree in length; columns in range; values finite.
+pub fn audit_csr(m: &Csr, n_cols: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut push = |msg: String| out.push(Diagnostic::new(Code::MalformedCsr, msg));
+    match m.row_ptr.first() {
+        None => {
+            push("row_ptr is empty".into());
+            return out;
+        }
+        Some(&f) if f != 0 => push(format!("row_ptr starts at {f}, not 0")),
+        _ => {}
+    }
+    if m.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        push("row_ptr is not monotonically non-decreasing".into());
+    }
+    let last = *m.row_ptr.last().unwrap() as usize;
+    if last != m.col_idx.len() {
+        push(format!("row_ptr ends at {last} but nnz is {}", m.col_idx.len()));
+    }
+    if m.val.len() != m.col_idx.len() {
+        push(format!("{} values for {} column indices", m.val.len(), m.col_idx.len()));
+    }
+    if let Some(&c) = m.col_idx.iter().find(|&&c| (c as usize) >= n_cols) {
+        push(format!("column index {c} out of range for {n_cols} columns"));
+    }
+    let bad = m.val.iter().filter(|x| !x.is_finite()).count();
+    if bad > 0 {
+        push(format!("{bad} non-finite value(s)"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constants::BENCH_RUNS;
+
+    fn sample() -> GraphSample {
+        GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 3,
+            edges: vec![(0, 1), (1, 2)],
+            inv: vec![[0.5; INV_DIM]; 3],
+            dep: vec![[0.5; DEP_DIM]; 3],
+            runs: [1e-3; BENCH_RUNS],
+        }
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn clean_sample_passes() {
+        assert!(audit_sample(&sample()).is_empty());
+    }
+
+    #[test]
+    fn d001_structure() {
+        let mut s = sample();
+        s.inv.pop();
+        assert_eq!(codes(&audit_sample(&s)), vec!["D001"]);
+        let mut s = sample();
+        s.n_stages = 0;
+        assert_eq!(codes(&audit_sample(&s)), vec!["D001"]);
+    }
+
+    #[test]
+    fn d002_edge_out_of_range() {
+        let mut s = sample();
+        s.edges.push((1, 7));
+        assert_eq!(codes(&audit_sample(&s)), vec!["D002"]);
+    }
+
+    #[test]
+    fn d008_non_topological_edge() {
+        let mut s = sample();
+        s.edges.push((2, 1)); // backward: cycle with (1, 2)
+        assert_eq!(codes(&audit_sample(&s)), vec!["D008"]);
+        let mut s = sample();
+        s.edges.push((1, 1)); // self loop
+        assert_eq!(codes(&audit_sample(&s)), vec!["D008"]);
+    }
+
+    #[test]
+    fn d003_non_finite_feature() {
+        let mut s = sample();
+        s.dep[1][3] = f32::NAN;
+        assert_eq!(codes(&audit_sample(&s)), vec!["D003"]);
+    }
+
+    #[test]
+    fn d004_bad_runtime_label() {
+        let mut s = sample();
+        s.runs[2] = f32::INFINITY;
+        assert_eq!(codes(&audit_sample(&s)), vec!["D004"]);
+        let mut s = sample();
+        s.runs[0] = -1.0;
+        assert_eq!(codes(&audit_sample(&s)), vec!["D004"]);
+        // all-zero runs are allowed: JSON samples may omit measurements
+        let mut s = sample();
+        s.runs = [0.0; BENCH_RUNS];
+        assert!(audit_sample(&s).is_empty());
+    }
+
+    #[test]
+    fn d005_bad_stats() {
+        let mut ds = Dataset { samples: vec![sample()], stats: None };
+        ds.fit_stats();
+        assert!(audit_dataset(&ds).is_empty());
+        let stats = ds.stats.as_mut().unwrap();
+        stats.inv_std[0] = 0.0;
+        assert_eq!(codes(&audit_dataset(&ds)), vec!["D005"]);
+    }
+
+    #[test]
+    fn dataset_audit_tags_sample_locations() {
+        let mut bad = sample();
+        bad.edges.push((0, 9));
+        let ds = Dataset { samples: vec![sample(), bad], stats: None };
+        let diags = audit_dataset(&ds);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].location.as_deref(), Some("sample 1"));
+    }
+
+    #[test]
+    fn d006_non_finite_tensor() {
+        let mut b = Bundle::new("ffn");
+        b.tensors.push(crate::predictor::bundle::NamedTensor {
+            name: "w0".into(),
+            shape: vec![2, 2],
+            data: vec![1.0, f32::NAN, 0.0, f32::NEG_INFINITY],
+        });
+        let diags = audit_bundle(&b);
+        assert_eq!(codes(&diags), vec!["D006"]);
+        assert!(diags[0].message.contains("2 of 4"));
+    }
+
+    #[test]
+    fn d007_malformed_csr() {
+        let good = Csr { row_ptr: vec![0, 1, 2], col_idx: vec![1, 0], val: vec![0.5, 0.5] };
+        assert!(audit_csr(&good, 2).is_empty());
+        let bad = Csr { row_ptr: vec![0, 2, 1], col_idx: vec![1, 0], val: vec![0.5, 0.5] };
+        assert!(codes(&audit_csr(&bad, 2)).contains(&"D007"));
+        let bad = Csr { row_ptr: vec![0, 1, 2], col_idx: vec![1, 9], val: vec![0.5, 0.5] };
+        assert!(codes(&audit_csr(&bad, 2)).contains(&"D007"));
+        let bad = Csr { row_ptr: vec![0, 1, 2], col_idx: vec![1, 0], val: vec![0.5, f32::NAN] };
+        assert!(codes(&audit_csr(&bad, 2)).contains(&"D007"));
+    }
+}

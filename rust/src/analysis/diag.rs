@@ -1,0 +1,414 @@
+//! The diagnostics engine: stable codes, severities, per-stage locations
+//! and the text/JSON renderers every analyzer pass reports through.
+//!
+//! Codes are grouped by prefix and never renumbered:
+//!
+//! * `A0xx` — pipeline structure (DAG well-formedness, shape agreement)
+//! * `S0xx` — schedule legality (the [`crate::schedule::legality`] rules)
+//! * `D0xx` — data integrity (samples, datasets, stats, bundles, CSR)
+//! * `W0xx` — warnings (suspicious but executable constructs)
+//!
+//! `A`/`S`/`D` codes are [`Severity::Error`]; `W` codes are
+//! [`Severity::Warning`]. The `gcn-perf analyze` exit policy keys off
+//! that split: errors exit 1, warnings exit 0 unless `--strict`.
+
+use crate::util::json::Json;
+
+/// How bad a finding is. Errors make a target invalid (exit 1 from the
+/// CLI, rejection from loaders); warnings are advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. The wire strings (`"A001"`, ...) are part of
+/// the CLI contract — scripts grep them — so variants are append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Code {
+    // ---- A0xx: pipeline structure ----
+    /// Stage operand count does not match the op's graph arity.
+    ArityMismatch,
+    /// Stage references a pipeline input index that does not exist.
+    DanglingInputRef,
+    /// Stage references itself or a later stage (breaks topological order).
+    ForwardStageRef,
+    /// Stored output shape disagrees with re-inferred shape.
+    ShapeMismatch,
+    /// Shape inference fails on the stage's operand shapes.
+    ShapeInferenceFailed,
+    // ---- S0xx: schedule legality ----
+    /// Schedule stage count differs from the pipeline stage count.
+    ScheduleLenMismatch,
+    /// Loop order is not a permutation of the stage's spatial dims.
+    OrderNotPermutation,
+    /// Tile vector has the wrong length or a zero split factor.
+    BadTile,
+    /// Vector width outside the supported {1, 4, 8} set.
+    BadVectorWidth,
+    /// Vector width exceeds the innermost loop extent.
+    VectorExceedsExtent,
+    /// Unroll factor outside the supported {1, 2, 4, 8} set.
+    BadUnroll,
+    /// Parallel depth exceeds the loop count (capped at 3).
+    ParallelTooDeep,
+    /// Inline of a stage with a reduction or non-pointwise body.
+    InlineNonPointwise,
+    /// Inline of an output stage (no consumer to inline into).
+    InlineOutputStage,
+    /// `compute_at` targets a stage that is not a consumer.
+    ComputeAtNonConsumer,
+    /// `compute_at` targets an inlined (non-materializing) consumer.
+    ComputeAtInlined,
+    /// `compute_at` level outside the supported 1..=3 range.
+    ComputeAtBadLevel,
+    // ---- D0xx: data integrity ----
+    /// Sample structure broken (zero stages, feature-row count mismatch).
+    SampleStructure,
+    /// Edge endpoint outside the sample's stage range.
+    EdgeOutOfRange,
+    /// NaN/Inf in a feature row.
+    NonFiniteFeature,
+    /// NaN/Inf/negative runtime measurement.
+    BadRuntimeLabel,
+    /// Normalization stats malformed (non-finite mean/std, zero std).
+    BadStats,
+    /// NaN/Inf in a bundle tensor.
+    NonFiniteTensor,
+    /// CSR matrix malformed (row_ptr/col_idx/val inconsistency).
+    MalformedCsr,
+    /// Edge violates topological order (src >= dst: cycle/self/forward).
+    NonTopologicalEdge,
+    // ---- W0xx: warnings ----
+    /// Pipeline input never read by any stage.
+    UnusedInput,
+    /// Stage output cannot reach the pipeline's final output.
+    DeadStage,
+    /// `compute_at` level deeper than the consumer's loop nest.
+    ComputeAtDeep,
+    /// Producer fused into one consumer while other consumers remain.
+    FusedMultiConsumer,
+}
+
+impl Code {
+    /// Every documented code, in wire order (the DESIGN.md table).
+    pub const ALL: &'static [Code] = &[
+        Code::ArityMismatch,
+        Code::DanglingInputRef,
+        Code::ForwardStageRef,
+        Code::ShapeMismatch,
+        Code::ShapeInferenceFailed,
+        Code::ScheduleLenMismatch,
+        Code::OrderNotPermutation,
+        Code::BadTile,
+        Code::BadVectorWidth,
+        Code::VectorExceedsExtent,
+        Code::BadUnroll,
+        Code::ParallelTooDeep,
+        Code::InlineNonPointwise,
+        Code::InlineOutputStage,
+        Code::ComputeAtNonConsumer,
+        Code::ComputeAtInlined,
+        Code::ComputeAtBadLevel,
+        Code::SampleStructure,
+        Code::EdgeOutOfRange,
+        Code::NonFiniteFeature,
+        Code::BadRuntimeLabel,
+        Code::BadStats,
+        Code::NonFiniteTensor,
+        Code::MalformedCsr,
+        Code::NonTopologicalEdge,
+        Code::UnusedInput,
+        Code::DeadStage,
+        Code::ComputeAtDeep,
+        Code::FusedMultiConsumer,
+    ];
+
+    /// The stable wire string ("A001", "S005", ...).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::ArityMismatch => "A001",
+            Code::DanglingInputRef => "A002",
+            Code::ForwardStageRef => "A003",
+            Code::ShapeMismatch => "A004",
+            Code::ShapeInferenceFailed => "A005",
+            Code::ScheduleLenMismatch => "S001",
+            Code::OrderNotPermutation => "S002",
+            Code::BadTile => "S003",
+            Code::BadVectorWidth => "S004",
+            Code::VectorExceedsExtent => "S005",
+            Code::BadUnroll => "S006",
+            Code::ParallelTooDeep => "S007",
+            Code::InlineNonPointwise => "S008",
+            Code::InlineOutputStage => "S009",
+            Code::ComputeAtNonConsumer => "S010",
+            Code::ComputeAtInlined => "S011",
+            Code::ComputeAtBadLevel => "S012",
+            Code::SampleStructure => "D001",
+            Code::EdgeOutOfRange => "D002",
+            Code::NonFiniteFeature => "D003",
+            Code::BadRuntimeLabel => "D004",
+            Code::BadStats => "D005",
+            Code::NonFiniteTensor => "D006",
+            Code::MalformedCsr => "D007",
+            Code::NonTopologicalEdge => "D008",
+            Code::UnusedInput => "W001",
+            Code::DeadStage => "W002",
+            Code::ComputeAtDeep => "W003",
+            Code::FusedMultiConsumer => "W004",
+        }
+    }
+
+    /// Severity implied by the prefix: `W` codes warn, all others error.
+    pub fn severity(&self) -> Severity {
+        match self.as_str().as_bytes()[0] {
+            b'W' => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line summary for the code table renderer.
+    pub fn description(&self) -> &'static str {
+        match self {
+            Code::ArityMismatch => "stage operand count != op graph arity",
+            Code::DanglingInputRef => "stage reads a nonexistent pipeline input",
+            Code::ForwardStageRef => "stage references itself or a later stage",
+            Code::ShapeMismatch => "stored output shape != re-inferred shape",
+            Code::ShapeInferenceFailed => "shape inference fails on operand shapes",
+            Code::ScheduleLenMismatch => "schedule stage count != pipeline stage count",
+            Code::OrderNotPermutation => "loop order is not a permutation of the dims",
+            Code::BadTile => "tile vector wrong length or zero split factor",
+            Code::BadVectorWidth => "vector width outside {1, 4, 8}",
+            Code::VectorExceedsExtent => "vector width exceeds innermost extent",
+            Code::BadUnroll => "unroll factor outside {1, 2, 4, 8}",
+            Code::ParallelTooDeep => "parallel depth exceeds loop count",
+            Code::InlineNonPointwise => "inline of a non-pointwise/reduction stage",
+            Code::InlineOutputStage => "inline of an output stage",
+            Code::ComputeAtNonConsumer => "compute_at a non-consumer stage",
+            Code::ComputeAtInlined => "compute_at an inlined consumer",
+            Code::ComputeAtBadLevel => "compute_at level outside 1..=3",
+            Code::SampleStructure => "sample structure broken",
+            Code::EdgeOutOfRange => "edge endpoint outside the stage range",
+            Code::NonFiniteFeature => "NaN/Inf feature value",
+            Code::BadRuntimeLabel => "NaN/Inf/negative runtime measurement",
+            Code::BadStats => "malformed normalization statistics",
+            Code::NonFiniteTensor => "NaN/Inf bundle tensor value",
+            Code::MalformedCsr => "malformed CSR adjacency",
+            Code::NonTopologicalEdge => "edge violates topological order",
+            Code::UnusedInput => "pipeline input never read",
+            Code::DeadStage => "stage unreachable from the final output",
+            Code::ComputeAtDeep => "compute_at level deeper than consumer nest",
+            Code::FusedMultiConsumer => "fused producer has other consumers",
+        }
+    }
+}
+
+/// One finding: a code, an optional source location (stage id + name) and
+/// the human-readable detail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    /// Stage id the finding anchors to, if any.
+    pub stage: Option<usize>,
+    /// Stage (or tensor/sample) name for the location rendering.
+    pub location: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// A finding with no stage location (whole-target findings).
+    pub fn new(code: Code, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, stage: None, location: None, message: message.into() }
+    }
+
+    /// A finding anchored to a stage.
+    pub fn at_stage(
+        code: Code,
+        stage: usize,
+        name: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic { code, stage: Some(stage), location: Some(name.into()), message: message.into() }
+    }
+
+    /// A finding anchored to a named location without a stage id.
+    pub fn at(code: Code, location: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, stage: None, location: Some(location.into()), message: message.into() }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+
+    fn location_str(&self) -> String {
+        match (self.stage, &self.location) {
+            (Some(i), Some(n)) => format!(" stage {i} ({n}):"),
+            (Some(i), None) => format!(" stage {i}:"),
+            (None, Some(n)) => format!(" {n}:"),
+            (None, None) => String::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.as_str().into())),
+            ("severity", Json::Str(self.severity().as_str().into())),
+            (
+                "stage",
+                match self.stage {
+                    Some(i) => Json::Num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "location",
+                match &self.location {
+                    Some(n) => Json::Str(n.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}[{}]{} {}",
+            self.severity().as_str(),
+            self.code.as_str(),
+            self.location_str(),
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+/// All findings for one analyzed target, plus informational notes (e.g.
+/// storage-footprint estimates) that render without affecting the verdict.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// What was analyzed ("zoo/resnet18", "dataset data/ds.bin", ...).
+    pub target: String,
+    pub diags: Vec<Diagnostic>,
+    /// Informational lines (no severity, never affect the exit code).
+    pub info: Vec<String>,
+}
+
+impl Report {
+    pub fn new(target: impl Into<String>) -> Report {
+        Report { target: target.into(), diags: Vec::new(), info: Vec::new() }
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn extend(&mut self, ds: impl IntoIterator<Item = Diagnostic>) {
+        self.diags.extend(ds);
+    }
+
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.info.push(line.into());
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity() == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity() == Severity::Warning).count()
+    }
+
+    /// Clean = no errors; under `strict`, warnings also fail.
+    pub fn is_clean(&self, strict: bool) -> bool {
+        self.errors() == 0 && (!strict || self.warnings() == 0)
+    }
+
+    /// Multi-line human rendering (errors first, then warnings, then notes).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{}: {} error(s), {} warning(s)\n",
+            self.target,
+            self.errors(),
+            self.warnings()
+        ));
+        let mut sorted: Vec<&Diagnostic> = self.diags.iter().collect();
+        sorted.sort_by_key(|d| std::cmp::Reverse(d.severity()));
+        for d in sorted {
+            out.push_str(&format!("  {d}\n"));
+        }
+        for n in &self.info {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("target", Json::Str(self.target.clone())),
+            ("errors", Json::Num(self.errors() as f64)),
+            ("warnings", Json::Num(self.warnings() as f64)),
+            ("diagnostics", Json::Arr(self.diags.iter().map(|d| d.to_json()).collect())),
+            ("info", Json::Arr(self.info.iter().map(|n| Json::Str(n.clone())).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_prefixed_consistently() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in Code::ALL {
+            assert!(seen.insert(c.as_str()), "duplicate wire code {}", c.as_str());
+            let warn = c.as_str().starts_with('W');
+            assert_eq!(
+                c.severity() == Severity::Warning,
+                warn,
+                "{} severity disagrees with its prefix",
+                c.as_str()
+            );
+        }
+        assert!(Code::ALL.len() >= 10, "the contract documents at least 10 codes");
+    }
+
+    #[test]
+    fn diagnostic_renders_code_and_location() {
+        let d = Diagnostic::at_stage(Code::VectorExceedsExtent, 2, "conv2d", "width 8 > extent 1");
+        let s = d.to_string();
+        assert!(s.contains("error[S005]"), "{s}");
+        assert!(s.contains("stage 2 (conv2d)"), "{s}");
+        let j = d.to_json().to_string();
+        assert!(j.contains("\"S005\""), "{j}");
+    }
+
+    #[test]
+    fn report_verdict_and_strict_mode() {
+        let mut r = Report::new("t");
+        assert!(r.is_clean(true));
+        r.push(Diagnostic::new(Code::UnusedInput, "input 1 never read"));
+        assert!(r.is_clean(false) && !r.is_clean(true));
+        r.push(Diagnostic::new(Code::ShapeMismatch, "bad"));
+        assert!(!r.is_clean(false));
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 1);
+        let text = r.to_text();
+        assert!(text.contains("error[A004]") && text.contains("warning[W001]"), "{text}");
+    }
+}

@@ -1,0 +1,76 @@
+//! Static analyzer over pipelines, schedules, and serialized artifacts.
+//!
+//! A multi-pass verifier with a diagnostics engine: stable error codes
+//! (`A0xx` pipeline structure, `S0xx` schedule legality, `D0xx` data,
+//! `W0xx` warnings), severities, per-stage locations, and text/JSON
+//! renderers ([`Report`]). The passes:
+//!
+//! 1. **Structure** ([`structure::analyze_pipeline`]) — arity, dangling
+//!    and forward/self refs, shape re-inference agreement, dead stages,
+//!    unused inputs, orphan subgraphs.
+//! 2. **Dependence + bounds** ([`bounds`]) — per-[`ComputeLoc`] storage
+//!    footprints and fusion hazards (`W003`/`W004`).
+//! 3. **Schedule verification** ([`AnalyzedPipeline::verify_schedule`]) —
+//!    every `S0xx` violation; [`AnalyzedPipeline::check_schedule`] is the
+//!    first-error fast path `schedule::legality` now shims onto and the
+//!    search strategies use for per-candidate pruning.
+//! 4. **Data audit** ([`data_audit`]) — NaN/Inf scans over samples, stats,
+//!    bundle tensors; CSR well-formedness; edge/stage-ref validation.
+//!
+//! Entry points: the `gcn-perf analyze` subcommand (exit 0 clean, 1 with
+//! findings, 2 on usage errors), load-time checks in the dataset/bundle
+//! loaders, and [`AnalyzedPipeline`] inside beam/evolution search.
+//!
+//! [`ComputeLoc`]: crate::schedule::primitives::ComputeLoc
+
+pub mod analyzed;
+pub mod bounds;
+pub mod data_audit;
+pub mod diag;
+pub mod structure;
+
+pub use analyzed::{AnalyzedPipeline, StageInfo};
+pub use bounds::{dependence_diagnostics, storage_footprints, total_footprint_bytes};
+pub use data_audit::{audit_bundle, audit_csr, audit_dataset, audit_sample, audit_stats};
+pub use diag::{Code, Diagnostic, Report, Severity};
+pub use structure::analyze_pipeline;
+
+use crate::ir::pipeline::Pipeline;
+use crate::lower::lower_pipeline;
+use crate::schedule::primitives::PipelineSchedule;
+
+/// Run every applicable pass over one pipeline + schedule and collect the
+/// findings into `report`: structure, schedule verification, dependence
+/// warnings, and a footprint note.
+pub fn analyze_pipeline_schedule(
+    p: &Pipeline,
+    sched: &PipelineSchedule,
+    report: &mut Report,
+) -> AnalyzedPipeline {
+    report.extend(structure::analyze_pipeline(p));
+    let nests = lower_pipeline(p);
+    let ap = AnalyzedPipeline::build(p, &nests);
+    report.extend(ap.verify_schedule(sched));
+    report.extend(bounds::dependence_diagnostics(&ap, sched));
+    report.note(format!(
+        "estimated peak intermediate footprint: {:.0} bytes",
+        bounds::total_footprint_bytes(&ap, sched)
+    ));
+    ap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_analysis_is_clean_on_every_zoo_network() {
+        for net in crate::zoo::all_networks() {
+            let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+            let sched = PipelineSchedule::default_for(&ranks);
+            let mut report = Report::new(&net.name);
+            analyze_pipeline_schedule(&net, &sched, &mut report);
+            assert!(report.is_clean(true), "{}: {}", net.name, report.to_text());
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Pipeline well-formedness pass: the DAG-structure analogue of
+//! [`crate::ir::pipeline::Pipeline::validate`], reporting *all* findings
+//! (validate stops at the first) plus liveness warnings the first-error
+//! path never looks for — unused inputs and stages that cannot reach the
+//! pipeline's final output (dead stages and orphan subgraphs alike).
+
+use crate::analysis::diag::{Code, Diagnostic};
+use crate::ir::pipeline::{Pipeline, SourceRef};
+
+/// Run the structure pass over one pipeline. An empty result means the
+/// pipeline is well-formed; [`Pipeline::validate`] accepts exactly the
+/// pipelines this pass reports no error-severity findings for
+/// (property-pinned in the test suite).
+pub fn analyze_pipeline(p: &Pipeline) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for s in &p.stages {
+        let opname = s.op.kind.name();
+        let mut refs_ok = true;
+        if s.inputs.len() != s.op.kind.graph_arity() {
+            out.push(Diagnostic::at_stage(
+                Code::ArityMismatch,
+                s.id,
+                opname,
+                format!("arity {} != expected {}", s.inputs.len(), s.op.kind.graph_arity()),
+            ));
+            refs_ok = false;
+        }
+        for &inp in &s.inputs {
+            match inp {
+                SourceRef::Input(i) if i >= p.inputs.len() => {
+                    out.push(Diagnostic::at_stage(
+                        Code::DanglingInputRef,
+                        s.id,
+                        opname,
+                        format!("dangling input ref {i} (pipeline has {})", p.inputs.len()),
+                    ));
+                    refs_ok = false;
+                }
+                SourceRef::Stage(i) if i >= s.id => {
+                    out.push(Diagnostic::at_stage(
+                        Code::ForwardStageRef,
+                        s.id,
+                        opname,
+                        format!("forward/self reference to stage {i}"),
+                    ));
+                    refs_ok = false;
+                }
+                _ => {}
+            }
+        }
+        // shape re-inference only makes sense over resolvable operands
+        if refs_ok {
+            let shapes: Vec<&[usize]> = s.inputs.iter().map(|&x| p.shape_of(x)).collect();
+            match s.op.infer_shape(&shapes) {
+                Some(sh) if sh == s.shape => {}
+                Some(sh) => out.push(Diagnostic::at_stage(
+                    Code::ShapeMismatch,
+                    s.id,
+                    opname,
+                    format!("stored shape {:?} != inferred {:?}", s.shape, sh),
+                )),
+                None => out.push(Diagnostic::at_stage(
+                    Code::ShapeInferenceFailed,
+                    s.id,
+                    opname,
+                    format!("shape inference fails on operand shapes {shapes:?}"),
+                )),
+            }
+        }
+    }
+
+    // W001: inputs no stage ever reads
+    let mut input_used = vec![false; p.inputs.len()];
+    for s in &p.stages {
+        for &inp in &s.inputs {
+            if let SourceRef::Input(i) = inp {
+                if i < input_used.len() {
+                    input_used[i] = true;
+                }
+            }
+        }
+    }
+    for (i, used) in input_used.iter().enumerate() {
+        if !used {
+            out.push(Diagnostic::new(
+                Code::UnusedInput,
+                format!("pipeline input {i} (shape {:?}) is never read", p.inputs[i]),
+            ));
+        }
+    }
+
+    // W002: stages whose value cannot reach the final output — covers both
+    // dead interior stages and whole orphaned subgraphs
+    if let Some(last) = p.stages.last() {
+        let mut live = vec![false; p.stages.len()];
+        let mut stack = vec![last.id];
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for &inp in &p.stages[i].inputs {
+                if let SourceRef::Stage(j) = inp {
+                    if j < p.stages.len() && !live[j] {
+                        stack.push(j);
+                    }
+                }
+            }
+        }
+        for (i, alive) in live.iter().enumerate() {
+            if !alive {
+                out.push(Diagnostic::at_stage(
+                    Code::DeadStage,
+                    i,
+                    p.stages[i].op.kind.name(),
+                    format!("output of '{}' never reaches the final stage", p.stages[i].name),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::diag::Severity;
+    use crate::ir::op::{Op, OpAttrs, OpKind};
+    use crate::util::propcheck;
+
+    fn chain() -> Pipeline {
+        let mut p = Pipeline::new("t");
+        let x = p.add_input(vec![1, 8, 16, 16]);
+        let mut attrs = OpAttrs::default();
+        attrs.out_channels = 4;
+        let c = p.add_stage("conv", Op::with_attrs(OpKind::Conv2d, attrs), vec![x]).unwrap();
+        p.add_stage("relu", Op::new(OpKind::Relu), vec![c]).unwrap();
+        p
+    }
+
+    fn codes(p: &Pipeline) -> Vec<&'static str> {
+        analyze_pipeline(p).iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn well_formed_pipeline_is_clean() {
+        assert!(analyze_pipeline(&chain()).is_empty());
+        for net in crate::zoo::all_networks() {
+            let diags = analyze_pipeline(&net);
+            assert!(diags.is_empty(), "{}: {diags:?}", net.name);
+        }
+    }
+
+    #[test]
+    fn a001_arity_mismatch() {
+        let mut p = chain();
+        p.stages[1].inputs.clear();
+        assert_eq!(codes(&p), vec!["A001"]);
+    }
+
+    #[test]
+    fn a002_dangling_input_ref() {
+        let mut p = chain();
+        p.stages[0].inputs[0] = SourceRef::Input(9);
+        assert_eq!(codes(&p), vec!["A002"]);
+    }
+
+    #[test]
+    fn a003_forward_and_self_refs() {
+        let mut p = chain();
+        p.stages[1].inputs[0] = SourceRef::Stage(1);
+        assert!(codes(&p).contains(&"A003"));
+        let mut p = chain();
+        p.stages[0].inputs[0] = SourceRef::Stage(1);
+        assert!(codes(&p).contains(&"A003"));
+    }
+
+    #[test]
+    fn a004_shape_mismatch() {
+        let mut p = chain();
+        p.stages[1].shape = vec![9, 9];
+        // the corrupted relu also breaks nothing else: exactly one finding
+        assert_eq!(codes(&p), vec!["A004"]);
+    }
+
+    #[test]
+    fn a005_shape_inference_failure() {
+        let mut p = chain();
+        // Add requires two compatible operands; force arity-compatible but
+        // shape-incompatible operands through a raw stage edit
+        let y = p.add_input(vec![3, 5]);
+        let relu = SourceRef::Stage(1);
+        p.add_stage("mix", Op::new(OpKind::Add), vec![relu, relu]).unwrap();
+        p.stages[2].inputs[1] = y;
+        assert_eq!(codes(&p), vec!["A005"]);
+    }
+
+    #[test]
+    fn w001_unused_input_warns() {
+        let mut p = chain();
+        p.add_input(vec![4, 4]);
+        let diags = analyze_pipeline(&p);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, Code::UnusedInput);
+        assert_eq!(diags[0].severity(), Severity::Warning);
+    }
+
+    #[test]
+    fn w002_dead_stage_warns() {
+        let mut p = chain();
+        let relu = SourceRef::Stage(1);
+        p.add_stage("dead", Op::new(OpKind::Exp), vec![relu]).unwrap();
+        p.add_stage("out", Op::new(OpKind::Abs), vec![relu]).unwrap();
+        let diags = analyze_pipeline(&p);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, Code::DeadStage);
+        assert_eq!(diags[0].stage, Some(2));
+    }
+
+    #[test]
+    fn prop_structure_pass_agrees_with_validate() {
+        // analyzer errors <=> validate() rejection, over generated models
+        // and seeded corruptions of them
+        let cases = propcheck::default_cases().min(24);
+        propcheck::check_rng("structure pass == validate", 0xA11, cases, |rng| {
+            let cfg = crate::onnx_gen::GenConfig::default();
+            let mut p = crate::onnx_gen::generate_model(&cfg, rng, 0);
+            if rng.gen_range(2) == 1 && !p.stages.is_empty() {
+                // corrupt one stage at random
+                let sid = rng.gen_range(p.stages.len());
+                match rng.gen_range(3) {
+                    0 => p.stages[sid].shape = vec![7, 7, 7],
+                    1 => p.stages[sid].inputs = vec![SourceRef::Stage(sid)],
+                    _ => p.stages[sid].inputs = vec![SourceRef::Input(99)],
+                }
+            }
+            let errs = analyze_pipeline(&p)
+                .iter()
+                .filter(|d| d.severity() == Severity::Error)
+                .count();
+            let valid = p.validate().is_ok();
+            if valid != (errs == 0) {
+                return Err(format!(
+                    "validate says {valid}, analyzer found {errs} errors for {}",
+                    p.name
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -19,12 +19,12 @@
 //!   immigrants keep diversity, the default schedule seeds generation
 //!   zero so tuning never regresses the incumbent out of the gene pool.
 
+use crate::analysis::AnalyzedPipeline;
 use crate::autotune::checkpoint::{
     rng_state_from_json, rng_state_to_json, schedule_from_json, schedule_to_json,
 };
 use crate::ir::pipeline::Pipeline;
 use crate::lower::LoopNest;
-use crate::schedule::legality::check_pipeline;
 use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
 use crate::schedule::random::{random_pipeline_schedule, random_stage_schedule};
 use crate::search::{BeamConfig, CostModel};
@@ -32,6 +32,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// A resumable, generation-at-a-time schedule search.
 ///
@@ -136,6 +137,11 @@ pub struct BeamStrategy {
     finalized: bool,
     best: Option<(PipelineSchedule, f64)>,
     gen: usize,
+    /// Per-pipeline legality tables, built lazily on the first step and
+    /// reused every generation (per-candidate legality is table lookups,
+    /// no consumer reallocation). Deterministically recomputed after a
+    /// checkpoint restore, so it is never serialized.
+    analysis: Option<Arc<AnalyzedPipeline>>,
 }
 
 impl BeamStrategy {
@@ -149,6 +155,7 @@ impl BeamStrategy {
             finalized: false,
             best: None,
             gen: 0,
+            analysis: None,
         }
     }
 }
@@ -172,10 +179,12 @@ impl SearchStrategy for BeamStrategy {
             self.beam = vec![PipelineSchedule::default_for(&ranks)];
         }
         let n = p.num_stages();
+        let ap = Arc::clone(
+            self.analysis.get_or_insert_with(|| Arc::new(AnalyzedPipeline::build(p, nests))),
+        );
         let scored = if self.scheduled < n {
             // expand: schedule the next stage, output-first
             let stage_id = n - 1 - self.scheduled;
-            let consumers = p.consumers();
             let mut candidates: Vec<PipelineSchedule> = Vec::new();
             for state in &self.beam {
                 // keep-default is always a candidate
@@ -184,7 +193,7 @@ impl SearchStrategy for BeamStrategy {
                     let mut next = state.clone();
                     let mut ss: StageSchedule = random_stage_schedule(
                         &nests[stage_id],
-                        &consumers[stage_id],
+                        ap.consumers(stage_id),
                         &mut self.rng,
                     );
                     // compute_at an inlined consumer is illegal — retarget
@@ -194,6 +203,11 @@ impl SearchStrategy for BeamStrategy {
                         }
                     }
                     next.stages[stage_id] = ss;
+                    debug_assert!(
+                        ap.check_schedule(&next).is_ok(),
+                        "beam expansion produced illegal schedule: {:?}",
+                        ap.check_schedule(&next)
+                    );
                     candidates.push(next);
                 }
             }
@@ -270,6 +284,9 @@ impl SearchStrategy for BeamStrategy {
             .get("generation")
             .and_then(|v| v.as_usize())
             .context("state missing 'generation'")?;
+        // analysis tables are a pure function of (pipeline, nests) — drop
+        // any cached ones and rebuild on the next step
+        self.analysis = None;
         Ok(())
     }
 }
@@ -311,12 +328,14 @@ pub struct EvolutionStrategy {
     /// Survivors, sorted best-first by model cost.
     population: Vec<(PipelineSchedule, f64)>,
     gen: usize,
+    /// Per-pipeline legality tables (see [`BeamStrategy::analysis`]).
+    analysis: Option<Arc<AnalyzedPipeline>>,
 }
 
 impl EvolutionStrategy {
     pub fn new(cfg: EvolutionConfig) -> EvolutionStrategy {
         let rng = Rng::new(cfg.seed);
-        EvolutionStrategy { cfg, rng, population: Vec::new(), gen: 0 }
+        EvolutionStrategy { cfg, rng, population: Vec::new(), gen: 0, analysis: None }
     }
 
     /// Re-sample 1–2 stage schedules of a parent, then repair the one
@@ -325,22 +344,21 @@ impl EvolutionStrategy {
     fn mutate(
         &mut self,
         parent: &PipelineSchedule,
-        p: &Pipeline,
         nests: &[LoopNest],
-        consumers: &[Vec<usize>],
+        ap: &AnalyzedPipeline,
     ) -> PipelineSchedule {
-        let n = p.num_stages();
+        let n = ap.num_stages();
         let mut child = parent.clone();
         let n_mut = 1 + self.rng.gen_range(2.min(n));
         for _ in 0..n_mut {
             let sid = self.rng.gen_range(n);
-            child.stages[sid] = random_stage_schedule(&nests[sid], &consumers[sid], &mut self.rng);
+            child.stages[sid] = random_stage_schedule(&nests[sid], ap.consumers(sid), &mut self.rng);
         }
         repair_compute_at(&mut child);
         debug_assert!(
-            check_pipeline(p, nests, &child).is_ok(),
+            ap.check_schedule(&child).is_ok(),
             "mutation produced illegal schedule: {:?}",
-            check_pipeline(p, nests, &child)
+            ap.check_schedule(&child)
         );
         child
     }
@@ -378,7 +396,9 @@ impl SearchStrategy for EvolutionStrategy {
         if self.done() {
             return Ok(Vec::new());
         }
-        let consumers = p.consumers();
+        let ap = Arc::clone(
+            self.analysis.get_or_insert_with(|| Arc::new(AnalyzedPipeline::build(p, nests))),
+        );
         let mut candidates: Vec<PipelineSchedule> = Vec::new();
         if self.population.is_empty() {
             // generation 0: the incumbent default + a random spread
@@ -392,7 +412,7 @@ impl SearchStrategy for EvolutionStrategy {
             for _ in 0..self.cfg.offspring {
                 let parent_i = self.rng.gen_range(self.population.len());
                 let parent = self.population[parent_i].0.clone();
-                candidates.push(self.mutate(&parent, p, nests, &consumers));
+                candidates.push(self.mutate(&parent, nests, &ap));
             }
             for _ in 0..self.cfg.immigrants {
                 candidates.push(random_pipeline_schedule(p, nests, &mut self.rng));
@@ -454,6 +474,7 @@ impl SearchStrategy for EvolutionStrategy {
             .get("generation")
             .and_then(|v| v.as_usize())
             .context("state missing 'generation'")?;
+        self.analysis = None;
         Ok(())
     }
 }
@@ -474,6 +495,7 @@ pub fn make_strategy(
 mod tests {
     use super::*;
     use crate::lower::lower_pipeline;
+    use crate::schedule::legality::check_pipeline;
     use crate::search::SimCost;
     use crate::sim::{simulate, Machine};
     use crate::util::propcheck;

@@ -2,7 +2,7 @@
 
 use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
 use crate::features::normalize::FeatureStats;
-use anyhow::{ensure, Result};
+use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// One (pipeline, schedule) pair with its measured runtimes — one training
@@ -23,26 +23,19 @@ pub struct GraphSample {
 }
 
 impl GraphSample {
-    /// Structural validation: every edge references a real stage and the
-    /// feature row counts match `n_stages`. Dataset loaders run this on
-    /// every sample so malformed graphs fail at load time with a clear
-    /// error instead of corrupting batches downstream.
+    /// Structural + numeric validation, delegated to the analyzer's data
+    /// audit pass ([`crate::analysis::audit_sample`]): stage/feature-row
+    /// agreement (`D001`), edge ranges (`D002`), topological edge order
+    /// (`D008` — catches cycles, self loops, forward refs in hand-built
+    /// files), feature finiteness (`D003`), and runtime labels (`D004`).
+    /// Dataset loaders run this on every sample so malformed graphs fail
+    /// at load time with a coded diagnostic instead of corrupting batches
+    /// downstream.
     pub fn validate(&self) -> Result<()> {
-        let n = self.n_stages as usize;
-        ensure!(n > 0, "sample has zero stages");
-        ensure!(
-            self.inv.len() == n && self.dep.len() == n,
-            "sample has {n} stages but {}/{} feature rows",
-            self.inv.len(),
-            self.dep.len()
-        );
-        for &(s, d) in &self.edges {
-            ensure!(
-                (s as usize) < n && (d as usize) < n,
-                "edge ({s}, {d}) out of range for a {n}-stage graph"
-            );
+        match crate::analysis::audit_sample(self).into_iter().next() {
+            None => Ok(()),
+            Some(diag) => Err(anyhow::Error::new(diag)),
         }
-        Ok(())
     }
 
     /// ȳ — mean of the measurements (the regression target).

@@ -1,0 +1,225 @@
+//! Candidate-validation throughput benchmark — `BENCH_9.json`.
+//!
+//! Measures the analyzer's search-side pruning path: validating one
+//! candidate schedule
+//!
+//! * **per-call** — `legality::check_pipeline(&p, &nests, &sched)`, which
+//!   rebuilds the per-pipeline tables (consumer lists, spatial extents)
+//!   on every call — what a caller without precomputation pays, and what
+//!   the strategies paid before this PR, vs
+//! * **precomputed** — one [`AnalyzedPipeline::build`] up front (its cost
+//!   is *included* in the timed region), then
+//!   [`AnalyzedPipeline::check_schedule`] table lookups per candidate —
+//!   the path [`crate::autotune::BeamStrategy`] and
+//!   [`crate::autotune::EvolutionStrategy`] now use.
+//!
+//! Both paths classify an identical mixed legal/illegal schedule corpus;
+//! the run refuses to report timings unless the accept/reject verdicts
+//! match schedule-for-schedule. CI runs the `--fast` variant via
+//! `gcn-perf bench --fast --require-speedup`.
+
+use crate::analysis::AnalyzedPipeline;
+use crate::lower::lower_pipeline;
+use crate::schedule::legality::check_pipeline;
+use crate::schedule::primitives::{ComputeLoc, PipelineSchedule};
+use crate::schedule::random::random_pipeline_schedule;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::path::Path;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct AnalysisBenchConfig {
+    /// Short run (CI smoke).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl Default for AnalysisBenchConfig {
+    fn default() -> Self {
+        AnalysisBenchConfig { fast: false, seed: 5 }
+    }
+}
+
+/// The measured comparison (totals over all rounds).
+#[derive(Debug, Clone)]
+pub struct AnalysisBenchReport {
+    pub fast: bool,
+    pub network: String,
+    pub n_schedules: usize,
+    /// How many of the corpus schedules are illegal (mutated).
+    pub n_illegal: usize,
+    pub rounds: usize,
+    pub per_call_mean_ns: f64,
+    pub precomputed_mean_ns: f64,
+    pub per_call_checks_per_s: f64,
+    pub precomputed_checks_per_s: f64,
+    /// per-call wall time / precomputed wall time (> 1 = tables win).
+    pub speedup: f64,
+}
+
+impl AnalysisBenchReport {
+    /// Error unless the precomputed path beat per-call validation.
+    /// Enforced by the serial CI bench step (`bench --require-speedup`),
+    /// not by `cargo test`, so the test suite stays deterministic on
+    /// noisy shared runners.
+    pub fn require_speedup(&self) -> Result<()> {
+        ensure!(
+            self.speedup > 1.0,
+            "precomputed analysis did not beat per-call validation: {:.3}x (expected > 1.0)",
+            self.speedup
+        );
+        Ok(())
+    }
+}
+
+/// Corrupt one stage of a legal schedule into a rotating `S0xx` violation
+/// class, so the corpus exercises every rejection path.
+fn corrupt(sched: &mut PipelineSchedule, class: usize, rng: &mut Rng) {
+    let sid = rng.gen_range(sched.stages.len());
+    let s = &mut sched.stages[sid];
+    match class % 5 {
+        0 => s.vector_width = 3,
+        1 => s.unroll = 5,
+        2 => s.parallel_depth = 9,
+        3 => s.order = vec![0; s.order.len()],
+        _ => s.compute = ComputeLoc::At { consumer: sid, level: 2 },
+    }
+}
+
+/// Run the per-call vs precomputed comparison over a mixed corpus of
+/// schedules for one zoo network.
+pub fn run_analysis_bench(cfg: &AnalysisBenchConfig) -> Result<AnalysisBenchReport> {
+    let (n_schedules, rounds) = if cfg.fast { (400, 2) } else { (4000, 4) };
+    let p = crate::zoo::unet();
+    let nests = lower_pipeline(&p);
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut corpus: Vec<PipelineSchedule> = Vec::with_capacity(n_schedules);
+    let mut n_illegal = 0;
+    for i in 0..n_schedules {
+        let mut sched = random_pipeline_schedule(&p, &nests, &mut rng);
+        if i % 2 == 1 {
+            corrupt(&mut sched, i / 2, &mut rng);
+            n_illegal += 1;
+        }
+        corpus.push(sched);
+    }
+
+    // correctness first: the two paths must agree schedule-for-schedule
+    let ap = AnalyzedPipeline::build(&p, &nests);
+    let verdicts_per_call: Vec<bool> =
+        corpus.iter().map(|s| check_pipeline(&p, &nests, s).is_ok()).collect();
+    let verdicts_precomputed: Vec<bool> =
+        corpus.iter().map(|s| ap.check_schedule(s).is_ok()).collect();
+    ensure!(
+        verdicts_per_call == verdicts_precomputed,
+        "per-call and precomputed legality verdicts diverge"
+    );
+    // the corrupted half must actually be rejected, or the bench measures
+    // nothing but the accept fast path
+    ensure!(
+        verdicts_per_call.iter().filter(|ok| !**ok).count() >= n_illegal / 2,
+        "corruption failed to produce a meaningfully illegal corpus"
+    );
+
+    let mut per_call_ns = 0.0;
+    let mut precomputed_ns = 0.0;
+    let mut sink = 0usize;
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        for s in &corpus {
+            if check_pipeline(&p, &nests, s).is_ok() {
+                sink += 1;
+            }
+        }
+        per_call_ns += t0.elapsed().as_nanos() as f64;
+
+        // the precomputed side pays its one-time build inside the timing
+        let t0 = Instant::now();
+        let ap = AnalyzedPipeline::build(&p, &nests);
+        for s in &corpus {
+            if ap.check_schedule(s).is_ok() {
+                sink += 1;
+            }
+        }
+        precomputed_ns += t0.elapsed().as_nanos() as f64;
+    }
+    ensure!(sink > 0, "benchmark corpus was entirely illegal");
+
+    let per_call_mean_ns = per_call_ns / rounds as f64;
+    let precomputed_mean_ns = precomputed_ns / rounds as f64;
+    let total = n_schedules as f64;
+    Ok(AnalysisBenchReport {
+        fast: cfg.fast,
+        network: p.name.clone(),
+        n_schedules,
+        n_illegal,
+        rounds,
+        per_call_mean_ns,
+        precomputed_mean_ns,
+        per_call_checks_per_s: total / (per_call_mean_ns / 1e9),
+        precomputed_checks_per_s: total / (precomputed_mean_ns / 1e9),
+        speedup: per_call_mean_ns / precomputed_mean_ns,
+    })
+}
+
+/// Serialize a report to `BENCH_9.json`.
+pub fn write_analysis_report(report: &AnalysisBenchReport, path: &Path) -> Result<()> {
+    let j = Json::obj(vec![
+        ("bench", Json::Str("schedule validation: per-call vs precomputed analysis".into())),
+        ("fast", Json::Num(if report.fast { 1.0 } else { 0.0 })),
+        ("network", Json::Str(report.network.clone())),
+        ("n_schedules", Json::Num(report.n_schedules as f64)),
+        ("n_illegal", Json::Num(report.n_illegal as f64)),
+        ("rounds", Json::Num(report.rounds as f64)),
+        (
+            "per_call",
+            Json::obj(vec![
+                ("mean_ns", Json::Num(report.per_call_mean_ns)),
+                ("checks_per_s", Json::Num(report.per_call_checks_per_s)),
+            ]),
+        ),
+        (
+            "precomputed",
+            Json::obj(vec![
+                ("mean_ns", Json::Num(report.precomputed_mean_ns)),
+                ("checks_per_s", Json::Num(report.precomputed_checks_per_s)),
+            ]),
+        ),
+        ("speedup_per_call_over_precomputed", Json::Num(report.speedup)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_analysis_bench_runs_and_reports() {
+        // Structure + the built-in verdict-equality check only; the
+        // wall-clock bar (precomputed beats per-call) is enforced by the
+        // serial CI step `gcn-perf bench --fast --require-speedup`.
+        let report = run_analysis_bench(&AnalysisBenchConfig { fast: true, seed: 7 }).unwrap();
+        assert_eq!(report.n_schedules, 400);
+        assert!(report.n_illegal > 0);
+        assert!(report.per_call_mean_ns > 0.0 && report.precomputed_mean_ns > 0.0);
+        assert!(report.speedup.is_finite() && report.speedup > 0.0);
+        eprintln!("validation speedup (per-call/precomputed): {:.2}x", report.speedup);
+
+        let path = std::env::temp_dir().join("gcn_perf_bench9_test.json");
+        write_analysis_report(&report, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("speedup_per_call_over_precomputed"));
+        crate::util::json::Json::parse(&text).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

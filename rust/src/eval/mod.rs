@@ -15,6 +15,8 @@
 //! * [`autotune_bench`] — concurrent-fleet vs sequential autotuning
 //!   through one shared service, cross-checked bitwise
 //!   (`BENCH_7.json`).
+//! * [`analysis_bench`] — per-call vs precomputed-analysis schedule
+//!   validation throughput, verdict-checked (`BENCH_9.json`).
 
 pub mod metrics;
 pub mod ranking;
@@ -25,6 +27,7 @@ pub mod engine_bench;
 pub mod simd_bench;
 pub mod net_bench;
 pub mod autotune_bench;
+pub mod analysis_bench;
 pub(crate) mod legacy_engine;
 
 pub use metrics::{regression_metrics, RegressionMetrics};

@@ -1,5 +1,6 @@
 //! The stage DAG.
 
+use crate::analysis::diag::{Code, Diagnostic};
 use crate::ir::op::Op;
 use crate::ir::tensor::Shape;
 use std::collections::BTreeSet;
@@ -45,10 +46,57 @@ impl Pipeline {
     }
 
     /// Append a stage; operand shapes must be compatible with `op`.
-    pub fn add_stage(&mut self, name: &str, op: Op, inputs: Vec<SourceRef>) -> Option<SourceRef> {
-        let shapes: Vec<&[usize]> = inputs.iter().map(|s| self.shape_of(*s)).collect();
-        let out = op.infer_shape(&shapes)?;
+    ///
+    /// On failure the [`Diagnostic`] carries the would-be stage id, the op
+    /// kind, and the offending arity or operand shapes (`A001`/`A002`/
+    /// `A003`/`A005`), so callers can report *why* construction failed
+    /// instead of a bare `None`.
+    pub fn add_stage(
+        &mut self,
+        name: &str,
+        op: Op,
+        inputs: Vec<SourceRef>,
+    ) -> Result<SourceRef, Diagnostic> {
         let id = self.stages.len();
+        let opname = op.kind.name();
+        if inputs.len() != op.kind.graph_arity() {
+            return Err(Diagnostic::at_stage(
+                Code::ArityMismatch,
+                id,
+                opname,
+                format!("arity {} != expected {}", inputs.len(), op.kind.graph_arity()),
+            ));
+        }
+        for &inp in &inputs {
+            match inp {
+                SourceRef::Input(i) if i >= self.inputs.len() => {
+                    return Err(Diagnostic::at_stage(
+                        Code::DanglingInputRef,
+                        id,
+                        opname,
+                        format!("dangling input ref {i} (pipeline has {})", self.inputs.len()),
+                    ));
+                }
+                SourceRef::Stage(i) if i >= id => {
+                    return Err(Diagnostic::at_stage(
+                        Code::ForwardStageRef,
+                        id,
+                        opname,
+                        format!("forward/self reference to stage {i}"),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        let shapes: Vec<&[usize]> = inputs.iter().map(|s| self.shape_of(*s)).collect();
+        let Some(out) = op.infer_shape(&shapes) else {
+            return Err(Diagnostic::at_stage(
+                Code::ShapeInferenceFailed,
+                id,
+                opname,
+                format!("shape inference fails on operand shapes {shapes:?}"),
+            ));
+        };
         self.stages.push(Stage {
             id,
             name: name.to_string(),
@@ -56,7 +104,7 @@ impl Pipeline {
             inputs,
             shape: out,
         });
-        Some(SourceRef::Stage(id))
+        Ok(SourceRef::Stage(id))
     }
 
     pub fn shape_of(&self, src: SourceRef) -> &[usize] {
@@ -216,8 +264,26 @@ mod tests {
         let mut p = Pipeline::new("bad");
         let x = p.add_input(vec![2, 3]);
         let y = p.add_input(vec![4, 5]);
-        assert!(p.add_stage("a", Op::new(OpKind::Add), vec![x, y]).is_none());
+        let err = p.add_stage("a", Op::new(OpKind::Add), vec![x, y]).unwrap_err();
+        assert_eq!(err.code, Code::ShapeInferenceFailed);
         assert_eq!(p.num_stages(), 0);
+    }
+
+    #[test]
+    fn add_stage_rejects_bad_refs_with_codes() {
+        let mut p = Pipeline::new("bad");
+        let x = p.add_input(vec![2, 3]);
+        let err = p.add_stage("a", Op::new(OpKind::Add), vec![x]).unwrap_err();
+        assert_eq!(err.code, Code::ArityMismatch);
+        let err =
+            p.add_stage("b", Op::new(OpKind::Relu), vec![SourceRef::Input(7)]).unwrap_err();
+        assert_eq!(err.code, Code::DanglingInputRef);
+        let err =
+            p.add_stage("c", Op::new(OpKind::Relu), vec![SourceRef::Stage(0)]).unwrap_err();
+        assert_eq!(err.code, Code::ForwardStageRef);
+        assert_eq!(p.num_stages(), 0);
+        // the diagnostic renders with code + location
+        assert!(err.to_string().contains("A003"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,10 @@
 //! * a Halide-like compiler substrate: pipeline IR ([`ir`]), random ONNX-style
 //!   model generator ([`onnx_gen`]), op → loop-nest lowering ([`lower`]) and
 //!   scheduling primitives ([`schedule`]);
+//! * a multi-pass static analyzer ([`analysis`]): a diagnostics engine with
+//!   stable codes, pipeline/schedule/data verification passes, and the
+//!   precomputed [`analysis::AnalyzedPipeline`] legality fast path used by
+//!   the autotuner and the `gcn-perf analyze` subcommand;
 //! * a simulated 18-core Xeon benchmarking machine ([`sim`]) standing in for
 //!   the paper's hardware testbed;
 //! * the §II-C featurization ([`features`]) and dataset pipeline ([`dataset`]);
@@ -71,6 +75,7 @@ static GLOBAL_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::Count
 pub mod onnx_gen;
 pub mod lower;
 pub mod schedule;
+pub mod analysis;
 pub mod sim;
 pub mod features;
 pub mod dataset;

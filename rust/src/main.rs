@@ -15,6 +15,10 @@
 //!   ablate         §III-C conv-depth ablation (0/1/2/4 layers)
 //!   active         §VI active-learning study
 //!   transfer       §VI-A cross-machine portability study
+//!   analyze        static analyzer: pipeline structure, schedule
+//!                  legality, dependence/bounds warnings and data audits
+//!                  over zoo networks, datasets, sample files or bundles
+//!                  (exit 0 clean, 1 with findings, 2 on usage errors)
 //!   search         model-guided beam search on a zoo network (Fig 2)
 //!   autotune       fleet autotuner: tune many zoo networks concurrently
 //!                  through one shared PredictService, with checkpoints,
@@ -22,8 +26,10 @@
 //!   bench          engine benchmarks: dense-vs-sparse (BENCH_3.json),
 //!                  naive-vs-coalesced serving (BENCH_4.json), the
 //!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json), the
-//!                  fleet-vs-sequential autotuner (BENCH_7.json) and the
-//!                  scalar/SIMD/int8 inference lanes (BENCH_8.json)
+//!                  fleet-vs-sequential autotuner (BENCH_7.json), the
+//!                  scalar/SIMD/int8 inference lanes (BENCH_8.json) and
+//!                  the analyzer validation-throughput compare
+//!                  (BENCH_9.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
 //!                  requests on stdin — or, with --listen, a
 //!                  multi-client TCP server with graceful drain
@@ -101,6 +107,11 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
     ),
     ("transfer", &["bundle", "ckpt", "schedules"], &[]),
     (
+        "analyze",
+        &["network", "data", "samples", "bundle", "ckpt", "format", "schedules", "seed"],
+        &["zoo", "strict"],
+    ),
+    (
         "search",
         &[
             "network", "model", "bundle", "ckpt", "data", "beam", "candidates", "seed",
@@ -122,8 +133,8 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
     (
         "bench",
         &[
-            "out", "serve-out", "engine-out", "autotune-out", "simd-out", "seed", "bundle",
-            "ckpt", "precision",
+            "out", "serve-out", "engine-out", "autotune-out", "simd-out", "analysis-out",
+            "seed", "bundle", "ckpt", "precision",
         ],
         &["fast", "require-speedup", "engine"],
     ),
@@ -181,6 +192,7 @@ fn main() {
         "ablate" => cmd_ablate(&args),
         "active" => cmd_active(&args),
         "transfer" => cmd_transfer(&args),
+        "analyze" => cmd_analyze(&args),
         "search" => cmd_search(&args),
         "autotune" => cmd_autotune(&args),
         "bench" => cmd_bench(&args),
@@ -216,6 +228,13 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   ablate          --data ... [--epochs E]     (conv layers 0/1/2/4 sweep)
   active          --data ... [--rounds R --acquire K]  (§VI active learning)
   transfer        --bundle ...  (§VI-A cross-machine portability study)
+  analyze         [--zoo | --network NAME | --data ds.bin |
+                   --samples s.json | --bundle b] [--format text|json]
+                  [--schedules K --seed S] [--strict]
+                  (static analyzer: structure, schedule legality,
+                   dependence/bounds, data audit; exit 0 clean, 1 with
+                   findings — warnings gate only under --strict — 2 on
+                   usage errors)
   search          --network NAME [--model oracle|gcn|ffn|rnn|gbt]
                   [--bundle ... | --data ...] [--beam W --candidates C]
   autotune        [--networks a,b,c] [--strategy beam|evolution]
@@ -231,7 +250,8 @@ USAGE: gcn-perf <subcommand> [--key value ...]
                    file feeds `train --data`)
   bench           [--out BENCH_3.json] [--serve-out BENCH_4.json]
                   [--engine-out BENCH_5.json] [--autotune-out BENCH_7.json]
-                  [--simd-out BENCH_8.json] [--fast] [--engine]
+                  [--simd-out BENCH_8.json] [--analysis-out BENCH_9.json]
+                  [--fast] [--engine]
                   [--require-speedup] [--bundle ... --precision f32|int8]
                   (dense-vs-sparse + serving + engine micro-benches +
                    autotuner fleet + scalar/SIMD/int8 lanes; --engine runs
@@ -780,6 +800,154 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Pull the analyzer [`Diagnostic`] out of a loader error chain, if the
+/// failure was a coded finding (as opposed to, say, an I/O error).
+///
+/// [`Diagnostic`]: gcn_perf::analysis::Diagnostic
+fn diagnostic_in_chain(e: &anyhow::Error) -> Option<gcn_perf::analysis::Diagnostic> {
+    e.chain().find_map(|c| c.downcast_ref::<gcn_perf::analysis::Diagnostic>()).cloned()
+}
+
+/// The `analyze` subcommand: run the static analyzer over one target and
+/// render a diagnostics report. Exit policy: 0 when clean (warnings do
+/// not gate unless `--strict`), 1 when findings, 2 on usage errors.
+///
+/// Targets, in precedence order: `--network NAME` (one zoo pipeline),
+/// `--data ds.bin` (binary dataset audit), `--samples s.json` (JSON
+/// interchange audit), `--bundle b` (model-bundle tensor/stats audit),
+/// and the default `--zoo` (every zoo network). Pipeline targets verify
+/// the default schedule plus `--schedules K` random ones.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use gcn_perf::analysis::{analyze_pipeline_schedule, Report};
+    use gcn_perf::schedule::primitives::PipelineSchedule;
+    use gcn_perf::schedule::random::random_pipeline_schedule;
+    use gcn_perf::util::json::Json;
+
+    let format = args.str_or("format", "text");
+    if format != "text" && format != "json" {
+        eprintln!("error: --format must be 'text' or 'json' (got '{format}')\n\n{USAGE}");
+        std::process::exit(2);
+    }
+    let strict = args.has_flag("strict");
+    let n_random = args.usize_or("schedules", 0);
+    let seed = args.u64_or("seed", 0);
+
+    // all four analyzer passes over one pipeline: structure, default-
+    // schedule verification, dependence/bounds, plus K random schedules
+    // through the same collect-every-violation verifier
+    let analyze_network = |net: &gcn_perf::ir::pipeline::Pipeline| -> Report {
+        let mut report = Report::new(format!("zoo/{}", net.name));
+        let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+        let ap = analyze_pipeline_schedule(net, &PipelineSchedule::default_for(&ranks), &mut report);
+        if n_random > 0 {
+            let nests = gcn_perf::lower::lower_pipeline(net);
+            let mut rng = gcn_perf::util::rng::Rng::new(seed);
+            for i in 0..n_random {
+                let sched = random_pipeline_schedule(net, &nests, &mut rng);
+                for mut d in ap.verify_schedule(&sched) {
+                    d.location = Some(match d.location.take() {
+                        Some(l) => format!("random schedule {i}, {l}"),
+                        None => format!("random schedule {i}"),
+                    });
+                    report.push(d);
+                }
+            }
+            report.note(format!("{n_random} random schedules verified"));
+        }
+        report
+    };
+
+    // a loader that rejected its input did the audit already — surface
+    // its coded finding as the report instead of a bare error exit
+    let report_or_loader_finding =
+        |target: String, r: std::result::Result<Report, anyhow::Error>| -> Result<Report> {
+            match r {
+                Ok(rep) => Ok(rep),
+                Err(e) => match diagnostic_in_chain(&e) {
+                    Some(d) => {
+                        let mut rep = Report::new(target);
+                        rep.note(format!("rejected at load time: {e:#}"));
+                        rep.push(d);
+                        Ok(rep)
+                    }
+                    None => Err(e),
+                },
+            }
+        };
+
+    let mut reports: Vec<Report> = Vec::new();
+    if let Some(name) = args.str_opt("network") {
+        let net = gcn_perf::zoo::all_networks()
+            .into_iter()
+            .find(|n| n.name == name)
+            .with_context(|| format!("unknown network '{name}'"))?;
+        reports.push(analyze_network(&net));
+    } else if let Some(path) = args.str_opt("data") {
+        reports.push(report_or_loader_finding(
+            format!("dataset {path}"),
+            store::load(Path::new(path)).map(|ds| {
+                let mut rep = Report::new(format!("dataset {path}"));
+                rep.extend(gcn_perf::analysis::audit_dataset(&ds));
+                rep.note(format!("{} samples audited", ds.len()));
+                rep
+            }),
+        )?);
+    } else if let Some(path) = args.str_opt("samples") {
+        reports.push(report_or_loader_finding(
+            format!("samples {path}"),
+            std::fs::read_to_string(path)
+                .with_context(|| format!("read {path}"))
+                .and_then(|text| gcn_perf::dataset::json::samples_from_json(&text))
+                .map(|samples| {
+                    let mut rep = Report::new(format!("samples {path}"));
+                    let ds = Dataset { samples, stats: None };
+                    rep.extend(gcn_perf::analysis::audit_dataset(&ds));
+                    rep.note(format!("{} samples audited", ds.len()));
+                    rep
+                }),
+        )?);
+    } else if let Some(path) = bundle_path_opt(args) {
+        reports.push(report_or_loader_finding(
+            format!("bundle {}", path.display()),
+            gcn_perf::predictor::bundle::Bundle::load(&path).map(|b| {
+                let mut rep = Report::new(format!("bundle {}", path.display()));
+                rep.extend(gcn_perf::analysis::audit_bundle(&b));
+                rep.note(format!(
+                    "kind '{}', {} f32 + {} int8 tensors audited",
+                    b.kind,
+                    b.tensors.len(),
+                    b.qtensors.len()
+                ));
+                rep
+            }),
+        )?);
+    } else {
+        // default: the whole zoo (also what --zoo spells explicitly)
+        for net in gcn_perf::zoo::all_networks() {
+            reports.push(analyze_network(&net));
+        }
+    }
+
+    if format == "json" {
+        let j = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        println!("{j}");
+    } else {
+        for r in &reports {
+            print!("{}", r.to_text());
+        }
+    }
+    let errors: usize = reports.iter().map(|r| r.errors()).sum();
+    let warnings: usize = reports.iter().map(|r| r.warnings()).sum();
+    eprintln!(
+        "analyzed {} target(s): {errors} error(s), {warnings} warning(s)",
+        reports.len()
+    );
+    if errors > 0 || (strict && warnings > 0) {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 /// The search cost model: the oracle scores schedules directly in the
 /// simulator; every registered predictor goes through the caching
 /// [`PredictorCost`] bridge.
@@ -1083,7 +1251,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
             at_report.sequential.wall_s,
             at_report.speedup()
         );
-        earlier_reports = Some((report, serve_report, at_report));
+        // the PR-9 analyzer trajectory: per-call legality validation vs
+        // the precomputed AnalyzedPipeline tables the strategies now use,
+        // verdict-checked over a mixed legal/illegal schedule corpus
+        let an_cfg = gcn_perf::eval::analysis_bench::AnalysisBenchConfig { fast, seed };
+        let an_report = gcn_perf::eval::analysis_bench::run_analysis_bench(&an_cfg)?;
+        let an_out = PathBuf::from(args.str_or("analysis-out", "BENCH_9.json"));
+        gcn_perf::eval::analysis_bench::write_analysis_report(&an_report, &an_out)?;
+        println!(
+            "analysis report written to {} ({} schedules ({} illegal) x {} rounds: \
+             {:.2}x per-call/precomputed, {:.0} checks/s precomputed)",
+            an_out.display(),
+            an_report.n_schedules,
+            an_report.n_illegal,
+            an_report.rounds,
+            an_report.speedup,
+            an_report.precomputed_checks_per_s
+        );
+        earlier_reports = Some((report, serve_report, at_report, an_report));
     }
 
     // the PR-5 engine core: fast path / tiled kernels / parallel
@@ -1143,10 +1328,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     if args.has_flag("require-speedup") {
-        if let Some((report, serve_report, at_report)) = &earlier_reports {
+        if let Some((report, serve_report, at_report, an_report)) = &earlier_reports {
             report.require_padded_speedup()?;
             serve_report.require_speedup()?;
             at_report.require_speedup()?;
+            an_report.require_speedup()?;
         }
         engine_report.require_speedup()?;
         simd_report.require_speedup()?;

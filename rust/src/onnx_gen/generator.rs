@@ -260,7 +260,7 @@ fn build_random_node(
                 continue;
             }
             let name = format!("n{}_{}", node_idx, kind.name().to_lowercase());
-            return p.add_stage(&name, op, operands);
+            return p.add_stage(&name, op, operands).ok();
         }
     }
     None

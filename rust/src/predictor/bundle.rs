@@ -295,7 +295,14 @@ impl Bundle {
                 qtensors.push(QuantNamedTensor { name, shape, data });
             }
         }
-        Ok(Bundle { kind, stats, meta, tensors, qtensors })
+        let bundle = Bundle { kind, stats, meta, tensors, qtensors };
+        // analyzer data audit: reject NaN/Inf weights and malformed stats
+        // at load time (D005/D006) — a single poisoned tensor value would
+        // otherwise silently corrupt every downstream prediction
+        if let Some(diag) = crate::analysis::audit_bundle(&bundle).into_iter().next() {
+            return Err(anyhow::Error::new(diag));
+        }
+        Ok(bundle)
     }
 }
 
@@ -421,6 +428,21 @@ mod tests {
         assert_eq!(r.meta_usize("n_conv").unwrap(), 2);
         assert_eq!(r.tensors, b.tensors);
         assert_eq!(r.stats.unwrap().to_flat(), b.stats.unwrap().to_flat());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_non_finite_tensor_with_d006() {
+        let mut b = Bundle::new("ffn");
+        b.tensors.push(NamedTensor {
+            name: "w".into(),
+            shape: vec![2],
+            data: vec![1.0, f32::NAN],
+        });
+        let path = tmp("gcn_perf_bundle_nan.bundle");
+        b.save(&path).unwrap();
+        let err = Bundle::load(&path).unwrap_err();
+        assert!(err.to_string().contains("D006"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -2,6 +2,7 @@
 //! exposes). The random sampler and beam search only emit schedules that
 //! pass [`check_pipeline`]; the simulator asserts it in debug builds.
 
+use crate::analysis::AnalyzedPipeline;
 use crate::ir::pipeline::Pipeline;
 use crate::lower::LoopNest;
 use crate::schedule::primitives::{ComputeLoc, PipelineSchedule, StageSchedule};
@@ -96,27 +97,20 @@ pub fn check_stage(
 }
 
 /// Validate a whole pipeline schedule.
+///
+/// A thin shim over [`AnalyzedPipeline::check_schedule`] — the analyzer
+/// pass owns the rules now; this keeps the historical `Result<(), String>`
+/// surface. Accept/reject behavior is pinned equal to the pre-analyzer
+/// composition (len check + per-stage [`check_stage`]) by a property test
+/// below. Callers validating many schedules against one pipeline should
+/// build an [`AnalyzedPipeline`] once and call `check_schedule` directly —
+/// that skips the per-call consumer-table reallocation this shim pays.
 pub fn check_pipeline(
     p: &Pipeline,
     nests: &[LoopNest],
     sched: &PipelineSchedule,
 ) -> Result<(), String> {
-    if sched.stages.len() != p.num_stages() {
-        return Err(format!(
-            "schedule covers {} stages, pipeline has {}",
-            sched.stages.len(),
-            p.num_stages()
-        ));
-    }
-    let consumers = p.consumers();
-    for (i, s) in sched.stages.iter().enumerate() {
-        check_stage(&nests[i], s, &consumers[i], &sched.stages)
-            .map_err(|e| format!("stage {i} ({}): {e}", p.stages[i].op.kind.name()))?;
-    }
-    // compute_at must not form chains deeper than the consumer's own nest
-    // (we conservatively allow producer->consumer only when consumer is Root
-    // or At — checked above — and forbid At cycles, impossible by topo order).
-    Ok(())
+    AnalyzedPipeline::build(p, nests).check_schedule(sched).map_err(|d| d.to_string())
 }
 
 #[cfg(test)]
@@ -196,5 +190,83 @@ mod tests {
         check_pipeline(&p, &nests, &sched).unwrap();
         sched.stages[0].parallel_depth = 9;
         assert!(check_pipeline(&p, &nests, &sched).is_err());
+    }
+
+    /// The pre-analyzer implementation of `check_pipeline`, reconstructed
+    /// verbatim: the length check plus per-stage [`check_stage`] over the
+    /// freshly built consumer table.
+    fn legacy_check_pipeline(
+        p: &Pipeline,
+        nests: &[LoopNest],
+        sched: &PipelineSchedule,
+    ) -> Result<(), String> {
+        if sched.stages.len() != p.num_stages() {
+            return Err(format!(
+                "schedule covers {} stages, pipeline has {}",
+                sched.stages.len(),
+                p.num_stages()
+            ));
+        }
+        let consumers = p.consumers();
+        for (i, s) in sched.stages.iter().enumerate() {
+            check_stage(&nests[i], s, &consumers[i], &sched.stages)
+                .map_err(|e| format!("stage {i} ({}): {e}", p.stages[i].op.kind.name()))?;
+        }
+        Ok(())
+    }
+
+    /// Seeded mutation of one stage into one `S0xx` violation class (or a
+    /// no-op), covering every class the mutator can reach on this stage.
+    fn mutate_into_violation(sched: &mut PipelineSchedule, rng: &mut crate::util::rng::Rng) {
+        let sid = rng.gen_range(sched.stages.len());
+        let n = sched.stages.len();
+        let class = rng.gen_range(10);
+        if class == 0 {
+            sched.stages.pop(); // S001
+            return;
+        }
+        let target = rng.gen_range(n);
+        let s = &mut sched.stages[sid];
+        match class {
+            1 => s.order = vec![0; s.order.len()], // S002
+            2 => s.tile.push(0),                   // S003 (len + zero factor)
+            3 => s.vector_width = 3,               // S004
+            4 => {
+                // S005: vectorize with the (usually extent-1) batch dim inner
+                if !s.order.is_empty() {
+                    s.order.rotate_left(1);
+                }
+                s.vector_width = 8;
+            }
+            5 => s.unroll = 5,                // S006
+            6 => s.parallel_depth = 9,        // S007
+            7 => s.compute = ComputeLoc::Inline, // S008/S009 depending on stage
+            8 => s.compute = ComputeLoc::At { consumer: sid, level: 2 }, // S010 (self)
+            _ => s.compute = ComputeLoc::At { consumer: target, level: 9 }, // S010/S012
+        }
+    }
+
+    #[test]
+    fn prop_shim_matches_legacy_accept_reject() {
+        use crate::util::propcheck;
+        let cases = propcheck::default_cases().min(48);
+        propcheck::check_rng("analyzer shim == legacy legality", 0x1E6A1, cases, |rng| {
+            let cfg = crate::onnx_gen::GenConfig::default();
+            let p = crate::onnx_gen::generate_model(&cfg, rng, 0);
+            let nests = lower_pipeline(&p);
+            let mut sched = crate::schedule::random::random_pipeline_schedule(&p, &nests, rng);
+            if rng.gen_range(4) > 0 {
+                mutate_into_violation(&mut sched, rng);
+            }
+            let new = check_pipeline(&p, &nests, &sched);
+            let old = legacy_check_pipeline(&p, &nests, &sched);
+            if new.is_ok() != old.is_ok() {
+                return Err(format!(
+                    "divergence on {}: shim {new:?} vs legacy {old:?}",
+                    p.name
+                ));
+            }
+            Ok(())
+        });
     }
 }

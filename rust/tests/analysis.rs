@@ -1,0 +1,297 @@
+//! Static-analyzer integration tests: analyzer cleanliness of everything
+//! the generators and search strategies produce, loader rejection of the
+//! corrupt fixtures with stable `D0xx` codes, checkpoint-restore bitwise
+//! equivalence through the precomputed-analysis strategies, and the
+//! `gcn-perf analyze` subcommand's exit-code contract.
+
+use gcn_perf::analysis::{analyze_pipeline_schedule, AnalyzedPipeline, Report, Severity};
+use gcn_perf::lower::lower_pipeline;
+use gcn_perf::onnx_gen::{generate_model, GenConfig};
+use gcn_perf::schedule::primitives::PipelineSchedule;
+use gcn_perf::schedule::random::random_pipeline_schedule;
+use gcn_perf::util::propcheck::{check_rng, default_cases};
+use gcn_perf::util::rng::Rng;
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Every finding the full pass stack produces for `(p, sched)`.
+fn full_analysis(p: &gcn_perf::ir::pipeline::Pipeline, sched: &PipelineSchedule) -> Report {
+    let mut report = Report::new(&p.name);
+    analyze_pipeline_schedule(p, sched, &mut report);
+    report
+}
+
+#[test]
+fn zoo_default_schedules_are_analyzer_clean_strict() {
+    for net in gcn_perf::zoo::all_networks() {
+        let ranks: Vec<usize> = net.stages.iter().map(|s| s.shape.len()).collect();
+        let report = full_analysis(&net, &PipelineSchedule::default_for(&ranks));
+        assert!(report.is_clean(true), "{}: {}", net.name, report.to_text());
+    }
+}
+
+#[test]
+fn prop_random_schedules_are_analyzer_error_free() {
+    // whatever the generator emits for whatever pipeline the model
+    // generator builds must carry zero Error-severity findings (warnings
+    // like W003/W004 are legitimate fusion-hazard notes, not bugs)
+    check_rng("random_schedules_analyzer_clean", 0x9A7, default_cases() / 4, |rng| {
+        let p = generate_model(&GenConfig::default(), rng, 0);
+        let nests = lower_pipeline(&p);
+        let sched = random_pipeline_schedule(&p, &nests, rng);
+        let report = full_analysis(&p, &sched);
+        let errors: Vec<_> = report
+            .diags
+            .iter()
+            .filter(|d| d.severity() == Severity::Error)
+            .collect();
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} analyzer errors on generator output: {errors:?}", errors.len()))
+        }
+    });
+}
+
+#[test]
+fn beam_and_evolution_outputs_are_analyzer_error_free() {
+    use gcn_perf::autotune::{BeamStrategy, EvolutionConfig, EvolutionStrategy, SearchStrategy};
+    use gcn_perf::search::{BeamConfig, SimCost};
+    use gcn_perf::sim::Machine;
+
+    let net = gcn_perf::zoo::squeezenet();
+    let nests = lower_pipeline(&net);
+    let model = SimCost { machine: Machine::default() };
+
+    let mut strategies: Vec<Box<dyn SearchStrategy>> = vec![
+        Box::new(BeamStrategy::new(BeamConfig {
+            beam_width: 3,
+            candidates_per_stage: 4,
+            seed: 5,
+        })),
+        Box::new(EvolutionStrategy::new(EvolutionConfig {
+            population: 4,
+            offspring: 6,
+            immigrants: 2,
+            generations: 4,
+            seed: 5,
+        })),
+    ];
+    for strat in &mut strategies {
+        while !strat.done() {
+            strat.step(&net, &nests, &model).unwrap();
+        }
+        let (best, cost) = strat.best().expect("strategy found no schedule");
+        assert!(cost.is_finite() && cost > 0.0);
+        let report = full_analysis(&net, best);
+        assert_eq!(
+            report.errors(),
+            0,
+            "{} best schedule has analyzer errors: {}",
+            strat.name(),
+            report.to_text()
+        );
+    }
+}
+
+#[test]
+fn checkpoint_restore_stays_bitwise_with_precomputed_analysis() {
+    // the strategies rebuild their AnalyzedPipeline lazily after a
+    // restore; a resumed run must still replay bit-for-bit (schedule and
+    // cost) against the uninterrupted one
+    use gcn_perf::autotune::{BeamStrategy, EvolutionConfig, EvolutionStrategy, SearchStrategy};
+    use gcn_perf::search::{BeamConfig, SimCost};
+    use gcn_perf::sim::Machine;
+
+    let net = gcn_perf::zoo::unet();
+    let nests = lower_pipeline(&net);
+    let model = SimCost { machine: Machine::default() };
+
+    let make: Vec<fn() -> Box<dyn SearchStrategy>> = vec![
+        || {
+            Box::new(BeamStrategy::new(BeamConfig {
+                beam_width: 2,
+                candidates_per_stage: 3,
+                seed: 9,
+            }))
+        },
+        || {
+            Box::new(EvolutionStrategy::new(EvolutionConfig {
+                population: 3,
+                offspring: 4,
+                immigrants: 1,
+                generations: 5,
+                seed: 9,
+            }))
+        },
+    ];
+    for mk in make {
+        let mut uninterrupted = mk();
+        let mut a = mk();
+        a.step(&net, &nests, &model).unwrap();
+        a.step(&net, &nests, &model).unwrap();
+        let state = a.save_state();
+
+        let mut resumed = mk();
+        resumed.restore_state(&state).unwrap();
+        while !resumed.done() {
+            resumed.step(&net, &nests, &model).unwrap();
+        }
+        while !uninterrupted.done() {
+            uninterrupted.step(&net, &nests, &model).unwrap();
+        }
+        let (su, cu) = uninterrupted.best().unwrap();
+        let (sr, cr) = resumed.best().unwrap();
+        assert_eq!(su, sr, "{}: resumed schedule diverged", resumed.name());
+        assert_eq!(
+            cu.to_bits(),
+            cr.to_bits(),
+            "{}: resumed cost diverged",
+            resumed.name()
+        );
+    }
+}
+
+mod loader_rejection {
+    use super::fixture;
+    use gcn_perf::dataset::json::samples_from_json;
+
+    fn rejects_with(name: &str, code: &str) {
+        let err = samples_from_json(&fixture(name))
+            .expect_err(&format!("{name} must be rejected"));
+        let rendered = format!("{err:#}");
+        assert!(rendered.contains(code), "{name}: expected {code} in: {rendered}");
+    }
+
+    #[test]
+    fn out_of_range_edge_is_d002() {
+        rejects_with("bad_edge_range.json", "D002");
+    }
+
+    #[test]
+    fn forward_edge_is_d008() {
+        rejects_with("bad_edge_forward.json", "D008");
+    }
+
+    #[test]
+    fn cycle_is_d008() {
+        rejects_with("bad_edge_cycle.json", "D008");
+    }
+
+    #[test]
+    fn negative_runtime_is_d004() {
+        rejects_with("bad_runtime.json", "D004");
+    }
+
+    #[test]
+    fn binary_store_rejects_the_same_graphs() {
+        // the two loaders share validate(): a graph the JSON path rejects
+        // must not slip through the binary one
+        use gcn_perf::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+        use gcn_perf::dataset::sample::{Dataset, GraphSample};
+        let bad = GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 2,
+            edges: vec![(1, 0)],
+            inv: vec![[0.5; INV_DIM]; 2],
+            dep: vec![[1.0; DEP_DIM]; 2],
+            runs: [1e-3; BENCH_RUNS],
+        };
+        let ds = Dataset { samples: vec![bad], stats: None };
+        let path = std::env::temp_dir().join("gcn_perf_analysis_it_forward.bin");
+        gcn_perf::dataset::store::save(&ds, &path).unwrap();
+        let err = gcn_perf::dataset::store::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("D008"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn shim_and_analyzed_pipeline_agree_on_the_fixture_networks() {
+    // accept/reject parity of the legacy entry point and the precomputed
+    // tables on real zoo networks (random legal + hand-broken schedules)
+    let mut rng = Rng::new(77);
+    for net in [gcn_perf::zoo::unet(), gcn_perf::zoo::squeezenet()] {
+        let nests = lower_pipeline(&net);
+        let ap = AnalyzedPipeline::build(&net, &nests);
+        for i in 0..24 {
+            let mut sched = random_pipeline_schedule(&net, &nests, &mut rng);
+            if i % 3 == 0 {
+                let sid = rng.gen_range(sched.stages.len());
+                sched.stages[sid].vector_width = 7;
+            }
+            let legacy = gcn_perf::schedule::legality::check_pipeline(&net, &nests, &sched);
+            assert_eq!(
+                legacy.is_ok(),
+                ap.check_schedule(&sched).is_ok(),
+                "verdict divergence on {} schedule {i}",
+                net.name
+            );
+            // the collect-all verifier must agree with the fast path too
+            assert_eq!(legacy.is_ok(), ap.verify_schedule(&sched).is_empty());
+        }
+    }
+}
+
+/// Process-level tests of the `analyze` subcommand's exit-code contract:
+/// 0 clean, 1 with findings, 2 on usage errors.
+mod cli {
+    use std::process::Command;
+
+    fn bin() -> Command {
+        Command::new(env!("CARGO_BIN_EXE_gcn-perf"))
+    }
+
+    fn fixture_path(name: &str) -> String {
+        format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn analyze_zoo_is_clean_and_exits_0() {
+        let out = bin().args(["analyze", "--zoo", "--schedules", "3"]).output().unwrap();
+        assert_eq!(out.status.code(), Some(0), "{out:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("0 error(s)"), "stdout: {text}");
+    }
+
+    #[test]
+    fn analyze_one_network_emits_parseable_json() {
+        let out = bin()
+            .args(["analyze", "--network", "unet", "--format", "json"])
+            .output()
+            .unwrap();
+        assert_eq!(out.status.code(), Some(0), "{out:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        let j = gcn_perf::util::json::Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("errors").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn analyze_corrupt_samples_exits_1_with_the_code() {
+        let out = bin()
+            .args(["analyze", "--samples", &fixture_path("bad_runtime.json")])
+            .output()
+            .unwrap();
+        assert_eq!(out.status.code(), Some(1), "{out:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("D004"), "stdout: {text}");
+    }
+
+    #[test]
+    fn analyze_bad_format_exits_2() {
+        let out = bin().args(["analyze", "--format", "yaml"]).output().unwrap();
+        assert_eq!(out.status.code(), Some(2), "{out:?}");
+    }
+
+    #[test]
+    fn analyze_unknown_flag_exits_2() {
+        let out = bin().args(["analyze", "--no-such-flag"]).output().unwrap();
+        assert_eq!(out.status.code(), Some(2), "{out:?}");
+    }
+}

@@ -32,6 +32,18 @@ cargo check --features pjrt --all-targets --quiet
 echo "==> cargo test -q --features simd (SIMD lane: scalar parity + envelopes)"
 cargo test -q --features simd
 
+echo "==> analyze gate (zoo must be clean under --strict; corrupt fixtures must exit 1 with a D0xx code)"
+cargo run --release --quiet -- analyze --zoo --strict --schedules 10
+set +e
+ANALYZE_OUT="$(cargo run --release --quiet -- analyze --samples tests/fixtures/bad_runtime.json 2>&1)"
+ANALYZE_RC=$?
+set -e
+if [ "$ANALYZE_RC" -ne 1 ]; then
+    echo "expected exit 1 analyzing a corrupt fixture, got $ANALYZE_RC" >&2
+    exit 1
+fi
+echo "$ANALYZE_OUT" | grep -q "D0" || { echo "analyzer output lacks a D0xx code: $ANALYZE_OUT" >&2; exit 1; }
+
 echo "==> serve smoke (tiny bundle, JSON requests + STATS through the stdin daemon)"
 SMOKE="$(mktemp -d)"
 trap 'rm -rf "$SMOKE"' EXIT
