@@ -39,6 +39,18 @@ use crate::ir::pipeline::Pipeline;
 use crate::lower::lower_pipeline;
 use crate::schedule::primitives::PipelineSchedule;
 
+/// Pull the stable code (`"D002"`, ...) of an analyzer [`Diagnostic`]
+/// out of an `anyhow` error chain, if the failure was a coded finding
+/// (as opposed to, say, a bare I/O error). Loaders attach the
+/// [`Diagnostic`] itself as a chain link, so callers that only need the
+/// code — tests, the streaming shard reader's fixtures — get it without
+/// string-matching rendered messages.
+pub fn diag_code_in_chain(e: &anyhow::Error) -> Option<String> {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<Diagnostic>())
+        .map(|d| d.code.as_str().to_string())
+}
+
 /// Run every applicable pass over one pipeline + schedule and collect the
 /// findings into `report`: structure, schedule verification, dependence
 /// warnings, and a footprint note.

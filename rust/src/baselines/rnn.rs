@@ -379,8 +379,8 @@ mod tests {
         GraphSample {
             pipeline_id: 0,
             schedule_id: 0,
-            n_stages: ns as u16,
-            edges: (0..ns - 1).map(|i| (i as u16, i as u16 + 1)).collect(),
+            n_stages: ns as u32,
+            edges: (0..ns - 1).map(|i| (i as u32, i as u32 + 1)).collect(),
             inv: vals.iter().map(|&v| [v; INV_DIM]).collect(),
             dep: vals.iter().map(|&v| [v * 0.5; DEP_DIM]).collect(),
             runs: [rt; BENCH_RUNS],

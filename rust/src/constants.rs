@@ -44,6 +44,31 @@ pub const BATCH: usize = 32;
 /// Benchmark repetitions per schedule (paper: N = 10).
 pub const BENCH_RUNS: usize = 10;
 
+/// Default per-batch node budget for training and prediction batching.
+/// Graphs accumulate into one packed batch until either [`BATCH`] graphs
+/// or this many packed nodes are reached, whichever comes first — so a
+/// batch of zoo-scale graphs behaves exactly as before (32 × ≤59 stages
+/// ≈ 1.9k nodes, far under budget) while TpuGraphs-scale graphs cannot
+/// blow the workspace. A single graph above the budget trains through
+/// the partition-sampled path (`model::partition`).
+pub const DEFAULT_NODE_BUDGET: usize = 8192;
+
+/// Node granularity of graph partitions — identical to the backward
+/// pass's fixed `BACKWARD_BLOCK_NODES` blocking so a partition boundary
+/// is always a backward-block boundary.
+pub const PARTITION_BLOCK_NODES: usize = 512;
+
+/// The effective node budget: [`DEFAULT_NODE_BUDGET`] unless the
+/// `GCN_PERF_NODE_BUDGET` environment variable overrides it (clamped to
+/// at least one partition block).
+pub fn node_budget() -> usize {
+    std::env::var("GCN_PERF_NODE_BUDGET")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|v| v.max(PARTITION_BLOCK_NODES))
+        .unwrap_or(DEFAULT_NODE_BUDGET)
+}
+
 /// Number of hand-crafted terms in the Halide FFN baseline head (Fig 3).
 pub const FFN_TERMS: usize = 27;
 
@@ -63,5 +88,17 @@ mod tests {
         assert_eq!(NODE_DIM, EMB_INV + EMB_DEP);
         assert_eq!(READOUT, NODE_DIM * (N_CONV + 1));
         assert!(MAX_NODES >= 5, "generator depth filter needs >=5 stages");
+    }
+
+    #[test]
+    fn node_budget_defaults_and_clamps() {
+        // the default keeps every zoo-scale batch unsplit
+        assert!(DEFAULT_NODE_BUDGET >= BATCH * MAX_NODES);
+        assert_eq!(DEFAULT_NODE_BUDGET % PARTITION_BLOCK_NODES, 0);
+        // without the env override the default is in force (the test
+        // harness never sets GCN_PERF_NODE_BUDGET)
+        if std::env::var("GCN_PERF_NODE_BUDGET").is_err() {
+            assert_eq!(node_budget(), DEFAULT_NODE_BUDGET);
+        }
     }
 }

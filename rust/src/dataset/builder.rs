@@ -54,14 +54,14 @@ pub fn featurize_schedule(
     for s in &p.stages {
         for &inp in &s.inputs {
             if let SourceRef::Stage(src) = inp {
-                edges.push((src as u16, s.id as u16));
+                edges.push((src as u32, s.id as u32));
             }
         }
     }
     GraphSample {
         pipeline_id,
         schedule_id,
-        n_stages: p.num_stages() as u16,
+        n_stages: p.num_stages() as u32,
         edges,
         inv: feats.iter().map(|f| f.invariant).collect(),
         dep: feats.iter().map(|f| f.dependent).collect(),

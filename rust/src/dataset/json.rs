@@ -98,10 +98,10 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
         // no model-side stage cap: the packed sparse layout handles any
         // graph size (only the pjrt dense artifacts are limited, and they
         // reject oversize batches themselves). The record format stores
-        // stage ids as u16, so that is the one remaining hard bound.
+        // stage ids as u32, so that is the one remaining hard bound.
         let n_stages = inv.len();
-        if n_stages > u16::MAX as usize {
-            bail!("sample {idx}: {n_stages} stages exceeds the u16 stage-id range");
+        if n_stages > u32::MAX as usize {
+            bail!("sample {idx}: {n_stages} stages exceeds the u32 stage-id range");
         }
         let mut edges = Vec::new();
         if let Some(es) = j.get("edges").and_then(|v| v.as_arr()) {
@@ -113,10 +113,10 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
                     bail!("sample {idx}: edges[{ei}] must be [src, dst]");
                 }
                 // cast-safety only — range-vs-n_stages is validate()'s job
-                let a = u16::try_from(pair[0].as_usize().context("edge src")?)
-                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] src exceeds u16"))?;
-                let b = u16::try_from(pair[1].as_usize().context("edge dst")?)
-                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] dst exceeds u16"))?;
+                let a = u32::try_from(pair[0].as_usize().context("edge src")?)
+                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] src exceeds u32"))?;
+                let b = u32::try_from(pair[1].as_usize().context("edge dst")?)
+                    .map_err(|_| anyhow::anyhow!("sample {idx}: edges[{ei}] dst exceeds u32"))?;
                 edges.push((a, b));
             }
         }
@@ -132,7 +132,7 @@ pub fn samples_from_json(text: &str) -> Result<Vec<GraphSample>> {
         let sample = GraphSample {
             pipeline_id: num_or("pipeline_id", 0.0) as u32,
             schedule_id: num_or("schedule_id", 0.0) as u32,
-            n_stages: n_stages as u16,
+            n_stages: n_stages as u32,
             edges,
             inv,
             dep,
@@ -181,7 +181,7 @@ mod tests {
             pipeline_id: 0,
             schedule_id: 0,
             n_stages: 60,
-            edges: (0..59).map(|i| (i as u16, (i + 1) as u16)).collect(),
+            edges: (0..59).map(|i| (i as u32, (i + 1) as u32)).collect(),
             inv: vec![[0.25; INV_DIM]; 60],
             dep: vec![[0.75; DEP_DIM]; 60],
             runs: [1e-3; BENCH_RUNS],

@@ -1,10 +1,20 @@
 //! Dataset pipeline (Fig 4): random ONNX model → Halide-like pipeline →
 //! schedules → simulated benchmarking → stored samples.
+//!
+//! Two storage forms share one record encoding: [`store`] is the
+//! monolithic single-file format (load-everything), [`shard`] the
+//! chunked out-of-core format whose samples stream through [`stream`]'s
+//! [`SampleSource`]/[`SampleStream`] with peak memory bounded by the
+//! node budget instead of the corpus size.
 
 pub mod sample;
 pub mod builder;
 pub mod json;
+pub mod shard;
 pub mod store;
+pub mod stream;
 
 pub use builder::{build_dataset, DataGenConfig};
 pub use sample::{Dataset, GraphSample};
+pub use shard::{ShardWriter, ShardedDataset};
+pub use stream::{split_source, MemorySource, SampleSource, SampleStream, SourceView};

@@ -11,9 +11,12 @@ use std::collections::BTreeMap;
 pub struct GraphSample {
     pub pipeline_id: u32,
     pub schedule_id: u32,
-    pub n_stages: u16,
+    /// Stage count. `u32` so TpuGraphs-scale graphs (100k+ stages) are
+    /// representable; the on-disk v1 format capped this at `u16`, and
+    /// [`crate::dataset::store`] still reads those files.
+    pub n_stages: u32,
     /// Directed producer→consumer stage edges.
-    pub edges: Vec<(u16, u16)>,
+    pub edges: Vec<(u32, u32)>,
     /// Raw (unnormalized) schedule-invariant features per stage.
     pub inv: Vec<[f32; INV_DIM]>,
     /// Raw schedule-dependent (+compound) features per stage.
@@ -81,16 +84,13 @@ impl Dataset {
     /// the paper evaluates on unseen schedules; splitting by pipeline is
     /// the stricter, leak-free variant).
     pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
-        let mut ids: Vec<u32> = {
+        let ids: Vec<u32> = {
             let mut v: Vec<u32> = self.samples.iter().map(|s| s.pipeline_id).collect();
             v.sort_unstable();
             v.dedup();
             v
         };
-        let mut rng = crate::util::rng::Rng::new(seed);
-        rng.shuffle(&mut ids);
-        let n_test = ((ids.len() as f64 * test_frac).round() as usize).clamp(1, ids.len() - 1);
-        let test_ids: std::collections::BTreeSet<u32> = ids[..n_test].iter().copied().collect();
+        let test_ids = split_pipeline_ids(&ids, test_frac, seed);
         let (mut train, mut test) = (Dataset::default(), Dataset::default());
         for s in &self.samples {
             if test_ids.contains(&s.pipeline_id) {
@@ -133,6 +133,24 @@ impl Dataset {
         v.dedup();
         v.len()
     }
+}
+
+/// Choose the test-side pipeline ids for a pipeline-granular split.
+///
+/// `ids` must be the sorted, deduplicated pipeline-id universe. This is
+/// the exact id-selection step [`Dataset::split`] performs; the streaming
+/// loaders ([`crate::dataset::stream`]) call it directly so an out-of-core
+/// split lands on bitwise the same pipelines as the in-RAM one.
+pub fn split_pipeline_ids(
+    ids: &[u32],
+    test_frac: f64,
+    seed: u64,
+) -> std::collections::BTreeSet<u32> {
+    let mut ids = ids.to_vec();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    rng.shuffle(&mut ids);
+    let n_test = ((ids.len() as f64 * test_frac).round() as usize).clamp(1, ids.len() - 1);
+    ids[..n_test].iter().copied().collect()
 }
 
 #[cfg(test)]

@@ -1,0 +1,416 @@
+//! Chunked on-disk dataset: binary shards plus a lightweight index — the
+//! out-of-core counterpart of [`crate::dataset::store`].
+//!
+//! A sharded corpus is a directory:
+//!
+//! ```text
+//! corpus/
+//!   index.bin          magic "GCNPERFX", per-sample locator records
+//!   shard-00000.bin    magic "GCNPERFS", version-2 sample records
+//!   shard-00001.bin    ...
+//! ```
+//!
+//! Each shard holds consecutive sample records in exactly the encoding
+//! [`crate::dataset::store`] writes (shared `write_sample`/`read_sample`
+//! helpers), rolled over at [`DEFAULT_SHARD_BYTES`]. The index stores,
+//! per sample, its shard number, byte offset, and the cheap metadata the
+//! batch planners need (`pipeline_id`, `schedule_id`, `n_stages`) — so
+//! split/shuffle/batch decisions never touch the shards, and peak RSS of
+//! a training run is bounded by the node budget, not the corpus size.
+//!
+//! [`ShardWriter`] streams samples out (validating each — a malformed
+//! sample is rejected at *write* time); [`ShardedDataset`] is the
+//! random-access reader behind [`crate::dataset::stream::SampleSource`].
+//! Reads re-validate, so a shard corrupted on disk surfaces the same
+//! `D0xx` diagnostics as the monolithic loader.
+
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+use crate::dataset::sample::GraphSample;
+use crate::dataset::store::{read_sample, write_sample, Reader, Writer, VERSION};
+use crate::features::normalize::FeatureStats;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const INDEX_MAGIC: &[u8; 8] = b"GCNPERFX";
+const SHARD_MAGIC: &[u8; 8] = b"GCNPERFS";
+const INDEX_VERSION: u32 = 1;
+
+/// Shard rollover threshold. Small enough that a corpus streams in
+/// pieces, big enough that a 1k-stage sample (~0.5 MB) never dominates
+/// its shard.
+pub const DEFAULT_SHARD_BYTES: u64 = 64 * 1024 * 1024;
+
+/// Per-sample locator + the metadata batch planning needs.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexEntry {
+    pub shard: u32,
+    /// Byte offset of the record inside its shard file.
+    pub offset: u64,
+    pub pipeline_id: u32,
+    pub schedule_id: u32,
+    pub n_stages: u32,
+}
+
+fn shard_path(dir: &Path, shard: u32) -> PathBuf {
+    dir.join(format!("shard-{shard:05}.bin"))
+}
+
+/// Exact encoded size of one version-2 sample record, so the writer can
+/// index offsets without flushing or re-measuring the file.
+fn record_bytes(s: &GraphSample) -> u64 {
+    let ns = s.n_stages as u64;
+    16 + 8 * s.edges.len() as u64 + 4 * ns * (INV_DIM + DEP_DIM) as u64 + 4 * BENCH_RUNS as u64
+}
+
+/// Streaming corpus writer: push samples one at a time, never holding
+/// more than the current sample in memory.
+pub struct ShardWriter {
+    dir: PathBuf,
+    max_shard_bytes: u64,
+    cur: Option<Writer<BufWriter<std::fs::File>>>,
+    cur_shard: u32,
+    cur_offset: u64,
+    entries: Vec<IndexEntry>,
+}
+
+impl ShardWriter {
+    /// Create (or truncate into) a corpus directory.
+    pub fn create(dir: &Path) -> Result<ShardWriter> {
+        ShardWriter::with_shard_bytes(dir, DEFAULT_SHARD_BYTES)
+    }
+
+    /// [`ShardWriter::create`] with an explicit rollover threshold
+    /// (tests use tiny shards to exercise multi-shard corpora cheaply).
+    pub fn with_shard_bytes(dir: &Path, max_shard_bytes: u64) -> Result<ShardWriter> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create corpus dir {dir:?}"))?;
+        Ok(ShardWriter {
+            dir: dir.to_path_buf(),
+            max_shard_bytes: max_shard_bytes.max(1),
+            cur: None,
+            cur_shard: 0,
+            cur_offset: 0,
+            entries: Vec::new(),
+        })
+    }
+
+    fn open_shard(&mut self) -> Result<()> {
+        let path = shard_path(&self.dir, self.cur_shard);
+        let f = std::fs::File::create(&path).with_context(|| format!("create {path:?}"))?;
+        let mut w = Writer { w: BufWriter::new(f) };
+        w.w.write_all(SHARD_MAGIC)?;
+        w.u32(VERSION)?;
+        self.cur_offset = 12;
+        self.cur = Some(w);
+        Ok(())
+    }
+
+    /// Validate + append one sample, rolling to a new shard when the
+    /// current one is full.
+    pub fn push(&mut self, s: &GraphSample) -> Result<()> {
+        s.validate().with_context(|| {
+            format!("sample {} rejected by the shard writer", self.entries.len())
+        })?;
+        if self.cur.is_none() {
+            self.open_shard()?;
+        } else if self.cur_offset >= self.max_shard_bytes {
+            let mut w = self.cur.take().context("shard writer state")?;
+            w.w.flush()?;
+            self.cur_shard += 1;
+            self.open_shard()?;
+        }
+        self.entries.push(IndexEntry {
+            shard: self.cur_shard,
+            offset: self.cur_offset,
+            pipeline_id: s.pipeline_id,
+            schedule_id: s.schedule_id,
+            n_stages: s.n_stages,
+        });
+        let w = self.cur.as_mut().context("shard writer state")?;
+        write_sample(w, s)?;
+        self.cur_offset += record_bytes(s);
+        Ok(())
+    }
+
+    /// Samples pushed so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Flush the open shard and write `index.bin`. `stats` (if given)
+    /// ride in the index the way [`crate::dataset::store::save`] embeds
+    /// them in the monolithic file.
+    pub fn finish(mut self, stats: Option<&FeatureStats>) -> Result<()> {
+        if let Some(mut w) = self.cur.take() {
+            w.w.flush()?;
+        }
+        let path = self.dir.join("index.bin");
+        let f = std::fs::File::create(&path).with_context(|| format!("create {path:?}"))?;
+        let mut w = Writer { w: BufWriter::new(f) };
+        w.w.write_all(INDEX_MAGIC)?;
+        w.u32(INDEX_VERSION)?;
+        w.u32(self.cur_shard + u32::from(!self.entries.is_empty()))?;
+        w.u32(self.entries.len() as u32)?;
+        w.u8(stats.is_some() as u8)?;
+        if let Some(stats) = stats {
+            w.f64s(&stats.to_flat())?;
+        }
+        for e in &self.entries {
+            w.u32(e.shard)?;
+            w.u64(e.offset)?;
+            w.u32(e.pipeline_id)?;
+            w.u32(e.schedule_id)?;
+            w.u32(e.n_stages)?;
+        }
+        w.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Random-access reader over a sharded corpus. Holds the index (a few
+/// dozen bytes per sample) plus at most one open shard handle — never a
+/// decoded sample, so memory stays flat no matter the corpus size.
+pub struct ShardedDataset {
+    dir: PathBuf,
+    entries: Vec<IndexEntry>,
+    stats: Option<FeatureStats>,
+    /// One cached open shard (number, handle): epoch iteration visits
+    /// samples in storage order, so consecutive fetches overwhelmingly
+    /// hit the same shard.
+    open: Mutex<Option<(u32, BufReader<std::fs::File>)>>,
+}
+
+impl ShardedDataset {
+    /// Open a corpus directory written by [`ShardWriter`].
+    pub fn open(dir: &Path) -> Result<ShardedDataset> {
+        let path = dir.join("index.bin");
+        let f = std::fs::File::open(&path).with_context(|| format!("open {path:?}"))?;
+        let mut r = Reader { r: BufReader::new(f) };
+        let mut magic = [0u8; 8];
+        r.r.read_exact(&mut magic)?;
+        if &magic != INDEX_MAGIC {
+            bail!("not a gcn-perf corpus index: bad magic {magic:?}");
+        }
+        let version = r.u32()?;
+        if version != INDEX_VERSION {
+            bail!("unsupported corpus index version {version}");
+        }
+        let n_shards = r.u32()?;
+        let n = r.u32()? as usize;
+        let has_stats = r.u8()? != 0;
+        let stats = if has_stats {
+            Some(FeatureStats::from_flat(&r.f64s(2 * (INV_DIM + DEP_DIM))?))
+        } else {
+            None
+        };
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let e = IndexEntry {
+                shard: r.u32()?,
+                offset: r.u64()?,
+                pipeline_id: r.u32()?,
+                schedule_id: r.u32()?,
+                n_stages: r.u32()?,
+            };
+            if e.shard >= n_shards {
+                bail!("index entry references shard {} of {n_shards}", e.shard);
+            }
+            entries.push(e);
+        }
+        Ok(ShardedDataset { dir: dir.to_path_buf(), entries, stats, open: Mutex::new(None) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Corpus-level feature stats, if the writer embedded them.
+    pub fn stats(&self) -> Option<&FeatureStats> {
+        self.stats.as_ref()
+    }
+
+    pub fn entry(&self, i: usize) -> &IndexEntry {
+        &self.entries[i]
+    }
+
+    /// Total packed nodes across the corpus (index metadata only).
+    pub fn total_nodes(&self) -> u64 {
+        self.entries.iter().map(|e| e.n_stages as u64).sum()
+    }
+
+    /// Sorted, deduplicated pipeline ids (index metadata only).
+    pub fn pipeline_ids(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.entries.iter().map(|e| e.pipeline_id).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Read + validate sample `i` from its shard (buffered seek-read).
+    pub fn fetch(&self, i: usize) -> Result<GraphSample> {
+        let e = *self.entries.get(i).with_context(|| format!("sample index {i} out of range"))?;
+        let mut guard = self.open.lock().unwrap_or_else(|p| p.into_inner());
+        let needs_open = !matches!(&*guard, Some((s, _)) if *s == e.shard);
+        if needs_open {
+            let path = shard_path(&self.dir, e.shard);
+            let f = std::fs::File::open(&path).with_context(|| format!("open {path:?}"))?;
+            let mut br = BufReader::new(f);
+            let mut magic = [0u8; 8];
+            br.read_exact(&mut magic)?;
+            if &magic != SHARD_MAGIC {
+                bail!("shard {path:?} has bad magic {magic:?}");
+            }
+            let mut vb = [0u8; 4];
+            br.read_exact(&mut vb)?;
+            let version = u32::from_le_bytes(vb);
+            if version != VERSION {
+                bail!("shard {path:?} has unsupported record version {version}");
+            }
+            *guard = Some((e.shard, br));
+        }
+        let (_, br) = guard.as_mut().context("shard handle")?;
+        br.seek(SeekFrom::Start(e.offset))?;
+        let sample = {
+            let mut r = Reader { r: br };
+            read_sample(&mut r, VERSION)
+        }
+        .with_context(|| format!("sample {i} of shard {} is unreadable", e.shard))?;
+        drop(guard);
+        // the same coded D0xx audit the monolithic loader runs — a shard
+        // corrupted on disk fails here, not deep inside a train step
+        sample
+            .validate()
+            .with_context(|| format!("sample {i} of shard {} is malformed", e.shard))?;
+        if sample.pipeline_id != e.pipeline_id
+            || sample.schedule_id != e.schedule_id
+            || sample.n_stages != e.n_stages
+        {
+            bail!("sample {i} disagrees with its index entry (corrupt shard or stale index)");
+        }
+        Ok(sample)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    fn corpus_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gcn_perf_shard_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn multi_shard_roundtrip_preserves_samples() {
+        let ds = build_dataset(&DataGenConfig {
+            n_pipelines: 4,
+            schedules_per_pipeline: 4,
+            seed: 11,
+            ..Default::default()
+        });
+        let dir = corpus_dir("roundtrip");
+        // tiny rollover so even this small corpus spans several shards
+        let mut w = ShardWriter::with_shard_bytes(&dir, 64 * 1024).unwrap();
+        for s in &ds.samples {
+            w.push(s).unwrap();
+        }
+        w.finish(ds.stats.as_ref()).unwrap();
+        let n_shards = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("shard-")
+            })
+            .count();
+        assert!(n_shards > 1, "rollover produced only {n_shards} shard(s)");
+
+        let sd = ShardedDataset::open(&dir).unwrap();
+        assert_eq!(sd.len(), ds.samples.len());
+        assert_eq!(
+            sd.stats().unwrap().to_flat(),
+            ds.stats.as_ref().unwrap().to_flat()
+        );
+        // storage order and random access both reproduce the samples
+        for (i, want) in ds.samples.iter().enumerate() {
+            let got = sd.fetch(i).unwrap();
+            assert_eq!(got.pipeline_id, want.pipeline_id);
+            assert_eq!(got.schedule_id, want.schedule_id);
+            assert_eq!(got.edges, want.edges);
+            assert_eq!(got.inv, want.inv);
+            assert_eq!(got.dep, want.dep);
+            assert_eq!(got.runs, want.runs);
+        }
+        let last = sd.fetch(sd.len() - 1).unwrap();
+        let first = sd.fetch(0).unwrap();
+        assert_eq!(first.pipeline_id, ds.samples[0].pipeline_id);
+        assert_eq!(last.schedule_id, ds.samples.last().unwrap().schedule_id);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_rejects_malformed_samples() {
+        let dir = corpus_dir("reject");
+        let mut w = ShardWriter::create(&dir).unwrap();
+        let bad = GraphSample {
+            pipeline_id: 0,
+            schedule_id: 0,
+            n_stages: 2,
+            edges: vec![(0, 5)],
+            inv: vec![[0.0; INV_DIM]; 2],
+            dep: vec![[0.0; DEP_DIM]; 2],
+            runs: [1e-3; BENCH_RUNS],
+        };
+        let err = w.push(&bad).unwrap_err();
+        assert!(
+            crate::analysis::diag_code_in_chain(&err).is_some(),
+            "expected a D0xx diagnostic in: {err:#}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_is_rejected_with_a_coded_diagnostic() {
+        // write a valid single-sample corpus, then flip the sample's edge
+        // bytes so it references a stage that does not exist — the reader
+        // must reject it through the same D002 audit path as store::load
+        let dir = corpus_dir("corrupt");
+        let good = crate::testfix::chain_sample(3, 1e-3);
+        let mut w = ShardWriter::create(&dir).unwrap();
+        w.push(&good).unwrap();
+        w.finish(None).unwrap();
+
+        let shard = shard_path(&dir, 0);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        // record layout after the 12-byte shard header: pid u32, sid u32,
+        // n_stages u32, n_edges u32, then edge pairs — corrupt the first
+        // edge's dst (bytes 12+16+4..12+16+8)
+        let dst_at = 12 + 16 + 4;
+        bytes[dst_at..dst_at + 4].copy_from_slice(&900u32.to_le_bytes());
+        std::fs::write(&shard, bytes).unwrap();
+
+        let sd = ShardedDataset::open(&dir).unwrap();
+        let err = sd.fetch(0).unwrap_err();
+        let code = crate::analysis::diag_code_in_chain(&err);
+        assert_eq!(code.as_deref(), Some("D002"), "got: {err:#}");
+        assert!(format!("{err:#}").contains("malformed"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_index_errors() {
+        let dir = corpus_dir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ShardedDataset::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

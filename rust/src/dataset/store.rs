@@ -1,11 +1,17 @@
 //! Binary dataset persistence (little-endian, versioned magic header).
 //!
-//! Layout:
+//! Layout (version 2):
 //!   magic "GCNPERFD" + u32 version + u32 n_samples + u8 has_stats
 //!   [stats: 2*(INV_DIM+DEP_DIM) f64]           (if has_stats)
 //!   per sample:
-//!     u32 pipeline_id, u32 schedule_id, u16 n_stages, u32 n_edges
-//!     edges (u16, u16)*, inv f32*, dep f32*, runs f32[BENCH_RUNS]
+//!     u32 pipeline_id, u32 schedule_id, u32 n_stages, u32 n_edges
+//!     edges (u32, u32)*, inv f32*, dep f32*, runs f32[BENCH_RUNS]
+//!
+//! Version 1 (the pre-large-graph format) stored `n_stages` and the edge
+//! endpoints as `u16`; [`load`] still reads those files. [`save`] always
+//! writes version 2. The per-sample encode/decode is shared with the
+//! chunked shard format in [`crate::dataset::shard`], so one sample has
+//! exactly one binary encoding regardless of which container holds it.
 
 use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
 use crate::dataset::sample::{Dataset, GraphSample};
@@ -15,32 +21,35 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GCNPERFD";
-const VERSION: u32 = 1;
+/// Current write version: u32 stage ids (TpuGraphs-scale graphs).
+pub(crate) const VERSION: u32 = 2;
+/// The legacy u16-stage-id version, still accepted by [`load`].
+pub(crate) const VERSION_U16: u32 = 1;
 
-struct Writer<W: Write> {
-    w: W,
+pub(crate) struct Writer<W: Write> {
+    pub(crate) w: W,
 }
 
 impl<W: Write> Writer<W> {
-    fn u32(&mut self, v: u32) -> Result<()> {
+    pub(crate) fn u32(&mut self, v: u32) -> Result<()> {
         self.w.write_all(&v.to_le_bytes())?;
         Ok(())
     }
-    fn u16(&mut self, v: u16) -> Result<()> {
+    pub(crate) fn u64(&mut self, v: u64) -> Result<()> {
         self.w.write_all(&v.to_le_bytes())?;
         Ok(())
     }
-    fn u8(&mut self, v: u8) -> Result<()> {
+    pub(crate) fn u8(&mut self, v: u8) -> Result<()> {
         self.w.write_all(&[v])?;
         Ok(())
     }
-    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+    pub(crate) fn f32s(&mut self, vs: &[f32]) -> Result<()> {
         for v in vs {
             self.w.write_all(&v.to_le_bytes())?;
         }
         Ok(())
     }
-    fn f64s(&mut self, vs: &[f64]) -> Result<()> {
+    pub(crate) fn f64s(&mut self, vs: &[f64]) -> Result<()> {
         for v in vs {
             self.w.write_all(&v.to_le_bytes())?;
         }
@@ -48,27 +57,32 @@ impl<W: Write> Writer<W> {
     }
 }
 
-struct Reader<R: Read> {
-    r: R,
+pub(crate) struct Reader<R: Read> {
+    pub(crate) r: R,
 }
 
 impl<R: Read> Reader<R> {
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
         self.r.read_exact(&mut b)?;
         Ok(u32::from_le_bytes(b))
+    }
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
     }
     fn u16(&mut self) -> Result<u16> {
         let mut b = [0u8; 2];
         self.r.read_exact(&mut b)?;
         Ok(u16::from_le_bytes(b))
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         let mut b = [0u8; 1];
         self.r.read_exact(&mut b)?;
         Ok(b[0])
     }
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let mut buf = vec![0u8; n * 4];
         self.r.read_exact(&mut buf)?;
         Ok(buf
@@ -76,7 +90,7 @@ impl<R: Read> Reader<R> {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
-    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+    pub(crate) fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
         let mut buf = vec![0u8; n * 8];
         self.r.read_exact(&mut buf)?;
         Ok(buf
@@ -84,6 +98,64 @@ impl<R: Read> Reader<R> {
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
+}
+
+/// Encode one sample in the version-2 record layout.
+pub(crate) fn write_sample<W: Write>(w: &mut Writer<W>, s: &GraphSample) -> Result<()> {
+    w.u32(s.pipeline_id)?;
+    w.u32(s.schedule_id)?;
+    w.u32(s.n_stages)?;
+    w.u32(s.edges.len() as u32)?;
+    for &(a, b) in &s.edges {
+        w.u32(a)?;
+        w.u32(b)?;
+    }
+    for iv in &s.inv {
+        w.f32s(iv)?;
+    }
+    for dv in &s.dep {
+        w.f32s(dv)?;
+    }
+    w.f32s(&s.runs)?;
+    Ok(())
+}
+
+/// Decode one sample record written by the given format `version`.
+/// Purely structural — callers run [`GraphSample::validate`] themselves
+/// so the error message can say *which* container held the sample.
+pub(crate) fn read_sample<R: Read>(r: &mut Reader<R>, version: u32) -> Result<GraphSample> {
+    let pipeline_id = r.u32()?;
+    let schedule_id = r.u32()?;
+    let n_stages =
+        if version == VERSION_U16 { r.u16()? as u32 } else { r.u32()? };
+    let n_edges = r.u32()? as usize;
+    let mut edges = Vec::with_capacity(n_edges);
+    for _ in 0..n_edges {
+        if version == VERSION_U16 {
+            edges.push((r.u16()? as u32, r.u16()? as u32));
+        } else {
+            edges.push((r.u32()?, r.u32()?));
+        }
+    }
+    let ns = n_stages as usize;
+    let mut inv = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        let v = r.f32s(INV_DIM)?;
+        let mut arr = [0f32; INV_DIM];
+        arr.copy_from_slice(&v);
+        inv.push(arr);
+    }
+    let mut dep = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        let v = r.f32s(DEP_DIM)?;
+        let mut arr = [0f32; DEP_DIM];
+        arr.copy_from_slice(&v);
+        dep.push(arr);
+    }
+    let rv = r.f32s(BENCH_RUNS)?;
+    let mut runs = [0f32; BENCH_RUNS];
+    runs.copy_from_slice(&rv);
+    Ok(GraphSample { pipeline_id, schedule_id, n_stages, edges, inv, dep, runs })
 }
 
 /// Save a dataset (creates parent directories).
@@ -101,27 +173,13 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         w.f64s(&stats.to_flat())?;
     }
     for s in &ds.samples {
-        w.u32(s.pipeline_id)?;
-        w.u32(s.schedule_id)?;
-        w.u16(s.n_stages)?;
-        w.u32(s.edges.len() as u32)?;
-        for &(a, b) in &s.edges {
-            w.u16(a)?;
-            w.u16(b)?;
-        }
-        for iv in &s.inv {
-            w.f32s(iv)?;
-        }
-        for dv in &s.dep {
-            w.f32s(dv)?;
-        }
-        w.f32s(&s.runs)?;
+        write_sample(&mut w, s)?;
     }
     w.w.flush()?;
     Ok(())
 }
 
-/// Load a dataset saved by [`save`].
+/// Load a dataset saved by [`save`] (version 2, or the legacy version 1).
 pub fn load(path: &Path) -> Result<Dataset> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = Reader { r: BufReader::new(f) };
@@ -131,7 +189,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
         bail!("not a gcn-perf dataset: bad magic {magic:?}");
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_U16 {
         bail!("unsupported dataset version {version}");
     }
     let n = r.u32()? as usize;
@@ -143,41 +201,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
     };
     let mut samples = Vec::with_capacity(n);
     for _ in 0..n {
-        let pipeline_id = r.u32()?;
-        let schedule_id = r.u32()?;
-        let n_stages = r.u16()?;
-        let n_edges = r.u32()? as usize;
-        let mut edges = Vec::with_capacity(n_edges);
-        for _ in 0..n_edges {
-            edges.push((r.u16()?, r.u16()?));
-        }
-        let ns = n_stages as usize;
-        let mut inv = Vec::with_capacity(ns);
-        for _ in 0..ns {
-            let v = r.f32s(INV_DIM)?;
-            let mut arr = [0f32; INV_DIM];
-            arr.copy_from_slice(&v);
-            inv.push(arr);
-        }
-        let mut dep = Vec::with_capacity(ns);
-        for _ in 0..ns {
-            let v = r.f32s(DEP_DIM)?;
-            let mut arr = [0f32; DEP_DIM];
-            arr.copy_from_slice(&v);
-            dep.push(arr);
-        }
-        let rv = r.f32s(BENCH_RUNS)?;
-        let mut runs = [0f32; BENCH_RUNS];
-        runs.copy_from_slice(&rv);
-        let sample = GraphSample {
-            pipeline_id,
-            schedule_id,
-            n_stages,
-            edges,
-            inv,
-            dep,
-            runs,
-        };
+        let sample = read_sample(&mut r, version)?;
         // fail at load time on malformed graphs (e.g. edges referencing
         // stages that do not exist) instead of corrupting batches later
         sample
@@ -218,6 +242,47 @@ mod tests {
         let s1 = ds.stats.unwrap().to_flat();
         let s2 = rt.stats.unwrap().to_flat();
         assert_eq!(s1, s2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // hand-encode a version-1 file (u16 stage ids) and check the
+        // loader upconverts it to the widened in-memory sample
+        let dir = std::env::temp_dir().join("gcn_perf_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy_v1.bin");
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = Writer { w: BufWriter::new(f) };
+        w.w.write_all(MAGIC).unwrap();
+        w.u32(VERSION_U16).unwrap();
+        w.u32(1).unwrap(); // n_samples
+        w.u8(0).unwrap(); // no stats
+        w.u32(3).unwrap(); // pipeline_id
+        w.u32(4).unwrap(); // schedule_id
+        w.w.write_all(&2u16.to_le_bytes()).unwrap(); // n_stages
+        w.u32(1).unwrap(); // n_edges
+        w.w.write_all(&0u16.to_le_bytes()).unwrap();
+        w.w.write_all(&1u16.to_le_bytes()).unwrap();
+        for _ in 0..2 {
+            w.f32s(&[0.5; INV_DIM]).unwrap();
+        }
+        for _ in 0..2 {
+            w.f32s(&[1.5; DEP_DIM]).unwrap();
+        }
+        w.f32s(&[1e-3; BENCH_RUNS]).unwrap();
+        w.w.flush().unwrap();
+        drop(w);
+
+        let ds = load(&path).unwrap();
+        assert_eq!(ds.samples.len(), 1);
+        let s = &ds.samples[0];
+        assert_eq!(s.pipeline_id, 3);
+        assert_eq!(s.schedule_id, 4);
+        assert_eq!(s.n_stages, 2);
+        assert_eq!(s.edges, vec![(0, 1)]);
+        assert_eq!(s.inv[0][0], 0.5);
+        assert_eq!(s.dep[1][DEP_DIM - 1], 1.5);
         std::fs::remove_file(&path).ok();
     }
 

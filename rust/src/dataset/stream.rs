@@ -1,0 +1,378 @@
+//! Streaming sample access: the abstraction that lets `train`/`eval`
+//! consume a corpus without holding it in RAM.
+//!
+//! [`SampleSource`] is random-access sample storage with cheap metadata
+//! (`n_stages`, `pipeline_id`) separated from the expensive decode
+//! (`fetch`). Batch planning, train/test splitting, and shuffling run on
+//! metadata alone; samples are decoded one batch at a time and dropped.
+//! Implementations: [`MemorySource`] (a borrowed in-RAM [`Dataset`]) and
+//! [`crate::dataset::shard::ShardedDataset`] (the out-of-core corpus) —
+//! so the in-RAM and streamed training paths are the *same code* and the
+//! streamed run reproduces the in-RAM run bitwise whenever the corpus
+//! fits in memory (pinned by a test in `train`).
+//!
+//! [`SourceView`] is a subset of a source (a train or test split) that
+//! carries the normalization stats fitted on the training view;
+//! [`split_source`] reproduces [`Dataset::split`]'s pipeline-granular
+//! split and Welford stats bitwise by reusing
+//! [`crate::dataset::sample::split_pipeline_ids`] and
+//! [`crate::features::normalize::StatsAccumulator`] in storage order.
+//! [`SampleStream`] and [`BudgetChunks`] are the iterator forms eval and
+//! prediction consume.
+
+use crate::constants::BATCH;
+use crate::dataset::sample::{split_pipeline_ids, Dataset, GraphSample};
+use crate::dataset::shard::ShardedDataset;
+use crate::features::normalize::{FeatureStats, StatsAccumulator};
+use anyhow::{ensure, Context, Result};
+
+/// Random-access sample storage with metadata/payload separation.
+///
+/// `n_stages` and `pipeline_id` must be O(1) and allocation-free (they
+/// drive per-epoch planning); `fetch` may do I/O and returns an owned,
+/// validated sample the caller is expected to drop after use.
+pub trait SampleSource {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stage (node) count of sample `i`, without decoding it.
+    fn n_stages(&self, i: usize) -> u32;
+
+    /// Pipeline id of sample `i`, without decoding it.
+    fn pipeline_id(&self, i: usize) -> u32;
+
+    /// Decode sample `i`.
+    fn fetch(&self, i: usize) -> Result<GraphSample>;
+}
+
+/// An in-RAM [`Dataset`] viewed as a [`SampleSource`]. `fetch` clones —
+/// the training loop consumes owned samples so the two paths stay
+/// identical, and a sample clone is noise next to its train step.
+pub struct MemorySource<'a>(pub &'a Dataset);
+
+impl SampleSource for MemorySource<'_> {
+    fn len(&self) -> usize {
+        self.0.samples.len()
+    }
+
+    fn n_stages(&self, i: usize) -> u32 {
+        self.0.samples[i].n_stages
+    }
+
+    fn pipeline_id(&self, i: usize) -> u32 {
+        self.0.samples[i].pipeline_id
+    }
+
+    fn fetch(&self, i: usize) -> Result<GraphSample> {
+        Ok(self.0.samples[i].clone())
+    }
+}
+
+impl SampleSource for ShardedDataset {
+    fn len(&self) -> usize {
+        ShardedDataset::len(self)
+    }
+
+    fn n_stages(&self, i: usize) -> u32 {
+        self.entry(i).n_stages
+    }
+
+    fn pipeline_id(&self, i: usize) -> u32 {
+        self.entry(i).pipeline_id
+    }
+
+    fn fetch(&self, i: usize) -> Result<GraphSample> {
+        ShardedDataset::fetch(self, i)
+    }
+}
+
+/// A storage-order subset of a source plus the feature stats the view's
+/// consumers normalize with (fitted on the *train* view by
+/// [`split_source`]; a test view carries a copy of its train stats, the
+/// same sharing [`Dataset::split`] does).
+pub struct SourceView<'a> {
+    src: &'a dyn SampleSource,
+    idx: Vec<usize>,
+    pub stats: FeatureStats,
+}
+
+impl<'a> SourceView<'a> {
+    /// View an entire source through pre-fitted stats.
+    pub fn whole(src: &'a dyn SampleSource, stats: FeatureStats) -> SourceView<'a> {
+        SourceView { src, idx: (0..src.len()).collect(), stats }
+    }
+
+    /// Stage count summed over the view (planning metadata only).
+    pub fn total_nodes(&self) -> u64 {
+        self.idx.iter().map(|&i| self.src.n_stages(i) as u64).sum()
+    }
+
+    /// Best (minimum) mean runtime per pipeline over this view — the α
+    /// denominator. One streaming pass; holds one decoded sample at a
+    /// time. Identical fold order to [`Dataset::best_per_pipeline`].
+    pub fn best_per_pipeline(&self) -> Result<std::collections::BTreeMap<u32, f64>> {
+        let mut best = std::collections::BTreeMap::new();
+        for s in self.iter() {
+            let s = s?;
+            let m = s.mean_runtime();
+            best.entry(s.pipeline_id).and_modify(|b: &mut f64| *b = b.min(m)).or_insert(m);
+        }
+        Ok(best)
+    }
+
+    /// Storage-order stream over the view.
+    pub fn iter(&self) -> SampleStream<'_> {
+        SampleStream { src: self.src, idx: &self.idx, pos: 0 }
+    }
+}
+
+impl SampleSource for SourceView<'_> {
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn n_stages(&self, i: usize) -> u32 {
+        self.src.n_stages(self.idx[i])
+    }
+
+    fn pipeline_id(&self, i: usize) -> u32 {
+        self.src.pipeline_id(self.idx[i])
+    }
+
+    fn fetch(&self, i: usize) -> Result<GraphSample> {
+        self.src.fetch(self.idx[i])
+    }
+}
+
+/// Pipeline-granular train/test split over any source — the out-of-core
+/// counterpart of [`Dataset::split`], bitwise-compatible with it:
+/// identical test-pipeline selection ([`split_pipeline_ids`], same seed),
+/// identical storage-order index partition, and train-view stats folded
+/// through [`StatsAccumulator`] in exactly `fit_stats`' op order. Peak
+/// memory is one decoded sample, not the corpus.
+pub fn split_source(
+    src: &dyn SampleSource,
+    test_frac: f64,
+    seed: u64,
+) -> Result<(SourceView<'_>, SourceView<'_>)> {
+    let ids: Vec<u32> = {
+        let mut v: Vec<u32> = (0..src.len()).map(|i| src.pipeline_id(i)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    ensure!(ids.len() >= 2, "need at least 2 pipelines to split, got {}", ids.len());
+    let test_ids = split_pipeline_ids(&ids, test_frac, seed);
+    let (mut train_idx, mut test_idx) = (Vec::new(), Vec::new());
+    for i in 0..src.len() {
+        if test_ids.contains(&src.pipeline_id(i)) {
+            test_idx.push(i);
+        } else {
+            train_idx.push(i);
+        }
+    }
+    let mut acc = StatsAccumulator::new();
+    for &i in &train_idx {
+        let s = src.fetch(i).with_context(|| format!("fitting stats over sample {i}"))?;
+        for (iv, dv) in s.inv.iter().zip(&s.dep) {
+            acc.push(iv, dv);
+        }
+    }
+    let stats = acc.finish();
+    Ok((
+        SourceView { src, idx: train_idx, stats: stats.clone() },
+        SourceView { src, idx: test_idx, stats },
+    ))
+}
+
+/// Storage-order iterator over a view's samples: one decoded sample in
+/// flight at a time. This is the `Vec<GraphSample>` replacement the
+/// ISSUE's out-of-core format feeds to eval/predict.
+pub struct SampleStream<'a> {
+    src: &'a dyn SampleSource,
+    idx: &'a [usize],
+    pos: usize,
+}
+
+impl Iterator for SampleStream<'_> {
+    type Item = Result<GraphSample>;
+
+    fn next(&mut self) -> Option<Result<GraphSample>> {
+        let &i = self.idx.get(self.pos)?;
+        self.pos += 1;
+        Some(self.src.fetch(i))
+    }
+}
+
+impl<'a> SampleStream<'a> {
+    /// Group the stream into prediction-sized chunks: at most [`BATCH`]
+    /// graphs or `node_budget` packed nodes per chunk, whichever binds
+    /// first. A single graph above the budget is yielded alone (the
+    /// caller routes it through `model::partition`).
+    pub fn budget_chunks(self, node_budget: usize) -> BudgetChunks<'a> {
+        BudgetChunks { stream: self, node_budget: node_budget.max(1), carry: None }
+    }
+}
+
+/// See [`SampleStream::budget_chunks`].
+pub struct BudgetChunks<'a> {
+    stream: SampleStream<'a>,
+    node_budget: usize,
+    carry: Option<GraphSample>,
+}
+
+impl Iterator for BudgetChunks<'_> {
+    type Item = Result<Vec<GraphSample>>;
+
+    fn next(&mut self) -> Option<Result<Vec<GraphSample>>> {
+        let mut chunk: Vec<GraphSample> = Vec::new();
+        let mut nodes = 0usize;
+        if let Some(s) = self.carry.take() {
+            nodes = s.n_stages as usize;
+            chunk.push(s);
+        }
+        loop {
+            if chunk.len() >= BATCH {
+                return Some(Ok(chunk));
+            }
+            let s = match self.stream.next() {
+                Some(Ok(s)) => s,
+                Some(Err(e)) => return Some(Err(e)),
+                None => return if chunk.is_empty() { None } else { Some(Ok(chunk)) },
+            };
+            let n = s.n_stages as usize;
+            if !chunk.is_empty() && nodes + n > self.node_budget {
+                self.carry = Some(s);
+                return Some(Ok(chunk));
+            }
+            nodes += n;
+            chunk.push(s);
+            if nodes >= self.node_budget {
+                return Some(Ok(chunk));
+            }
+        }
+    }
+}
+
+/// Plan an epoch's batches from shuffled view-relative indices using
+/// metadata only: cut at `max_graphs` graphs or `node_budget` packed
+/// nodes, whichever binds first; a single over-budget graph rides alone
+/// (the train loop partitions it). With a budget no batch can reach
+/// (zoo-scale corpora under the default budget) this degenerates to
+/// `order.chunks(max_graphs)` — the historical policy — exactly.
+pub fn plan_batches(
+    src: &dyn SampleSource,
+    order: &[usize],
+    max_graphs: usize,
+    node_budget: usize,
+) -> Vec<Vec<usize>> {
+    let max_graphs = max_graphs.max(1);
+    let node_budget = node_budget.max(1);
+    let mut batches: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut nodes = 0usize;
+    for &i in order {
+        let n = src.n_stages(i) as usize;
+        if !cur.is_empty() && (nodes + n > node_budget || cur.len() >= max_graphs) {
+            batches.push(std::mem::take(&mut cur));
+            nodes = 0;
+        }
+        cur.push(i);
+        nodes += n;
+    }
+    if !cur.is_empty() {
+        batches.push(cur);
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::builder::{build_dataset, DataGenConfig};
+
+    fn small_ds() -> Dataset {
+        build_dataset(&DataGenConfig {
+            n_pipelines: 6,
+            schedules_per_pipeline: 5,
+            seed: 5,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn split_source_matches_dataset_split_bitwise() {
+        let ds = small_ds();
+        let (train, test) = ds.split(0.25, 7);
+        let mem = MemorySource(&ds);
+        let (tv, ev) = split_source(&mem, 0.25, 7).unwrap();
+        assert_eq!(tv.len(), train.len());
+        assert_eq!(ev.len(), test.len());
+        // same pipelines on each side, same storage order, same stats bits
+        for (i, want) in train.samples.iter().enumerate() {
+            let got = tv.fetch(i).unwrap();
+            assert_eq!((got.pipeline_id, got.schedule_id), (want.pipeline_id, want.schedule_id));
+        }
+        for (i, want) in test.samples.iter().enumerate() {
+            assert_eq!(ev.pipeline_id(i), want.pipeline_id);
+        }
+        assert_eq!(tv.stats.to_flat(), train.stats.as_ref().unwrap().to_flat());
+        assert_eq!(
+            tv.best_per_pipeline().unwrap(),
+            train.best_per_pipeline()
+        );
+    }
+
+    #[test]
+    fn plan_batches_covers_everything_within_limits() {
+        let ds = small_ds();
+        let mem = MemorySource(&ds);
+        let order: Vec<usize> = (0..ds.len()).collect();
+        // a tight budget that forces node-bound cuts on zoo-scale graphs
+        let budget = 64;
+        let batches = plan_batches(&mem, &order, BATCH, budget);
+        let covered: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(covered, ds.len());
+        let mut seen: Vec<usize> = batches.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, order);
+        for b in &batches {
+            assert!(b.len() <= BATCH);
+            let nodes: usize = b.iter().map(|&i| mem.n_stages(i) as usize).sum();
+            // multi-graph batches respect the budget; only a single
+            // over-budget graph may exceed it (and then rides alone)
+            if b.len() > 1 {
+                assert!(nodes <= budget, "{nodes} nodes in a {}-graph batch", b.len());
+            }
+        }
+        // a budget nothing reaches degenerates to the historical policy
+        let loose = plan_batches(&mem, &order, BATCH, usize::MAX);
+        let historical: Vec<Vec<usize>> = order.chunks(BATCH).map(|c| c.to_vec()).collect();
+        assert_eq!(loose, historical);
+    }
+
+    #[test]
+    fn budget_chunks_respect_budget_and_order() {
+        let ds = small_ds();
+        let mem = MemorySource(&ds);
+        let view = SourceView::whole(&mem, ds.stats.clone().unwrap());
+        let budget = 48;
+        let mut seen = 0usize;
+        for chunk in view.iter().budget_chunks(budget) {
+            let chunk = chunk.unwrap();
+            assert!(!chunk.is_empty() && chunk.len() <= BATCH);
+            let nodes: usize = chunk.iter().map(|s| s.n_stages as usize).sum();
+            if chunk.len() > 1 {
+                assert!(nodes <= budget);
+            }
+            for s in &chunk {
+                assert_eq!(s.schedule_id, ds.samples[seen].schedule_id);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, ds.len());
+    }
+}

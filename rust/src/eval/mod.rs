@@ -17,6 +17,9 @@
 //!   (`BENCH_7.json`).
 //! * [`analysis_bench`] — per-call vs precomputed-analysis schedule
 //!   validation throughput, verdict-checked (`BENCH_9.json`).
+//! * [`scale_bench`] — out-of-core scaling tiers: in-RAM vs streamed
+//!   training and full-graph vs partitioned steps, bitwise-checked
+//!   (`BENCH_10.json`).
 
 pub mod metrics;
 pub mod ranking;
@@ -28,6 +31,7 @@ pub mod simd_bench;
 pub mod net_bench;
 pub mod autotune_bench;
 pub mod analysis_bench;
+pub mod scale_bench;
 pub(crate) mod legacy_engine;
 
 pub use metrics::{regression_metrics, RegressionMetrics};

@@ -1,0 +1,485 @@
+//! Out-of-core scaling benchmark — `BENCH_10.json`.
+//!
+//! For each scale tier (1k/10k/100k stages; `--fast` trims to 1k/10k
+//! under a tightened node budget) the bench builds one synthetic
+//! [`crate::zoo::large`] corpus and trains one epoch through two
+//! storage paths and two batching paths:
+//!
+//! * **in-RAM vs streamed** — [`crate::train::train`] over the resident
+//!   [`crate::dataset::sample::Dataset`] (plus its split copies) vs
+//!   [`crate::train::train_source`] over the [`ShardedDataset`] written
+//!   by [`ShardWriter`], with the resident corpus dropped first. The two
+//!   runs must agree bitwise (same loop, same split, same shuffles —
+//!   checked before any number is reported); the streamed lane's peak
+//!   [`live_bytes`] window is the memory-ceiling claim.
+//! * **full-graph vs partitioned** — on tiers whose graphs exceed the
+//!   node budget, one training step over the whole packed graph vs the
+//!   block-aligned partition steps ([`crate::model::partition`]), each
+//!   peak-windowed separately so the comparison is workspace-only.
+//!
+//! Latency and resident-memory summaries go through [`Quantiles`]
+//! (p50/p90/max per predict chunk). CI runs the serial step
+//! `gcn-perf bench --fast --require-speedup`, which asserts the
+//! streamed lane beat the in-RAM peak *and* stayed under one corpus
+//! copy, and that partitioned steps fit where full-graph steps did not;
+//! `cargo test` only checks structure (parallel sibling tests pollute
+//! the process-wide peak window).
+
+use crate::constants::LEARNING_RATE;
+use crate::dataset::sample::GraphSample;
+use crate::dataset::shard::{ShardWriter, ShardedDataset};
+use crate::dataset::stream::{split_source, SourceView};
+use crate::model::partition::{combine_runtimes, partition_sample};
+use crate::model::PackedBatch;
+use crate::predictor::{GcnView, Predictor};
+use crate::runtime::{Backend, NativeBackend, Params};
+use crate::train::{train, train_source, TrainConfig};
+use crate::util::alloc_count::{live_bytes, peak_bytes, reset_peak_bytes};
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+use crate::zoo::large::{build_large_dataset, LargeConfig, LargeStyle};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct ScaleBenchConfig {
+    /// Short run (CI smoke): 1k/10k tiers instead of 1k/10k/100k, and
+    /// the node budget tightened to ≤ 2048 so the 10k tier still trains
+    /// through several partitions per graph.
+    pub fast: bool,
+    pub seed: u64,
+    /// Per-batch packed-node ceiling for every lane (train, step probes,
+    /// predict). Defaults to [`crate::constants::node_budget`].
+    pub node_budget: usize,
+}
+
+impl Default for ScaleBenchConfig {
+    fn default() -> Self {
+        ScaleBenchConfig { fast: false, seed: 11, node_budget: crate::constants::node_budget() }
+    }
+}
+
+/// One scale tier's measured lanes.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    pub n_stages: usize,
+    pub n_samples: usize,
+    /// Feature + edge + runtime payload bytes of one corpus copy.
+    pub corpus_bytes: u64,
+    pub in_ram_train_s: f64,
+    /// Peak heap over the in-RAM lane, measured from the pre-corpus
+    /// baseline — includes the resident dataset and its split copies.
+    pub in_ram_peak_bytes: u64,
+    pub streamed_train_s: f64,
+    /// Peak heap over the streamed lane from the same baseline — the
+    /// corpus lives on disk, so this is index + one decoded batch.
+    pub streamed_peak_bytes: u64,
+    pub streamed_nodes_per_s: f64,
+    /// Whether this tier's graphs exceed the node budget (step-probe
+    /// lanes below only run when they do).
+    pub partitioned: bool,
+    pub full_step_s: f64,
+    pub full_step_peak_bytes: u64,
+    pub part_step_s: f64,
+    pub part_step_peak_bytes: u64,
+    /// Fraction of the probe graph's edges dropped at partition cuts
+    /// (0.0 when the tier fits the budget whole) — the size of the
+    /// pinned approximation, recorded so regressions are visible.
+    pub cut_edge_fraction: f64,
+    pub predict_chunk_ms_p50: f64,
+    pub predict_chunk_ms_p90: f64,
+    pub predict_chunk_ms_max: f64,
+    pub predict_live_bytes_p50: f64,
+    pub predict_live_bytes_max: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScaleBenchReport {
+    pub fast: bool,
+    /// Effective node budget the lanes ran under.
+    pub node_budget: usize,
+    pub style: String,
+    pub tiers: Vec<TierReport>,
+}
+
+fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+impl ScaleBenchReport {
+    /// Error unless the out-of-core paths actually won. Enforced by the
+    /// serial CI bench step (`bench --require-speedup`), not by
+    /// `cargo test`, so the test suite stays deterministic on noisy
+    /// shared runners.
+    pub fn require_speedup(&self) -> Result<()> {
+        ensure!(!self.tiers.is_empty(), "scale bench produced no tiers");
+        ensure!(
+            self.tiers.iter().any(|t| t.partitioned),
+            "no tier exceeded the node budget ({}) — the partition path went unexercised",
+            self.node_budget
+        );
+        let top = self.tiers.last().unwrap();
+        ensure!(
+            top.streamed_peak_bytes < top.in_ram_peak_bytes,
+            "streamed training did not beat the in-RAM peak at the {}-stage tier: \
+             {:.1} MiB vs {:.1} MiB",
+            top.n_stages,
+            mib(top.streamed_peak_bytes),
+            mib(top.in_ram_peak_bytes)
+        );
+        ensure!(
+            top.streamed_peak_bytes < top.corpus_bytes,
+            "streamed peak ({:.1} MiB) exceeded one corpus copy ({:.1} MiB) at the \
+             {}-stage tier — the memory ceiling does not hold",
+            mib(top.streamed_peak_bytes),
+            mib(top.corpus_bytes),
+            top.n_stages
+        );
+        for t in &self.tiers {
+            if t.partitioned {
+                ensure!(
+                    t.part_step_peak_bytes < t.full_step_peak_bytes,
+                    "partitioned steps did not fit under the full-graph step at the \
+                     {}-stage tier: {:.1} MiB vs {:.1} MiB",
+                    t.n_stages,
+                    mib(t.part_step_peak_bytes),
+                    mib(t.full_step_peak_bytes)
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// On-disk payload bytes of one sample (header + edges + features +
+/// measurements) — the same accounting the shard writer uses.
+fn sample_bytes(s: &GraphSample) -> u64 {
+    (16 + std::mem::size_of_val(s.edges.as_slice())
+        + std::mem::size_of_val(s.inv.as_slice())
+        + std::mem::size_of_val(s.dep.as_slice())
+        + std::mem::size_of_val(&s.runs)) as u64
+}
+
+/// `(n_stages, n_pipelines, schedules_per_pipeline)` per tier.
+fn tier_spec(fast: bool) -> Vec<(usize, u32, u32)> {
+    if fast {
+        vec![(1_000, 2, 4), (10_000, 2, 3)]
+    } else {
+        vec![(1_000, 2, 8), (10_000, 2, 4), (100_000, 2, 2)]
+    }
+}
+
+/// Stream the whole corpus through the predictor in node-budget chunks,
+/// summarizing per-chunk latency and resident memory with [`Quantiles`].
+struct PredictLane {
+    chunk_ms: Quantiles,
+    live: Quantiles,
+}
+
+fn predict_lane(
+    rt: &dyn Backend,
+    params: &Params,
+    sd: &ShardedDataset,
+    node_budget: usize,
+) -> Result<PredictLane> {
+    let stats = sd.stats().context("corpus stats missing from the shard index")?.clone();
+    let view = SourceView::whole(sd, stats);
+    let p = GcnView { backend: rt, params, stats: &view.stats };
+    let mut chunk_ms = Vec::new();
+    let mut live = Vec::new();
+    for chunk in view.iter().budget_chunks(node_budget) {
+        let chunk = chunk?;
+        let t0 = Instant::now();
+        let preds = if chunk.len() == 1 && chunk[0].n_stages as usize > node_budget {
+            let part = partition_sample(&chunk[0], node_budget);
+            let refs: Vec<&GraphSample> = part.parts.iter().collect();
+            vec![combine_runtimes(&p.predict(&refs)?)]
+        } else {
+            let refs: Vec<&GraphSample> = chunk.iter().collect();
+            p.predict(&refs)?
+        };
+        ensure!(
+            preds.iter().all(|y| y.is_finite()),
+            "non-finite prediction while streaming the scale-bench corpus"
+        );
+        chunk_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        live.push(live_bytes() as f64);
+    }
+    Ok(PredictLane { chunk_ms: Quantiles::new(&chunk_ms), live: Quantiles::new(&live) })
+}
+
+fn run_tier(
+    rt: &dyn Backend,
+    cfg: &ScaleBenchConfig,
+    n_stages: usize,
+    n_pipelines: u32,
+    scheds: u32,
+    node_budget: usize,
+) -> Result<TierReport> {
+    let lcfg = LargeConfig {
+        style: LargeStyle::Transformer,
+        n_stages,
+        n_pipelines,
+        schedules_per_pipeline: scheds,
+        seed: cfg.seed,
+    };
+    let dir = std::env::temp_dir().join(format!("gcn_perf_scale_{n_stages}x{n_pipelines}x{scheds}"));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // every lane's peak is measured from this pre-corpus baseline, so
+    // "in-RAM" pays for holding the corpus and "streamed" does not —
+    // which is exactly the comparison the tier is about
+    let baseline = live_bytes();
+    let ds = build_large_dataset(&lcfg);
+    let n_samples = ds.samples.len();
+    let corpus_bytes: u64 = ds.samples.iter().map(sample_bytes).sum();
+
+    let mut w = ShardWriter::create(&dir)?;
+    for s in &ds.samples {
+        w.push(s)?;
+    }
+    w.finish(ds.stats.as_ref())?;
+
+    let tcfg = TrainConfig {
+        epochs: 1,
+        seed: cfg.seed,
+        verbose: false,
+        node_budget,
+        ..Default::default()
+    };
+
+    // in-RAM lane: resident corpus + split copies + training workspace
+    reset_peak_bytes();
+    let t0 = Instant::now();
+    let (tr_ds, te_ds) = ds.split(0.5, cfg.seed);
+    let in_ram = train(rt, &tr_ds, &te_ds, &tcfg)?;
+    let in_ram_train_s = t0.elapsed().as_secs_f64();
+    let in_ram_peak_bytes = peak_bytes().saturating_sub(baseline);
+    drop(tr_ds);
+    drop(te_ds);
+    drop(ds);
+
+    // streamed lane: the corpus lives on disk; only the index and one
+    // decoded batch (plus one over-budget graph's partitions) resident
+    let sd = ShardedDataset::open(&dir)?;
+    reset_peak_bytes();
+    let t0 = Instant::now();
+    let (tv, ev) = split_source(&sd, 0.5, cfg.seed)?;
+    let epoch_nodes = tv.total_nodes();
+    let streamed = train_source(rt, &tv, &ev, &tcfg)?;
+    let streamed_train_s = t0.elapsed().as_secs_f64();
+    let streamed_peak_bytes = peak_bytes().saturating_sub(baseline);
+
+    // correctness first: the storage paths must not change the numbers
+    ensure!(
+        in_ram.params.values == streamed.params.values,
+        "streamed training diverged from the in-RAM loop at the {n_stages}-stage tier"
+    );
+
+    // full-graph vs partitioned step probes, windowed after the sample
+    // (resp. its partitions) is resident so each window is batch build +
+    // step workspace only
+    let partitioned = n_stages > node_budget;
+    let (mut full_step_s, mut full_step_peak_bytes) = (0.0f64, 0u64);
+    let (mut part_step_s, mut part_step_peak_bytes) = (0.0f64, 0u64);
+    let mut cut_edge_fraction = 0.0f64;
+    if partitioned {
+        let s0 = sd.fetch(0)?;
+        let stats = sd.stats().context("corpus stats missing from the shard index")?;
+        let best = s0.mean_runtime();
+        let lr = LEARNING_RATE as f32;
+
+        let mut p = rt.init_params(cfg.seed);
+        let mut a = p.zeros_like();
+        reset_peak_bytes();
+        let window = live_bytes();
+        let t0 = Instant::now();
+        let b = PackedBatch::build(&[&s0], stats, &[best])?;
+        rt.train_step_lr(&mut p, &mut a, &b, lr)?;
+        full_step_s = t0.elapsed().as_secs_f64();
+        full_step_peak_bytes = peak_bytes().saturating_sub(window);
+        drop(b);
+
+        let part = partition_sample(&s0, node_budget);
+        cut_edge_fraction = part.cut_edge_fraction();
+        let mut p = rt.init_params(cfg.seed);
+        let mut a = p.zeros_like();
+        reset_peak_bytes();
+        let window = live_bytes();
+        let t0 = Instant::now();
+        for (ps, sh) in part.parts.iter().zip(&part.shares) {
+            let b = PackedBatch::build(&[ps], stats, &[best * sh])?;
+            rt.train_step_lr(&mut p, &mut a, &b, lr)?;
+        }
+        part_step_s = t0.elapsed().as_secs_f64();
+        part_step_peak_bytes = peak_bytes().saturating_sub(window);
+    }
+
+    let predict = predict_lane(rt, &streamed.params, &sd, node_budget)?;
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(TierReport {
+        n_stages,
+        n_samples,
+        corpus_bytes,
+        in_ram_train_s,
+        in_ram_peak_bytes,
+        streamed_train_s,
+        streamed_peak_bytes,
+        streamed_nodes_per_s: epoch_nodes as f64 / streamed_train_s.max(1e-9),
+        partitioned,
+        full_step_s,
+        full_step_peak_bytes,
+        part_step_s,
+        part_step_peak_bytes,
+        cut_edge_fraction,
+        predict_chunk_ms_p50: predict.chunk_ms.quantile(50.0),
+        predict_chunk_ms_p90: predict.chunk_ms.quantile(90.0),
+        predict_chunk_ms_max: predict.chunk_ms.max(),
+        predict_live_bytes_p50: predict.live.quantile(50.0),
+        predict_live_bytes_max: predict.live.max(),
+    })
+}
+
+/// Run the explicit tier list (the test entry point — `run_scale_bench`
+/// supplies the 1k/10k/100k profile).
+pub(crate) fn run_scale_tiers(
+    cfg: &ScaleBenchConfig,
+    tiers: &[(usize, u32, u32)],
+) -> Result<ScaleBenchReport> {
+    // the fast profile tops out at 10k stages; tighten the budget so that
+    // tier still trains through several partitions per graph
+    let node_budget =
+        if cfg.fast { cfg.node_budget.min(2048) } else { cfg.node_budget }.max(1);
+    let rt = NativeBackend::new();
+    let mut reports = Vec::with_capacity(tiers.len());
+    for &(n_stages, n_pipelines, scheds) in tiers {
+        reports.push(run_tier(&rt, cfg, n_stages, n_pipelines, scheds, node_budget)?);
+    }
+    Ok(ScaleBenchReport {
+        fast: cfg.fast,
+        node_budget,
+        style: LargeStyle::Transformer.name().to_string(),
+        tiers: reports,
+    })
+}
+
+/// Run the in-RAM/streamed and full-graph/partitioned comparison over
+/// the scale tiers.
+pub fn run_scale_bench(cfg: &ScaleBenchConfig) -> Result<ScaleBenchReport> {
+    run_scale_tiers(cfg, &tier_spec(cfg.fast))
+}
+
+/// Serialize a report to `BENCH_10.json`.
+pub fn write_scale_report(report: &ScaleBenchReport, path: &Path) -> Result<()> {
+    let tiers: Vec<Json> = report
+        .tiers
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("n_stages", Json::Num(t.n_stages as f64)),
+                ("n_samples", Json::Num(t.n_samples as f64)),
+                ("corpus_bytes", Json::Num(t.corpus_bytes as f64)),
+                (
+                    "in_ram",
+                    Json::obj(vec![
+                        ("train_s", Json::Num(t.in_ram_train_s)),
+                        ("peak_bytes", Json::Num(t.in_ram_peak_bytes as f64)),
+                    ]),
+                ),
+                (
+                    "streamed",
+                    Json::obj(vec![
+                        ("train_s", Json::Num(t.streamed_train_s)),
+                        ("peak_bytes", Json::Num(t.streamed_peak_bytes as f64)),
+                        ("nodes_per_s", Json::Num(t.streamed_nodes_per_s)),
+                    ]),
+                ),
+                (
+                    "mem_ratio_in_ram_over_streamed",
+                    Json::Num(t.in_ram_peak_bytes as f64 / t.streamed_peak_bytes.max(1) as f64),
+                ),
+                ("partitioned", Json::Num(if t.partitioned { 1.0 } else { 0.0 })),
+                ("cut_edge_fraction", Json::Num(t.cut_edge_fraction)),
+                (
+                    "step_peak",
+                    Json::obj(vec![
+                        ("full_graph_bytes", Json::Num(t.full_step_peak_bytes as f64)),
+                        ("partitioned_bytes", Json::Num(t.part_step_peak_bytes as f64)),
+                        ("full_graph_s", Json::Num(t.full_step_s)),
+                        ("partitioned_s", Json::Num(t.part_step_s)),
+                    ]),
+                ),
+                (
+                    "predict",
+                    Json::obj(vec![
+                        ("chunk_ms_p50", Json::Num(t.predict_chunk_ms_p50)),
+                        ("chunk_ms_p90", Json::Num(t.predict_chunk_ms_p90)),
+                        ("chunk_ms_max", Json::Num(t.predict_chunk_ms_max)),
+                        ("live_bytes_p50", Json::Num(t.predict_live_bytes_p50)),
+                        ("live_bytes_max", Json::Num(t.predict_live_bytes_max)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        (
+            "bench",
+            Json::Str("out-of-core scale: in-RAM vs streamed, full-graph vs partitioned".into()),
+        ),
+        ("fast", Json::Num(if report.fast { 1.0 } else { 0.0 })),
+        ("style", Json::Str(report.style.clone())),
+        ("node_budget", Json::Num(report.node_budget as f64)),
+        ("tiers", Json::Arr(tiers)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_scale_bench_runs_and_reports() {
+        // Debug-sized tiers; the memory/speed bars are enforced by the
+        // serial CI step (`bench --fast --require-speedup`), not here —
+        // parallel sibling tests pollute the process-wide peak window.
+        // The bitwise streamed==in-RAM check still runs inside run_tier.
+        let cfg = ScaleBenchConfig { fast: true, seed: 9, node_budget: 512 };
+        let report = run_scale_tiers(&cfg, &[(300, 2, 2), (1_200, 2, 2)]).unwrap();
+        assert_eq!(report.tiers.len(), 2);
+        assert_eq!(report.node_budget, 512);
+        let small = &report.tiers[0];
+        let big = &report.tiers[1];
+        assert!(!small.partitioned);
+        assert!(big.partitioned, "the 1200-stage tier must exceed the 512-node budget");
+        assert!(big.full_step_peak_bytes > 0 && big.part_step_peak_bytes > 0);
+        assert_eq!(small.cut_edge_fraction, 0.0);
+        assert!(
+            big.cut_edge_fraction > 0.0 && big.cut_edge_fraction < 0.02,
+            "block-local topology should cut few edges, got {}",
+            big.cut_edge_fraction
+        );
+        assert!(big.in_ram_train_s > 0.0 && big.streamed_train_s > 0.0);
+        assert!(big.streamed_nodes_per_s > 0.0);
+        assert!(big.predict_chunk_ms_p50 <= big.predict_chunk_ms_max);
+        assert!(big.corpus_bytes > small.corpus_bytes);
+
+        let path = std::env::temp_dir().join("gcn_perf_bench10_test.json");
+        write_scale_report(&report, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("mem_ratio_in_ram_over_streamed"));
+        assert!(text.contains("chunk_ms_p50"));
+        assert!(text.contains("cut_edge_fraction"));
+        crate::util::json::Json::parse(&text).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -13,27 +13,63 @@ pub struct FeatureStats {
     pub dep_std: Vec<f64>,
 }
 
-impl FeatureStats {
-    /// Accumulate stats from an iterator of stage features (Welford).
-    pub fn fit<'a, I: IntoIterator<Item = &'a StageFeatures>>(features: I) -> FeatureStats {
-        let mut n = 0f64;
-        let mut inv_mean = vec![0f64; INV_DIM];
-        let mut inv_m2 = vec![0f64; INV_DIM];
-        let mut dep_mean = vec![0f64; DEP_DIM];
-        let mut dep_m2 = vec![0f64; DEP_DIM];
-        for f in features {
-            n += 1.0;
-            for (i, &x) in f.invariant.iter().enumerate() {
-                let d = x as f64 - inv_mean[i];
-                inv_mean[i] += d / n;
-                inv_m2[i] += d * (x as f64 - inv_mean[i]);
-            }
-            for (i, &x) in f.dependent.iter().enumerate() {
-                let d = x as f64 - dep_mean[i];
-                dep_mean[i] += d / n;
-                dep_m2[i] += d * (x as f64 - dep_mean[i]);
-            }
+/// Incremental Welford accumulator behind [`FeatureStats::fit`].
+///
+/// Exposed so streaming consumers ([`crate::dataset::shard`]'s corpus
+/// writer) can fold stage features in sample-at-a-time without holding
+/// the corpus in RAM. Pushing the same features in the same order
+/// produces bitwise-identical stats to the one-shot `fit` — `fit` is a
+/// thin loop over [`StatsAccumulator::push`].
+#[derive(Debug, Clone)]
+pub struct StatsAccumulator {
+    n: f64,
+    inv_mean: Vec<f64>,
+    inv_m2: Vec<f64>,
+    dep_mean: Vec<f64>,
+    dep_m2: Vec<f64>,
+}
+
+impl Default for StatsAccumulator {
+    fn default() -> Self {
+        StatsAccumulator::new()
+    }
+}
+
+impl StatsAccumulator {
+    pub fn new() -> StatsAccumulator {
+        StatsAccumulator {
+            n: 0.0,
+            inv_mean: vec![0f64; INV_DIM],
+            inv_m2: vec![0f64; INV_DIM],
+            dep_mean: vec![0f64; DEP_DIM],
+            dep_m2: vec![0f64; DEP_DIM],
         }
+    }
+
+    /// Fold one stage's raw feature rows into the running moments.
+    pub fn push(&mut self, invariant: &[f32; INV_DIM], dependent: &[f32; DEP_DIM]) {
+        self.n += 1.0;
+        for (i, &x) in invariant.iter().enumerate() {
+            let d = x as f64 - self.inv_mean[i];
+            self.inv_mean[i] += d / self.n;
+            self.inv_m2[i] += d * (x as f64 - self.inv_mean[i]);
+        }
+        for (i, &x) in dependent.iter().enumerate() {
+            let d = x as f64 - self.dep_mean[i];
+            self.dep_mean[i] += d / self.n;
+            self.dep_m2[i] += d * (x as f64 - self.dep_mean[i]);
+        }
+    }
+
+    /// Stages folded so far.
+    pub fn count(&self) -> usize {
+        self.n as usize
+    }
+
+    /// Finalize into mean/std. Panics on an empty accumulator, matching
+    /// the historical `fit` contract.
+    pub fn finish(self) -> FeatureStats {
+        let n = self.n;
         assert!(n > 0.0, "FeatureStats::fit on empty input");
         let finish = |m2: Vec<f64>| -> Vec<f64> {
             m2.into_iter()
@@ -48,11 +84,22 @@ impl FeatureStats {
                 .collect()
         };
         FeatureStats {
-            inv_mean,
-            inv_std: finish(inv_m2),
-            dep_mean,
-            dep_std: finish(dep_m2),
+            inv_mean: self.inv_mean,
+            inv_std: finish(self.inv_m2),
+            dep_mean: self.dep_mean,
+            dep_std: finish(self.dep_m2),
         }
+    }
+}
+
+impl FeatureStats {
+    /// Accumulate stats from an iterator of stage features (Welford).
+    pub fn fit<'a, I: IntoIterator<Item = &'a StageFeatures>>(features: I) -> FeatureStats {
+        let mut acc = StatsAccumulator::new();
+        for f in features {
+            acc.push(&f.invariant, &f.dependent);
+        }
+        acc.finish()
     }
 
     /// Standardize one stage's features in place.
@@ -132,6 +179,20 @@ mod tests {
         stats.apply(&mut g);
         assert!(g.invariant.iter().all(|v| v.is_finite()));
         assert!(g.dependent.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn incremental_accumulator_matches_fit_bitwise() {
+        let data: Vec<StageFeatures> = (0..37).map(|i| mk(i as f32 * 0.3 - 2.0)).collect();
+        let one_shot = FeatureStats::fit(data.iter());
+        let mut acc = StatsAccumulator::new();
+        for f in &data {
+            acc.push(&f.invariant, &f.dependent);
+        }
+        assert_eq!(acc.count(), 37);
+        let streamed = acc.finish();
+        // identical op order => bitwise-identical moments
+        assert_eq!(one_shot.to_flat(), streamed.to_flat());
     }
 
     #[test]

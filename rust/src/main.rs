@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   gen-data       generate a dataset (random pipelines → schedules → sim
-//!                  bench)
+//!                  bench), or with --scale a sharded out-of-core corpus
+//!                  of TpuGraphs-scale synthetic graphs
 //!   train          train the GCN and save a single-file model bundle
 //!   predict        load any model bundle and serve predictions for a JSON
 //!                  sample file (or a binary dataset)
@@ -27,9 +28,9 @@
 //!                  naive-vs-coalesced serving (BENCH_4.json), the
 //!                  PR-5-vs-PR-4 engine micro-suite (BENCH_5.json), the
 //!                  fleet-vs-sequential autotuner (BENCH_7.json), the
-//!                  scalar/SIMD/int8 inference lanes (BENCH_8.json) and
-//!                  the analyzer validation-throughput compare
-//!                  (BENCH_9.json)
+//!                  scalar/SIMD/int8 inference lanes (BENCH_8.json), the
+//!                  analyzer validation-throughput compare (BENCH_9.json)
+//!                  and the out-of-core scale tiers (BENCH_10.json)
 //!   serve          long-lived prediction daemon: line-delimited JSON
 //!                  requests on stdin — or, with --listen, a
 //!                  multi-client TCP server with graceful drain
@@ -45,20 +46,25 @@
 use anyhow::{bail, Context, Result};
 use gcn_perf::dataset::builder::{build_dataset, DataGenConfig};
 use gcn_perf::dataset::sample::Dataset;
+use gcn_perf::dataset::shard::ShardedDataset;
 use gcn_perf::dataset::store;
+use gcn_perf::dataset::stream::{split_source, SampleSource, SourceView};
 use gcn_perf::eval::harness;
 use gcn_perf::eval::metrics::RegressionMetrics;
 use gcn_perf::eval::ranking::{rank_networks, RankResult};
+use gcn_perf::model::partition::{combine_runtimes, partition_sample};
 use gcn_perf::net::session::{prediction_report, sample_ids};
 use gcn_perf::onnx_gen::GenConfig;
 use gcn_perf::predictor::registry::{self, FitConfig};
 use gcn_perf::predictor::{
-    GcnPredictor, PredictRequest, PredictService, Predictor, PredictorCost, ServiceConfig,
+    save_gcn_bundle, GcnPredictor, PredictRequest, PredictService, Predictor, PredictorCost,
+    ServiceConfig,
 };
 use gcn_perf::runtime::{load_backend, load_variant_backend, Backend};
 use gcn_perf::search::{beam_search, BeamConfig, CostModel, SimCost};
 use gcn_perf::sim::Machine;
-use gcn_perf::train::{train_and_save, TrainConfig};
+use gcn_perf::train::{train_and_save, train_source, TrainConfig};
+use gcn_perf::zoo::large::{write_large_corpus, LargeConfig, LargeStyle};
 use gcn_perf::util::cli::Args;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -75,16 +81,20 @@ static GLOBAL_ALLOC: gcn_perf::util::alloc_count::CountingAlloc =
 /// `main` rejects anything outside this table with a nonzero exit, so a
 /// typo'd flag cannot be silently swallowed by a default.
 const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
-    ("gen-data", &["pipelines", "schedules", "out", "seed"], &[]),
+    ("gen-data", &["pipelines", "schedules", "out", "seed", "scale", "style"], &[]),
     (
         "train",
         &[
             "data", "bundle", "ckpt", "epochs", "test-frac", "split-seed", "artifacts", "seed",
-            "patience", "lr",
+            "patience", "lr", "stream", "node-budget",
         ],
         &[],
     ),
-    ("predict", &["bundle", "ckpt", "samples", "data", "out", "precision"], &[]),
+    (
+        "predict",
+        &["bundle", "ckpt", "samples", "data", "out", "precision", "stream", "node-budget"],
+        &[],
+    ),
     ("quantize", &["bundle", "ckpt", "out"], &[]),
     ("export-samples", &["data", "out", "limit"], &[]),
     (
@@ -134,7 +144,7 @@ const KNOWN_ARGS: &[(&str, &[&str], &[&str])] = &[
         "bench",
         &[
             "out", "serve-out", "engine-out", "autotune-out", "simd-out", "analysis-out",
-            "seed", "bundle", "ckpt", "precision",
+            "scale-out", "seed", "bundle", "ckpt", "precision",
         ],
         &["fast", "require-speedup", "engine"],
     ),
@@ -213,9 +223,16 @@ const USAGE: &str = "gcn-perf — GNN performance model for DNN compiler schedul
 USAGE: gcn-perf <subcommand> [--key value ...]
 
   gen-data        --pipelines N --schedules M --out data/dataset.bin [--seed S]
+                  | --scale STAGES [--style transformer|inception]
+                  --out data/corpus (write an out-of-core sharded corpus
+                  of STAGES-stage graphs instead of one in-RAM dataset)
   train           --data data/dataset.bin --bundle data/gcn.bundle [--epochs E]
                   [--test-frac F] [--artifacts DIR]
-  predict         --bundle data/gcn.bundle (--samples s.json | --data ds.bin)
+                  | --stream data/corpus (train from a sharded corpus;
+                  peak memory is bounded by --node-budget N, and graphs
+                  above the budget train through aligned partitions)
+  predict         --bundle data/gcn.bundle (--samples s.json | --data ds.bin
+                  | --stream data/corpus [--node-budget N])
                   [--out preds.json] [--precision f32|int8]
   quantize        --bundle data/gcn.bundle [--out data/gcn-int8.bundle]
                   (mint an int8 per-channel serving bundle from a trained
@@ -251,12 +268,13 @@ USAGE: gcn-perf <subcommand> [--key value ...]
   bench           [--out BENCH_3.json] [--serve-out BENCH_4.json]
                   [--engine-out BENCH_5.json] [--autotune-out BENCH_7.json]
                   [--simd-out BENCH_8.json] [--analysis-out BENCH_9.json]
-                  [--fast] [--engine]
+                  [--scale-out BENCH_10.json] [--fast] [--engine]
                   [--require-speedup] [--bundle ... --precision f32|int8]
                   (dense-vs-sparse + serving + engine micro-benches +
-                   autotuner fleet + scalar/SIMD/int8 lanes; --engine runs
-                   only the engine + simd suites; --bundle/--precision
-                   validate a serving bundle's numeric mode up front)
+                   autotuner fleet + scalar/SIMD/int8 lanes + out-of-core
+                   scale tiers; --engine runs only the engine + simd
+                   suites; --bundle/--precision validate a serving
+                   bundle's numeric mode up front)
   serve           --bundle data/gcn.bundle [--precision f32|int8]
                   [--workers N] [--queue-cap Q]
                   [--listen ADDR [--port-file F] [--read-timeout-ms T]
@@ -339,6 +357,33 @@ fn fit_config(args: &Args) -> FitConfig {
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
+    // --scale: TpuGraphs-scale synthetic graphs streamed straight to a
+    // sharded on-disk corpus — never materialized in RAM, so 100k-stage
+    // tiers generate in bounded memory
+    let scale = args.usize_or("scale", 0);
+    if scale > 0 {
+        let style_name = args.str_or("style", "transformer");
+        let style = LargeStyle::parse(style_name)
+            .with_context(|| format!("unknown --style '{style_name}' (transformer|inception)"))?;
+        let cfg = LargeConfig {
+            style,
+            n_stages: scale,
+            n_pipelines: args.usize_or("pipelines", 2) as u32,
+            schedules_per_pipeline: args.usize_or("schedules", 4) as u32,
+            seed: args.u64_or("seed", 42),
+        };
+        let out = PathBuf::from(args.str_or("out", "data/corpus"));
+        eprintln!(
+            "generating {} corpus: {} pipelines x {} schedules at {} stages each...",
+            style.name(),
+            cfg.n_pipelines,
+            cfg.schedules_per_pipeline,
+            cfg.n_stages
+        );
+        let n = write_large_corpus(&out, &cfg)?;
+        println!("wrote {n} samples ({scale} stages each) to sharded corpus {}", out.display());
+        return Ok(());
+    }
     let cfg = DataGenConfig {
         n_pipelines: args.usize_or("pipelines", 200),
         schedules_per_pipeline: args.usize_or("schedules", 16),
@@ -363,6 +408,46 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let rt = load_backend_verbose(args, true)?;
+    let cfg = TrainConfig {
+        epochs: args.usize_or("epochs", 40),
+        seed: args.u64_or("seed", 7),
+        patience: args.usize_or("patience", 8),
+        lr: args.f64_or("lr", gcn_perf::constants::LEARNING_RATE) as f32,
+        node_budget: args.usize_or("node-budget", gcn_perf::constants::node_budget()),
+        ..Default::default()
+    };
+    let bundle = bundle_path_opt(args).unwrap_or_else(|| PathBuf::from("data/gcn.bundle"));
+
+    // --stream: train straight from a sharded corpus. Batches decode one
+    // at a time, so peak memory is bounded by the node budget — and the
+    // loop is the same one the in-RAM path runs, so when the corpus fits
+    // in RAM the two produce bitwise-identical bundles.
+    if let Some(dir) = args.str_opt("stream") {
+        let sd = ShardedDataset::open(Path::new(dir))?;
+        let (tv, ev) = split_source(
+            &sd,
+            args.f64_or("test-frac", 0.1),
+            args.u64_or("split-seed", 1234),
+        )?;
+        eprintln!(
+            "streaming {dir}: train {} samples ({} nodes), test {} samples, node budget {}",
+            tv.len(),
+            tv.total_nodes(),
+            ev.len(),
+            cfg.node_budget
+        );
+        let result = train_source(rt.as_ref(), &tv, &ev, &cfg)?;
+        save_gcn_bundle(&bundle, rt.manifest().n_conv, &result.params, &tv.stats)?;
+        println!(
+            "best test MAPE {:.2}% after {} epochs; bundle: {}",
+            result.best_test_mape,
+            result.history.len(),
+            bundle.display()
+        );
+        return Ok(());
+    }
+
     let ds = load_dataset(args)?;
     let (train_ds, test_ds) = split_dataset(args, &ds);
     eprintln!(
@@ -372,15 +457,6 @@ fn cmd_train(args: &Args) -> Result<()> {
         test_ds.len(),
         test_ds.num_pipelines()
     );
-    let rt = load_backend_verbose(args, true)?;
-    let cfg = TrainConfig {
-        epochs: args.usize_or("epochs", 40),
-        seed: args.u64_or("seed", 7),
-        patience: args.usize_or("patience", 8),
-        lr: args.f64_or("lr", gcn_perf::constants::LEARNING_RATE) as f32,
-        ..Default::default()
-    };
-    let bundle = bundle_path_opt(args).unwrap_or_else(|| PathBuf::from("data/gcn.bundle"));
     let result = train_and_save(rt.as_ref(), &train_ds, &test_ds, &cfg, &bundle)?;
     println!(
         "best test MAPE {:.2}% after {} epochs; bundle: {}",
@@ -400,17 +476,49 @@ fn cmd_predict(args: &Args) -> Result<()> {
         PredictService::with_defaults(Arc::from(registry::load_bundle_serving(&path)?));
     let engine = service.engine_info();
     eprintln!("engine: {} kernels, {} precision", engine.kernel_variant, engine.precision);
-    let samples = if let Some(f) = args.str_opt("samples") {
-        let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
-        gcn_perf::dataset::json::samples_from_json(&text)?
-    } else if args.str_opt("data").is_some() {
-        load_dataset(args)?.samples
+    let (model, ids, predictions) = if let Some(dir) = args.str_opt("stream") {
+        // sharded corpus: decode in node-budget chunks so resident memory
+        // stays bounded no matter how large the corpus is; graphs above
+        // the budget predict through aligned partitions and recombine
+        let budget = args.usize_or("node-budget", gcn_perf::constants::node_budget());
+        let sd = ShardedDataset::open(Path::new(dir))?;
+        let stats = sd
+            .stats()
+            .cloned()
+            .context("corpus index carries no feature stats (rewrite it with gen-data --scale)")?;
+        let view = SourceView::whole(&sd, stats);
+        let mut model = String::new();
+        let mut ids = Vec::new();
+        let mut predictions = Vec::new();
+        for chunk in view.iter().budget_chunks(budget) {
+            let chunk = chunk?;
+            ids.extend(sample_ids(&chunk));
+            if chunk.len() == 1 && chunk[0].n_stages as usize > budget {
+                let part = partition_sample(&chunk[0], budget);
+                let resp = service.predict_blocking(PredictRequest::new(part.parts))?;
+                predictions.push(combine_runtimes(&resp.predictions));
+                model = resp.model;
+            } else {
+                let resp = service.predict_blocking(PredictRequest::new(chunk))?;
+                predictions.extend(resp.predictions);
+                model = resp.model;
+            }
+        }
+        (model, ids, predictions)
     } else {
-        bail!("predict needs --samples file.json or --data dataset.bin");
+        let samples = if let Some(f) = args.str_opt("samples") {
+            let text = std::fs::read_to_string(f).with_context(|| format!("read {f}"))?;
+            gcn_perf::dataset::json::samples_from_json(&text)?
+        } else if args.str_opt("data").is_some() {
+            load_dataset(args)?.samples
+        } else {
+            bail!("predict needs --samples file.json, --data dataset.bin or --stream corpus/");
+        };
+        let ids = sample_ids(&samples);
+        let resp = service.predict_blocking(PredictRequest::new(samples))?;
+        (resp.model, ids, resp.predictions)
     };
-    let ids = sample_ids(&samples);
-    let resp = service.predict_blocking(PredictRequest::new(samples))?;
-    let report = prediction_report(&resp.model, &ids, &resp.predictions);
+    let report = prediction_report(&model, &ids, &predictions);
     match args.str_opt("out") {
         Some(out) => {
             let out = Path::new(out);
@@ -420,8 +528,8 @@ fn cmd_predict(args: &Args) -> Result<()> {
             std::fs::write(out, report.to_string())?;
             eprintln!(
                 "{} predictions ({}) written to {}",
-                resp.predictions.len(),
-                resp.model,
+                predictions.len(),
+                model,
                 out.display()
             );
         }
@@ -1271,6 +1379,36 @@ fn cmd_bench(args: &Args) -> Result<()> {
         earlier_reports = Some((report, serve_report, at_report, an_report));
     }
 
+    // the out-of-core trajectory: in-RAM vs streamed training and
+    // full-graph vs partitioned steps over the synthetic scale tiers
+    // (bitwise-checked inside the bench before any number is reported)
+    let mut scale_report = None;
+    if !engine_only {
+        let sc_cfg = gcn_perf::eval::scale_bench::ScaleBenchConfig {
+            fast,
+            seed,
+            ..Default::default()
+        };
+        let sc = gcn_perf::eval::scale_bench::run_scale_bench(&sc_cfg)?;
+        let sc_out = PathBuf::from(args.str_or("scale-out", "BENCH_10.json"));
+        gcn_perf::eval::scale_bench::write_scale_report(&sc, &sc_out)?;
+        if let Some(top) = sc.tiers.last() {
+            println!(
+                "scale report written to {} (top tier {} stages: streamed peak {:.1} MiB vs \
+                 in-RAM {:.1} MiB, partitioned step {:.1} MiB vs full {:.1} MiB, \
+                 {:.0} nodes/s streamed)",
+                sc_out.display(),
+                top.n_stages,
+                top.streamed_peak_bytes as f64 / (1024.0 * 1024.0),
+                top.in_ram_peak_bytes as f64 / (1024.0 * 1024.0),
+                top.part_step_peak_bytes as f64 / (1024.0 * 1024.0),
+                top.full_step_peak_bytes as f64 / (1024.0 * 1024.0),
+                top.streamed_nodes_per_s
+            );
+        }
+        scale_report = Some(sc);
+    }
+
     // the PR-5 engine core: fast path / tiled kernels / parallel
     // backward vs the frozen PR-4 compute core
     let engine_cfg = gcn_perf::eval::engine_bench::EngineBenchConfig { fast, seed };
@@ -1333,6 +1471,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             serve_report.require_speedup()?;
             at_report.require_speedup()?;
             an_report.require_speedup()?;
+        }
+        if let Some(sc) = &scale_report {
+            sc.require_speedup()?;
         }
         engine_report.require_speedup()?;
         simd_report.require_speedup()?;

@@ -91,7 +91,7 @@ impl Csr {
 /// Returns an error (instead of panicking) when an edge references a
 /// stage outside `0..n_stages`; dataset loaders surface that as a
 /// malformed-sample error.
-pub fn build_csr(n_stages: usize, edges: &[(u16, u16)]) -> Result<Csr> {
+pub fn build_csr(n_stages: usize, edges: &[(u32, u32)]) -> Result<Csr> {
     ensure!(n_stages > 0, "graph must have at least one stage");
     let mut nbrs: Vec<Vec<u32>> = (0..n_stages).map(|i| vec![i as u32]).collect();
     for &(src, dst) in edges {
@@ -461,7 +461,7 @@ mod tests {
 
     #[test]
     fn graph_blocks_tile_graphs_and_respect_node_budget() {
-        let samples: Vec<_> = [3u16, 5, 40, 2, 2, 60, 4]
+        let samples: Vec<_> = [3u32, 5, 40, 2, 2, 60, 4]
             .iter()
             .map(|&n| mk_sample(n, 1e-3))
             .collect();

@@ -4,10 +4,14 @@
 //! block-diagonal variable-size [`PackedBatch`] (no node caps, no
 //! padding). [`batch`] keeps the dense padded [`DenseBatch`] that the
 //! fixed-shape PJRT artifacts require, plus the converters between the
-//! two layouts.
+//! two layouts. [`partition`] splits over-budget graphs into
+//! block-aligned node-range sub-samples so TpuGraphs-scale graphs train
+//! through the packed path inside a fixed node budget.
 
 pub mod batch;
 pub mod graph;
+pub mod partition;
 
 pub use batch::DenseBatch;
 pub use graph::{build_csr, Csr, PackedBatch, ALPHA_FLOOR};
+pub use partition::{combine_runtimes, partition_sample, Partitioned};

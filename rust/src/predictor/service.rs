@@ -652,10 +652,10 @@ mod tests {
 
     /// n-stage chain sample with features derived from `tag` so distinct
     /// samples are distinguishable.
-    fn chain_sample(n: u16, tag: f32) -> GraphSample {
+    fn chain_sample(n: u32, tag: f32) -> GraphSample {
         GraphSample {
             pipeline_id: tag as u32,
-            schedule_id: n as u32,
+            schedule_id: n,
             n_stages: n,
             edges: (1..n).map(|i| (i - 1, i)).collect(),
             inv: vec![[tag; INV_DIM]; n as usize],
@@ -815,7 +815,7 @@ mod tests {
             }
         }
         // exactly 3 requests queue up behind the parked worker
-        let handles: Vec<PredictHandle> = (0..3u16)
+        let handles: Vec<PredictHandle> = (0..3u32)
             .map(|i| {
                 service.submit(PredictRequest::new(vec![chain_sample(2 + i, 0.0)])).unwrap()
             })
@@ -855,7 +855,7 @@ mod tests {
                         let tag = kix.to_string();
                         let k = cache_key(&["stress", tag.as_str()]);
                         let req = PredictRequest::with_keys(
-                            vec![chain_sample((1 + kix) as u16, 0.1)],
+                            vec![chain_sample((1 + kix) as u32, 0.1)],
                             vec![Some(k)],
                         );
                         let r = svc.predict_blocking(req).unwrap();

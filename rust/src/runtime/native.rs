@@ -101,8 +101,11 @@ const PAR_MIN_ROWS: usize = 512;
 /// from the thread count — so the block partition, and therefore the
 /// order in which per-block gradient accumulators are reduced, depends
 /// only on the batch: parallel backward is bitwise-deterministic across
-/// thread counts.
-const BACKWARD_BLOCK_NODES: usize = 512;
+/// thread counts. Aliased to [`crate::constants::PARTITION_BLOCK_NODES`]
+/// so `model::partition`'s cut points are always backward-block
+/// boundaries — the partitioned train path tiles exactly like the
+/// corresponding rows of the full graph would.
+const BACKWARD_BLOCK_NODES: usize = crate::constants::PARTITION_BLOCK_NODES;
 
 /// Fill a row-major `[n_rows, width]` f32 matrix in place, parallel over
 /// contiguous row blocks on the shared thread pool when the batch is
@@ -138,30 +141,52 @@ where
     });
 }
 
-/// Contiguous sample chunks balanced by total packed **nodes**, capped
-/// at [`BATCH`] graphs each. A 59-stage `resnet50` schedule is an order
-/// of magnitude more work than a generator pipeline, so fixed
-/// graph-count chunks leave whichever worker draws the big graphs
-/// straggling; node-budget chunks equalize work instead. Several chunks
-/// per worker are produced so the claim-one-at-a-time scheduler can
-/// smooth the residual imbalance. Predictions are chunk-invariant (the
-/// packed layout is block-diagonal), so this is purely a scheduling
-/// policy.
+/// Contiguous sample chunks balanced by total packed **nodes**. A
+/// 59-stage `resnet50` schedule is an order of magnitude more work than
+/// a generator pipeline, so fixed graph-count chunks leave whichever
+/// worker draws the big graphs straggling; node-budget chunks equalize
+/// work instead. Several chunks per worker are produced so the
+/// claim-one-at-a-time scheduler can smooth the residual imbalance.
+/// Predictions are chunk-invariant (the packed layout is
+/// block-diagonal), so this is purely a scheduling policy.
+///
+/// [`balanced_chunks_with`] takes the workspace node budget explicitly;
+/// the per-chunk graph cap is derived from it (the historical hard
+/// [`BATCH`] cap survives as its ceiling, so zoo-scale corpora chunk
+/// exactly as before) and no multi-graph chunk exceeds the budget in
+/// packed nodes — the knob that bounds per-worker workspace memory on
+/// TpuGraphs-scale inputs.
 pub(crate) fn balanced_chunks<'s, 'a>(
     samples: &'s [&'a GraphSample],
     workers: usize,
 ) -> Vec<&'s [&'a GraphSample]> {
+    balanced_chunks_with(samples, workers, crate::constants::node_budget())
+}
+
+/// See [`balanced_chunks`].
+pub(crate) fn balanced_chunks_with<'s, 'a>(
+    samples: &'s [&'a GraphSample],
+    workers: usize,
+    node_budget: usize,
+) -> Vec<&'s [&'a GraphSample]> {
     if samples.is_empty() {
         return Vec::new();
     }
+    let node_budget = node_budget.max(1);
     let total_nodes: usize = samples.iter().map(|s| s.n_stages as usize).sum();
     let want = (workers.max(1) * 4).max(1);
-    let budget = total_nodes.div_ceil(want).max(1);
+    // balance across workers, but never let one chunk's packed nodes
+    // (≈ its workspace size) exceed the node budget
+    let budget = total_nodes.div_ceil(want).max(1).min(node_budget);
+    // graph cap auto-derived from the budget: enough mean-sized graphs
+    // to fill it, floored at 1 and capped at the historical BATCH
+    let mean = (total_nodes / samples.len()).max(1);
+    let graph_cap = (node_budget / mean).clamp(1, BATCH);
     let mut chunks = Vec::new();
     let (mut start, mut acc) = (0usize, 0usize);
     for (i, s) in samples.iter().enumerate() {
         let n = (s.n_stages as usize).max(1);
-        if i > start && (acc + n > budget || i - start >= BATCH) {
+        if i > start && (acc + n > budget || i - start >= graph_cap) {
             chunks.push(&samples[start..i]);
             start = i;
             acc = 0;
@@ -1150,7 +1175,7 @@ mod tests {
         let n = 1 + rng.gen_range(max_nodes);
         let mut edges = Vec::new();
         for _ in 0..rng.gen_range(3 * n + 1) {
-            edges.push((rng.gen_range(n) as u16, rng.gen_range(n) as u16));
+            edges.push((rng.gen_range(n) as u32, rng.gen_range(n) as u32));
         }
         let mut inv = vec![[0f32; INV_DIM]; n];
         let mut dep = vec![[0f32; DEP_DIM]; n];
@@ -1170,7 +1195,7 @@ mod tests {
         GraphSample {
             pipeline_id: pid,
             schedule_id: 0,
-            n_stages: n as u16,
+            n_stages: n as u32,
             edges,
             inv,
             dep,
@@ -1397,7 +1422,7 @@ mod tests {
             pipeline_id: 7,
             schedule_id: 0,
             n_stages: 200,
-            edges: (0..199).map(|i| (i as u16, (i + 1) as u16)).collect(),
+            edges: (0..199).map(|i| (i as u32, (i + 1) as u32)).collect(),
             inv: vec![[0.1; INV_DIM]; 200],
             dep: vec![[0.2; DEP_DIM]; 200],
             runs: [1e-3; crate::constants::BENCH_RUNS],
@@ -1478,6 +1503,27 @@ mod tests {
         assert!(balanced_chunks(&[], workers).is_empty());
         let one = [refs[0]];
         assert_eq!(balanced_chunks(&one, workers).len(), 1);
+    }
+
+    #[test]
+    fn chunk_graph_cap_derives_from_node_budget() {
+        // ~600-node graphs under a 1200-node budget: the derived cap is
+        // 2 graphs per chunk and no multi-graph chunk tops the budget
+        let samples: Vec<GraphSample> =
+            (0..8).map(|i| chain_sample(600, 1e-3 * (1.0 + i as f32))).collect();
+        let refs: Vec<&GraphSample> = samples.iter().collect();
+        let chunks = balanced_chunks_with(&refs, 1, 1200);
+        let covered: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(covered, refs.len());
+        for c in &chunks {
+            assert!(c.len() <= 2, "cap should be 1200/600 = 2, got {}", c.len());
+            let nodes: usize = c.iter().map(|s| s.n_stages as usize).sum();
+            assert!(c.len() == 1 || nodes <= 1200, "{nodes} nodes in one chunk");
+        }
+        // a graph bigger than the whole budget still rides alone
+        let big = [chain_sample(5000, 1e-3)];
+        let big_refs: Vec<&GraphSample> = big.iter().collect();
+        assert_eq!(balanced_chunks_with(&big_refs, 4, 1200).len(), 1);
     }
 
     #[test]

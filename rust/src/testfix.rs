@@ -145,14 +145,14 @@ pub const REF_LOSS: f64 = 1.421302185e2;
 
 /// A chain-topology sample with an explicit stage count — the minimal
 /// fixture for batching/layout tests.
-pub fn chain_sample(n_stages: u16, runtime: f32) -> GraphSample {
+pub fn chain_sample(n_stages: u32, runtime: f32) -> GraphSample {
     let ns = n_stages as usize;
     GraphSample {
         pipeline_id: 1,
         schedule_id: 0,
         n_stages,
         edges: (0..ns.saturating_sub(1))
-            .map(|i| (i as u16, (i + 1) as u16))
+            .map(|i| (i as u32, (i + 1) as u32))
             .collect(),
         inv: vec![[0.5; INV_DIM]; ns],
         dep: vec![[1.5; DEP_DIM]; ns],
@@ -162,7 +162,7 @@ pub fn chain_sample(n_stages: u16, runtime: f32) -> GraphSample {
 
 /// Deterministic synthetic sample shared by the training/inference tests.
 pub fn synth_sample(pid: u32, sid: u32, runtime: f32) -> GraphSample {
-    let ns = (4 + (pid as usize + sid as usize) % 5) as u16;
+    let ns = (4 + (pid as usize + sid as usize) % 5) as u32;
     let n = ns as usize;
     let mut inv = vec![[0f32; INV_DIM]; n];
     let mut dep = vec![[0f32; DEP_DIM]; n];
@@ -192,7 +192,7 @@ pub fn synth_sample(pid: u32, sid: u32, runtime: f32) -> GraphSample {
         pipeline_id: pid,
         schedule_id: sid,
         n_stages: ns,
-        edges: (0..n.saturating_sub(1)).map(|i| (i as u16, (i + 1) as u16)).collect(),
+        edges: (0..n.saturating_sub(1)).map(|i| (i as u32, (i + 1) as u32)).collect(),
         inv,
         dep,
         runs: [runtime; BENCH_RUNS],

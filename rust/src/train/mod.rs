@@ -1,16 +1,29 @@
 //! Training driver: mini-batch epochs over any [`Backend`] train step,
 //! test-set evaluation, early stopping and checkpointing.
+//!
+//! The loop consumes a [`SourceView`] (see [`crate::dataset::stream`]),
+//! not a `Vec` of samples: batches are planned from index metadata and
+//! decoded one at a time, so peak memory is bounded by the node budget
+//! regardless of corpus size. [`train`] wraps an in-RAM [`Dataset`] in a
+//! [`MemorySource`] and runs the *same* [`train_source`] loop — the two
+//! paths differ only in where `fetch` reads from, which is what makes
+//! streamed training bitwise-identical to in-RAM training whenever the
+//! corpus fits (pinned by `streamed_training_matches_in_ram_bitwise`).
+//! Graphs above the node budget train through block-aligned partitions
+//! ([`crate::model::partition`]) with share-scaled labels.
 
 pub mod active;
 
 use crate::constants::BATCH;
-use crate::dataset::sample::Dataset;
+use crate::dataset::sample::{Dataset, GraphSample};
+use crate::dataset::stream::{plan_batches, MemorySource, SampleSource, SourceView};
+use crate::model::partition::{combine_runtimes, partition_sample};
 use crate::model::PackedBatch;
 use crate::predictor::{save_gcn_bundle, GcnView, Predictor};
 use crate::runtime::{Backend, Params};
 use crate::util::rng::Rng;
 use crate::util::stats;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
 #[derive(Debug, Clone)]
@@ -24,6 +37,11 @@ pub struct TrainConfig {
     pub verbose: bool,
     /// Adagrad learning rate (paper: 0.0075).
     pub lr: f32,
+    /// Per-batch packed-node ceiling: batches cut at [`BATCH`] graphs or
+    /// this many nodes, whichever binds first, and single graphs above
+    /// it train through the partition-sampled path. Defaults to
+    /// [`crate::constants::node_budget`].
+    pub node_budget: usize,
 }
 
 impl Default for TrainConfig {
@@ -35,6 +53,7 @@ impl Default for TrainConfig {
             eval_every: 1,
             verbose: true,
             lr: crate::constants::LEARNING_RATE as f32,
+            node_budget: crate::constants::node_budget(),
         }
     }
 }
@@ -50,25 +69,6 @@ pub struct TrainResult {
     pub params: Params,
     pub history: Vec<EpochStats>,
     pub best_test_mape: f64,
-}
-
-/// Build all packed batches for an epoch from shuffled sample indices
-/// (`BATCH` graphs per batch — a chunking policy, not a layout cap).
-fn epoch_batches(
-    ds: &Dataset,
-    order: &[usize],
-    best: &std::collections::BTreeMap<u32, f64>,
-) -> Result<Vec<PackedBatch>> {
-    let stats = ds.stats.as_ref().context("dataset stats fitted")?;
-    order
-        .chunks(BATCH)
-        .map(|chunk| {
-            let samples: Vec<&crate::dataset::sample::GraphSample> =
-                chunk.iter().map(|&i| &ds.samples[i]).collect();
-            let bests: Vec<f64> = samples.iter().map(|s| best[&s.pipeline_id]).collect();
-            PackedBatch::build(&samples, stats, &bests)
-        })
-        .collect()
 }
 
 /// Mean-absolute-percentage error of a predictor's runtime predictions on
@@ -88,24 +88,76 @@ pub fn evaluate_mape(rt: &dyn Backend, params: &Params, ds: &Dataset) -> Result<
     evaluate_predictor_mape(&GcnView { backend: rt, params, stats }, ds)
 }
 
-/// Train the GCN on `train`, tracking MAPE on `test`; returns the params
-/// from the best epoch.
-pub fn train(
+/// Streaming MAPE over a [`SourceView`]: samples decode in node-budget
+/// chunks (one chunk resident at a time), graphs above the budget are
+/// predicted per partition and recombined. Predictions are chunk-
+/// invariant (block-diagonal packing), so this matches [`evaluate_mape`]
+/// bitwise on any view whose graphs fit the budget.
+pub fn evaluate_mape_source(
     rt: &dyn Backend,
-    train_ds: &Dataset,
-    test_ds: &Dataset,
+    params: &Params,
+    view: &SourceView,
+    node_budget: usize,
+) -> Result<f64> {
+    let p = GcnView { backend: rt, params, stats: &view.stats };
+    let mut truth = Vec::with_capacity(view.len());
+    let mut preds = Vec::with_capacity(view.len());
+    for chunk in view.iter().budget_chunks(node_budget) {
+        let chunk = chunk?;
+        if chunk.len() == 1 && chunk[0].n_stages as usize > node_budget {
+            let part = partition_sample(&chunk[0], node_budget);
+            let refs: Vec<&GraphSample> = part.parts.iter().collect();
+            let part_preds = p.predict(&refs)?;
+            truth.push(chunk[0].mean_runtime());
+            preds.push(combine_runtimes(&part_preds));
+        } else {
+            let refs: Vec<&GraphSample> = chunk.iter().collect();
+            let ys = p.predict(&refs)?;
+            for (s, y) in chunk.iter().zip(ys) {
+                truth.push(s.mean_runtime());
+                preds.push(y);
+            }
+        }
+    }
+    Ok(stats::mape(&truth, &preds))
+}
+
+/// One training step over a slice of decoded samples with their α
+/// denominators. Builds the packed batch, steps, returns the loss.
+fn step_batch(
+    rt: &dyn Backend,
+    params: &mut Params,
+    accum: &mut Params,
+    refs: &[&GraphSample],
+    bests: &[f64],
+    stats: &crate::features::normalize::FeatureStats,
+    lr: f32,
+) -> Result<f64> {
+    let b = PackedBatch::build(refs, stats, bests)?;
+    Ok(rt.train_step_lr(params, accum, &b, lr)? as f64)
+}
+
+/// Train the GCN over streaming sources, tracking MAPE on `test`;
+/// returns the params from the best epoch. Peak memory: one decoded
+/// batch (≤ the node budget, plus one over-budget graph's partitions
+/// when the corpus has any).
+pub fn train_source(
+    rt: &dyn Backend,
+    train: &SourceView,
+    test: &SourceView,
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
+    ensure!(!train.is_empty(), "empty training source");
+    let node_budget = cfg.node_budget.max(1);
     let mut params = rt.init_params(cfg.seed);
     // initialize the output bias to the train-set mean log-runtime so the
     // model starts at the right scale instead of e^|ȳ_log| off (standard
     // output-bias initialization; cuts ~10 epochs of pure rescaling)
-    let mean_log_y: f64 = train_ds
-        .samples
-        .iter()
-        .map(|s| s.mean_runtime().max(1e-12).ln())
-        .sum::<f64>()
-        / train_ds.len().max(1) as f64;
+    let mut sum_log_y = 0.0f64;
+    for s in train.iter() {
+        sum_log_y += s?.mean_runtime().max(1e-12).ln();
+    }
+    let mean_log_y = sum_log_y / train.len().max(1) as f64;
     if let Some(b_out) = params.values.last_mut() {
         if b_out.len() == 1 {
             b_out[0] = mean_log_y as f32;
@@ -113,7 +165,7 @@ pub fn train(
     }
     let mut accum = params.zeros_like();
     let mut rng = Rng::new(cfg.seed ^ 0xABCD);
-    let best_rt = train_ds.best_per_pipeline();
+    let best_rt = train.best_per_pipeline()?;
 
     let mut history = Vec::new();
     let mut best_mape = f64::INFINITY;
@@ -121,18 +173,52 @@ pub fn train(
     let mut since_best = 0;
 
     for epoch in 0..cfg.epochs {
-        let mut order: Vec<usize> = (0..train_ds.len()).collect();
+        let mut order: Vec<usize> = (0..train.len()).collect();
         rng.shuffle(&mut order);
-        let batches = epoch_batches(train_ds, &order, &best_rt)?;
-        let mut losses = Vec::with_capacity(batches.len());
-        for b in &batches {
-            losses.push(rt.train_step_lr(&mut params, &mut accum, b, cfg.lr)? as f64);
+        let mut losses = Vec::new();
+        for batch_idx in plan_batches(train, &order, BATCH, node_budget) {
+            let samples: Vec<GraphSample> =
+                batch_idx.iter().map(|&i| train.fetch(i)).collect::<Result<_>>()?;
+            if samples.len() == 1 && samples[0].n_stages as usize > node_budget {
+                // partition-sampled path: block-aligned sub-graphs with
+                // share-scaled labels and α denominators (the pinned
+                // approximation — see model::partition)
+                let best = best_rt[&samples[0].pipeline_id];
+                let part = partition_sample(&samples[0], node_budget);
+                let mut start = 0;
+                while start < part.parts.len() {
+                    let mut nodes = 0usize;
+                    let mut end = start;
+                    while end < part.parts.len() && end - start < BATCH {
+                        let n = part.parts[end].n_stages as usize;
+                        if end > start && nodes + n > node_budget {
+                            break;
+                        }
+                        nodes += n;
+                        end += 1;
+                    }
+                    let refs: Vec<&GraphSample> = part.parts[start..end].iter().collect();
+                    let bests: Vec<f64> =
+                        part.shares[start..end].iter().map(|&sh| best * sh).collect();
+                    losses.push(step_batch(
+                        rt, &mut params, &mut accum, &refs, &bests, &train.stats, cfg.lr,
+                    )?);
+                    start = end;
+                }
+            } else {
+                let refs: Vec<&GraphSample> = samples.iter().collect();
+                let bests: Vec<f64> =
+                    samples.iter().map(|s| best_rt[&s.pipeline_id]).collect();
+                losses.push(step_batch(
+                    rt, &mut params, &mut accum, &refs, &bests, &train.stats, cfg.lr,
+                )?);
+            }
         }
         let train_loss = stats::mean(&losses);
 
         let mut ep = EpochStats { epoch, train_loss, test_mape: f64::NAN };
         if epoch % cfg.eval_every == 0 || epoch == cfg.epochs - 1 {
-            let mape = evaluate_mape(rt, &params, test_ds)?;
+            let mape = evaluate_mape_source(rt, &params, test, node_budget)?;
             ep.test_mape = mape;
             if mape < best_mape {
                 best_mape = mape;
@@ -162,6 +248,24 @@ pub fn train(
     Ok(TrainResult { params: best_params, history, best_test_mape: best_mape })
 }
 
+/// Train the GCN on `train`, tracking MAPE on `test`; returns the params
+/// from the best epoch. In-RAM front-end of [`train_source`] — same
+/// loop, same numbers.
+pub fn train(
+    rt: &dyn Backend,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    let tstats = train_ds.stats.as_ref().context("dataset stats fitted")?;
+    let estats = test_ds.stats.as_ref().unwrap_or(tstats);
+    let tsrc = MemorySource(train_ds);
+    let esrc = MemorySource(test_ds);
+    let tview = SourceView::whole(&tsrc, tstats.clone());
+    let eview = SourceView::whole(&esrc, estats.clone());
+    train_source(rt, &tview, &eview, cfg)
+}
+
 /// Convenience: train and write a single-file model bundle (params +
 /// training-set feature stats) that [`crate::predictor::GcnPredictor::load`]
 /// serves directly — no loose stats file, no dataset re-split at eval
@@ -183,26 +287,77 @@ pub fn train_and_save(
 mod tests {
     use super::*;
     use crate::dataset::builder::{build_dataset, DataGenConfig};
+    use crate::dataset::shard::{ShardWriter, ShardedDataset};
+    use crate::dataset::stream::split_source;
+    use crate::runtime::NativeBackend;
 
     #[test]
-    fn epoch_batches_cover_all_samples() {
-        let cfg = DataGenConfig {
+    fn streamed_training_matches_in_ram_bitwise() {
+        let ds = build_dataset(&DataGenConfig {
             n_pipelines: 4,
-            schedules_per_pipeline: 10,
+            schedules_per_pipeline: 6,
             seed: 3,
             ..Default::default()
-        };
-        let ds = build_dataset(&cfg);
-        let best = ds.best_per_pipeline();
-        let order: Vec<usize> = (0..ds.len()).collect();
-        let batches = epoch_batches(&ds, &order, &best).unwrap();
-        let covered: usize = batches.iter().map(|b| b.n_graphs()).sum();
-        assert_eq!(covered, ds.len());
-        // no batch exceeds the chunk size; every graph keeps its own nodes
-        for b in &batches {
-            assert!(b.n_graphs() <= BATCH);
-            let nodes: usize = (0..b.n_graphs()).map(|g| b.graph_nodes(g).len()).sum();
-            assert_eq!(nodes, b.total_nodes());
+        });
+        let dir = std::env::temp_dir().join("gcn_perf_train_stream_parity");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut w = ShardWriter::create(&dir).unwrap();
+        for s in &ds.samples {
+            w.push(s).unwrap();
         }
+        w.finish(None).unwrap();
+        let sd = ShardedDataset::open(&dir).unwrap();
+
+        let cfg =
+            TrainConfig { epochs: 2, patience: 8, verbose: false, ..Default::default() };
+        let rt = NativeBackend::new();
+
+        let (train_ds, test_ds) = ds.split(0.25, 7);
+        let in_ram = train(&rt, &train_ds, &test_ds, &cfg).unwrap();
+
+        let (tv, ev) = split_source(&sd, 0.25, 7).unwrap();
+        let streamed = train_source(&rt, &tv, &ev, &cfg).unwrap();
+
+        // the whole point of the shared loop: same split, same stats,
+        // same shuffles, same batches — bitwise-identical results
+        assert_eq!(in_ram.params.values, streamed.params.values);
+        assert_eq!(in_ram.best_test_mape.to_bits(), streamed.best_test_mape.to_bits());
+        assert_eq!(in_ram.history.len(), streamed.history.len());
+        for (a, b) in in_ram.history.iter().zip(&streamed.history) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn over_budget_graph_trains_and_evaluates_through_partitions() {
+        let mut big = crate::testfix::chain_sample(1500, 1e-3);
+        big.pipeline_id = 1;
+        // de-constant the runs so β has a real std to normalize
+        for (i, r) in big.runs.iter_mut().enumerate() {
+            *r += i as f32 * 1e-5;
+        }
+        let mut small = crate::testfix::chain_sample(40, 2e-3);
+        small.pipeline_id = 2;
+        for (i, r) in small.runs.iter_mut().enumerate() {
+            *r += i as f32 * 1e-5;
+        }
+        let mut ds = Dataset { samples: vec![big, small], stats: None };
+        ds.fit_stats();
+
+        let src = MemorySource(&ds);
+        let view = SourceView::whole(&src, ds.stats.clone().unwrap());
+        let cfg = TrainConfig {
+            epochs: 1,
+            verbose: false,
+            node_budget: 512,
+            ..Default::default()
+        };
+        let rt = NativeBackend::new();
+        let r = train_source(&rt, &view, &view, &cfg).unwrap();
+        // the 1500-node graph stepped as 3 partitions + the small graph:
+        // training completed inside the 512-node budget with finite loss
+        assert!(r.history[0].train_loss.is_finite());
+        assert!(r.best_test_mape.is_finite());
     }
 }

@@ -30,6 +30,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
 static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
 
 thread_local! {
     static TLS_COUNT: Cell<u64> = const { Cell::new(0) };
@@ -40,10 +42,23 @@ thread_local! {
 fn bump(bytes: usize) {
     ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
     ALLOC_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    let live = LIVE_BYTES.fetch_add(bytes as u64, Ordering::Relaxed) + bytes as u64;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
     // `try_with` instead of `with`: never panic inside the allocator,
     // even if a late allocation races thread teardown.
     let _ = TLS_COUNT.try_with(|c| c.set(c.get() + 1));
     let _ = TLS_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+#[inline]
+fn drop_bytes(bytes: usize) {
+    // saturating: a buffer allocated before the counting allocator was
+    // installed (or handed across the ffi boundary) must not underflow
+    LIVE_BYTES
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(bytes as u64))
+        })
+        .ok();
 }
 
 /// Process-wide heap allocations since start (allocs + reallocs; frees
@@ -68,6 +83,25 @@ pub fn thread_alloc_bytes() -> u64 {
     TLS_BYTES.try_with(|c| c.get()).unwrap_or(0)
 }
 
+/// Currently-live heap bytes (allocations minus frees), process-wide.
+pub fn live_bytes() -> u64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`live_bytes`] since start (or since the last
+/// [`reset_peak_bytes`]). This is the in-process analogue of MaxRSS the
+/// scale bench reports per measurement lane.
+pub fn peak_bytes() -> u64 {
+    PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Restart the peak-tracking window at the current live level, so a
+/// bench lane's peak is not dominated by whatever ran before it.
+/// Process-wide — only meaningful around a serial measurement region.
+pub fn reset_peak_bytes() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
 /// [`System`] with allocation counting. Installed as the crate's global
 /// allocator so allocation budgets are observable in tests and benches.
 pub struct CountingAlloc;
@@ -79,11 +113,13 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        drop_bytes(layout.size());
         System.dealloc(ptr, layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         bump(new_size);
+        drop_bytes(layout.size());
         System.realloc(ptr, layout, new_size)
     }
 
@@ -108,6 +144,19 @@ mod tests {
         assert!(count1 > count0, "allocation was not counted");
         assert!(bytes1 >= bytes0 + 4096, "allocation bytes were not counted");
         assert!(alloc_count() > global0);
+        drop(v);
+    }
+
+    #[test]
+    fn live_and_peak_track_a_large_buffer() {
+        // other tests allocate and free concurrently, so only absolute
+        // lower bounds are race-free: while the buffer is alive, the
+        // process-wide live count must cover it, and the peak must too
+        let v: Vec<u8> = Vec::with_capacity(1 << 20);
+        // both hold even if a sibling test resets the peak window right
+        // now: reset lands the peak at the live level, which covers `v`
+        assert!(live_bytes() >= 1 << 20, "live bytes missed the buffer");
+        assert!(peak_bytes() >= 1 << 20, "peak missed the buffer");
         drop(v);
     }
 

@@ -1,0 +1,361 @@
+//! TpuGraphs-scale synthetic graphs (1k–100k stages).
+//!
+//! The zoo's real networks top out around 60 stages — big enough to
+//! exercise the model, three orders of magnitude short of the TpuGraphs
+//! regime the paper's lineage targets. This module generates stage
+//! graphs at 1k/10k/100k nodes with two topology styles:
+//!
+//! * [`LargeStyle::Transformer`] — repeated 12-stage attention blocks
+//!   (qkv fan-out, two residual adds) chained end to end, the
+//!   "deep repeated structure" shape;
+//! * [`LargeStyle::Inception`] — repeated 10-stage groups of one stem
+//!   fanning into 8 parallel branches re-joined by a concat, the
+//!   "wide fan-out" shape.
+//!
+//! Both emit only local edges (within a block, or to the previous
+//! block's output), so block-aligned partitioning cuts a small, bounded
+//! fraction of edges — the property `model::partition`'s approximation
+//! leans on. Features and runtimes are deterministic in
+//! `(seed, pipeline, schedule)`: features are seeded pseudo-random
+//! (invariant features depend on the pipeline only, dependent features
+//! on pipeline + schedule, mirroring the real featurizer's split), and
+//! runtimes are a simulated O(n) per-stage cost sum times a
+//! per-schedule factor plus per-run noise.
+//!
+//! [`write_large_corpus`] streams samples straight into a sharded
+//! corpus (one sample resident at a time — generating a 100k-stage
+//! corpus never holds it in RAM); [`build_large_dataset`] collects the
+//! small tiers in-RAM for parity benches. [`large_pipeline`] produces
+//! an *IR* pipeline of the same scale for the analyzer scaling guards.
+
+use crate::constants::{BENCH_RUNS, DEP_DIM, INV_DIM};
+use crate::dataset::sample::{Dataset, GraphSample};
+use crate::dataset::shard::ShardWriter;
+use crate::features::normalize::StatsAccumulator;
+use crate::ir::pipeline::Pipeline;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Topology family of a generated graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LargeStyle {
+    Transformer,
+    Inception,
+}
+
+impl LargeStyle {
+    pub fn parse(s: &str) -> Option<LargeStyle> {
+        match s {
+            "transformer" => Some(LargeStyle::Transformer),
+            "inception" => Some(LargeStyle::Inception),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LargeStyle::Transformer => "transformer",
+            LargeStyle::Inception => "inception",
+        }
+    }
+}
+
+/// Generator configuration. `n_stages` is exact — blocks repeat while
+/// they fit and a plain chain fills the tail.
+#[derive(Debug, Clone)]
+pub struct LargeConfig {
+    pub style: LargeStyle,
+    pub n_stages: usize,
+    pub n_pipelines: u32,
+    pub schedules_per_pipeline: u32,
+    pub seed: u64,
+}
+
+impl Default for LargeConfig {
+    fn default() -> Self {
+        LargeConfig {
+            style: LargeStyle::Transformer,
+            n_stages: 1_000,
+            n_pipelines: 2,
+            schedules_per_pipeline: 4,
+            seed: 42,
+        }
+    }
+}
+
+/// Stage 0 is the embed/input stage; blocks of 12 follow:
+/// ln → {q,k,v} → score(q,k) → softmax → attn(·,v) → proj →
+/// +residual → ln → mlp → +residual. All edges stay inside the block
+/// except the two taps on the previous block's output.
+fn transformer_edges(n: usize) -> Vec<(u32, u32)> {
+    let mut e = Vec::with_capacity(n + n / 3);
+    let mut prev_out = 0u32;
+    let mut s = 1usize;
+    while s + 12 <= n {
+        let b = s as u32;
+        e.push((prev_out, b)); // ln1
+        e.push((b, b + 1)); // q
+        e.push((b, b + 2)); // k
+        e.push((b, b + 3)); // v
+        e.push((b + 1, b + 4)); // score ← q
+        e.push((b + 2, b + 4)); // score ← k
+        e.push((b + 4, b + 5)); // softmax
+        e.push((b + 5, b + 6)); // attn ← weights
+        e.push((b + 3, b + 6)); // attn ← v
+        e.push((b + 6, b + 7)); // proj
+        e.push((b + 7, b + 8)); // res1 ← proj
+        e.push((prev_out, b + 8)); // res1 ← block input
+        e.push((b + 8, b + 9)); // ln2
+        e.push((b + 9, b + 10)); // mlp
+        e.push((b + 10, b + 11)); // res2 ← mlp
+        e.push((b + 8, b + 11)); // res2 ← res1
+        prev_out = b + 11;
+        s += 12;
+    }
+    for i in s..n {
+        e.push((prev_out, i as u32));
+        prev_out = i as u32;
+    }
+    e
+}
+
+/// Stage 0 is the input; groups of 10 follow: one stem fans into 8
+/// parallel branches, all re-joined by a concat.
+fn inception_edges(n: usize) -> Vec<(u32, u32)> {
+    let mut e = Vec::with_capacity(2 * n);
+    let mut prev_out = 0u32;
+    let mut s = 1usize;
+    while s + 10 <= n {
+        let b = s as u32;
+        e.push((prev_out, b)); // stem
+        for k in 1..=8u32 {
+            e.push((b, b + k)); // branch
+            e.push((b + k, b + 9)); // concat
+        }
+        prev_out = b + 9;
+        s += 10;
+    }
+    for i in s..n {
+        e.push((prev_out, i as u32));
+        prev_out = i as u32;
+    }
+    e
+}
+
+/// One deterministic sample: topology from the style, features seeded by
+/// `(seed, pid)` (invariant) and `(seed, pid, sid)` (dependent),
+/// runtimes an O(n) simulated cost.
+pub fn large_sample(cfg: &LargeConfig, pid: u32, sid: u32) -> GraphSample {
+    let n = cfg.n_stages.max(2);
+    let edges = match cfg.style {
+        LargeStyle::Transformer => transformer_edges(n),
+        LargeStyle::Inception => inception_edges(n),
+    };
+    let mut inv_rng = Rng::new(cfg.seed ^ 0x1A26E5EED ^ ((pid as u64) << 20));
+    let mut dep_rng =
+        Rng::new(cfg.seed ^ 0xDE9B0B ^ ((pid as u64) << 20) ^ ((sid as u64) + 1));
+    let mut inv = vec![[0f32; INV_DIM]; n];
+    let mut dep = vec![[0f32; DEP_DIM]; n];
+    // simulated cost: each stage contributes a feature-correlated amount,
+    // so runtime mass really is ~proportional to node count (the node-
+    // share assumption the partition labels make)
+    let mut cost = 0f64;
+    for st in 0..n {
+        for v in inv[st].iter_mut() {
+            *v = inv_rng.f32() * 2.0 - 1.0;
+        }
+        for v in dep[st].iter_mut() {
+            *v = dep_rng.f32() * 2.0 - 1.0;
+        }
+        cost += 1e-7 * (1.0 + inv[st][0].abs() as f64 + 0.5 * dep[st][0].abs() as f64);
+    }
+    // per-schedule speed factor and per-run measurement noise, both from
+    // the schedule-dependent stream (deterministic in (seed, pid, sid))
+    let factor = 1.0 + 0.8 * dep_rng.f64();
+    let mut runs = [0f32; BENCH_RUNS];
+    for r in &mut runs {
+        *r = (cost * factor * (1.0 + 0.02 * (dep_rng.f64() - 0.5))) as f32;
+    }
+    GraphSample {
+        pipeline_id: pid,
+        schedule_id: sid,
+        n_stages: n as u32,
+        edges,
+        inv,
+        dep,
+        runs,
+    }
+}
+
+/// Generate the corpus straight into a sharded directory (see
+/// [`crate::dataset::shard`]): one sample in memory at a time, corpus
+/// feature stats folded incrementally into the index. Returns the
+/// sample count.
+pub fn write_large_corpus(dir: &Path, cfg: &LargeConfig) -> Result<usize> {
+    let mut w = ShardWriter::create(dir)?;
+    let mut acc = StatsAccumulator::new();
+    for pid in 0..cfg.n_pipelines {
+        for sid in 0..cfg.schedules_per_pipeline {
+            let s = large_sample(cfg, pid, sid);
+            for (iv, dv) in s.inv.iter().zip(&s.dep) {
+                acc.push(iv, dv);
+            }
+            w.push(&s)?;
+        }
+    }
+    let n = w.len();
+    let stats = if acc.count() > 0 { Some(acc.finish()) } else { None };
+    w.finish(stats.as_ref())?;
+    Ok(n)
+}
+
+/// In-RAM counterpart of [`write_large_corpus`] for the small tiers and
+/// the in-RAM-vs-streamed parity lanes.
+pub fn build_large_dataset(cfg: &LargeConfig) -> Dataset {
+    let mut ds = Dataset::default();
+    for pid in 0..cfg.n_pipelines {
+        for sid in 0..cfg.schedules_per_pipeline {
+            ds.samples.push(large_sample(cfg, pid, sid));
+        }
+    }
+    ds.fit_stats();
+    ds
+}
+
+/// An *IR* pipeline with exactly `n_stages` stages (residual
+/// bn→relu→add blocks over a conv stem, chain tail) — the fixture the
+/// analyzer scaling guards run `analyze_pipeline` /
+/// `AnalyzedPipeline::build` against at 1k–10k stages.
+pub fn large_pipeline(n_stages: usize) -> Pipeline {
+    let n_stages = n_stages.max(2);
+    let mut net = super::Net::new("large-synth");
+    let x = net.input(vec![1, 8, 16, 16]);
+    let mut cur = net.conv(x, "stem", 8, 3, 1);
+    let mut count = 1usize;
+    while count + 3 <= n_stages {
+        let saved = cur;
+        let a = net.bn(cur, &format!("bn{count}"));
+        let b = net.relu(a, &format!("relu{count}"));
+        cur = net.add(b, saved, &format!("res{count}"));
+        count += 3;
+    }
+    while count < n_stages {
+        cur = net.relu(cur, &format!("tail{count}"));
+        count += 1;
+    }
+    net.p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn samples_are_valid_exact_sized_and_deterministic() {
+        for style in [LargeStyle::Transformer, LargeStyle::Inception] {
+            let cfg = LargeConfig { style, n_stages: 1_000, ..Default::default() };
+            let s = large_sample(&cfg, 0, 0);
+            assert_eq!(s.n_stages, 1_000);
+            s.validate().unwrap();
+            // deterministic in (seed, pid, sid)
+            let again = large_sample(&cfg, 0, 0);
+            assert_eq!(s.edges, again.edges);
+            assert_eq!(s.inv, again.inv);
+            assert_eq!(s.runs, again.runs);
+            // schedule changes dependent features + runtimes, not topology
+            let other = large_sample(&cfg, 0, 1);
+            assert_eq!(s.edges, other.edges);
+            assert_eq!(s.inv, other.inv);
+            assert_ne!(s.dep, other.dep);
+            assert_ne!(s.runs, other.runs);
+            // different pipeline: different invariant features
+            let p1 = large_sample(&cfg, 1, 0);
+            assert_ne!(s.inv, p1.inv);
+        }
+    }
+
+    #[test]
+    fn edges_are_local_enough_for_block_partitioning() {
+        for style in [LargeStyle::Transformer, LargeStyle::Inception] {
+            let cfg = LargeConfig { style, n_stages: 4_096, ..Default::default() };
+            let s = large_sample(&cfg, 0, 0);
+            let p = crate::model::partition::partition_sample(&s, 512);
+            assert!(p.parts.len() >= 8);
+            // local topology ⇒ only a handful of edges span any boundary
+            assert!(
+                p.cut_edge_fraction() < 0.02,
+                "{} cut fraction {:.4}",
+                style.name(),
+                p.cut_edge_fraction()
+            );
+            for q in &p.parts {
+                q.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_streams_to_shards_and_back() {
+        let cfg = LargeConfig {
+            n_stages: 200,
+            n_pipelines: 2,
+            schedules_per_pipeline: 3,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join("gcn_perf_large_corpus");
+        std::fs::remove_dir_all(&dir).ok();
+        let n = write_large_corpus(&dir, &cfg).unwrap();
+        assert_eq!(n, 6);
+        let sd = crate::dataset::shard::ShardedDataset::open(&dir).unwrap();
+        assert_eq!(sd.len(), 6);
+        let ds = build_large_dataset(&cfg);
+        // the streamed write and the in-RAM build see the same samples
+        // and fold the same corpus stats (identical op order)
+        assert_eq!(
+            sd.stats().unwrap().to_flat(),
+            ds.stats.as_ref().unwrap().to_flat()
+        );
+        let got = sd.fetch(3).unwrap();
+        assert_eq!(got.dep, ds.samples[3].dep);
+        assert_eq!(got.runs, ds.samples[3].runs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn large_pipeline_has_exact_stage_count_and_is_clean() {
+        for n in [2usize, 50, 1_000] {
+            let p = large_pipeline(n);
+            assert_eq!(p.num_stages(), n, "requested {n}");
+        }
+        let p = large_pipeline(300);
+        let diags = crate::analysis::analyze_pipeline(&p);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    /// The scaling guard: `analysis::structure`'s reachability/dead-stage
+    /// scans and `analysis::analyzed`'s table construction must stay
+    /// O(V+E) — a 10k-stage pipeline may cost ~10× a 1k-stage one, never
+    /// ~100× (quadratic). Generously bounded for loaded CI runners.
+    #[test]
+    fn analysis_passes_scale_linearly_to_10k_stages() {
+        let run = |n: usize| -> Duration {
+            let p = large_pipeline(n);
+            let t = Instant::now();
+            let diags = crate::analysis::analyze_pipeline(&p);
+            let nests = crate::lower::lower_pipeline(&p);
+            let ap = crate::analysis::AnalyzedPipeline::build(&p, &nests);
+            std::hint::black_box(&ap);
+            assert!(diags.is_empty());
+            t.elapsed()
+        };
+        run(1_000); // warm-up, untimed
+        let t1k = run(1_000).max(Duration::from_millis(2));
+        let t10k = run(10_000);
+        assert!(
+            t10k < t1k * 30,
+            "10k-stage analysis took {t10k:?} vs {t1k:?} at 1k — quadratic blowup?"
+        );
+    }
+}

@@ -14,6 +14,8 @@
 //! limit so the whole train/predict/search stack is exercised beyond it
 //! (only the pjrt dense path still refuses such graphs).
 
+pub mod large;
+
 #[cfg(test)]
 use crate::constants::MAX_NODES;
 use crate::ir::op::{Op, OpAttrs, OpKind};

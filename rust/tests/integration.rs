@@ -331,6 +331,42 @@ fn trained_bundle_roundtrips_through_predict_path() {
 }
 
 #[test]
+fn large_sample_roundtrips_json_and_store() {
+    // satellite: a 1k-stage TpuGraphs-scale sample must survive both
+    // persistence formats unchanged — the JSON interchange (`predict
+    // --samples`) and the binary store (`train --data`) — now that stage
+    // ids are u32
+    use gcn_perf::zoo::large::{large_sample, LargeConfig, LargeStyle};
+    let cfg = LargeConfig { style: LargeStyle::Inception, n_stages: 1_000, ..Default::default() };
+    let s = large_sample(&cfg, 3, 5);
+    assert_eq!(s.n_stages, 1_000);
+
+    // JSON: the text interchange keeps ids, topology and payload intact
+    let json = gcn_perf::dataset::json::samples_to_json(std::slice::from_ref(&s));
+    let parsed = gcn_perf::dataset::json::samples_from_json(&json).unwrap();
+    assert_eq!(parsed.len(), 1);
+    assert_eq!(parsed[0].pipeline_id, s.pipeline_id);
+    assert_eq!(parsed[0].schedule_id, s.schedule_id);
+    assert_eq!(parsed[0].n_stages, s.n_stages);
+    assert_eq!(parsed[0].edges, s.edges);
+    assert_eq!(parsed[0].inv, s.inv);
+    assert_eq!(parsed[0].dep, s.dep);
+    assert_eq!(parsed[0].runs, s.runs);
+
+    // binary store: the JSON-parsed sample saves and loads bit-exactly
+    let ds = gcn_perf::dataset::Dataset { samples: parsed, stats: None };
+    let path = std::env::temp_dir().join("gcn_perf_it_large_roundtrip.bin");
+    store::save(&ds, &path).unwrap();
+    let loaded = store::load(&path).unwrap();
+    assert_eq!(loaded.samples.len(), 1);
+    assert_eq!(loaded.samples[0].edges, s.edges);
+    assert_eq!(loaded.samples[0].inv, s.inv);
+    assert_eq!(loaded.samples[0].dep, s.dep);
+    assert_eq!(loaded.samples[0].runs, s.runs);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn search_accepts_every_registered_model() {
     // `gcn-perf search --model <name>` resolution: baselines fit from a
     // training split, the gcn arrives as a bundle; all drive beam search

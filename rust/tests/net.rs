@@ -33,10 +33,10 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// A linear-chain sample; `n` stages, all features `tag` (invariant) and
 /// `tag * 0.5` (dependent) — distinct `(n, tag)` pairs never collide in
 /// the memo cache.
-fn chain_sample(n: u16, tag: f32) -> GraphSample {
+fn chain_sample(n: u32, tag: f32) -> GraphSample {
     GraphSample {
         pipeline_id: tag as u32,
-        schedule_id: n as u32,
+        schedule_id: n,
         n_stages: n,
         edges: (1..n).map(|i| (i - 1, i)).collect(),
         inv: vec![[tag; INV_DIM]; n as usize],
@@ -163,7 +163,7 @@ fn tcp_pipelining_preserves_order_and_matches_direct_predict_bitwise() {
 
     // six requests written back-to-back before any response is read
     let requests: Vec<Vec<GraphSample>> =
-        (1..=6u16).map(|n| vec![chain_sample(n, 0.5), chain_sample(n + 6, 0.25)]).collect();
+        (1..=6u32).map(|n| vec![chain_sample(n, 0.5), chain_sample(n + 6, 0.25)]).collect();
     let mut stream = TcpStream::connect(&addr).unwrap();
     for req in &requests {
         write_frame(&mut stream, &samples_to_json(req)).unwrap();

@@ -4,7 +4,9 @@
 # BENCH_5.json (PR-5 engine core vs the frozen PR-4 core), BENCH_6.json
 # (the TCP front-end under the loadgen client fleet), BENCH_7.json
 # (concurrent autotune fleet vs sequential tuning through one shared
-# service) and BENCH_8.json (scalar vs SIMD vs int8 inference lanes) at
+# service), BENCH_8.json (scalar vs SIMD vs int8 inference lanes) and
+# BENCH_10.json (in-RAM vs streamed out-of-core training plus full vs
+# partitioned steps over the synthetic 1k/10k/100k-stage tiers) at
 # the repository root. Pass --fast for the short smoke variant CI runs.
 # Build with `cargo build --release --features simd` (ideally under
 # RUSTFLAGS="-C target-cpu=native") for BENCH_8 to exercise real
@@ -19,6 +21,6 @@ fi
 
 cargo run --release -- bench ${FAST_FLAG} \
     --out ../BENCH_3.json --serve-out ../BENCH_4.json --engine-out ../BENCH_5.json \
-    --autotune-out ../BENCH_7.json --simd-out ../BENCH_8.json
+    --autotune-out ../BENCH_7.json --simd-out ../BENCH_8.json --scale-out ../BENCH_10.json
 cargo run --release -- loadgen ${FAST_FLAG} --out ../BENCH_6.json
-echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json, BENCH_6.json, BENCH_7.json and BENCH_8.json"
+echo "wrote $(cd .. && pwd)/BENCH_3.json, BENCH_4.json, BENCH_5.json, BENCH_6.json, BENCH_7.json, BENCH_8.json and BENCH_10.json"

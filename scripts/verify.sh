@@ -84,6 +84,31 @@ if cargo run --release --quiet -- predict --bundle "$SMOKE/gcn.bundle" --precisi
     exit 1
 fi
 
+echo "==> large-graph smoke (1k-stage sharded corpus -> stream-train one epoch -> streamed predict, MaxRSS ceiling)"
+cargo run --release --quiet -- gen-data --scale 1000 --style transformer \
+    --pipelines 2 --schedules 3 --seed 11 --out "$SMOKE/corpus"
+if /usr/bin/time -v true >/dev/null 2>&1; then
+    /usr/bin/time -v -o "$SMOKE/train.time" ./target/release/gcn-perf train --stream "$SMOKE/corpus" \
+        --epochs 1 --node-budget 2048 --test-frac 0.34 --bundle "$SMOKE/large.bundle"
+    /usr/bin/time -v -o "$SMOKE/predict.time" ./target/release/gcn-perf predict --stream "$SMOKE/corpus" \
+        --node-budget 2048 --bundle "$SMOKE/large.bundle" --out "$SMOKE/large_pred.json"
+    for f in "$SMOKE/train.time" "$SMOKE/predict.time"; do
+        KB="$(awk '/Maximum resident set size/ {print $NF}' "$f")"
+        echo "    $f: MaxRSS ${KB} kB"
+        if [ "$KB" -ge 786432 ]; then
+            echo "peak RSS ${KB} kB exceeds the 768 MiB streaming ceiling" >&2
+            exit 1
+        fi
+    done
+else
+    echo "(GNU time not installed — running without the MaxRSS ceiling; CI enforces it)"
+    ./target/release/gcn-perf train --stream "$SMOKE/corpus" \
+        --epochs 1 --node-budget 2048 --test-frac 0.34 --bundle "$SMOKE/large.bundle"
+    ./target/release/gcn-perf predict --stream "$SMOKE/corpus" \
+        --node-budget 2048 --bundle "$SMOKE/large.bundle" --out "$SMOKE/large_pred.json"
+fi
+grep -q predicted_runtime_s "$SMOKE/large_pred.json"
+
 echo "==> autotune checkpoint smoke (interrupted run, then --resume finishes the search)"
 cargo run --release --quiet -- autotune --networks alexnet --population 3 --offspring 4 \
     --immigrants 1 --generations 3 --seed 5 \
